@@ -1,0 +1,95 @@
+//! The AL agent demo: "non-experts only need to input target accuracy and
+//! budget, then sit and wait for the final results" (paper §3.1).
+//!
+//! Runs PSHEA (Algorithm 1) with all 7 zoo candidates on a synthetic
+//! dataset, printing the per-round accuracy / forecast / elimination trace
+//! (Fig 5b in miniature) and the final recommendation.
+//!
+//! Run: `cargo run --release --example auto_select_pshea`
+
+use std::sync::Arc;
+
+use alaas::agent::{run_pshea, PsheaConfig};
+use alaas::data::{generate, DatasetSpec};
+use alaas::runtime::backend::ComputeBackend;
+use alaas::runtime::{ArtifactIndex, HostBackend, PjrtBackend, PjrtPool};
+use alaas::sim::AlExperiment;
+use alaas::trainer::TrainConfig;
+
+fn backend() -> Arc<dyn ComputeBackend> {
+    match alaas::runtime::find_artifacts_dir(None) {
+        Some(dir) => {
+            let index = Arc::new(ArtifactIndex::load(&dir).expect("manifest parses"));
+            let pool = Arc::new(PjrtPool::new(index, 2, 64));
+            Arc::new(PjrtBackend::new(pool))
+        }
+        None => Arc::new(HostBackend::new()),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // The non-expert's two inputs:
+    let target_accuracy = 0.88;
+    let max_budget = 6_000;
+
+    let spec = DatasetSpec::cifarsim(77).with_sizes(300, 2500, 600);
+    println!("== PSHEA auto-selection (target {target_accuracy}, budget {max_budget}) ==");
+    let gen = generate(&spec);
+    let backend = backend();
+    println!("embedding {} samples via {}...", gen.images.len(), backend.name());
+    let mut exp = AlExperiment::from_generated(
+        backend,
+        &gen,
+        spec.num_classes,
+        TrainConfig { epochs: 25, ..Default::default() },
+        77,
+    )?;
+    let (_, base) = exp.baseline()?;
+    println!("baseline (init-only) top-1: {:.3}\n", base.top1);
+
+    let candidates: Vec<String> =
+        alaas::strategies::candidate_names().into_iter().map(str::to_string).collect();
+    let cfg = PsheaConfig {
+        target_accuracy,
+        max_budget,
+        round_budget: 150,
+        max_rounds: 8, // the paper simulates an 8-round procedure
+        initial_accuracy: Some(base.top1), // Algorithm 1: a_max = a_0
+        ..Default::default()
+    };
+    let trace = run_pshea(&mut exp, &candidates, &cfg)?;
+
+    for r in 0..trace.rounds {
+        println!("round {r}:");
+        for rec in trace.round(r) {
+            println!(
+                "  {:18} acc {:.4}  pred-next {}  {}",
+                rec.strategy,
+                rec.accuracy,
+                rec.predicted_next
+                    .map(|p| format!("{p:.4}"))
+                    .unwrap_or_else(|| "   -  ".into()),
+                if rec.eliminated { "<- ELIMINATED" } else { "" }
+            );
+        }
+    }
+    println!(
+        "\nstopped: {:?} after {} rounds; {} labels consumed; best accuracy {:.4}",
+        trace.stop, trace.rounds, trace.total_budget, trace.best_accuracy
+    );
+    println!(
+        "recommended strategy for this dataset/budget: {}",
+        trace.recommendation().unwrap_or("(none)")
+    );
+
+    // cost saving vs brute force: running all candidates every round
+    let brute = candidates.len() * trace.rounds * cfg.round_budget;
+    println!(
+        "label cost: {} vs {} brute-force ({}% saved by early stopping)",
+        trace.total_budget,
+        brute,
+        100 * (brute - trace.total_budget) / brute.max(1)
+    );
+    println!("\nauto_select_pshea OK");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Batch-size impact demo (Fig 4c in miniature): end-to-end throughput of
+//! the pipelined scan over the simulated S3 store as the inference batch
+//! size sweeps 1 -> 64.
+//!
+//! Expected shape (paper §4.3.2): flat at BS 1-2 (transmission-dominated),
+//! steep rise 4-16 (compute amortizes), plateau past 16 (compute capacity).
+//!
+//! Run: `cargo run --release --example batch_size_sweep`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use alaas::cache::DataCache;
+use alaas::config::StoreConfig;
+use alaas::data::{generate_into_store, DatasetSpec};
+use alaas::pipeline::{run_pipeline, BatchPolicy, DataflowMode, PipelineParams};
+use alaas::runtime::backend::ComputeBackend;
+use alaas::runtime::{ArtifactIndex, HostBackend, PjrtBackend, PjrtPool};
+use alaas::store::{ObjectStore, StoreRouter};
+use alaas::trainer::LinearHead;
+
+fn backend() -> Arc<dyn ComputeBackend> {
+    match alaas::runtime::find_artifacts_dir(None) {
+        Some(dir) => {
+            let index = Arc::new(ArtifactIndex::load(&dir).expect("manifest parses"));
+            let pool = Arc::new(PjrtPool::new(index, 2, 64));
+            Arc::new(PjrtBackend::new(pool))
+        }
+        None => Arc::new(HostBackend::new()),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = 1500usize;
+    // S3-like latency: this is what creates the Fig 4c shape
+    let store_cfg =
+        StoreConfig { get_latency_us: 400, bandwidth_mib_s: 200.0, jitter: 0.05 };
+    let store = StoreRouter::new("/tmp", &store_cfg);
+    let spec = DatasetSpec::cifarsim(4).with_sizes(0, n, 0);
+    let scratch: Arc<dyn ObjectStore> = Arc::new(alaas::store::MemStore::new());
+    let manifest = generate_into_store(&spec, &scratch, "s3sim", "bs");
+    for key in scratch.list("")? {
+        store.s3sim_backing().put(&key, &scratch.get(&key)?)?;
+    }
+    let backend = backend();
+    let head = LinearHead::zeros(64, 10);
+
+    println!("== batch-size sweep, {n} images over s3sim (Fig 4c protocol) ==");
+    println!("{:>6} {:>14} {:>12}", "batch", "throughput", "elapsed");
+    for bs in [1usize, 2, 4, 8, 16, 32, 64] {
+        let cache = DataCache::new(0, 1, false); // cold every time
+        let params = PipelineParams {
+            mode: DataflowMode::Pipelined,
+            batch: BatchPolicy { max_batch: bs, max_wait: Duration::from_millis(10) },
+            fetch_threads: 8,
+            preprocess_threads: 4,
+            infer_threads: 2,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let out = run_pipeline(&manifest.pool, &store, &cache, &backend, &head, &params, None)?;
+        let dt = t0.elapsed();
+        assert_eq!(out.processed, n);
+        println!(
+            "{bs:>6} {:>10.1} im/s {:>10.2}s",
+            n as f64 / dt.as_secs_f64(),
+            dt.as_secs_f64()
+        );
+    }
+    println!("\nbatch_size_sweep OK");
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! End-to-end driver (the Table 2 protocol on a real small workload).
+//!
+//! Full system exercise proving all layers compose:
+//!   * dataset synthesized into the simulated S3 store (storage tier)
+//!   * AL server + client over TCP (L3 coordinator)
+//!   * pipelined scan: fetch -> cache -> preprocess -> dynamic batch ->
+//!     AOT JAX/Pallas artifacts through PJRT (runtime + L2 + L1)
+//!   * least-confidence selection (the Table 2 strategy)
+//!   * oracle labels the selection; last layer fine-tuned via the AOT
+//!     train_step; accuracy evaluated before/after
+//!
+//! Reports one-round latency, end-to-end throughput, and top-1/top-5 —
+//! the Table 2 columns. Recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example one_round_al` (needs artifacts)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use alaas::cache::DataCache;
+use alaas::config::AlaasConfig;
+use alaas::data::{generate, generate_into_store, DatasetSpec, Oracle};
+use alaas::metrics::Registry;
+use alaas::runtime::backend::ComputeBackend;
+use alaas::runtime::{ArtifactIndex, HostBackend, PjrtBackend, PjrtPool};
+use alaas::server::{AlClient, AlServer, ServerDeps};
+use alaas::sim::AlExperiment;
+use alaas::store::{ObjectStore, StoreRouter};
+use alaas::trainer::TrainConfig;
+
+fn backend(replicas: usize) -> Arc<dyn ComputeBackend> {
+    match alaas::runtime::find_artifacts_dir(None) {
+        Some(dir) => {
+            let index = Arc::new(ArtifactIndex::load(&dir).expect("manifest parses"));
+            let pool = Arc::new(PjrtPool::new(index, replicas, 64));
+            let be = PjrtBackend::new(pool);
+            be.pool()
+                .warmup(&["forward_b16".into(), "forward_b128".into()])
+                .expect("warmup");
+            println!("backend: pjrt");
+            Arc::new(be)
+        }
+        None => {
+            println!("backend: host (run `make artifacts` for the PJRT path)");
+            Arc::new(HostBackend::new())
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // Scaled-down Table 2 workload: paper scans 40k and selects 10k;
+    // we scan 4k and select 1k (same 4:1 ratio) on the simulated S3.
+    let (n_init, n_pool, n_test, budget) = (500usize, 4000usize, 1000usize, 1000usize);
+    let spec = DatasetSpec::cifarsim(2022).with_sizes(n_init, n_pool, n_test);
+
+    let mut cfg = AlaasConfig::default();
+    cfg.al_worker.port = 0;
+    cfg.active_learning.model.batch_size = 16;
+    let store = Arc::new(StoreRouter::new("/tmp", &cfg.store));
+
+    println!("== one-round AL end-to-end (Table 2 protocol, scaled 1/10) ==");
+    println!("dataset: cifarsim init={n_init} pool={n_pool} test={n_test}, budget={budget}");
+
+    // provision the bucket
+    let scratch: Arc<dyn ObjectStore> = Arc::new(alaas::store::MemStore::new());
+    let manifest = generate_into_store(&spec, &scratch, "s3sim", "t2");
+    for key in scratch.list("")? {
+        store.s3sim_backing().put(&key, &scratch.get(&key)?)?;
+    }
+    let oracle = Oracle::load(&scratch, "t2")?;
+    let init_ids: Vec<u32> = manifest.init.iter().map(|s| s.id).collect();
+    let init_labels = oracle.label(&init_ids);
+
+    // server + client
+    let backend = backend(cfg.al_worker.replicas);
+    let metrics = Registry::new();
+    let deps = ServerDeps {
+        store,
+        cache: Arc::new(DataCache::from_config(&cfg.cache)),
+        backend: backend.clone(),
+        metrics: metrics.clone(),
+    };
+    let server = AlServer::start(cfg, deps)?;
+    let mut client = AlClient::connect(&server.addr().to_string())?;
+
+    // one-round AL: push (starts the pipelined scan) + query
+    let t0 = Instant::now();
+    client.push_data("t2", &manifest, Some(&init_labels))?;
+    let (selected, strategy, select_ms) =
+        client.query("t2", budget, Some("least_confidence"))?;
+    let latency = t0.elapsed();
+    let throughput = n_pool as f64 / latency.as_secs_f64();
+    println!("\none-round AL latency : {:.2}s (strategy {strategy})", latency.as_secs_f64());
+    println!("end-to-end throughput: {throughput:.1} images/sec");
+    println!("select phase         : {select_ms:.1}ms");
+    assert_eq!(selected.len(), budget);
+
+    // label the selection and fine-tune the last layer (the "human
+    // oracle -> model update" half of Figure 1), via the science engine
+    // on the same backend/artifacts.
+    let gen = generate(&spec);
+    let mut exp = AlExperiment::from_generated(
+        backend,
+        &gen,
+        spec.num_classes,
+        TrainConfig::default(),
+        7,
+    )?;
+    let (_, before) = exp.baseline()?;
+    let after = exp.one_round("least_confidence", budget)?;
+    println!("\naccuracy (test {n_test} samples):");
+    println!("  init-only baseline : top-1 {:.2}%  top-5 {:.2}%", before.top1 * 100.0, before.top5 * 100.0);
+    println!("  after one-round AL : top-1 {:.2}%  top-5 {:.2}%", after.top1 * 100.0, after.top5 * 100.0);
+    let ub = exp.upper_bound()?;
+    println!("  full-pool upper bnd: top-1 {:.2}%  top-5 {:.2}%", ub.top1 * 100.0, ub.top5 * 100.0);
+
+    // stage breakdown from the server metrics
+    let snap = metrics.snapshot();
+    for stage in ["stage.fetch", "stage.preprocess", "stage.infer", "al.select"] {
+        if let Some(h) = snap.get("histograms").and_then(|h| h.get(stage)) {
+            println!(
+                "  {stage:18} p50 {:>9.1}us  p95 {:>9.1}us  n={}",
+                h.get("p50_us").unwrap().as_f64().unwrap(),
+                h.get("p95_us").unwrap().as_f64().unwrap(),
+                h.get("count").unwrap().as_i64().unwrap()
+            );
+        }
+    }
+    assert!(after.top1 >= before.top1 - 0.02, "AL round should not hurt accuracy");
+    server.shutdown();
+    println!("\none_round_al OK");
+    Ok(())
+}

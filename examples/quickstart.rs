@@ -1,0 +1,104 @@
+//! Quickstart — the paper's Figure 2 workflow in one binary:
+//!
+//!   1. Configure an AL server from `example.yml`.
+//!   2. Start the server (in-process, real TCP).
+//!   3. Start a client, push an unlabeled dataset, `query(budget)`.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! Uses the PJRT backend when `make artifacts` has been run, otherwise
+//! falls back to the host backend.
+
+use std::sync::Arc;
+
+use alaas::cache::DataCache;
+use alaas::config::AlaasConfig;
+use alaas::data::{generate_into_store, DatasetSpec, Oracle};
+use alaas::metrics::Registry;
+use alaas::runtime::backend::ComputeBackend;
+use alaas::runtime::{ArtifactIndex, HostBackend, PjrtBackend, PjrtPool};
+use alaas::server::{AlClient, AlServer, ServerDeps};
+use alaas::store::{ObjectStore, StoreRouter};
+
+fn backend() -> Arc<dyn ComputeBackend> {
+    match alaas::runtime::find_artifacts_dir(None) {
+        Some(dir) => {
+            let index = Arc::new(ArtifactIndex::load(&dir).expect("manifest parses"));
+            let pool = Arc::new(PjrtPool::new(index, 2, 64));
+            println!("backend: pjrt ({} artifacts)", dir.display());
+            Arc::new(PjrtBackend::new(pool))
+        }
+        None => {
+            println!("backend: host (run `make artifacts` for the PJRT path)");
+            Arc::new(HostBackend::new())
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // 1. Configure AL server at example.yml (Fig 2, step 1)
+    let config_path = std::path::Path::new("examples/example.yml");
+    let mut cfg = if config_path.exists() {
+        AlaasConfig::from_yaml_file(config_path.to_str().unwrap())?
+    } else {
+        AlaasConfig::default()
+    };
+    cfg.al_worker.port = 0; // ephemeral for the example
+    println!("config: service '{}' v{}, strategy {:?}", cfg.name, cfg.version, cfg.active_learning.strategy);
+
+    // The dataset lives in the (simulated) object store before the client
+    // pushes its URIs — like a bucket the data scientist already owns.
+    let store = Arc::new(StoreRouter::new("/tmp", &cfg.store));
+    let spec = DatasetSpec::cifarsim(42).with_sizes(200, 1000, 0);
+    let scratch: Arc<dyn ObjectStore> = Arc::new(alaas::store::MemStore::new());
+    let manifest = generate_into_store(&spec, &scratch, "s3sim", "quickstart");
+    for key in scratch.list("")? {
+        store.s3sim_backing().put(&key, &scratch.get(&key)?)?;
+    }
+    let oracle = Oracle::load(&scratch, "quickstart")?;
+    let init_ids: Vec<u32> = manifest.init.iter().map(|s| s.id).collect();
+    let init_labels = oracle.label(&init_ids);
+    println!(
+        "dataset: {} (init {}, pool {})",
+        manifest.name,
+        manifest.init.len(),
+        manifest.pool.len()
+    );
+
+    // 2. Start Server (Fig 2, step 2)
+    let deps = ServerDeps {
+        store,
+        cache: Arc::new(DataCache::from_config(&cfg.cache)),
+        backend: backend(),
+        metrics: Registry::new(),
+    };
+    let server = AlServer::start(cfg, deps)?;
+    println!("server: listening on {}", server.addr());
+
+    // 3. Start Client (Fig 2, step 3)
+    let mut client = AlClient::connect(&server.addr().to_string())?;
+    client.ping()?;
+    client.push_data("quickstart", &manifest, Some(&init_labels))?;
+    println!("client: pushed {} pool samples", manifest.pool.len());
+
+    let t0 = std::time::Instant::now();
+    let (selected, strategy, select_ms) = client.query("quickstart", 10, None)?;
+    println!(
+        "client: query(budget=10) -> {} samples via {strategy} in {:.1}ms (select {select_ms:.2}ms)",
+        selected.len(),
+        t0.elapsed().as_secs_f64() * 1e3,
+    );
+    for s in &selected {
+        println!("  -> id={:5} {}", s.id, s.uri);
+    }
+
+    // these are what a human oracle would label next
+    let stats = client.cache_stats()?;
+    println!(
+        "cache: {} hits / {} misses",
+        stats.get("hits").unwrap().as_i64().unwrap(),
+        stats.get("misses").unwrap().as_i64().unwrap()
+    );
+    server.shutdown();
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,157 @@
+"""AOT compile path: lower every model entry point to HLO text artifacts.
+
+This is the only place Python touches the system. `make artifacts` runs it
+once; the Rust coordinator then loads `artifacts/*.hlo.txt` through the
+`xla` crate's PJRT CPU client and never imports Python again.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md). We lower via
+StableHLO -> XlaComputation with return_tuple=True; the Rust side unwraps
+the tuple.
+
+HLO is shape-specialized, so batched entry points are emitted once per
+batch-size variant; the Rust dynamic batcher pads each batch up to the
+nearest compiled variant. `artifacts/manifest.json` indexes every artifact
+with its input/output specs for the Rust ArtifactRegistry.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Batch-size variants for the serving-path entry points. Must cover the
+# batcher's max batch; keep in sync with rust/src/runtime/artifact.rs.
+BATCH_VARIANTS = (1, 2, 4, 8, 16, 32, 64, 128)
+# Tile size for the standalone distance executable (pool x centers tiling
+# is done on the Rust side).
+DIST_TILE = 256
+# Fine-tune minibatch and eval batch (fixed; Rust pads the tail).
+TRAIN_BATCH = 64
+EVAL_BATCH = 256
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe route)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entry_points():
+    """Yield (name, fn, arg_specs, input_names, output_names)."""
+    d, c = model.EMBED_DIM, model.NUM_CLASSES
+
+    for bs in BATCH_VARIANTS:
+        yield (
+            f"embed_b{bs}",
+            model.embed,
+            (_spec(bs, model.IMG_DIM),),
+            ["images"],
+            ["embeddings"],
+        )
+        yield (
+            f"forward_b{bs}",
+            model.forward,
+            (_spec(bs, model.IMG_DIM), _spec(d, c), _spec(c)),
+            ["images", "w", "b"],
+            ["embeddings", "scores"],
+        )
+        yield (
+            f"scores_b{bs}",
+            model.scores,
+            (_spec(bs, c),),
+            ["logits"],
+            ["scores"],
+        )
+
+    yield (
+        f"sqdist_t{DIST_TILE}",
+        model.sqdist,
+        (_spec(DIST_TILE, d), _spec(DIST_TILE, d)),
+        ["x", "y"],
+        ["sqdist"],
+    )
+    yield (
+        "train_step",
+        model.train_step,
+        (_spec(d, c), _spec(c), _spec(TRAIN_BATCH, d), _spec(TRAIN_BATCH, c), _spec()),
+        ["w", "b", "x", "y_onehot", "lr"],
+        ["w_out", "b_out", "loss"],
+    )
+    yield (
+        f"eval_logits_b{EVAL_BATCH}",
+        model.eval_logits,
+        (_spec(EVAL_BATCH, d), _spec(d, c), _spec(c)),
+        ["x", "w", "b"],
+        ["logits"],
+    )
+
+
+def lower_all(outdir: str) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text/return-tuple",
+        "model": {
+            "img_dim": model.IMG_DIM,
+            "embed_dim": model.EMBED_DIM,
+            "num_classes": model.NUM_CLASSES,
+            "trunk_seed": model.TRUNK_SEED,
+            "batch_variants": list(BATCH_VARIANTS),
+            "dist_tile": DIST_TILE,
+            "train_batch": TRAIN_BATCH,
+            "eval_batch": EVAL_BATCH,
+        },
+        "artifacts": {},
+    }
+    for name, fn, specs, in_names, out_names in entry_points():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"name": n, "shape": list(s.shape), "dtype": "f32"}
+                for n, s in zip(in_names, specs)
+            ],
+            "outputs": out_names,
+        }
+        print(f"  {name:24s} -> {fname} ({len(text)} chars)")
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts", help="artifact output dir")
+    args = ap.parse_args()
+    manifest = lower_all(args.outdir)
+    n = len(manifest["artifacts"])
+    print(f"wrote {n} artifacts + manifest.json to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

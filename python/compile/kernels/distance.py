@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: tiled pairwise squared Euclidean distance.
+
+The diversity-based strategies (K-Center Greedy, Core-Set, DBAL's k-means)
+are dominated by pairwise distances between embedding sets. The paper calls
+Core-Set's "heavy design" the throughput floor of Fig 4b — this kernel is
+that hot spot.
+
+Formulation: ||x_i - y_j||^2 = ||x_i||^2 + ||y_j||^2 - 2 x_i·y_j. The cross
+term is a matmul, which is the whole point of the TPU adaptation
+(DESIGN.md §Hardware-Adaptation): a CUDA implementation tiles x/y into
+shared memory per threadblock; here the BlockSpec grid tiles the [M, N]
+output into [Tm, Tn] VMEM blocks, and the [Tm, D] x [D, Tn] cross term is
+an MXU systolic-array matmul with f32 accumulation. The row/col norms are
+computed in-tile (D is small: one VMEM-resident strip), so nothing but x/y
+tiles and the output tile ever occupy VMEM.
+
+interpret=True as everywhere (see uncertainty.py); numerics vs.
+ref.pairwise_sqdist_ref enforced by python/tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sqdist_kernel(x_ref, y_ref, out_ref):
+    """One grid step: distances between a [Tm, D] and a [Tn, D] tile."""
+    x = x_ref[...].astype(jnp.float32)  # [Tm, D]
+    y = y_ref[...].astype(jnp.float32)  # [Tn, D]
+
+    xx = jnp.sum(x * x, axis=-1)  # [Tm]
+    yy = jnp.sum(y * y, axis=-1)  # [Tn]
+    # MXU: [Tm, D] @ [D, Tn], f32 accumulate.
+    cross = jax.lax.dot_general(
+        x,
+        y,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [Tm, Tn]
+    d = xx[:, None] + yy[None, :] - 2.0 * cross
+    out_ref[...] = jnp.maximum(d, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def pairwise_sqdist(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+) -> jnp.ndarray:
+    """Tiled pairwise squared distances.
+
+    Args:
+        x: [M, D] float array.
+        y: [N, D] float array (same D).
+        block_m / block_n: output tile shape; M and N are padded up.
+
+    Returns:
+        [M, N] float32, out[i, j] = ||x_i - y_j||^2, clamped at 0.
+    """
+    m, d = x.shape
+    n, d2 = y.shape
+    if d != d2:
+        raise ValueError(f"feature dims differ: {d} vs {d2}")
+
+    tm = min(block_m, _next_pow2(m))
+    tn = min(block_n, _next_pow2(n))
+    m_pad = pl.cdiv(m, tm) * tm
+    n_pad = pl.cdiv(n, tn) * tn
+    if m_pad != m:
+        x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+    if n_pad != n:
+        y = jnp.pad(y, ((0, n_pad - n), (0, 0)))
+
+    out = pl.pallas_call(
+        _sqdist_kernel,
+        grid=(m_pad // tm, n_pad // tn),
+        in_specs=[
+            pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.float32),
+        interpret=True,
+    )(x, y)
+    return out[:m, :n]
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p

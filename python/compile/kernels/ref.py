@@ -1,0 +1,67 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float32 tolerance (see python/tests/test_kernels.py,
+which sweeps shapes/dtypes with hypothesis). They are also the "roofline
+reference" used by the §Perf analysis in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Order of the per-sample uncertainty scores emitted by the fused kernel.
+# Strategies on the Rust side index into this (keep in sync with
+# rust/src/strategies/mod.rs::ScoreColumn).
+SCORE_NAMES = ("least_confidence", "margin", "ratio", "entropy")
+
+
+def uncertainty_scores_ref(logits: jnp.ndarray) -> jnp.ndarray:
+    """Fused softmax + 4 AL uncertainty scores.
+
+    Args:
+        logits: [B, C] float array of raw classifier outputs.
+
+    Returns:
+        [B, 4] float32 scores, columns per SCORE_NAMES:
+          * least_confidence: 1 - max_c p_c          (higher = more uncertain)
+          * margin:           p_(1) - p_(2)          (lower  = more uncertain)
+          * ratio:            p_(2) / p_(1)          (higher = more uncertain)
+          * entropy:          -sum_c p_c log p_c     (higher = more uncertain)
+    """
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / z
+
+    top2 = jnp.sort(p, axis=-1)[:, -2:]  # [B, 2]: (second, first)
+    p2, p1 = top2[:, 0], top2[:, 1]
+
+    lc = 1.0 - p1
+    margin = p1 - p2
+    ratio = p2 / p1
+    # p log p with the 0*log(0) = 0 convention.
+    plogp = jnp.where(p > 0, p * jnp.log(p), 0.0)
+    entropy = -jnp.sum(plogp, axis=-1)
+
+    return jnp.stack([lc, margin, ratio, entropy], axis=-1).astype(jnp.float32)
+
+
+def pairwise_sqdist_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise squared Euclidean distances.
+
+    Args:
+        x: [M, D] float array.
+        y: [N, D] float array.
+
+    Returns:
+        [M, N] float32, out[i, j] = ||x_i - y_j||^2, clamped at 0.
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    xx = jnp.sum(x * x, axis=-1)  # [M]
+    yy = jnp.sum(y * y, axis=-1)  # [N]
+    cross = x @ y.T  # [M, N]
+    d = xx[:, None] + yy[None, :] - 2.0 * cross
+    return jnp.maximum(d, 0.0)

@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: fused softmax + 4 uncertainty scores.
+
+The AL serving hot path needs, for every unlabeled sample, the four
+uncertainty statistics the strategy zoo consumes (least-confidence, margin,
+ratio, entropy — see ref.SCORE_NAMES). A naive implementation (what the
+Python AL tools in Table 1 do) materializes the softmax, then runs four
+separate reductions over HBM-resident probabilities. This kernel fuses the
+whole thing: one `[Bb, C]` logits tile is read into VMEM once and all four
+scores come out of the same pass, so the probabilities never round-trip to
+HBM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the row-wise max/sum/top-2
+reductions are VPU lane reductions over a VMEM-resident tile; the grid walks
+the batch dimension in `block_b` chunks. On a GPU this would be a
+thread-per-row fused kernel; the BlockSpec grid expresses the same schedule
+as an HBM→VMEM pipeline.
+
+Pallas is run with interpret=True (CPU plugin cannot execute Mosaic
+custom-calls); correctness vs. ref.uncertainty_scores_ref is enforced by
+python/tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NUM_SCORES = 4
+
+
+def _scores_kernel(logits_ref, out_ref):
+    """One grid step: score a [Bb, C] tile of logits into a [Bb, 4] tile."""
+    logits = logits_ref[...].astype(jnp.float32)  # [Bb, C]
+
+    # Numerically stable softmax over the class axis, entirely in VMEM.
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / z  # [Bb, C]
+
+    # Top-2 via masked second max — C is small (class count), so two
+    # reductions beat a sort on both VPU and scalar cores.
+    p1 = jnp.max(p, axis=-1, keepdims=True)  # [Bb, 1]
+    is_top = p == p1
+    # Knock out exactly one argmax occurrence per row (ties: the first).
+    first_top = jnp.cumsum(is_top.astype(jnp.int32), axis=-1) == 1
+    knock = is_top & first_top
+    p_wo_top = jnp.where(knock, -jnp.inf, p)
+    p2 = jnp.max(p_wo_top, axis=-1, keepdims=True)  # [Bb, 1]
+
+    lc = 1.0 - p1[:, 0]
+    margin = p1[:, 0] - p2[:, 0]
+    ratio = p2[:, 0] / p1[:, 0]
+    plogp = jnp.where(p > 0, p * jnp.log(p), 0.0)
+    entropy = -jnp.sum(plogp, axis=-1)
+
+    out_ref[...] = jnp.stack([lc, margin, ratio, entropy], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def uncertainty_scores(logits: jnp.ndarray, *, block_b: int = 128) -> jnp.ndarray:
+    """Fused uncertainty scores for a batch of logits.
+
+    Args:
+        logits: [B, C] float array.
+        block_b: batch-tile size; B is padded up to a multiple of it.
+
+    Returns:
+        [B, 4] float32 scores (columns per ref.SCORE_NAMES).
+    """
+    b, c = logits.shape
+    bb = min(block_b, _next_pow2(b))
+    b_pad = pl.cdiv(b, bb) * bb
+    if b_pad != b:
+        # Padding rows are scored too (garbage in, garbage out) and sliced
+        # away below; they never influence real rows.
+        logits = jnp.pad(logits, ((0, b_pad - b), (0, 0)))
+
+    out = pl.pallas_call(
+        _scores_kernel,
+        grid=(b_pad // bb,),
+        in_specs=[pl.BlockSpec((bb, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, NUM_SCORES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, NUM_SCORES), jnp.float32),
+        interpret=True,
+    )(logits)
+    return out[:b]
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p

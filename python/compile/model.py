@@ -1,0 +1,166 @@
+"""L2 JAX model: feature extractor, serving forward pass, last-layer training.
+
+This is the ALaaS compute graph. The paper's setup is a *pretrained*
+ResNet-18 trunk whose last layer is fine-tuned on AL-selected samples; only
+the trunk's embeddings matter to the system (Triton extracts them, the
+strategies consume them). Our stand-in trunk (DESIGN.md §Substitutions) is a
+fixed-seed patch-embedding MLP: deterministic "pretrained" weights are baked
+into the lowered HLO as constants, so the artifact is self-contained and the
+Rust side never ships weights for the trunk.
+
+Entry points lowered by aot.py (all shapes static; one artifact per batch
+variant):
+
+  * embed(images)                        -> embeddings            (trunk only)
+  * forward(images, w, b)                -> (embeddings, scores)  (serving hot
+        path: trunk + linear head + the fused Pallas uncertainty kernel)
+  * scores(logits)                       -> scores                (kernel only)
+  * sqdist(x, y)                         -> distances             (kernel only)
+  * train_step(w, b, x, y_onehot, lr)    -> (w', b', loss)        (fine-tune)
+  * eval_logits(x, w, b)                 -> logits                 (evaluation)
+
+Python never runs at serving time: these are lowered once by `make
+artifacts` and executed from Rust via PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.distance import pairwise_sqdist
+from .kernels.uncertainty import uncertainty_scores
+
+# Canonical model geometry (keep in sync with rust/src/runtime/artifact.rs).
+IMG_SIDE = 32
+IMG_CHANNELS = 3
+IMG_DIM = IMG_SIDE * IMG_SIDE * IMG_CHANNELS  # 3072, flattened u8->f32 image
+PATCH = 4
+N_PATCHES = (IMG_SIDE // PATCH) * (IMG_SIDE // PATCH)  # 64
+PATCH_DIM = PATCH * PATCH * IMG_CHANNELS  # 48
+EMBED_DIM = 64  # trunk output / last-layer input
+HIDDEN_DIM = 128
+NUM_CLASSES = 10
+TRUNK_SEED = 20220718  # fixed: the "pretrained" checkpoint identity
+
+
+def trunk_params(seed: int = TRUNK_SEED) -> dict[str, jnp.ndarray]:
+    """Deterministic 'pretrained' trunk weights.
+
+    Scaled-Gaussian init with a fixed seed stands in for the torchvision
+    checkpoint: what matters for the reproduction is that the trunk is a
+    *fixed* nonlinear map shared by every experiment, not its training
+    provenance.
+    """
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+
+    def dense(key, fan_in, fan_out):
+        scale = (2.0 / fan_in) ** 0.5
+        return scale * jax.random.normal(key, (fan_in, fan_out), jnp.float32)
+
+    return {
+        "patch_w": dense(k1, PATCH_DIM, EMBED_DIM),
+        "patch_b": jnp.zeros((EMBED_DIM,), jnp.float32),
+        "mlp_w1": dense(k2, EMBED_DIM, HIDDEN_DIM),
+        "mlp_b1": jnp.zeros((HIDDEN_DIM,), jnp.float32),
+        "mlp_w2": dense(k3, HIDDEN_DIM, EMBED_DIM),
+        "mlp_b2": jnp.zeros((EMBED_DIM,), jnp.float32),
+        # A touch of positional information so the patch pooling is not
+        # permutation-blind (keeps the synthetic datasets' spatial structure
+        # visible to the embeddings).
+        "pos": 0.02 * jax.random.normal(k4, (N_PATCHES, EMBED_DIM), jnp.float32),
+    }
+
+
+def _patches(images: jnp.ndarray) -> jnp.ndarray:
+    """[B, 3072] flat HWC images -> [B, N_PATCHES, PATCH_DIM] patch rows."""
+    b = images.shape[0]
+    x = images.reshape(b, IMG_SIDE, IMG_SIDE, IMG_CHANNELS)
+    g = IMG_SIDE // PATCH
+    x = x.reshape(b, g, PATCH, g, PATCH, IMG_CHANNELS)
+    x = x.transpose(0, 1, 3, 2, 4, 5)  # [B, g, g, PATCH, PATCH, C]
+    return x.reshape(b, N_PATCHES, PATCH_DIM)
+
+
+def _layernorm(x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)
+
+
+def embed(images: jnp.ndarray, params: dict[str, jnp.ndarray] | None = None) -> jnp.ndarray:
+    """Trunk forward: [B, 3072] f32 images -> [B, EMBED_DIM] embeddings."""
+    p = trunk_params() if params is None else params
+    x = _patches(images)  # [B, 64, 48]
+    x = jax.nn.gelu(x @ p["patch_w"] + p["patch_b"]) + p["pos"]  # [B, 64, 64]
+    x = jnp.mean(x, axis=1)  # [B, 64] mean-pool over patches
+    h = jax.nn.gelu(x @ p["mlp_w1"] + p["mlp_b1"])
+    x = x + h @ p["mlp_w2"] + p["mlp_b2"]  # residual
+    return _layernorm(x)
+
+
+def logits_head(emb: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Fine-tuned last layer: [B, D] x [D, C] + [C] -> [B, C]."""
+    return emb @ w + b
+
+
+def forward(images: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """Serving hot path: images -> (embeddings, uncertainty scores).
+
+    One fused graph per batch variant so the Rust pipeline makes a single
+    PJRT call per batch: trunk -> linear head -> Pallas score kernel.
+    """
+    e = embed(images)
+    lg = logits_head(e, w, b)
+    s = uncertainty_scores(lg)
+    return e, s
+
+
+def scores(logits: jnp.ndarray) -> jnp.ndarray:
+    """Standalone fused score kernel entry point (logits -> [B, 4])."""
+    return uncertainty_scores(logits)
+
+
+def sqdist(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Standalone pairwise-sqdist entry point ([M, D], [N, D] -> [M, N])."""
+    return pairwise_sqdist(x, y)
+
+
+def _xent(w, b, x, y_onehot):
+    lg = logits_head(x, w, b)
+    logp = jax.nn.log_softmax(lg, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def train_step(w, b, x, y_onehot, lr):
+    """One SGD fine-tuning step on the last layer.
+
+    Args:
+        w: [D, C] weights.   b: [C] bias.
+        x: [Bt, D] embedding minibatch.
+        y_onehot: [Bt, C] labels; all-zero rows are padding and contribute
+            no gradient (their xent term is 0) — the Rust trainer pads the
+            tail minibatch with zero rows instead of compiling more shapes.
+        lr: [] learning rate scalar.
+
+    Returns:
+        (w', b', loss).
+    """
+    # Padding rows have sum(y)=0; normalize by the number of real rows.
+    n_real = jnp.maximum(jnp.sum(y_onehot), 1.0)
+
+    def loss_fn(params):
+        wi, bi = params
+        lg = logits_head(x, wi, bi)
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        return -jnp.sum(y_onehot * logp) / n_real
+
+    loss, grads = jax.value_and_grad(loss_fn)((w, b))
+    gw, gb = grads
+    return w - lr * gw, b - lr * gb, loss
+
+
+def eval_logits(x, w, b):
+    """Evaluation forward on precomputed embeddings: [Be, D] -> [Be, C]."""
+    return logits_head(x, w, b)

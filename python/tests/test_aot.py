@@ -1,0 +1,80 @@
+"""AOT path: lowering produces loadable HLO text + a complete manifest."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    outdir = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.lower_all(str(outdir))
+    return str(outdir), manifest
+
+
+class TestManifest:
+    def test_every_artifact_listed_and_present(self, built):
+        outdir, manifest = built
+        assert manifest["artifacts"], "no artifacts lowered"
+        for name, meta in manifest["artifacts"].items():
+            path = os.path.join(outdir, meta["file"])
+            assert os.path.exists(path), name
+            assert os.path.getsize(path) > 0, name
+
+    def test_manifest_json_round_trips(self, built):
+        outdir, manifest = built
+        with open(os.path.join(outdir, "manifest.json")) as f:
+            on_disk = json.load(f)
+        assert on_disk == manifest
+
+    def test_batch_variants_cover_serving_entry_points(self, built):
+        _, manifest = built
+        for bs in aot.BATCH_VARIANTS:
+            for ep in ("embed", "forward", "scores"):
+                assert f"{ep}_b{bs}" in manifest["artifacts"]
+
+    def test_special_entry_points_present(self, built):
+        _, manifest = built
+        arts = manifest["artifacts"]
+        assert f"sqdist_t{aot.DIST_TILE}" in arts
+        assert "train_step" in arts
+        assert f"eval_logits_b{aot.EVAL_BATCH}" in arts
+
+    def test_input_specs_match_model_geometry(self, built):
+        _, manifest = built
+        fwd = manifest["artifacts"]["forward_b16"]
+        shapes = {i["name"]: i["shape"] for i in fwd["inputs"]}
+        assert shapes["images"] == [16, model.IMG_DIM]
+        assert shapes["w"] == [model.EMBED_DIM, model.NUM_CLASSES]
+        assert shapes["b"] == [model.NUM_CLASSES]
+        assert fwd["outputs"] == ["embeddings", "scores"]
+
+
+class TestHloText:
+    def test_hlo_text_has_entry_computation(self, built):
+        outdir, manifest = built
+        for name, meta in manifest["artifacts"].items():
+            with open(os.path.join(outdir, meta["file"])) as f:
+                text = f.read()
+            assert "ENTRY" in text, name
+            assert "HloModule" in text, name
+
+    def test_no_mosaic_custom_calls(self, built):
+        """interpret=True pallas must lower to plain HLO the CPU PJRT
+        client can run — a mosaic custom-call would only load on TPU."""
+        outdir, manifest = built
+        for name, meta in manifest["artifacts"].items():
+            with open(os.path.join(outdir, meta["file"])) as f:
+                text = f.read()
+            assert "tpu_custom_call" not in text, name
+            assert "mosaic" not in text.lower(), name
+
+    def test_lowering_is_deterministic(self, built, tmp_path):
+        """Same model + seed -> byte-identical HLO (sha in manifest)."""
+        outdir, manifest = built
+        again = aot.lower_all(str(tmp_path))
+        for name, meta in manifest["artifacts"].items():
+            assert again["artifacts"][name]["sha256"] == meta["sha256"], name

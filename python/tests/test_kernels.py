@@ -1,0 +1,156 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the core correctness signal for the compute layer: hypothesis
+sweeps shapes, dtypes, block sizes and value scales, and every case must
+match the ref.py oracle to float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.distance import pairwise_sqdist
+from compile.kernels.ref import (
+    SCORE_NAMES,
+    pairwise_sqdist_ref,
+    uncertainty_scores_ref,
+)
+from compile.kernels.uncertainty import NUM_SCORES, uncertainty_scores
+
+# interpret-mode pallas is slow; keep hypothesis examples small but varied.
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+def _logits(seed: int, b: int, c: int, scale: float, dtype) -> jnp.ndarray:
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, c), jnp.float32) * scale
+    return x.astype(dtype)
+
+
+class TestUncertaintyScores:
+    @SETTINGS
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        b=st.integers(1, 200),
+        c=st.integers(2, 40),
+        scale=st.sampled_from([0.1, 1.0, 5.0, 20.0]),
+    )
+    def test_matches_ref(self, seed, b, c, scale):
+        lg = _logits(seed, b, c, scale, jnp.float32)
+        got = uncertainty_scores(lg)
+        want = uncertainty_scores_ref(lg)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-6)
+
+    @SETTINGS
+    @given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 64))
+    def test_bfloat16_inputs(self, seed, b):
+        lg = _logits(seed, b, 10, 3.0, jnp.bfloat16)
+        got = uncertainty_scores(lg)
+        want = uncertainty_scores_ref(lg)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    @SETTINGS
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        block_b=st.sampled_from([1, 2, 8, 32, 128, 256]),
+    )
+    def test_block_size_invariant(self, seed, block_b):
+        """Tiling must not change the numbers."""
+        lg = _logits(seed, 77, 10, 4.0, jnp.float32)
+        base = uncertainty_scores(lg, block_b=128)
+        got = uncertainty_scores(lg, block_b=block_b)
+        np.testing.assert_allclose(got, base, rtol=1e-6, atol=1e-7)
+
+    def test_output_shape_and_columns(self):
+        lg = _logits(0, 9, 10, 1.0, jnp.float32)
+        out = uncertainty_scores(lg)
+        assert out.shape == (9, NUM_SCORES)
+        assert out.dtype == jnp.float32
+        assert len(SCORE_NAMES) == NUM_SCORES
+
+    def test_uniform_logits_extremes(self):
+        """Uniform distribution: max uncertainty on every score."""
+        c = 10
+        lg = jnp.zeros((3, c), jnp.float32)
+        out = np.asarray(uncertainty_scores(lg))
+        np.testing.assert_allclose(out[:, 0], 1 - 1 / c, atol=1e-6)  # LC
+        np.testing.assert_allclose(out[:, 1], 0.0, atol=1e-6)  # margin
+        np.testing.assert_allclose(out[:, 2], 1.0, atol=1e-6)  # ratio
+        np.testing.assert_allclose(out[:, 3], np.log(c), atol=1e-5)  # entropy
+
+    def test_peaked_logits_extremes(self):
+        """Near-one-hot: min uncertainty on every score."""
+        lg = jnp.array([[50.0] + [0.0] * 9], jnp.float32)
+        out = np.asarray(uncertainty_scores(lg))
+        assert out[0, 0] < 1e-6  # LC ~ 0
+        assert out[0, 1] > 1 - 1e-6  # margin ~ 1
+        assert out[0, 2] < 1e-6  # ratio ~ 0
+        assert out[0, 3] < 1e-5  # entropy ~ 0
+
+    def test_tie_in_top_probs(self):
+        """Exact two-way tie: margin 0, ratio 1 (argmax knockout is stable)."""
+        lg = jnp.array([[3.0, 3.0, 0.0, 0.0]], jnp.float32)
+        out = np.asarray(uncertainty_scores(lg))
+        want = np.asarray(uncertainty_scores_ref(lg))
+        np.testing.assert_allclose(out, want, rtol=1e-6)
+        np.testing.assert_allclose(out[0, 1], 0.0, atol=1e-6)
+        np.testing.assert_allclose(out[0, 2], 1.0, atol=1e-6)
+
+
+class TestPairwiseSqdist:
+    @SETTINGS
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        m=st.integers(1, 200),
+        n=st.integers(1, 200),
+        d=st.sampled_from([1, 3, 16, 64]),
+        scale=st.sampled_from([0.1, 1.0, 10.0]),
+    )
+    def test_matches_ref(self, seed, m, n, d, scale):
+        kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(kx, (m, d), jnp.float32) * scale
+        y = jax.random.normal(ky, (n, d), jnp.float32) * scale
+        got = pairwise_sqdist(x, y)
+        want = pairwise_sqdist_ref(x, y)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale * scale)
+
+    @SETTINGS
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        bm=st.sampled_from([1, 16, 64, 128]),
+        bn=st.sampled_from([1, 16, 64, 128]),
+    )
+    def test_tile_invariant(self, seed, bm, bn):
+        kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(kx, (90, 32), jnp.float32)
+        y = jax.random.normal(ky, (70, 32), jnp.float32)
+        base = pairwise_sqdist(x, y, block_m=128, block_n=128)
+        got = pairwise_sqdist(x, y, block_m=bm, block_n=bn)
+        np.testing.assert_allclose(got, base, rtol=1e-6, atol=1e-5)
+
+    def test_self_distance_zero_diagonal(self):
+        x = jax.random.normal(jax.random.PRNGKey(7), (50, 64), jnp.float32)
+        d = np.asarray(pairwise_sqdist(x, x))
+        np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-3)
+        assert (d >= 0).all()
+
+    def test_symmetry(self):
+        kx, ky = jax.random.split(jax.random.PRNGKey(8))
+        x = jax.random.normal(kx, (33, 16), jnp.float32)
+        y = jax.random.normal(ky, (21, 16), jnp.float32)
+        dxy = np.asarray(pairwise_sqdist(x, y))
+        dyx = np.asarray(pairwise_sqdist(y, x))
+        np.testing.assert_allclose(dxy, dyx.T, rtol=1e-5, atol=1e-5)
+
+    def test_hand_computed(self):
+        x = jnp.array([[0.0, 0.0], [1.0, 1.0]])
+        y = jnp.array([[0.0, 1.0], [2.0, 0.0], [1.0, 1.0]])
+        want = np.array([[1.0, 4.0, 2.0], [1.0, 2.0, 0.0]])
+        np.testing.assert_allclose(pairwise_sqdist(x, y), want, atol=1e-6)
+
+    def test_mismatched_dims_raise(self):
+        x = jnp.zeros((4, 8))
+        y = jnp.zeros((4, 9))
+        with pytest.raises(ValueError):
+            pairwise_sqdist(x, y)

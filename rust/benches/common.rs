@@ -1,0 +1,61 @@
+#![allow(dead_code)]
+//! Shared setup for the bench targets (criterion is offline-unavailable;
+//! these are `harness = false` binaries over `alaas::util::bench`).
+
+use std::sync::Arc;
+
+use alaas::config::StoreConfig;
+use alaas::data::{generate_into_store, DatasetSpec};
+use alaas::runtime::backend::ComputeBackend;
+use alaas::runtime::{ArtifactIndex, HostBackend, PjrtBackend, PjrtPool};
+use alaas::store::{Manifest, ObjectStore, StoreRouter};
+
+/// PJRT backend when artifacts exist, host fallback otherwise (benches
+/// print which one so EXPERIMENTS.md records it).
+pub fn backend(replicas: usize) -> Arc<dyn ComputeBackend> {
+    match alaas::runtime::find_artifacts_dir(None) {
+        Some(dir) => {
+            let index = Arc::new(ArtifactIndex::load(&dir).expect("manifest parses"));
+            let pool = Arc::new(PjrtPool::new(index, replicas, 64));
+            let be = PjrtBackend::new(pool);
+            // compile the serving variants up front so the first measured
+            // run is not paying XLA compile time
+            be.pool()
+                .warmup(&[
+                    "forward_b16".into(),
+                    "forward_b64".into(),
+                    "forward_b128".into(),
+                    "forward_b1".into(),
+                ])
+                .ok();
+            eprintln!("[bench] backend: pjrt ({} replicas)", replicas);
+            Arc::new(be)
+        }
+        None => {
+            eprintln!("[bench] backend: HOST FALLBACK (run `make artifacts` for pjrt)");
+            Arc::new(HostBackend::new())
+        }
+    }
+}
+
+/// Provision a dataset into a router's s3sim backing store (writes bypass
+/// the latency model, like a pre-filled bucket).
+pub fn provision(store: &StoreRouter, spec: &DatasetSpec, bucket: &str) -> Manifest {
+    let scratch: Arc<dyn ObjectStore> = Arc::new(alaas::store::MemStore::new());
+    let manifest = generate_into_store(spec, &scratch, "s3sim", bucket);
+    for key in scratch.list("").unwrap() {
+        store.s3sim_backing().put(&key, &scratch.get(&key).unwrap()).unwrap();
+    }
+    manifest
+}
+
+/// The S3-like store model used by the paper-protocol benches.
+pub fn s3_store() -> StoreRouter {
+    StoreRouter::new(
+        "/tmp",
+        &StoreConfig { get_latency_us: 300, bandwidth_mib_s: 200.0, jitter: 0.05 },
+    )
+}
+
+#[allow(dead_code)]
+fn main() {}

@@ -1,0 +1,84 @@
+//! Fig 4a: one-round AL accuracy per strategy on cifarsim, with the
+//! Random lower bound and the entire-dataset upper bound.
+//!
+//! Paper shape: Core-Set best, DBAL/MC next, everything informed above
+//! Random, everything below the full-data bound.
+//!
+//! Run: `cargo bench --bench fig4a_strategy_accuracy`
+
+#[path = "common.rs"]
+mod common;
+
+use alaas::data::{generate, DatasetSpec};
+use alaas::sim::AlExperiment;
+use alaas::trainer::TrainConfig;
+use alaas::util::bench::Table;
+
+const INIT: usize = 1000;
+const POOL: usize = 4000;
+const TEST: usize = 1000;
+const BUDGET: usize = 1000;
+// Accuracy is seed-noisy at this scale; average a few seeds.
+const SEEDS: [u64; 3] = [2022, 2023, 2024];
+
+fn main() {
+    let backend = common::backend(2);
+    let mut table = Table::new(
+        "Fig 4a — one-round AL accuracy, ResNet-18-sim / cifarsim (mean of 3 seeds)",
+        &["Strategy", "Top-1 (%)", "Top-5 (%)", "Δ vs Random (pts)"],
+    );
+
+    let strategies = alaas::strategies::zoo_names();
+    let mut top1 = vec![0.0f64; strategies.len()];
+    let mut top5 = vec![0.0f64; strategies.len()];
+    let mut upper1 = 0.0f64;
+    let mut upper5 = 0.0f64;
+
+    for &seed in &SEEDS {
+        let spec = DatasetSpec::cifarsim(seed).with_sizes(INIT, POOL, TEST);
+        let gen = generate(&spec);
+        let mut exp = AlExperiment::from_generated(
+            backend.clone(),
+            &gen,
+            spec.num_classes,
+            TrainConfig::default(),
+            seed,
+        )
+        .expect("experiment");
+        for (i, s) in strategies.iter().enumerate() {
+            let acc = exp.one_round(s, BUDGET).expect("one round");
+            eprintln!("[fig4a] seed {seed} {s:18} top1 {:.4}", acc.top1);
+            top1[i] += acc.top1;
+            top5[i] += acc.top5;
+        }
+        let ub = exp.upper_bound().expect("upper bound");
+        upper1 += ub.top1;
+        upper5 += ub.top5;
+    }
+    let n = SEEDS.len() as f64;
+    let rnd_idx = strategies.iter().position(|s| *s == "random").unwrap();
+    let rnd1 = top1[rnd_idx] / n;
+
+    // print in descending top-1 order, paper-style
+    let mut order: Vec<usize> = (0..strategies.len()).collect();
+    order.sort_by(|&a, &b| top1[b].partial_cmp(&top1[a]).unwrap());
+    for i in order {
+        table.row(&[
+            strategies[i].to_string(),
+            format!("{:.2}", 100.0 * top1[i] / n),
+            format!("{:.2}", 100.0 * top5[i] / n),
+            format!("{:+.2}", 100.0 * (top1[i] / n - rnd1)),
+        ]);
+    }
+    table.row(&[
+        "(entire dataset)".into(),
+        format!("{:.2}", 100.0 * upper1 / n),
+        format!("{:.2}", 100.0 * upper5 / n),
+        format!("{:+.2}", 100.0 * (upper1 / n - rnd1)),
+    ]);
+    table.print();
+    println!(
+        "\npaper shape check: informed strategies >= Random; upper bound on top; \
+         Core-Set / DBAL / MC near the front."
+    );
+}

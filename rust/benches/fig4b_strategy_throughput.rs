@@ -1,0 +1,85 @@
+//! Fig 4b: end-to-end throughput per AL strategy (one-round protocol):
+//! shared pipelined scan + per-strategy selection phase.
+//!
+//! Paper shape: LC highest (top-k over precomputed scores), Core-Set
+//! lowest ("heavy design"), diversity methods in between.
+//!
+//! Run: `cargo bench --bench fig4b_strategy_throughput`
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use alaas::cache::DataCache;
+use alaas::data::DatasetSpec;
+use alaas::pipeline::{run_pipeline, PipelineParams};
+use alaas::strategies::SelectCtx;
+use alaas::trainer::LinearHead;
+use alaas::util::bench::{fmt_dur, Table};
+use alaas::util::mat::Mat;
+
+const POOL: usize = 4000;
+const BUDGET: usize = 1000;
+
+fn main() {
+    let backend = common::backend(2);
+    let store = common::s3_store();
+    let spec = DatasetSpec::cifarsim(2022).with_sizes(0, POOL, 0);
+    let manifest = common::provision(&store, &spec, "f4b");
+
+    // shared scan (every strategy consumes the same embeddings/scores)
+    let head = LinearHead::zeros(64, 10);
+    let cache = DataCache::new(512 << 20, 16, true);
+    let t0 = Instant::now();
+    let out = run_pipeline(
+        &manifest.pool,
+        &store,
+        &cache,
+        &backend,
+        &head,
+        &PipelineParams::default(),
+        None,
+    )
+    .expect("scan");
+    let scan = t0.elapsed();
+    eprintln!("[fig4b] shared scan of {POOL}: {}", fmt_dur(scan));
+
+    let labeled = Mat::zeros(0, out.embeddings.cols());
+    let mut table = Table::new(
+        "Fig 4b — one-round AL throughput per strategy (scan + select), cifarsim 4k pool",
+        &["Strategy", "Select time", "End-to-end (img/s)", "Select-only (img/s)"],
+    );
+    for s in alaas::strategies::zoo() {
+        let ctx = SelectCtx {
+            scores: &out.scores,
+            embeddings: &out.embeddings,
+            labeled: &labeled,
+            backend: backend.as_ref(),
+            seed: 1,
+        };
+        // median of 3 runs
+        let mut times = Vec::new();
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            let sel = s.select(&ctx, BUDGET).expect("select");
+            assert_eq!(sel.len(), BUDGET);
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let select = times[1];
+        let total = scan + select;
+        table.row(&[
+            s.name().to_string(),
+            fmt_dur(select),
+            format!("{:.1}", POOL as f64 / total.as_secs_f64()),
+            format!("{:.0}", POOL as f64 / select.as_secs_f64().max(1e-9)),
+        ]);
+        eprintln!("[fig4b] {:18} select {}", s.name(), fmt_dur(select));
+    }
+    table.print();
+    println!(
+        "\npaper shape check: least_confidence fastest, core_set slowest \
+         (its refinement passes are the 'heavy design')."
+    );
+}

@@ -1,0 +1,71 @@
+//! Fig 4c: end-to-end throughput vs inference batch size over the
+//! simulated S3 store.
+//!
+//! Paper shape: BS 1 ≈ BS 2 (transmission-dominated), steep rise 4 -> 16
+//! (compute amortizes across the batch), plateau past 16 (compute
+//! capacity reached).
+//!
+//! Run: `cargo bench --bench fig4c_batch_size`
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::{Duration, Instant};
+
+use alaas::cache::DataCache;
+use alaas::data::DatasetSpec;
+use alaas::pipeline::{run_pipeline, BatchPolicy, DataflowMode, PipelineParams};
+use alaas::trainer::LinearHead;
+use alaas::util::bench::Table;
+
+const POOL: usize = 2000;
+const RUNS: usize = 2;
+
+fn main() {
+    let backend = common::backend(2);
+    let store = common::s3_store();
+    let spec = DatasetSpec::cifarsim(7).with_sizes(0, POOL, 0);
+    let manifest = common::provision(&store, &spec, "f4c");
+    let head = LinearHead::zeros(64, 10);
+
+    let mut table = Table::new(
+        "Fig 4c — end-to-end throughput vs inference batch size (cifarsim over s3sim)",
+        &["Batch size", "Throughput (img/s)", "Elapsed (s)", "vs BS=1"],
+    );
+    let mut base = None;
+    for bs in [1usize, 2, 4, 8, 16, 32, 64] {
+        let params = PipelineParams {
+            mode: DataflowMode::Pipelined,
+            batch: BatchPolicy { max_batch: bs, max_wait: Duration::from_millis(10) },
+            fetch_threads: 8,
+            preprocess_threads: 4,
+            infer_threads: 2,
+            ..Default::default()
+        };
+        let mut best = f64::MAX;
+        for _ in 0..RUNS {
+            let cache = DataCache::new(0, 1, false); // cold store every run
+            let t0 = Instant::now();
+            let out =
+                run_pipeline(&manifest.pool, &store, &cache, &backend, &head, &params, None)
+                    .expect("scan");
+            assert_eq!(out.processed, POOL);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        let tput = POOL as f64 / best;
+        if base.is_none() {
+            base = Some(tput);
+        }
+        table.row(&[
+            format!("{bs}"),
+            format!("{tput:.1}"),
+            format!("{best:.2}"),
+            format!("{:.2}x", tput / base.unwrap()),
+        ]);
+        eprintln!("[fig4c] bs={bs:3} {tput:8.1} img/s");
+    }
+    table.print();
+    println!(
+        "\npaper shape check: near-flat 1->2, dramatic rise 4->16, plateau >= 16."
+    );
+}

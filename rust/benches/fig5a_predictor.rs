@@ -1,0 +1,77 @@
+//! Fig 5a: the negative-exponential performance predictor vs the actual
+//! AL accuracy curve (least-confidence, 8 rounds, cifarsim).
+//!
+//! For each round k >= 3 the predictor is fit on rounds 0..k and asked for
+//! round k's accuracy; the paper's claim is that prediction tracks the
+//! actual curve closely ("can foresee the accuracy very accurately").
+//!
+//! Run: `cargo bench --bench fig5a_predictor`
+
+#[path = "common.rs"]
+mod common;
+
+use alaas::agent::NegExpPredictor;
+use alaas::data::{generate, DatasetSpec};
+use alaas::sim::AlExperiment;
+use alaas::trainer::TrainConfig;
+use alaas::util::bench::Table;
+
+const ROUNDS: usize = 8;
+const ROUND_BUDGET: usize = 300;
+
+fn main() {
+    let backend = common::backend(2);
+    let spec = DatasetSpec::cifarsim(5).with_sizes(600, 3000, 800);
+    let gen = generate(&spec);
+    let mut exp = AlExperiment::from_generated(
+        backend,
+        &gen,
+        spec.num_classes,
+        TrainConfig::default(),
+        5,
+    )
+    .expect("experiment");
+
+    // run the real 8-round LC curve
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for r in 0..ROUNDS {
+        let acc = exp
+            .round("least_confidence", ROUND_BUDGET)
+            .expect("round")
+            .expect("pool large enough");
+        xs.push(((r + 1) * ROUND_BUDGET) as f64);
+        ys.push(acc.top1);
+        eprintln!("[fig5a] round {r}: acc {:.4}", acc.top1);
+    }
+
+    let mut table = Table::new(
+        "Fig 5a — predictor vs actual accuracy (LC, 8 rounds x 300 labels, cifarsim)",
+        &["Round", "Labels", "Actual top-1", "Predicted", "Abs error (pts)"],
+    );
+    let mut errs = Vec::new();
+    for k in 0..ROUNDS {
+        let (pred_str, err_str) = if k >= 3 {
+            // fit on the history before round k, predict round k
+            let p = NegExpPredictor::fit(&xs[..k], &ys[..k]).expect("fit");
+            let pred = p.predict(xs[k]);
+            errs.push((pred - ys[k]).abs());
+            (format!("{:.4}", pred), format!("{:.2}", 100.0 * (pred - ys[k]).abs()))
+        } else {
+            ("-".to_string(), "-".to_string())
+        };
+        table.row(&[
+            format!("{k}"),
+            format!("{}", (k + 1) * ROUND_BUDGET),
+            format!("{:.4}", ys[k]),
+            pred_str,
+            err_str,
+        ]);
+    }
+    table.print();
+    let mean_err = 100.0 * errs.iter().sum::<f64>() / errs.len() as f64;
+    println!(
+        "\nmean |error| over predicted rounds: {mean_err:.2} pts \
+         (paper shape: prediction hugs the actual curve after a few rounds)."
+    );
+}

@@ -1,0 +1,102 @@
+//! Fig 5b: PSHEA multi-round auto-selection traces on the two datasets
+//! (cifarsim / svhnsim stand-ins for CIFAR-10 / SVHN).
+//!
+//! Paper shape: the agent launches all 7 candidates, eliminates round by
+//! round, and *different datasets keep different strategies* — the
+//! motivation for auto-selection (no strategy wins everywhere).
+//!
+//! Run: `cargo bench --bench fig5b_pshea`
+
+#[path = "common.rs"]
+mod common;
+
+use alaas::agent::{run_pshea, PsheaConfig};
+use alaas::data::{generate, DatasetSpec};
+use alaas::sim::AlExperiment;
+use alaas::trainer::TrainConfig;
+use alaas::util::bench::Table;
+
+const ROUNDS: usize = 8;
+const ROUND_BUDGET: usize = 200;
+
+fn run_dataset(name: &str, spec: DatasetSpec, backend: std::sync::Arc<dyn alaas::runtime::backend::ComputeBackend>) -> (String, usize, f64) {
+    eprintln!("[fig5b] embedding {name}...");
+    let gen = generate(&spec);
+    let mut exp = AlExperiment::from_generated(
+        backend,
+        &gen,
+        spec.num_classes,
+        TrainConfig::default(),
+        spec.seed,
+    )
+    .expect("experiment");
+    let (_, base) = exp.baseline().expect("baseline");
+
+    let candidates: Vec<String> =
+        alaas::strategies::candidate_names().into_iter().map(str::to_string).collect();
+    let cfg = PsheaConfig {
+        target_accuracy: 0.999, // run the full 8 rounds unless converged
+        max_budget: 1_000_000,
+        round_budget: ROUND_BUDGET,
+        max_rounds: ROUNDS,
+        converge_rounds: 0,
+        converge_eps: 0.0,
+        min_history: 3,
+        initial_accuracy: Some(base.top1),
+    };
+    let trace = run_pshea(&mut exp, &candidates, &cfg).expect("pshea");
+
+    let mut table = Table::new(
+        &format!("Fig 5b — PSHEA trace on {name} (baseline {:.3})", base.top1),
+        &["Round", "Live arms", "Best acc", "Eliminated"],
+    );
+    for r in 0..trace.rounds {
+        let live = trace.round(r).count();
+        let best = trace
+            .round(r)
+            .map(|rec| rec.accuracy)
+            .fold(f64::MIN, f64::max);
+        let elim: Vec<&str> = trace
+            .round(r)
+            .filter(|rec| rec.eliminated)
+            .map(|rec| rec.strategy.as_str())
+            .collect();
+        table.row(&[
+            format!("{r}"),
+            format!("{live}"),
+            format!("{best:.4}"),
+            if elim.is_empty() { "-".to_string() } else { elim.join(", ") },
+        ]);
+    }
+    table.print();
+    println!(
+        "{name}: survivor = {}, budget {} labels, best acc {:.4} (stop: {:?})",
+        trace.recommendation().unwrap_or("(none)"),
+        trace.total_budget,
+        trace.best_accuracy,
+        trace.stop
+    );
+    (
+        trace.recommendation().unwrap_or("(none)").to_string(),
+        trace.total_budget,
+        trace.best_accuracy,
+    )
+}
+
+fn main() {
+    let backend = common::backend(2);
+    let (s1, _, _) = run_dataset(
+        "cifarsim",
+        DatasetSpec::cifarsim(5).with_sizes(500, 3000, 800),
+        backend.clone(),
+    );
+    let (s2, _, _) = run_dataset(
+        "svhnsim",
+        DatasetSpec::svhnsim(5).with_sizes(500, 3000, 800),
+        backend,
+    );
+    println!(
+        "\npaper shape check: different datasets keep different strategies \
+         (cifarsim -> {s1}, svhnsim -> {s2}); auto-selection is necessary."
+    );
+}

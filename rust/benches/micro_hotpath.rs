@@ -1,0 +1,211 @@
+//! Micro-benchmarks of the coordinator hot paths (§Perf in
+//! EXPERIMENTS.md): substrate costs that bound the pipeline's throughput.
+//!
+//! Run: `cargo bench --bench micro_hotpath`
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use alaas::cache::DataCache;
+use alaas::json;
+use alaas::pipeline::{run_batcher, BatchPolicy};
+use alaas::runtime::backend::{host_scores, host_sqdist};
+#[allow(unused_imports)]
+use alaas::runtime::backend::ComputeBackend;
+use alaas::util::bench::{measure, measure_for, Table};
+use alaas::util::chan::bounded;
+use alaas::util::mat::Mat;
+use alaas::util::rng::Rng;
+use alaas::util::topk;
+
+fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_vec((0..r * c).map(|_| rng.normal_f32()).collect(), r, c)
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let mut table = Table::new(
+        "micro hot paths",
+        &["op", "per-op", "ops/sec", "notes"],
+    );
+    let budget = Duration::from_millis(600);
+
+    // channel send+recv round trip
+    {
+        let (tx, rx) = bounded(1024);
+        let s = measure_for(budget, || {
+            for i in 0..1000 {
+                tx.send(i).unwrap();
+            }
+            for _ in 0..1000 {
+                rx.recv().unwrap();
+            }
+        });
+        let per = s.mean().as_nanos() as f64 / 1000.0;
+        table.row(&[
+            "chan send+recv".into(),
+            format!("{per:.0}ns"),
+            format!("{:.2}M", 1e3 / per * 1e3 / 1e3),
+            "bounded(1024), single thread".into(),
+        ]);
+    }
+
+    // batcher throughput
+    {
+        let s = measure_for(budget, || {
+            let (tx_in, rx_in) = bounded(4096);
+            let (tx_out, rx_out) = bounded(4096);
+            let h = std::thread::spawn(move || {
+                run_batcher(
+                    &rx_in,
+                    &tx_out,
+                    BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(5) },
+                )
+            });
+            for i in 0..4000 {
+                tx_in.send(i).unwrap();
+            }
+            drop(tx_in);
+            h.join().unwrap();
+            drop(rx_out);
+        });
+        let per = s.mean().as_nanos() as f64 / 4000.0;
+        table.row(&[
+            "batcher item".into(),
+            format!("{per:.0}ns"),
+            format!("{:.2}M/s", 1e9 / per / 1e6),
+            "max_batch 16".into(),
+        ]);
+    }
+
+    // cache get (hit) / put
+    {
+        let cache = DataCache::new(256 << 20, 16, true);
+        for i in 0..1000 {
+            cache.put(&format!("k{i}"), Arc::new(vec![0.0f32; 3072]));
+        }
+        let s = measure_for(budget, || {
+            for i in 0..1000 {
+                let _ = cache.get(&format!("k{i}"));
+            }
+        });
+        let per = s.mean().as_nanos() as f64 / 1000.0;
+        table.row(&[
+            "cache hit".into(),
+            format!("{per:.0}ns"),
+            format!("{:.2}M/s", 1e9 / per / 1e6),
+            "3072-f32 tensors, 16 shards".into(),
+        ]);
+    }
+
+    // JSON parse + serialize of an RPC-sized frame
+    {
+        let frame = r#"{"id":42,"method":"query","params":{"session":"s1","budget":1000,"strategy":"least_confidence","wait_ms":60000}}"#;
+        let s = measure_for(budget, || {
+            let v = json::parse(frame).unwrap();
+            let _ = json::to_string(&v);
+        });
+        let per = s.mean().as_nanos() as f64;
+        table.row(&[
+            "json rpc roundtrip".into(),
+            format!("{per:.0}ns"),
+            format!("{:.2}M/s", 1e9 / per / 1e6),
+            format!("{}B frame", frame.len()),
+        ]);
+    }
+
+    // top-k over 100k scores (uncertainty selection hot loop)
+    {
+        let scores: Vec<f32> = (0..100_000).map(|_| rng.f32()).collect();
+        let s = measure(2, 10, || {
+            let _ = topk::top_k_desc(&scores, 10_000);
+        });
+        table.row(&[
+            "top-10k of 100k".into(),
+            format!("{:.2}ms", s.mean().as_secs_f64() * 1e3),
+            format!("{:.1}M scores/s", 0.1 / s.mean().as_secs_f64()),
+            "LC selection core".into(),
+        ]);
+    }
+
+    // host scores vs pjrt scores (L1 kernel vs host reference)
+    {
+        let logits = rand_mat(&mut rng, 128, 10);
+        let s = measure(3, 20, || {
+            let _ = host_scores(&logits);
+        });
+        table.row(&[
+            "host scores b128".into(),
+            format!("{:.1}us", s.mean().as_secs_f64() * 1e6),
+            format!("{:.2}M img/s", 128.0 / s.mean().as_secs_f64() / 1e6),
+            "rust reference".into(),
+        ]);
+        let backend = common::backend(1);
+        if backend.name() == "pjrt" {
+            let s = measure(3, 20, || {
+                let _ = backend.scores(&logits).unwrap();
+            });
+            table.row(&[
+                "pjrt scores b128".into(),
+                format!("{:.1}us", s.mean().as_secs_f64() * 1e6),
+                format!("{:.3}M img/s", 128.0 / s.mean().as_secs_f64() / 1e6),
+                "fused pallas kernel via PJRT".into(),
+            ]);
+            // forward (the serving hot path unit)
+            let imgs = rand_mat(&mut rng, 16, 3072);
+            let w = Mat::zeros(64, 10);
+            let b = vec![0.0f32; 10];
+            let s = measure(3, 20, || {
+                let _ = backend.forward(&imgs, &w, &b).unwrap();
+            });
+            table.row(&[
+                "pjrt forward b16".into(),
+                format!("{:.2}ms", s.mean().as_secs_f64() * 1e3),
+                format!("{:.0} img/s", 16.0 / s.mean().as_secs_f64()),
+                "trunk+head+scores, 1 worker".into(),
+            ]);
+            let imgs = rand_mat(&mut rng, 128, 3072);
+            let s = measure(3, 20, || {
+                let _ = backend.forward(&imgs, &w, &b).unwrap();
+            });
+            table.row(&[
+                "pjrt forward b128".into(),
+                format!("{:.2}ms", s.mean().as_secs_f64() * 1e3),
+                format!("{:.0} img/s", 128.0 / s.mean().as_secs_f64()),
+                "batch amortization (fig4c)".into(),
+            ]);
+            // sqdist tile through the pallas kernel
+            let x = rand_mat(&mut rng, 256, 64);
+            let y = rand_mat(&mut rng, 256, 64);
+            let s = measure(3, 20, || {
+                let _ = backend.sqdist(&x, &y).unwrap();
+            });
+            table.row(&[
+                "pjrt sqdist 256x256".into(),
+                format!("{:.2}ms", s.mean().as_secs_f64() * 1e3),
+                format!("{:.1}M pairs/s", 65.536 / s.mean().as_secs_f64() / 1e3),
+                "tiled MXU kernel".into(),
+            ]);
+        }
+    }
+
+    // host sqdist (the strategy-side incremental fallback)
+    {
+        let x = rand_mat(&mut rng, 256, 64);
+        let y = rand_mat(&mut rng, 256, 64);
+        let s = measure(3, 20, || {
+            let _ = host_sqdist(&x, &y).unwrap();
+        });
+        table.row(&[
+            "host sqdist 256x256".into(),
+            format!("{:.2}ms", s.mean().as_secs_f64() * 1e3),
+            format!("{:.1}M pairs/s", 65.536 / s.mean().as_secs_f64() / 1e3),
+            "rust reference".into(),
+        ]);
+    }
+
+    table.print();
+}

@@ -1,0 +1,7 @@
+//! The AL agent (paper §3.3): performance predictor + PSHEA controller.
+
+mod predictor;
+mod pshea;
+
+pub use predictor::NegExpPredictor;
+pub use pshea::{AlTask, PsheaConfig, PsheaTrace, RoundRecord, StopReason, run_pshea};

@@ -1,0 +1,227 @@
+//! The performance predictor: a negative exponential forecasting model
+//! (paper §3.3, citing AutoLRS [Jin et al. '21]; evaluated in Fig 5a).
+//!
+//! Accuracy-vs-budget curves of AL runs saturate, so the agent fits
+//!
+//!   a(x) = a_inf - (a_inf - a_0) * exp(-k * (x - x_0))
+//!
+//! to the observed (budget, accuracy) history of each strategy and
+//! extrapolates the next round. Fitting: `a_0`/`x_0` are pinned to the
+//! first observation; for each candidate asymptote `a_inf` on a grid the
+//! optimal rate `k` has a closed-form least-squares solution in log space;
+//! the (a_inf, k) pair minimizing SSE in *accuracy* space wins. A golden-
+//! section refinement pass tightens a_inf between grid neighbors.
+
+/// Fitted negative-exponential curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NegExpPredictor {
+    pub a_inf: f64,
+    pub a0: f64,
+    pub x0: f64,
+    pub k: f64,
+    /// Sum of squared residuals on the training points.
+    pub sse: f64,
+}
+
+impl NegExpPredictor {
+    /// Fit to observed budgets `xs` (monotone increasing) and accuracies
+    /// `ys` in [0, 1]. Needs >= 2 points; with exactly 2 the fit is exact
+    /// through both. Returns None on degenerate input.
+    pub fn fit(xs: &[f64], ys: &[f64]) -> Option<NegExpPredictor> {
+        if xs.len() != ys.len() || xs.len() < 2 {
+            return None;
+        }
+        if xs.windows(2).any(|w| w[1] <= w[0]) {
+            return None;
+        }
+        let x0 = xs[0];
+        let a0 = ys[0];
+        let y_max = ys.iter().cloned().fold(f64::MIN, f64::max);
+
+        // Degenerate: flat or decreasing history -> predict flat.
+        if y_max <= a0 + 1e-9 {
+            return Some(NegExpPredictor { a_inf: a0, a0, x0, k: 0.0, sse: 0.0 });
+        }
+
+        let eval_sse = |a_inf: f64, k: f64| -> f64 {
+            xs.iter()
+                .zip(ys)
+                .map(|(&x, &y)| {
+                    let p = a_inf - (a_inf - a0) * (-k * (x - x0)).exp();
+                    (p - y) * (p - y)
+                })
+                .sum()
+        };
+
+        // Closed-form k for fixed a_inf: z_i = ln((a_inf - y_i)/(a_inf - a0))
+        // should equal -k (x_i - x0); least squares k = -Σ z u / Σ u².
+        let k_for = |a_inf: f64| -> Option<f64> {
+            let denom0 = a_inf - a0;
+            if denom0 <= 1e-12 {
+                return None;
+            }
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for (&x, &y) in xs.iter().zip(ys).skip(1) {
+                let r = (a_inf - y) / denom0;
+                if r <= 1e-12 {
+                    return None; // y touches/exceeds the asymptote
+                }
+                let z = r.ln();
+                let u = x - x0;
+                num += z * u;
+                den += u * u;
+            }
+            if den <= 0.0 {
+                return None;
+            }
+            let k = -num / den;
+            (k >= 0.0).then_some(k)
+        };
+
+        let mut best: Option<(f64, f64, f64)> = None; // (sse, a_inf, k)
+        let lo = y_max + 1e-6;
+        let hi = 1.0_f64.max(lo + 0.25); // allow overshoot targets > 1 for mid-curve fits
+        let grid = 200;
+        for g in 0..=grid {
+            let a_inf = lo + (hi - lo) * g as f64 / grid as f64;
+            if let Some(k) = k_for(a_inf) {
+                let sse = eval_sse(a_inf, k);
+                if best.map_or(true, |(b, _, _)| sse < b) {
+                    best = Some((sse, a_inf, k));
+                }
+            }
+        }
+        let (mut sse, mut a_inf, mut k) = best?;
+
+        // golden-section refinement around the winning asymptote
+        let step = (hi - lo) / grid as f64;
+        let (mut a, mut b) = ((a_inf - step).max(lo), a_inf + step);
+        for _ in 0..40 {
+            let phi = 0.618_033_988_75;
+            let m1 = b - phi * (b - a);
+            let m2 = a + phi * (b - a);
+            let s1 = k_for(m1).map(|kk| eval_sse(m1, kk)).unwrap_or(f64::INFINITY);
+            let s2 = k_for(m2).map(|kk| eval_sse(m2, kk)).unwrap_or(f64::INFINITY);
+            if s1 < s2 {
+                b = m2;
+            } else {
+                a = m1;
+            }
+        }
+        let mid = 0.5 * (a + b);
+        if let Some(kk) = k_for(mid) {
+            let s = eval_sse(mid, kk);
+            if s < sse {
+                sse = s;
+                a_inf = mid;
+                k = kk;
+            }
+        }
+        Some(NegExpPredictor { a_inf, a0, x0, k, sse })
+    }
+
+    /// Predicted accuracy at budget `x`.
+    pub fn predict(&self, x: f64) -> f64 {
+        self.a_inf - (self.a_inf - self.a0) * (-self.k * (x - self.x0)).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+
+    fn curve(a_inf: f64, a0: f64, k: f64, xs: &[f64]) -> Vec<f64> {
+        xs.iter().map(|&x| a_inf - (a_inf - a0) * (-k * (x - xs[0])).exp()).collect()
+    }
+
+    #[test]
+    fn recovers_exact_negexp_curve() {
+        let xs: Vec<f64> = (0..6).map(|i| 1000.0 * (i + 1) as f64).collect();
+        let ys = curve(0.92, 0.55, 0.0007, &xs);
+        let p = NegExpPredictor::fit(&xs, &ys).unwrap();
+        // next-round prediction is what PSHEA consumes
+        let x_next = 7000.0;
+        let want = 0.92 - (0.92 - 0.55) * (-0.0007f64 * (x_next - xs[0])).exp();
+        assert!(
+            (p.predict(x_next) - want).abs() < 0.005,
+            "pred {} want {want}",
+            p.predict(x_next)
+        );
+        assert!((p.a_inf - 0.92).abs() < 0.03, "a_inf {}", p.a_inf);
+    }
+
+    #[test]
+    fn prop_recovers_random_negexp_curves() {
+        crate::util::prop::check("negexp-recovery", 60, |rng| {
+            let a0 = 0.3 + 0.3 * rng.f64();
+            let a_inf = a0 + 0.1 + 0.4 * rng.f64();
+            let k = 0.0003 + 0.002 * rng.f64();
+            let n = 4 + rng.below(5);
+            let xs: Vec<f64> = (0..n).map(|i| 500.0 * (i + 1) as f64).collect();
+            let ys = curve(a_inf, a0, k, &xs);
+            let p = NegExpPredictor::fit(&xs, &ys)
+                .ok_or_else(|| "fit failed".to_string())?;
+            let x_next = xs.last().unwrap() + 500.0;
+            let want = a_inf - (a_inf - a0) * (-k * (x_next - xs[0])).exp();
+            prop_assert!(
+                (p.predict(x_next) - want).abs() < 0.01,
+                "pred {} want {want} (a_inf {a_inf} k {k} n {n})",
+                p.predict(x_next)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn noisy_curve_predicts_within_a_point() {
+        let mut rng = crate::util::rng::Rng::new(8);
+        let xs: Vec<f64> = (0..8).map(|i| 1000.0 * (i + 1) as f64).collect();
+        let clean = curve(0.88, 0.60, 0.0005, &xs);
+        let noisy: Vec<f64> =
+            clean.iter().map(|y| y + 0.004 * rng.normal()).collect();
+        let p = NegExpPredictor::fit(&xs[..6], &noisy[..6]).unwrap();
+        let want7 = clean[6];
+        assert!((p.predict(xs[6]) - want7).abs() < 0.01, "{} vs {want7}", p.predict(xs[6]));
+    }
+
+    #[test]
+    fn flat_history_predicts_flat() {
+        let xs = [100.0, 200.0, 300.0];
+        let ys = [0.7, 0.7, 0.7];
+        let p = NegExpPredictor::fit(&xs, &ys).unwrap();
+        assert!((p.predict(400.0) - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decreasing_history_does_not_explode() {
+        let xs = [100.0, 200.0, 300.0];
+        let ys = [0.7, 0.65, 0.6];
+        let p = NegExpPredictor::fit(&xs, &ys).unwrap();
+        let pred = p.predict(400.0);
+        assert!((0.0..=1.0).contains(&pred), "pred {pred}");
+    }
+
+    #[test]
+    fn degenerate_inputs_rejected() {
+        assert!(NegExpPredictor::fit(&[1.0], &[0.5]).is_none());
+        assert!(NegExpPredictor::fit(&[1.0, 1.0], &[0.5, 0.6]).is_none());
+        assert!(NegExpPredictor::fit(&[2.0, 1.0], &[0.5, 0.6]).is_none());
+        assert!(NegExpPredictor::fit(&[], &[]).is_none());
+    }
+
+    #[test]
+    fn monotone_increasing_prediction() {
+        let xs = [1000.0, 2000.0, 3000.0, 4000.0];
+        let ys = [0.5, 0.62, 0.69, 0.73];
+        let p = NegExpPredictor::fit(&xs, &ys).unwrap();
+        let mut prev = p.predict(4000.0);
+        for i in 1..20 {
+            let cur = p.predict(4000.0 + 500.0 * i as f64);
+            assert!(cur >= prev - 1e-12, "not monotone at {i}");
+            prev = cur;
+        }
+        assert!(prev <= p.a_inf + 1e-9, "saturates at a_inf");
+    }
+}

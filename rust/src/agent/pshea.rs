@@ -1,0 +1,393 @@
+//! PSHEA — Predictive-based Successive Halving Early-stop (Algorithm 1).
+//!
+//! The loop controller runs every candidate strategy as an independent AL
+//! arm; each round every *live* strategy selects + labels `round_budget`
+//! samples, retrains, and reports evaluation accuracy. A
+//! [`NegExpPredictor`] is fit to each arm's history to forecast its
+//! next-round accuracy, and (while more than one arm is alive) the arm
+//! with the *lowest forecast* is eliminated — successive halving with a
+//! predictive, not observed, criterion. Stopping: target accuracy reached,
+//! budget exhausted, or convergence (max accuracy stopped improving).
+
+use super::predictor::NegExpPredictor;
+use crate::runtime::backend::RtResult;
+
+/// Controller knobs (Algorithm 1 inputs).
+#[derive(Debug, Clone)]
+pub struct PsheaConfig {
+    /// Target accuracy `a_t`.
+    pub target_accuracy: f64,
+    /// Maximum total labeling budget `b_max` (across all live arms — the
+    /// paper charges every arm's labeling to the user).
+    pub max_budget: usize,
+    /// Labels each live strategy gets per round.
+    pub round_budget: usize,
+    /// Convergence: this many consecutive rounds with < `converge_eps`
+    /// improvement of the best accuracy stops the loop.
+    pub converge_rounds: usize,
+    pub converge_eps: f64,
+    /// Hard cap on rounds (0 = unlimited); the paper's Fig 5 runs 8.
+    pub max_rounds: usize,
+    /// Observations each arm needs before elimination starts. The
+    /// negative-exponential predictor needs 3 points to identify its
+    /// asymptote; killing arms on 1-2 observations would just rank current
+    /// accuracy, which is exactly the failure mode predictive elimination
+    /// exists to avoid (crossing curves — see the crossing-curves test).
+    pub min_history: usize,
+    /// Pre-training accuracy `a_0` (Algorithm 1 initializes
+    /// `a_max = a_0`); when the baseline already meets the target the loop
+    /// stops before spending any budget.
+    pub initial_accuracy: Option<f64>,
+}
+
+impl Default for PsheaConfig {
+    fn default() -> Self {
+        PsheaConfig {
+            target_accuracy: 0.95,
+            max_budget: 10_000,
+            round_budget: 500,
+            converge_rounds: 3,
+            converge_eps: 0.002,
+            max_rounds: 0,
+            min_history: 3,
+            initial_accuracy: None,
+        }
+    }
+}
+
+/// What the controller drives. `sim::AlExperiment` implements this for
+/// real datasets; tests drive it with synthetic curves.
+pub trait AlTask {
+    /// One AL round for `strategy`: select + label `budget` samples from
+    /// the pool, update the arm's model, return evaluation accuracy.
+    /// Returns `None` accuracy when the arm's pool is exhausted.
+    fn run_round(&mut self, strategy: &str, budget: usize) -> RtResult<Option<f64>>;
+}
+
+/// Per-round record of one arm.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub strategy: String,
+    /// Cumulative labels this arm has consumed.
+    pub budget_spent: usize,
+    pub accuracy: f64,
+    /// Next-round forecast (None in round 0: predictor needs 2 points).
+    pub predicted_next: Option<f64>,
+    /// True if the arm was eliminated at the end of this round.
+    pub eliminated: bool,
+}
+
+/// Why the loop stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    TargetReached,
+    BudgetExhausted,
+    Converged,
+    RoundLimit,
+    PoolExhausted,
+}
+
+/// Full trace of a PSHEA run (what Fig 5b plots).
+#[derive(Debug, Clone)]
+pub struct PsheaTrace {
+    pub records: Vec<RoundRecord>,
+    /// Strategies still alive at stop, best first.
+    pub survivors: Vec<String>,
+    pub stop: StopReason,
+    pub total_budget: usize,
+    pub best_accuracy: f64,
+    pub rounds: usize,
+}
+
+impl PsheaTrace {
+    /// The agent's recommendation: best surviving strategy.
+    pub fn recommendation(&self) -> Option<&str> {
+        self.survivors.first().map(String::as_str)
+    }
+
+    /// Records of a given round.
+    pub fn round(&self, r: usize) -> impl Iterator<Item = &RoundRecord> {
+        self.records.iter().filter(move |rec| rec.round == r)
+    }
+}
+
+/// Run Algorithm 1 over `strategies` on `task`.
+pub fn run_pshea(
+    task: &mut dyn AlTask,
+    strategies: &[String],
+    cfg: &PsheaConfig,
+) -> RtResult<PsheaTrace> {
+    assert!(!strategies.is_empty(), "need at least one candidate strategy");
+    let mut live: Vec<String> = strategies.to_vec();
+    let mut history: std::collections::BTreeMap<String, (Vec<f64>, Vec<f64>)> =
+        strategies.iter().map(|s| (s.clone(), (vec![], vec![]))).collect();
+    let mut records = Vec::new();
+    let mut total_budget = 0usize;
+    let mut a_max = cfg.initial_accuracy.unwrap_or(0.0);
+    let mut stall_rounds = 0usize;
+    let mut round = 0usize;
+    let stop;
+
+    'outer: loop {
+        // Stop checks (line 11-13 of Algorithm 1)
+        if a_max >= cfg.target_accuracy {
+            stop = StopReason::TargetReached;
+            break;
+        }
+        if total_budget + live.len() * cfg.round_budget > cfg.max_budget && round > 0 {
+            stop = StopReason::BudgetExhausted;
+            break;
+        }
+        if cfg.converge_rounds > 0 && stall_rounds >= cfg.converge_rounds {
+            stop = StopReason::Converged;
+            break;
+        }
+        if cfg.max_rounds > 0 && round >= cfg.max_rounds {
+            stop = StopReason::RoundLimit;
+            break;
+        }
+
+        let prev_a_max = a_max;
+        let mut predicted: Vec<(String, f64)> = Vec::new();
+        for s in live.clone() {
+            let acc = match task.run_round(&s, cfg.round_budget)? {
+                Some(a) => a,
+                None => {
+                    stop = StopReason::PoolExhausted;
+                    break 'outer;
+                }
+            };
+            total_budget += cfg.round_budget;
+            let (xs, ys) = history.get_mut(&s).unwrap();
+            xs.push(((xs.len() + 1) * cfg.round_budget) as f64);
+            ys.push(acc);
+            a_max = a_max.max(acc);
+
+            // forecast the arm's next round (line 17)
+            let pred = NegExpPredictor::fit(xs, ys)
+                .map(|p| p.predict(xs.last().unwrap() + cfg.round_budget as f64));
+            predicted.push((s.clone(), pred.unwrap_or(acc)));
+            records.push(RoundRecord {
+                round,
+                strategy: s.clone(),
+                budget_spent: xs.len() * cfg.round_budget,
+                accuracy: acc,
+                predicted_next: pred,
+                eliminated: false,
+            });
+        }
+
+        // strategy-level early stopping (lines 22-24): drop the worst
+        // forecast while >1 arm is alive and every arm has enough history
+        // for the forecast to mean anything.
+        let enough_history =
+            live.iter().all(|s| history[s].0.len() >= cfg.min_history.max(1));
+        if live.len() > 1 && enough_history {
+            let worst = predicted
+                .iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .map(|(s, _)| s.clone())
+                .expect("non-empty");
+            live.retain(|s| *s != worst);
+            if let Some(rec) = records
+                .iter_mut()
+                .rev()
+                .find(|r| r.round == round && r.strategy == worst)
+            {
+                rec.eliminated = true;
+            }
+        }
+
+        stall_rounds = if a_max - prev_a_max < cfg.converge_eps { stall_rounds + 1 } else { 0 };
+        round += 1;
+    }
+
+    // survivors ranked by their latest accuracy
+    let mut survivors: Vec<(String, f64)> = live
+        .into_iter()
+        .map(|s| {
+            let acc = history[&s].1.last().copied().unwrap_or(0.0);
+            (s, acc)
+        })
+        .collect();
+    survivors.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+
+    Ok(PsheaTrace {
+        records,
+        survivors: survivors.into_iter().map(|(s, _)| s).collect(),
+        stop,
+        total_budget,
+        best_accuracy: a_max,
+        rounds: round,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic task: each strategy follows its own neg-exp curve.
+    struct CurveTask {
+        curves: std::collections::BTreeMap<String, (f64, f64, f64)>, // a_inf, a0, k
+        spent: std::collections::BTreeMap<String, usize>,
+        pool_left: usize,
+    }
+
+    impl CurveTask {
+        fn new(curves: &[(&str, f64, f64, f64)]) -> Self {
+            CurveTask {
+                curves: curves
+                    .iter()
+                    .map(|(s, ai, a0, k)| (s.to_string(), (*ai, *a0, *k)))
+                    .collect(),
+                spent: Default::default(),
+                pool_left: usize::MAX,
+            }
+        }
+    }
+
+    impl AlTask for CurveTask {
+        fn run_round(&mut self, strategy: &str, budget: usize) -> RtResult<Option<f64>> {
+            if self.pool_left < budget {
+                return Ok(None);
+            }
+            self.pool_left -= budget;
+            let spent = self.spent.entry(strategy.to_string()).or_insert(0);
+            *spent += budget;
+            let (a_inf, a0, k) = self.curves[strategy];
+            Ok(Some(a_inf - (a_inf - a0) * (-k * (*spent as f64 - budget as f64)).exp()))
+        }
+    }
+
+    fn cfg(rounds: usize) -> PsheaConfig {
+        PsheaConfig {
+            target_accuracy: 0.99,
+            max_budget: 1_000_000,
+            round_budget: 500,
+            converge_rounds: 0,
+            converge_eps: 0.0,
+            max_rounds: rounds,
+            min_history: 3,
+            initial_accuracy: None,
+        }
+    }
+
+    #[test]
+    fn eliminates_one_arm_per_round_and_keeps_the_best() {
+        let mut task = CurveTask::new(&[
+            ("good", 0.95, 0.5, 0.002),
+            ("mid", 0.85, 0.5, 0.002),
+            ("bad", 0.70, 0.5, 0.002),
+        ]);
+        let strategies: Vec<String> =
+            ["good", "mid", "bad"].iter().map(|s| s.to_string()).collect();
+        let trace = run_pshea(&mut task, &strategies, &cfg(8)).unwrap();
+        assert_eq!(trace.survivors, vec!["good".to_string()]);
+        // min_history = 3: rounds 0-2 keep all 3 arms; elimination starts
+        // at round 2, one arm per round after.
+        assert_eq!(trace.round(0).count(), 3);
+        assert_eq!(trace.round(1).count(), 3);
+        assert_eq!(trace.round(2).count(), 3);
+        assert_eq!(trace.round(3).count(), 2);
+        assert_eq!(trace.round(4).count(), 1);
+        // the first eliminated arm (round 2) must be 'bad'
+        let elim2: Vec<&str> = trace
+            .round(2)
+            .filter(|r| r.eliminated)
+            .map(|r| r.strategy.as_str())
+            .collect();
+        assert_eq!(elim2, vec!["bad"]);
+        let elim3: Vec<&str> = trace
+            .round(3)
+            .filter(|r| r.eliminated)
+            .map(|r| r.strategy.as_str())
+            .collect();
+        assert_eq!(elim3, vec!["mid"]);
+        assert_eq!(trace.stop, StopReason::RoundLimit);
+    }
+
+    #[test]
+    fn stops_on_target_accuracy() {
+        let mut task = CurveTask::new(&[("fast", 0.99, 0.8, 0.01)]);
+        let mut c = cfg(100);
+        c.target_accuracy = 0.9;
+        let trace = run_pshea(&mut task, &["fast".to_string()], &c).unwrap();
+        assert_eq!(trace.stop, StopReason::TargetReached);
+        assert!(trace.best_accuracy >= 0.9);
+        assert!(trace.rounds < 100);
+    }
+
+    #[test]
+    fn stops_on_budget() {
+        let mut task = CurveTask::new(&[("slow", 0.9, 0.5, 0.00001)]);
+        let mut c = cfg(0);
+        c.max_budget = 1600; // 3 rounds of 500 fit, the 4th would exceed
+        let trace = run_pshea(&mut task, &["slow".to_string()], &c).unwrap();
+        assert_eq!(trace.stop, StopReason::BudgetExhausted);
+        assert!(trace.total_budget <= 1600);
+    }
+
+    #[test]
+    fn stops_on_convergence() {
+        let mut task = CurveTask::new(&[("plateau", 0.72, 0.70, 0.05)]);
+        let mut c = cfg(0);
+        c.converge_rounds = 3;
+        c.converge_eps = 0.002;
+        let trace = run_pshea(&mut task, &["plateau".to_string()], &c).unwrap();
+        assert_eq!(trace.stop, StopReason::Converged);
+    }
+
+    #[test]
+    fn stops_when_pool_exhausted() {
+        let mut task = CurveTask::new(&[("a", 0.9, 0.5, 0.001), ("b", 0.8, 0.5, 0.001)]);
+        task.pool_left = 1700;
+        let trace = run_pshea(
+            &mut task,
+            &["a".to_string(), "b".to_string()],
+            &cfg(100),
+        )
+        .unwrap();
+        assert_eq!(trace.stop, StopReason::PoolExhausted);
+    }
+
+    #[test]
+    fn single_arm_never_eliminated() {
+        let mut task = CurveTask::new(&[("only", 0.9, 0.5, 0.001)]);
+        let trace = run_pshea(&mut task, &["only".to_string()], &cfg(5)).unwrap();
+        assert!(trace.records.iter().all(|r| !r.eliminated));
+        assert_eq!(trace.survivors, vec!["only".to_string()]);
+    }
+
+    #[test]
+    fn crossing_curves_need_history_before_elimination() {
+        // 'slow_start' ends higher but starts lower: with enough observed
+        // rounds before the kill decision, the predictor should spare it.
+        // (This is the paper's core claim: predictive elimination beats
+        // eliminating on current accuracy.)
+        let mut task = CurveTask::new(&[
+            ("flash", 0.75, 0.70, 0.02), // starts high, saturates low
+            ("slow_start", 0.95, 0.40, 0.0012), // starts low, ends high
+        ]);
+        let strategies: Vec<String> =
+            ["flash", "slow_start"].iter().map(|s| s.to_string()).collect();
+        let trace = run_pshea(&mut task, &strategies, &cfg(8)).unwrap();
+        // flash's forecast saturates at ~0.75 while slow_start's keeps
+        // climbing; the survivor must be slow_start.
+        assert_eq!(trace.survivors, vec!["slow_start".to_string()]);
+    }
+
+    #[test]
+    fn total_budget_accounts_for_all_arms() {
+        let mut task = CurveTask::new(&[
+            ("a", 0.9, 0.5, 0.001),
+            ("b", 0.8, 0.5, 0.001),
+            ("c", 0.7, 0.5, 0.001),
+        ]);
+        let strategies: Vec<String> =
+            ["a", "b", "c"].iter().map(|s| s.to_string()).collect();
+        let trace = run_pshea(&mut task, &strategies, &cfg(4)).unwrap();
+        // rounds 0-2: 3*500 each (min_history), round 3: 2*500
+        assert_eq!(trace.total_budget, 3 * 1500 + 1000);
+    }
+}

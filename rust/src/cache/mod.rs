@@ -1,0 +1,293 @@
+//! The data cache (paper §3.3): URI -> preprocessed tensor.
+//!
+//! "Public clouds usually adopt the computation and storage separation
+//! design, and transferring the data back and forth ... is very
+//! time-consuming" — so once a sample has been downloaded and
+//! preprocessed, later AL rounds (and the multi-round PSHEA agent, which
+//! re-scans the pool every round) hit this cache instead of the store.
+//!
+//! Sharded, byte-bounded LRU: keys hash to a shard, each shard keeps exact
+//! LRU order; values are `Arc`ed so hits are zero-copy.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A cached, preprocessed sample (f32 image ready for the model).
+pub type CachedTensor = Arc<Vec<f32>>;
+
+struct Shard {
+    /// key -> (value, lru stamp)
+    map: HashMap<String, (CachedTensor, u64)>,
+    /// monotonically increasing use stamp
+    tick: u64,
+    bytes: usize,
+}
+
+impl Shard {
+    fn evict_to(&mut self, cap: usize) {
+        while self.bytes > cap && !self.map.is_empty() {
+            // exact LRU: find min stamp (shards are small; O(n) eviction
+            // beats the bookkeeping of an intrusive list at our sizes —
+            // re-measured in §Perf if it ever shows up).
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty");
+            if let Some((v, _)) = self.map.remove(&victim) {
+                self.bytes -= v.len() * 4;
+            }
+        }
+    }
+}
+
+/// Sharded byte-bounded LRU cache.
+pub struct DataCache {
+    shards: Vec<Mutex<Shard>>,
+    capacity_per_shard: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    enabled: bool,
+}
+
+impl DataCache {
+    /// `capacity_bytes` across `shards` shards. `enabled=false` makes every
+    /// lookup a miss (the ablation switch for Table 2 / §Perf).
+    pub fn new(capacity_bytes: usize, shards: usize, enabled: bool) -> Self {
+        let shards = shards.max(1);
+        DataCache {
+            shards: (0..shards)
+                .map(|_| {
+                    Mutex::new(Shard { map: HashMap::new(), tick: 0, bytes: 0 })
+                })
+                .collect(),
+            capacity_per_shard: capacity_bytes / shards,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            enabled,
+        }
+    }
+
+    /// From config (capacity in MiB).
+    pub fn from_config(cfg: &crate::config::CacheConfig) -> Self {
+        Self::new(cfg.capacity_mib * 1024 * 1024, cfg.shards, cfg.enabled)
+    }
+
+    fn shard_for(&self, key: &str) -> &Mutex<Shard> {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in key.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        &self.shards[(h as usize) % self.shards.len()]
+    }
+
+    /// Zero-copy lookup.
+    pub fn get(&self, key: &str) -> Option<CachedTensor> {
+        if !self.enabled {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let mut shard = self.shard_for(key).lock().unwrap();
+        shard.tick += 1;
+        let tick = shard.tick;
+        match shard.map.get_mut(key) {
+            Some((v, stamp)) => {
+                *stamp = tick;
+                let v = v.clone();
+                drop(shard);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            None => {
+                drop(shard);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (replaces an existing entry), evicting LRU entries as needed.
+    /// Values bigger than a whole shard are not cached.
+    pub fn put(&self, key: &str, value: CachedTensor) {
+        if !self.enabled {
+            return;
+        }
+        let vbytes = value.len() * 4;
+        if vbytes > self.capacity_per_shard {
+            return;
+        }
+        let mut shard = self.shard_for(key).lock().unwrap();
+        shard.tick += 1;
+        let tick = shard.tick;
+        if let Some((old, _)) = shard.map.insert(key.to_string(), (value, tick)) {
+            shard.bytes -= old.len() * 4;
+        }
+        shard.bytes += vbytes;
+        let cap = self.capacity_per_shard;
+        shard.evict_to(cap);
+    }
+
+    /// Fetch-through: `get` or compute-and-`put`.
+    pub fn get_or_insert_with<E>(
+        &self,
+        key: &str,
+        f: impl FnOnce() -> Result<Vec<f32>, E>,
+    ) -> Result<CachedTensor, E> {
+        if let Some(v) = self.get(key) {
+            return Ok(v);
+        }
+        let v = Arc::new(f()?);
+        self.put(key, v.clone());
+        Ok(v)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Total cached bytes across shards (racy; metrics only).
+    pub fn bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().bytes).sum()
+    }
+
+    /// Total entries across shards (racy; metrics only).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+
+    fn tensor(n: usize, fill: f32) -> CachedTensor {
+        Arc::new(vec![fill; n])
+    }
+
+    #[test]
+    fn get_after_put() {
+        let c = DataCache::new(1024, 2, true);
+        c.put("a", tensor(10, 1.0));
+        assert_eq!(c.get("a").unwrap()[0], 1.0);
+        assert_eq!(c.hits(), 1);
+        assert!(c.get("b").is_none());
+        assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn disabled_cache_never_hits() {
+        let c = DataCache::new(1024, 2, false);
+        c.put("a", tensor(10, 1.0));
+        assert!(c.get("a").is_none());
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn evicts_lru_not_mru() {
+        // single shard, capacity = 3 tensors of 10 floats
+        let c = DataCache::new(120, 1, true);
+        c.put("a", tensor(10, 1.0));
+        c.put("b", tensor(10, 2.0));
+        c.put("c", tensor(10, 3.0));
+        c.get("a"); // refresh a
+        c.put("d", tensor(10, 4.0)); // evicts b (lru)
+        assert!(c.get("a").is_some());
+        assert!(c.get("b").is_none(), "b should be evicted");
+        assert!(c.get("c").is_some());
+        assert!(c.get("d").is_some());
+    }
+
+    #[test]
+    fn replace_updates_bytes() {
+        let c = DataCache::new(120, 1, true);
+        c.put("a", tensor(10, 1.0));
+        c.put("a", tensor(20, 2.0));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), 80);
+        assert_eq!(c.get("a").unwrap().len(), 20);
+    }
+
+    #[test]
+    fn oversized_value_not_cached() {
+        let c = DataCache::new(100, 1, true);
+        c.put("big", tensor(1000, 1.0));
+        assert!(c.get("big").is_none());
+        assert_eq!(c.bytes(), 0);
+    }
+
+    #[test]
+    fn get_or_insert_with_computes_once() {
+        let c = DataCache::new(1024, 1, true);
+        let mut calls = 0;
+        let v: Result<_, ()> = c.get_or_insert_with("k", || {
+            calls += 1;
+            Ok(vec![7.0])
+        });
+        assert_eq!(v.unwrap()[0], 7.0);
+        let _: Result<_, ()> = c.get_or_insert_with("k", || {
+            calls += 1;
+            Ok(vec![8.0])
+        });
+        assert_eq!(calls, 1, "second call must hit");
+    }
+
+    #[test]
+    fn error_passthrough_does_not_cache() {
+        let c = DataCache::new(1024, 1, true);
+        let r: Result<CachedTensor, String> = c.get_or_insert_with("k", || Err("boom".into()));
+        assert!(r.is_err());
+        assert!(c.get("k").is_none());
+    }
+
+    #[test]
+    fn prop_never_exceeds_capacity() {
+        crate::util::prop::check("cache-capacity", 50, |rng| {
+            let cap = 200 + rng.below(2000);
+            let shards = 1 + rng.below(4);
+            let c = DataCache::new(cap, shards, true);
+            for i in 0..200 {
+                let n = 1 + rng.below(30);
+                c.put(&format!("k{}", i % 60), tensor(n, i as f32));
+                prop_assert!(
+                    c.bytes() <= cap,
+                    "cache bytes {} exceed capacity {cap}",
+                    c.bytes()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn concurrent_put_get() {
+        let c = Arc::new(DataCache::new(100_000, 8, true));
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for i in 0..500 {
+                        let key = format!("t{t}-{}", i % 50);
+                        if i % 3 == 0 {
+                            c.put(&key, tensor(16, i as f32));
+                        } else {
+                            let _ = c.get(&key);
+                        }
+                    }
+                });
+            }
+        });
+        assert!(c.bytes() <= 100_000);
+    }
+}

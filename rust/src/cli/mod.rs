@@ -1,0 +1,156 @@
+//! Minimal CLI argument parser (clap is not in the offline registry).
+//!
+//! Supports the subcommand + `--flag value` / `--flag` grammar the `alaas`
+//! binary uses. Unknown flags are errors (typos should not silently pick
+//! defaults).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, flags, positionals.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CliError {
+    #[error("missing subcommand (try `alaas help`)")]
+    NoSubcommand,
+    #[error("unknown flag '--{0}'")]
+    UnknownFlag(String),
+    #[error("flag '--{0}' expects a value")]
+    MissingValue(String),
+    #[error("flag '--{flag}' has invalid value '{value}': {reason}")]
+    BadValue { flag: String, value: String, reason: String },
+}
+
+/// Flag schema: which flags take values, which are boolean switches.
+pub struct Schema {
+    pub value_flags: &'static [&'static str],
+    pub bool_flags: &'static [&'static str],
+}
+
+impl Args {
+    /// Parse argv (without the program name) against a schema.
+    pub fn parse(argv: &[String], schema: &Schema) -> Result<Args, CliError> {
+        let mut it = argv.iter().peekable();
+        let subcommand = it.next().cloned().ok_or(CliError::NoSubcommand)?;
+        let mut args = Args { subcommand, ..Default::default() };
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // --flag=value form
+                if let Some((n, v)) = name.split_once('=') {
+                    if schema.value_flags.contains(&n) {
+                        args.flags.insert(n.to_string(), v.to_string());
+                        continue;
+                    }
+                    return Err(CliError::UnknownFlag(n.to_string()));
+                }
+                if schema.bool_flags.contains(&name) {
+                    args.bools.push(name.to_string());
+                } else if schema.value_flags.contains(&name) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+                    args.flags.insert(name.to_string(), v.clone());
+                } else {
+                    return Err(CliError::UnknownFlag(name.to_string()));
+                }
+            } else {
+                args.positionals.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.flags.get(flag).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, flag: &str, default: &'a str) -> &'a str {
+        self.get(flag).unwrap_or(default)
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.bools.iter().any(|b| b == flag)
+    }
+
+    pub fn get_usize(&self, flag: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                flag: flag.to_string(),
+                value: v.to_string(),
+                reason: "expected unsigned integer".into(),
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, flag: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                flag: flag.to_string(),
+                value: v.to_string(),
+                reason: "expected number".into(),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SCHEMA: Schema = Schema {
+        value_flags: &["config", "budget", "strategy", "seed"],
+        bool_flags: &["verbose"],
+    };
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positionals() {
+        let a = Args::parse(&argv("serve --config x.yml --verbose extra"), &SCHEMA).unwrap();
+        assert_eq!(a.subcommand, "serve");
+        assert_eq!(a.get("config"), Some("x.yml"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&argv("query --budget=100"), &SCHEMA).unwrap();
+        assert_eq!(a.get_usize("budget", 0).unwrap(), 100);
+    }
+
+    #[test]
+    fn errors() {
+        assert_eq!(Args::parse(&[], &SCHEMA), Err(CliError::NoSubcommand));
+        assert_eq!(
+            Args::parse(&argv("x --nope 1"), &SCHEMA),
+            Err(CliError::UnknownFlag("nope".into()))
+        );
+        assert_eq!(
+            Args::parse(&argv("x --budget"), &SCHEMA),
+            Err(CliError::MissingValue("budget".into()))
+        );
+        assert!(matches!(
+            Args::parse(&argv("x --budget ten"), &SCHEMA).unwrap().get_usize("budget", 0),
+            Err(CliError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv("x"), &SCHEMA).unwrap();
+        assert_eq!(a.get_or("strategy", "least_confidence"), "least_confidence");
+        assert_eq!(a.get_usize("budget", 42).unwrap(), 42);
+        assert_eq!(a.get_f64("seed", 1.5).unwrap(), 1.5);
+    }
+}

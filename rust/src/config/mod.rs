@@ -1,0 +1,493 @@
+//! Configuration-as-a-service (paper §3.2, Figure 2).
+//!
+//! One YAML file fully describes an AL service: model + batching, strategy
+//! (a named one, or `auto` to engage the PSHEA agent), worker topology,
+//! store simulation and cache parameters. `AlaasConfig::from_yaml_str`
+//! validates everything up front so a bad config fails at start, not
+//! mid-run. Every field has a default matching the paper's experimental
+//! setup, so the quickstart config is a handful of lines (Fig 2).
+
+use crate::json::Value;
+use crate::yamlmini;
+
+/// Validation failure: which field, what's wrong.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[error("config error at '{field}': {reason}")]
+pub struct ConfigError {
+    pub field: String,
+    pub reason: String,
+}
+
+fn cerr(field: &str, reason: impl Into<String>) -> ConfigError {
+    ConfigError { field: field.to_string(), reason: reason.into() }
+}
+
+/// Strategy selection: a named zoo entry or automatic (PSHEA agent).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StrategyChoice {
+    Auto,
+    Named(String),
+}
+
+impl StrategyChoice {
+    pub fn as_str(&self) -> &str {
+        match self {
+            StrategyChoice::Auto => "auto",
+            StrategyChoice::Named(s) => s,
+        }
+    }
+}
+
+/// `active_learning.model.*`
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    /// Informational model name (the artifact set is fixed by `make
+    /// artifacts`; paper: "resnet18").
+    pub name: String,
+    /// Informational hub tag (paper: torchvision release).
+    pub hub_name: String,
+    /// Inference batch size for the serving path (Fig 4c sweeps this).
+    pub batch_size: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            name: "resnet18-sim".into(),
+            hub_name: "alaas/fixed-seed-trunk".into(),
+            batch_size: 16,
+        }
+    }
+}
+
+/// `active_learning.*`
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActiveLearningConfig {
+    pub strategy: StrategyChoice,
+    pub model: ModelConfig,
+    /// Serving device (only `CPU` is wired in this environment).
+    pub device: String,
+    /// PSHEA knobs (used when strategy = auto).
+    pub agent: AgentConfig,
+}
+
+impl Default for ActiveLearningConfig {
+    fn default() -> Self {
+        ActiveLearningConfig {
+            strategy: StrategyChoice::Named("least_confidence".into()),
+            model: ModelConfig::default(),
+            device: "CPU".into(),
+            agent: AgentConfig::default(),
+        }
+    }
+}
+
+/// PSHEA agent knobs (Algorithm 1 inputs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentConfig {
+    /// Target accuracy `a_t` (stop when reached).
+    pub target_accuracy: f64,
+    /// Maximum labeling budget `b_max` (samples).
+    pub max_budget: usize,
+    /// Budget spent per strategy per round (samples).
+    pub round_budget: usize,
+    /// Rounds with < `converge_eps` improvement that count as converged.
+    pub converge_rounds: usize,
+    pub converge_eps: f64,
+}
+
+impl Default for AgentConfig {
+    fn default() -> Self {
+        AgentConfig {
+            target_accuracy: 0.95,
+            max_budget: 10_000,
+            round_budget: 500,
+            converge_rounds: 3,
+            converge_eps: 0.002,
+        }
+    }
+}
+
+/// `al_worker.*` — server topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerConfig {
+    /// Wire protocol; this build speaks `alaas-jsonrpc` (the gRPC
+    /// substitution, DESIGN.md).
+    pub protocol: String,
+    pub host: String,
+    pub port: u16,
+    /// PJRT inference worker replicas (the Triton substitution).
+    pub replicas: usize,
+    /// Download-stage threads.
+    pub fetch_threads: usize,
+    /// Preprocess-stage threads.
+    pub preprocess_threads: usize,
+    /// Bounded queue capacity between stages (backpressure).
+    pub queue_depth: usize,
+    /// Max time a dynamic batch waits to fill before dispatch.
+    pub batch_timeout_ms: u64,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig {
+            protocol: "alaas-jsonrpc".into(),
+            host: "127.0.0.1".into(),
+            port: 60035,
+            replicas: 2,
+            fetch_threads: 4,
+            preprocess_threads: 2,
+            queue_depth: 256,
+            batch_timeout_ms: 20,
+        }
+    }
+}
+
+/// Object-store simulation (the S3 substitution; Fig 4c's knobs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoreConfig {
+    /// Per-GET latency in microseconds (request round trip).
+    pub get_latency_us: u64,
+    /// Simulated link bandwidth in MiB/s (0 = infinite).
+    pub bandwidth_mib_s: f64,
+    /// Latency jitter fraction (0.1 = +-10%), deterministic per key.
+    pub jitter: f64,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig { get_latency_us: 300, bandwidth_mib_s: 120.0, jitter: 0.1 }
+    }
+}
+
+/// Data-cache settings (paper §3.3 "data cache").
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheConfig {
+    pub enabled: bool,
+    /// Capacity in MiB of processed samples.
+    pub capacity_mib: usize,
+    pub shards: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { enabled: true, capacity_mib: 512, shards: 16 }
+    }
+}
+
+/// Root config (Fig 2's `example.yml`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlaasConfig {
+    pub name: String,
+    pub version: String,
+    pub active_learning: ActiveLearningConfig,
+    pub al_worker: WorkerConfig,
+    pub store: StoreConfig,
+    pub cache: CacheConfig,
+    /// Directory holding `manifest.json` + `*.hlo.txt` from `make artifacts`.
+    pub artifacts_dir: String,
+}
+
+impl Default for AlaasConfig {
+    fn default() -> Self {
+        AlaasConfig {
+            name: "ALAAS".into(),
+            version: "0.1".into(),
+            active_learning: ActiveLearningConfig::default(),
+            al_worker: WorkerConfig::default(),
+            store: StoreConfig::default(),
+            cache: CacheConfig::default(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl AlaasConfig {
+    /// Parse + validate a YAML config string.
+    pub fn from_yaml_str(s: &str) -> Result<AlaasConfig, ConfigError> {
+        let v = yamlmini::parse(s).map_err(|e| cerr("<yaml>", e.to_string()))?;
+        Self::from_value(&v)
+    }
+
+    /// Load from a file path.
+    pub fn from_yaml_file(path: &str) -> Result<AlaasConfig, ConfigError> {
+        let s = std::fs::read_to_string(path)
+            .map_err(|e| cerr("<file>", format!("{path}: {e}")))?;
+        Self::from_yaml_str(&s)
+    }
+
+    /// Build from a parsed Value, applying defaults and validating.
+    pub fn from_value(v: &Value) -> Result<AlaasConfig, ConfigError> {
+        let mut cfg = AlaasConfig::default();
+        if v.is_null() {
+            return Ok(cfg);
+        }
+        if v.as_object().is_none() {
+            return Err(cerr("<root>", "config must be a mapping"));
+        }
+
+        if let Some(x) = v.get("name") {
+            cfg.name = req_str(x, "name")?;
+        }
+        if let Some(x) = v.get("version") {
+            cfg.version = match x {
+                Value::String(s) => s.clone(),
+                Value::Number(n) => format!("{n}"),
+                _ => return Err(cerr("version", "expected string or number")),
+            };
+        }
+        if let Some(x) = v.get("artifacts_dir") {
+            cfg.artifacts_dir = req_str(x, "artifacts_dir")?;
+        }
+
+        if let Some(al) = v.get("active_learning") {
+            let c = &mut cfg.active_learning;
+            if let Some(s) = al.path("strategy.type") {
+                let name = req_str(s, "active_learning.strategy.type")?;
+                c.strategy = if name == "auto" {
+                    StrategyChoice::Auto
+                } else {
+                    StrategyChoice::Named(name)
+                };
+            }
+            if let Some(m) = al.get("model") {
+                if let Some(x) = m.get("name") {
+                    c.model.name = req_str(x, "active_learning.model.name")?;
+                }
+                if let Some(x) = m.get("hub_name") {
+                    c.model.hub_name = req_str(x, "active_learning.model.hub_name")?;
+                }
+                if let Some(x) = m.get("batch_size") {
+                    c.model.batch_size = req_usize(x, "active_learning.model.batch_size")?;
+                }
+            }
+            if let Some(x) = al.get("device") {
+                c.device = req_str(x, "active_learning.device")?;
+            }
+            if let Some(a) = al.get("agent") {
+                if let Some(x) = a.get("target_accuracy") {
+                    c.agent.target_accuracy = req_f64(x, "active_learning.agent.target_accuracy")?;
+                }
+                if let Some(x) = a.get("max_budget") {
+                    c.agent.max_budget = req_usize(x, "active_learning.agent.max_budget")?;
+                }
+                if let Some(x) = a.get("round_budget") {
+                    c.agent.round_budget = req_usize(x, "active_learning.agent.round_budget")?;
+                }
+            }
+        }
+
+        if let Some(w) = v.get("al_worker") {
+            let c = &mut cfg.al_worker;
+            if let Some(x) = w.get("protocol") {
+                c.protocol = req_str(x, "al_worker.protocol")?;
+            }
+            if let Some(x) = w.get("host") {
+                c.host = req_str(x, "al_worker.host")?;
+            }
+            if let Some(x) = w.get("port") {
+                let p = req_usize(x, "al_worker.port")?;
+                c.port = u16::try_from(p).map_err(|_| cerr("al_worker.port", "out of range"))?;
+            }
+            if let Some(x) = w.get("replicas") {
+                c.replicas = req_usize(x, "al_worker.replicas")?;
+            }
+            if let Some(x) = w.get("fetch_threads") {
+                c.fetch_threads = req_usize(x, "al_worker.fetch_threads")?;
+            }
+            if let Some(x) = w.get("preprocess_threads") {
+                c.preprocess_threads = req_usize(x, "al_worker.preprocess_threads")?;
+            }
+            if let Some(x) = w.get("queue_depth") {
+                c.queue_depth = req_usize(x, "al_worker.queue_depth")?;
+            }
+            if let Some(x) = w.get("batch_timeout_ms") {
+                c.batch_timeout_ms = req_usize(x, "al_worker.batch_timeout_ms")? as u64;
+            }
+        }
+
+        if let Some(s) = v.get("store") {
+            let c = &mut cfg.store;
+            if let Some(x) = s.get("get_latency_us") {
+                c.get_latency_us = req_usize(x, "store.get_latency_us")? as u64;
+            }
+            if let Some(x) = s.get("bandwidth_mib_s") {
+                c.bandwidth_mib_s = req_f64(x, "store.bandwidth_mib_s")?;
+            }
+            if let Some(x) = s.get("jitter") {
+                c.jitter = req_f64(x, "store.jitter")?;
+            }
+        }
+
+        if let Some(s) = v.get("cache") {
+            let c = &mut cfg.cache;
+            if let Some(x) = s.get("enabled") {
+                c.enabled =
+                    x.as_bool().ok_or_else(|| cerr("cache.enabled", "expected bool"))?;
+            }
+            if let Some(x) = s.get("capacity_mib") {
+                c.capacity_mib = req_usize(x, "cache.capacity_mib")?;
+            }
+            if let Some(x) = s.get("shards") {
+                c.shards = req_usize(x, "cache.shards")?;
+            }
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Cross-field validation.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let bs = self.active_learning.model.batch_size;
+        if bs == 0 {
+            return Err(cerr("active_learning.model.batch_size", "must be >= 1"));
+        }
+        if !bs.is_power_of_two() || bs > 128 {
+            return Err(cerr(
+                "active_learning.model.batch_size",
+                format!("must be a power of two <= 128 (compiled artifact variants); got {bs}"),
+            ));
+        }
+        if self.active_learning.device != "CPU" {
+            return Err(cerr(
+                "active_learning.device",
+                format!("only CPU PJRT is available in this build; got {}", self.active_learning.device),
+            ));
+        }
+        if self.al_worker.replicas == 0 {
+            return Err(cerr("al_worker.replicas", "must be >= 1"));
+        }
+        if self.al_worker.queue_depth == 0 {
+            return Err(cerr("al_worker.queue_depth", "must be >= 1"));
+        }
+        let a = &self.active_learning.agent;
+        if !(0.0..=1.0).contains(&a.target_accuracy) {
+            return Err(cerr("active_learning.agent.target_accuracy", "must be in [0, 1]"));
+        }
+        if a.round_budget == 0 || a.round_budget > a.max_budget {
+            return Err(cerr(
+                "active_learning.agent.round_budget",
+                "must be in [1, max_budget]",
+            ));
+        }
+        if self.cache.shards == 0 {
+            return Err(cerr("cache.shards", "must be >= 1"));
+        }
+        if !(0.0..1.0).contains(&self.store.jitter) {
+            return Err(cerr("store.jitter", "must be in [0, 1)"));
+        }
+        Ok(())
+    }
+}
+
+fn req_str(v: &Value, field: &str) -> Result<String, ConfigError> {
+    v.as_str().map(str::to_string).ok_or_else(|| cerr(field, "expected string"))
+}
+
+fn req_usize(v: &Value, field: &str) -> Result<usize, ConfigError> {
+    v.as_usize().ok_or_else(|| cerr(field, "expected non-negative integer"))
+}
+
+fn req_f64(v: &Value, field: &str) -> Result<f64, ConfigError> {
+    v.as_f64().ok_or_else(|| cerr(field, "expected number"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        AlaasConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_fig2_style_config() {
+        let cfg = AlaasConfig::from_yaml_str(
+            r#"
+name: "IMG_CLASSIFICATION"
+version: 0.1
+active_learning:
+  strategy:
+    type: "auto"
+  model:
+    name: "resnet18"
+    hub_name: "pytorch/vision:release/0.12"
+    batch_size: 1
+  device: CPU
+al_worker:
+  protocol: "alaas-jsonrpc"
+  host: "0.0.0.0"
+  port: 60035
+  replicas: 1
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "IMG_CLASSIFICATION");
+        assert_eq!(cfg.version, "0.1");
+        assert_eq!(cfg.active_learning.strategy, StrategyChoice::Auto);
+        assert_eq!(cfg.active_learning.model.batch_size, 1);
+        assert_eq!(cfg.al_worker.port, 60035);
+        assert_eq!(cfg.al_worker.replicas, 1);
+        // untouched fields keep defaults
+        assert_eq!(cfg.cache.capacity_mib, 512);
+    }
+
+    #[test]
+    fn named_strategy() {
+        let cfg = AlaasConfig::from_yaml_str(
+            "active_learning:\n  strategy:\n    type: \"core_set\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.active_learning.strategy, StrategyChoice::Named("core_set".into()));
+    }
+
+    #[test]
+    fn empty_config_is_all_defaults() {
+        let cfg = AlaasConfig::from_yaml_str("").unwrap();
+        assert_eq!(cfg, AlaasConfig::default());
+    }
+
+    #[test]
+    fn rejects_bad_batch_size() {
+        for bs in ["0", "3", "256"] {
+            let doc = format!("active_learning:\n  model:\n    batch_size: {bs}\n");
+            let e = AlaasConfig::from_yaml_str(&doc).unwrap_err();
+            assert_eq!(e.field, "active_learning.model.batch_size", "{bs}: {e}");
+        }
+    }
+
+    #[test]
+    fn rejects_gpu_device() {
+        let e = AlaasConfig::from_yaml_str("active_learning:\n  device: GPU\n").unwrap_err();
+        assert_eq!(e.field, "active_learning.device");
+    }
+
+    #[test]
+    fn rejects_zero_replicas_and_bad_port() {
+        assert!(AlaasConfig::from_yaml_str("al_worker:\n  replicas: 0\n").is_err());
+        assert!(AlaasConfig::from_yaml_str("al_worker:\n  port: 99999\n").is_err());
+    }
+
+    #[test]
+    fn rejects_type_confusion() {
+        assert!(AlaasConfig::from_yaml_str("name:\n  nested: 1\n").is_err());
+        assert!(AlaasConfig::from_yaml_str("al_worker:\n  port: \"sixty\"\n").is_err());
+        assert!(AlaasConfig::from_yaml_str("cache:\n  enabled: 3\n").is_err());
+    }
+
+    #[test]
+    fn agent_validation() {
+        let e = AlaasConfig::from_yaml_str(
+            "active_learning:\n  agent:\n    target_accuracy: 1.5\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.field, "active_learning.agent.target_accuracy");
+        let e = AlaasConfig::from_yaml_str(
+            "active_learning:\n  agent:\n    round_budget: 999999\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.field, "active_learning.agent.round_budget");
+    }
+}

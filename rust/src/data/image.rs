@@ -1,0 +1,76 @@
+//! Raw sample codec + preprocessing.
+//!
+//! A stored sample is exactly `IMG_BYTES` raw u8 values (32*32*3, HWC).
+//! Preprocessing mirrors python/compile tests: `u8 / 255 - 0.5`, i.e. the
+//! float image the trunk was "trained" on. The preprocess stage of the
+//! pipeline calls `decode_image`; the dataset generator calls
+//! `encode_image`.
+
+/// 32 * 32 * 3 — keep in sync with python/compile/model.py::IMG_DIM.
+pub const IMG_DIM: usize = 3072;
+/// Stored blob size in bytes (1 byte per component).
+pub const IMG_BYTES: usize = IMG_DIM;
+
+/// Decode error.
+#[derive(Debug, thiserror::Error)]
+#[error("bad image blob: expected {IMG_BYTES} bytes, got {0}")]
+pub struct BadImage(pub usize);
+
+/// Quantize a float image in [-0.5, 0.5] to the stored u8 form.
+pub fn encode_image(pixels: &[f32]) -> Vec<u8> {
+    assert_eq!(pixels.len(), IMG_DIM, "encode_image: wrong length");
+    pixels
+        .iter()
+        .map(|&p| {
+            let v = ((p + 0.5) * 255.0).round();
+            v.clamp(0.0, 255.0) as u8
+        })
+        .collect()
+}
+
+/// Decode + preprocess a stored blob into the model's input range.
+pub fn decode_image(blob: &[u8]) -> Result<Vec<f32>, BadImage> {
+    if blob.len() != IMG_BYTES {
+        return Err(BadImage(blob.len()));
+    }
+    Ok(blob.iter().map(|&b| b as f32 / 255.0 - 0.5).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_within_quantization_error() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let img: Vec<f32> = (0..IMG_DIM).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+        let blob = encode_image(&img);
+        let back = decode_image(&blob).unwrap();
+        for (a, b) in img.iter().zip(&back) {
+            assert!((a - b).abs() <= 0.5 / 255.0 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let mut img = vec![0.0f32; IMG_DIM];
+        img[0] = 5.0;
+        img[1] = -5.0;
+        let blob = encode_image(&img);
+        assert_eq!(blob[0], 255);
+        assert_eq!(blob[1], 0);
+    }
+
+    #[test]
+    fn rejects_wrong_size() {
+        assert!(decode_image(&[0u8; 100]).is_err());
+        assert!(decode_image(&vec![0u8; IMG_BYTES]).is_ok());
+    }
+
+    #[test]
+    fn decode_range() {
+        let blob: Vec<u8> = (0..IMG_BYTES).map(|i| (i % 256) as u8).collect();
+        let img = decode_image(&blob).unwrap();
+        assert!(img.iter().all(|&p| (-0.5..=0.5).contains(&p)));
+    }
+}

@@ -1,0 +1,22 @@
+//! Synthetic datasets — the CIFAR-10 / SVHN substitution (DESIGN.md).
+//!
+//! The generator produces class-conditional 32x32x3 u8 images with the
+//! structure the paper's experiments depend on:
+//!
+//! * a *class signal* the fixed trunk can embed separably (accuracy climbs
+//!   with labeled data — Fig 4a/5a);
+//! * *sub-clusters* per class plus *near-duplicate redundancy* so
+//!   diversity-based strategies (Core-Set, KCG, DBAL) have something to
+//!   exploit over pure uncertainty sampling;
+//! * optional *class imbalance* and heavier overlap ("svhnsim") so the two
+//!   datasets prefer different strategies — the premise of Fig 5b.
+//!
+//! Everything is a pure function of the spec's seed: runs replay exactly.
+
+mod image;
+mod oracle;
+mod synth;
+
+pub use image::{decode_image, encode_image, IMG_BYTES, IMG_DIM};
+pub use oracle::Oracle;
+pub use synth::{generate, generate_into_store, DatasetSpec, Generated};

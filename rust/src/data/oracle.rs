@@ -1,0 +1,113 @@
+//! The labeling oracle — the "human annotator" boundary of Figure 1.
+//!
+//! AL evaluation convention: ground-truth labels exist (labels.json in the
+//! dataset bucket) but the system may only read them through `Oracle::
+//! label`, which counts every revealed label against the budget. Code
+//! outside this module never touches labels.json (the manifest test
+//! enforces that manifests don't carry labels).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::json::Value;
+use crate::store::{ObjectStore, StoreError};
+
+/// Budget-metered access to ground truth.
+pub struct Oracle {
+    labels: Vec<u8>,
+    revealed: AtomicU64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum OracleError {
+    #[error("labels object missing: {0}")]
+    Missing(#[from] StoreError),
+    #[error("labels.json malformed: {0}")]
+    Malformed(String),
+}
+
+impl Oracle {
+    /// Load labels.json from `{bucket}/labels.json`.
+    pub fn load(store: &Arc<dyn ObjectStore>, bucket: &str) -> Result<Oracle, OracleError> {
+        let raw = store.get(&format!("{bucket}/labels.json"))?;
+        let text =
+            std::str::from_utf8(&raw).map_err(|e| OracleError::Malformed(e.to_string()))?;
+        let v = crate::json::parse(text).map_err(|e| OracleError::Malformed(e.to_string()))?;
+        let arr = v
+            .get("labels")
+            .and_then(Value::as_array)
+            .ok_or_else(|| OracleError::Malformed("missing 'labels' array".into()))?;
+        let labels = arr
+            .iter()
+            .map(|x| {
+                x.as_usize()
+                    .and_then(|u| u8::try_from(u).ok())
+                    .ok_or_else(|| OracleError::Malformed("label out of range".into()))
+            })
+            .collect::<Result<Vec<u8>, _>>()?;
+        Ok(Oracle { labels, revealed: AtomicU64::new(0) })
+    }
+
+    /// Build directly from a label vector (tests, in-memory experiments).
+    pub fn from_labels(labels: Vec<u8>) -> Oracle {
+        Oracle { labels, revealed: AtomicU64::new(0) }
+    }
+
+    /// "Send to human annotators": reveal labels for sample ids, paying
+    /// one budget unit each.
+    pub fn label(&self, ids: &[u32]) -> Vec<u8> {
+        self.revealed.fetch_add(ids.len() as u64, Ordering::Relaxed);
+        ids.iter().map(|&i| self.labels[i as usize]).collect()
+    }
+
+    /// Labels revealed so far (= labeling budget consumed).
+    pub fn budget_spent(&self) -> u64 {
+        self.revealed.load(Ordering::Relaxed)
+    }
+
+    /// Evaluation-only access (test-set accuracy): does NOT count against
+    /// the labeling budget — the paper's test sets are pre-labeled.
+    pub fn eval_labels(&self, ids: &[u32]) -> Vec<u8> {
+        ids.iter().map(|&i| self.labels[i as usize]).collect()
+    }
+
+    pub fn total(&self) -> usize {
+        self.labels.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::MemStore;
+
+    #[test]
+    fn label_meters_budget_eval_does_not() {
+        let o = Oracle::from_labels(vec![0, 1, 2, 3, 4]);
+        assert_eq!(o.label(&[1, 3]), vec![1, 3]);
+        assert_eq!(o.budget_spent(), 2);
+        assert_eq!(o.eval_labels(&[0, 4]), vec![0, 4]);
+        assert_eq!(o.budget_spent(), 2, "eval must not consume budget");
+        o.label(&[0]);
+        assert_eq!(o.budget_spent(), 3);
+    }
+
+    #[test]
+    fn load_from_store() {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        store.put("ds/labels.json", br#"{"labels": [3, 1, 4, 1, 5]}"#).unwrap();
+        let o = Oracle::load(&store, "ds").unwrap();
+        assert_eq!(o.total(), 5);
+        assert_eq!(o.label(&[2]), vec![4]);
+    }
+
+    #[test]
+    fn malformed_labels_rejected() {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        store.put("a/labels.json", b"{}").unwrap();
+        assert!(matches!(Oracle::load(&store, "a"), Err(OracleError::Malformed(_))));
+        store.put("b/labels.json", br#"{"labels": [999]}"#).unwrap();
+        assert!(matches!(Oracle::load(&store, "b"), Err(OracleError::Malformed(_))));
+        assert!(matches!(Oracle::load(&store, "missing"), Err(OracleError::Missing(_))));
+    }
+}

@@ -1,0 +1,364 @@
+//! Class-conditional synthetic image generator.
+//!
+//! Generative process per sample of class `c`:
+//!   1. pick one of `clusters_per_class` sub-cluster templates of `c`
+//!      (fixed random sparse patterns, amplitude `cluster_amp`);
+//!   2. image = class_bias(c) * class_sep + template + noise * N(0, 1);
+//!   3. with probability `redundancy`, instead emit a near-duplicate of a
+//!      previously generated pool sample (tiny perturbation) — the
+//!      redundancy diversity strategies exploit;
+//!   4. clip to [-0.5, 0.5], quantize to u8.
+//!
+//! The class bias is the same repeat-one-hot pattern the python model test
+//! uses, which is known (tested) to give linearly separable trunk
+//! embeddings at sep >= 0.6 and overlapping ones below.
+
+use std::sync::Arc;
+
+use crate::data::image::{encode_image, IMG_DIM};
+use crate::json::{Map, Value};
+use crate::store::{Manifest, ObjectStore, SampleRef};
+use crate::util::rng::Rng;
+
+/// Everything that defines a synthetic dataset. Presets: [`DatasetSpec::cifarsim`],
+/// [`DatasetSpec::svhnsim`].
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: String,
+    pub seed: u64,
+    pub num_classes: usize,
+    pub n_init: usize,
+    pub n_pool: usize,
+    pub n_test: usize,
+    /// Strength of the linear class signal (0.6 ~ separable, 0.4 ~ hard).
+    pub class_sep: f32,
+    /// Per-pixel gaussian noise sigma.
+    pub noise: f32,
+    /// Sub-clusters per class (diversity structure).
+    pub clusters_per_class: usize,
+    /// Amplitude of sub-cluster templates.
+    pub cluster_amp: f32,
+    /// Fraction of pool samples that are near-duplicates of earlier ones.
+    pub redundancy: f32,
+    /// 0 = balanced classes; > 0 = geometric decay of class frequency
+    /// (class k has weight (1-imbalance)^k).
+    pub imbalance: f32,
+}
+
+impl DatasetSpec {
+    /// CIFAR-10 stand-in: balanced, separable, redundant pool.
+    pub fn cifarsim(seed: u64) -> Self {
+        DatasetSpec {
+            name: "cifarsim".into(),
+            seed,
+            num_classes: 10,
+            n_init: 1000,
+            n_pool: 4000,
+            n_test: 1000,
+            class_sep: 0.55,
+            noise: 0.15,
+            clusters_per_class: 3,
+            cluster_amp: 0.25,
+            redundancy: 0.30,
+            imbalance: 0.0,
+        }
+    }
+
+    /// SVHN stand-in: imbalanced (digit frequencies), heavier overlap,
+    /// more redundancy (street numbers repeat).
+    pub fn svhnsim(seed: u64) -> Self {
+        DatasetSpec {
+            name: "svhnsim".into(),
+            seed,
+            num_classes: 10,
+            n_init: 1000,
+            n_pool: 4000,
+            n_test: 1000,
+            class_sep: 0.45,
+            noise: 0.22,
+            clusters_per_class: 2,
+            cluster_amp: 0.18,
+            redundancy: 0.45,
+            imbalance: 0.12,
+        }
+    }
+
+    /// Scale split sizes (benchmarks use bigger pools).
+    pub fn with_sizes(mut self, n_init: usize, n_pool: usize, n_test: usize) -> Self {
+        self.n_init = n_init;
+        self.n_pool = n_pool;
+        self.n_test = n_test;
+        self
+    }
+}
+
+/// The raw generated dataset, before it is written anywhere.
+pub struct Generated {
+    pub images: Vec<Vec<u8>>,
+    pub labels: Vec<u8>,
+    /// Split boundaries: [0, n_init) init, [n_init, n_init+n_pool) pool, rest test.
+    pub n_init: usize,
+    pub n_pool: usize,
+}
+
+/// Class-bias pattern: repeat-one-hot over the pixel vector.
+fn class_bias(class: usize, num_classes: usize, sep: f32, out: &mut [f32]) {
+    let rep = IMG_DIM.div_ceil(num_classes);
+    let start = class * rep;
+    let end = ((class + 1) * rep).min(IMG_DIM);
+    for i in start..end {
+        out[i] += sep;
+    }
+}
+
+fn sample_class(rng: &mut Rng, num_classes: usize, imbalance: f32) -> usize {
+    if imbalance <= 0.0 {
+        return rng.below(num_classes);
+    }
+    // geometric weights (1-imb)^k, normalized by inverse-CDF sampling
+    let q = 1.0 - imbalance as f64;
+    let weights: Vec<f64> = (0..num_classes).map(|k| q.powi(k as i32)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.f64() * total;
+    for (k, w) in weights.iter().enumerate() {
+        if u < *w {
+            return k;
+        }
+        u -= w;
+    }
+    num_classes - 1
+}
+
+/// Generate the full dataset in memory.
+pub fn generate(spec: &DatasetSpec) -> Generated {
+    assert!(spec.num_classes >= 2, "need >= 2 classes");
+    let mut rng = Rng::new(spec.seed);
+
+    // Fixed sub-cluster templates: sparse +-amp patterns.
+    let mut templates: Vec<Vec<f32>> =
+        Vec::with_capacity(spec.num_classes * spec.clusters_per_class);
+    for _class in 0..spec.num_classes {
+        for _k in 0..spec.clusters_per_class {
+            let mut t = vec![0.0f32; IMG_DIM];
+            // ~12% of pixels carry the template
+            let n_active = IMG_DIM / 8;
+            for _ in 0..n_active {
+                let i = rng.below(IMG_DIM);
+                t[i] += if rng.below(2) == 0 { spec.cluster_amp } else { -spec.cluster_amp };
+            }
+            templates.push(t);
+        }
+    }
+
+    let total = spec.n_init + spec.n_pool + spec.n_test;
+    let mut images: Vec<Vec<u8>> = Vec::with_capacity(total);
+    let mut labels: Vec<u8> = Vec::with_capacity(total);
+    // Indices of already-generated *pool* samples, for redundancy cloning.
+    let pool_range = spec.n_init..spec.n_init + spec.n_pool;
+
+    for i in 0..total {
+        let in_pool = pool_range.contains(&i);
+        let clone_from = if in_pool
+            && !images.is_empty()
+            && i > pool_range.start
+            && (rng.f32() as f64) < spec.redundancy as f64
+        {
+            // near-duplicate of an earlier pool sample
+            let lo = pool_range.start;
+            Some(lo + rng.below(i - lo))
+        } else {
+            None
+        };
+
+        if let Some(src) = clone_from {
+            let mut px: Vec<f32> =
+                images[src].iter().map(|&b| b as f32 / 255.0 - 0.5).collect();
+            for p in px.iter_mut() {
+                *p += 0.01 * rng.normal_f32();
+                *p = p.clamp(-0.5, 0.5);
+            }
+            images.push(encode_image(&px));
+            labels.push(labels[src]);
+            continue;
+        }
+
+        let class = sample_class(&mut rng, spec.num_classes, spec.imbalance);
+        let k = rng.below(spec.clusters_per_class);
+        let template = &templates[class * spec.clusters_per_class + k];
+        let mut px = vec![0.0f32; IMG_DIM];
+        class_bias(class, spec.num_classes, spec.class_sep, &mut px);
+        for (p, t) in px.iter_mut().zip(template) {
+            *p += t + spec.noise * rng.normal_f32();
+            *p = p.clamp(-0.5, 0.5);
+        }
+        images.push(encode_image(&px));
+        labels.push(class as u8);
+    }
+
+    Generated { images, labels, n_init: spec.n_init, n_pool: spec.n_pool }
+}
+
+/// Generate and write into an object store under `bucket`, returning the
+/// manifest. Layout:
+///   {bucket}/{split}/img_{id:06}.bin   sample blobs
+///   {bucket}/labels.json               oracle-only ground truth
+///   {bucket}/manifest.json             the returned manifest
+/// `uri_scheme` ("mem" | "s3sim") prefixes the sample URIs.
+pub fn generate_into_store(
+    spec: &DatasetSpec,
+    store: &Arc<dyn ObjectStore>,
+    uri_scheme: &str,
+    bucket: &str,
+) -> Manifest {
+    let gen = generate(spec);
+    let splits = [
+        ("init", 0, gen.n_init),
+        ("pool", gen.n_init, gen.n_init + gen.n_pool),
+        ("test", gen.n_init + gen.n_pool, gen.images.len()),
+    ];
+
+    let mut refs: Vec<Vec<SampleRef>> = vec![vec![], vec![], vec![]];
+    for (si, (split, lo, hi)) in splits.iter().enumerate() {
+        for id in *lo..*hi {
+            let key = format!("{bucket}/{split}/img_{id:06}.bin");
+            store.put(&key, &gen.images[id]).expect("store put");
+            refs[si].push(SampleRef {
+                id: id as u32,
+                uri: format!("{uri_scheme}://{key}"),
+            });
+        }
+    }
+
+    // labels.json — oracle side-channel, not part of the manifest.
+    let mut lm = Map::new();
+    lm.insert(
+        "labels",
+        Value::Array(gen.labels.iter().map(|&l| Value::from(l as u64)).collect()),
+    );
+    store
+        .put(&format!("{bucket}/labels.json"), crate::json::to_string(&Value::Object(lm)).as_bytes())
+        .expect("store labels");
+
+    let manifest = Manifest {
+        name: spec.name.clone(),
+        num_classes: spec.num_classes,
+        img_dim: IMG_DIM,
+        init: refs.remove(0),
+        pool: refs.remove(0),
+        test: refs.remove(0),
+    };
+    store
+        .put(&format!("{bucket}/manifest.json"), manifest.to_json().as_bytes())
+        .expect("store manifest");
+    manifest
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::MemStore;
+
+    fn tiny_spec() -> DatasetSpec {
+        DatasetSpec::cifarsim(1).with_sizes(20, 50, 20)
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = generate(&tiny_spec());
+        let b = generate(&tiny_spec());
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn different_seed_different_data() {
+        let a = generate(&tiny_spec());
+        let mut spec = tiny_spec();
+        spec.seed = 2;
+        let b = generate(&spec);
+        assert_ne!(a.images, b.images);
+    }
+
+    #[test]
+    fn sizes_and_label_range() {
+        let g = generate(&tiny_spec());
+        assert_eq!(g.images.len(), 90);
+        assert_eq!(g.labels.len(), 90);
+        assert!(g.labels.iter().all(|&l| (l as usize) < 10));
+        assert!(g.images.iter().all(|img| img.len() == IMG_DIM));
+    }
+
+    #[test]
+    fn balanced_vs_imbalanced_class_histogram() {
+        let mut spec = DatasetSpec::cifarsim(3).with_sizes(0, 3000, 0);
+        spec.redundancy = 0.0;
+        let g = generate(&spec);
+        let mut hist = [0usize; 10];
+        for &l in &g.labels {
+            hist[l as usize] += 1;
+        }
+        let (min, max) = (hist.iter().min().unwrap(), hist.iter().max().unwrap());
+        assert!(*max < min * 2, "balanced spec too skewed: {hist:?}");
+
+        let mut spec = DatasetSpec::svhnsim(3).with_sizes(0, 3000, 0);
+        spec.redundancy = 0.0;
+        let g = generate(&spec);
+        let mut hist = [0usize; 10];
+        for &l in &g.labels {
+            hist[l as usize] += 1;
+        }
+        assert!(
+            hist[0] > hist[9] * 2,
+            "imbalanced spec not skewed enough: {hist:?}"
+        );
+    }
+
+    #[test]
+    fn redundancy_produces_near_duplicates() {
+        let mut spec = tiny_spec().with_sizes(0, 200, 0);
+        spec.redundancy = 0.5;
+        let g = generate(&spec);
+        // Count pool samples whose nearest neighbour is very close.
+        let mut dup = 0;
+        for i in 1..g.images.len() {
+            for j in 0..i {
+                let d: f64 = g.images[i]
+                    .iter()
+                    .zip(&g.images[j])
+                    .map(|(&a, &b)| {
+                        let x = a as f64 - b as f64;
+                        x * x
+                    })
+                    .sum::<f64>()
+                    / IMG_DIM as f64;
+                if d < 20.0 {
+                    dup += 1;
+                    break;
+                }
+            }
+        }
+        assert!(dup > 40, "expected many near-duplicates, got {dup}");
+    }
+
+    #[test]
+    fn store_layout_and_manifest() {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let m = generate_into_store(&tiny_spec(), &store, "mem", "ds1");
+        assert_eq!(m.init.len(), 20);
+        assert_eq!(m.pool.len(), 50);
+        assert_eq!(m.test.len(), 20);
+        assert!(store.exists("ds1/labels.json"));
+        assert!(store.exists("ds1/manifest.json"));
+        // every manifest uri resolves
+        for s in m.init.iter().chain(&m.pool).chain(&m.test) {
+            let uri = crate::uri::Uri::parse(&s.uri).unwrap();
+            let key = format!("{}/{}", uri.bucket, uri.key);
+            assert!(store.exists(&key), "missing {key}");
+        }
+        // manifest on disk parses back
+        let on_disk =
+            Manifest::from_json(std::str::from_utf8(&store.get("ds1/manifest.json").unwrap()).unwrap())
+                .unwrap();
+        assert_eq!(on_disk, m);
+    }
+}

@@ -1,0 +1,153 @@
+//! In-tree JSON (serde/serde_json are not in the offline registry).
+//!
+//! Used for: the RPC wire format (`server::rpc`), `artifacts/manifest.json`
+//! (written by python/compile/aot.py), dataset manifests, and metrics
+//! snapshots. Full RFC 8259 parser + serializer with the usual pragmatic
+//! choices: numbers are f64 (with an i64 fast path on access), object keys
+//! keep insertion order via a Vec-backed map.
+
+mod parse;
+mod ser;
+pub mod value;
+
+pub use parse::{parse, ParseError};
+pub use ser::{to_string, to_string_pretty};
+pub use value::{obj, Map, Value};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn arbitrary_value(rng: &mut Rng, depth: usize) -> Value {
+        let pick = if depth == 0 { rng.below(4) } else { rng.below(6) };
+        match pick {
+            0 => Value::Null,
+            1 => Value::Bool(rng.below(2) == 0),
+            2 => {
+                // Mix integers and floats; keep floats exactly representable
+                // through a parse round-trip by limiting magnitude.
+                if rng.below(2) == 0 {
+                    Value::from(rng.below(1_000_000) as i64 - 500_000)
+                } else {
+                    Value::from((rng.f64() - 0.5) * 1e6)
+                }
+            }
+            3 => {
+                let len = rng.below(12);
+                let s: String = (0..len)
+                    .map(|_| {
+                        // printable ascii + some escapes + some unicode
+                        match rng.below(10) {
+                            0 => '"',
+                            1 => '\\',
+                            2 => '\n',
+                            3 => '\u{1F600}',
+                            _ => (b' ' + rng.below(94) as u8) as char,
+                        }
+                    })
+                    .collect();
+                Value::from(s)
+            }
+            4 => {
+                let len = rng.below(5);
+                Value::Array((0..len).map(|_| arbitrary_value(rng, depth - 1)).collect())
+            }
+            _ => {
+                let len = rng.below(5);
+                let mut m = Map::new();
+                for i in 0..len {
+                    m.insert(format!("k{i}"), arbitrary_value(rng, depth - 1));
+                }
+                Value::Object(m)
+            }
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_parse_serialize() {
+        check("json-roundtrip", 200, |rng| {
+            let v = arbitrary_value(rng, 3);
+            let s = to_string(&v);
+            let back = parse(&s).map_err(|e| format!("parse failed on {s}: {e}"))?;
+            prop_assert!(back == v, "roundtrip mismatch:\n  in : {v:?}\n  out: {back:?}\n  str: {s}");
+            // pretty form parses to the same value too
+            let back2 = parse(&to_string_pretty(&v)).map_err(|e| e.to_string())?;
+            prop_assert!(back2 == v, "pretty roundtrip mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parses_canonical_document() {
+        let doc = r#"
+        {
+          "name": "IMG_CLASSIFICATION",
+          "version": 0.1,
+          "replicas": 3,
+          "auto": true,
+          "none": null,
+          "tags": ["al", "mlops"],
+          "nested": {"a": [1, 2.5, -3e2]}
+        }"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("name").and_then(Value::as_str), Some("IMG_CLASSIFICATION"));
+        assert_eq!(v.get("replicas").and_then(Value::as_i64), Some(3));
+        assert_eq!(v.get("auto").and_then(Value::as_bool), Some(true));
+        assert!(v.get("none").map(Value::is_null).unwrap_or(false));
+        let nested = v.get("nested").unwrap().get("a").unwrap().as_array().unwrap();
+        assert_eq!(nested[2].as_f64(), Some(-300.0));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "", "{", "[1,", "{\"a\":}", "{'a':1}", "{\"a\" 1}", "nul", "tru", "01",
+            "1.2.3", "\"unterminated", "{\"a\":1,}", "[1,2,]", "\u{0}",
+            "\"bad \\x escape\"", "{\"dup\":1 \"b\":2}",
+        ] {
+            assert!(parse(bad).is_err(), "should reject: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        assert!(parse("{} extra").is_err());
+        assert!(parse("1 2").is_err());
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let v = Value::from("line1\nline2\ttab \"quoted\" \\ slash \u{1F600} \u{7}");
+        let s = to_string(&v);
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn unicode_escape_surrogate_pairs() {
+        let v = parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(v.as_str(), Some("\u{1F600}"));
+        // lone surrogate is an error
+        assert!(parse("\"\\ud83d\"").is_err());
+    }
+
+    #[test]
+    fn deep_nesting_guard() {
+        let mut s = String::new();
+        for _ in 0..10_000 {
+            s.push('[');
+        }
+        assert!(parse(&s).is_err(), "must not blow the stack");
+    }
+
+    #[test]
+    fn number_access_paths() {
+        let v = parse("{\"i\": 42, \"f\": 2.5, \"neg\": -7}").unwrap();
+        assert_eq!(v.get("i").and_then(Value::as_i64), Some(42));
+        assert_eq!(v.get("i").and_then(Value::as_f64), Some(42.0));
+        assert_eq!(v.get("f").and_then(Value::as_i64), None);
+        assert_eq!(v.get("neg").and_then(Value::as_i64), Some(-7));
+    }
+}

@@ -1,0 +1,247 @@
+//! JSON value model: `Value` plus an insertion-ordered `Map`.
+
+/// Insertion-ordered string map (JSON object). Linear lookup is fine at the
+/// sizes we carry (RPC frames, manifests); ordering stability matters more
+/// (deterministic serialization for goldens and shas).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Map {
+    entries: Vec<(String, Value)>,
+}
+
+impl Map {
+    pub fn new() -> Self {
+        Map { entries: Vec::new() }
+    }
+
+    /// Insert or replace; replacement keeps the original position.
+    pub fn insert(&mut self, key: impl Into<String>, value: impl Into<Value>) {
+        let key = key.into();
+        let value = value.into();
+        if let Some(slot) = self.entries.iter_mut().find(|(k, _)| *k == key) {
+            slot.1 = value;
+        } else {
+            self.entries.push((key, value));
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    pub fn contains_key(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Value)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|(k, _)| k.as_str())
+    }
+}
+
+impl FromIterator<(String, Value)> for Map {
+    fn from_iter<I: IntoIterator<Item = (String, Value)>>(iter: I) -> Self {
+        let mut m = Map::new();
+        for (k, v) in iter {
+            m.insert(k, v);
+        }
+        m
+    }
+}
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    /// All JSON numbers; integers survive exactly up to 2^53.
+    Number(f64),
+    String(String),
+    Array(Vec<Value>),
+    Object(Map),
+}
+
+impl Value {
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Number(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Integer view: only when the number is a whole value in i64 range.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Number(n) if n.fract() == 0.0 && n.abs() <= 9e15 => Some(*n as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&Map> {
+        match self {
+            Value::Object(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Object field access; `None` for non-objects / missing keys.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_object().and_then(|m| m.get(key))
+    }
+
+    /// Array element access.
+    pub fn idx(&self, i: usize) -> Option<&Value> {
+        self.as_array().and_then(|a| a.get(i))
+    }
+
+    /// Dotted-path access: `v.path("active_learning.model.name")`.
+    pub fn path(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+impl From<f64> for Value {
+    fn from(n: f64) -> Self {
+        Value::Number(n)
+    }
+}
+impl From<i64> for Value {
+    fn from(n: i64) -> Self {
+        Value::Number(n as f64)
+    }
+}
+impl From<i32> for Value {
+    fn from(n: i32) -> Self {
+        Value::Number(n as f64)
+    }
+}
+impl From<usize> for Value {
+    fn from(n: usize) -> Self {
+        Value::Number(n as f64)
+    }
+}
+impl From<u64> for Value {
+    fn from(n: u64) -> Self {
+        Value::Number(n as f64)
+    }
+}
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::String(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::String(s)
+    }
+}
+impl From<Vec<Value>> for Value {
+    fn from(a: Vec<Value>) -> Self {
+        Value::Array(a)
+    }
+}
+impl From<Map> for Value {
+    fn from(m: Map) -> Self {
+        Value::Object(m)
+    }
+}
+impl<T: Into<Value> + Clone> From<&[T]> for Value {
+    fn from(xs: &[T]) -> Self {
+        Value::Array(xs.iter().cloned().map(Into::into).collect())
+    }
+}
+
+/// Convenience constructor for object literals:
+/// `obj([("a", Value::from(1)), ("b", Value::from("x"))])`.
+pub fn obj<const N: usize>(entries: [(&str, Value); N]) -> Value {
+    let mut m = Map::new();
+    for (k, v) in entries {
+        m.insert(k, v);
+    }
+    Value::Object(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_insert_replace_keeps_order() {
+        let mut m = Map::new();
+        m.insert("a", Value::from(1));
+        m.insert("b", Value::from(2));
+        m.insert("a", Value::from(3));
+        assert_eq!(m.keys().collect::<Vec<_>>(), vec!["a", "b"]);
+        assert_eq!(m.get("a").unwrap().as_i64(), Some(3));
+    }
+
+    #[test]
+    fn path_access() {
+        let v = obj([(
+            "active_learning",
+            obj([("model", obj([("name", Value::from("resnet18"))]))]),
+        )]);
+        assert_eq!(
+            v.path("active_learning.model.name").and_then(Value::as_str),
+            Some("resnet18")
+        );
+        assert!(v.path("active_learning.missing.name").is_none());
+    }
+
+    #[test]
+    fn integer_boundaries() {
+        assert_eq!(Value::from(42i64).as_i64(), Some(42));
+        assert_eq!(Value::Number(1.5).as_i64(), None);
+        assert_eq!(Value::Number(1e306).as_i64(), None);
+        assert_eq!(Value::from(7usize).as_usize(), Some(7));
+        assert_eq!(Value::from(-7i64).as_usize(), None);
+    }
+}

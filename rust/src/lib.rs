@@ -1,0 +1,31 @@
+//! # ALaaS — Active-Learning-as-a-Service
+//!
+//! Rust + JAX + Pallas reproduction of *"Active-Learning-as-a-Service: An
+//! Automatic and Efficient MLOps System for Data-Centric AI"* (2022).
+//!
+//! Three-layer architecture (DESIGN.md):
+//! * **L3 (this crate)** — the coordinator: AL server/client, stage-level
+//!   pipeline, dynamic batching, data cache, strategy zoo, PSHEA agent.
+//! * **L2/L1 (python/compile, build-time only)** — JAX model + Pallas
+//!   kernels, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **runtime** — loads the artifacts through the `xla` crate's PJRT CPU
+//!   client; Python never runs on the request path.
+
+pub mod agent;
+pub mod baselines;
+pub mod cache;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod json;
+pub mod store;
+pub mod metrics;
+pub mod pipeline;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod strategies;
+pub mod trainer;
+pub mod uri;
+pub mod util;
+pub mod yamlmini;

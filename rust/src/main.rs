@@ -1,0 +1,277 @@
+//! `alaas` — the ALaaS command-line launcher.
+//!
+//! Subcommands:
+//!   serve      start an AL server from a YAML config (Fig 2)
+//!   gen-data   synthesize a dataset into the simulated object store dir
+//!   query      client: push a generated dataset + query a selection
+//!   agent      run the PSHEA auto-selection agent on a dataset
+//!   strategies list the strategy zoo
+//!   help       this text
+//!
+//! Examples:
+//!   alaas serve --config examples/example.yml
+//!   alaas gen-data --dataset cifarsim --out /tmp/alaas-data --pool 4000
+//!   alaas agent --dataset cifarsim --target 0.8 --max-budget 2000
+//!
+//! The binary is self-contained after `make artifacts` (Python never runs
+//! at serve time); without artifacts it falls back to the host backend
+//! (`--backend host`) so every command still works.
+
+use std::sync::Arc;
+
+use alaas::agent::{run_pshea, PsheaConfig};
+use alaas::cache::DataCache;
+use alaas::cli::{Args, Schema};
+use alaas::config::AlaasConfig;
+use alaas::data::DatasetSpec;
+use alaas::metrics::Registry;
+use alaas::runtime::backend::ComputeBackend;
+use alaas::runtime::{ArtifactIndex, HostBackend, PjrtBackend, PjrtPool};
+use alaas::server::{AlClient, AlServer, ServerDeps};
+use alaas::sim::AlExperiment;
+use alaas::store::{ObjectStore, StoreRouter};
+use alaas::trainer::TrainConfig;
+
+const SCHEMA: Schema = Schema {
+    value_flags: &[
+        "config", "dataset", "out", "seed", "pool", "init", "test", "budget",
+        "strategy", "target", "max-budget", "round-budget", "addr", "session",
+        "backend", "replicas", "rounds",
+    ],
+    bool_flags: &["verbose", "quiet"],
+};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv, &SCHEMA) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if args.has("verbose") {
+        alaas::util::logger::set_level(alaas::util::logger::Level::Debug);
+    }
+    let result = match args.subcommand.as_str() {
+        "serve" => cmd_serve(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "query" => cmd_query(&args),
+        "agent" => cmd_agent(&args),
+        "strategies" => {
+            for s in alaas::strategies::zoo_names() {
+                println!("{s}");
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown subcommand '{other}'\n{}", usage())),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: alaas <serve|gen-data|query|agent|strategies|help> [flags]\n\
+     serve      --config <yml>\n\
+     gen-data   --dataset <cifarsim|svhnsim> --out <dir> [--init N --pool N --test N --seed N]\n\
+     query      --addr <host:port> --dataset <name> [--budget N --strategy S --seed N]\n\
+     agent      --dataset <name> [--target A --max-budget N --round-budget N --backend host|pjrt --rounds N]\n\
+     strategies"
+}
+
+/// Build the configured compute backend; `pjrt` requires `make artifacts`.
+fn make_backend(kind: &str, replicas: usize) -> anyhow::Result<Arc<dyn ComputeBackend>> {
+    match kind {
+        "host" => Ok(Arc::new(HostBackend::new())),
+        "pjrt" => {
+            let dir = alaas::runtime::find_artifacts_dir(None)
+                .ok_or_else(|| anyhow::anyhow!("artifacts not found; run `make artifacts`"))?;
+            let index = Arc::new(ArtifactIndex::load(&dir)?);
+            let pool = Arc::new(PjrtPool::new(index, replicas, 64));
+            Ok(Arc::new(PjrtBackend::new(pool)))
+        }
+        other => Err(anyhow::anyhow!("unknown backend '{other}' (host|pjrt)")),
+    }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => AlaasConfig::from_yaml_file(path)?,
+        None => AlaasConfig::default(),
+    };
+    let backend = make_backend(args.get_or("backend", "pjrt"), cfg.al_worker.replicas)
+        .or_else(|e| {
+            eprintln!("pjrt backend unavailable ({e}); falling back to host backend");
+            make_backend("host", cfg.al_worker.replicas)
+        })?;
+    let deps = ServerDeps {
+        store: Arc::new(StoreRouter::new("/", &cfg.store)),
+        cache: Arc::new(DataCache::from_config(&cfg.cache)),
+        backend,
+        metrics: Registry::new(),
+    };
+    let server = AlServer::start(cfg, deps)?;
+    println!("alaas server listening on {}", server.addr());
+    println!("press ctrl-c to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_or("dataset", "cifarsim");
+    let seed = args.get_usize("seed", 42)? as u64;
+    let base = match name {
+        "cifarsim" => DatasetSpec::cifarsim(seed),
+        "svhnsim" => DatasetSpec::svhnsim(seed),
+        other => return Err(anyhow::anyhow!("unknown dataset '{other}'")),
+    };
+    let (di, dp, dt) = (base.n_init, base.n_pool, base.n_test);
+    let spec = base.with_sizes(
+        args.get_usize("init", di)?,
+        args.get_usize("pool", dp)?,
+        args.get_usize("test", dt)?,
+    );
+    let out = args.get("out").ok_or_else(|| anyhow::anyhow!("--out <dir> required"))?;
+    let store: Arc<dyn ObjectStore> = Arc::new(alaas::store::LocalFsStore::new(out)?);
+    let manifest = alaas::data::generate_into_store(&spec, &store, "file", name);
+    println!(
+        "generated {}: init={} pool={} test={} -> {out}/{name}",
+        spec.name,
+        manifest.init.len(),
+        manifest.pool.len(),
+        manifest.test.len()
+    );
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> anyhow::Result<()> {
+    let addr = args.get("addr").ok_or_else(|| anyhow::anyhow!("--addr required"))?;
+    let name = args.get_or("dataset", "cifarsim");
+    let seed = args.get_usize("seed", 42)? as u64;
+    let budget = args.get_usize("budget", 100)?;
+    let strategy = args.get("strategy");
+
+    // Dataset is written under a temp dir as file:// URIs so both client
+    // and server processes can read it.
+    let dir = std::env::temp_dir().join(format!("alaas-query-{seed}"));
+    let store: Arc<dyn ObjectStore> = Arc::new(alaas::store::LocalFsStore::new(&dir)?);
+    let spec = match name {
+        "cifarsim" => DatasetSpec::cifarsim(seed),
+        "svhnsim" => DatasetSpec::svhnsim(seed),
+        other => return Err(anyhow::anyhow!("unknown dataset '{other}'")),
+    }
+    .with_sizes(
+        args.get_usize("init", 200)?,
+        args.get_usize("pool", 1000)?,
+        args.get_usize("test", 0)?,
+    );
+    let mut manifest = alaas::data::generate_into_store(&spec, &store, "file", name);
+    // rewrite URIs to absolute file paths
+    let rewrite = |refs: &mut Vec<alaas::store::SampleRef>| {
+        for r in refs.iter_mut() {
+            let rel = r.uri.trim_start_matches("file://");
+            r.uri = format!("file://{}/{}", dir.display(), rel);
+        }
+    };
+    rewrite(&mut manifest.init);
+    rewrite(&mut manifest.pool);
+    rewrite(&mut manifest.test);
+
+    let oracle = alaas::data::Oracle::load(&store, name)?;
+    let init_ids: Vec<u32> = manifest.init.iter().map(|s| s.id).collect();
+    let init_labels = oracle.label(&init_ids);
+
+    let mut client = AlClient::connect(addr)?;
+    client.ping()?;
+    let session = args.get_or("session", "cli");
+    client.push_data(session, &manifest, Some(&init_labels))?;
+    let t0 = std::time::Instant::now();
+    let (selected, strat, select_ms) = client.query(session, budget, strategy)?;
+    println!(
+        "selected {} samples with {strat} in {:.1}ms (select phase {select_ms:.1}ms)",
+        selected.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    for s in selected.iter().take(10) {
+        println!("  id={} {}", s.id, s.uri);
+    }
+    if selected.len() > 10 {
+        println!("  ... {} more", selected.len() - 10);
+    }
+    Ok(())
+}
+
+fn cmd_agent(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_or("dataset", "cifarsim");
+    let seed = args.get_usize("seed", 42)? as u64;
+    let spec = match name {
+        "cifarsim" => DatasetSpec::cifarsim(seed),
+        "svhnsim" => DatasetSpec::svhnsim(seed),
+        other => return Err(anyhow::anyhow!("unknown dataset '{other}'")),
+    }
+    .with_sizes(
+        args.get_usize("init", 300)?,
+        args.get_usize("pool", 2000)?,
+        args.get_usize("test", 500)?,
+    );
+    let backend = make_backend(args.get_or("backend", "pjrt"), args.get_usize("replicas", 2)?)
+        .or_else(|e| {
+            eprintln!("pjrt backend unavailable ({e}); falling back to host backend");
+            make_backend("host", 2)
+        })?;
+
+    println!("generating {name} (seed {seed})...");
+    let gen = alaas::data::generate(&spec);
+    println!("embedding {} samples through {}...", gen.images.len(), backend.name());
+    let mut exp = AlExperiment::from_generated(
+        backend,
+        &gen,
+        spec.num_classes,
+        TrainConfig::default(),
+        seed,
+    )?;
+
+    let cfg = PsheaConfig {
+        target_accuracy: args.get_f64("target", 0.95)?,
+        max_budget: args.get_usize("max-budget", 10_000)?,
+        round_budget: args.get_usize("round-budget", 200)?,
+        max_rounds: args.get_usize("rounds", 8)?,
+        ..Default::default()
+    };
+    let strategies: Vec<String> =
+        alaas::strategies::candidate_names().into_iter().map(str::to_string).collect();
+    println!(
+        "PSHEA: {} candidates, target {:.2}, round budget {}, max budget {}",
+        strategies.len(),
+        cfg.target_accuracy,
+        cfg.round_budget,
+        cfg.max_budget
+    );
+    let trace = run_pshea(&mut exp, &strategies, &cfg)?;
+    for r in 0..trace.rounds {
+        println!("round {r}:");
+        for rec in trace.round(r) {
+            println!(
+                "  {:18} acc {:.4} pred-next {} {}",
+                rec.strategy,
+                rec.accuracy,
+                rec.predicted_next.map(|p| format!("{p:.4}")).unwrap_or_else(|| "-".into()),
+                if rec.eliminated { "ELIMINATED" } else { "" }
+            );
+        }
+    }
+    println!(
+        "stop: {:?} after {} rounds, budget {} labels, best accuracy {:.4}",
+        trace.stop, trace.rounds, trace.total_budget, trace.best_accuracy
+    );
+    println!("recommended strategy: {}", trace.recommendation().unwrap_or("(none)"));
+    Ok(())
+}

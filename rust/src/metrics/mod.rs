@@ -1,0 +1,356 @@
+//! Metrics substrate: counters, log-bucketed latency histograms, throughput
+//! meters, and a JSON snapshot the server exposes over RPC.
+//!
+//! The paper's efficiency claims (Table 2, Fig 4b/4c) are latency and
+//! throughput numbers; every pipeline stage and the end-to-end path record
+//! into one shared `Registry` so the bench harness and the `metrics` RPC
+//! read the same source of truth.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::json::{Map, Value};
+
+/// Log-bucketed latency histogram: 4 linear sub-buckets per power of two,
+/// nanosecond resolution, fixed footprint (256 buckets covers ns..>1h).
+/// Records are lock-free (atomic adds).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+const SUB_BITS: u32 = 2; // 4 sub-buckets per octave
+const NUM_BUCKETS: usize = 256;
+
+fn bucket_index(ns: u64) -> usize {
+    if ns == 0 {
+        return 0;
+    }
+    let msb = 63 - ns.leading_zeros();
+    let idx = if msb <= SUB_BITS {
+        ns as usize
+    } else {
+        let sub = ((ns >> (msb - SUB_BITS)) & ((1 << SUB_BITS) - 1)) as usize;
+        (((msb - SUB_BITS) as usize) << SUB_BITS | sub) + (1 << SUB_BITS)
+    };
+    idx.min(NUM_BUCKETS - 1)
+}
+
+/// Representative (upper-bound) value of a bucket, used for percentiles.
+fn bucket_value(idx: usize) -> u64 {
+    if idx < (1 << SUB_BITS) {
+        return idx as u64;
+    }
+    let idx = idx - (1 << SUB_BITS);
+    let msb = (idx >> SUB_BITS) as u32 + SUB_BITS;
+    let sub = (idx & ((1 << SUB_BITS) - 1)) as u128;
+    let v = (1u128 << msb) + ((sub + 1) << (msb - SUB_BITS)) - 1;
+    v.min(u64::MAX as u128) as u64
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns.load(Ordering::Relaxed))
+    }
+
+    /// Approximate percentile (upper bucket bound), p in [0, 1].
+    pub fn percentile(&self, p: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((total as f64) * p).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_nanos(bucket_value(i));
+            }
+        }
+        self.max()
+    }
+
+    fn snapshot(&self) -> Value {
+        let mut m = Map::new();
+        m.insert("count", Value::from(self.count()));
+        m.insert("mean_us", Value::Number(self.mean().as_secs_f64() * 1e6));
+        m.insert("p50_us", Value::Number(self.percentile(0.50).as_secs_f64() * 1e6));
+        m.insert("p95_us", Value::Number(self.percentile(0.95).as_secs_f64() * 1e6));
+        m.insert("p99_us", Value::Number(self.percentile(0.99).as_secs_f64() * 1e6));
+        m.insert("max_us", Value::Number(self.max().as_secs_f64() * 1e6));
+        Value::Object(m)
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Items/sec over the meter's lifetime.
+pub struct Meter {
+    count: AtomicU64,
+    started: Instant,
+}
+
+impl Meter {
+    pub fn new() -> Self {
+        Meter { count: AtomicU64::new(0), started: Instant::now() }
+    }
+
+    pub fn add(&self, n: u64) {
+        self.count.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn rate_per_sec(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.count() as f64 / secs
+    }
+}
+
+impl Default for Meter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Named metrics registry shared across the server.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    meters: Mutex<BTreeMap<String, Arc<Meter>>>,
+}
+
+impl Registry {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Registry::default())
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(AtomicU64::new(0)))
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    pub fn meter(&self, name: &str) -> Arc<Meter> {
+        self.meters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Meter::new()))
+            .clone()
+    }
+
+    /// Record a duration under `name` (creates the histogram on first use).
+    pub fn time(&self, name: &str, d: Duration) {
+        self.histogram(name).record(d);
+    }
+
+    /// Full JSON snapshot (served by the `metrics` RPC).
+    pub fn snapshot(&self) -> Value {
+        let mut root = Map::new();
+        let mut counters = Map::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            counters.insert(k.clone(), Value::from(v.load(Ordering::Relaxed)));
+        }
+        root.insert("counters", Value::Object(counters));
+        let mut hists = Map::new();
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            hists.insert(k.clone(), h.snapshot());
+        }
+        root.insert("histograms", Value::Object(hists));
+        let mut meters = Map::new();
+        for (k, m) in self.meters.lock().unwrap().iter() {
+            let mut mm = Map::new();
+            mm.insert("count", Value::from(m.count()));
+            mm.insert("rate_per_sec", Value::Number(m.rate_per_sec()));
+            meters.insert(k.clone(), Value::Object(mm));
+        }
+        root.insert("meters", Value::Object(meters));
+        Value::Object(root)
+    }
+}
+
+/// RAII timer recording into a histogram on drop.
+pub struct Timed {
+    hist: Arc<Histogram>,
+    start: Instant,
+}
+
+impl Timed {
+    pub fn new(hist: Arc<Histogram>) -> Self {
+        Timed { hist, start: Instant::now() }
+    }
+}
+
+impl Drop for Timed {
+    fn drop(&mut self) {
+        self.hist.record(self.start.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_monotonic_and_bounded() {
+        let mut prev = 0;
+        for ns in [0u64, 1, 2, 3, 4, 7, 8, 100, 1000, 1_000_000, u64::MAX / 2] {
+            let b = bucket_index(ns);
+            assert!(b >= prev || ns < 4, "bucket not monotonic at {ns}");
+            assert!(b < NUM_BUCKETS);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn bucket_value_bounds_its_range() {
+        // Every recorded ns must be <= the representative value of its
+        // bucket (so percentiles are conservative upper bounds).
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..1000 {
+            let ns = rng.next_u64() >> (rng.below(40) as u32);
+            let idx = bucket_index(ns);
+            if idx < NUM_BUCKETS - 1 {
+                assert!(
+                    bucket_value(idx) >= ns,
+                    "bucket_value({idx})={} < ns={ns}",
+                    bucket_value(idx)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let h = Histogram::new();
+        for ms in [1u64, 2, 3, 4, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean() >= Duration::from_millis(20));
+        assert!(h.percentile(0.5) >= Duration::from_millis(2));
+        assert!(h.percentile(0.5) <= Duration::from_millis(5));
+        assert!(h.percentile(1.0) >= Duration::from_millis(100));
+        // approximate: within a bucket width
+        assert!(h.percentile(1.0) <= Duration::from_millis(130));
+    }
+
+    #[test]
+    fn percentile_accuracy_within_bucket_width() {
+        let h = Histogram::new();
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut all: Vec<u64> = vec![];
+        for _ in 0..10_000 {
+            let us = 50 + rng.below(10_000) as u64;
+            all.push(us * 1000);
+            h.record(Duration::from_micros(us));
+        }
+        all.sort_unstable();
+        let exact = all[(all.len() as f64 * 0.95) as usize] as f64;
+        let approx = h.percentile(0.95).as_nanos() as f64;
+        // log-bucket relative error is bounded by 1/2^SUB_BITS = 25%
+        assert!((approx - exact).abs() / exact < 0.25, "approx={approx} exact={exact}");
+    }
+
+    #[test]
+    fn registry_snapshot_shape() {
+        let r = Registry::new();
+        r.counter("cache.hits").fetch_add(3, Ordering::Relaxed);
+        r.time("stage.fetch", Duration::from_micros(120));
+        r.meter("e2e.images").add(42);
+        let snap = r.snapshot();
+        assert_eq!(snap.path("counters.cache\u{2e}hits").is_some(), false); // dots are literal keys
+        assert_eq!(
+            snap.get("counters").unwrap().get("cache.hits").unwrap().as_i64(),
+            Some(3)
+        );
+        assert!(snap.get("histograms").unwrap().get("stage.fetch").unwrap().get("p50_us").is_some());
+        assert_eq!(
+            snap.get("meters").unwrap().get("e2e.images").unwrap().get("count").unwrap().as_i64(),
+            Some(42)
+        );
+    }
+
+    #[test]
+    fn timed_records_on_drop() {
+        let r = Registry::new();
+        {
+            let _t = Timed::new(r.histogram("x"));
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(r.histogram("x").count(), 1);
+        assert!(r.histogram("x").mean() >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = Arc::new(Histogram::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..1000 {
+                        h.record(Duration::from_nanos(i));
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 8000);
+    }
+}

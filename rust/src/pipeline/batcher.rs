@@ -1,0 +1,187 @@
+//! Dynamic batcher: aggregate a stream of single samples into inference
+//! batches (paper §3.3 "batching"; the serving-systems lineage is Clipper
+//! [Crankshaw '17]).
+//!
+//! Policy: dispatch when `max_batch` samples are waiting, or when the
+//! oldest waiting sample has waited `max_wait` (so a trickle of samples
+//! still makes progress). A full batch is always preferred — the batcher
+//! only sleeps when the queue is drained.
+
+use std::time::{Duration, Instant};
+
+use crate::util::chan::{Receiver, Sender};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(20) }
+    }
+}
+
+/// Pump items from `rx` into batches on `tx` until `rx` closes. Preserves
+/// arrival order within and across batches. Returns the number of batches
+/// emitted.
+pub fn run_batcher<T: Send>(
+    rx: &Receiver<T>,
+    tx: &Sender<Vec<T>>,
+    policy: BatchPolicy,
+) -> usize {
+    assert!(policy.max_batch >= 1);
+    let mut emitted = 0usize;
+    let mut pending: Vec<T> = Vec::with_capacity(policy.max_batch);
+    let mut oldest: Option<Instant> = None;
+    loop {
+        // how long may we still wait for the current partial batch?
+        let wait_left = match oldest {
+            Some(t0) => policy.max_wait.saturating_sub(t0.elapsed()),
+            None => Duration::from_secs(3600), // nothing pending: wait long
+        };
+        let item = if pending.len() >= policy.max_batch {
+            None // dispatch immediately, don't consume more
+        } else {
+            match rx.recv_timeout(wait_left) {
+                Ok(Some(v)) => Some(v),
+                Ok(None) => {
+                    // input closed: flush and stop
+                    if !pending.is_empty() {
+                        let _ = tx.send(std::mem::take(&mut pending));
+                        emitted += 1;
+                    }
+                    return emitted;
+                }
+                Err(()) => None, // timed out with a partial batch
+            }
+        };
+        match item {
+            Some(v) => {
+                if pending.is_empty() {
+                    oldest = Some(Instant::now());
+                }
+                pending.push(v);
+                if pending.len() >= policy.max_batch {
+                    if tx.send(std::mem::replace(
+                        &mut pending,
+                        Vec::with_capacity(policy.max_batch),
+                    ))
+                    .is_err()
+                    {
+                        return emitted;
+                    }
+                    emitted += 1;
+                    oldest = None;
+                }
+            }
+            None => {
+                // timeout (or full): flush partial batch
+                if !pending.is_empty() {
+                    if tx
+                        .send(std::mem::replace(
+                            &mut pending,
+                            Vec::with_capacity(policy.max_batch),
+                        ))
+                        .is_err()
+                    {
+                        return emitted;
+                    }
+                    emitted += 1;
+                    oldest = None;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::chan::bounded;
+
+    #[test]
+    fn full_batches_dispatch_eagerly() {
+        let (tx_in, rx_in) = bounded(64);
+        let (tx_out, rx_out) = bounded(64);
+        for i in 0..10 {
+            tx_in.send(i).unwrap();
+        }
+        drop(tx_in);
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) };
+        let n = run_batcher(&rx_in, &tx_out, policy);
+        assert_eq!(n, 3);
+        assert_eq!(rx_out.recv().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(rx_out.recv().unwrap(), vec![4, 5, 6, 7]);
+        assert_eq!(rx_out.recv().unwrap(), vec![8, 9]); // closing flush
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        let (tx_in, rx_in) = bounded(8);
+        let (tx_out, rx_out) = bounded::<Vec<i32>>(8);
+        let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(30) };
+        let h = std::thread::spawn(move || run_batcher(&rx_in, &tx_out, policy));
+        tx_in.send(1).unwrap();
+        tx_in.send(2).unwrap();
+        // don't close; the batcher must flush on timeout
+        let batch = rx_out.recv().expect("timed-out flush");
+        assert_eq!(batch, vec![1, 2]);
+        drop(tx_in);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn prop_batches_partition_the_stream() {
+        crate::util::prop::check("batcher-partition", 30, |rng| {
+            let n = rng.below(500);
+            let max_batch = 1 + rng.below(33);
+            let (tx_in, rx_in) = bounded(64);
+            let (tx_out, rx_out) = bounded(1024);
+            let items: Vec<u64> = (0..n as u64).collect();
+            let feeder = {
+                let items = items.clone();
+                std::thread::spawn(move || {
+                    for i in items {
+                        tx_in.send(i).unwrap();
+                    }
+                })
+            };
+            let policy = BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(1),
+            };
+            let emitted = run_batcher(&rx_in, &tx_out, policy);
+            feeder.join().unwrap();
+            drop(tx_out);
+            let mut got = Vec::new();
+            let mut batches = 0;
+            while let Some(b) = rx_out.recv() {
+                prop_assert!(!b.is_empty(), "empty batch emitted");
+                prop_assert!(b.len() <= max_batch, "batch over max: {}", b.len());
+                got.extend(b);
+                batches += 1;
+            }
+            prop_assert!(batches == emitted, "emitted count mismatch");
+            prop_assert!(got == items, "stream not preserved in order");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn receiver_drop_stops_batcher() {
+        let (tx_in, rx_in) = bounded(8);
+        let (tx_out, rx_out) = bounded::<Vec<i32>>(1);
+        drop(rx_out);
+        for i in 0..8 {
+            tx_in.send(i).unwrap();
+        }
+        drop(tx_in);
+        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) };
+        // must return (not hang/panic) even though the output is gone
+        let _ = run_batcher(&rx_in, &tx_out, policy);
+    }
+}

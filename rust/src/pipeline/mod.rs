@@ -1,0 +1,43 @@
+//! The processing pipeline (paper §3.3, Figure 3) — ALaaS's efficiency
+//! contribution.
+//!
+//! Three stages: **fetch** (download from the object store, through the
+//! data cache), **preprocess** (decode + normalize), **infer** (embedding
+//! + uncertainty scores through the compute backend, dynamically batched).
+//!
+//! Three dataflows, matching Figure 3 exactly:
+//! * [`DataflowMode::SerialOneShot`] (3a) — every stage runs to completion
+//!   over the whole pool before the next starts (DeepAL/ModAL-style).
+//! * [`DataflowMode::SerialPerRound`] (3b) — the pool is split into rounds
+//!   processed serially (libact/ALiPy-style).
+//! * [`DataflowMode::Pipelined`] (3c) — ALaaS: all stages run
+//!   concurrently, connected by bounded queues; a sample can be inferred
+//!   while later samples are still downloading. The bounded queues are the
+//!   backpressure (a fast fetcher cannot flood memory).
+
+mod batcher;
+mod run;
+
+pub use batcher::{run_batcher, BatchPolicy};
+pub use run::{run_pipeline, PipelineError, PipelineOutput, PipelineParams};
+
+/// Figure 3's three dataflows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataflowMode {
+    /// (a) stage-serial over the whole dataset.
+    SerialOneShot,
+    /// (b) stage-serial within each of `n` rounds.
+    SerialPerRound(usize),
+    /// (c) stage-level parallelism (ALaaS).
+    Pipelined,
+}
+
+impl DataflowMode {
+    pub fn label(&self) -> String {
+        match self {
+            DataflowMode::SerialOneShot => "serial-oneshot".into(),
+            DataflowMode::SerialPerRound(n) => format!("serial-{n}rounds"),
+            DataflowMode::Pipelined => "pipelined".into(),
+        }
+    }
+}

@@ -1,0 +1,514 @@
+//! Pipeline engine: executes a dataset scan under any of the Figure 3
+//! dataflows and returns per-sample embeddings + uncertainty scores.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::batcher::{run_batcher, BatchPolicy};
+use super::DataflowMode;
+use crate::cache::DataCache;
+use crate::data::decode_image;
+use crate::metrics::Registry;
+use crate::runtime::backend::{ComputeBackend, NUM_SCORES};
+use crate::store::{SampleRef, StoreRouter};
+use crate::trainer::LinearHead;
+use crate::uri::Uri;
+use crate::util::chan::bounded;
+use crate::util::mat::Mat;
+
+/// Pipeline run parameters (per-stage parallelism + batching policy).
+#[derive(Debug, Clone)]
+pub struct PipelineParams {
+    pub mode: DataflowMode,
+    pub fetch_threads: usize,
+    pub preprocess_threads: usize,
+    /// Concurrent inference dispatchers (>= PJRT replicas to keep every
+    /// worker busy).
+    pub infer_threads: usize,
+    /// Bounded queue capacity between stages (backpressure).
+    pub queue_depth: usize,
+    pub batch: BatchPolicy,
+    /// Injected per-item preprocess overhead — used by the Table 2
+    /// baseline tool profiles (pure-Python per-sample dispatch cost).
+    pub per_item_overhead: Duration,
+    /// Injected per-round overhead (model reload in per-round tools).
+    pub per_round_overhead: Duration,
+}
+
+impl Default for PipelineParams {
+    fn default() -> Self {
+        PipelineParams {
+            mode: DataflowMode::Pipelined,
+            fetch_threads: 4,
+            preprocess_threads: 2,
+            infer_threads: 2,
+            queue_depth: 256,
+            batch: BatchPolicy::default(),
+            per_item_overhead: Duration::ZERO,
+            per_round_overhead: Duration::ZERO,
+        }
+    }
+}
+
+/// What a scan produces: one row per input sample, input order.
+#[derive(Debug)]
+pub struct PipelineOutput {
+    pub embeddings: Mat,
+    pub scores: Mat,
+    /// (input index, error) for samples that failed any stage; their rows
+    /// are zero. The AL layer excludes them from selection.
+    pub errors: Vec<(usize, String)>,
+    pub elapsed: Duration,
+    /// Successfully processed sample count.
+    pub processed: usize,
+}
+
+/// Fatal pipeline failure (per-sample failures land in `errors` instead).
+#[derive(Debug, thiserror::Error)]
+pub enum PipelineError {
+    #[error("runtime: {0}")]
+    Runtime(#[from] crate::runtime::backend::RuntimeError),
+    #[error("pipeline internal: {0}")]
+    Internal(String),
+}
+
+/// A sample moving between stages.
+struct Ready {
+    idx: usize,
+    tensor: Arc<Vec<f32>>,
+}
+
+/// Run a scan over `samples`. See module docs for the modes.
+#[allow(clippy::too_many_arguments)]
+pub fn run_pipeline(
+    samples: &[SampleRef],
+    store: &StoreRouter,
+    cache: &DataCache,
+    backend: &Arc<dyn ComputeBackend>,
+    head: &LinearHead,
+    params: &PipelineParams,
+    metrics: Option<&Arc<Registry>>,
+) -> Result<PipelineOutput, PipelineError> {
+    let t0 = Instant::now();
+    let d = {
+        // probe embedding width with a zero image once (cheap on host; one
+        // padded batch on pjrt) — avoids hardcoding D here.
+        let probe = Mat::zeros(1, crate::data::IMG_DIM);
+        backend.embed(&probe)?.cols()
+    };
+    let n = samples.len();
+    let out = Mutex::new((Mat::zeros(n, d), Mat::zeros(n, NUM_SCORES)));
+    let errors = Mutex::new(Vec::new());
+    let processed = std::sync::atomic::AtomicUsize::new(0);
+
+    match params.mode {
+        DataflowMode::Pipelined => run_pipelined(
+            samples, store, cache, backend, head, params, metrics, &out, &errors, &processed,
+        )?,
+        DataflowMode::SerialOneShot => run_serial(
+            samples, store, cache, backend, head, params, metrics, &out, &errors, &processed,
+        )?,
+        DataflowMode::SerialPerRound(rounds) => {
+            let rounds = rounds.max(1);
+            let chunk = n.div_ceil(rounds);
+            for (r, part) in samples.chunks(chunk.max(1)).enumerate() {
+                if !params.per_round_overhead.is_zero() {
+                    std::thread::sleep(params.per_round_overhead);
+                }
+                let base = r * chunk;
+                run_serial_offset(
+                    part, base, store, cache, backend, head, params, metrics, &out, &errors,
+                    &processed,
+                )?;
+            }
+        }
+    }
+
+    let (embeddings, scores) = out.into_inner().unwrap();
+    let mut errs = errors.into_inner().unwrap();
+    errs.sort_by_key(|(i, _)| *i);
+    let elapsed = t0.elapsed();
+    if let Some(m) = metrics {
+        m.meter("pipeline.samples").add(n as u64);
+        m.time("pipeline.scan", elapsed);
+    }
+    Ok(PipelineOutput {
+        embeddings,
+        scores,
+        errors: errs,
+        elapsed,
+        processed: processed.load(std::sync::atomic::Ordering::Relaxed),
+    })
+}
+
+/// Fetch one sample through the cache; returns the preprocessed tensor.
+fn fetch_and_preprocess(
+    s: &SampleRef,
+    store: &StoreRouter,
+    cache: &DataCache,
+    overhead: Duration,
+    metrics: Option<&Arc<Registry>>,
+) -> Result<Arc<Vec<f32>>, String> {
+    if let Some(t) = cache.get(&s.uri) {
+        if let Some(m) = metrics {
+            m.counter("cache.hits").fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        return Ok(t);
+    }
+    if let Some(m) = metrics {
+        m.counter("cache.misses").fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+    let uri = Uri::parse(&s.uri).map_err(|e| e.to_string())?;
+    let t_fetch = Instant::now();
+    let raw = store.get(&uri).map_err(|e| e.to_string())?;
+    if let Some(m) = metrics {
+        m.time("stage.fetch", t_fetch.elapsed());
+    }
+    let t_pre = Instant::now();
+    if !overhead.is_zero() {
+        std::thread::sleep(overhead);
+    }
+    let px = decode_image(&raw).map_err(|e| e.to_string())?;
+    let tensor = Arc::new(px);
+    cache.put(&s.uri, tensor.clone());
+    if let Some(m) = metrics {
+        m.time("stage.preprocess", t_pre.elapsed());
+    }
+    Ok(tensor)
+}
+
+/// Infer one assembled batch and scatter rows into the output.
+#[allow(clippy::too_many_arguments)]
+fn infer_batch(
+    batch: &[Ready],
+    backend: &Arc<dyn ComputeBackend>,
+    head: &LinearHead,
+    out: &Mutex<(Mat, Mat)>,
+    errors: &Mutex<Vec<(usize, String)>>,
+    processed: &std::sync::atomic::AtomicUsize,
+    metrics: Option<&Arc<Registry>>,
+) {
+    let t0 = Instant::now();
+    let img_dim = batch[0].tensor.len();
+    let mut flat = Vec::with_capacity(batch.len() * img_dim);
+    for r in batch {
+        flat.extend_from_slice(&r.tensor);
+    }
+    let m = Mat::from_vec(flat, batch.len(), img_dim);
+    match backend.forward(&m, &head.w, &head.b) {
+        Ok((emb, sc)) => {
+            let mut g = out.lock().unwrap();
+            for (row, r) in batch.iter().enumerate() {
+                g.0.row_mut(r.idx).copy_from_slice(emb.row(row));
+                g.1.row_mut(r.idx).copy_from_slice(sc.row(row));
+            }
+            processed.fetch_add(batch.len(), std::sync::atomic::Ordering::Relaxed);
+        }
+        Err(e) => {
+            let mut g = errors.lock().unwrap();
+            for r in batch {
+                g.push((r.idx, format!("infer: {e}")));
+            }
+        }
+    }
+    if let Some(mreg) = metrics {
+        mreg.time("stage.infer", t0.elapsed());
+        mreg.meter("infer.images").add(batch.len() as u64);
+    }
+}
+
+/// Figure 3c: all stages concurrent, bounded queues in between.
+#[allow(clippy::too_many_arguments)]
+fn run_pipelined(
+    samples: &[SampleRef],
+    store: &StoreRouter,
+    cache: &DataCache,
+    backend: &Arc<dyn ComputeBackend>,
+    head: &LinearHead,
+    params: &PipelineParams,
+    metrics: Option<&Arc<Registry>>,
+    out: &Mutex<(Mat, Mat)>,
+    errors: &Mutex<Vec<(usize, String)>>,
+    processed: &std::sync::atomic::AtomicUsize,
+) -> Result<(), PipelineError> {
+    let (work_tx, work_rx) = bounded::<usize>(params.queue_depth);
+    let (ready_tx, ready_rx) = bounded::<Ready>(params.queue_depth);
+    let (batch_tx, batch_rx) = bounded::<Vec<Ready>>(params.queue_depth.max(4));
+
+    std::thread::scope(|s| {
+        // feeder
+        s.spawn(move || {
+            for i in 0..samples.len() {
+                if work_tx.send(i).is_err() {
+                    break;
+                }
+            }
+            work_tx.close();
+        });
+        // fetch+preprocess workers (the cache collapses the two stages for
+        // hits; misses pay download + decode)
+        let n_fetch = (params.fetch_threads + params.preprocess_threads).max(1);
+        for _ in 0..n_fetch {
+            let work_rx = work_rx.clone();
+            let ready_tx = ready_tx.clone();
+            s.spawn(move || {
+                while let Some(i) = work_rx.recv() {
+                    match fetch_and_preprocess(
+                        &samples[i],
+                        store,
+                        cache,
+                        params.per_item_overhead,
+                        metrics,
+                    ) {
+                        Ok(tensor) => {
+                            if ready_tx.send(Ready { idx: i, tensor }).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) => errors.lock().unwrap().push((i, e)),
+                    }
+                }
+            });
+        }
+        drop(ready_tx);
+        drop(work_rx);
+        // batcher
+        {
+            let batch_tx = batch_tx.clone();
+            let policy = params.batch;
+            s.spawn(move || {
+                run_batcher(&ready_rx, &batch_tx, policy);
+                batch_tx.close();
+            });
+        }
+        drop(batch_tx);
+        // infer workers
+        for _ in 0..params.infer_threads.max(1) {
+            let batch_rx = batch_rx.clone();
+            s.spawn(move || {
+                while let Some(batch) = batch_rx.recv() {
+                    if batch.is_empty() {
+                        continue;
+                    }
+                    infer_batch(&batch, backend, head, out, errors, processed, metrics);
+                }
+            });
+        }
+        drop(batch_rx);
+    });
+    Ok(())
+}
+
+/// Figure 3a: stage-serial (the baseline tools' dataflow).
+#[allow(clippy::too_many_arguments)]
+fn run_serial(
+    samples: &[SampleRef],
+    store: &StoreRouter,
+    cache: &DataCache,
+    backend: &Arc<dyn ComputeBackend>,
+    head: &LinearHead,
+    params: &PipelineParams,
+    metrics: Option<&Arc<Registry>>,
+    out: &Mutex<(Mat, Mat)>,
+    errors: &Mutex<Vec<(usize, String)>>,
+    processed: &std::sync::atomic::AtomicUsize,
+) -> Result<(), PipelineError> {
+    run_serial_offset(
+        samples, 0, store, cache, backend, head, params, metrics, out, errors, processed,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_serial_offset(
+    samples: &[SampleRef],
+    base: usize,
+    store: &StoreRouter,
+    cache: &DataCache,
+    backend: &Arc<dyn ComputeBackend>,
+    head: &LinearHead,
+    params: &PipelineParams,
+    metrics: Option<&Arc<Registry>>,
+    out: &Mutex<(Mat, Mat)>,
+    errors: &Mutex<Vec<(usize, String)>>,
+    processed: &std::sync::atomic::AtomicUsize,
+) -> Result<(), PipelineError> {
+    // Stage 1+2 to completion (single-threaded, like the Python tools'
+    // main loop), then stage 3 over fixed-size batches.
+    let mut ready: Vec<Ready> = Vec::with_capacity(samples.len());
+    for (off, s) in samples.iter().enumerate() {
+        match fetch_and_preprocess(s, store, cache, params.per_item_overhead, metrics) {
+            Ok(tensor) => ready.push(Ready { idx: base + off, tensor }),
+            Err(e) => errors.lock().unwrap().push((base + off, e)),
+        }
+    }
+    for chunk in ready.chunks(params.batch.max_batch.max(1)) {
+        infer_batch(chunk, backend, head, out, errors, processed, metrics);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StoreConfig;
+    use crate::data::{encode_image, IMG_DIM};
+    use crate::runtime::backend::HostBackend;
+    use crate::store::ObjectStore;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize) -> (Vec<SampleRef>, StoreRouter, DataCache, Arc<dyn ComputeBackend>) {
+        let store = StoreRouter::new("/tmp", &StoreConfig {
+            get_latency_us: 0,
+            bandwidth_mib_s: 0.0,
+            jitter: 0.0,
+        });
+        let mut rng = Rng::new(1);
+        let mut samples = Vec::new();
+        for i in 0..n {
+            let img: Vec<f32> = (0..IMG_DIM).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+            let key = format!("ds/pool/img_{i:06}.bin");
+            store.s3sim_backing().put(&key, &encode_image(&img)).unwrap();
+            samples.push(SampleRef { id: i as u32, uri: format!("s3sim://{key}") });
+        }
+        let cache = DataCache::new(64 * 1024 * 1024, 4, true);
+        let backend: Arc<dyn ComputeBackend> = Arc::new(HostBackend::new());
+        (samples, store, cache, backend)
+    }
+
+    fn head() -> LinearHead {
+        LinearHead::zeros(64, 10)
+    }
+
+    #[test]
+    fn all_modes_produce_identical_results() {
+        let (samples, store, cache, backend) = setup(40);
+        let mut outputs = Vec::new();
+        for mode in [
+            DataflowMode::Pipelined,
+            DataflowMode::SerialOneShot,
+            DataflowMode::SerialPerRound(4),
+        ] {
+            // fresh (disabled) cache per mode so modes can't help each other
+            let nocache = DataCache::new(0, 1, false);
+            let params = PipelineParams { mode, ..Default::default() };
+            let out = run_pipeline(
+                &samples, &store, &nocache, &backend, &head(), &params, None,
+            )
+            .unwrap();
+            assert!(out.errors.is_empty(), "{mode:?}: {:?}", out.errors);
+            assert_eq!(out.processed, 40);
+            outputs.push(out);
+        }
+        let base = &outputs[0];
+        for o in &outputs[1..] {
+            assert_eq!(base.embeddings, o.embeddings, "modes disagree on embeddings");
+            assert_eq!(base.scores, o.scores, "modes disagree on scores");
+        }
+        let _ = cache;
+    }
+
+    #[test]
+    fn rows_are_in_input_order() {
+        let (samples, store, cache, backend) = setup(25);
+        let params = PipelineParams::default();
+        let out =
+            run_pipeline(&samples, &store, &cache, &backend, &head(), &params, None).unwrap();
+        // re-run single sample i and compare to row i
+        for &i in &[0usize, 7, 24] {
+            let one = run_pipeline(
+                &samples[i..=i],
+                &store,
+                &cache,
+                &backend,
+                &head(),
+                &params,
+                None,
+            )
+            .unwrap();
+            assert_eq!(out.embeddings.row(i), one.embeddings.row(0), "row {i}");
+        }
+    }
+
+    #[test]
+    fn cache_makes_second_scan_hit() {
+        let (samples, store, cache, backend) = setup(30);
+        let params = PipelineParams::default();
+        let m = crate::metrics::Registry::new();
+        run_pipeline(&samples, &store, &cache, &backend, &head(), &params, Some(&m)).unwrap();
+        run_pipeline(&samples, &store, &cache, &backend, &head(), &params, Some(&m)).unwrap();
+        assert_eq!(cache.misses(), 30, "first scan misses everything");
+        assert!(cache.hits() >= 30, "second scan hits: {}", cache.hits());
+    }
+
+    #[test]
+    fn store_fault_surfaces_as_sample_error_not_crash() {
+        let (samples, store, cache, backend) = setup(20);
+        store.s3sim().inject_fault(Some("img_000007".into()));
+        let params = PipelineParams::default();
+        let out =
+            run_pipeline(&samples, &store, &cache, &backend, &head(), &params, None).unwrap();
+        assert_eq!(out.errors.len(), 1);
+        assert_eq!(out.errors[0].0, 7);
+        assert_eq!(out.processed, 19);
+        // failed row is zeroed
+        assert!(out.embeddings.row(7).iter().all(|&v| v == 0.0));
+        // other rows intact
+        assert!(out.embeddings.row(8).iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn corrupt_blob_surfaces_as_sample_error() {
+        let (mut samples, store, cache, backend) = setup(5);
+        store.s3sim_backing().put("ds/bad.bin", &[1, 2, 3]).unwrap();
+        samples.push(SampleRef { id: 99, uri: "s3sim://ds/bad.bin".into() });
+        samples.push(SampleRef { id: 100, uri: "not a uri".into() });
+        let params = PipelineParams::default();
+        let out =
+            run_pipeline(&samples, &store, &cache, &backend, &head(), &params, None).unwrap();
+        assert_eq!(out.errors.len(), 2);
+        assert_eq!(out.processed, 5);
+    }
+
+    #[test]
+    fn pipelined_beats_serial_with_slow_store() {
+        // Latency-bound store: overlap should win clearly.
+        let store = StoreRouter::new("/tmp", &StoreConfig {
+            get_latency_us: 4_000,
+            bandwidth_mib_s: 0.0,
+            jitter: 0.0,
+        });
+        let mut rng = Rng::new(2);
+        let mut samples = Vec::new();
+        for i in 0..60 {
+            let img: Vec<f32> = (0..IMG_DIM).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+            let key = format!("ds/pool/img_{i:06}.bin");
+            store.s3sim_backing().put(&key, &encode_image(&img)).unwrap();
+            samples.push(SampleRef { id: i as u32, uri: format!("s3sim://{key}") });
+        }
+        let backend: Arc<dyn ComputeBackend> = Arc::new(HostBackend::new());
+        let time_mode = |mode| {
+            let cache = DataCache::new(0, 1, false);
+            let params = PipelineParams { mode, fetch_threads: 8, ..Default::default() };
+            let t0 = Instant::now();
+            run_pipeline(&samples, &store, &cache, &backend, &head(), &params, None).unwrap();
+            t0.elapsed()
+        };
+        let serial = time_mode(DataflowMode::SerialOneShot);
+        let pipelined = time_mode(DataflowMode::Pipelined);
+        // Debug-build inference is slow enough to mute some of the win;
+        // the release-mode benches (table2) show the paper-scale gap.
+        assert!(
+            pipelined.as_secs_f64() < serial.as_secs_f64() * 0.75,
+            "pipelined {pipelined:?} should clearly beat serial {serial:?}"
+        );
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let (_, store, cache, backend) = setup(0);
+        let params = PipelineParams::default();
+        let out = run_pipeline(&[], &store, &cache, &backend, &head(), &params, None).unwrap();
+        assert_eq!(out.processed, 0);
+        assert_eq!(out.embeddings.rows(), 0);
+    }
+}

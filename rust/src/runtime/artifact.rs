@@ -1,0 +1,283 @@
+//! Artifact index: the Rust view of `artifacts/manifest.json`.
+//!
+//! aot.py emits one HLO-text artifact per (entry point, static shape)
+//! variant plus a manifest describing inputs/outputs. This module parses
+//! that manifest and answers "which artifact serves a batch of n?" — the
+//! dynamic batcher pads batches up to the chosen variant.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::json::{self, Value};
+
+/// Input spec of one artifact parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One compiled entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+}
+
+/// Model geometry shared between python and rust (manifest `model` block).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelGeometry {
+    pub img_dim: usize,
+    pub embed_dim: usize,
+    pub num_classes: usize,
+    pub batch_variants: Vec<usize>,
+    pub dist_tile: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+}
+
+/// Parsed manifest + artifact directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactIndex {
+    dir: PathBuf,
+    pub model: ModelGeometry,
+    artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArtifactError {
+    #[error("cannot read {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error("manifest malformed: {0}")]
+    Malformed(String),
+    #[error("unknown artifact '{0}' (is `make artifacts` up to date?)")]
+    Unknown(String),
+    #[error("no batch variant >= {0} compiled (max is {1})")]
+    BatchTooLarge(usize, usize),
+}
+
+impl ArtifactIndex {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactIndex, ArtifactError> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| ArtifactError::Io {
+            path: path.display().to_string(),
+            source: e,
+        })?;
+        Self::from_json(&text, dir)
+    }
+
+    /// Parse manifest text (dir is where artifact files live).
+    pub fn from_json(text: &str, dir: PathBuf) -> Result<ArtifactIndex, ArtifactError> {
+        let v = json::parse(text).map_err(|e| ArtifactError::Malformed(e.to_string()))?;
+        let m = v
+            .get("model")
+            .ok_or_else(|| ArtifactError::Malformed("missing 'model'".into()))?;
+        let geom = ModelGeometry {
+            img_dim: req_usize(m, "img_dim")?,
+            embed_dim: req_usize(m, "embed_dim")?,
+            num_classes: req_usize(m, "num_classes")?,
+            batch_variants: m
+                .get("batch_variants")
+                .and_then(Value::as_array)
+                .ok_or_else(|| ArtifactError::Malformed("missing batch_variants".into()))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| ArtifactError::Malformed("bad variant".into())))
+                .collect::<Result<Vec<_>, _>>()?,
+            dist_tile: req_usize(m, "dist_tile")?,
+            train_batch: req_usize(m, "train_batch")?,
+            eval_batch: req_usize(m, "eval_batch")?,
+        };
+        if geom.batch_variants.is_empty() {
+            return Err(ArtifactError::Malformed("empty batch_variants".into()));
+        }
+        let mut variants = geom.batch_variants.clone();
+        variants.sort_unstable();
+        if variants != geom.batch_variants {
+            return Err(ArtifactError::Malformed("batch_variants not sorted".into()));
+        }
+
+        let arts = v
+            .get("artifacts")
+            .and_then(Value::as_object)
+            .ok_or_else(|| ArtifactError::Malformed("missing 'artifacts'".into()))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in arts.iter() {
+            let file = spec
+                .get("file")
+                .and_then(Value::as_str)
+                .ok_or_else(|| ArtifactError::Malformed(format!("{name}: missing file")))?
+                .to_string();
+            let inputs = spec
+                .get("inputs")
+                .and_then(Value::as_array)
+                .ok_or_else(|| ArtifactError::Malformed(format!("{name}: missing inputs")))?
+                .iter()
+                .map(|i| {
+                    let iname = i
+                        .get("name")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| ArtifactError::Malformed(format!("{name}: input name")))?;
+                    let shape = i
+                        .get("shape")
+                        .and_then(Value::as_array)
+                        .ok_or_else(|| ArtifactError::Malformed(format!("{name}: input shape")))?
+                        .iter()
+                        .map(|d| {
+                            d.as_usize()
+                                .ok_or_else(|| ArtifactError::Malformed(format!("{name}: dim")))
+                        })
+                        .collect::<Result<Vec<_>, _>>()?;
+                    Ok(InputSpec { name: iname.to_string(), shape })
+                })
+                .collect::<Result<Vec<_>, ArtifactError>>()?;
+            let outputs = spec
+                .get("outputs")
+                .and_then(Value::as_array)
+                .ok_or_else(|| ArtifactError::Malformed(format!("{name}: missing outputs")))?
+                .iter()
+                .map(|o| {
+                    o.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| ArtifactError::Malformed(format!("{name}: output")))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            artifacts.insert(
+                name.to_string(),
+                ArtifactSpec { name: name.to_string(), file, inputs, outputs },
+            );
+        }
+        Ok(ArtifactIndex { dir, model: geom, artifacts })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec, ArtifactError> {
+        self.artifacts.get(name).ok_or_else(|| ArtifactError::Unknown(name.to_string()))
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn path_of(&self, name: &str) -> Result<PathBuf, ArtifactError> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.artifacts.keys().map(String::as_str)
+    }
+
+    /// Smallest compiled batch variant that fits `n` samples.
+    pub fn batch_variant_for(&self, n: usize) -> Result<usize, ArtifactError> {
+        let max = *self.model.batch_variants.last().unwrap();
+        self.model
+            .batch_variants
+            .iter()
+            .copied()
+            .find(|&v| v >= n)
+            .ok_or(ArtifactError::BatchTooLarge(n, max))
+    }
+
+    /// Largest compiled batch variant (the serving chunk size).
+    pub fn max_batch(&self) -> usize {
+        *self.model.batch_variants.last().unwrap()
+    }
+
+    /// Entry-point name for a batched artifact, e.g. `("forward", 16)`.
+    pub fn batched_name(&self, entry: &str, batch: usize) -> String {
+        format!("{entry}_b{batch}")
+    }
+}
+
+fn req_usize(v: &Value, field: &str) -> Result<usize, ArtifactError> {
+    v.get(field)
+        .and_then(Value::as_usize)
+        .ok_or_else(|| ArtifactError::Malformed(format!("missing/invalid '{field}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) const MINI_MANIFEST: &str = r#"{
+      "format": "hlo-text/return-tuple",
+      "model": {
+        "img_dim": 3072, "embed_dim": 64, "num_classes": 10,
+        "batch_variants": [1, 2, 4, 8, 16, 32, 64, 128],
+        "dist_tile": 256, "train_batch": 64, "eval_batch": 256
+      },
+      "artifacts": {
+        "forward_b16": {
+          "file": "forward_b16.hlo.txt",
+          "sha256": "x",
+          "inputs": [
+            {"name": "images", "shape": [16, 3072], "dtype": "f32"},
+            {"name": "w", "shape": [64, 10], "dtype": "f32"},
+            {"name": "b", "shape": [10], "dtype": "f32"}
+          ],
+          "outputs": ["embeddings", "scores"]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let idx = ArtifactIndex::from_json(MINI_MANIFEST, PathBuf::from("/a")).unwrap();
+        assert_eq!(idx.model.img_dim, 3072);
+        assert_eq!(idx.model.num_classes, 10);
+        let spec = idx.get("forward_b16").unwrap();
+        assert_eq!(spec.inputs.len(), 3);
+        assert_eq!(spec.inputs[0].shape, vec![16, 3072]);
+        assert_eq!(spec.outputs, vec!["embeddings", "scores"]);
+        assert_eq!(idx.path_of("forward_b16").unwrap(), PathBuf::from("/a/forward_b16.hlo.txt"));
+    }
+
+    #[test]
+    fn batch_variant_selection() {
+        let idx = ArtifactIndex::from_json(MINI_MANIFEST, PathBuf::from("/a")).unwrap();
+        assert_eq!(idx.batch_variant_for(1).unwrap(), 1);
+        assert_eq!(idx.batch_variant_for(3).unwrap(), 4);
+        assert_eq!(idx.batch_variant_for(16).unwrap(), 16);
+        assert_eq!(idx.batch_variant_for(100).unwrap(), 128);
+        assert!(matches!(
+            idx.batch_variant_for(129),
+            Err(ArtifactError::BatchTooLarge(129, 128))
+        ));
+        assert_eq!(idx.max_batch(), 128);
+    }
+
+    #[test]
+    fn unknown_artifact_and_malformed() {
+        let idx = ArtifactIndex::from_json(MINI_MANIFEST, PathBuf::from("/a")).unwrap();
+        assert!(matches!(idx.get("nope"), Err(ArtifactError::Unknown(_))));
+        assert!(ArtifactIndex::from_json("{}", PathBuf::from("/a")).is_err());
+        assert!(ArtifactIndex::from_json("not json", PathBuf::from("/a")).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        // Runs against the actual `make artifacts` output when present.
+        let Some(dir) = crate::runtime::find_artifacts_dir(None) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let idx = ArtifactIndex::load(&dir).unwrap();
+        assert_eq!(idx.model.img_dim, 3072);
+        for bs in &idx.model.batch_variants {
+            for ep in ["embed", "forward", "scores"] {
+                let name = idx.batched_name(ep, *bs);
+                assert!(idx.get(&name).is_ok(), "missing {name}");
+                assert!(idx.path_of(&name).unwrap().exists(), "file missing for {name}");
+            }
+        }
+        assert!(idx.get("train_step").is_ok());
+    }
+}

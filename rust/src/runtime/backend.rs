@@ -1,0 +1,484 @@
+//! `ComputeBackend`: the semantic compute contract of the system, and
+//! `HostBackend`, its pure-Rust reference implementation.
+//!
+//! Everything above the runtime (strategies, trainer, pipeline, agent)
+//! talks to this trait, so the whole coordinator runs identically against:
+//!
+//! * [`HostBackend`] — straight-line Rust math. The scores / sqdist /
+//!   train_step / eval_logits implementations mirror
+//!   `python/compile/kernels/ref.py` and `model.py` exactly (the
+//!   integration tests cross-check them against the PJRT artifacts). Its
+//!   `embed` is a *stand-in trunk* (fixed random projection + layernorm),
+//!   deterministic but intentionally NOT the JAX trunk — tests that need
+//!   trunk-faithful embeddings use `PjrtBackend`.
+//! * [`super::PjrtBackend`] — the AOT artifacts through PJRT (production).
+
+use crate::util::mat::Mat;
+
+/// Runtime failure surface shared by backends.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    #[error("artifact error: {0}")]
+    Artifact(#[from] super::artifact::ArtifactError),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("worker pool unavailable: {0}")]
+    Pool(String),
+}
+
+pub type RtResult<T> = Result<T, RuntimeError>;
+
+/// Number of uncertainty score columns (see kernels/ref.py::SCORE_NAMES).
+pub const NUM_SCORES: usize = 4;
+
+/// The compute contract (shapes in docs; all f32).
+pub trait ComputeBackend: Send + Sync {
+    /// Trunk forward: `[B, img_dim] -> [B, embed_dim]`.
+    fn embed(&self, images: &Mat) -> RtResult<Mat>;
+
+    /// Serving hot path: images + head `(w: [D, C], b: [C])` ->
+    /// `([B, D] embeddings, [B, 4] scores)`.
+    fn forward(&self, images: &Mat, w: &Mat, b: &[f32]) -> RtResult<(Mat, Mat)>;
+
+    /// Fused uncertainty scores: `[B, C] logits -> [B, 4]`.
+    fn scores(&self, logits: &Mat) -> RtResult<Mat>;
+
+    /// Pairwise squared distances: `[M, D], [N, D] -> [M, N]`.
+    fn sqdist(&self, x: &Mat, y: &Mat) -> RtResult<Mat>;
+
+    /// One last-layer SGD step on `(w, b)` over a minibatch of embeddings;
+    /// zero one-hot rows are inert padding. Returns the (mean) loss.
+    fn train_step(
+        &self,
+        w: &mut Mat,
+        b: &mut [f32],
+        x: &Mat,
+        y_onehot: &Mat,
+        lr: f32,
+    ) -> RtResult<f32>;
+
+    /// Evaluation logits: `[B, D] x (w, b) -> [B, C]`.
+    fn eval_logits(&self, x: &Mat, w: &Mat, b: &[f32]) -> RtResult<Mat>;
+
+    /// Backend tag for metrics/logs.
+    fn name(&self) -> &'static str;
+
+    /// Pre-compile / pre-warm the serving path for a given inference
+    /// batch size. No-op by default (host backend); the PJRT backend
+    /// compiles the serving artifact variants on every replica so the
+    /// first request doesn't pay XLA compile time (§Perf).
+    fn warmup_serving(&self, _batch_size: usize) -> RtResult<()> {
+        Ok(())
+    }
+}
+
+/// Pure-Rust reference backend.
+pub struct HostBackend {
+    embed_dim: usize,
+    /// Fixed random projection `[img_dim, embed_dim]` (the mock trunk).
+    proj: Mat,
+}
+
+impl HostBackend {
+    /// `img_dim`/`embed_dim` default to the canonical model geometry.
+    pub fn new() -> Self {
+        Self::with_dims(3072, 64)
+    }
+
+    pub fn with_dims(img_dim: usize, embed_dim: usize) -> Self {
+        let mut rng = crate::util::rng::Rng::new(0x7777_2022);
+        let scale = (1.0 / img_dim as f64).sqrt() as f32;
+        let data: Vec<f32> =
+            (0..img_dim * embed_dim).map(|_| scale * rng.normal_f32()).collect();
+        HostBackend { embed_dim, proj: Mat::from_vec(data, img_dim, embed_dim) }
+    }
+}
+
+impl Default for HostBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Row-wise softmax + the four uncertainty scores (mirrors ref.py).
+pub fn host_scores(logits: &Mat) -> Mat {
+    let (b, c) = logits.shape();
+    let mut out = Mat::zeros(b, NUM_SCORES);
+    let mut p = vec![0.0f32; c];
+    for i in 0..b {
+        let row = logits.row(i);
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for (j, &l) in row.iter().enumerate() {
+            let e = (l - m).exp();
+            p[j] = e;
+            z += e;
+        }
+        let mut p1 = 0.0f32;
+        let mut p2 = 0.0f32;
+        let mut entropy = 0.0f32;
+        for pj in p.iter_mut() {
+            *pj /= z;
+            let v = *pj;
+            if v > p1 {
+                p2 = p1;
+                p1 = v;
+            } else if v > p2 {
+                p2 = v;
+            }
+            if v > 0.0 {
+                entropy -= v * v.ln();
+            }
+        }
+        let r = out.row_mut(i);
+        r[0] = 1.0 - p1; // least confidence
+        r[1] = p1 - p2; // margin
+        r[2] = if p1 > 0.0 { p2 / p1 } else { 1.0 }; // ratio
+        r[3] = entropy;
+    }
+    out
+}
+
+/// Blocked pairwise squared distance (mirrors ref.py, clamped at 0).
+pub fn host_sqdist(x: &Mat, y: &Mat) -> RtResult<Mat> {
+    if x.cols() != y.cols() {
+        return Err(RuntimeError::Shape(format!(
+            "sqdist dims differ: {} vs {}",
+            x.cols(),
+            y.cols()
+        )));
+    }
+    let (m, d) = x.shape();
+    let n = y.rows();
+    let xx: Vec<f32> = (0..m).map(|i| x.row(i).iter().map(|v| v * v).sum()).collect();
+    let yy: Vec<f32> = (0..n).map(|j| y.row(j).iter().map(|v| v * v).sum()).collect();
+    let mut out = Mat::zeros(m, n);
+    for i in 0..m {
+        let xi = x.row(i);
+        let row = out.row_mut(i);
+        for j in 0..n {
+            let yj = y.row(j);
+            let mut cross = 0.0f32;
+            for k in 0..d {
+                cross += xi[k] * yj[k];
+            }
+            row[j] = (xx[i] + yy[j] - 2.0 * cross).max(0.0);
+        }
+    }
+    Ok(out)
+}
+
+/// One softmax-xent SGD step (mirrors model.py::train_step, including the
+/// inert-padding convention: rows with all-zero one-hot contribute nothing
+/// and the loss normalizes by the number of real rows).
+pub fn host_train_step(
+    w: &mut Mat,
+    b: &mut [f32],
+    x: &Mat,
+    y_onehot: &Mat,
+    lr: f32,
+) -> RtResult<f32> {
+    let (n, d) = x.shape();
+    let c = w.cols();
+    if w.rows() != d || y_onehot.shape() != (n, c) || b.len() != c {
+        return Err(RuntimeError::Shape(format!(
+            "train_step: x{:?} w{:?} y{:?} b[{}]",
+            x.shape(),
+            w.shape(),
+            y_onehot.shape(),
+            b.len()
+        )));
+    }
+    let n_real: f32 = y_onehot.as_slice().iter().sum::<f32>().max(1.0);
+
+    let mut gw = Mat::zeros(d, c);
+    let mut gb = vec![0.0f32; c];
+    let mut loss = 0.0f32;
+    let mut p = vec![0.0f32; c];
+    for i in 0..n {
+        let xi = x.row(i);
+        let yi = y_onehot.row(i);
+        let is_pad = yi.iter().all(|&v| v == 0.0);
+        // logits
+        let m = {
+            let mut m = f32::NEG_INFINITY;
+            for j in 0..c {
+                let mut l = b[j];
+                for k in 0..d {
+                    l += xi[k] * w.get(k, j);
+                }
+                p[j] = l;
+                m = m.max(l);
+            }
+            m
+        };
+        let mut z = 0.0f32;
+        for pj in p.iter_mut() {
+            *pj = (*pj - m).exp();
+            z += *pj;
+        }
+        for (j, pj) in p.iter_mut().enumerate() {
+            *pj /= z;
+            if yi[j] > 0.0 {
+                loss -= yi[j] * pj.max(1e-30).ln();
+            }
+        }
+        if is_pad {
+            continue;
+        }
+        // grad: (p - y) / n_real
+        for j in 0..c {
+            let g = (p[j] - yi[j]) / n_real;
+            gb[j] += g;
+            for k in 0..d {
+                *gw.row_mut(k).get_mut(j).unwrap() += xi[k] * g;
+            }
+        }
+    }
+    for k in 0..d {
+        for j in 0..c {
+            let v = w.get(k, j) - lr * gw.get(k, j);
+            w.set(k, j, v);
+        }
+    }
+    for j in 0..c {
+        b[j] -= lr * gb[j];
+    }
+    Ok(loss / n_real)
+}
+
+/// `x @ w + b` (mirrors model.py::eval_logits).
+pub fn host_eval_logits(x: &Mat, w: &Mat, b: &[f32]) -> RtResult<Mat> {
+    let (n, d) = x.shape();
+    let c = w.cols();
+    if w.rows() != d || b.len() != c {
+        return Err(RuntimeError::Shape(format!(
+            "eval_logits: x{:?} w{:?} b[{}]",
+            x.shape(),
+            w.shape(),
+            b.len()
+        )));
+    }
+    let mut out = Mat::zeros(n, c);
+    for i in 0..n {
+        let xi = x.row(i);
+        let row = out.row_mut(i);
+        for j in 0..c {
+            let mut l = b[j];
+            for k in 0..d {
+                l += xi[k] * w.get(k, j);
+            }
+            row[j] = l;
+        }
+    }
+    Ok(out)
+}
+
+impl ComputeBackend for HostBackend {
+    fn embed(&self, images: &Mat) -> RtResult<Mat> {
+        if images.cols() != self.proj.rows() {
+            return Err(RuntimeError::Shape(format!(
+                "embed: images cols {} != img_dim {}",
+                images.cols(),
+                self.proj.rows()
+            )));
+        }
+        let mut e = host_eval_logits(images, &self.proj, &vec![0.0; self.embed_dim])?;
+        // layernorm rows (like the trunk's output)
+        for i in 0..e.rows() {
+            let row = e.row_mut(i);
+            let mean = row.iter().sum::<f32>() / row.len() as f32;
+            let var =
+                row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / row.len() as f32;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for v in row.iter_mut() {
+                *v = (*v - mean) * inv;
+            }
+        }
+        Ok(e)
+    }
+
+    fn forward(&self, images: &Mat, w: &Mat, b: &[f32]) -> RtResult<(Mat, Mat)> {
+        let e = self.embed(images)?;
+        let logits = host_eval_logits(&e, w, b)?;
+        Ok((e, host_scores(&logits)))
+    }
+
+    fn scores(&self, logits: &Mat) -> RtResult<Mat> {
+        Ok(host_scores(logits))
+    }
+
+    fn sqdist(&self, x: &Mat, y: &Mat) -> RtResult<Mat> {
+        host_sqdist(x, y)
+    }
+
+    fn train_step(
+        &self,
+        w: &mut Mat,
+        b: &mut [f32],
+        x: &Mat,
+        y_onehot: &Mat,
+        lr: f32,
+    ) -> RtResult<f32> {
+        host_train_step(w, b, x, y_onehot, lr)
+    }
+
+    fn eval_logits(&self, x: &Mat, w: &Mat, b: &[f32]) -> RtResult<Mat> {
+        host_eval_logits(x, w, b)
+    }
+
+    fn name(&self) -> &'static str {
+        "host"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize, scale: f32) -> Mat {
+        Mat::from_vec((0..r * c).map(|_| scale * rng.normal_f32()).collect(), r, c)
+    }
+
+    #[test]
+    fn scores_uniform_and_peaked_extremes() {
+        let c = 10;
+        let uniform = Mat::zeros(2, c);
+        let s = host_scores(&uniform);
+        assert!((s.get(0, 0) - (1.0 - 0.1)).abs() < 1e-6);
+        assert!(s.get(0, 1).abs() < 1e-6);
+        assert!((s.get(0, 2) - 1.0).abs() < 1e-6);
+        assert!((s.get(0, 3) - (c as f32).ln()).abs() < 1e-5);
+
+        let mut peaked = Mat::zeros(1, c);
+        peaked.set(0, 3, 50.0);
+        let s = host_scores(&peaked);
+        assert!(s.get(0, 0) < 1e-6);
+        assert!(s.get(0, 1) > 1.0 - 1e-6);
+        assert!(s.get(0, 3) < 1e-4);
+    }
+
+    #[test]
+    fn sqdist_hand_computed_and_properties() {
+        let x = Mat::from_vec(vec![0.0, 0.0, 1.0, 1.0], 2, 2);
+        let y = Mat::from_vec(vec![0.0, 1.0, 2.0, 0.0, 1.0, 1.0], 3, 2);
+        let d = host_sqdist(&x, &y).unwrap();
+        assert_eq!(d.row(0), &[1.0, 4.0, 2.0]);
+        assert_eq!(d.row(1), &[1.0, 2.0, 0.0]);
+        // mismatched dims
+        assert!(host_sqdist(&x, &Mat::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn prop_sqdist_symmetry_and_nonneg() {
+        crate::util::prop::check("sqdist-props", 30, |rng| {
+            let d = 1 + rng.below(16);
+            let (rx, ry) = (1 + rng.below(20), 1 + rng.below(20));
+            let x = rand_mat(rng, rx, d, 2.0);
+            let y = rand_mat(rng, ry, d, 2.0);
+            let dxy = host_sqdist(&x, &y).unwrap();
+            let dyx = host_sqdist(&y, &x).unwrap();
+            for i in 0..x.rows() {
+                for j in 0..y.rows() {
+                    prop_assert!(dxy.get(i, j) >= 0.0, "negative distance");
+                    prop_assert!(
+                        (dxy.get(i, j) - dyx.get(j, i)).abs() < 1e-3,
+                        "asymmetric: {} vs {}",
+                        dxy.get(i, j),
+                        dyx.get(j, i)
+                    );
+                }
+            }
+            let dxx = host_sqdist(&x, &x).unwrap();
+            for i in 0..x.rows() {
+                prop_assert!(dxx.get(i, i) < 1e-3, "diag not ~0: {}", dxx.get(i, i));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn train_step_first_loss_is_log_c_and_descends() {
+        let mut rng = Rng::new(5);
+        let d = 16;
+        let c = 10;
+        let n = 64;
+        let x = rand_mat(&mut rng, n, d, 1.0);
+        let mut y = Mat::zeros(n, c);
+        for i in 0..n {
+            y.set(i, i % c, 1.0);
+        }
+        let mut w = Mat::zeros(d, c);
+        let mut b = vec![0.0; c];
+        let first = host_train_step(&mut w, &mut b, &x, &y, 0.5).unwrap();
+        assert!((first - (c as f32).ln()).abs() < 1e-4, "first={first}");
+        let mut last = first;
+        for _ in 0..60 {
+            last = host_train_step(&mut w, &mut b, &x, &y, 0.5).unwrap();
+        }
+        assert!(last < first * 0.8, "no descent: {first} -> {last}");
+    }
+
+    #[test]
+    fn train_step_padding_rows_are_inert() {
+        let mut rng = Rng::new(9);
+        let d = 8;
+        let c = 4;
+        let x_real = rand_mat(&mut rng, 5, d, 1.0);
+        let mut y_real = Mat::zeros(5, c);
+        for i in 0..5 {
+            y_real.set(i, i % c, 1.0);
+        }
+        // padded copies
+        let x_pad = x_real.pad_rows_to(8);
+        let y_pad = y_real.pad_rows_to(8);
+
+        let mut w1 = Mat::zeros(d, c);
+        let mut b1 = vec![0.0; c];
+        let l1 = host_train_step(&mut w1, &mut b1, &x_real, &y_real, 0.3).unwrap();
+        let mut w2 = Mat::zeros(d, c);
+        let mut b2 = vec![0.0; c];
+        let l2 = host_train_step(&mut w2, &mut b2, &x_pad, &y_pad, 0.3).unwrap();
+        assert!((l1 - l2).abs() < 1e-6);
+        for (a, b) in w1.as_slice().iter().zip(w2.as_slice()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn embed_is_deterministic_and_normalized() {
+        let be = HostBackend::new();
+        let mut rng = Rng::new(1);
+        let img = rand_mat(&mut rng, 4, 3072, 0.3);
+        let e1 = be.embed(&img).unwrap();
+        let e2 = be.embed(&img).unwrap();
+        assert_eq!(e1, e2);
+        for i in 0..e1.rows() {
+            let mean: f32 = e1.row(i).iter().sum::<f32>() / 64.0;
+            assert!(mean.abs() < 1e-4);
+        }
+        // batch invariance: row 0 of batch == single forward
+        let single = be.embed(&img.take_rows(1)).unwrap();
+        for k in 0..64 {
+            assert!((e1.get(0, k) - single.get(0, k)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn forward_composes_embed_head_scores() {
+        let be = HostBackend::new();
+        let mut rng = Rng::new(2);
+        let img = rand_mat(&mut rng, 3, 3072, 0.3);
+        let w = Mat::zeros(64, 10);
+        let b = vec![0.0; 10];
+        let (e, s) = be.forward(&img, &w, &b).unwrap();
+        assert_eq!(e.shape(), (3, 64));
+        assert_eq!(s.shape(), (3, NUM_SCORES));
+        // zero head -> uniform scores
+        assert!((s.get(0, 3) - (10.0f32).ln()).abs() < 1e-4);
+    }
+}

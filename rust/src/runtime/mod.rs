@@ -1,0 +1,56 @@
+//! Runtime layer: executes the AOT artifacts from the L3 hot path.
+//!
+//! * [`artifact`] — parses `artifacts/manifest.json` (written by
+//!   `python/compile/aot.py`) and resolves batch-size variants.
+//! * [`backend`] — the `ComputeBackend` contract the rest of the system
+//!   programs against, plus `HostBackend`, a pure-Rust reference
+//!   implementation (used by unit tests and as the numerics cross-check
+//!   for the PJRT path).
+//! * [`pjrt`] — the real thing: per-worker `PjRtClient` (the client is
+//!   `Rc`-based, hence not `Send` — every worker thread owns its own
+//!   client and compiled executables), a job-channel `PjrtPool` standing
+//!   in for the paper's Triton replicas, and `PjrtBackend` which handles
+//!   batch padding/variant selection.
+//!
+//! Python never runs here: everything executes through the `xla` crate's
+//! PJRT CPU client from HLO text (see /opt/xla-example/README.md for why
+//! text, not serialized protos).
+
+pub mod artifact;
+pub mod backend;
+pub mod pjrt;
+
+pub use artifact::{ArtifactIndex, ArtifactSpec};
+pub use backend::{ComputeBackend, HostBackend, RuntimeError};
+pub use pjrt::{PjrtBackend, PjrtPool};
+
+/// Default location of `make artifacts` output, relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory: explicit arg, `ALAAS_ARTIFACTS` env,
+/// or walking up from cwd looking for `artifacts/manifest.json` (tests and
+/// examples run from different depths).
+pub fn find_artifacts_dir(explicit: Option<&str>) -> Option<std::path::PathBuf> {
+    if let Some(dir) = explicit {
+        let p = std::path::PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    if let Ok(env) = std::env::var("ALAAS_ARTIFACTS") {
+        let p = std::path::PathBuf::from(env);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let candidate = cur.join(DEFAULT_ARTIFACTS_DIR);
+        if candidate.join("manifest.json").exists() {
+            return Some(candidate);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}

@@ -1,0 +1,515 @@
+//! PJRT execution: worker pool + the production `ComputeBackend`.
+//!
+//! This is the Triton substitution (DESIGN.md): `PjrtPool` spawns
+//! `replicas` worker threads, each owning its own `PjRtClient` (the xla
+//! crate's client wraps an `Rc` and is not `Send`) and a lazily-compiled
+//! cache of executables loaded from `artifacts/*.hlo.txt`. The dynamic
+//! batcher upstream feeds whole batches; a bounded job channel provides
+//! the backpressure.
+//!
+//! `PjrtBackend` implements the semantic `ComputeBackend` contract on top:
+//! it picks the right compiled batch variant, pads inputs (padding rows
+//! are provably inert — see python/tests + backend.rs tests), splits
+//! oversized batches, and tiles the pairwise-distance computation into
+//! `dist_tile` blocks.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Barrier};
+use std::thread::JoinHandle;
+
+use crate::runtime::artifact::ArtifactIndex;
+use crate::runtime::backend::{ComputeBackend, RtResult, RuntimeError};
+use crate::util::chan::{bounded, Sender};
+use crate::util::mat::Mat;
+
+/// A tensor crossing the pool boundary: flat f32 data + dims.
+#[derive(Debug, Clone)]
+pub struct TensorData {
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+impl TensorData {
+    pub fn from_mat(m: &Mat) -> Self {
+        TensorData { data: m.as_slice().to_vec(), dims: vec![m.rows(), m.cols()] }
+    }
+
+    pub fn from_vec1(v: &[f32]) -> Self {
+        TensorData { data: v.to_vec(), dims: vec![v.len()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        TensorData { data: vec![v], dims: vec![] }
+    }
+
+    pub fn into_mat(self) -> RtResult<Mat> {
+        match self.dims.len() {
+            2 => Ok(Mat::from_vec(self.data, self.dims[0], self.dims[1])),
+            1 => {
+                let n = self.dims[0];
+                Ok(Mat::from_vec(self.data, 1, n))
+            }
+            d => Err(RuntimeError::Shape(format!("expected matrix, got rank {d}"))),
+        }
+    }
+}
+
+enum Job {
+    /// Execute `artifact` with positional inputs; reply with outputs.
+    Exec {
+        artifact: String,
+        inputs: Vec<TensorData>,
+        reply: Sender<Result<Vec<TensorData>, String>>,
+    },
+    /// Compile the named artifacts now. The barrier forces every worker to
+    /// take exactly one Warm job, so all replicas end up warm.
+    Warm { artifacts: Vec<String>, barrier: Arc<Barrier>, reply: Sender<Result<(), String>> },
+}
+
+/// Replicated PJRT worker pool (the "inference workers" of Figure 1).
+pub struct PjrtPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    index: Arc<ArtifactIndex>,
+    replicas: usize,
+}
+
+impl PjrtPool {
+    /// Spawn `replicas` workers with `queue_depth` pending-job slots.
+    pub fn new(index: Arc<ArtifactIndex>, replicas: usize, queue_depth: usize) -> Self {
+        let replicas = replicas.max(1);
+        let (tx, rx) = bounded::<Job>(queue_depth.max(1));
+        let workers = (0..replicas)
+            .map(|i| {
+                let rx = rx.clone();
+                let index = index.clone();
+                std::thread::Builder::new()
+                    .name(format!("pjrt-worker-{i}"))
+                    .spawn(move || worker_loop(index, rx))
+                    .expect("spawn pjrt worker")
+            })
+            .collect();
+        PjrtPool { tx: Some(tx), workers, index, replicas }
+    }
+
+    pub fn index(&self) -> &Arc<ArtifactIndex> {
+        &self.index
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Execute an artifact by name. Blocks until a worker replies.
+    pub fn call(&self, artifact: &str, inputs: Vec<TensorData>) -> RtResult<Vec<TensorData>> {
+        let (rtx, rrx) = bounded(1);
+        let job = Job::Exec { artifact: artifact.to_string(), inputs, reply: rtx };
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(job)
+            .map_err(|_| RuntimeError::Pool("job queue closed".into()))?;
+        match rrx.recv() {
+            Some(Ok(outs)) => Ok(outs),
+            Some(Err(e)) => Err(RuntimeError::Xla(e)),
+            None => Err(RuntimeError::Pool("worker dropped reply".into())),
+        }
+    }
+
+    /// Compile `artifacts` on every replica (server startup; avoids paying
+    /// XLA compile time on the first request).
+    pub fn warmup(&self, artifacts: &[String]) -> RtResult<()> {
+        let barrier = Arc::new(Barrier::new(self.replicas));
+        let mut replies = Vec::new();
+        for _ in 0..self.replicas {
+            let (rtx, rrx) = bounded(1);
+            let job = Job::Warm {
+                artifacts: artifacts.to_vec(),
+                barrier: barrier.clone(),
+                reply: rtx,
+            };
+            self.tx
+                .as_ref()
+                .expect("pool shut down")
+                .send(job)
+                .map_err(|_| RuntimeError::Pool("job queue closed".into()))?;
+            replies.push(rrx);
+        }
+        for r in replies {
+            match r.recv() {
+                Some(Ok(())) => {}
+                Some(Err(e)) => return Err(RuntimeError::Xla(e)),
+                None => return Err(RuntimeError::Pool("warmup reply dropped".into())),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            tx.close();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for PjrtPool {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// One worker: own client, own executable cache, serve jobs forever.
+fn worker_loop(index: Arc<ArtifactIndex>, rx: crate::util::chan::Receiver<Job>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            crate::log_error!("pjrt", "failed to create PJRT CPU client: {e}");
+            // Drain jobs with errors rather than hanging callers.
+            while let Some(job) = rx.recv() {
+                match job {
+                    Job::Exec { reply, .. } => {
+                        let _ = reply.send(Err(format!("no pjrt client: {e}")));
+                    }
+                    Job::Warm { barrier, reply, .. } => {
+                        barrier.wait();
+                        let _ = reply.send(Err(format!("no pjrt client: {e}")));
+                    }
+                }
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Some(job) = rx.recv() {
+        match job {
+            Job::Warm { artifacts, barrier, reply } => {
+                // Wait so every replica takes one Warm job before any of
+                // them returns to the queue.
+                barrier.wait();
+                let mut result = Ok(());
+                for a in &artifacts {
+                    if let Err(e) = ensure_compiled(&client, &index, &mut cache, a) {
+                        result = Err(e);
+                        break;
+                    }
+                }
+                let _ = reply.send(result);
+            }
+            Job::Exec { artifact, inputs, reply } => {
+                let out = execute_one(&client, &index, &mut cache, &artifact, inputs);
+                let _ = reply.send(out);
+            }
+        }
+    }
+}
+
+fn ensure_compiled<'a>(
+    client: &xla::PjRtClient,
+    index: &ArtifactIndex,
+    cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>,
+    artifact: &str,
+) -> Result<&'a xla::PjRtLoadedExecutable, String> {
+    if !cache.contains_key(artifact) {
+        let path = index.path_of(artifact).map_err(|e| e.to_string())?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| format!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| format!("compile {artifact}: {e}"))?;
+        crate::log_debug!(
+            "pjrt",
+            "compiled {artifact} in {:.1}ms",
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        cache.insert(artifact.to_string(), exe);
+    }
+    Ok(cache.get(artifact).unwrap())
+}
+
+fn execute_one(
+    client: &xla::PjRtClient,
+    index: &ArtifactIndex,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    artifact: &str,
+    inputs: Vec<TensorData>,
+) -> Result<Vec<TensorData>, String> {
+    // Shape-check against the manifest before handing to XLA (clearer
+    // errors than an opaque runtime failure).
+    let spec = index.get(artifact).map_err(|e| e.to_string())?;
+    if inputs.len() != spec.inputs.len() {
+        return Err(format!(
+            "{artifact}: expected {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        ));
+    }
+    for (t, ispec) in inputs.iter().zip(&spec.inputs) {
+        if t.dims != ispec.shape {
+            return Err(format!(
+                "{artifact}: input '{}' shape {:?} != expected {:?}",
+                ispec.name, t.dims, ispec.shape
+            ));
+        }
+        let n: usize = t.dims.iter().product::<usize>().max(1);
+        if t.data.len() != n && !(t.dims.is_empty() && t.data.len() == 1) {
+            return Err(format!(
+                "{artifact}: input '{}' data len {} != shape product {n}",
+                ispec.name,
+                t.data.len()
+            ));
+        }
+    }
+
+    let exe = ensure_compiled(client, index, cache, artifact)?;
+
+    let literals: Vec<xla::Literal> = inputs
+        .iter()
+        .map(|t| {
+            let lit = xla::Literal::vec1(&t.data);
+            if t.dims.is_empty() {
+                // rank-0 scalar
+                lit.reshape(&[]).map_err(|e| format!("scalar reshape: {e}"))
+            } else {
+                let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).map_err(|e| format!("reshape {:?}: {e}", t.dims))
+            }
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| format!("execute {artifact}: {e}"))?;
+    let out_lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| format!("fetch result {artifact}: {e}"))?;
+    // aot.py lowers with return_tuple=True: always a tuple, even for one
+    // output.
+    let parts = out_lit.to_tuple().map_err(|e| format!("untuple {artifact}: {e}"))?;
+    parts
+        .into_iter()
+        .map(|lit| {
+            let shape = lit.array_shape().map_err(|e| format!("shape: {e}"))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = lit.to_vec::<f32>().map_err(|e| format!("to_vec: {e}"))?;
+            Ok(TensorData { data, dims })
+        })
+        .collect()
+}
+
+/// Production backend: pads/chunks semantic calls onto compiled variants.
+pub struct PjrtBackend {
+    pool: Arc<PjrtPool>,
+}
+
+impl PjrtBackend {
+    pub fn new(pool: Arc<PjrtPool>) -> Self {
+        PjrtBackend { pool }
+    }
+
+    /// Convenience: load artifacts, spin up a pool, wrap it.
+    pub fn from_artifacts_dir(dir: &std::path::Path, replicas: usize) -> RtResult<Self> {
+        let index = Arc::new(ArtifactIndex::load(dir)?);
+        let pool = Arc::new(PjrtPool::new(index, replicas, 64));
+        Ok(PjrtBackend::new(pool))
+    }
+
+    pub fn pool(&self) -> &Arc<PjrtPool> {
+        &self.pool
+    }
+
+    fn index(&self) -> &ArtifactIndex {
+        self.pool.index()
+    }
+
+    /// Run a batched entry point over arbitrarily many rows: full
+    /// `max_batch` chunks, then the smallest variant that fits the tail.
+    /// `extra` inputs (head weights) are appended to every chunk call.
+    fn run_batched(
+        &self,
+        entry: &str,
+        rows: &Mat,
+        extra: &[TensorData],
+        n_outputs: usize,
+    ) -> RtResult<Vec<Mat>> {
+        let idx = self.index();
+        let total = rows.rows();
+        let max = idx.max_batch();
+        let mut outs: Vec<Vec<Mat>> = (0..n_outputs).map(|_| Vec::new()).collect();
+        let mut start = 0;
+        while start < total {
+            let remain = total - start;
+            let variant = idx.batch_variant_for(remain.min(max))?;
+            let take = remain.min(variant);
+            let chunk_idx: Vec<usize> = (start..start + take).collect();
+            let chunk = rows.gather_rows(&chunk_idx).pad_rows_to(variant);
+            let mut inputs = vec![TensorData::from_mat(&chunk)];
+            inputs.extend_from_slice(extra);
+            let name = idx.batched_name(entry, variant);
+            let result = self.pool.call(&name, inputs)?;
+            if result.len() != n_outputs {
+                return Err(RuntimeError::Shape(format!(
+                    "{name}: expected {n_outputs} outputs, got {}",
+                    result.len()
+                )));
+            }
+            for (slot, t) in outs.iter_mut().zip(result) {
+                slot.push(t.into_mat()?.take_rows(take));
+            }
+            start += take;
+        }
+        Ok(outs
+            .into_iter()
+            .map(|parts| {
+                let mut it = parts.into_iter();
+                let first = it.next().expect("at least one chunk");
+                it.fold(first, |acc, m| acc.vstack(&m))
+            })
+            .collect())
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn embed(&self, images: &Mat) -> RtResult<Mat> {
+        let mut out = self.run_batched("embed", images, &[], 1)?;
+        Ok(out.remove(0))
+    }
+
+    fn forward(&self, images: &Mat, w: &Mat, b: &[f32]) -> RtResult<(Mat, Mat)> {
+        let extra = [TensorData::from_mat(w), TensorData::from_vec1(b)];
+        let mut out = self.run_batched("forward", images, &extra, 2)?;
+        let emb = out.remove(0);
+        let scores = out.remove(0);
+        Ok((emb, scores))
+    }
+
+    fn scores(&self, logits: &Mat) -> RtResult<Mat> {
+        let mut out = self.run_batched("scores", logits, &[], 1)?;
+        Ok(out.remove(0))
+    }
+
+    fn sqdist(&self, x: &Mat, y: &Mat) -> RtResult<Mat> {
+        if x.cols() != y.cols() {
+            return Err(RuntimeError::Shape(format!(
+                "sqdist dims differ: {} vs {}",
+                x.cols(),
+                y.cols()
+            )));
+        }
+        let t = self.index().model.dist_tile;
+        let name = format!("sqdist_t{t}");
+        let (m, n) = (x.rows(), y.rows());
+        let mut out = Mat::zeros(m, n);
+        let mut i = 0;
+        while i < m {
+            let ti = (m - i).min(t);
+            let xi: Vec<usize> = (i..i + ti).collect();
+            let xt = x.gather_rows(&xi).pad_rows_to(t);
+            let mut j = 0;
+            while j < n {
+                let tj = (n - j).min(t);
+                let yj: Vec<usize> = (j..j + tj).collect();
+                let yt = y.gather_rows(&yj).pad_rows_to(t);
+                let res = self
+                    .pool
+                    .call(&name, vec![TensorData::from_mat(&xt), TensorData::from_mat(&yt)])?;
+                let block = res.into_iter().next().expect("one output").into_mat()?;
+                for bi in 0..ti {
+                    let src = block.row(bi);
+                    let dst = out.row_mut(i + bi);
+                    dst[j..j + tj].copy_from_slice(&src[..tj]);
+                }
+                j += tj;
+            }
+            i += ti;
+        }
+        Ok(out)
+    }
+
+    fn train_step(
+        &self,
+        w: &mut Mat,
+        b: &mut [f32],
+        x: &Mat,
+        y_onehot: &Mat,
+        lr: f32,
+    ) -> RtResult<f32> {
+        let bt = self.index().model.train_batch;
+        if x.rows() > bt {
+            return Err(RuntimeError::Shape(format!(
+                "train_step minibatch {} > compiled batch {bt}",
+                x.rows()
+            )));
+        }
+        let xp = x.pad_rows_to(bt);
+        let yp = y_onehot.pad_rows_to(bt);
+        let inputs = vec![
+            TensorData::from_mat(w),
+            TensorData::from_vec1(b),
+            TensorData::from_mat(&xp),
+            TensorData::from_mat(&yp),
+            TensorData::scalar(lr),
+        ];
+        let mut res = self.pool.call("train_step", inputs)?;
+        if res.len() != 3 {
+            return Err(RuntimeError::Shape(format!(
+                "train_step: expected 3 outputs, got {}",
+                res.len()
+            )));
+        }
+        let loss_t = res.pop().unwrap();
+        let b_t = res.pop().unwrap();
+        let w_t = res.pop().unwrap();
+        *w = w_t.into_mat()?;
+        b.copy_from_slice(&b_t.data);
+        Ok(loss_t.data[0])
+    }
+
+    fn eval_logits(&self, x: &Mat, w: &Mat, b: &[f32]) -> RtResult<Mat> {
+        let be = self.index().model.eval_batch;
+        let name = format!("eval_logits_b{be}");
+        let mut rows_out: Vec<Mat> = Vec::new();
+        let mut start = 0;
+        while start < x.rows() {
+            let take = (x.rows() - start).min(be);
+            let idxs: Vec<usize> = (start..start + take).collect();
+            let chunk = x.gather_rows(&idxs).pad_rows_to(be);
+            let inputs = vec![
+                TensorData::from_mat(&chunk),
+                TensorData::from_mat(w),
+                TensorData::from_vec1(b),
+            ];
+            let res = self.pool.call(&name, inputs)?;
+            let m = res.into_iter().next().expect("one output").into_mat()?;
+            rows_out.push(m.take_rows(take));
+            start += take;
+        }
+        let mut it = rows_out.into_iter();
+        let first = it.next().ok_or_else(|| RuntimeError::Shape("empty eval".into()))?;
+        Ok(it.fold(first, |acc, m| acc.vstack(&m)))
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn warmup_serving(&self, batch_size: usize) -> RtResult<()> {
+        let idx = self.index();
+        let variant = idx.batch_variant_for(batch_size.min(idx.max_batch()))?;
+        let mut names = vec![
+            idx.batched_name("forward", variant),
+            idx.batched_name("forward", idx.max_batch()),
+            idx.batched_name("embed", idx.max_batch()),
+            "embed_b1".to_string(), // the pipeline's width probe
+        ];
+        names.dedup();
+        self.pool.warmup(&names)
+    }
+}

@@ -1,0 +1,145 @@
+//! `AlClient` — the user-facing API of Figure 2:
+//!
+//! ```text
+//! al_client = Client(al_server_url)
+//! al_client.push_data(data_list)
+//! selected = al_client.query(budget=10)
+//! ```
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::json::{Map, Value};
+use crate::server::rpc::{self, RpcError};
+use crate::store::{Manifest, SampleRef};
+
+/// Blocking RPC client for an AL server.
+pub struct AlClient {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl AlClient {
+    /// Connect to `addr` ("host:port").
+    pub fn connect(addr: &str) -> Result<AlClient, RpcError> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(AlClient { stream, next_id: 1 })
+    }
+
+    /// Connect with a timeout.
+    pub fn connect_timeout(
+        addr: std::net::SocketAddr,
+        timeout: Duration,
+    ) -> Result<AlClient, RpcError> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)?;
+        stream.set_nodelay(true).ok();
+        Ok(AlClient { stream, next_id: 1 })
+    }
+
+    fn call(&mut self, method: &str, params: Value) -> Result<Value, RpcError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        rpc::send_request(&mut self.stream, id, method, params)?;
+        rpc::recv_response(&mut self.stream, id)
+    }
+
+    /// Liveness check.
+    pub fn ping(&mut self) -> Result<(), RpcError> {
+        let v = self.call("ping", Value::Null)?;
+        if v.as_str() == Some("pong") {
+            Ok(())
+        } else {
+            Err(RpcError::Malformed(format!("unexpected ping reply: {v:?}")))
+        }
+    }
+
+    /// Push a dataset manifest; the server starts processing in the
+    /// background. `init_labels` (parallel to `manifest.init`) lets the
+    /// server fine-tune the head on the seed set before scoring the pool.
+    pub fn push_data(
+        &mut self,
+        session: &str,
+        manifest: &Manifest,
+        init_labels: Option<&[u8]>,
+    ) -> Result<(), RpcError> {
+        let mut p = Map::new();
+        p.insert("session", Value::from(session));
+        p.insert("manifest", manifest.to_value());
+        if let Some(l) = init_labels {
+            p.insert(
+                "init_labels",
+                Value::Array(l.iter().map(|&x| Value::from(x as u64)).collect()),
+            );
+        }
+        self.call("push_data", Value::Object(p))?;
+        Ok(())
+    }
+
+    /// Session processing status string ("processing" / "ready" / ...).
+    pub fn status(&mut self, session: &str) -> Result<String, RpcError> {
+        let mut p = Map::new();
+        p.insert("session", Value::from(session));
+        let v = self.call("status", Value::Object(p))?;
+        Ok(v.get("status").and_then(Value::as_str).unwrap_or("unknown").to_string())
+    }
+
+    /// Select `budget` samples (blocking until the scan is ready).
+    /// Returns (selected refs, strategy used, select-phase millis).
+    pub fn query(
+        &mut self,
+        session: &str,
+        budget: usize,
+        strategy: Option<&str>,
+    ) -> Result<(Vec<SampleRef>, String, f64), RpcError> {
+        let mut p = Map::new();
+        p.insert("session", Value::from(session));
+        p.insert("budget", Value::from(budget));
+        if let Some(s) = strategy {
+            p.insert("strategy", Value::from(s));
+        }
+        let v = self.call("query", Value::Object(p))?;
+        let strategy = v
+            .get("strategy")
+            .and_then(Value::as_str)
+            .unwrap_or_default()
+            .to_string();
+        let select_ms = v.get("select_ms").and_then(Value::as_f64).unwrap_or(0.0);
+        let selected = v
+            .get("selected")
+            .and_then(Value::as_array)
+            .ok_or_else(|| RpcError::Malformed("missing selected".into()))?
+            .iter()
+            .map(|e| {
+                let id = e
+                    .get("id")
+                    .and_then(Value::as_usize)
+                    .ok_or_else(|| RpcError::Malformed("selected entry missing id".into()))?;
+                let uri = e
+                    .get("uri")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| RpcError::Malformed("selected entry missing uri".into()))?;
+                Ok(SampleRef { id: id as u32, uri: uri.to_string() })
+            })
+            .collect::<Result<Vec<_>, RpcError>>()?;
+        Ok((selected, strategy, select_ms))
+    }
+
+    /// Server metrics snapshot (counters/histograms/meters JSON).
+    pub fn metrics(&mut self) -> Result<Value, RpcError> {
+        self.call("metrics", Value::Null)
+    }
+
+    /// Data-cache statistics.
+    pub fn cache_stats(&mut self) -> Result<Value, RpcError> {
+        self.call("cache_stats", Value::Null)
+    }
+
+    /// Names in the server's strategy zoo.
+    pub fn strategies(&mut self) -> Result<Vec<String>, RpcError> {
+        let v = self.call("strategies", Value::Null)?;
+        Ok(v.as_array()
+            .map(|a| a.iter().filter_map(|x| x.as_str().map(str::to_string)).collect())
+            .unwrap_or_default())
+    }
+}

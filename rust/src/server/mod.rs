@@ -1,0 +1,17 @@
+//! Server–client architecture (paper §3.2, Figure 1) — "users can use AL
+//! as a web service".
+//!
+//! * [`rpc`] — wire protocol: 4-byte-LE length-prefixed JSON frames over
+//!   TCP (the gRPC substitution; DESIGN.md §Substitutions).
+//! * [`server`] — `AlServer`: sessions, background dataset processing
+//!   through the pipeline, query serving, the agent endpoint, metrics.
+//! * [`client`] — `AlClient`: the few-LoC user-facing API of Figure 2
+//!   (`push_data`, `query(budget)`).
+
+pub mod client;
+pub mod rpc;
+#[allow(clippy::module_inception)]
+pub mod server;
+
+pub use client::AlClient;
+pub use server::{AlServer, ServerDeps};

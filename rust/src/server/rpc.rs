@@ -1,0 +1,215 @@
+//! Wire protocol: length-prefixed JSON frames.
+//!
+//! Frame = `u32 little-endian payload length` + `payload` (UTF-8 JSON).
+//! Requests: `{"id": n, "method": "...", "params": {...}}`.
+//! Responses: `{"id": n, "result": ...}` or `{"id": n, "error": "..."}`.
+//! Max frame size 64 MiB (a pushed manifest for a million-sample dataset
+//! is ~60 MB; beyond that, shard the push).
+
+use std::io::{Read, Write};
+
+use crate::json::{self, Map, Value};
+
+/// Hard cap on frame payloads.
+pub const MAX_FRAME: usize = 64 * 1024 * 1024;
+
+/// Protocol-level failure.
+#[derive(Debug, thiserror::Error)]
+pub enum RpcError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("frame too large: {0} bytes (max {MAX_FRAME})")]
+    FrameTooLarge(usize),
+    #[error("malformed frame: {0}")]
+    Malformed(String),
+    #[error("remote error: {0}")]
+    Remote(String),
+    #[error("connection closed")]
+    Closed,
+}
+
+/// A parsed request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub method: String,
+    pub params: Value,
+}
+
+/// Write one frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<(), RpcError> {
+    if payload.len() > MAX_FRAME {
+        return Err(RpcError::FrameTooLarge(payload.len()));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame; `Closed` on clean EOF at a frame boundary.
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>, RpcError> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Err(RpcError::Closed),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(RpcError::FrameTooLarge(len));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Serialize + send a request.
+pub fn send_request(
+    w: &mut impl Write,
+    id: u64,
+    method: &str,
+    params: Value,
+) -> Result<(), RpcError> {
+    let mut m = Map::new();
+    m.insert("id", Value::from(id));
+    m.insert("method", Value::from(method));
+    m.insert("params", params);
+    write_frame(w, json::to_string(&Value::Object(m)).as_bytes())
+}
+
+/// Receive + parse a request frame.
+pub fn recv_request(r: &mut impl Read) -> Result<Request, RpcError> {
+    let buf = read_frame(r)?;
+    let text = std::str::from_utf8(&buf)
+        .map_err(|e| RpcError::Malformed(format!("non-utf8 frame: {e}")))?;
+    let v = json::parse(text).map_err(|e| RpcError::Malformed(e.to_string()))?;
+    let id = v
+        .get("id")
+        .and_then(Value::as_i64)
+        .ok_or_else(|| RpcError::Malformed("missing id".into()))? as u64;
+    let method = v
+        .get("method")
+        .and_then(Value::as_str)
+        .ok_or_else(|| RpcError::Malformed("missing method".into()))?
+        .to_string();
+    let params = v.get("params").cloned().unwrap_or(Value::Null);
+    Ok(Request { id, method, params })
+}
+
+/// Serialize + send a success response.
+pub fn send_result(w: &mut impl Write, id: u64, result: Value) -> Result<(), RpcError> {
+    let mut m = Map::new();
+    m.insert("id", Value::from(id));
+    m.insert("result", result);
+    write_frame(w, json::to_string(&Value::Object(m)).as_bytes())
+}
+
+/// Serialize + send an error response.
+pub fn send_error(w: &mut impl Write, id: u64, error: &str) -> Result<(), RpcError> {
+    let mut m = Map::new();
+    m.insert("id", Value::from(id));
+    m.insert("error", Value::from(error));
+    write_frame(w, json::to_string(&Value::Object(m)).as_bytes())
+}
+
+/// Receive a response for `expect_id`; remote errors surface as `Remote`.
+pub fn recv_response(r: &mut impl Read, expect_id: u64) -> Result<Value, RpcError> {
+    let buf = read_frame(r)?;
+    let text = std::str::from_utf8(&buf)
+        .map_err(|e| RpcError::Malformed(format!("non-utf8 frame: {e}")))?;
+    let v = json::parse(text).map_err(|e| RpcError::Malformed(e.to_string()))?;
+    let id = v
+        .get("id")
+        .and_then(Value::as_i64)
+        .ok_or_else(|| RpcError::Malformed("missing id".into()))? as u64;
+    if id != expect_id {
+        return Err(RpcError::Malformed(format!(
+            "response id {id} != request id {expect_id}"
+        )));
+    }
+    if let Some(e) = v.get("error").and_then(Value::as_str) {
+        return Err(RpcError::Remote(e.to_string()));
+    }
+    v.get("result")
+        .cloned()
+        .ok_or_else(|| RpcError::Malformed("missing result".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::value::obj;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello");
+        assert!(matches!(read_frame(&mut r), Err(RpcError::Closed)));
+    }
+
+    #[test]
+    fn request_response_roundtrip() {
+        let mut buf = Vec::new();
+        send_request(&mut buf, 7, "query", obj([("budget", Value::from(10))])).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        let req = recv_request(&mut r).unwrap();
+        assert_eq!(req.id, 7);
+        assert_eq!(req.method, "query");
+        assert_eq!(req.params.get("budget").unwrap().as_i64(), Some(10));
+
+        let mut buf = Vec::new();
+        send_result(&mut buf, 7, Value::from("ok")).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        assert_eq!(recv_response(&mut r, 7).unwrap().as_str(), Some("ok"));
+    }
+
+    #[test]
+    fn remote_error_surfaces() {
+        let mut buf = Vec::new();
+        send_error(&mut buf, 3, "boom").unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        assert!(matches!(recv_response(&mut r, 3), Err(RpcError::Remote(e)) if e == "boom"));
+    }
+
+    #[test]
+    fn mismatched_id_rejected() {
+        let mut buf = Vec::new();
+        send_result(&mut buf, 1, Value::Null).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        assert!(matches!(recv_response(&mut r, 2), Err(RpcError::Malformed(_))));
+    }
+
+    #[test]
+    fn oversized_frame_rejected_without_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        buf.extend_from_slice(b"xx");
+        let mut r = std::io::Cursor::new(buf);
+        assert!(matches!(read_frame(&mut r), Err(RpcError::FrameTooLarge(_))));
+    }
+
+    #[test]
+    fn malformed_json_and_missing_fields() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"not json").unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        assert!(matches!(recv_request(&mut r), Err(RpcError::Malformed(_))));
+
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"{\"id\": 1}").unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        assert!(matches!(recv_request(&mut r), Err(RpcError::Malformed(_))));
+    }
+
+    #[test]
+    fn truncated_frame_is_io_error() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&10u32.to_le_bytes());
+        buf.extend_from_slice(b"short");
+        let mut r = std::io::Cursor::new(buf);
+        assert!(matches!(read_frame(&mut r), Err(RpcError::Io(_))));
+    }
+}

@@ -1,0 +1,505 @@
+//! `AlServer` — the AL service of Figure 1.
+//!
+//! Lifecycle: `AlServer::start(config, deps)` binds the TCP listener and
+//! returns immediately; an accept thread hands each connection to a
+//! handler pool. `push_data` registers a session and kicks off background
+//! processing (optional head fine-tune on the init split, then the
+//! pipelined pool scan); `query` blocks until the scan is ready and runs
+//! the requested strategy over the scan outputs. All stages record into
+//! the shared metrics registry served by the `metrics` method.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cache::DataCache;
+use crate::config::{AlaasConfig, StrategyChoice};
+use crate::json::{Map, Value};
+use crate::metrics::Registry;
+use crate::pipeline::{run_pipeline, BatchPolicy, DataflowMode, PipelineParams};
+use crate::runtime::backend::ComputeBackend;
+use crate::server::rpc::{self, RpcError};
+use crate::store::{Manifest, SampleRef, StoreRouter};
+use crate::strategies::{self, SelectCtx};
+use crate::trainer::{self, LinearHead, TrainConfig};
+use crate::util::mat::Mat;
+use crate::util::pool::ThreadPool;
+
+/// Shared server dependencies (built once per process).
+pub struct ServerDeps {
+    pub store: Arc<StoreRouter>,
+    pub cache: Arc<DataCache>,
+    pub backend: Arc<dyn ComputeBackend>,
+    pub metrics: Arc<Registry>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum SessionStatus {
+    Processing,
+    Ready,
+    Failed(String),
+}
+
+struct Session {
+    manifest: Manifest,
+    status: SessionStatus,
+    head: LinearHead,
+    /// Pool-scan outputs (embeddings/scores in manifest pool order).
+    pool_emb: Option<Mat>,
+    pool_scores: Option<Mat>,
+    /// Indices of pool samples that failed processing (excluded from
+    /// selection).
+    failed: Vec<usize>,
+    /// Init-split embeddings (labeled context for diversity strategies).
+    init_emb: Option<Mat>,
+    scan_elapsed: Duration,
+}
+
+struct SessionSlot {
+    s: Mutex<Session>,
+    ready: Condvar,
+}
+
+struct ServerState {
+    config: AlaasConfig,
+    deps: ServerDeps,
+    sessions: Mutex<HashMap<String, Arc<SessionSlot>>>,
+    shutdown: AtomicBool,
+}
+
+/// A running AL server.
+pub struct AlServer {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl AlServer {
+    /// Bind and start serving. `config.al_worker.port = 0` binds an
+    /// ephemeral port (tests); read the real one from `addr()`.
+    pub fn start(config: AlaasConfig, deps: ServerDeps) -> std::io::Result<AlServer> {
+        let listener =
+            TcpListener::bind((config.al_worker.host.as_str(), config.al_worker.port))?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(ServerState {
+            config,
+            deps,
+            sessions: Mutex::new(HashMap::new()),
+            shutdown: AtomicBool::new(false),
+        });
+        let accept_state = state.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("alaas-accept".into())
+            .spawn(move || accept_loop(listener, accept_state))?;
+        // Pre-compile the serving artifacts in the background so the first
+        // push_data doesn't pay XLA compile time (§Perf: cold-start cut
+        // from ~10s to sub-second on the quickstart workload).
+        let warm_state = state.clone();
+        std::thread::Builder::new()
+            .name("alaas-warmup".into())
+            .spawn(move || {
+                let bs = warm_state.config.active_learning.model.batch_size;
+                if let Err(e) = warm_state.deps.backend.warmup_serving(bs) {
+                    crate::log_warn!("server", "warmup failed: {e}");
+                }
+            })
+            .ok();
+        crate::log_info!("server", "AL server listening on {addr}");
+        Ok(AlServer { addr, state, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread. In-flight handler
+    /// threads finish their current request.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        if self.state.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // poke the listener awake
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for AlServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
+    // Handler pool: bounded concurrency, queued accepts beyond it.
+    let pool = ThreadPool::new("alaas-conn", 16, 64);
+    for conn in listener.incoming() {
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                let state = state.clone();
+                pool.execute(move || handle_conn(stream, state));
+            }
+            Err(e) => {
+                crate::log_warn!("server", "accept error: {e}");
+            }
+        }
+    }
+    pool.shutdown();
+}
+
+fn handle_conn(mut stream: TcpStream, state: Arc<ServerState>) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    stream.set_nodelay(true).ok();
+    loop {
+        // Idle-wait with a bounded peek so this handler re-checks the
+        // shutdown flag instead of pinning its thread forever; once bytes
+        // are available the full frame is read with a generous timeout
+        // (a frame, once started, arrives promptly).
+        stream.set_read_timeout(Some(Duration::from_millis(250))).ok();
+        let mut probe = [0u8; 1];
+        loop {
+            if state.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            match stream.peek(&mut probe) {
+                Ok(0) => return, // clean EOF
+                Ok(_) => break,  // a frame is waiting
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    continue
+                }
+                Err(_) => return,
+            }
+        }
+        stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+        let req = match rpc::recv_request(&mut stream) {
+            Ok(r) => r,
+            Err(RpcError::Closed) => return,
+            Err(e) => {
+                crate::log_debug!("server", "bad frame from {peer}: {e}");
+                // protocol is broken on this conn; drop it
+                return;
+            }
+        };
+        let t0 = Instant::now();
+        let method = req.method.clone();
+        let result = dispatch(&state, &req.method, &req.params);
+        state.deps.metrics.time(&format!("rpc.{method}"), t0.elapsed());
+        let io = match result {
+            Ok(v) => rpc::send_result(&mut stream, req.id, v),
+            Err(e) => rpc::send_error(&mut stream, req.id, &e),
+        };
+        if io.is_err() {
+            return;
+        }
+    }
+}
+
+fn dispatch(state: &Arc<ServerState>, method: &str, params: &Value) -> Result<Value, String> {
+    match method {
+        "ping" => Ok(Value::from("pong")),
+        "push_data" => push_data(state, params),
+        "status" => status(state, params),
+        "query" => query(state, params),
+        "metrics" => Ok(state.deps.metrics.snapshot()),
+        "strategies" => Ok(Value::Array(
+            strategies::zoo_names().into_iter().map(Value::from).collect(),
+        )),
+        "cache_stats" => {
+            let mut m = Map::new();
+            m.insert("hits", Value::from(state.deps.cache.hits()));
+            m.insert("misses", Value::from(state.deps.cache.misses()));
+            m.insert("bytes", Value::from(state.deps.cache.bytes()));
+            m.insert("entries", Value::from(state.deps.cache.len()));
+            Ok(Value::Object(m))
+        }
+        other => Err(format!("unknown method '{other}'")),
+    }
+}
+
+fn str_param(params: &Value, key: &str) -> Result<String, String> {
+    params
+        .get(key)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing string param '{key}'"))
+}
+
+fn get_session(state: &ServerState, id: &str) -> Result<Arc<SessionSlot>, String> {
+    state
+        .sessions
+        .lock()
+        .unwrap()
+        .get(id)
+        .cloned()
+        .ok_or_else(|| format!("unknown session '{id}'"))
+}
+
+/// `push_data {session, manifest, init_labels?}` — register and process.
+fn push_data(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
+    let session_id = str_param(params, "session")?;
+    let manifest_v = params.get("manifest").ok_or("missing param 'manifest'")?;
+    let manifest = Manifest::from_value(manifest_v).map_err(|e| e.to_string())?;
+    let init_labels: Option<Vec<u8>> = match params.get("init_labels") {
+        None | Some(Value::Null) => None,
+        Some(Value::Array(a)) => Some(
+            a.iter()
+                .map(|v| {
+                    v.as_usize()
+                        .and_then(|u| u8::try_from(u).ok())
+                        .ok_or_else(|| "bad init label".to_string())
+                })
+                .collect::<Result<Vec<u8>, _>>()?,
+        ),
+        _ => return Err("init_labels must be an array".into()),
+    };
+    if let Some(l) = &init_labels {
+        if l.len() != manifest.init.len() {
+            return Err(format!(
+                "init_labels len {} != init split len {}",
+                l.len(),
+                manifest.init.len()
+            ));
+        }
+    }
+
+    let nc = manifest.num_classes;
+    let d_embed = 64; // trunk output width (manifest.model geometry)
+    let manifest_bg = manifest.clone();
+    let slot = Arc::new(SessionSlot {
+        s: Mutex::new(Session {
+            manifest: manifest.clone(),
+            status: SessionStatus::Processing,
+            head: LinearHead::zeros(d_embed, nc),
+            pool_emb: None,
+            pool_scores: None,
+            failed: vec![],
+            init_emb: None,
+            scan_elapsed: Duration::ZERO,
+        }),
+        ready: Condvar::new(),
+    });
+    let replaced = state
+        .sessions
+        .lock()
+        .unwrap()
+        .insert(session_id.clone(), slot.clone())
+        .is_some();
+
+    // Background processing (the paper's dataflow: the client returns
+    // immediately and later queries).
+    let bg_state = state.clone();
+    std::thread::Builder::new()
+        .name(format!("alaas-proc-{session_id}"))
+        .spawn(move || {
+            let outcome = process_session(&bg_state, &slot, &manifest_bg, init_labels);
+            let mut s = slot.s.lock().unwrap();
+            s.status = match outcome {
+                Ok(()) => SessionStatus::Ready,
+                Err(e) => SessionStatus::Failed(e),
+            };
+            slot.ready.notify_all();
+        })
+        .map_err(|e| e.to_string())?;
+
+    let mut m = Map::new();
+    m.insert("session", Value::from(session_id));
+    m.insert("pool_samples", Value::from(manifest.pool.len()));
+    m.insert("replaced", Value::Bool(replaced));
+    Ok(Value::Object(m))
+}
+
+fn pipeline_params(cfg: &AlaasConfig) -> PipelineParams {
+    PipelineParams {
+        mode: DataflowMode::Pipelined,
+        fetch_threads: cfg.al_worker.fetch_threads,
+        preprocess_threads: cfg.al_worker.preprocess_threads,
+        infer_threads: cfg.al_worker.replicas,
+        queue_depth: cfg.al_worker.queue_depth,
+        batch: BatchPolicy {
+            max_batch: cfg.active_learning.model.batch_size,
+            max_wait: Duration::from_millis(cfg.al_worker.batch_timeout_ms),
+        },
+        per_item_overhead: Duration::ZERO,
+        per_round_overhead: Duration::ZERO,
+    }
+}
+
+fn process_session(
+    state: &Arc<ServerState>,
+    slot: &Arc<SessionSlot>,
+    manifest: &Manifest,
+    init_labels: Option<Vec<u8>>,
+) -> Result<(), String> {
+    let deps = &state.deps;
+    let params = pipeline_params(&state.config);
+    // 1. optional head fine-tune on the init split
+    let mut head = LinearHead::zeros(64, manifest.num_classes);
+    let mut init_emb = None;
+    if !manifest.init.is_empty() {
+        let out = run_pipeline(
+            &manifest.init,
+            &deps.store,
+            &deps.cache,
+            &deps.backend,
+            &head,
+            &params,
+            Some(&deps.metrics),
+        )
+        .map_err(|e| e.to_string())?;
+        if let Some(labels) = init_labels {
+            let ok_rows: Vec<usize> = (0..manifest.init.len())
+                .filter(|i| !out.errors.iter().any(|(j, _)| j == i))
+                .collect();
+            let emb = out.embeddings.gather_rows(&ok_rows);
+            let lab: Vec<u8> = ok_rows.iter().map(|&i| labels[i]).collect();
+            let (h, _) = trainer::fit(
+                deps.backend.as_ref(),
+                &emb,
+                &lab,
+                manifest.num_classes,
+                &TrainConfig::default(),
+            )
+            .map_err(|e| e.to_string())?;
+            head = h;
+        }
+        init_emb = Some(out.embeddings);
+    }
+    // 2. pipelined pool scan under the (possibly fine-tuned) head
+    let out = run_pipeline(
+        &manifest.pool,
+        &deps.store,
+        &deps.cache,
+        &deps.backend,
+        &head,
+        &params,
+        Some(&deps.metrics),
+    )
+    .map_err(|e| e.to_string())?;
+
+    let mut s = slot.s.lock().unwrap();
+    s.head = head;
+    s.failed = out.errors.iter().map(|(i, _)| *i).collect();
+    s.scan_elapsed = out.elapsed;
+    s.pool_emb = Some(out.embeddings);
+    s.pool_scores = Some(out.scores);
+    s.init_emb = init_emb;
+    Ok(())
+}
+
+/// `status {session}`.
+fn status(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
+    let session_id = str_param(params, "session")?;
+    let slot = get_session(state, &session_id)?;
+    let s = slot.s.lock().unwrap();
+    let mut m = Map::new();
+    m.insert(
+        "status",
+        Value::from(match &s.status {
+            SessionStatus::Processing => "processing".to_string(),
+            SessionStatus::Ready => "ready".to_string(),
+            SessionStatus::Failed(e) => format!("failed: {e}"),
+        }),
+    );
+    m.insert("pool_samples", Value::from(s.manifest.pool.len()));
+    m.insert("failed_samples", Value::from(s.failed.len()));
+    m.insert("scan_ms", Value::Number(s.scan_elapsed.as_secs_f64() * 1e3));
+    Ok(Value::Object(m))
+}
+
+/// `query {session, budget, strategy?, wait_ms?}`.
+fn query(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
+    let session_id = str_param(params, "session")?;
+    let budget =
+        params.get("budget").and_then(Value::as_usize).ok_or("missing usize param 'budget'")?;
+    let strategy_name = match params.get("strategy").and_then(Value::as_str) {
+        Some(s) => s.to_string(),
+        None => state.config.active_learning.strategy.as_str().to_string(),
+    };
+    if strategy_name == "auto" || matches!(
+        (&state.config.active_learning.strategy, strategy_name.as_str()),
+        (StrategyChoice::Auto, "auto")
+    ) {
+        return Err(
+            "strategy 'auto' requires the agent workflow (CLI `alaas agent`): the PSHEA \
+             loop needs per-round oracle labels, which the one-shot query protocol does \
+             not carry"
+                .into(),
+        );
+    }
+    let wait_ms =
+        params.get("wait_ms").and_then(Value::as_usize).unwrap_or(120_000) as u64;
+
+    let slot = get_session(state, &session_id)?;
+    // wait for processing
+    let deadline = Instant::now() + Duration::from_millis(wait_ms);
+    let mut s = slot.s.lock().unwrap();
+    while s.status == SessionStatus::Processing {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return Err("query timed out waiting for processing".into());
+        }
+        let (guard, _) = slot.ready.wait_timeout(s, left).unwrap();
+        s = guard;
+    }
+    if let SessionStatus::Failed(e) = &s.status {
+        return Err(format!("session processing failed: {e}"));
+    }
+
+    let strat = strategies::by_name(&strategy_name)
+        .ok_or_else(|| format!("unknown strategy '{strategy_name}'"))?;
+    let pool_emb = s.pool_emb.as_ref().expect("ready session has embeddings");
+    let pool_scores = s.pool_scores.as_ref().expect("ready session has scores");
+    // exclude failed rows from the candidate set
+    let ok_rows: Vec<usize> =
+        (0..pool_emb.rows()).filter(|i| !s.failed.contains(i)).collect();
+    let cand_emb = pool_emb.gather_rows(&ok_rows);
+    let cand_scores = pool_scores.gather_rows(&ok_rows);
+    let empty = Mat::zeros(0, cand_emb.cols());
+    let labeled = s.init_emb.as_ref().unwrap_or(&empty);
+    let t0 = Instant::now();
+    let ctx = SelectCtx {
+        scores: &cand_scores,
+        embeddings: &cand_emb,
+        labeled,
+        backend: state.deps.backend.as_ref(),
+        seed: 0x5e1ec7,
+    };
+    let picked = strat.select(&ctx, budget).map_err(|e| e.to_string())?;
+    let select_elapsed = t0.elapsed();
+    state.deps.metrics.time("al.select", select_elapsed);
+    state.deps.metrics.meter("al.selected").add(picked.len() as u64);
+
+    let selected: Vec<Value> = picked
+        .iter()
+        .map(|&rel| {
+            let abs = ok_rows[rel];
+            let sr: &SampleRef = &s.manifest.pool[abs];
+            let mut m = Map::new();
+            m.insert("id", Value::from(sr.id as u64));
+            m.insert("uri", Value::from(sr.uri.clone()));
+            Value::Object(m)
+        })
+        .collect();
+    let mut m = Map::new();
+    m.insert("strategy", Value::from(strategy_name));
+    m.insert("selected", Value::Array(selected));
+    m.insert("select_ms", Value::Number(select_elapsed.as_secs_f64() * 1e3));
+    m.insert("scan_ms", Value::Number(s.scan_elapsed.as_secs_f64() * 1e3));
+    Ok(Value::Object(m))
+}

@@ -1,0 +1,415 @@
+//! Multi-round AL experiment driver — the shared engine behind Fig 4a
+//! (one-round strategy accuracy), Fig 5a (predictor evaluation) and
+//! Fig 5b (PSHEA traces), and the `AlTask` implementation the agent runs.
+//!
+//! Each *arm* (strategy) owns an independent labeled set and head, exactly
+//! like Algorithm 1's per-strategy state `d^l`: arms never share labels,
+//! and every labeling is charged to the oracle.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::agent::AlTask;
+use crate::data::{decode_image, Oracle};
+use crate::runtime::backend::{ComputeBackend, RtResult};
+use crate::strategies::{self, SelectCtx};
+use crate::trainer::{self, EvalResult, LinearHead, TrainConfig};
+use crate::util::mat::Mat;
+
+/// One strategy's independent AL state.
+struct Arm {
+    /// Absolute pool indices labeled so far, in labeling order.
+    labeled: Vec<usize>,
+    head: LinearHead,
+    accuracy: Vec<f64>,
+}
+
+/// The experiment: embedded splits + per-arm state.
+pub struct AlExperiment {
+    backend: Arc<dyn ComputeBackend>,
+    pool_emb: Mat,
+    init_emb: Mat,
+    init_labels: Vec<u8>,
+    test_emb: Mat,
+    test_labels: Vec<u8>,
+    oracle: Arc<Oracle>,
+    /// Oracle ids of pool samples (index -> dataset id).
+    pool_ids: Vec<u32>,
+    num_classes: usize,
+    pub train_cfg: TrainConfig,
+    seed: u64,
+    arms: BTreeMap<String, Arm>,
+    /// Baseline head trained on the init split (Algorithm 1 line 5:
+    /// "pre-train the deep active learning model"); computed once, every
+    /// new arm starts from it so round-0 selection is informed.
+    baseline_head: std::sync::OnceLock<(LinearHead, EvalResult)>,
+}
+
+impl AlExperiment {
+    /// Build from pre-embedded splits (tests, benches with toy data).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_embeddings(
+        backend: Arc<dyn ComputeBackend>,
+        pool_emb: Mat,
+        pool_ids: Vec<u32>,
+        init_emb: Mat,
+        init_labels: Vec<u8>,
+        test_emb: Mat,
+        test_labels: Vec<u8>,
+        oracle: Arc<Oracle>,
+        num_classes: usize,
+        train_cfg: TrainConfig,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(pool_emb.rows(), pool_ids.len());
+        assert_eq!(init_emb.rows(), init_labels.len());
+        assert_eq!(test_emb.rows(), test_labels.len());
+        AlExperiment {
+            backend,
+            pool_emb,
+            init_emb,
+            init_labels,
+            test_emb,
+            test_labels,
+            oracle,
+            pool_ids,
+            num_classes,
+            train_cfg,
+            seed,
+            arms: BTreeMap::new(),
+            baseline_head: std::sync::OnceLock::new(),
+        }
+    }
+
+    /// Build from a generated dataset: decode + embed all three splits
+    /// through the backend (this is the expensive step; done once).
+    pub fn from_generated(
+        backend: Arc<dyn ComputeBackend>,
+        gen: &crate::data::Generated,
+        num_classes: usize,
+        train_cfg: TrainConfig,
+        seed: u64,
+    ) -> RtResult<Self> {
+        let n = gen.images.len();
+        let n_init = gen.n_init;
+        let n_pool = gen.n_pool;
+        let embed_split = |lo: usize, hi: usize| -> RtResult<Mat> {
+            let mut rows = Vec::with_capacity(hi - lo);
+            for img in &gen.images[lo..hi] {
+                rows.push(decode_image(img).expect("generated image decodes"));
+            }
+            let flat: Vec<f32> = rows.concat();
+            let m = Mat::from_vec(flat, hi - lo, crate::data::IMG_DIM);
+            backend.embed(&m)
+        };
+        let init_emb = embed_split(0, n_init)?;
+        let pool_emb = embed_split(n_init, n_init + n_pool)?;
+        let test_emb = embed_split(n_init + n_pool, n)?;
+        let oracle = Arc::new(Oracle::from_labels(gen.labels.clone()));
+        let init_ids: Vec<u32> = (0..n_init as u32).collect();
+        let init_labels = oracle.label(&init_ids); // seed labels are paid for
+        let pool_ids: Vec<u32> = (n_init as u32..(n_init + n_pool) as u32).collect();
+        let test_ids: Vec<u32> = ((n_init + n_pool) as u32..n as u32).collect();
+        let test_labels = oracle.eval_labels(&test_ids);
+        Ok(Self::from_embeddings(
+            backend,
+            pool_emb,
+            pool_ids,
+            init_emb,
+            init_labels,
+            test_emb,
+            test_labels,
+            oracle,
+            num_classes,
+            train_cfg,
+            seed,
+        ))
+    }
+
+    pub fn pool_size(&self) -> usize {
+        self.pool_emb.rows()
+    }
+
+    pub fn oracle(&self) -> &Arc<Oracle> {
+        &self.oracle
+    }
+
+    /// Train the baseline head on the init split only (round-0 model,
+    /// Algorithm 1 line 5). Cached: computed once per experiment.
+    pub fn baseline(&self) -> RtResult<(LinearHead, EvalResult)> {
+        if let Some((h, a)) = self.baseline_head.get() {
+            return Ok((h.clone(), *a));
+        }
+        let (head, _) = trainer::fit(
+            self.backend.as_ref(),
+            &self.init_emb,
+            &self.init_labels,
+            self.num_classes,
+            &self.train_cfg,
+        )?;
+        let acc =
+            trainer::evaluate(self.backend.as_ref(), &head, &self.test_emb, &self.test_labels)?;
+        let _ = self.baseline_head.set((head.clone(), acc));
+        Ok((head, acc))
+    }
+
+    /// Upper bound: train on init + the whole pool ("entire dataset"
+    /// baseline of Fig 4a).
+    pub fn upper_bound(&self) -> RtResult<EvalResult> {
+        let all_ids = self.pool_ids.clone();
+        let pool_labels = self.oracle.eval_labels(&all_ids); // bound, not charged
+        let emb = self.init_emb.vstack(&self.pool_emb);
+        let mut labels = self.init_labels.clone();
+        labels.extend_from_slice(&pool_labels);
+        let (head, _) =
+            trainer::fit(self.backend.as_ref(), &emb, &labels, self.num_classes, &self.train_cfg)?;
+        trainer::evaluate(self.backend.as_ref(), &head, &self.test_emb, &self.test_labels)
+    }
+
+    fn arm_mut(&mut self, strategy: &str) -> &mut Arm {
+        if !self.arms.contains_key(strategy) {
+            // New arms start from the pre-trained baseline head so their
+            // first selection is informed (Algorithm 1 line 5).
+            let head = self
+                .baseline()
+                .map(|(h, _)| h)
+                .unwrap_or_else(|_| LinearHead::zeros(self.pool_emb.cols(), self.num_classes));
+            self.arms.insert(
+                strategy.to_string(),
+                Arm { labeled: vec![], head, accuracy: vec![] },
+            );
+        }
+        self.arms.get_mut(strategy).unwrap()
+    }
+
+    /// Accuracy history of an arm.
+    pub fn history(&self, strategy: &str) -> Option<&[f64]> {
+        self.arms.get(strategy).map(|a| a.accuracy.as_slice())
+    }
+
+    /// Labeled-set size of an arm.
+    pub fn labeled_count(&self, strategy: &str) -> usize {
+        self.arms.get(strategy).map(|a| a.labeled.len()).unwrap_or(0)
+    }
+
+    /// One AL round for `strategy` (the core of the engine). Returns the
+    /// post-round test accuracy, or None if fewer than `budget` unlabeled
+    /// pool samples remain for this arm.
+    pub fn round(&mut self, strategy: &str, budget: usize) -> RtResult<Option<EvalResult>> {
+        let strat = strategies::by_name(strategy)
+            .unwrap_or_else(|| panic!("unknown strategy '{strategy}'"));
+        // Gather this arm's available pool (indices not yet labeled).
+        let pool_rows = self.pool_emb.rows();
+        let (avail, head, n_prev_rounds) = {
+            let arm = self.arm_mut(strategy);
+            let labeled: std::collections::HashSet<usize> =
+                arm.labeled.iter().copied().collect();
+            let avail: Vec<usize> =
+                (0..pool_rows).filter(|i| !labeled.contains(i)).collect();
+            (avail, arm.head.clone(), arm.accuracy.len() as u64)
+        };
+        if avail.len() < budget {
+            return Ok(None);
+        }
+        let avail_emb = self.pool_emb.gather_rows(&avail);
+        // uncertainty statistics under the arm's current head
+        let logits = self.backend.eval_logits(&avail_emb, &head.w, &head.b)?;
+        let scores = self.backend.scores(&logits)?;
+        // labeled context = init + arm's labeled pool samples
+        let labeled_emb = {
+            let arm = self.arms.get(strategy).unwrap();
+            if arm.labeled.is_empty() {
+                self.init_emb.clone()
+            } else {
+                self.init_emb.vstack(&self.pool_emb.gather_rows(&arm.labeled))
+            }
+        };
+        let ctx = SelectCtx {
+            scores: &scores,
+            embeddings: &avail_emb,
+            labeled: &labeled_emb,
+            backend: self.backend.as_ref(),
+            seed: self.seed ^ n_prev_rounds.wrapping_mul(0x9E37_79B9),
+        };
+        let picked_rel = strat.select(&ctx, budget)?;
+        let picked_abs: Vec<usize> = picked_rel.iter().map(|&r| avail[r]).collect();
+
+        // oracle labels the selection (budget accounting)
+        let ids: Vec<u32> = picked_abs.iter().map(|&i| self.pool_ids[i]).collect();
+        let _new_labels = self.oracle.label(&ids);
+
+        // retrain from scratch on init + all labeled (paper fine-tunes the
+        // last layer each round)
+        let (emb, labels) = {
+            let arm = self.arms.get_mut(strategy).unwrap();
+            arm.labeled.extend_from_slice(&picked_abs);
+            let lab_ids: Vec<u32> = arm.labeled.iter().map(|&i| self.pool_ids[i]).collect();
+            let lab_labels = self.oracle.eval_labels(&lab_ids); // already paid above
+            let emb = self.init_emb.vstack(&self.pool_emb.gather_rows(&arm.labeled));
+            let mut labels = self.init_labels.clone();
+            labels.extend_from_slice(&lab_labels);
+            (emb, labels)
+        };
+        let (new_head, _) =
+            trainer::fit(self.backend.as_ref(), &emb, &labels, self.num_classes, &self.train_cfg)?;
+        let acc = trainer::evaluate(
+            self.backend.as_ref(),
+            &new_head,
+            &self.test_emb,
+            &self.test_labels,
+        )?;
+        let arm = self.arms.get_mut(strategy).unwrap();
+        arm.head = new_head;
+        arm.accuracy.push(acc.top1);
+        Ok(Some(acc))
+    }
+
+    /// One-round AL (the Table 2 / Fig 4a protocol): fresh arm, single
+    /// selection of `budget`, returns (top1, top5).
+    pub fn one_round(&mut self, strategy: &str, budget: usize) -> RtResult<EvalResult> {
+        self.arms.remove(strategy);
+        // a fresh arm starts from the baseline head (see arm_mut), so the
+        // selection is informed — the paper trains the initial model on
+        // the seed set before the one-round scan
+        self.round(strategy, budget)?
+            .ok_or_else(|| {
+                crate::runtime::backend::RuntimeError::Shape(format!(
+                    "pool too small for one-round budget {budget}"
+                ))
+            })
+    }
+}
+
+impl AlTask for AlExperiment {
+    fn run_round(&mut self, strategy: &str, budget: usize) -> RtResult<Option<f64>> {
+        Ok(self.round(strategy, budget)?.map(|r| r.top1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::HostBackend;
+    use crate::util::rng::Rng;
+
+    /// Toy experiment: separable embedding clusters, no image pipeline.
+    fn toy_experiment(seed: u64) -> AlExperiment {
+        let backend: Arc<dyn ComputeBackend> = Arc::new(HostBackend::new());
+        let mut rng = Rng::new(seed);
+        let c = 5;
+        let d = 8;
+        let gen_split = |rng: &mut Rng, n: usize| -> (Mat, Vec<u8>) {
+            let mut m = Mat::zeros(n, d);
+            let mut labels = Vec::with_capacity(n);
+            for i in 0..n {
+                let class = rng.below(c);
+                labels.push(class as u8);
+                let row = m.row_mut(i);
+                for j in 0..d {
+                    row[j] = 0.5 * rng.normal_f32();
+                }
+                row[class] += 2.0;
+            }
+            (m, labels)
+        };
+        let (init_emb, init_labels) = gen_split(&mut rng, 20);
+        let (pool_emb, pool_labels) = gen_split(&mut rng, 200);
+        let (test_emb, test_labels) = gen_split(&mut rng, 150);
+        // oracle over pool ids 0..200
+        let oracle = Arc::new(Oracle::from_labels(pool_labels));
+        let pool_ids: Vec<u32> = (0..200).collect();
+        AlExperiment::from_embeddings(
+            backend,
+            pool_emb,
+            pool_ids,
+            init_emb,
+            init_labels,
+            test_emb,
+            test_labels,
+            oracle,
+            c,
+            TrainConfig { epochs: 15, ..Default::default() },
+            seed,
+        )
+    }
+
+    #[test]
+    fn accuracy_improves_over_rounds() {
+        let mut exp = toy_experiment(1);
+        let (_, base) = exp.baseline().unwrap();
+        let mut accs = vec![base.top1];
+        for _ in 0..4 {
+            let r = exp.round("least_confidence", 30).unwrap().unwrap();
+            accs.push(r.top1);
+        }
+        assert!(
+            accs.last().unwrap() > accs.first().unwrap(),
+            "AL should improve accuracy: {accs:?}"
+        );
+    }
+
+    #[test]
+    fn arms_are_independent() {
+        let mut exp = toy_experiment(2);
+        exp.round("least_confidence", 40).unwrap().unwrap();
+        exp.round("entropy", 40).unwrap().unwrap();
+        assert_eq!(exp.labeled_count("least_confidence"), 40);
+        assert_eq!(exp.labeled_count("entropy"), 40);
+        // total oracle charges = both arms
+        assert_eq!(exp.oracle().budget_spent(), 80);
+    }
+
+    #[test]
+    fn pool_exhaustion_returns_none() {
+        let mut exp = toy_experiment(3);
+        assert!(exp.round("random", 150).unwrap().is_some());
+        assert!(exp.round("random", 150).unwrap().is_none(), "only 50 left");
+    }
+
+    #[test]
+    fn upper_bound_beats_baseline() {
+        let exp = toy_experiment(4);
+        let (_, base) = exp.baseline().unwrap();
+        let ub = exp.upper_bound().unwrap();
+        assert!(
+            ub.top1 >= base.top1,
+            "full data {} should be >= init-only {}",
+            ub.top1,
+            base.top1
+        );
+    }
+
+    #[test]
+    fn one_round_protocol_resets_arm() {
+        let mut exp = toy_experiment(5);
+        let a = exp.one_round("least_confidence", 50).unwrap();
+        let b = exp.one_round("least_confidence", 50).unwrap();
+        assert_eq!(exp.labeled_count("least_confidence"), 50, "fresh arm each time");
+        assert!((a.top1 - b.top1).abs() < 1e-9, "one_round deterministic");
+    }
+
+    #[test]
+    fn pshea_runs_on_real_experiment() {
+        let mut exp = toy_experiment(6);
+        let strategies: Vec<String> = vec![
+            "least_confidence".into(),
+            "random".into(),
+            "entropy".into(),
+        ];
+        let cfg = crate::agent::PsheaConfig {
+            target_accuracy: 1.1, // unreachable -> runs to round limit
+            max_budget: 100_000,
+            round_budget: 20,
+            converge_rounds: 0,
+            converge_eps: 0.0,
+            max_rounds: 4,
+            min_history: 2,
+            initial_accuracy: None,
+        };
+        let trace = crate::agent::run_pshea(&mut exp, &strategies, &cfg).unwrap();
+        assert_eq!(trace.rounds, 4);
+        assert_eq!(trace.round(0).count(), 3);
+        assert_eq!(trace.survivors.len(), 1);
+        assert!(trace.best_accuracy > 0.5, "learned something");
+    }
+}

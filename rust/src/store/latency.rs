@@ -1,0 +1,119 @@
+//! Deterministic network model for the simulated object store.
+//!
+//! Fig 4c's observation — "transmission time accounts for a large
+//! proportion of the total processing time when the batch size is small" —
+//! only reproduces if GETs pay a per-request cost plus a size-proportional
+//! cost. This model injects exactly that: `latency + size/bandwidth`,
+//! with jitter derived from a hash of the key so a run is bit-identical
+//! across repeats (no wall-clock entropy in experiments).
+
+use std::time::Duration;
+
+use crate::config::StoreConfig;
+
+/// Per-request latency + bandwidth + deterministic jitter.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    get_latency: Duration,
+    /// Seconds per byte (0 = infinite bandwidth).
+    secs_per_byte: f64,
+    jitter: f64,
+}
+
+impl LatencyModel {
+    pub fn from_config(cfg: &StoreConfig) -> Self {
+        let secs_per_byte = if cfg.bandwidth_mib_s > 0.0 {
+            1.0 / (cfg.bandwidth_mib_s * 1024.0 * 1024.0)
+        } else {
+            0.0
+        };
+        LatencyModel {
+            get_latency: Duration::from_micros(cfg.get_latency_us),
+            secs_per_byte,
+            jitter: cfg.jitter,
+        }
+    }
+
+    /// No delays at all (unit tests).
+    pub fn zero() -> Self {
+        LatencyModel { get_latency: Duration::ZERO, secs_per_byte: 0.0, jitter: 0.0 }
+    }
+
+    /// Jitter factor in [1-j, 1+j], a pure function of the key.
+    fn jitter_factor(&self, key: &str) -> f64 {
+        if self.jitter == 0.0 {
+            return 1.0;
+        }
+        // FNV-1a -> uniform in [0,1)
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in key.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+        1.0 + self.jitter * (2.0 * u - 1.0)
+    }
+
+    /// Total simulated duration of a GET of `size` bytes.
+    pub fn get_duration(&self, key: &str, size: usize) -> Duration {
+        let base = self.get_latency.as_secs_f64() + self.secs_per_byte * size as f64;
+        Duration::from_secs_f64(base * self.jitter_factor(key))
+    }
+
+    /// Block the calling thread for the simulated GET time.
+    pub fn sleep_for_get(&self, key: &str, size: usize) {
+        let d = self.get_duration(key, size);
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+
+    /// PUTs pay the same model (uploads during dataset generation bypass
+    /// this via the backing store).
+    pub fn sleep_for_put(&self, key: &str, size: usize) {
+        self.sleep_for_get(key, size);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(lat_us: u64, bw: f64, jitter: f64) -> LatencyModel {
+        LatencyModel::from_config(&StoreConfig {
+            get_latency_us: lat_us,
+            bandwidth_mib_s: bw,
+            jitter,
+        })
+    }
+
+    #[test]
+    fn duration_composition() {
+        let m = model(1000, 1.0, 0.0); // 1ms + 1 MiB/s
+        let d = m.get_duration("k", 1024 * 1024);
+        assert!((d.as_secs_f64() - 1.001).abs() < 0.01, "{d:?}");
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let m = model(1000, 0.0, 0.2);
+        let d1 = m.get_duration("key-a", 0);
+        let d2 = m.get_duration("key-a", 0);
+        assert_eq!(d1, d2, "same key same delay");
+        let base = 0.001;
+        for key in ["a", "b", "c", "dd", "eee"] {
+            let d = m.get_duration(key, 0).as_secs_f64();
+            assert!(d >= base * 0.8 - 1e-9 && d <= base * 1.2 + 1e-9, "{key}: {d}");
+        }
+        // different keys should not all collapse to the same factor
+        let da = m.get_duration("a", 0);
+        let db = m.get_duration("b", 0);
+        assert_ne!(da, db);
+    }
+
+    #[test]
+    fn zero_model_never_sleeps() {
+        let m = LatencyModel::zero();
+        assert_eq!(m.get_duration("k", 1 << 30), Duration::ZERO);
+    }
+}

@@ -1,0 +1,157 @@
+//! Dataset manifest: the index the AL client pushes to the server.
+//!
+//! A manifest lists sample URIs per split (`init` labeled seed, `pool`
+//! unlabeled candidates, `test` evaluation set) plus image geometry.
+//! Ground-truth labels are intentionally NOT part of the manifest — they
+//! live in a separate `labels.json` object that only the oracle
+//! (`data::Oracle`) reads, mirroring the human-annotator boundary in
+//! Figure 1.
+
+use crate::json::{self, Map, Value};
+
+/// One sample reference.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SampleRef {
+    /// Stable id (index into labels.json).
+    pub id: u32,
+    /// Where the raw bytes live.
+    pub uri: String,
+}
+
+/// Dataset manifest (what `push_data` transfers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub name: String,
+    pub num_classes: usize,
+    pub img_dim: usize,
+    pub init: Vec<SampleRef>,
+    pub pool: Vec<SampleRef>,
+    pub test: Vec<SampleRef>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("manifest error: {0}")]
+pub struct ManifestError(pub String);
+
+impl Manifest {
+    pub fn to_value(&self) -> Value {
+        fn split(samples: &[SampleRef]) -> Value {
+            Value::Array(
+                samples
+                    .iter()
+                    .map(|s| {
+                        let mut m = Map::new();
+                        m.insert("id", Value::from(s.id as u64));
+                        m.insert("uri", Value::from(s.uri.clone()));
+                        Value::Object(m)
+                    })
+                    .collect(),
+            )
+        }
+        let mut m = Map::new();
+        m.insert("name", Value::from(self.name.clone()));
+        m.insert("num_classes", Value::from(self.num_classes));
+        m.insert("img_dim", Value::from(self.img_dim));
+        m.insert("init", split(&self.init));
+        m.insert("pool", split(&self.pool));
+        m.insert("test", split(&self.test));
+        Value::Object(m)
+    }
+
+    pub fn from_value(v: &Value) -> Result<Manifest, ManifestError> {
+        fn split(v: &Value, name: &str) -> Result<Vec<SampleRef>, ManifestError> {
+            let arr = v
+                .get(name)
+                .and_then(Value::as_array)
+                .ok_or_else(|| ManifestError(format!("missing split '{name}'")))?;
+            arr.iter()
+                .map(|e| {
+                    let id = e
+                        .get("id")
+                        .and_then(Value::as_usize)
+                        .ok_or_else(|| ManifestError(format!("{name}: sample missing id")))?;
+                    let uri = e
+                        .get("uri")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| ManifestError(format!("{name}: sample missing uri")))?;
+                    Ok(SampleRef { id: id as u32, uri: uri.to_string() })
+                })
+                .collect()
+        }
+        Ok(Manifest {
+            name: v
+                .get("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| ManifestError("missing name".into()))?
+                .to_string(),
+            num_classes: v
+                .get("num_classes")
+                .and_then(Value::as_usize)
+                .ok_or_else(|| ManifestError("missing num_classes".into()))?,
+            img_dim: v
+                .get("img_dim")
+                .and_then(Value::as_usize)
+                .ok_or_else(|| ManifestError("missing img_dim".into()))?,
+            init: split(v, "init")?,
+            pool: split(v, "pool")?,
+            test: split(v, "test")?,
+        })
+    }
+
+    pub fn to_json(&self) -> String {
+        json::to_string_pretty(&self.to_value())
+    }
+
+    pub fn from_json(s: &str) -> Result<Manifest, ManifestError> {
+        let v = json::parse(s).map_err(|e| ManifestError(e.to_string()))?;
+        Self::from_value(&v)
+    }
+
+    pub fn total_samples(&self) -> usize {
+        self.init.len() + self.pool.len() + self.test.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> Manifest {
+        Manifest {
+            name: "cifarsim".into(),
+            num_classes: 10,
+            img_dim: 3072,
+            init: vec![SampleRef { id: 0, uri: "mem://d/init/0.bin".into() }],
+            pool: vec![
+                SampleRef { id: 1, uri: "mem://d/pool/1.bin".into() },
+                SampleRef { id: 2, uri: "mem://d/pool/2.bin".into() },
+            ],
+            test: vec![SampleRef { id: 3, uri: "mem://d/test/3.bin".into() }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = sample_manifest();
+        let back = Manifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.total_samples(), 4);
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(Manifest::from_json("{}").is_err());
+        assert!(Manifest::from_json("{\"name\":\"x\"}").is_err());
+        let no_uri = r#"{"name":"x","num_classes":2,"img_dim":4,
+            "init":[{"id":0}],"pool":[],"test":[]}"#;
+        assert!(Manifest::from_json(no_uri).is_err());
+    }
+
+    #[test]
+    fn labels_not_in_manifest() {
+        // The oracle boundary: a manifest must never carry labels.
+        let m = sample_manifest();
+        let s = m.to_json();
+        assert!(!s.contains("label"), "manifest leaked labels: {s}");
+    }
+}

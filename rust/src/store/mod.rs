@@ -1,0 +1,434 @@
+//! Object-store substrate: where pushed datasets live (Figure 1's "local
+//! disk or AWS S3").
+//!
+//! * `MemStore` — in-process, for tests and `mem://` URIs.
+//! * `LocalFsStore` — directory-backed, for `file://` URIs.
+//! * `S3SimStore` — the S3 substitution (DESIGN.md): wraps another store
+//!   and injects a deterministic per-GET latency + bandwidth model, which
+//!   is what makes the Fig 4c batch-size phenomenon reproducible without
+//!   AWS.
+//!
+//! `resolve()` maps a parsed `Uri` onto the right backend, and `Manifest`
+//! is the dataset index (sample URIs + split sizes) the client pushes.
+
+mod latency;
+mod manifest;
+
+pub use latency::LatencyModel;
+pub use manifest::{Manifest, SampleRef};
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::sync::{Arc, RwLock};
+
+use crate::config::StoreConfig;
+use crate::uri::{Scheme, Uri};
+
+/// Store operation failure.
+#[derive(Debug, thiserror::Error)]
+pub enum StoreError {
+    #[error("object not found: {0}")]
+    NotFound(String),
+    #[error("io error on {key}: {source}")]
+    Io {
+        key: String,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error("injected fault: {0}")]
+    Injected(String),
+}
+
+pub type StoreResult<T> = Result<T, StoreError>;
+
+/// Blob storage interface. Implementations must be thread-safe: the fetch
+/// stage hits them from many threads at once.
+pub trait ObjectStore: Send + Sync {
+    /// Fetch a whole object.
+    fn get(&self, key: &str) -> StoreResult<Vec<u8>>;
+    /// Store a whole object (replaces).
+    fn put(&self, key: &str, data: &[u8]) -> StoreResult<()>;
+    /// True if the object exists.
+    fn exists(&self, key: &str) -> bool;
+    /// Keys under a prefix, sorted.
+    fn list(&self, prefix: &str) -> StoreResult<Vec<String>>;
+    /// Human-readable backend tag (metrics labels).
+    fn kind(&self) -> &'static str;
+}
+
+/// In-process store (tests, `mem://`).
+#[derive(Default)]
+pub struct MemStore {
+    objects: RwLock<HashMap<String, Arc<Vec<u8>>>>,
+}
+
+impl MemStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.objects.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl ObjectStore for MemStore {
+    fn get(&self, key: &str) -> StoreResult<Vec<u8>> {
+        self.objects
+            .read()
+            .unwrap()
+            .get(key)
+            .map(|a| a.as_ref().clone())
+            .ok_or_else(|| StoreError::NotFound(key.to_string()))
+    }
+
+    fn put(&self, key: &str, data: &[u8]) -> StoreResult<()> {
+        self.objects.write().unwrap().insert(key.to_string(), Arc::new(data.to_vec()));
+        Ok(())
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.objects.read().unwrap().contains_key(key)
+    }
+
+    fn list(&self, prefix: &str) -> StoreResult<Vec<String>> {
+        let mut keys: Vec<String> = self
+            .objects
+            .read()
+            .unwrap()
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        keys.sort();
+        Ok(keys)
+    }
+
+    fn kind(&self) -> &'static str {
+        "mem"
+    }
+}
+
+/// Directory-backed store (`file://`). Keys are relative paths under the
+/// root; `..` segments are rejected.
+pub struct LocalFsStore {
+    root: PathBuf,
+}
+
+impl LocalFsStore {
+    pub fn new(root: impl Into<PathBuf>) -> std::io::Result<Self> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        Ok(LocalFsStore { root })
+    }
+
+    fn path_for(&self, key: &str) -> StoreResult<PathBuf> {
+        if key.split('/').any(|seg| seg == "..") {
+            return Err(StoreError::Io {
+                key: key.to_string(),
+                source: std::io::Error::new(std::io::ErrorKind::InvalidInput, "path escape"),
+            });
+        }
+        Ok(self.root.join(key.trim_start_matches('/')))
+    }
+}
+
+impl ObjectStore for LocalFsStore {
+    fn get(&self, key: &str) -> StoreResult<Vec<u8>> {
+        let path = self.path_for(key)?;
+        let mut f = std::fs::File::open(&path).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::NotFound {
+                StoreError::NotFound(key.to_string())
+            } else {
+                StoreError::Io { key: key.to_string(), source: e }
+            }
+        })?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)
+            .map_err(|e| StoreError::Io { key: key.to_string(), source: e })?;
+        Ok(buf)
+    }
+
+    fn put(&self, key: &str, data: &[u8]) -> StoreResult<()> {
+        let path = self.path_for(key)?;
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| StoreError::Io { key: key.to_string(), source: e })?;
+        }
+        let mut f = std::fs::File::create(&path)
+            .map_err(|e| StoreError::Io { key: key.to_string(), source: e })?;
+        f.write_all(data).map_err(|e| StoreError::Io { key: key.to_string(), source: e })
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.path_for(key).map(|p| p.exists()).unwrap_or(false)
+    }
+
+    fn list(&self, prefix: &str) -> StoreResult<Vec<String>> {
+        let mut out = Vec::new();
+        let mut stack = vec![self.root.clone()];
+        while let Some(dir) = stack.pop() {
+            let entries = match std::fs::read_dir(&dir) {
+                Ok(e) => e,
+                Err(_) => continue,
+            };
+            for e in entries.flatten() {
+                let p = e.path();
+                if p.is_dir() {
+                    stack.push(p);
+                } else if let Ok(rel) = p.strip_prefix(&self.root) {
+                    let key = rel.to_string_lossy().replace('\\', "/");
+                    if key.starts_with(prefix) {
+                        out.push(key);
+                    }
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn kind(&self) -> &'static str {
+        "localfs"
+    }
+}
+
+/// The S3 substitution: inner store + injected network model + optional
+/// fault injection (failure-rate per key pattern, for resilience tests).
+pub struct S3SimStore {
+    inner: Arc<dyn ObjectStore>,
+    latency: LatencyModel,
+    /// Keys matching this substring fail with `Injected` (tests).
+    fault_substring: RwLock<Option<String>>,
+}
+
+impl S3SimStore {
+    pub fn new(inner: Arc<dyn ObjectStore>, cfg: &StoreConfig) -> Self {
+        S3SimStore {
+            inner,
+            latency: LatencyModel::from_config(cfg),
+            fault_substring: RwLock::new(None),
+        }
+    }
+
+    /// Make every key containing `pat` fail (failure-injection tests);
+    /// `None` clears.
+    pub fn inject_fault(&self, pat: Option<String>) {
+        *self.fault_substring.write().unwrap() = pat;
+    }
+
+    pub fn latency_model(&self) -> &LatencyModel {
+        &self.latency
+    }
+}
+
+impl ObjectStore for S3SimStore {
+    fn get(&self, key: &str) -> StoreResult<Vec<u8>> {
+        if let Some(pat) = self.fault_substring.read().unwrap().as_deref() {
+            if key.contains(pat) {
+                return Err(StoreError::Injected(format!("GET {key}")));
+            }
+        }
+        let data = self.inner.get(key)?;
+        self.latency.sleep_for_get(key, data.len());
+        Ok(data)
+    }
+
+    fn put(&self, key: &str, data: &[u8]) -> StoreResult<()> {
+        self.inner.put(key, data)?;
+        self.latency.sleep_for_put(key, data.len());
+        Ok(())
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.inner.exists(key)
+    }
+
+    fn list(&self, prefix: &str) -> StoreResult<Vec<String>> {
+        let keys = self.inner.list(prefix)?;
+        self.latency.sleep_for_get(prefix, 64 * keys.len().max(1));
+        Ok(keys)
+    }
+
+    fn kind(&self) -> &'static str {
+        "s3sim"
+    }
+}
+
+/// Multi-backend router: resolves a `Uri` to (store, key).
+pub struct StoreRouter {
+    mem: Arc<MemStore>,
+    s3sim_backing: Arc<MemStore>,
+    s3sim: Arc<S3SimStore>,
+    fs_root: PathBuf,
+}
+
+impl StoreRouter {
+    /// `fs_root` anchors `file://` keys; s3sim rides on an in-process
+    /// backing store configured by `cfg`.
+    pub fn new(fs_root: impl Into<PathBuf>, cfg: &StoreConfig) -> Self {
+        let s3sim_backing = Arc::new(MemStore::new());
+        let s3sim = Arc::new(S3SimStore::new(s3sim_backing.clone() as Arc<dyn ObjectStore>, cfg));
+        StoreRouter {
+            mem: Arc::new(MemStore::new()),
+            s3sim_backing,
+            s3sim,
+            fs_root: fs_root.into(),
+        }
+    }
+
+    /// The store serving a scheme. `file://` URIs carry absolute paths, so
+    /// the LocalFsStore is rooted at `/` for them.
+    pub fn store_for(&self, scheme: Scheme) -> Arc<dyn ObjectStore> {
+        match scheme {
+            Scheme::Mem => self.mem.clone(),
+            Scheme::S3Sim => self.s3sim.clone(),
+            Scheme::File => Arc::new(
+                LocalFsStore::new(self.fs_root.clone()).expect("fs root must be creatable"),
+            ),
+        }
+    }
+
+    /// Backend key for a URI (bucket folded into the key for bucketed
+    /// schemes so one backing store serves many buckets).
+    pub fn key_for(&self, uri: &Uri) -> String {
+        match uri.scheme {
+            Scheme::File => uri.key.clone(),
+            _ => format!("{}/{}", uri.bucket, uri.key),
+        }
+    }
+
+    pub fn get(&self, uri: &Uri) -> StoreResult<Vec<u8>> {
+        self.store_for(uri.scheme).get(&self.key_for(uri))
+    }
+
+    pub fn put(&self, uri: &Uri, data: &[u8]) -> StoreResult<()> {
+        self.store_for(uri.scheme).put(&self.key_for(uri), data)
+    }
+
+    /// Direct access to the s3sim layer (fault injection, latency stats).
+    pub fn s3sim(&self) -> &S3SimStore {
+        &self.s3sim
+    }
+
+    /// Bypass the latency model (dataset generation writes fast).
+    pub fn s3sim_backing(&self) -> &MemStore {
+        &self.s3sim_backing
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn cfg_fast() -> StoreConfig {
+        StoreConfig { get_latency_us: 0, bandwidth_mib_s: 0.0, jitter: 0.0 }
+    }
+
+    #[test]
+    fn mem_store_crud() {
+        let s = MemStore::new();
+        assert!(matches!(s.get("a"), Err(StoreError::NotFound(_))));
+        s.put("a/b", b"hello").unwrap();
+        assert_eq!(s.get("a/b").unwrap(), b"hello");
+        assert!(s.exists("a/b"));
+        s.put("a/b", b"replaced").unwrap();
+        assert_eq!(s.get("a/b").unwrap(), b"replaced");
+        s.put("a/c", b"x").unwrap();
+        s.put("z", b"y").unwrap();
+        assert_eq!(s.list("a/").unwrap(), vec!["a/b".to_string(), "a/c".to_string()]);
+    }
+
+    #[test]
+    fn localfs_store_crud() {
+        let dir = std::env::temp_dir().join(format!("alaas-test-{}", std::process::id()));
+        let s = LocalFsStore::new(&dir).unwrap();
+        s.put("pool/img1.bin", &[1, 2, 3]).unwrap();
+        assert_eq!(s.get("pool/img1.bin").unwrap(), vec![1, 2, 3]);
+        assert!(s.exists("pool/img1.bin"));
+        assert!(!s.exists("pool/none.bin"));
+        assert!(matches!(s.get("missing"), Err(StoreError::NotFound(_))));
+        s.put("pool/img2.bin", &[4]).unwrap();
+        assert_eq!(s.list("pool/").unwrap().len(), 2);
+        assert!(s.get("../escape").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn s3sim_latency_is_injected() {
+        let inner = Arc::new(MemStore::new());
+        inner.put("k", &vec![0u8; 1024]).unwrap();
+        let cfg = StoreConfig { get_latency_us: 2000, bandwidth_mib_s: 0.0, jitter: 0.0 };
+        let s = S3SimStore::new(inner, &cfg);
+        let t0 = Instant::now();
+        s.get("k").unwrap();
+        assert!(t0.elapsed().as_micros() >= 1800, "latency not applied: {:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn s3sim_bandwidth_scales_with_size() {
+        let inner = Arc::new(MemStore::new());
+        inner.put("small", &vec![0u8; 1_000]).unwrap();
+        inner.put("big", &vec![0u8; 1_000_000]).unwrap();
+        // 10 MiB/s -> 1MB ~ 95ms, 1KB ~ 0.1ms
+        let cfg = StoreConfig { get_latency_us: 0, bandwidth_mib_s: 10.0, jitter: 0.0 };
+        let s = S3SimStore::new(inner, &cfg);
+        let t0 = Instant::now();
+        s.get("small").unwrap();
+        let t_small = t0.elapsed();
+        let t0 = Instant::now();
+        s.get("big").unwrap();
+        let t_big = t0.elapsed();
+        assert!(t_big > t_small * 20, "big={t_big:?} small={t_small:?}");
+    }
+
+    #[test]
+    fn s3sim_fault_injection() {
+        let inner = Arc::new(MemStore::new());
+        inner.put("x/poison", b"p").unwrap();
+        inner.put("x/fine", b"f").unwrap();
+        let s = S3SimStore::new(inner, &cfg_fast());
+        s.inject_fault(Some("poison".into()));
+        assert!(matches!(s.get("x/poison"), Err(StoreError::Injected(_))));
+        assert_eq!(s.get("x/fine").unwrap(), b"f");
+        s.inject_fault(None);
+        assert_eq!(s.get("x/poison").unwrap(), b"p");
+    }
+
+    #[test]
+    fn router_dispatches_by_scheme() {
+        let router = StoreRouter::new("/tmp", &cfg_fast());
+        let uri = Uri::parse("mem://bkt/sample.bin").unwrap();
+        router.put(&uri, b"data").unwrap();
+        assert_eq!(router.get(&uri).unwrap(), b"data");
+        // same key through s3sim is a different namespace
+        let uri2 = Uri::parse("s3sim://bkt/sample.bin").unwrap();
+        assert!(router.get(&uri2).is_err());
+        router.put(&uri2, b"s3data").unwrap();
+        assert_eq!(router.get(&uri2).unwrap(), b"s3data");
+    }
+
+    #[test]
+    fn concurrent_mem_access() {
+        let s = Arc::new(MemStore::new());
+        std::thread::scope(|sc| {
+            for t in 0..8 {
+                let s = s.clone();
+                sc.spawn(move || {
+                    for i in 0..100 {
+                        let key = format!("t{t}/k{i}");
+                        s.put(&key, &[t as u8, i as u8]).unwrap();
+                        assert_eq!(s.get(&key).unwrap(), vec![t as u8, i as u8]);
+                    }
+                });
+            }
+        });
+        assert_eq!(s.len(), 800);
+    }
+}

@@ -1,0 +1,215 @@
+//! Diverse Mini-Batch AL (DBAL) [Zhdanov '19]: the hybrid strategy.
+//!
+//! 1. prefilter the pool to the `beta * budget` most informative samples
+//!    (margin informativeness, like the original paper);
+//! 2. weighted k-means (k = budget) over their embeddings, weights =
+//!    informativeness — the backend's tiled distance kernel does the bulk
+//!    assignment blocks;
+//! 3. return the medoid (closest pool member to each centroid), dropping
+//!    duplicate medoids in favor of next-closest members.
+
+use super::{ScoreColumn, SelectCtx, Strategy};
+use crate::runtime::backend::RtResult;
+use crate::util::mat::Mat;
+use crate::util::rng::Rng;
+use crate::util::topk;
+
+/// Weighted k-means + medoid extraction over an informative prefilter.
+pub struct Dbal {
+    /// Prefilter multiplier (candidates = beta * budget).
+    pub beta: usize,
+    /// Lloyd iterations.
+    pub iters: usize,
+}
+
+impl Default for Dbal {
+    fn default() -> Self {
+        Dbal { beta: 10, iters: 8 }
+    }
+}
+
+impl Strategy for Dbal {
+    fn name(&self) -> &'static str {
+        "dbal"
+    }
+
+    fn select(&self, ctx: &SelectCtx<'_>, budget: usize) -> RtResult<Vec<usize>> {
+        let n = ctx.embeddings.rows();
+        let budget = budget.min(n);
+        if budget == 0 {
+            return Ok(vec![]);
+        }
+        // 1. informativeness = 1 - margin (higher = more uncertain)
+        let margin: Vec<f32> =
+            (0..n).map(|i| ctx.scores.get(i, ScoreColumn::Margin as usize)).collect();
+        let info: Vec<f32> = margin.iter().map(|m| 1.0 - m).collect();
+        let cand = topk::top_k_desc(&info, (self.beta * budget).min(n));
+        if cand.len() <= budget {
+            return Ok(cand);
+        }
+        let cemb = ctx.embeddings.gather_rows(&cand);
+        let weights: Vec<f32> = cand.iter().map(|&i| info[i].max(1e-3)).collect();
+
+        // 2. weighted k-means: k-means++-ish seeded init, Lloyd iterations
+        // with the bulk [candidates x centroids] distance blocks on the
+        // backend kernel.
+        let k = budget;
+        let mut rng = Rng::new(ctx.seed ^ 0xD8A1);
+        let mut centroids = init_centroids(&cemb, k, &mut rng);
+        let mut assign = vec![0usize; cand.len()];
+        for _ in 0..self.iters {
+            let d = ctx.backend.sqdist(&cemb, &centroids)?;
+            let mut changed = false;
+            for i in 0..cand.len() {
+                let row = d.row(i);
+                let mut best = 0;
+                let mut bd = f32::INFINITY;
+                for (j, &v) in row.iter().enumerate() {
+                    if v < bd {
+                        bd = v;
+                        best = j;
+                    }
+                }
+                if assign[i] != best {
+                    assign[i] = best;
+                    changed = true;
+                }
+            }
+            // weighted centroid update
+            let dim = cemb.cols();
+            let mut sums = Mat::zeros(k, dim);
+            let mut wsum = vec![0.0f32; k];
+            for i in 0..cand.len() {
+                let a = assign[i];
+                wsum[a] += weights[i];
+                let row = cemb.row(i);
+                let srow = sums.row_mut(a);
+                for (s, v) in srow.iter_mut().zip(row) {
+                    *s += weights[i] * v;
+                }
+            }
+            for j in 0..k {
+                if wsum[j] > 0.0 {
+                    let srow = sums.row_mut(j);
+                    for s in srow.iter_mut() {
+                        *s /= wsum[j];
+                    }
+                } else {
+                    // dead centroid: re-seed on a random candidate
+                    let pick = rng.below(cand.len());
+                    let row = cemb.row(pick).to_vec();
+                    sums.row_mut(j).copy_from_slice(&row);
+                }
+            }
+            centroids = sums;
+            if !changed {
+                break;
+            }
+        }
+
+        // 3. medoids: per centroid, the nearest unused candidate.
+        let d = ctx.backend.sqdist(&centroids, &cemb)?;
+        let mut used = vec![false; cand.len()];
+        let mut out = Vec::with_capacity(k);
+        for j in 0..k {
+            let row = d.row(j);
+            let mut order: Vec<usize> = (0..cand.len()).collect();
+            order.sort_unstable_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap());
+            if let Some(&pick) = order.iter().find(|&&i| !used[i]) {
+                used[pick] = true;
+                out.push(cand[pick]);
+            }
+        }
+        // duplicates removed above may leave a shortfall if k > candidates
+        debug_assert_eq!(out.len(), k.min(cand.len()));
+        Ok(out)
+    }
+}
+
+/// k-means++ style init: first uniform, then distance-weighted.
+fn init_centroids(emb: &Mat, k: usize, rng: &mut Rng) -> Mat {
+    let n = emb.rows();
+    let mut chosen = vec![rng.below(n)];
+    let mut min_d = vec![f32::INFINITY; n];
+    while chosen.len() < k {
+        let last = emb.row(*chosen.last().unwrap()).to_vec();
+        let mut total = 0.0f64;
+        for i in 0..n {
+            let d = super::kcenter::row_sqdist(emb.row(i), &last);
+            if d < min_d[i] {
+                min_d[i] = d;
+            }
+            total += min_d[i] as f64;
+        }
+        if total <= 0.0 {
+            // all points identical: fill with round-robin
+            chosen.push(chosen.len() % n);
+            continue;
+        }
+        let mut u = rng.f64() * total;
+        let mut pick = n - 1;
+        for (i, &d) in min_d.iter().enumerate() {
+            u -= d as f64;
+            if u <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        chosen.push(pick);
+    }
+    emb.gather_rows(&chosen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{assert_valid_selection, Fixture};
+    use super::super::Strategy;
+    use super::*;
+
+    #[test]
+    fn invariants_and_determinism() {
+        let fx = Fixture::new(200, 8, 31);
+        let s = Dbal::default();
+        let a = s.select(&fx.ctx(), 15).unwrap();
+        assert_valid_selection(&a, 200, 15);
+        let b = s.select(&fx.ctx(), 15).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn prefilter_respects_informativeness() {
+        // With beta=1 the selection IS the top-budget by informativeness.
+        let fx = Fixture::new(100, 8, 32);
+        let s = Dbal { beta: 1, iters: 4 };
+        let sel = s.select(&fx.ctx(), 10).unwrap();
+        let margin: Vec<f32> = (0..100).map(|i| fx.scores.get(i, 1)).collect();
+        let info: Vec<f32> = margin.iter().map(|m| 1.0 - m).collect();
+        let want = crate::util::topk::top_k_desc(&info, 10);
+        let mut a = sel.clone();
+        a.sort_unstable();
+        let mut b = want.clone();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn selection_is_diverse_across_clusters() {
+        // Uniform informativeness -> selection should spread across the 5
+        // fixture clusters rather than collapse into one.
+        let mut fx = Fixture::new(200, 8, 33);
+        for i in 0..200 {
+            let r = fx.scores.row_mut(i);
+            r[1] = 0.5; // constant margin
+        }
+        let sel = Dbal { beta: 10, iters: 8 }.select(&fx.ctx(), 10).unwrap();
+        let clusters: std::collections::HashSet<usize> = sel.iter().map(|i| i % 5).collect();
+        assert!(clusters.len() >= 4, "selection collapsed: {sel:?}");
+    }
+
+    #[test]
+    fn small_pools_degenerate_gracefully() {
+        let fx = Fixture::new(8, 4, 34);
+        let sel = Dbal::default().select(&fx.ctx(), 20).unwrap();
+        assert_valid_selection(&sel, 8, 20);
+    }
+}

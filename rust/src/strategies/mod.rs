@@ -1,0 +1,231 @@
+//! The AL Strategy Zoo (paper §3.1, Table 1; evaluated in Fig 4a/4b).
+//!
+//! Exactly the strategies the paper benchmarks:
+//!
+//! | name               | paper label | class        |
+//! |--------------------|-------------|--------------|
+//! | `random`           | Random      | lower bound  |
+//! | `least_confidence` | LC          | uncertainty  |
+//! | `margin_confidence`| MC          | uncertainty  |
+//! | `ratio_confidence` | RC          | uncertainty  |
+//! | `entropy`          | ES          | uncertainty  |
+//! | `k_center_greedy`  | KCG         | diversity    |
+//! | `core_set`         | Core-Set    | diversity    |
+//! | `dbal`             | DBAL        | hybrid       |
+//!
+//! A strategy maps pool statistics (uncertainty scores from the fused L1
+//! kernel, embeddings from the trunk) to the `budget` indices most worth
+//! labeling. Invariants enforced by tests on every strategy: selection is
+//! a subset of the pool, has exactly `min(budget, pool)` distinct indices,
+//! and is deterministic given (inputs, seed).
+
+mod coreset;
+mod dbal;
+mod kcenter;
+mod random;
+mod uncertainty;
+
+pub use coreset::CoreSet;
+pub use dbal::Dbal;
+pub use kcenter::KCenterGreedy;
+pub use random::Random;
+pub use uncertainty::{Entropy, LeastConfidence, MarginConfidence, RatioConfidence};
+
+use crate::runtime::backend::{ComputeBackend, RtResult};
+use crate::util::mat::Mat;
+
+/// Column layout of the `[N, 4]` score matrix produced by the fused
+/// uncertainty kernel. Keep in sync with python/compile/kernels/ref.py.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScoreColumn {
+    LeastConfidence = 0,
+    Margin = 1,
+    Ratio = 2,
+    Entropy = 3,
+}
+
+/// Everything a strategy may look at when selecting.
+pub struct SelectCtx<'a> {
+    /// `[N, 4]` uncertainty scores of the candidate pool.
+    pub scores: &'a Mat,
+    /// `[N, D]` embeddings of the candidate pool.
+    pub embeddings: &'a Mat,
+    /// `[L, D]` embeddings of already-labeled samples (diversity methods
+    /// avoid re-covering them). Empty matrix = nothing labeled yet.
+    pub labeled: &'a Mat,
+    /// Compute backend for bulk math (tiled distance blocks).
+    pub backend: &'a dyn ComputeBackend,
+    /// Seed for any internal randomness (k-means init, tie-breaks).
+    pub seed: u64,
+}
+
+/// A pool-based AL strategy.
+pub trait Strategy: Send + Sync {
+    /// Zoo name (stable; used in configs and RPC).
+    fn name(&self) -> &'static str;
+    /// Indices (into the pool) of the `budget` samples to label.
+    fn select(&self, ctx: &SelectCtx<'_>, budget: usize) -> RtResult<Vec<usize>>;
+}
+
+/// All zoo strategies in paper order (Fig 4's x-axis).
+pub fn zoo() -> Vec<Box<dyn Strategy>> {
+    vec![
+        Box::new(Random),
+        Box::new(LeastConfidence),
+        Box::new(MarginConfidence),
+        Box::new(RatioConfidence),
+        Box::new(Entropy),
+        Box::new(KCenterGreedy::default()),
+        Box::new(CoreSet::default()),
+        Box::new(Dbal::default()),
+    ]
+}
+
+/// Names of every zoo strategy.
+pub fn zoo_names() -> Vec<&'static str> {
+    zoo().iter().map(|s| s.name()).collect()
+}
+
+/// The 7 non-random candidates PSHEA launches (paper §4.3.3).
+pub fn candidate_names() -> Vec<&'static str> {
+    zoo_names().into_iter().filter(|n| *n != "random").collect()
+}
+
+/// Look up a strategy by zoo name.
+pub fn by_name(name: &str) -> Option<Box<dyn Strategy>> {
+    zoo().into_iter().find(|s| s.name() == name)
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::runtime::backend::HostBackend;
+    use crate::util::rng::Rng;
+
+    /// Deterministic pool with cluster structure + a labeled set.
+    pub struct Fixture {
+        pub scores: Mat,
+        pub embeddings: Mat,
+        pub labeled: Mat,
+        pub backend: HostBackend,
+    }
+
+    impl Fixture {
+        pub fn new(n: usize, d: usize, seed: u64) -> Self {
+            let mut rng = Rng::new(seed);
+            // 5 well-separated cluster centers
+            let k = 5;
+            let centers: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..d).map(|_| 3.0 * rng.normal_f32()).collect())
+                .collect();
+            let mut emb = Mat::zeros(n, d);
+            for i in 0..n {
+                let c = &centers[i % k];
+                let row = emb.row_mut(i);
+                for j in 0..d {
+                    row[j] = c[j] + 0.3 * rng.normal_f32();
+                }
+            }
+            let mut scores = Mat::zeros(n, 4);
+            for i in 0..n {
+                let u = rng.f32();
+                let row = scores.row_mut(i);
+                row[0] = u; // lc: higher = more uncertain
+                row[1] = 1.0 - u; // margin: lower = more uncertain
+                row[2] = u; // ratio
+                row[3] = u * (10.0f32).ln(); // entropy
+            }
+            let mut labeled = Mat::zeros(3, d);
+            for i in 0..3 {
+                let row = labeled.row_mut(i);
+                for j in 0..d {
+                    row[j] = centers[i][j];
+                }
+            }
+            Fixture { scores, embeddings: emb, labeled, backend: HostBackend::new() }
+        }
+
+        pub fn ctx(&self) -> SelectCtx<'_> {
+            SelectCtx {
+                scores: &self.scores,
+                embeddings: &self.embeddings,
+                labeled: &self.labeled,
+                backend: &self.backend,
+                seed: 99,
+            }
+        }
+    }
+
+    /// The invariants every strategy must uphold.
+    pub fn assert_valid_selection(sel: &[usize], pool: usize, budget: usize) {
+        assert_eq!(sel.len(), budget.min(pool), "selection size");
+        let mut s = sel.to_vec();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), sel.len(), "duplicate selections");
+        assert!(sel.iter().all(|&i| i < pool), "index out of pool");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::{assert_valid_selection, Fixture};
+    use super::*;
+
+    #[test]
+    fn zoo_contains_paper_strategies() {
+        let names = zoo_names();
+        for want in [
+            "random",
+            "least_confidence",
+            "margin_confidence",
+            "ratio_confidence",
+            "entropy",
+            "k_center_greedy",
+            "core_set",
+            "dbal",
+        ] {
+            assert!(names.contains(&want), "missing {want}");
+        }
+        assert_eq!(candidate_names().len(), 7, "PSHEA launches 7 candidates");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in zoo_names() {
+            assert_eq!(by_name(name).unwrap().name(), name);
+        }
+        assert!(by_name("nonsense").is_none());
+    }
+
+    #[test]
+    fn every_strategy_upholds_selection_invariants() {
+        let fx = Fixture::new(120, 16, 5);
+        for s in zoo() {
+            for budget in [1usize, 7, 40, 120, 500] {
+                let sel = s.select(&fx.ctx(), budget).unwrap_or_else(|e| {
+                    panic!("{} failed at budget {budget}: {e}", s.name())
+                });
+                assert_valid_selection(&sel, 120, budget);
+            }
+        }
+    }
+
+    #[test]
+    fn every_strategy_is_deterministic() {
+        let fx = Fixture::new(80, 8, 6);
+        for s in zoo() {
+            let a = s.select(&fx.ctx(), 20).unwrap();
+            let b = s.select(&fx.ctx(), 20).unwrap();
+            assert_eq!(a, b, "{} not deterministic", s.name());
+        }
+    }
+
+    #[test]
+    fn zero_budget_selects_nothing() {
+        let fx = Fixture::new(30, 8, 7);
+        for s in zoo() {
+            assert!(s.select(&fx.ctx(), 0).unwrap().is_empty(), "{}", s.name());
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! Random sampling — the paper's lower-bound baseline in Fig 4a.
+
+use super::{SelectCtx, Strategy};
+use crate::runtime::backend::RtResult;
+use crate::util::rng::Rng;
+
+/// Uniform sampling without replacement.
+pub struct Random;
+
+impl Strategy for Random {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn select(&self, ctx: &SelectCtx<'_>, budget: usize) -> RtResult<Vec<usize>> {
+        let n = ctx.scores.rows();
+        let mut rng = Rng::new(ctx.seed);
+        Ok(rng.sample_indices(n, budget.min(n)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{assert_valid_selection, Fixture};
+    use super::*;
+
+    #[test]
+    fn seed_controls_selection() {
+        let fx = Fixture::new(100, 8, 1);
+        let mut ctx = fx.ctx();
+        let a = Random.select(&ctx, 30).unwrap();
+        ctx.seed = 100;
+        let b = Random.select(&ctx, 30).unwrap();
+        assert_ne!(a, b, "different seeds should differ");
+        assert_valid_selection(&a, 100, 30);
+        assert_valid_selection(&b, 100, 30);
+    }
+
+    #[test]
+    fn covers_pool_roughly_uniformly() {
+        let fx = Fixture::new(50, 4, 2);
+        let mut counts = vec![0u32; 50];
+        for seed in 0..200 {
+            let mut ctx = fx.ctx();
+            ctx.seed = seed;
+            for i in Random.select(&ctx, 10).unwrap() {
+                counts[i] += 1;
+            }
+        }
+        // each index expected 40 times; allow generous spread
+        assert!(counts.iter().all(|&c| c > 10 && c < 90), "{counts:?}");
+    }
+}

@@ -1,0 +1,244 @@
+//! Last-layer fine-tuning — the paper's model-update step ("we only
+//! fine-tune ResNet-18's last layer with the AL-selected and human-labeled
+//! samples", §4.1).
+//!
+//! The head is a softmax-regression layer `(w: [D, C], b: [C])` trained on
+//! trunk embeddings via the AOT `train_step` artifact (or the host
+//! reference — anything implementing `ComputeBackend`). Evaluation
+//! reports top-1/top-5, the two columns of Table 2.
+
+use crate::runtime::backend::{ComputeBackend, RtResult};
+use crate::util::mat::Mat;
+use crate::util::rng::Rng;
+
+/// The fine-tuned classifier head.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinearHead {
+    pub w: Mat,
+    pub b: Vec<f32>,
+}
+
+impl LinearHead {
+    pub fn zeros(embed_dim: usize, num_classes: usize) -> Self {
+        LinearHead { w: Mat::zeros(embed_dim, num_classes), b: vec![0.0; num_classes] }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.b.len()
+    }
+}
+
+/// Fine-tuning hyperparameters (defaults follow the paper's simple setup).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    /// Per-epoch multiplicative LR decay.
+    pub lr_decay: f32,
+    /// Minibatch size (must be <= the compiled train_batch, 64).
+    pub batch: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { epochs: 30, lr: 0.8, lr_decay: 0.97, batch: 64, seed: 0 }
+    }
+}
+
+/// Accuracy pair reported everywhere (Table 2 columns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalResult {
+    pub top1: f64,
+    pub top5: f64,
+    pub n: usize,
+}
+
+/// Train a head from scratch on labeled embeddings.
+///
+/// Returns the head and the per-epoch mean losses (the PSHEA predictor and
+/// the convergence checks consume accuracy, but losses make the examples'
+/// logs informative).
+pub fn fit(
+    backend: &dyn ComputeBackend,
+    embeddings: &Mat,
+    labels: &[u8],
+    num_classes: usize,
+    cfg: &TrainConfig,
+) -> RtResult<(LinearHead, Vec<f32>)> {
+    assert_eq!(embeddings.rows(), labels.len(), "embeddings/labels length");
+    let n = labels.len();
+    let mut head = LinearHead::zeros(embeddings.cols(), num_classes);
+    if n == 0 {
+        return Ok((head, vec![]));
+    }
+    let mut rng = Rng::new(cfg.seed ^ 0x7ea1);
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut lr = cfg.lr;
+    let mut losses = Vec::with_capacity(cfg.epochs);
+    for _epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        let mut epoch_loss = 0.0f64;
+        let mut batches = 0usize;
+        for chunk in order.chunks(cfg.batch) {
+            let x = embeddings.gather_rows(chunk);
+            let mut y = Mat::zeros(chunk.len(), num_classes);
+            for (r, &i) in chunk.iter().enumerate() {
+                y.set(r, labels[i] as usize, 1.0);
+            }
+            let loss = backend.train_step(&mut head.w, &mut head.b, &x, &y, lr)?;
+            epoch_loss += loss as f64;
+            batches += 1;
+        }
+        losses.push((epoch_loss / batches.max(1) as f64) as f32);
+        lr *= cfg.lr_decay;
+    }
+    Ok((head, losses))
+}
+
+/// Top-1/top-5 accuracy of `head` on labeled embeddings.
+pub fn evaluate(
+    backend: &dyn ComputeBackend,
+    head: &LinearHead,
+    embeddings: &Mat,
+    labels: &[u8],
+) -> RtResult<EvalResult> {
+    assert_eq!(embeddings.rows(), labels.len(), "embeddings/labels length");
+    let n = labels.len();
+    if n == 0 {
+        return Ok(EvalResult { top1: 0.0, top5: 0.0, n: 0 });
+    }
+    let logits = backend.eval_logits(embeddings, &head.w, &head.b)?;
+    let c = head.num_classes();
+    let k = 5.min(c);
+    let mut top1 = 0usize;
+    let mut top5 = 0usize;
+    for i in 0..n {
+        let row = logits.row(i);
+        let truth = labels[i] as usize;
+        let truth_logit = row[truth];
+        // rank of the true class = #logits strictly greater (ties favor
+        // the true class, deterministic across backends)
+        let rank = row.iter().filter(|&&v| v > truth_logit).count();
+        if rank == 0 {
+            top1 += 1;
+        }
+        if rank < k {
+            top5 += 1;
+        }
+    }
+    Ok(EvalResult { top1: top1 as f64 / n as f64, top5: top5 as f64 / n as f64, n })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::HostBackend;
+
+    /// Linearly separable toy embeddings: class k concentrated on dim k.
+    fn toy(n: usize, d: usize, c: usize, seed: u64) -> (Mat, Vec<u8>) {
+        let mut rng = Rng::new(seed);
+        let mut emb = Mat::zeros(n, d);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = rng.below(c);
+            labels.push(class as u8);
+            let row = emb.row_mut(i);
+            for j in 0..d {
+                row[j] = 0.3 * rng.normal_f32();
+            }
+            row[class] += 2.0;
+        }
+        (emb, labels)
+    }
+
+    #[test]
+    fn fit_reaches_high_accuracy_on_separable_data() {
+        let backend = HostBackend::new();
+        let (emb, labels) = toy(400, 16, 10, 1);
+        let (head, losses) =
+            fit(&backend, &emb, &labels, 10, &TrainConfig::default()).unwrap();
+        assert!(losses[0] > losses[losses.len() - 1], "loss must fall: {losses:?}");
+        let acc = evaluate(&backend, &head, &emb, &labels).unwrap();
+        assert!(acc.top1 > 0.9, "top1 = {}", acc.top1);
+        assert!(acc.top5 >= acc.top1);
+        assert!(acc.top5 > 0.99, "top5 = {}", acc.top5);
+    }
+
+    /// Harder toy: weak signal, strong noise — accuracy is data-limited.
+    fn hard_toy(n: usize, d: usize, c: usize, seed: u64) -> (Mat, Vec<u8>) {
+        let mut rng = Rng::new(seed);
+        let mut emb = Mat::zeros(n, d);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = rng.below(c);
+            labels.push(class as u8);
+            let row = emb.row_mut(i);
+            for j in 0..d {
+                row[j] = 1.0 * rng.normal_f32();
+            }
+            row[class] += 0.8;
+        }
+        (emb, labels)
+    }
+
+    #[test]
+    fn more_data_helps_generalization() {
+        let backend = HostBackend::new();
+        let (test_emb, test_labels) = hard_toy(800, 16, 10, 99);
+        let mut accs = vec![];
+        for n in [30usize, 600] {
+            let (emb, labels) = hard_toy(n, 16, 10, 7);
+            let cfg = TrainConfig { epochs: 20, ..Default::default() };
+            let (head, _) = fit(&backend, &emb, &labels, 10, &cfg).unwrap();
+            accs.push(evaluate(&backend, &head, &test_emb, &test_labels).unwrap().top1);
+        }
+        assert!(
+            accs[1] > accs[0] + 0.02,
+            "600 samples should clearly beat 30: {accs:?}"
+        );
+    }
+
+    #[test]
+    fn fit_is_deterministic() {
+        let backend = HostBackend::new();
+        let (emb, labels) = toy(100, 8, 4, 3);
+        let cfg = TrainConfig { epochs: 5, ..Default::default() };
+        let (h1, l1) = fit(&backend, &emb, &labels, 4, &cfg).unwrap();
+        let (h2, l2) = fit(&backend, &emb, &labels, 4, &cfg).unwrap();
+        assert_eq!(h1, h2);
+        assert_eq!(l1, l2);
+    }
+
+    #[test]
+    fn empty_training_set_gives_zero_head() {
+        let backend = HostBackend::new();
+        let emb = Mat::zeros(0, 8);
+        let (head, losses) =
+            fit(&backend, &emb, &[], 4, &TrainConfig::default()).unwrap();
+        assert_eq!(head, LinearHead::zeros(8, 4));
+        assert!(losses.is_empty());
+    }
+
+    #[test]
+    fn evaluate_top5_with_fewer_classes_than_5() {
+        let backend = HostBackend::new();
+        let (emb, labels) = toy(50, 8, 3, 4);
+        let head = LinearHead::zeros(8, 3);
+        let r = evaluate(&backend, &head, &emb, &labels).unwrap();
+        // zero head: all logits tie, rank = 0 for everyone -> top1 = 100%
+        // by the tie convention; top5 covers all 3 classes.
+        assert_eq!(r.top1, 1.0);
+        assert_eq!(r.top5, 1.0);
+        assert_eq!(r.n, 50);
+    }
+
+    #[test]
+    fn tail_minibatch_smaller_than_batch_is_fine() {
+        let backend = HostBackend::new();
+        let (emb, labels) = toy(70, 8, 4, 5); // 70 = 64 + 6 tail
+        let cfg = TrainConfig { epochs: 3, batch: 64, ..Default::default() };
+        let (_, losses) = fit(&backend, &emb, &labels, 4, &cfg).unwrap();
+        assert_eq!(losses.len(), 3);
+    }
+}

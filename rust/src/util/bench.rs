@@ -1,0 +1,196 @@
+//! In-tree micro/bench harness (criterion is not in the offline registry).
+//!
+//! Every `rust/benches/*.rs` target is a `harness = false` binary built on
+//! this module: `Bench::new("table2").row(...)` measures a closure with
+//! warmup + repeated timed runs and prints aligned rows, which
+//! EXPERIMENTS.md captures verbatim. Statistical summary: mean, p50, p95,
+//! min over runs; throughput helpers convert to items/sec.
+
+use std::time::{Duration, Instant};
+
+/// Result of measuring one closure.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// Per-run wall times, sorted ascending.
+    pub runs: Vec<Duration>,
+}
+
+impl Sample {
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.runs.iter().sum();
+        total / self.runs.len().max(1) as u32
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.runs.is_empty() {
+            return Duration::ZERO;
+        }
+        let idx = ((self.runs.len() - 1) as f64 * p).round() as usize;
+        self.runs[idx]
+    }
+
+    pub fn min(&self) -> Duration {
+        self.runs.first().copied().unwrap_or_default()
+    }
+
+    pub fn max(&self) -> Duration {
+        self.runs.last().copied().unwrap_or_default()
+    }
+
+    /// Population standard deviation in seconds.
+    pub fn std_secs(&self) -> f64 {
+        let n = self.runs.len().max(1) as f64;
+        let mean = self.mean().as_secs_f64();
+        let var = self
+            .runs
+            .iter()
+            .map(|d| {
+                let x = d.as_secs_f64() - mean;
+                x * x
+            })
+            .sum::<f64>()
+            / n;
+        var.sqrt()
+    }
+
+    /// items/sec given `items` processed per run.
+    pub fn throughput(&self, items: u64) -> f64 {
+        let m = self.mean().as_secs_f64();
+        if m <= 0.0 {
+            return f64::INFINITY;
+        }
+        items as f64 / m
+    }
+}
+
+/// Measure `f` `runs` times after `warmup` unmeasured calls.
+pub fn measure(warmup: usize, runs: usize, mut f: impl FnMut()) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(runs);
+    for _ in 0..runs.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort_unstable();
+    Sample { runs: times }
+}
+
+/// Adaptive measurement: run `f` until `budget` elapses (at least 3 runs).
+pub fn measure_for(budget: Duration, mut f: impl FnMut()) -> Sample {
+    let start = Instant::now();
+    let mut times = Vec::new();
+    while times.len() < 3 || start.elapsed() < budget {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+        if times.len() >= 1000 {
+            break;
+        }
+    }
+    times.sort_unstable();
+    Sample { runs: times }
+}
+
+/// Pretty duration: auto-unit ns/us/ms/s.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Table printer for bench targets: aligned columns, Markdown-ish output.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n=== {} ===", self.title);
+        let hdr: Vec<String> =
+            self.headers.iter().enumerate().map(|(i, h)| format!("{:w$}", h, w = widths[i])).collect();
+        println!("| {} |", hdr.join(" | "));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            let cells: Vec<String> =
+                row.iter().enumerate().map(|(i, c)| format!("{:w$}", c, w = widths[i])).collect();
+            println!("| {} |", cells.join(" | "));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_stats() {
+        let s = Sample {
+            runs: vec![
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+                Duration::from_millis(30),
+            ],
+        };
+        assert_eq!(s.mean(), Duration::from_millis(20));
+        assert_eq!(s.percentile(0.5), Duration::from_millis(20));
+        assert_eq!(s.min(), Duration::from_millis(10));
+        assert!((s.throughput(100) - 5000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn measure_counts_runs() {
+        let mut hits = 0;
+        let s = measure(2, 5, || hits += 1);
+        assert_eq!(hits, 7);
+        assert_eq!(s.runs.len(), 5);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(&["only-one".into()])
+        }));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,307 @@
+//! Bounded MPMC channel substrate (no `tokio`/`crossbeam-channel` offline).
+//!
+//! This is the backbone of the stage-level pipeline (Fig 3c): each stage
+//! boundary is one of these channels, and the bound is the backpressure —
+//! a fast downloader cannot run arbitrarily far ahead of the embedding
+//! workers, which is exactly the waiting-time control the paper's pipeline
+//! section describes.
+//!
+//! Semantics:
+//! * `send` blocks while full, fails with `SendError` once all receivers
+//!   are gone or the channel is closed.
+//! * `recv` blocks while empty, returns `None` once the channel is closed
+//!   (or all senders dropped) *and* drained.
+//! * Any number of `Sender`/`Receiver` clones; drop tracking is automatic.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Error returned by `send` when the channel can no longer accept items.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+struct Shared<T> {
+    q: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    senders: AtomicUsize,
+    receivers: AtomicUsize,
+    cap: usize,
+}
+
+struct Inner<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+/// Sending half of a bounded channel.
+pub struct Sender<T>(Arc<Shared<T>>);
+/// Receiving half of a bounded channel.
+pub struct Receiver<T>(Arc<Shared<T>>);
+
+/// Create a bounded channel with capacity `cap` (>= 1).
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(cap >= 1, "channel capacity must be >= 1");
+    let shared = Arc::new(Shared {
+        q: Mutex::new(Inner { buf: VecDeque::with_capacity(cap), closed: false }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+        senders: AtomicUsize::new(1),
+        receivers: AtomicUsize::new(1),
+        cap,
+    });
+    (Sender(shared.clone()), Receiver(shared))
+}
+
+impl<T> Sender<T> {
+    /// Blocking send. Returns the value back if the channel is closed or
+    /// every receiver is gone.
+    pub fn send(&self, v: T) -> Result<(), SendError<T>> {
+        let sh = &self.0;
+        let mut g = sh.q.lock().unwrap();
+        loop {
+            if g.closed || sh.receivers.load(Ordering::Acquire) == 0 {
+                return Err(SendError(v));
+            }
+            if g.buf.len() < sh.cap {
+                g.buf.push_back(v);
+                drop(g);
+                sh.not_empty.notify_one();
+                return Ok(());
+            }
+            g = sh.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking send; `Err` carries the value back when full/closed.
+    pub fn try_send(&self, v: T) -> Result<(), SendError<T>> {
+        let sh = &self.0;
+        let mut g = sh.q.lock().unwrap();
+        if g.closed || sh.receivers.load(Ordering::Acquire) == 0 || g.buf.len() >= sh.cap {
+            return Err(SendError(v));
+        }
+        g.buf.push_back(v);
+        drop(g);
+        sh.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Close the channel: receivers drain what's buffered, then get `None`.
+    pub fn close(&self) {
+        let mut g = self.0.q.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.0.not_empty.notify_all();
+        self.0.not_full.notify_all();
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `None` once closed (or senderless) and drained.
+    pub fn recv(&self) -> Option<T> {
+        let sh = &self.0;
+        let mut g = sh.q.lock().unwrap();
+        loop {
+            if let Some(v) = g.buf.pop_front() {
+                drop(g);
+                sh.not_full.notify_one();
+                return Some(v);
+            }
+            if g.closed || sh.senders.load(Ordering::Acquire) == 0 {
+                return None;
+            }
+            g = sh.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let sh = &self.0;
+        let mut g = sh.q.lock().unwrap();
+        let v = g.buf.pop_front();
+        if v.is_some() {
+            drop(g);
+            sh.not_full.notify_one();
+        }
+        v
+    }
+
+    /// Receive with a deadline; `Ok(None)` means closed+drained, `Err(())`
+    /// means timed out.
+    pub fn recv_timeout(&self, timeout: std::time::Duration) -> Result<Option<T>, ()> {
+        let sh = &self.0;
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = sh.q.lock().unwrap();
+        loop {
+            if let Some(v) = g.buf.pop_front() {
+                drop(g);
+                sh.not_full.notify_one();
+                return Ok(Some(v));
+            }
+            if g.closed || sh.senders.load(Ordering::Acquire) == 0 {
+                return Ok(None);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(());
+            }
+            let (guard, res) = sh.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+            if res.timed_out() && g.buf.is_empty() {
+                if g.closed || sh.senders.load(Ordering::Acquire) == 0 {
+                    return Ok(None);
+                }
+                return Err(());
+            }
+        }
+    }
+
+    /// Number of currently buffered items (racy; for metrics only).
+    pub fn len(&self) -> usize {
+        self.0.q.lock().unwrap().buf.len()
+    }
+
+    /// True when no items are buffered (racy; for metrics only).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.0.senders.fetch_add(1, Ordering::AcqRel);
+        Sender(self.0.clone())
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.0.receivers.fetch_add(1, Ordering::AcqRel);
+        Receiver(self.0.clone())
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        if self.0.senders.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.0.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        if self.0.receivers.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.0.not_full.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_single_thread() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let got: Vec<i32> = std::iter::from_fn(|| rx.recv()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn blocks_at_capacity_then_resumes() {
+        let (tx, rx) = bounded(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert!(tx.try_send(3).is_err(), "full channel rejects try_send");
+        let h = thread::spawn(move || tx.send(3)); // blocks until a recv
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv(), Some(1));
+        h.join().unwrap().unwrap();
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), Some(3));
+    }
+
+    #[test]
+    fn recv_none_after_all_senders_drop() {
+        let (tx, rx) = bounded::<i32>(4);
+        let tx2 = tx.clone();
+        tx.send(1).unwrap();
+        drop(tx);
+        tx2.send(2).unwrap();
+        drop(tx2);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn send_fails_after_all_receivers_drop() {
+        let (tx, rx) = bounded::<i32>(4);
+        drop(rx);
+        assert_eq!(tx.send(7), Err(SendError(7)));
+    }
+
+    #[test]
+    fn close_drains_then_stops() {
+        let (tx, rx) = bounded(4);
+        tx.send(1).unwrap();
+        tx.close();
+        assert!(tx.send(2).is_err());
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn mpmc_no_loss_no_dup() {
+        let (tx, rx) = bounded::<u64>(16);
+        let producers = 4;
+        let per = 500u64;
+        let mut handles = vec![];
+        for p in 0..producers {
+            let tx = tx.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..per {
+                    tx.send(p * 10_000 + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut consumers = vec![];
+        for _ in 0..3 {
+            let rx = rx.clone();
+            consumers.push(thread::spawn(move || {
+                let mut got = vec![];
+                while let Some(v) = rx.recv() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        drop(rx);
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut all: Vec<u64> = consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        let mut want: Vec<u64> =
+            (0..producers).flat_map(|p| (0..per).map(move |i| p * 10_000 + i)).collect();
+        want.sort_unstable();
+        assert_eq!(all, want);
+    }
+
+    #[test]
+    fn recv_timeout_times_out_then_succeeds() {
+        let (tx, rx) = bounded::<i32>(1);
+        assert_eq!(rx.recv_timeout(Duration::from_millis(10)), Err(()));
+        tx.send(5).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(10)), Ok(Some(5)));
+    }
+}

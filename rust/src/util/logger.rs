@@ -1,0 +1,109 @@
+//! Tiny leveled logger (no `log`/`env_logger` wiring needed at runtime).
+//!
+//! Level comes from `ALAAS_LOG` (`error|warn|info|debug|trace`, default
+//! `info`). Output goes to stderr so bench tables on stdout stay clean.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+
+fn max_level() -> u8 {
+    let v = MAX_LEVEL.load(Ordering::Relaxed);
+    if v != 255 {
+        return v;
+    }
+    let from_env = std::env::var("ALAAS_LOG")
+        .ok()
+        .and_then(|s| Level::parse(&s))
+        .unwrap_or(Level::Info);
+    MAX_LEVEL.store(from_env as u8, Ordering::Relaxed);
+    from_env as u8
+}
+
+/// Override the level programmatically (tests, CLI `--verbose`).
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// True when `level` would be emitted.
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= max_level()
+}
+
+/// Emit a log line. Prefer the `log_*!` macros.
+pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let now = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    let secs = now.as_secs();
+    let millis = now.subsec_millis();
+    eprintln!("[{secs}.{millis:03} {} {target}] {msg}", level.as_str());
+}
+
+#[macro_export]
+macro_rules! log_error { ($t:expr, $($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Error, $t, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($t:expr, $($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Warn, $t, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_info { ($t:expr, $($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Info, $t, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($t:expr, $($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Debug, $t, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($t:expr, $($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Trace, $t, format_args!($($arg)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Error < Level::Trace);
+    }
+
+    #[test]
+    fn set_level_gates_enabled() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+}

@@ -1,0 +1,151 @@
+//! Minimal dense row-major f32 matrix used across the coordinator
+//! (embeddings `[N, D]`, scores `[N, 4]`, head weights `[D, C]`).
+//!
+//! Not a linear-algebra library: the heavy math lives in the AOT-compiled
+//! XLA artifacts; this type only carries data between stages and hosts the
+//! small host-fallback kernels in `runtime::host`.
+
+/// Dense row-major f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Mat {
+    /// Zero-filled `rows x cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Wrap an existing buffer; `data.len()` must equal `rows * cols`.
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "Mat::from_vec shape mismatch");
+        Mat { data, rows, cols }
+    }
+
+    /// Build row-by-row from an iterator of row slices.
+    pub fn from_rows<'a>(rows: impl IntoIterator<Item = &'a [f32]>) -> Self {
+        let mut data = Vec::new();
+        let mut n = 0usize;
+        let mut cols = 0usize;
+        for r in rows {
+            if n == 0 {
+                cols = r.len();
+            }
+            assert_eq!(r.len(), cols, "ragged rows");
+            data.extend_from_slice(r);
+            n += 1;
+        }
+        Mat { data, rows: n, cols }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Borrow row `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row `i`.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// New matrix containing the given rows (gather).
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Vec::with_capacity(idx.len() * self.cols);
+        for &i in idx {
+            out.extend_from_slice(self.row(i));
+        }
+        Mat::from_vec(out, idx.len(), self.cols)
+    }
+
+    /// Vertically stack `self` on top of `other` (same cols).
+    pub fn vstack(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "vstack col mismatch");
+        let mut data = Vec::with_capacity(self.data.len() + other.data.len());
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Mat::from_vec(data, self.rows + other.rows, self.cols)
+    }
+
+    /// Copy with rows of zeros appended until `rows == n` (batch padding).
+    pub fn pad_rows_to(&self, n: usize) -> Mat {
+        assert!(n >= self.rows, "pad_rows_to shrinks");
+        let mut data = self.data.clone();
+        data.resize(n * self.cols, 0.0);
+        Mat::from_vec(data, n, self.cols)
+    }
+
+    /// First `n` rows as a new matrix (batch un-padding).
+    pub fn take_rows(&self, n: usize) -> Mat {
+        assert!(n <= self.rows, "take_rows grows");
+        Mat::from_vec(self.data[..n * self.cols].to_vec(), n, self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_accessors() {
+        let m = Mat::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.get(0, 2), 3.0);
+    }
+
+    #[test]
+    fn gather_and_stack() {
+        let m = Mat::from_vec((0..12).map(|x| x as f32).collect(), 4, 3);
+        let g = m.gather_rows(&[3, 0]);
+        assert_eq!(g.row(0), &[9.0, 10.0, 11.0]);
+        assert_eq!(g.row(1), &[0.0, 1.0, 2.0]);
+        let s = g.vstack(&m.gather_rows(&[1]));
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.row(2), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn pad_take_roundtrip() {
+        let m = Mat::from_vec(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        let p = m.pad_rows_to(5);
+        assert_eq!(p.rows(), 5);
+        assert_eq!(p.row(4), &[0.0, 0.0]);
+        assert_eq!(p.take_rows(2), m);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn from_vec_checks_shape() {
+        Mat::from_vec(vec![1.0; 5], 2, 3);
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared substrates: everything the offline crate registry forced us to
+//! build in-tree (DESIGN.md §Substitutions) plus small data utilities.
+
+pub mod bench;
+pub mod chan;
+pub mod logger;
+pub mod mat;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod topk;

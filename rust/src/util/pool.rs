@@ -1,0 +1,207 @@
+//! Thread-pool substrate (no `tokio`/`rayon` offline).
+//!
+//! A fixed set of workers pulling boxed jobs from a bounded channel. Used
+//! for the fetch/preprocess stages of the pipeline and for the RPC server's
+//! connection handling. Panics inside a job are caught and counted so a
+//! poisoned sample cannot take a stage down (failure-injection tests rely
+//! on this).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::chan::{bounded, Sender};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    panics: Arc<AtomicU64>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (>= 1) with `queue` pending-job slots.
+    pub fn new(name: &str, n: usize, queue: usize) -> Self {
+        assert!(n >= 1, "thread pool needs >= 1 worker");
+        let (tx, rx) = bounded::<Job>(queue.max(1));
+        let panics = Arc::new(AtomicU64::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = rx.clone();
+                let panics = panics.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = rx.recv() {
+                            if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                panics.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, panics }
+    }
+
+    /// Submit a job; blocks if the queue is full (backpressure).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(f))
+            .unwrap_or_else(|_| panic!("thread pool queue closed"));
+    }
+
+    /// Number of jobs that panicked since startup.
+    pub fn panic_count(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting jobs, run out the queue, join all workers.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            tx.close();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Run `f` over `items` with up to `n` scoped workers, collecting results
+/// in input order. Panics propagate. This is the parallel-map used by the
+/// dataset generator and the distance tiling driver.
+pub fn scoped_map<T: Sync, R: Send>(
+    n: usize,
+    items: &[T],
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    let n = n.max(1).min(items.len().max(1));
+    let next = AtomicU64::new(0);
+    // Each worker collects (index, result) pairs; merged and re-ordered at
+    // the end. Work-stealing via the shared atomic counter keeps load even
+    // when per-item cost varies (e.g. store GETs with latency jitter).
+    let mut parts: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut got = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed) as usize;
+                        if i >= items.len() {
+                            break;
+                        }
+                        got.push((i, f(&items[i])));
+                    }
+                    got
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("scoped_map worker")).collect()
+    });
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    for part in parts.drain(..) {
+        for (i, r) in part {
+            out[i] = Some(r);
+        }
+    }
+    out.into_iter().map(|o| o.expect("scoped_map slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Mutex;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new("t", 4, 8);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn survives_panicking_jobs() {
+        let pool = ThreadPool::new("t", 2, 4);
+        let ok = Arc::new(AtomicUsize::new(0));
+        for i in 0..20 {
+            let ok = ok.clone();
+            pool.execute(move || {
+                if i % 3 == 0 {
+                    panic!("injected failure");
+                }
+                ok.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        let panics_expected = (0..20).filter(|i| i % 3 == 0).count() as u64;
+        // shutdown drains the queue first
+        let panics = {
+            let p = pool.panics.clone();
+            pool.shutdown();
+            p.load(Ordering::Relaxed)
+        };
+        assert_eq!(panics, panics_expected);
+        assert_eq!(ok.load(Ordering::Relaxed), 20 - panics_expected as usize);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new("t", 2, 4);
+            for _ in 0..10 {
+                let h = hits.clone();
+                pool.execute(move || {
+                    h.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        } // drop = shutdown
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn scoped_map_preserves_order() {
+        let items: Vec<u64> = (0..200).collect();
+        let out = scoped_map(8, &items, |&x| x * x);
+        assert_eq!(out, items.iter().map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_empty_and_single() {
+        assert!(scoped_map(4, &Vec::<u32>::new(), |&x| x).is_empty());
+        assert_eq!(scoped_map(4, &[7u32], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn scoped_map_uses_multiple_threads() {
+        let tids = Mutex::new(std::collections::HashSet::new());
+        let items: Vec<u32> = (0..64).collect();
+        scoped_map(4, &items, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            tids.lock().unwrap().insert(std::thread::current().id());
+        });
+        assert!(tids.into_inner().unwrap().len() > 1);
+    }
+}

@@ -1,0 +1,111 @@
+//! Randomized property-test harness (proptest is not in the offline
+//! registry; DESIGN.md §Substitutions).
+//!
+//! `check("name", cases, |rng| { ... })` runs a property closure `cases`
+//! times with derived-but-reproducible rngs. On failure it panics with the
+//! case seed so the exact counterexample replays with
+//! `check_one("name", seed, f)`. `ALAAS_PROP_CASES` scales the case count
+//! globally (soak runs).
+
+use super::rng::Rng;
+
+/// Outcome of one property case.
+pub type PropResult = Result<(), String>;
+
+fn case_count(default_cases: u32) -> u32 {
+    std::env::var("ALAAS_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse::<u32>().ok())
+        .unwrap_or(default_cases)
+}
+
+/// Seed for case `i` of property `name` — stable across runs and
+/// independent of execution order.
+fn case_seed(name: &str, i: u32) -> u64 {
+    // FNV-1a over the name, mixed with the case index.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h ^ ((i as u64) << 32 | 0x5bd1_e995)
+}
+
+/// Run `f` for `cases` randomized cases. Panics on the first failure with
+/// the replay seed embedded in the message.
+pub fn check(name: &str, cases: u32, f: impl Fn(&mut Rng) -> PropResult) {
+    let n = case_count(cases);
+    for i in 0..n {
+        let seed = case_seed(name, i);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {i}/{n} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed (use the seed from a `check` failure).
+pub fn check_one(name: &str, seed: u64, f: impl Fn(&mut Rng) -> PropResult) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property '{name}' failed on replay seed {seed:#x}: {msg}");
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        check("tautology", 50, |rng| {
+            let x = rng.below(100);
+            prop_assert!(x < 100, "x={x} out of range");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn failure_panics_with_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", 5, |_| Err("nope".to_string()))
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "{msg}");
+        assert!(msg.contains("nope"), "{msg}");
+    }
+
+    #[test]
+    fn case_seeds_are_stable_and_distinct() {
+        assert_eq!(case_seed("p", 0), case_seed("p", 0));
+        assert_ne!(case_seed("p", 0), case_seed("p", 1));
+        assert_ne!(case_seed("p", 0), case_seed("q", 0));
+    }
+
+    #[test]
+    fn replay_reproduces_case_stream() {
+        // The same seed must yield the same rng draws.
+        let seed = case_seed("stream", 3);
+        let a: Vec<u64> = {
+            let mut r = Rng::new(seed);
+            (0..10).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Rng::new(seed);
+            (0..10).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

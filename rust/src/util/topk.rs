@@ -1,0 +1,155 @@
+//! Top-k selection over f32 scores — the inner loop of every
+//! uncertainty-based strategy (select the `budget` most-uncertain samples
+//! from a pool of hundreds of thousands without sorting the whole pool).
+//!
+//! A bounded binary min-heap keyed by score: O(N log k) instead of
+//! O(N log N). Ties break on index for full determinism.
+
+use std::cmp::Ordering;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Entry {
+    score: f32,
+    idx: usize,
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Total order on f32: scores first (NaN sorts lowest), then index
+        // descending so the heap root is the *worst* kept element.
+        self.score
+            .partial_cmp(&other.score)
+            .unwrap_or_else(|| match (self.score.is_nan(), other.score.is_nan()) {
+                (true, true) => Ordering::Equal,
+                (true, false) => Ordering::Less,
+                (false, true) => Ordering::Greater,
+                _ => unreachable!(),
+            })
+            .then_with(|| other.idx.cmp(&self.idx))
+    }
+}
+
+/// Indices of the `k` largest scores, ordered best-first.
+/// `k > scores.len()` returns everything.
+pub fn top_k_desc(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return vec![];
+    }
+    // min-heap of the k best so far (std BinaryHeap is a max-heap, so wrap
+    // with Reverse).
+    use std::cmp::Reverse;
+    let mut heap: std::collections::BinaryHeap<Reverse<Entry>> =
+        std::collections::BinaryHeap::with_capacity(k + 1);
+    for (idx, &score) in scores.iter().enumerate() {
+        let e = Entry { score, idx };
+        if heap.len() < k {
+            heap.push(Reverse(e));
+        } else if e > heap.peek().unwrap().0 {
+            heap.pop();
+            heap.push(Reverse(e));
+        }
+    }
+    let mut out: Vec<Entry> = heap.into_iter().map(|Reverse(e)| e).collect();
+    out.sort_unstable_by(|a, b| b.cmp(a));
+    out.into_iter().map(|e| e.idx).collect()
+}
+
+/// Indices of the `k` smallest scores, ordered best(smallest)-first.
+pub fn top_k_asc(scores: &[f32], k: usize) -> Vec<usize> {
+    let neg: Vec<f32> = scores.iter().map(|s| -s).collect();
+    top_k_desc(&neg, k)
+}
+
+/// Index of the maximum score (first on ties); None on empty.
+pub fn argmax(scores: &[f32]) -> Option<usize> {
+    let mut best: Option<(usize, f32)> = None;
+    for (i, &s) in scores.iter().enumerate() {
+        match best {
+            None => best = Some((i, s)),
+            Some((_, b)) if s > b => best = Some((i, s)),
+            _ => {}
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Index of the minimum score (first on ties); None on empty.
+pub fn argmin(scores: &[f32]) -> Option<usize> {
+    let neg: Vec<f32> = scores.iter().map(|s| -s).collect();
+    argmax(&neg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_full_sort() {
+        let scores = vec![0.3, 0.9, 0.1, 0.9, 0.5, 0.2, 0.8];
+        let got = top_k_desc(&scores, 3);
+        assert_eq!(got, vec![1, 3, 6]); // 0.9 (idx1), 0.9 (idx3), 0.8
+    }
+
+    #[test]
+    fn asc_is_desc_of_negation() {
+        let scores = vec![5.0, 1.0, 3.0, 2.0];
+        assert_eq!(top_k_asc(&scores, 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let scores = vec![1.0, 2.0];
+        assert_eq!(top_k_desc(&scores, 10), vec![1, 0]);
+    }
+
+    #[test]
+    fn k_zero_and_empty() {
+        assert!(top_k_desc(&[1.0], 0).is_empty());
+        assert!(top_k_desc(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn nan_never_selected_over_real() {
+        let scores = vec![f32::NAN, 0.1, f32::NAN, 0.2];
+        assert_eq!(top_k_desc(&scores, 2), vec![3, 1]);
+    }
+
+    #[test]
+    fn deterministic_tie_break_by_index() {
+        let scores = vec![1.0; 6];
+        assert_eq!(top_k_desc(&scores, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn argmax_argmin() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), Some(1));
+        assert_eq!(argmin(&[1.0, 3.0, 2.0]), Some(0));
+        assert_eq!(argmax(&[]), None);
+    }
+
+    #[test]
+    fn randomized_against_sort() {
+        let mut rng = crate::util::rng::Rng::new(42);
+        for _ in 0..50 {
+            let n = 1 + rng.below(300);
+            let k = rng.below(n + 5);
+            let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let got = top_k_desc(&scores, k);
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| {
+                scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+            });
+            idx.truncate(k.min(n));
+            assert_eq!(got, idx);
+        }
+    }
+}

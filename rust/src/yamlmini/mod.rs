@@ -1,0 +1,408 @@
+//! YAML-subset parser — configuration-as-a-service (Fig 2 of the paper).
+//!
+//! The paper's whole accessibility story is "one YAML file starts the
+//! service"; with no serde_yaml offline we parse the subset those configs
+//! actually use (and that `example.yml` in Fig 2 exercises):
+//!
+//! * nested mappings by 2+-space indentation
+//! * block lists (`- item`, including lists of mappings)
+//! * scalars: strings (bare / single / double quoted), ints, floats,
+//!   booleans (`true/false`), `null`/`~`
+//! * `#` comments and blank lines
+//! * inline flow lists of scalars: `[1, 2, 3]`
+//!
+//! Deliberately NOT supported (rejected, never misparsed): anchors/aliases,
+//! multi-document streams, block scalars (`|`, `>`), tabs for indentation.
+//!
+//! Output is the same `json::Value` the rest of the system speaks.
+
+use crate::json::{Map, Value};
+use std::fmt;
+
+/// Parse failure with 1-based line context.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct YamlError {
+    pub msg: String,
+    pub line: usize,
+}
+
+impl fmt::Display for YamlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "yaml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for YamlError {}
+
+struct Line {
+    indent: usize,
+    /// Content with comment stripped; never empty.
+    text: String,
+    /// 1-based source line for errors.
+    no: usize,
+}
+
+/// Parse a YAML document into a Value.
+pub fn parse(input: &str) -> Result<Value, YamlError> {
+    let lines = logical_lines(input)?;
+    if lines.is_empty() {
+        return Ok(Value::Null);
+    }
+    let mut pos = 0;
+    let v = parse_block(&lines, &mut pos, lines[0].indent)?;
+    if pos != lines.len() {
+        return Err(YamlError {
+            msg: "unexpected de-indent / trailing content".into(),
+            line: lines[pos].no,
+        });
+    }
+    Ok(v)
+}
+
+fn logical_lines(input: &str) -> Result<Vec<Line>, YamlError> {
+    let mut out = Vec::new();
+    for (i, raw) in input.lines().enumerate() {
+        let no = i + 1;
+        if raw.contains('\t') {
+            return Err(YamlError { msg: "tabs are not allowed in indentation".into(), line: no });
+        }
+        let text = strip_comment(raw);
+        let trimmed = text.trim_end();
+        if trimmed.trim().is_empty() {
+            continue;
+        }
+        if trimmed.starts_with("---") {
+            return Err(YamlError { msg: "multi-document streams unsupported".into(), line: no });
+        }
+        let indent = trimmed.len() - trimmed.trim_start().len();
+        out.push(Line { indent, text: trimmed.trim_start().to_string(), no });
+    }
+    Ok(out)
+}
+
+/// Strip a `#` comment that is not inside quotes.
+fn strip_comment(raw: &str) -> String {
+    let mut out = String::new();
+    let mut in_single = false;
+    let mut in_double = false;
+    let chars: Vec<char> = raw.chars().collect();
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        match c {
+            '\'' if !in_double => in_single = !in_single,
+            '"' if !in_single => in_double = !in_double,
+            '#' if !in_single && !in_double => {
+                // YAML requires '#' preceded by space/start to be a comment.
+                if i == 0 || chars[i - 1] == ' ' {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, YamlError> {
+    let first = &lines[*pos];
+    if first.text.starts_with("- ") || first.text == "-" {
+        parse_list(lines, pos, indent)
+    } else {
+        parse_map(lines, pos, indent)
+    }
+}
+
+fn parse_list(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, YamlError> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(YamlError { msg: "unexpected indent in list".into(), line: line.no });
+        }
+        if !(line.text.starts_with("- ") || line.text == "-") {
+            break;
+        }
+        let rest = line.text[1..].trim_start().to_string();
+        let no = line.no;
+        *pos += 1;
+        if rest.is_empty() {
+            // "-" alone: nested block follows with greater indent.
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let inner_indent = lines[*pos].indent;
+                items.push(parse_block(lines, pos, inner_indent)?);
+            } else {
+                items.push(Value::Null);
+            }
+        } else if rest.contains(": ") || rest.ends_with(':') {
+            // List of mappings: "- key: value" starts an inline map whose
+            // continuation lines are indented past the dash.
+            let virt_indent = indent + 2;
+            let mut m = Map::new();
+            parse_map_entry(&rest, no, lines, pos, virt_indent, &mut m)?;
+            while *pos < lines.len() && lines[*pos].indent == virt_indent {
+                let l = &lines[*pos];
+                if l.text.starts_with("- ") {
+                    break;
+                }
+                let text = l.text.clone();
+                let lno = l.no;
+                *pos += 1;
+                parse_map_entry(&text, lno, lines, pos, virt_indent, &mut m)?;
+            }
+            items.push(Value::Object(m));
+        } else {
+            items.push(scalar(&rest, no)?);
+        }
+    }
+    Ok(Value::Array(items))
+}
+
+fn parse_map(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, YamlError> {
+    let mut m = Map::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(YamlError { msg: "unexpected indent".into(), line: line.no });
+        }
+        if line.text.starts_with("- ") || line.text == "-" {
+            break;
+        }
+        let text = line.text.clone();
+        let no = line.no;
+        *pos += 1;
+        parse_map_entry(&text, no, lines, pos, indent, &mut m)?;
+    }
+    Ok(Value::Object(m))
+}
+
+fn parse_map_entry(
+    text: &str,
+    no: usize,
+    lines: &[Line],
+    pos: &mut usize,
+    indent: usize,
+    m: &mut Map,
+) -> Result<(), YamlError> {
+    let (key_raw, rest) = split_key(text, no)?;
+    let key = unquote(key_raw.trim(), no)?;
+    if m.contains_key(&key) {
+        return Err(YamlError { msg: format!("duplicate key '{key}'"), line: no });
+    }
+    let rest = rest.trim();
+    if rest.is_empty() {
+        // Nested block (map or list) at deeper indent, or empty -> null.
+        if *pos < lines.len() && lines[*pos].indent > indent {
+            let inner = lines[*pos].indent;
+            let v = parse_block(lines, pos, inner)?;
+            m.insert(key, v);
+        } else if *pos < lines.len()
+            && lines[*pos].indent == indent
+            && (lines[*pos].text.starts_with("- ") || lines[*pos].text == "-")
+        {
+            // Lists are commonly written at the same indent as their key.
+            let v = parse_list(lines, pos, indent)?;
+            m.insert(key, v);
+        } else {
+            m.insert(key, Value::Null);
+        }
+    } else {
+        m.insert(key, scalar(rest, no)?);
+    }
+    Ok(())
+}
+
+/// Split "key: value" respecting quoted keys.
+fn split_key(text: &str, no: usize) -> Result<(&str, &str), YamlError> {
+    let bytes = text.as_bytes();
+    let mut in_single = false;
+    let mut in_double = false;
+    for i in 0..bytes.len() {
+        match bytes[i] {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b':' if !in_single && !in_double => {
+                // ':' must be followed by space or end-of-line to be a key
+                // separator (YAML rule), so URLs like s3sim://x are safe
+                // inside values but keys split correctly.
+                if i + 1 == bytes.len() || bytes[i + 1] == b' ' {
+                    return Ok((&text[..i], &text[i + 1..]));
+                }
+            }
+            _ => {}
+        }
+    }
+    Err(YamlError { msg: format!("expected 'key: value' in {text:?}"), line: no })
+}
+
+fn unquote(s: &str, no: usize) -> Result<String, YamlError> {
+    if (s.starts_with('"') && s.ends_with('"') && s.len() >= 2)
+        || (s.starts_with('\'') && s.ends_with('\'') && s.len() >= 2)
+    {
+        Ok(s[1..s.len() - 1].to_string())
+    } else if s.starts_with('"') || s.starts_with('\'') {
+        Err(YamlError { msg: format!("unterminated quote in {s:?}"), line: no })
+    } else {
+        Ok(s.to_string())
+    }
+}
+
+fn scalar(s: &str, no: usize) -> Result<Value, YamlError> {
+    let s = s.trim();
+    // flow list of scalars
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(YamlError { msg: "unterminated flow list".into(), line: no });
+        }
+        let inner = &s[1..s.len() - 1];
+        if inner.trim().is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            items.push(scalar(part, no)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    if s.starts_with('&') || s.starts_with('*') {
+        return Err(YamlError { msg: "anchors/aliases unsupported".into(), line: no });
+    }
+    if s == "|" || s == ">" {
+        return Err(YamlError { msg: "block scalars unsupported".into(), line: no });
+    }
+    if s.starts_with('"') || s.starts_with('\'') {
+        return unquote(s, no).map(Value::String);
+    }
+    Ok(match s {
+        "null" | "~" | "Null" | "NULL" => Value::Null,
+        "true" | "True" | "TRUE" => Value::Bool(true),
+        "false" | "False" | "FALSE" => Value::Bool(false),
+        _ => {
+            if let Ok(i) = s.parse::<i64>() {
+                Value::from(i)
+            } else if let Ok(f) = s.parse::<f64>() {
+                Value::Number(f)
+            } else {
+                Value::String(s.to_string())
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The Fig 2 config from the paper, verbatim structure.
+    const FIG2: &str = r#"
+name: "IMG_CLASSIFICATION"
+version: 0.1
+active_learning:
+  strategy:
+    type: "auto"
+  model:
+    name: "resnet18"
+    hub_name: "pytorch/vision:release/0.12"
+    batch_size: 1
+  device: CPU
+al_worker:
+  protocol: "grpc"
+  host: "0.0.0.0"
+  port: 60035
+  replicas: 1
+"#;
+
+    #[test]
+    fn parses_paper_fig2_config() {
+        let v = parse(FIG2).unwrap();
+        assert_eq!(v.path("name").and_then(Value::as_str), Some("IMG_CLASSIFICATION"));
+        assert_eq!(v.path("version").and_then(Value::as_f64), Some(0.1));
+        assert_eq!(
+            v.path("active_learning.strategy.type").and_then(Value::as_str),
+            Some("auto")
+        );
+        assert_eq!(
+            v.path("active_learning.model.batch_size").and_then(Value::as_i64),
+            Some(1)
+        );
+        assert_eq!(v.path("al_worker.port").and_then(Value::as_i64), Some(60035));
+        assert_eq!(v.path("al_worker.host").and_then(Value::as_str), Some("0.0.0.0"));
+        assert_eq!(v.path("active_learning.device").and_then(Value::as_str), Some("CPU"));
+    }
+
+    #[test]
+    fn lists_block_and_flow() {
+        let v = parse("xs:\n  - 1\n  - 2\nys: [3, 4, five]\nsame_indent:\n- a\n- b\n").unwrap();
+        let xs = v.get("xs").unwrap().as_array().unwrap();
+        assert_eq!(xs[1].as_i64(), Some(2));
+        let ys = v.get("ys").unwrap().as_array().unwrap();
+        assert_eq!(ys[2].as_str(), Some("five"));
+        let same = v.get("same_indent").unwrap().as_array().unwrap();
+        assert_eq!(same.len(), 2);
+    }
+
+    #[test]
+    fn list_of_mappings() {
+        let doc = "workers:\n  - host: a\n    port: 1\n  - host: b\n    port: 2\n";
+        let v = parse(doc).unwrap();
+        let ws = v.get("workers").unwrap().as_array().unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].get("host").unwrap().as_str(), Some("a"));
+        assert_eq!(ws[1].get("port").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let doc = "# header\na: 1  # trailing\n\nb: \"#not-a-comment\"\n";
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("#not-a-comment"));
+    }
+
+    #[test]
+    fn urls_with_colons_survive() {
+        let v = parse("uri: s3sim://bucket/key\nhub: pytorch/vision:release/0.12\n").unwrap();
+        assert_eq!(v.get("uri").unwrap().as_str(), Some("s3sim://bucket/key"));
+        assert_eq!(v.get("hub").unwrap().as_str(), Some("pytorch/vision:release/0.12"));
+    }
+
+    #[test]
+    fn scalar_types() {
+        let v = parse("i: 3\nf: 2.5\nt: true\nn: null\ntil: ~\ns: plain text\n").unwrap();
+        assert_eq!(v.get("i").unwrap().as_i64(), Some(3));
+        assert_eq!(v.get("f").unwrap().as_f64(), Some(2.5));
+        assert_eq!(v.get("t").unwrap().as_bool(), Some(true));
+        assert!(v.get("n").unwrap().is_null());
+        assert!(v.get("til").unwrap().is_null());
+        assert_eq!(v.get("s").unwrap().as_str(), Some("plain text"));
+    }
+
+    #[test]
+    fn rejects_unsupported_yaml() {
+        assert!(parse("a: &anchor 1").is_err());
+        assert!(parse("a: |").is_err());
+        assert!(parse("---\na: 1").is_err());
+        assert!(parse("\ta: 1").is_err());
+        assert!(parse("a: 1\na: 2").is_err()); // duplicate key
+    }
+
+    #[test]
+    fn empty_doc_is_null() {
+        assert_eq!(parse("").unwrap(), Value::Null);
+        assert_eq!(parse("# only comments\n\n").unwrap(), Value::Null);
+    }
+
+    #[test]
+    fn error_carries_line_number() {
+        let e = parse("a: 1\n  broken\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+}

@@ -1,0 +1,143 @@
+//! AL end-to-end integration on the PJRT backend: the science loop
+//! (embed -> select -> label -> fine-tune -> evaluate) on real synthetic
+//! datasets, and the PSHEA agent on top of it.
+//!
+//! Requires `make artifacts`; no-ops with a notice otherwise. Kept small
+//! (hundreds of samples) so `cargo test` stays fast — the paper-scale
+//! numbers come from `cargo bench`.
+
+use std::sync::Arc;
+
+use alaas::agent::{run_pshea, PsheaConfig, StopReason};
+use alaas::data::{generate, DatasetSpec};
+use alaas::runtime::backend::ComputeBackend;
+use alaas::runtime::{ArtifactIndex, PjrtBackend, PjrtPool};
+use alaas::sim::AlExperiment;
+use alaas::trainer::TrainConfig;
+
+fn pjrt() -> Option<Arc<dyn ComputeBackend>> {
+    let dir = alaas::runtime::find_artifacts_dir(None)?;
+    let index = Arc::new(ArtifactIndex::load(&dir).expect("manifest parses"));
+    let pool = Arc::new(PjrtPool::new(index, 2, 64));
+    Some(Arc::new(PjrtBackend::new(pool)))
+}
+
+fn experiment(backend: Arc<dyn ComputeBackend>, seed: u64) -> AlExperiment {
+    let spec = DatasetSpec::cifarsim(seed).with_sizes(150, 700, 300);
+    let gen = generate(&spec);
+    AlExperiment::from_generated(
+        backend,
+        &gen,
+        spec.num_classes,
+        TrainConfig { epochs: 20, ..Default::default() },
+        seed,
+    )
+    .expect("experiment builds")
+}
+
+#[test]
+fn al_learns_on_pjrt_trunk_embeddings() {
+    let Some(backend) = pjrt() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut exp = experiment(backend, 21);
+    let (_, base) = exp.baseline().unwrap();
+    let ub = exp.upper_bound().unwrap();
+    assert!(
+        ub.top1 > base.top1 + 0.02,
+        "dataset must be learnable: baseline {:.3} vs upper bound {:.3}",
+        base.top1,
+        ub.top1
+    );
+    // a few LC rounds land between baseline and upper bound, above baseline
+    let mut acc = base.top1;
+    for _ in 0..3 {
+        acc = exp.round("least_confidence", 100).unwrap().unwrap().top1;
+    }
+    assert!(
+        acc > base.top1,
+        "AL after 300 labels ({acc:.3}) should beat baseline ({:.3})",
+        base.top1
+    );
+}
+
+#[test]
+fn informed_strategies_beat_random_on_average() {
+    // Fig 4a's qualitative claim, miniaturized: mean over seeds of
+    // one-round accuracy, informed (LC + core_set best-of) vs random.
+    let Some(backend) = pjrt() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut informed_sum = 0.0;
+    let mut random_sum = 0.0;
+    let seeds = [31u64, 32, 33];
+    for &seed in &seeds {
+        let mut exp = experiment(backend.clone(), seed);
+        let lc = exp.one_round("least_confidence", 150).unwrap().top1;
+        let cs = exp.one_round("core_set", 150).unwrap().top1;
+        informed_sum += lc.max(cs);
+        random_sum += exp.one_round("random", 150).unwrap().top1;
+    }
+    let informed = informed_sum / seeds.len() as f64;
+    let random = random_sum / seeds.len() as f64;
+    assert!(
+        informed + 0.01 >= random,
+        "informed {informed:.3} should not lose to random {random:.3}"
+    );
+}
+
+#[test]
+fn pshea_agent_end_to_end_on_pjrt() {
+    let Some(backend) = pjrt() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut exp = experiment(backend, 41);
+    let strategies: Vec<String> = vec![
+        "least_confidence".into(),
+        "margin_confidence".into(),
+        "k_center_greedy".into(),
+        "random".into(),
+    ];
+    let cfg = PsheaConfig {
+        target_accuracy: 1.1, // run to the round limit
+        max_budget: 100_000,
+        round_budget: 60,
+        converge_rounds: 0,
+        converge_eps: 0.0,
+        max_rounds: 5,
+        min_history: 3,
+        initial_accuracy: None,
+    };
+    let trace = run_pshea(&mut exp, &strategies, &cfg).unwrap();
+    assert_eq!(trace.stop, StopReason::RoundLimit);
+    // all 4 arms ran rounds 0-2; eliminations after
+    assert_eq!(trace.round(0).count(), 4);
+    assert_eq!(trace.round(2).count(), 4);
+    assert_eq!(trace.round(3).count(), 3);
+    assert_eq!(trace.round(4).count(), 2);
+    // one elimination at the end of each of rounds 2, 3, 4
+    assert_eq!(trace.survivors.len(), 1);
+    // budget: 3 rounds * 4 arms + 1 round * 3 + 1 round * 2, each 60
+    assert_eq!(trace.total_budget, (12 + 3 + 2) * 60);
+    // accuracy history is sane
+    assert!(trace.best_accuracy > 0.2, "learned something: {}", trace.best_accuracy);
+}
+
+#[test]
+fn budget_accounting_matches_oracle_charges() {
+    let Some(backend) = pjrt() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut exp = experiment(backend, 51);
+    let init_charge = exp.oracle().budget_spent(); // init split labels
+    exp.round("entropy", 80).unwrap().unwrap();
+    exp.round("entropy", 80).unwrap().unwrap();
+    exp.round("dbal", 50).unwrap().unwrap();
+    assert_eq!(exp.oracle().budget_spent() - init_charge, 80 + 80 + 50);
+    assert_eq!(exp.labeled_count("entropy"), 160);
+    assert_eq!(exp.labeled_count("dbal"), 50);
+}

@@ -1,0 +1,184 @@
+//! Pipeline integration on the PJRT backend: the full serving path
+//! (s3sim store -> cache -> preprocess -> dynamic batch -> AOT artifacts
+//! through PJRT) with all three Figure 3 dataflows.
+//!
+//! Requires `make artifacts`; no-ops with a notice otherwise.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use alaas::cache::DataCache;
+use alaas::config::StoreConfig;
+use alaas::data::{generate_into_store, DatasetSpec};
+use alaas::pipeline::{run_pipeline, BatchPolicy, DataflowMode, PipelineParams};
+use alaas::runtime::backend::ComputeBackend;
+use alaas::runtime::{ArtifactIndex, PjrtBackend, PjrtPool};
+use alaas::store::{Manifest, ObjectStore, SampleRef, StoreRouter};
+use alaas::trainer::LinearHead;
+
+fn pjrt(replicas: usize) -> Option<Arc<dyn ComputeBackend>> {
+    let dir = alaas::runtime::find_artifacts_dir(None)?;
+    let index = Arc::new(ArtifactIndex::load(&dir).expect("manifest parses"));
+    let pool = Arc::new(PjrtPool::new(index, replicas, 64));
+    Some(Arc::new(PjrtBackend::new(pool)))
+}
+
+/// Generate a dataset into a scratch MemStore, then copy the blobs into
+/// the router's s3sim backing store (bypassing the latency model for the
+/// writes, like a pre-provisioned bucket).
+fn dataset(store: &StoreRouter, pool: usize) -> Manifest {
+    let spec = DatasetSpec::cifarsim(11).with_sizes(0, pool, 0);
+    let scratch: Arc<dyn ObjectStore> = Arc::new(alaas::store::MemStore::new());
+    let manifest = generate_into_store(&spec, &scratch, "s3sim", "pl-ds");
+    for key in scratch.list("").unwrap() {
+        store.s3sim_backing().put(&key, &scratch.get(&key).unwrap()).unwrap();
+    }
+    manifest
+}
+
+fn fast_store() -> StoreRouter {
+    StoreRouter::new(
+        "/tmp",
+        &StoreConfig { get_latency_us: 0, bandwidth_mib_s: 0.0, jitter: 0.0 },
+    )
+}
+
+#[test]
+fn all_dataflows_agree_on_pjrt() {
+    let Some(backend) = pjrt(2) else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let store = fast_store();
+    let manifest = dataset(&store, 90);
+    let head = LinearHead::zeros(64, 10);
+    let mut outs = Vec::new();
+    for mode in [
+        DataflowMode::Pipelined,
+        DataflowMode::SerialOneShot,
+        DataflowMode::SerialPerRound(3),
+    ] {
+        let cache = DataCache::new(0, 1, false);
+        let params = PipelineParams {
+            mode,
+            batch: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(5) },
+            ..Default::default()
+        };
+        let out = run_pipeline(&manifest.pool, &store, &cache, &backend, &head, &params, None)
+            .unwrap();
+        assert!(out.errors.is_empty(), "{mode:?}: {:?}", out.errors);
+        outs.push(out);
+    }
+    for o in &outs[1..] {
+        for i in 0..90 {
+            for (a, b) in outs[0].embeddings.row(i).iter().zip(o.embeddings.row(i)) {
+                assert!((a - b).abs() < 1e-4, "row {i} differs across modes");
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_variant_padding_is_invisible() {
+    // 90 samples with max_batch 16 -> chunks of 16 plus a ragged tail;
+    // results must match a one-shot scan with batch 64.
+    let Some(backend) = pjrt(1) else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let store = fast_store();
+    let manifest = dataset(&store, 50);
+    let head = LinearHead::zeros(64, 10);
+    let run = |max_batch: usize| {
+        let cache = DataCache::new(0, 1, false);
+        let params = PipelineParams {
+            mode: DataflowMode::SerialOneShot,
+            batch: BatchPolicy { max_batch, max_wait: Duration::from_millis(5) },
+            ..Default::default()
+        };
+        run_pipeline(&manifest.pool, &store, &cache, &backend, &head, &params, None).unwrap()
+    };
+    let a = run(16);
+    let b = run(64);
+    for i in 0..50 {
+        for (x, y) in a.scores.row(i).iter().zip(b.scores.row(i)) {
+            assert!((x - y).abs() < 1e-4, "scores row {i}: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn cache_accelerates_rescan_on_slow_store() {
+    let Some(backend) = pjrt(2) else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let store = StoreRouter::new(
+        "/tmp",
+        &StoreConfig { get_latency_us: 1_500, bandwidth_mib_s: 0.0, jitter: 0.0 },
+    );
+    let manifest = dataset(&store, 80);
+    let head = LinearHead::zeros(64, 10);
+    let cache = DataCache::new(256 << 20, 8, true);
+    let params = PipelineParams::default();
+    let t0 = std::time::Instant::now();
+    run_pipeline(&manifest.pool, &store, &cache, &backend, &head, &params, None).unwrap();
+    let cold = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    run_pipeline(&manifest.pool, &store, &cache, &backend, &head, &params, None).unwrap();
+    let warm = t0.elapsed();
+    assert_eq!(cache.misses(), 80);
+    assert!(cache.hits() >= 80);
+    assert!(
+        warm < cold,
+        "warm scan {warm:?} should beat cold {cold:?} (cache bypasses the store)"
+    );
+}
+
+#[test]
+fn selection_over_pipeline_output_matches_direct_path() {
+    // End-to-end consistency: strategy selection over pipeline outputs ==
+    // selection over directly-computed embeddings/scores.
+    let Some(backend) = pjrt(1) else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let store = fast_store();
+    let manifest = dataset(&store, 60);
+    let head = LinearHead::zeros(64, 10);
+    let cache = DataCache::new(0, 1, false);
+    let out = run_pipeline(
+        &manifest.pool,
+        &store,
+        &cache,
+        &backend,
+        &head,
+        &PipelineParams::default(),
+        None,
+    )
+    .unwrap();
+
+    // direct path: decode+embed+score without the pipeline machinery
+    let mut flat = Vec::new();
+    for s in &manifest.pool {
+        let uri = alaas::uri::Uri::parse(&s.uri).unwrap();
+        let raw = store.get(&uri).unwrap();
+        flat.extend(alaas::data::decode_image(&raw).unwrap());
+    }
+    let imgs = alaas::util::mat::Mat::from_vec(flat, 60, alaas::data::IMG_DIM);
+    let (emb, scores) = backend.forward(&imgs, &head.w, &head.b).unwrap();
+
+    let labeled = alaas::util::mat::Mat::zeros(0, 64);
+    let pick = |e: &alaas::util::mat::Mat, sc: &alaas::util::mat::Mat| {
+        let ctx = alaas::strategies::SelectCtx {
+            scores: sc,
+            embeddings: e,
+            labeled: &labeled,
+            backend: backend.as_ref(),
+            seed: 3,
+        };
+        alaas::strategies::by_name("k_center_greedy").unwrap().select(&ctx, 12).unwrap()
+    };
+    assert_eq!(pick(&out.embeddings, &out.scores), pick(&emb, &scores));
+    let _ = SampleRef { id: 0, uri: String::new() }; // keep import used
+}

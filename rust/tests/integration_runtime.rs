@@ -1,0 +1,225 @@
+//! Runtime integration: the AOT artifacts executed through PJRT must match
+//! the pure-Rust host reference (which itself mirrors python ref.py — so
+//! this closes the L1/L2 <-> L3 numerics loop).
+//!
+//! Requires `make artifacts`; every test no-ops with a notice otherwise
+//! (CI runs them via `make test`, which builds artifacts first).
+
+use std::sync::Arc;
+
+use alaas::runtime::backend::{host_eval_logits, host_scores, host_sqdist, host_train_step};
+use alaas::runtime::{ArtifactIndex, ComputeBackend, PjrtBackend, PjrtPool};
+use alaas::util::mat::Mat;
+use alaas::util::rng::Rng;
+
+fn pjrt() -> Option<PjrtBackend> {
+    let dir = alaas::runtime::find_artifacts_dir(None)?;
+    let index = Arc::new(ArtifactIndex::load(&dir).expect("manifest parses"));
+    let pool = Arc::new(PjrtPool::new(index, 2, 32));
+    Some(PjrtBackend::new(pool))
+}
+
+macro_rules! require_artifacts {
+    ($be:ident) => {
+        let Some($be) = pjrt() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+    };
+}
+
+fn rand_mat(rng: &mut Rng, r: usize, c: usize, scale: f32) -> Mat {
+    Mat::from_vec((0..r * c).map(|_| scale * rng.normal_f32()).collect(), r, c)
+}
+
+fn assert_close(a: &Mat, b: &Mat, tol: f32, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape");
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert!(
+            (x - y).abs() <= tol + tol * y.abs(),
+            "{what}: element {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn scores_match_host_reference() {
+    require_artifacts!(be);
+    let mut rng = Rng::new(42);
+    for &b in &[1usize, 3, 16, 37, 130] {
+        let logits = rand_mat(&mut rng, b, 10, 4.0);
+        let got = be.scores(&logits).expect("pjrt scores");
+        let want = host_scores(&logits);
+        assert_close(&got, &want, 1e-5, &format!("scores b={b}"));
+    }
+}
+
+#[test]
+fn sqdist_matches_host_reference_with_tiling() {
+    require_artifacts!(be);
+    let mut rng = Rng::new(7);
+    // Cover: tile-exact, sub-tile, and ragged multi-tile shapes.
+    for &(m, n) in &[(256usize, 256usize), (40, 70), (300, 513), (1, 257)] {
+        let x = rand_mat(&mut rng, m, 64, 1.0);
+        let y = rand_mat(&mut rng, n, 64, 1.0);
+        let got = be.sqdist(&x, &y).expect("pjrt sqdist");
+        let want = host_sqdist(&x, &y).expect("host sqdist");
+        assert_close(&got, &want, 1e-3, &format!("sqdist {m}x{n}"));
+    }
+}
+
+#[test]
+fn embed_is_deterministic_and_batch_invariant() {
+    require_artifacts!(be);
+    let mut rng = Rng::new(3);
+    let images = rand_mat(&mut rng, 37, 3072, 0.3);
+    let full = be.embed(&images).expect("embed full");
+    assert_eq!(full.shape(), (37, 64));
+    let again = be.embed(&images).expect("embed again");
+    assert_close(&full, &again, 0.0, "determinism");
+    // chunk/pad invariance: single-row forward equals batched row
+    let single = be.embed(&images.take_rows(1)).expect("embed single");
+    for k in 0..64 {
+        assert!(
+            (full.get(0, k) - single.get(0, k)).abs() < 1e-4,
+            "batch leak at col {k}: {} vs {}",
+            full.get(0, k),
+            single.get(0, k)
+        );
+    }
+}
+
+#[test]
+fn forward_fuses_embed_head_and_scores() {
+    require_artifacts!(be);
+    let mut rng = Rng::new(4);
+    let images = rand_mat(&mut rng, 19, 3072, 0.3);
+    let w = rand_mat(&mut rng, 64, 10, 0.2);
+    let b: Vec<f32> = (0..10).map(|_| 0.1 * rng.normal_f32()).collect();
+
+    let (emb, scores) = be.forward(&images, &w, &b).expect("forward");
+    assert_eq!(emb.shape(), (19, 64));
+    assert_eq!(scores.shape(), (19, 4));
+
+    // Cross-check: forward == embed -> host head -> pjrt scores
+    let emb2 = be.embed(&images).expect("embed");
+    assert_close(&emb, &emb2, 1e-4, "forward emb vs embed");
+    let logits = host_eval_logits(&emb2, &w, &b).unwrap();
+    let s2 = be.scores(&logits).expect("scores");
+    assert_close(&scores, &s2, 1e-3, "forward scores vs composed");
+}
+
+#[test]
+fn train_step_matches_host_and_descends() {
+    require_artifacts!(be);
+    let mut rng = Rng::new(5);
+    let x = rand_mat(&mut rng, 64, 64, 1.0);
+    let mut y = Mat::zeros(64, 10);
+    for i in 0..64 {
+        y.set(i, i % 10, 1.0);
+    }
+
+    let mut w_p = Mat::zeros(64, 10);
+    let mut b_p = vec![0.0f32; 10];
+    let mut w_h = Mat::zeros(64, 10);
+    let mut b_h = vec![0.0f32; 10];
+
+    let mut first = None;
+    let mut last = 0.0;
+    for step in 0..20 {
+        let lp = be.train_step(&mut w_p, &mut b_p, &x, &y, 0.5).expect("pjrt step");
+        let lh = host_train_step(&mut w_h, &mut b_h, &x, &y, 0.5).expect("host step");
+        assert!(
+            (lp - lh).abs() < 1e-3 + 1e-3 * lh.abs(),
+            "step {step}: pjrt loss {lp} vs host {lh}"
+        );
+        if first.is_none() {
+            first = Some(lp);
+            assert!((lp - (10.0f32).ln()).abs() < 1e-4, "first loss {lp}");
+        }
+        last = lp;
+    }
+    assert!(last < first.unwrap() * 0.8, "no descent: {first:?} -> {last}");
+    assert_close(&w_p, &w_h, 1e-3, "weights after 20 steps");
+}
+
+#[test]
+fn train_step_tail_padding_is_inert() {
+    require_artifacts!(be);
+    let mut rng = Rng::new(6);
+    let x = rand_mat(&mut rng, 30, 64, 1.0); // < train_batch, gets padded
+    let mut y = Mat::zeros(30, 10);
+    for i in 0..30 {
+        y.set(i, (i * 3) % 10, 1.0);
+    }
+    let mut w = Mat::zeros(64, 10);
+    let mut b = vec![0.0f32; 10];
+    let loss = be.train_step(&mut w, &mut b, &x, &y, 0.3).expect("padded step");
+
+    let mut w_h = Mat::zeros(64, 10);
+    let mut b_h = vec![0.0f32; 10];
+    let loss_h = host_train_step(&mut w_h, &mut b_h, &x, &y, 0.3).unwrap();
+    assert!((loss - loss_h).abs() < 1e-4, "{loss} vs {loss_h}");
+    assert_close(&w, &w_h, 1e-4, "padded-step weights");
+}
+
+#[test]
+fn eval_logits_matches_host() {
+    require_artifacts!(be);
+    let mut rng = Rng::new(8);
+    for &n in &[1usize, 100, 256, 300] {
+        let x = rand_mat(&mut rng, n, 64, 1.0);
+        let w = rand_mat(&mut rng, 64, 10, 0.3);
+        let b: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
+        let got = be.eval_logits(&x, &w, &b).expect("pjrt eval");
+        let want = host_eval_logits(&x, &w, &b).unwrap();
+        assert_close(&got, &want, 1e-3, &format!("eval n={n}"));
+    }
+}
+
+#[test]
+fn pool_serves_concurrent_callers() {
+    require_artifacts!(be);
+    let be = Arc::new(be);
+    let mut rng = Rng::new(9);
+    let logits = Arc::new(rand_mat(&mut rng, 64, 10, 2.0));
+    let want = host_scores(&logits);
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let be = be.clone();
+            let logits = logits.clone();
+            let want = want.clone();
+            s.spawn(move || {
+                for _ in 0..5 {
+                    let got = be.scores(&logits).expect("concurrent scores");
+                    assert_close(&got, &want, 1e-5, "concurrent");
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn unknown_artifact_errors_cleanly() {
+    let Some(dir) = alaas::runtime::find_artifacts_dir(None) else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let index = Arc::new(ArtifactIndex::load(&dir).unwrap());
+    let pool = PjrtPool::new(index, 1, 4);
+    let err = pool.call("definitely_not_an_artifact", vec![]).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("definitely_not_an_artifact"), "{msg}");
+}
+
+#[test]
+fn warmup_compiles_on_all_replicas() {
+    require_artifacts!(be);
+    let pool = be.pool();
+    pool.warmup(&["scores_b16".to_string()]).expect("warmup");
+    // After warmup, calls are served without compile hiccups; just verify
+    // the path still works.
+    let mut rng = Rng::new(10);
+    let logits = rand_mat(&mut rng, 16, 10, 1.0);
+    be.scores(&logits).expect("post-warmup scores");
+}

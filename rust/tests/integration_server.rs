@@ -1,0 +1,230 @@
+//! Server-client integration over real TCP: the Figure 1 workflow
+//! (push unlabeled data -> server processes -> query(budget) -> selected
+//! samples) end to end on the host backend with an in-process store.
+
+use std::sync::Arc;
+
+use alaas::cache::DataCache;
+use alaas::config::AlaasConfig;
+use alaas::data::{generate_into_store, DatasetSpec, Oracle};
+use alaas::metrics::Registry;
+use alaas::runtime::backend::ComputeBackend;
+use alaas::runtime::HostBackend;
+use alaas::server::{AlClient, AlServer, ServerDeps};
+use alaas::store::{Manifest, ObjectStore, StoreRouter};
+
+struct Harness {
+    server: AlServer,
+    manifest: Manifest,
+    init_labels: Vec<u8>,
+    store: Arc<StoreRouter>,
+}
+
+/// Start a server on an ephemeral port with a generated dataset living in
+/// its s3sim store.
+fn harness(pool: usize) -> Harness {
+    let mut cfg = AlaasConfig::default();
+    cfg.al_worker.host = "127.0.0.1".into();
+    cfg.al_worker.port = 0; // ephemeral
+    cfg.store.get_latency_us = 0;
+    cfg.store.bandwidth_mib_s = 0.0;
+    cfg.store.jitter = 0.0;
+
+    let store = Arc::new(StoreRouter::new("/tmp", &cfg.store));
+    let spec = DatasetSpec::cifarsim(7).with_sizes(60, pool, 0);
+    // write via the backing store (no latency), serve via s3sim URIs
+    let backing: Arc<dyn ObjectStore> =
+        Arc::new(NoopWrap(store.clone())) as Arc<dyn ObjectStore>;
+    let manifest = generate_into_store(&spec, &backing, "s3sim", "it-ds");
+    let oracle = Oracle::load(&backing, "it-ds").unwrap();
+    let init_ids: Vec<u32> = manifest.init.iter().map(|s| s.id).collect();
+    let init_labels = oracle.label(&init_ids);
+
+    let deps = ServerDeps {
+        store: store.clone(),
+        cache: Arc::new(DataCache::new(256 << 20, 8, true)),
+        backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
+        metrics: Registry::new(),
+    };
+    let server = AlServer::start(cfg, deps).expect("server starts");
+    Harness { server, manifest, init_labels, store }
+}
+
+/// Adapter: write dataset blobs through the router's s3sim *backing*
+/// store (fast path) while the server reads them through s3sim.
+struct NoopWrap(Arc<StoreRouter>);
+
+impl ObjectStore for NoopWrap {
+    fn get(&self, key: &str) -> alaas::store::StoreResult<Vec<u8>> {
+        self.0.s3sim_backing().get(key)
+    }
+    fn put(&self, key: &str, data: &[u8]) -> alaas::store::StoreResult<()> {
+        self.0.s3sim_backing().put(key, data)
+    }
+    fn exists(&self, key: &str) -> bool {
+        self.0.s3sim_backing().exists(key)
+    }
+    fn list(&self, prefix: &str) -> alaas::store::StoreResult<Vec<String>> {
+        self.0.s3sim_backing().list(prefix)
+    }
+    fn kind(&self) -> &'static str {
+        "wrap"
+    }
+}
+
+#[test]
+fn full_push_query_workflow() {
+    let h = harness(300);
+    let addr = h.server.addr().to_string();
+    let mut client = AlClient::connect(&addr).unwrap();
+    client.ping().unwrap();
+
+    client.push_data("s1", &h.manifest, Some(&h.init_labels)).unwrap();
+    let (selected, strategy, _ms) = client.query("s1", 50, Some("least_confidence")).unwrap();
+    assert_eq!(strategy, "least_confidence");
+    assert_eq!(selected.len(), 50);
+    // selections are distinct pool members
+    let pool_ids: std::collections::HashSet<u32> =
+        h.manifest.pool.iter().map(|s| s.id).collect();
+    let mut seen = std::collections::HashSet::new();
+    for s in &selected {
+        assert!(pool_ids.contains(&s.id), "id {} not in pool", s.id);
+        assert!(seen.insert(s.id), "duplicate id {}", s.id);
+    }
+    assert_eq!(client.status("s1").unwrap(), "ready");
+}
+
+#[test]
+fn different_strategies_give_different_selections() {
+    let h = harness(400);
+    let mut client = AlClient::connect(&h.server.addr().to_string()).unwrap();
+    client.push_data("s1", &h.manifest, Some(&h.init_labels)).unwrap();
+    let (lc, _, _) = client.query("s1", 40, Some("least_confidence")).unwrap();
+    let (rand, _, _) = client.query("s1", 40, Some("random")).unwrap();
+    let (kcg, _, _) = client.query("s1", 40, Some("k_center_greedy")).unwrap();
+    let ids = |v: &[alaas::store::SampleRef]| {
+        let mut x: Vec<u32> = v.iter().map(|s| s.id).collect();
+        x.sort_unstable();
+        x
+    };
+    assert_ne!(ids(&lc), ids(&rand), "LC vs random should differ");
+    assert_ne!(ids(&lc), ids(&kcg), "LC vs KCG should differ");
+}
+
+#[test]
+fn query_is_deterministic_for_same_session() {
+    let h = harness(200);
+    let mut client = AlClient::connect(&h.server.addr().to_string()).unwrap();
+    client.push_data("s1", &h.manifest, Some(&h.init_labels)).unwrap();
+    let (a, _, _) = client.query("s1", 30, Some("entropy")).unwrap();
+    let (b, _, _) = client.query("s1", 30, Some("entropy")).unwrap();
+    assert_eq!(
+        a.iter().map(|s| s.id).collect::<Vec<_>>(),
+        b.iter().map(|s| s.id).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn concurrent_clients_and_sessions() {
+    let h = harness(200);
+    let addr = h.server.addr().to_string();
+    let manifest = h.manifest.clone();
+    let labels = h.init_labels.clone();
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let addr = addr.clone();
+            let manifest = manifest.clone();
+            let labels = labels.clone();
+            s.spawn(move || {
+                let mut c = AlClient::connect(&addr).unwrap();
+                let session = format!("sess-{t}");
+                c.push_data(&session, &manifest, Some(&labels)).unwrap();
+                let (sel, _, _) = c.query(&session, 20, Some("margin_confidence")).unwrap();
+                assert_eq!(sel.len(), 20);
+            });
+        }
+    });
+}
+
+#[test]
+fn error_paths_are_clean_rpc_errors() {
+    let h = harness(50);
+    let mut client = AlClient::connect(&h.server.addr().to_string()).unwrap();
+    // unknown session
+    let err = client.query("nope", 5, None).unwrap_err();
+    assert!(format!("{err}").contains("unknown session"), "{err}");
+    // unknown strategy
+    client.push_data("s1", &h.manifest, Some(&h.init_labels)).unwrap();
+    let err = client.query("s1", 5, Some("not_a_strategy")).unwrap_err();
+    assert!(format!("{err}").contains("unknown strategy"), "{err}");
+    // auto requires agent workflow
+    let err = client.query("s1", 5, Some("auto")).unwrap_err();
+    assert!(format!("{err}").contains("agent"), "{err}");
+    // budget bigger than pool degrades to the whole pool
+    let (sel, _, _) = client.query("s1", 10_000, Some("random")).unwrap();
+    assert_eq!(sel.len(), 50);
+    // connection still usable after errors
+    client.ping().unwrap();
+}
+
+#[test]
+fn bad_init_labels_rejected() {
+    let h = harness(50);
+    let mut client = AlClient::connect(&h.server.addr().to_string()).unwrap();
+    let err = client.push_data("s1", &h.manifest, Some(&[1, 2, 3])).unwrap_err();
+    assert!(format!("{err}").contains("init_labels"), "{err}");
+}
+
+#[test]
+fn faulty_store_objects_are_skipped_not_fatal() {
+    let h = harness(120);
+    h.store.s3sim().inject_fault(Some("img_000070".into()));
+    let mut client = AlClient::connect(&h.server.addr().to_string()).unwrap();
+    client.push_data("s1", &h.manifest, Some(&h.init_labels)).unwrap();
+    let (sel, _, _) = client.query("s1", 119, Some("random")).unwrap();
+    // one pool sample poisoned -> selectable set is 119
+    assert_eq!(sel.len(), 119);
+    assert!(sel.iter().all(|s| !s.uri.contains("img_000070")));
+}
+
+#[test]
+fn metrics_and_cache_stats_flow() {
+    let h = harness(100);
+    let mut client = AlClient::connect(&h.server.addr().to_string()).unwrap();
+    client.push_data("s1", &h.manifest, Some(&h.init_labels)).unwrap();
+    client.query("s1", 10, Some("random")).unwrap();
+    let m = client.metrics().unwrap();
+    assert!(m.get("histograms").is_some());
+    assert!(m.path("meters.pipeline\u{2e}samples").is_none()); // dotted key is literal
+    let meters = m.get("meters").unwrap();
+    assert!(meters.get("pipeline.samples").is_some());
+    let cs = client.cache_stats().unwrap();
+    assert!(cs.get("misses").unwrap().as_i64().unwrap() > 0);
+    let zoo = client.strategies().unwrap();
+    assert!(zoo.contains(&"core_set".to_string()));
+}
+
+#[test]
+fn server_shutdown_is_clean() {
+    let h = harness(30);
+    let addr = h.server.addr();
+    h.server.shutdown();
+    // new connections should fail (or at least not serve)
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let c = std::net::TcpStream::connect_timeout(&addr, std::time::Duration::from_millis(200));
+    if let Ok(stream) = c {
+        // accept loop is gone; a request should not get a response
+        let mut stream = stream;
+        let _ = alaas::server::rpc::send_request(
+            &mut stream,
+            1,
+            "ping",
+            alaas::json::Value::Null,
+        );
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_millis(300)))
+            .unwrap();
+        let r = alaas::server::rpc::recv_response(&mut stream, 1);
+        assert!(r.is_err(), "server answered after shutdown");
+    }
+}
