@@ -1,0 +1,128 @@
+//! Distributed quickstart — one AL round through the cluster topology
+//! (DESIGN.md §Cluster):
+//!
+//!   1. Start 3 worker servers (in-process, real TCP).
+//!   2. Start a coordinator wired to them.
+//!   3. Push an unlabeled dataset through the *unchanged* client API:
+//!      the coordinator shards the pool so each worker pipelines its own
+//!      slice concurrently, then merges the selections.
+//!
+//! Run: `cargo run --release --example distributed_quickstart`
+
+use std::sync::Arc;
+
+use alaas::cache::DataCache;
+use alaas::cluster::{Coordinator, CoordinatorDeps};
+use alaas::config::AlaasConfig;
+use alaas::data::{generate_into_store, DatasetSpec, Oracle};
+use alaas::json::Value;
+use alaas::metrics::Registry;
+use alaas::runtime::backend::ComputeBackend;
+use alaas::runtime::HostBackend;
+use alaas::server::{AlClient, AlServer, ServerDeps};
+use alaas::store::{ObjectStore, StoreRouter};
+
+const WORKERS: usize = 3;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = AlaasConfig::default();
+    cfg.al_worker.port = 0; // ephemeral everywhere
+
+    // The dataset lives in the (simulated) object store all servers share
+    // — like a bucket every replica can reach.
+    let store = Arc::new(StoreRouter::new("/tmp", &cfg.store));
+    let spec = DatasetSpec::cifarsim(42).with_sizes(200, 1500, 0);
+    let scratch: Arc<dyn ObjectStore> = Arc::new(alaas::store::MemStore::new());
+    let manifest = generate_into_store(&spec, &scratch, "s3sim", "dist-quickstart");
+    for key in scratch.list("")? {
+        store.s3sim_backing().put(&key, &scratch.get(&key)?)?;
+    }
+    let oracle = Oracle::load(&scratch, "dist-quickstart")?;
+    let init_ids: Vec<u32> = manifest.init.iter().map(|s| s.id).collect();
+    let init_labels = oracle.label(&init_ids);
+    println!(
+        "dataset: {} (init {}, pool {})",
+        manifest.name,
+        manifest.init.len(),
+        manifest.pool.len()
+    );
+
+    // 1. Workers: each is a plain AlServer that also speaks the
+    // worker-facing cluster methods.
+    let workers: Vec<AlServer> = (0..WORKERS)
+        .map(|_| {
+            AlServer::start(
+                cfg.clone(),
+                ServerDeps {
+                    store: store.clone(),
+                    cache: Arc::new(DataCache::from_config(&cfg.cache)),
+                    backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
+                    metrics: Registry::new(),
+                },
+            )
+        })
+        .collect::<std::io::Result<_>>()?;
+    for (i, w) in workers.iter().enumerate() {
+        println!("worker {i}: listening on {}", w.addr());
+    }
+
+    // 2. Coordinator: the AlClient-compatible front for the pool.
+    let mut coord_cfg = cfg.clone();
+    coord_cfg.cluster.workers = workers.iter().map(|w| w.addr().to_string()).collect();
+    let metrics = Registry::new();
+    let coordinator = Coordinator::start(
+        coord_cfg,
+        CoordinatorDeps {
+            backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
+            metrics: metrics.clone(),
+        },
+    )?;
+    println!("coordinator: listening on {}", coordinator.addr());
+
+    // 3. The unchanged Figure 2 workflow, now against the cluster.
+    let mut client = AlClient::connect(&coordinator.addr().to_string())?;
+    client.ping()?;
+    client.push_data("dist", &manifest, Some(&init_labels))?;
+    println!("client: pushed {} pool samples across {WORKERS} workers", manifest.pool.len());
+
+    let t0 = std::time::Instant::now();
+    let (selected, strategy, select_ms) = client.query("dist", 10, None)?;
+    println!(
+        "client: query(budget=10) -> {} samples via {strategy} in {:.1}ms (merge {select_ms:.2}ms)",
+        selected.len(),
+        t0.elapsed().as_secs_f64() * 1e3,
+    );
+    for s in &selected {
+        println!("  -> id={:5} {}", s.id, s.uri);
+    }
+    // a diversity strategy exercises the candidate-then-refine protocol
+    let (div, strategy, _) = client.query("dist", 10, Some("k_center_greedy"))?;
+    println!("client: {strategy} refine pass -> {} samples", div.len());
+
+    // Per-shard scan timings + straggler spread from the coordinator's
+    // metrics registry (also served over the `metrics` RPC).
+    let snap = metrics.snapshot();
+    let hists = snap.get("histograms").expect("histograms");
+    println!("per-shard scan timings:");
+    for i in 0..WORKERS {
+        let name = format!("cluster.shard{i}.scan");
+        if let Some(h) = hists.get(&name) {
+            let mean_us = h.get("mean_us").and_then(Value::as_f64).unwrap_or(0.0);
+            let max_us = h.get("max_us").and_then(Value::as_f64).unwrap_or(0.0);
+            println!("  shard {i}: mean {:.1}ms, max {:.1}ms", mean_us / 1e3, max_us / 1e3);
+        }
+    }
+    let straggler = snap
+        .path("counters")
+        .and_then(|c| c.get("cluster.scan.straggler_ms"))
+        .and_then(Value::as_i64)
+        .unwrap_or(0);
+    println!("straggler spread (max - min shard scan): {straggler}ms");
+
+    coordinator.shutdown();
+    for w in workers {
+        w.shutdown();
+    }
+    println!("distributed quickstart OK");
+    Ok(())
+}

@@ -9,7 +9,7 @@
 //! Sharded, byte-bounded LRU: keys hash to a shard, each shard keeps exact
 //! LRU order; values are `Arc`ed so hits are zero-copy.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -19,7 +19,12 @@ pub type CachedTensor = Arc<Vec<f32>>;
 struct Shard {
     /// key -> (value, lru stamp)
     map: HashMap<String, (CachedTensor, u64)>,
-    /// monotonically increasing use stamp
+    /// stamp -> key, mirroring `map`'s stamps: the oldest entry is always
+    /// the first key, so eviction is O(log n) instead of the old O(n)
+    /// min-stamp scan (which went O(n²) under churn).
+    lru: BTreeMap<u64, String>,
+    /// monotonically increasing use stamp (unique per map entry, so it can
+    /// key the BTreeMap)
     tick: u64,
     bytes: usize,
 }
@@ -27,15 +32,8 @@ struct Shard {
 impl Shard {
     fn evict_to(&mut self, cap: usize) {
         while self.bytes > cap && !self.map.is_empty() {
-            // exact LRU: find min stamp (shards are small; O(n) eviction
-            // beats the bookkeeping of an intrusive list at our sizes —
-            // re-measured in §Perf if it ever shows up).
-            let victim = self
-                .map
-                .iter()
-                .min_by_key(|(_, (_, stamp))| *stamp)
-                .map(|(k, _)| k.clone())
-                .expect("non-empty");
+            let stamp = *self.lru.keys().next().expect("lru mirrors map");
+            let victim = self.lru.remove(&stamp).expect("stamp present");
             if let Some((v, _)) = self.map.remove(&victim) {
                 self.bytes -= v.len() * 4;
             }
@@ -60,7 +58,12 @@ impl DataCache {
         DataCache {
             shards: (0..shards)
                 .map(|_| {
-                    Mutex::new(Shard { map: HashMap::new(), tick: 0, bytes: 0 })
+                    Mutex::new(Shard {
+                        map: HashMap::new(),
+                        lru: BTreeMap::new(),
+                        tick: 0,
+                        bytes: 0,
+                    })
                 })
                 .collect(),
             capacity_per_shard: capacity_bytes / shards,
@@ -93,16 +96,26 @@ impl DataCache {
         let mut shard = self.shard_for(key).lock().unwrap();
         shard.tick += 1;
         let tick = shard.tick;
-        match shard.map.get_mut(key) {
+        let s = &mut *shard;
+        let hit = match s.map.get_mut(key) {
             Some((v, stamp)) => {
-                *stamp = tick;
-                let v = v.clone();
-                drop(shard);
+                // one lookup: refresh the stamp in place and move the lru
+                // mirror entry, reusing its stored key String (no alloc)
+                let old = std::mem::replace(stamp, tick);
+                if let Some(k) = s.lru.remove(&old) {
+                    s.lru.insert(tick, k);
+                }
+                Some(v.clone())
+            }
+            None => None,
+        };
+        drop(shard);
+        match hit {
+            Some(v) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 Some(v)
             }
             None => {
-                drop(shard);
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
@@ -122,9 +135,11 @@ impl DataCache {
         let mut shard = self.shard_for(key).lock().unwrap();
         shard.tick += 1;
         let tick = shard.tick;
-        if let Some((old, _)) = shard.map.insert(key.to_string(), (value, tick)) {
+        if let Some((old, old_stamp)) = shard.map.insert(key.to_string(), (value, tick)) {
             shard.bytes -= old.len() * 4;
+            shard.lru.remove(&old_stamp);
         }
+        shard.lru.insert(tick, key.to_string());
         shard.bytes += vbytes;
         let cap = self.capacity_per_shard;
         shard.evict_to(cap);
@@ -249,6 +264,55 @@ mod tests {
         let r: Result<CachedTensor, String> = c.get_or_insert_with("k", || Err("boom".into()));
         assert!(r.is_err());
         assert!(c.get("k").is_none());
+    }
+
+    /// The O(log n) eviction index must preserve exact LRU order under
+    /// interleaved get/put churn — checked against a brute-force model
+    /// that replays the same operations and evicts by scanning stamps.
+    #[test]
+    fn prop_lru_order_preserved_under_churn() {
+        crate::util::prop::check("cache-lru-order", 40, |rng| {
+            let slots = 3 + rng.below(6); // capacity in 10-float tensors
+            let c = DataCache::new(slots * 40, 1, true);
+            // model: Vec of (key, stamp); eviction removes min stamp
+            let mut model: Vec<(String, u64)> = Vec::new();
+            let mut tick = 0u64;
+            for _ in 0..300 {
+                let key = format!("k{}", rng.below(12));
+                tick += 1;
+                if rng.below(3) == 0 {
+                    let hit = c.get(&key).is_some();
+                    let model_hit = model.iter().any(|(k, _)| *k == key);
+                    prop_assert!(hit == model_hit, "get('{key}') hit mismatch");
+                    if let Some(e) = model.iter_mut().find(|(k, _)| *k == key) {
+                        e.1 = tick;
+                    }
+                } else {
+                    c.put(&key, tensor(10, 1.0));
+                    model.retain(|(k, _)| *k != key);
+                    model.push((key, tick));
+                    while model.len() > slots {
+                        let oldest = model
+                            .iter()
+                            .enumerate()
+                            .min_by_key(|(_, (_, s))| *s)
+                            .map(|(i, _)| i)
+                            .unwrap();
+                        model.remove(oldest);
+                    }
+                }
+            }
+            prop_assert!(
+                c.len() == model.len(),
+                "cache holds {} entries, model {}",
+                c.len(),
+                model.len()
+            );
+            for (k, _) in &model {
+                prop_assert!(c.get(k).is_some(), "model key '{k}' missing from cache");
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,0 +1,1072 @@
+//! Cluster coordinator: one `AlClient`-compatible endpoint that scales a
+//! session across N workers (DESIGN.md §Cluster).
+//!
+//! The coordinator accepts the unchanged client API (`push_data`,
+//! `query`, `status`, `metrics`, ...) plus `register` for dynamic worker
+//! membership. On `push_data` it shards the manifest's pool across the
+//! live workers (each worker also receives the full init split so every
+//! replica fine-tunes the identical head) and scatters `scan_shard`
+//! calls; each worker then pipelines its own shard concurrently. On
+//! `query` it scatters `select_shard`, re-dispatching a dead worker's
+//! shard to a survivor, and merges:
+//!
+//! * exact top-k for the uncertainty strategies,
+//! * coordinator-side sampling for `random`,
+//! * a candidate-then-refine pass (oversampled, embedding-carrying
+//!   candidates; full KCG/Core-Set/DBAL over the union) for the
+//!   diversity/hybrid strategies.
+//!
+//! Per-shard scan timings land in `cluster.shard{i}.scan` and the
+//! max-minus-min spread in the `cluster.scan.straggler_ms` gauge.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::AlaasConfig;
+use crate::json::{Map, Value};
+use crate::metrics::Registry;
+use crate::runtime::backend::ComputeBackend;
+use crate::server::rpc::{self, RpcError};
+use crate::server::server::{parse_init_labels, str_param};
+use crate::server::SELECT_SEED;
+use crate::store::{Manifest, SampleRef};
+use crate::strategies::{self, SelectCtx};
+use crate::util::mat::Mat;
+use crate::util::pool::ThreadPool;
+use crate::util::rng::Rng;
+
+use super::merge::{self, Candidate, MergeKind};
+use super::shard;
+
+/// Coordinator dependencies. The backend only runs the refine pass over
+/// candidate unions (tiny next to a pool scan), so the host backend is a
+/// fine default even when workers serve PJRT.
+pub struct CoordinatorDeps {
+    pub backend: Arc<dyn ComputeBackend>,
+    pub metrics: Arc<Registry>,
+}
+
+struct WorkerSlot {
+    addr: String,
+    alive: bool,
+}
+
+/// One shard of a cluster session: which global pool positions it covers
+/// and which worker slot currently owns it.
+struct ShardState {
+    indices: Vec<usize>,
+    worker: usize,
+}
+
+struct ClusterSession {
+    manifest: Manifest,
+    /// Kept verbatim for shard re-dispatch after a worker death.
+    init_labels: Option<Vec<u8>>,
+    /// Push epoch baked into the worker-side shard session ids, so a
+    /// re-pushed session never collides with (or reads through) shard
+    /// data from an earlier push.
+    epoch: u64,
+    shards: Vec<ShardState>,
+    /// Labeled-set embeddings, fetched once from a worker for the refine
+    /// protocol.
+    init_emb: Option<Mat>,
+}
+
+struct CoordState {
+    config: AlaasConfig,
+    deps: CoordinatorDeps,
+    workers: Mutex<Vec<WorkerSlot>>,
+    sessions: Mutex<HashMap<String, Arc<Mutex<ClusterSession>>>>,
+    /// Monotonic push counter feeding `ClusterSession::epoch`.
+    push_epoch: std::sync::atomic::AtomicU64,
+    shutdown: AtomicBool,
+}
+
+/// A running cluster coordinator.
+pub struct Coordinator {
+    addr: SocketAddr,
+    state: Arc<CoordState>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Bind `config.al_worker.host:port` (0 = ephemeral) and start
+    /// serving. Workers listed under `[cluster]` are pre-registered;
+    /// more can join via the `register` RPC.
+    pub fn start(config: AlaasConfig, deps: CoordinatorDeps) -> std::io::Result<Coordinator> {
+        let listener =
+            TcpListener::bind((config.al_worker.host.as_str(), config.al_worker.port))?;
+        let addr = listener.local_addr()?;
+        let workers = config
+            .cluster
+            .workers
+            .iter()
+            .map(|a| WorkerSlot { addr: a.clone(), alive: true })
+            .collect();
+        let state = Arc::new(CoordState {
+            config,
+            deps,
+            workers: Mutex::new(workers),
+            sessions: Mutex::new(HashMap::new()),
+            push_epoch: std::sync::atomic::AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+        let accept_state = state.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("alaas-coord-accept".into())
+            .spawn(move || accept_loop(listener, accept_state))?;
+        crate::log_info!("cluster", "coordinator listening on {addr}");
+        Ok(Coordinator { addr, state, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Number of currently-live registered workers.
+    pub fn live_workers(&self) -> usize {
+        self.state.workers.lock().unwrap().iter().filter(|w| w.alive).count()
+    }
+
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        if self.state.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<CoordState>) {
+    let pool = ThreadPool::new("alaas-coord-conn", 16, 64);
+    for conn in listener.incoming() {
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                let state = state.clone();
+                pool.execute(move || handle_conn(stream, state));
+            }
+            Err(e) => {
+                crate::log_warn!("cluster", "accept error: {e}");
+            }
+        }
+    }
+    pool.shutdown();
+}
+
+fn handle_conn(mut stream: TcpStream, state: Arc<CoordState>) {
+    rpc::serve_conn(
+        &mut stream,
+        "cluster",
+        &state.shutdown,
+        &state.deps.metrics,
+        |method, params| dispatch(&state, method, params),
+    );
+}
+
+fn dispatch(state: &Arc<CoordState>, method: &str, params: &Value) -> Result<Value, String> {
+    match method {
+        "ping" => Ok(Value::from("pong")),
+        "register" => register(state, params),
+        "push_data" => push_data(state, params),
+        "status" => status(state, params),
+        "query" => query(state, params),
+        "metrics" => Ok(state.deps.metrics.snapshot()),
+        "strategies" => Ok(Value::Array(
+            strategies::zoo_names().into_iter().map(Value::from).collect(),
+        )),
+        "cache_stats" => cache_stats(state),
+        "cluster_status" => Ok(cluster_status(state)),
+        other => Err(format!("unknown method '{other}'")),
+    }
+}
+
+
+/// RPCs that answer promptly (`scan_shard` registers the session and
+/// returns; processing is backgrounded).
+const FAST_RPC_TIMEOUT: Duration = Duration::from_secs(30);
+/// Monitoring polls (`status`, `cache_stats`) must never hang the
+/// coordinator on one stuck worker.
+const POLL_RPC_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Read deadline for a `select_shard` call: the worker may legitimately
+/// block for the client-requested `wait_ms` while its scan finishes, so
+/// the transport deadline must exceed it or a slow scan would cascade
+/// into mark-dead + re-dispatch on every worker in turn.
+fn select_rpc_timeout(wait_ms: u64) -> Duration {
+    Duration::from_millis(wait_ms) + Duration::from_secs(60)
+}
+
+/// One blocking RPC to a worker over a fresh connection.
+fn call_worker(
+    addr: &str,
+    method: &str,
+    params: Value,
+    read_timeout: Duration,
+) -> Result<Value, RpcError> {
+    let sock = addr
+        .to_socket_addrs()
+        .ok()
+        .and_then(|mut it| it.next())
+        .ok_or_else(|| RpcError::Malformed(format!("bad worker addr '{addr}'")))?;
+    let mut stream = TcpStream::connect_timeout(&sock, Duration::from_secs(2))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(read_timeout)).ok();
+    rpc::send_request(&mut stream, 1, method, params)?;
+    rpc::recv_response(&mut stream, 1)
+}
+
+/// Snapshot of live worker slots as (slot index, addr).
+fn live_slots(state: &CoordState) -> Vec<(usize, String)> {
+    state
+        .workers
+        .lock()
+        .unwrap()
+        .iter()
+        .enumerate()
+        .filter(|(_, w)| w.alive)
+        .map(|(i, w)| (i, w.addr.clone()))
+        .collect()
+}
+
+fn worker_addr(state: &CoordState, slot: usize) -> Option<String> {
+    let ws = state.workers.lock().unwrap();
+    ws.get(slot).filter(|w| w.alive).map(|w| w.addr.clone())
+}
+
+fn mark_dead(state: &CoordState, slot: usize) {
+    let mut ws = state.workers.lock().unwrap();
+    if let Some(w) = ws.get_mut(slot) {
+        if w.alive {
+            w.alive = false;
+            crate::log_warn!("cluster", "worker {} ({}) marked dead", slot, w.addr);
+            drop(ws);
+            // count actual transitions, not every observation of a dead slot
+            state
+                .deps
+                .metrics
+                .counter("cluster.workers_dead")
+                .fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// `register {addr}` — add a worker (or revive a known one).
+fn register(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
+    let addr = str_param(params, "addr")?;
+    if !addr.contains(':') {
+        return Err(format!("worker address '{addr}' is not host:port"));
+    }
+    let mut ws = state.workers.lock().unwrap();
+    if let Some(w) = ws.iter_mut().find(|w| w.addr == addr) {
+        w.alive = true;
+    } else {
+        ws.push(WorkerSlot { addr: addr.clone(), alive: true });
+    }
+    let live = ws.iter().filter(|w| w.alive).count();
+    drop(ws);
+    crate::log_info!("cluster", "worker {addr} registered ({live} live)");
+    let mut m = Map::new();
+    m.insert("workers", Value::from(live));
+    Ok(Value::Object(m))
+}
+
+fn shard_session_id(session: &str, epoch: u64, shard: usize) -> String {
+    format!("{session}@e{epoch}#shard{shard}")
+}
+
+/// Sub-manifest for one shard: the full init split (every worker
+/// fine-tunes the identical head) plus the shard's pool slice.
+fn sub_manifest(m: &Manifest, indices: &[usize], shard_idx: usize) -> Manifest {
+    Manifest {
+        name: format!("{}#shard{shard_idx}", m.name),
+        num_classes: m.num_classes,
+        img_dim: m.img_dim,
+        init: m.init.clone(),
+        pool: indices.iter().map(|&i| m.pool[i].clone()).collect(),
+        test: vec![],
+    }
+}
+
+fn scan_shard_params(
+    session: &str,
+    epoch: u64,
+    shard_idx: usize,
+    manifest: &Manifest,
+    indices: &[usize],
+    init_labels: Option<&[u8]>,
+) -> Value {
+    let mut p = Map::new();
+    p.insert("session", Value::from(shard_session_id(session, epoch, shard_idx)));
+    p.insert("shard", Value::from(shard_idx));
+    p.insert("manifest", sub_manifest(manifest, indices, shard_idx).to_value());
+    if let Some(l) = init_labels {
+        p.insert(
+            "init_labels",
+            Value::Array(l.iter().map(|&x| Value::from(x as u64)).collect()),
+        );
+    }
+    Value::Object(p)
+}
+
+/// Send one shard to a worker: the preferred slot first, then any other
+/// live worker. Returns the slot that accepted it.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_shard(
+    state: &CoordState,
+    session: &str,
+    epoch: u64,
+    shard_idx: usize,
+    manifest: &Manifest,
+    indices: &[usize],
+    init_labels: Option<&[u8]>,
+    preferred: usize,
+) -> Result<usize, String> {
+    let params = scan_shard_params(session, epoch, shard_idx, manifest, indices, init_labels);
+    let mut last_err = String::from("no live workers");
+    let mut order = vec![preferred];
+    order.extend(live_slots(state).into_iter().map(|(i, _)| i).filter(|&i| i != preferred));
+    for slot in order {
+        let Some(addr) = worker_addr(state, slot) else { continue };
+        match call_worker(&addr, "scan_shard", params.clone(), FAST_RPC_TIMEOUT) {
+            Ok(_) => return Ok(slot),
+            // the worker is alive and rejected the push itself (bad
+            // manifest, spawn failure): deterministic — retrying the
+            // identical params elsewhere would only kill healthy slots
+            Err(RpcError::Remote(e)) => {
+                return Err(format!("shard {shard_idx}: {e}"));
+            }
+            Err(e) => {
+                last_err = format!("worker {addr}: {e}");
+                mark_dead(state, slot);
+            }
+        }
+    }
+    Err(format!("shard {shard_idx}: no live worker accepted ({last_err})"))
+}
+
+/// `push_data {session, manifest, init_labels?}` — shard + scatter.
+fn push_data(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
+    let session_id = str_param(params, "session")?;
+    let manifest_v = params.get("manifest").ok_or("missing param 'manifest'")?;
+    let manifest = Manifest::from_value(manifest_v).map_err(|e| e.to_string())?;
+    let init_labels = parse_init_labels(params, manifest.init.len())?;
+
+    let live = live_slots(state);
+    if live.is_empty() {
+        return Err("no live workers registered".into());
+    }
+    let epoch = state.push_epoch.fetch_add(1, Ordering::Relaxed);
+    let plan =
+        shard::plan(manifest.pool.len(), live.len(), state.config.cluster.shard_policy);
+
+    // Scatter every non-empty shard concurrently; a refused shard walks
+    // the remaining live workers before giving up.
+    let jobs: Vec<(usize, Vec<usize>, usize)> = plan
+        .shards
+        .iter()
+        .enumerate()
+        .filter(|(_, idx)| !idx.is_empty())
+        .map(|(i, idx)| (i, idx.clone(), live[i].0))
+        .collect();
+    let outcomes: Vec<Result<(usize, Vec<usize>, usize), String>> =
+        std::thread::scope(|sc| {
+            let handles: Vec<_> = jobs
+                .iter()
+                .map(|job| {
+                    let (shard_idx, indices, preferred) = (job.0, &job.1, job.2);
+                    let (manifest, init_labels, session) =
+                        (&manifest, &init_labels, session_id.as_str());
+                    sc.spawn(move || {
+                        dispatch_shard(
+                            state,
+                            session,
+                            epoch,
+                            shard_idx,
+                            manifest,
+                            indices,
+                            init_labels.as_deref(),
+                            preferred,
+                        )
+                        .map(|slot| (shard_idx, indices.clone(), slot))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err("dispatch panicked".into())))
+                .collect()
+        });
+
+    let mut ok = Vec::new();
+    let mut first_err = None;
+    for o in outcomes {
+        match o {
+            Ok(x) => ok.push(x),
+            Err(e) => first_err = first_err.or(Some(e)),
+        }
+    }
+    if let Some(e) = first_err {
+        // don't leave half a session resident on the workers
+        let accepted: Vec<(usize, usize)> =
+            ok.iter().map(|(i, _, slot)| (*i, *slot)).collect();
+        drop_shard_sessions(state, &session_id, epoch, &accepted);
+        return Err(e);
+    }
+    let mut shards = Vec::new();
+    for (shard_idx, indices, slot) in ok {
+        debug_assert_eq!(shard_idx, shards.len());
+        shards.push(ShardState { indices, worker: slot });
+    }
+    let n_shards = shards.len();
+    let sizes: Vec<Value> =
+        shards.iter().map(|s| Value::from(s.indices.len())).collect();
+    let previous = state.sessions.lock().unwrap().insert(
+        session_id.clone(),
+        Arc::new(Mutex::new(ClusterSession {
+            manifest: manifest.clone(),
+            init_labels,
+            epoch,
+            shards,
+            init_emb: None,
+        })),
+    );
+    let replaced = previous.is_some();
+    if let Some(old) = previous {
+        // free the old push's shard sessions; epoched ids mean they can
+        // never collide with the ones this push just created
+        let (old_epoch, stale): (u64, Vec<(usize, usize)>) = {
+            let o = old.lock().unwrap();
+            (
+                o.epoch,
+                o.shards.iter().enumerate().map(|(i, s)| (i, s.worker)).collect(),
+            )
+        };
+        drop_shard_sessions(state, &session_id, old_epoch, &stale);
+    }
+    state.deps.metrics.meter("cluster.pushed_samples").add(manifest.pool.len() as u64);
+
+    let mut m = Map::new();
+    m.insert("session", Value::from(session_id));
+    m.insert("pool_samples", Value::from(manifest.pool.len()));
+    m.insert("shards", Value::Array(sizes));
+    m.insert("workers", Value::from(n_shards));
+    m.insert("replaced", Value::Bool(replaced));
+    Ok(Value::Object(m))
+}
+
+/// Best-effort `drop_session` for `(shard id, worker slot)` pairs —
+/// cleanup after a partial push failure or a session re-push, so scanned
+/// shards don't accumulate in worker memory. Errors are ignored: a dead
+/// worker frees the memory on its own.
+fn drop_shard_sessions(
+    state: &CoordState,
+    session: &str,
+    epoch: u64,
+    pairs: &[(usize, usize)],
+) {
+    for &(shard_idx, slot) in pairs {
+        let Some(addr) = worker_addr(state, slot) else { continue };
+        let mut p = Map::new();
+        p.insert("session", Value::from(shard_session_id(session, epoch, shard_idx)));
+        if call_worker(&addr, "drop_session", Value::Object(p), POLL_RPC_TIMEOUT).is_err() {
+            crate::log_debug!(
+                "cluster",
+                "drop_session for shard {shard_idx} on {addr} failed (ignored)"
+            );
+        }
+    }
+}
+
+fn get_session(
+    state: &CoordState,
+    id: &str,
+) -> Result<Arc<Mutex<ClusterSession>>, String> {
+    state
+        .sessions
+        .lock()
+        .unwrap()
+        .get(id)
+        .cloned()
+        .ok_or_else(|| format!("unknown session '{id}'"))
+}
+
+/// What one shard's `select_shard` returned (indices already global).
+struct ShardReply {
+    shard: usize,
+    candidates: Vec<Candidate>,
+    failed_global: Vec<usize>,
+    scan_ms: f64,
+    init_emb: Option<Mat>,
+    /// Slot that finally served the shard (differs from the assignment
+    /// after a re-dispatch).
+    worker: usize,
+}
+
+struct ShardJob {
+    shard: usize,
+    indices: Vec<usize>,
+    worker: usize,
+    budget: usize,
+    with_embeddings: bool,
+    with_init_emb: bool,
+}
+
+/// Run `select_shard` for one shard, re-dispatching to a survivor (fresh
+/// `scan_shard` + `select_shard`) when the owning worker is unreachable.
+#[allow(clippy::too_many_arguments)]
+fn select_on_shard(
+    state: &CoordState,
+    session: &str,
+    epoch: u64,
+    job: &ShardJob,
+    manifest: &Manifest,
+    init_labels: Option<&[u8]>,
+    strategy: &str,
+    wait_ms: u64,
+) -> Result<ShardReply, String> {
+    let mut p = Map::new();
+    p.insert("session", Value::from(shard_session_id(session, epoch, job.shard)));
+    p.insert("budget", Value::from(job.budget));
+    if job.budget > 0 {
+        p.insert("strategy", Value::from(strategy));
+    }
+    p.insert("with_embeddings", Value::Bool(job.with_embeddings));
+    p.insert("with_init_emb", Value::Bool(job.with_init_emb));
+    p.insert("wait_ms", Value::from(wait_ms as usize));
+    let params = Value::Object(p);
+
+    let mut slot = job.worker;
+    let mut last_err = String::from("no live workers");
+    // first attempt on the assigned worker, then walk survivors; a worker
+    // that doesn't know the session (never saw the shard, or restarted)
+    // gets a fresh scan_shard push before selecting.
+    for _attempt in 0..=live_slots(state).len() {
+        let Some(addr) = worker_addr(state, slot) else {
+            match next_live_slot(state, slot) {
+                Some(s) => {
+                    slot = s;
+                    continue;
+                }
+                None => break,
+            }
+        };
+        let select_timeout = select_rpc_timeout(wait_ms);
+        let resp = match call_worker(&addr, "select_shard", params.clone(), select_timeout) {
+            Err(RpcError::Remote(e)) if e.contains("unknown session") => {
+                state
+                    .deps
+                    .metrics
+                    .counter("cluster.shard_redispatch")
+                    .fetch_add(1, Ordering::Relaxed);
+                crate::log_warn!(
+                    "cluster",
+                    "re-dispatching shard {} of '{session}' to {addr}",
+                    job.shard
+                );
+                call_worker(
+                    &addr,
+                    "scan_shard",
+                    scan_shard_params(
+                        session,
+                        epoch,
+                        job.shard,
+                        manifest,
+                        &job.indices,
+                        init_labels,
+                    ),
+                    FAST_RPC_TIMEOUT,
+                )
+                .and_then(|_| {
+                    call_worker(&addr, "select_shard", params.clone(), select_timeout)
+                })
+            }
+            other => other,
+        };
+        match resp {
+            Ok(v) => return decode_shard_reply(&v, job, slot),
+            Err(RpcError::Remote(e)) => {
+                // the worker is alive; the request itself is bad
+                return Err(format!("shard {}: {e}", job.shard));
+            }
+            Err(e) => {
+                last_err = format!("worker {addr}: {e}");
+                mark_dead(state, slot);
+                match next_live_slot(state, slot) {
+                    Some(s) => slot = s,
+                    None => break,
+                }
+            }
+        }
+    }
+    Err(format!("shard {}: no live worker served it ({last_err})", job.shard))
+}
+
+fn next_live_slot(state: &CoordState, after: usize) -> Option<usize> {
+    let live = live_slots(state);
+    if live.is_empty() {
+        return None;
+    }
+    live.iter()
+        .map(|(i, _)| *i)
+        .find(|&i| i > after)
+        .or_else(|| live.first().map(|(i, _)| *i))
+}
+
+fn decode_shard_reply(
+    v: &Value,
+    job: &ShardJob,
+    worker: usize,
+) -> Result<ShardReply, String> {
+    let to_global = |local: usize| -> Result<usize, String> {
+        job.indices
+            .get(local)
+            .copied()
+            .ok_or_else(|| format!("shard {}: local index {local} out of range", job.shard))
+    };
+    let failed_global = v
+        .get("failed")
+        .and_then(Value::as_array)
+        .unwrap_or(&[])
+        .iter()
+        .map(|x| {
+            x.as_usize()
+                .ok_or_else(|| "bad failed index".to_string())
+                .and_then(|l| to_global(l))
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    let mut candidates = Vec::new();
+    if let Some(arr) = v.get("candidates").and_then(Value::as_array) {
+        for c in arr {
+            let mut cand = Candidate::from_value(c)?;
+            cand.idx = to_global(cand.idx)?;
+            candidates.push(cand);
+        }
+    }
+    let init_emb = match v.get("init_emb") {
+        Some(m) => Some(merge::mat_from_value(m)?),
+        None => None,
+    };
+    Ok(ShardReply {
+        shard: job.shard,
+        candidates,
+        failed_global,
+        scan_ms: v.get("scan_ms").and_then(Value::as_f64).unwrap_or(0.0),
+        init_emb,
+        worker,
+    })
+}
+
+/// `query {session, budget, strategy?, wait_ms?}` — scatter, merge,
+/// respond in the exact shape of the single-server `query`.
+fn query(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
+    let session_id = str_param(params, "session")?;
+    let budget =
+        params.get("budget").and_then(Value::as_usize).ok_or("missing usize param 'budget'")?;
+    let strategy_name = match params.get("strategy").and_then(Value::as_str) {
+        Some(s) => s.to_string(),
+        None => state.config.active_learning.strategy.as_str().to_string(),
+    };
+    if strategy_name == "auto" {
+        return Err(
+            "strategy 'auto' requires the agent workflow (CLI `alaas agent`): the PSHEA \
+             loop needs per-round oracle labels, which the one-shot query protocol does \
+             not carry"
+                .into(),
+        );
+    }
+    let kind = merge::merge_kind(&strategy_name)
+        .ok_or_else(|| format!("unknown strategy '{strategy_name}'"))?;
+    let wait_ms =
+        params.get("wait_ms").and_then(Value::as_usize).unwrap_or(120_000) as u64;
+
+    let sess = get_session(state, &session_id)?;
+    let (manifest, init_labels, epoch, shard_specs, have_init_emb) = {
+        let s = sess.lock().unwrap();
+        let specs: Vec<(usize, Vec<usize>, usize)> = s
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, sh)| (i, sh.indices.clone(), sh.worker))
+            .collect();
+        (
+            s.manifest.clone(),
+            s.init_labels.clone(),
+            s.epoch,
+            specs,
+            s.init_emb.is_some(),
+        )
+    };
+    let n_shards = shard_specs.iter().filter(|(_, idx, _)| !idx.is_empty()).count().max(1);
+
+    // per-shard candidate budget by merge protocol
+    let oversample = state.config.cluster.oversample_factor;
+    let (local_budget, with_embeddings) = match kind {
+        MergeKind::ExactTopK { .. } => (budget, false),
+        MergeKind::Refine => ((oversample * budget).div_ceil(n_shards).max(1), true),
+        MergeKind::Random => (0, false),
+    };
+    let need_init_emb = matches!(kind, MergeKind::Refine)
+        && !have_init_emb
+        && !manifest.init.is_empty();
+
+    let jobs: Vec<ShardJob> = shard_specs
+        .into_iter()
+        .filter(|(_, idx, _)| !idx.is_empty())
+        .enumerate()
+        .map(|(pos, (shard, indices, worker))| ShardJob {
+            shard,
+            indices,
+            worker,
+            budget: local_budget,
+            with_embeddings,
+            with_init_emb: need_init_emb && pos == 0,
+        })
+        .collect();
+
+    let t_query = Instant::now();
+    let replies: Vec<Result<ShardReply, String>> = std::thread::scope(|sc| {
+        let handles: Vec<_> = jobs
+            .iter()
+            .map(|job| {
+                let (manifest, init_labels, session, strategy) = (
+                    &manifest,
+                    &init_labels,
+                    session_id.as_str(),
+                    strategy_name.as_str(),
+                );
+                sc.spawn(move || {
+                    select_on_shard(
+                        state,
+                        session,
+                        epoch,
+                        job,
+                        manifest,
+                        init_labels.as_deref(),
+                        strategy,
+                        wait_ms,
+                    )
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err("shard query panicked".into())))
+            .collect()
+    });
+    let mut shard_replies = Vec::with_capacity(replies.len());
+    for r in replies {
+        shard_replies.push(r?);
+    }
+
+    // bookkeeping: re-dispatched assignments, fetched init embeddings,
+    // per-shard scan metrics + straggler spread
+    {
+        let mut s = sess.lock().unwrap();
+        for r in &shard_replies {
+            s.shards[r.shard].worker = r.worker;
+            if let Some(m) = &r.init_emb {
+                if s.init_emb.is_none() {
+                    s.init_emb = Some(m.clone());
+                }
+            }
+        }
+    }
+    let mut scan_min = f64::INFINITY;
+    let mut scan_max: f64 = 0.0;
+    for r in &shard_replies {
+        let d = Duration::from_secs_f64((r.scan_ms / 1e3).max(0.0));
+        state.deps.metrics.time("cluster.shard_scan", d);
+        state.deps.metrics.time(&format!("cluster.shard{}.scan", r.shard), d);
+        scan_min = scan_min.min(r.scan_ms);
+        scan_max = scan_max.max(r.scan_ms);
+    }
+    if !shard_replies.is_empty() {
+        let straggler_ms = (scan_max - scan_min).max(0.0) as u64;
+        state
+            .deps
+            .metrics
+            .counter("cluster.scan.straggler_ms")
+            .store(straggler_ms, Ordering::Relaxed);
+    }
+
+    // merge
+    let t0 = Instant::now();
+    let picked_global: Vec<usize> = match kind {
+        MergeKind::ExactTopK { ascending, .. } => {
+            let cands: Vec<(usize, f32)> = shard_replies
+                .iter()
+                .flat_map(|r| r.candidates.iter().map(|c| (c.idx, c.score)))
+                .collect();
+            merge::merge_exact_topk(&cands, budget.min(cands.len()), ascending)
+        }
+        MergeKind::Random => {
+            let mut failed = vec![false; manifest.pool.len()];
+            for r in &shard_replies {
+                for &g in &r.failed_global {
+                    failed[g] = true;
+                }
+            }
+            let ok_rows: Vec<usize> =
+                (0..manifest.pool.len()).filter(|&i| !failed[i]).collect();
+            let mut rng = Rng::new(SELECT_SEED);
+            rng.sample_indices(ok_rows.len(), budget.min(ok_rows.len()))
+                .into_iter()
+                .map(|rel| ok_rows[rel])
+                .collect()
+        }
+        MergeKind::Refine => {
+            let all: Vec<&Candidate> =
+                shard_replies.iter().flat_map(|r| r.candidates.iter()).collect();
+            if all.is_empty() {
+                vec![]
+            } else {
+                let emb =
+                    Mat::from_rows(all.iter().map(|c| c.emb.as_slice()));
+                let scores =
+                    Mat::from_rows(all.iter().map(|c| c.scores.as_slice()));
+                let labeled = {
+                    let s = sess.lock().unwrap();
+                    s.init_emb.clone().unwrap_or_else(|| Mat::zeros(0, emb.cols()))
+                };
+                let strat = strategies::by_name(&strategy_name)
+                    .ok_or_else(|| format!("unknown strategy '{strategy_name}'"))?;
+                let ctx = SelectCtx {
+                    scores: &scores,
+                    embeddings: &emb,
+                    labeled: &labeled,
+                    backend: state.deps.backend.as_ref(),
+                    seed: SELECT_SEED,
+                };
+                strat
+                    .select(&ctx, budget)
+                    .map_err(|e| e.to_string())?
+                    .into_iter()
+                    .map(|rel| all[rel].idx)
+                    .collect()
+            }
+        }
+    };
+    let select_elapsed = t0.elapsed();
+    state.deps.metrics.time("al.select", select_elapsed);
+    state.deps.metrics.meter("al.selected").add(picked_global.len() as u64);
+    state.deps.metrics.time("cluster.query", t_query.elapsed());
+
+    let selected: Vec<Value> = picked_global
+        .iter()
+        .map(|&g| {
+            let sr: &SampleRef = &manifest.pool[g];
+            let mut m = Map::new();
+            m.insert("id", Value::from(sr.id as u64));
+            m.insert("uri", Value::from(sr.uri.clone()));
+            Value::Object(m)
+        })
+        .collect();
+    let mut m = Map::new();
+    m.insert("strategy", Value::from(strategy_name));
+    m.insert("selected", Value::Array(selected));
+    m.insert("select_ms", Value::Number(select_elapsed.as_secs_f64() * 1e3));
+    m.insert(
+        "scan_ms",
+        Value::Number(if scan_max.is_finite() { scan_max } else { 0.0 }),
+    );
+    Ok(Value::Object(m))
+}
+
+/// Poll one shard's worker for its status string.
+fn poll_shard_status(
+    state: &CoordState,
+    session: &str,
+    epoch: u64,
+    shard: usize,
+    slot: usize,
+) -> String {
+    match worker_addr(state, slot) {
+        Some(addr) => {
+            let mut p = Map::new();
+            p.insert("session", Value::from(shard_session_id(session, epoch, shard)));
+            match call_worker(&addr, "status", Value::Object(p), POLL_RPC_TIMEOUT) {
+                Ok(v) => v
+                    .get("status")
+                    .and_then(Value::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                // the worker is reachable but lost the shard (e.g.
+                // restart): a query will re-dispatch — do NOT kill
+                // the slot over an application-level error
+                Err(RpcError::Remote(e)) => format!("needs-redispatch: {e}"),
+                Err(e) => {
+                    mark_dead(state, slot);
+                    format!("unreachable: {e}")
+                }
+            }
+        }
+        None => "unreachable: worker dead".into(),
+    }
+}
+
+/// `status {session}` — aggregate shard statuses from the workers
+/// (polled concurrently so one stuck worker costs one timeout, not N).
+fn status(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
+    let session_id = str_param(params, "session")?;
+    let sess = get_session(state, &session_id)?;
+    let (epoch, specs): (u64, Vec<(usize, usize, usize)>) = {
+        let s = sess.lock().unwrap();
+        (
+            s.epoch,
+            s.shards
+                .iter()
+                .enumerate()
+                .map(|(i, sh)| (i, sh.worker, sh.indices.len()))
+                .collect(),
+        )
+    };
+    let statuses: Vec<String> = std::thread::scope(|sc| {
+        let handles: Vec<_> = specs
+            .iter()
+            .map(|&(shard, slot, _)| {
+                let session = session_id.as_str();
+                sc.spawn(move || poll_shard_status(state, session, epoch, shard, slot))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| "unknown: poll panicked".into()))
+            .collect()
+    });
+    let mut shard_statuses = Vec::new();
+    let mut processing = 0usize;
+    let mut failed = 0usize;
+    let mut unreachable = 0usize;
+    for ((shard, _, size), st) in specs.iter().zip(statuses) {
+        if st == "processing" {
+            processing += 1;
+        } else if st.starts_with("failed") {
+            failed += 1;
+        } else if st.starts_with("unreachable") || st.starts_with("needs-redispatch") {
+            unreachable += 1;
+        }
+        let mut sm = Map::new();
+        sm.insert("shard", Value::from(*shard));
+        sm.insert("pool_samples", Value::from(*size));
+        sm.insert("status", Value::from(st));
+        shard_statuses.push(Value::Object(sm));
+    }
+    let overall = if failed > 0 {
+        "failed: one or more shards failed".to_string()
+    } else if processing > 0 {
+        "processing".to_string()
+    } else if unreachable > 0 {
+        // a query would re-dispatch; report degraded rather than lying
+        format!("degraded: {unreachable} shard(s) need re-dispatch")
+    } else {
+        "ready".to_string()
+    };
+    let mut m = Map::new();
+    m.insert("status", Value::from(overall));
+    m.insert("shards", Value::Array(shard_statuses));
+    Ok(Value::Object(m))
+}
+
+/// Aggregate data-cache statistics across live workers (polled
+/// concurrently, like `status`).
+fn cache_stats(state: &Arc<CoordState>) -> Result<Value, String> {
+    let slots = live_slots(state);
+    let replies: Vec<Option<Value>> = std::thread::scope(|sc| {
+        let handles: Vec<_> = slots
+            .iter()
+            .map(|(slot, addr)| {
+                let (slot, addr) = (*slot, addr.as_str());
+                sc.spawn(move || {
+                    match call_worker(addr, "cache_stats", Value::Null, POLL_RPC_TIMEOUT) {
+                        Ok(v) => Some(v),
+                        Err(_) => {
+                            mark_dead(state, slot);
+                            None
+                        }
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap_or(None)).collect()
+    });
+    let (mut hits, mut misses, mut bytes, mut entries) = (0u64, 0u64, 0u64, 0u64);
+    for v in replies.into_iter().flatten() {
+        let g = |k: &str| v.get(k).and_then(Value::as_i64).unwrap_or(0) as u64;
+        hits += g("hits");
+        misses += g("misses");
+        bytes += g("bytes");
+        entries += g("entries");
+    }
+    let mut m = Map::new();
+    m.insert("hits", Value::from(hits));
+    m.insert("misses", Value::from(misses));
+    m.insert("bytes", Value::from(bytes));
+    m.insert("entries", Value::from(entries));
+    Ok(Value::Object(m))
+}
+
+/// `cluster_status` — worker membership + session shard assignments.
+fn cluster_status(state: &Arc<CoordState>) -> Value {
+    let workers: Vec<Value> = state
+        .workers
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|w| {
+            let mut m = Map::new();
+            m.insert("addr", Value::from(w.addr.clone()));
+            m.insert("alive", Value::Bool(w.alive));
+            Value::Object(m)
+        })
+        .collect();
+    let sessions: Vec<Value> = state
+        .sessions
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(name, sess)| {
+            let s = sess.lock().unwrap();
+            let mut m = Map::new();
+            m.insert("session", Value::from(name.clone()));
+            m.insert("pool_samples", Value::from(s.manifest.pool.len()));
+            m.insert(
+                "shards",
+                Value::Array(
+                    s.shards
+                        .iter()
+                        .map(|sh| {
+                            let mut sm = Map::new();
+                            sm.insert("worker", Value::from(sh.worker));
+                            sm.insert("pool_samples", Value::from(sh.indices.len()));
+                            Value::Object(sm)
+                        })
+                        .collect(),
+                ),
+            );
+            Value::Object(m)
+        })
+        .collect();
+    let mut m = Map::new();
+    m.insert("workers", Value::Array(workers));
+    m.insert("sessions", Value::Array(sessions));
+    m.insert("shard_policy", Value::from(state.config.cluster.shard_policy.as_str()));
+    Value::Object(m)
+}

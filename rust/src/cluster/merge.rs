@@ -1,0 +1,296 @@
+//! Coordinator-side merge semantics (DESIGN.md §Cluster).
+//!
+//! Three distributed-selection protocols, chosen per strategy:
+//!
+//! * **Exact top-k** (the four uncertainty strategies): each worker
+//!   returns its local top-`budget` `(index, score)` pairs; the global
+//!   top-`budget` is a subset of that union, so merging under the *same
+//!   total order* as `util::topk` (NaN last, ties broken by ascending
+//!   global index) reproduces the single-server selection exactly.
+//!   Shard plans keep per-shard index lists ascending so local
+//!   tie-breaks agree with global ones.
+//! * **Coordinator-side sampling** (`random`): selection is a pure
+//!   function of (non-failed pool size, seed), so the coordinator
+//!   samples locally; workers only report their failure lists. Also
+//!   exact.
+//! * **Candidate-then-refine** (diversity/hybrid): each worker returns an
+//!   oversampled, locally-diverse candidate set *with embeddings*; the
+//!   coordinator runs the full strategy (KCG / Core-Set / DBAL) over the
+//!   candidate union against the labeled-set embeddings.
+
+use std::cmp::Ordering;
+
+use crate::json::{Map, Value};
+use crate::strategies::ScoreColumn;
+use crate::util::mat::Mat;
+
+/// How the coordinator combines per-shard results for a strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeKind {
+    /// Global selection = top-k merge of per-worker top-k lists.
+    ExactTopK { column: ScoreColumn, ascending: bool },
+    /// Global selection = strategy re-run over the oversampled candidate
+    /// union (needs embeddings on the wire).
+    Refine,
+    /// Coordinator-side sampling over the global non-failed index set
+    /// (workers only report their failure lists).
+    Random,
+}
+
+/// Merge protocol for a zoo strategy name; `None` for unknown names
+/// (including `auto`, which needs the agent workflow, as on the single
+/// server).
+pub fn merge_kind(strategy: &str) -> Option<MergeKind> {
+    match strategy {
+        "random" => Some(MergeKind::Random),
+        "least_confidence" => Some(MergeKind::ExactTopK {
+            column: ScoreColumn::LeastConfidence,
+            ascending: false,
+        }),
+        "margin_confidence" => {
+            Some(MergeKind::ExactTopK { column: ScoreColumn::Margin, ascending: true })
+        }
+        "ratio_confidence" => {
+            Some(MergeKind::ExactTopK { column: ScoreColumn::Ratio, ascending: false })
+        }
+        "entropy" => {
+            Some(MergeKind::ExactTopK { column: ScoreColumn::Entropy, ascending: false })
+        }
+        "k_center_greedy" | "core_set" | "dbal" => Some(MergeKind::Refine),
+        _ => None,
+    }
+}
+
+/// Best-first comparison matching `util::topk`'s total order: better
+/// scores first (direction per `ascending`), NaN strictly after every
+/// finite score.
+fn cmp_best_first(a: f32, b: f32, ascending: bool) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => {
+            if ascending {
+                a.partial_cmp(&b).unwrap()
+            } else {
+                b.partial_cmp(&a).unwrap()
+            }
+        }
+    }
+}
+
+/// Exact top-`budget` over `(global index, score)` candidates, best-first,
+/// deterministic (ties break on ascending index, NaN never beats finite).
+pub fn merge_exact_topk(
+    candidates: &[(usize, f32)],
+    budget: usize,
+    ascending: bool,
+) -> Vec<usize> {
+    let mut v: Vec<(usize, f32)> = candidates.to_vec();
+    v.sort_by(|a, b| cmp_best_first(a.1, b.1, ascending).then_with(|| a.0.cmp(&b.0)));
+    v.truncate(budget);
+    v.into_iter().map(|(i, _)| i).collect()
+}
+
+/// One worker-reported candidate. `idx` is a *local* pool index on the
+/// wire; the coordinator rewrites it to a global index via the shard plan
+/// before merging.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    pub idx: usize,
+    /// Strategy-relevant scalar (the merge column) for exact top-k.
+    pub score: f32,
+    /// Full `[NUM_SCORES]` row (refine protocol only).
+    pub scores: Vec<f32>,
+    /// Embedding row (refine protocol only).
+    pub emb: Vec<f32>,
+}
+
+impl Candidate {
+    pub fn to_value(&self, with_embeddings: bool) -> Value {
+        let mut m = Map::new();
+        m.insert("idx", Value::from(self.idx));
+        m.insert("score", Value::Number(self.score as f64));
+        if with_embeddings {
+            m.insert("scores", f32s_to_value(&self.scores));
+            m.insert("emb", f32s_to_value(&self.emb));
+        }
+        Value::Object(m)
+    }
+
+    pub fn from_value(v: &Value) -> Result<Candidate, String> {
+        let idx = v
+            .get("idx")
+            .and_then(Value::as_usize)
+            .ok_or("candidate missing idx")?;
+        // non-finite scores serialize as JSON null; decode back to NaN so
+        // the merge order still puts them last.
+        let score = match v.get("score") {
+            Some(Value::Number(n)) => *n as f32,
+            _ => f32::NAN,
+        };
+        Ok(Candidate {
+            idx,
+            score,
+            scores: v.get("scores").map(f32s_from_value).transpose()?.unwrap_or_default(),
+            emb: v.get("emb").map(f32s_from_value).transpose()?.unwrap_or_default(),
+        })
+    }
+}
+
+fn f32s_to_value(xs: &[f32]) -> Value {
+    Value::Array(xs.iter().map(|&x| Value::Number(x as f64)).collect())
+}
+
+fn f32s_from_value(v: &Value) -> Result<Vec<f32>, String> {
+    let arr = v.as_array().ok_or("expected number array")?;
+    Ok(arr
+        .iter()
+        .map(|x| match x {
+            Value::Number(n) => *n as f32,
+            _ => f32::NAN,
+        })
+        .collect())
+}
+
+/// Wire form of a matrix: `{rows, cols, data: [f64...]}` (row-major).
+pub fn mat_to_value(m: &Mat) -> Value {
+    let mut o = Map::new();
+    o.insert("rows", Value::from(m.rows()));
+    o.insert("cols", Value::from(m.cols()));
+    o.insert("data", f32s_to_value(m.as_slice()));
+    Value::Object(o)
+}
+
+pub fn mat_from_value(v: &Value) -> Result<Mat, String> {
+    let rows = v.get("rows").and_then(Value::as_usize).ok_or("mat missing rows")?;
+    let cols = v.get("cols").and_then(Value::as_usize).ok_or("mat missing cols")?;
+    let data = f32s_from_value(v.get("data").ok_or("mat missing data")?)?;
+    if data.len() != rows * cols {
+        return Err(format!("mat data len {} != {rows}x{cols}", data.len()));
+    }
+    Ok(Mat::from_vec(data, rows, cols))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::topk;
+
+    /// Split scores into shards, take each shard's local top-k, merge, and
+    /// compare to the global single-machine top-k — the tentpole's exact
+    /// parity argument in miniature.
+    #[test]
+    fn prop_merge_matches_global_topk() {
+        crate::util::prop::check("merge-topk-parity", 60, |rng| {
+            let n = 1 + rng.below(200);
+            let k = rng.below(n + 3);
+            let n_shards = 1 + rng.below(5);
+            let mut scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            // inject duplicates and NaN
+            for _ in 0..n / 4 {
+                let (a, b) = (rng.below(n), rng.below(n));
+                scores[a] = scores[b];
+            }
+            if n > 2 {
+                scores[rng.below(n)] = f32::NAN;
+            }
+            for ascending in [false, true] {
+                let want = if ascending {
+                    topk::top_k_asc(&scores, k)
+                } else {
+                    topk::top_k_desc(&scores, k)
+                };
+                // strided shards (ascending within each shard)
+                let mut union: Vec<(usize, f32)> = Vec::new();
+                for s in 0..n_shards {
+                    let local: Vec<usize> = (s..n).step_by(n_shards).collect();
+                    let local_scores: Vec<f32> =
+                        local.iter().map(|&i| scores[i]).collect();
+                    let local_top = if ascending {
+                        topk::top_k_asc(&local_scores, k)
+                    } else {
+                        topk::top_k_desc(&local_scores, k)
+                    };
+                    for rel in local_top {
+                        union.push((local[rel], local_scores[rel]));
+                    }
+                }
+                let got = merge_exact_topk(&union, k, ascending);
+                crate::prop_assert!(
+                    got == want,
+                    "asc={ascending} n={n} k={k} shards={n_shards}: {got:?} != {want:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_never_prefers_nan() {
+        let cands = vec![(0, f32::NAN), (1, 0.1), (2, f32::NAN), (3, 0.7)];
+        assert_eq!(merge_exact_topk(&cands, 2, false), vec![3, 1]);
+        assert_eq!(merge_exact_topk(&cands, 2, true), vec![1, 3]);
+        // NaN only fills leftover slots
+        assert_eq!(merge_exact_topk(&cands, 3, false), vec![3, 1, 0]);
+    }
+
+    #[test]
+    fn merge_ties_break_on_index() {
+        let cands = vec![(9, 1.0), (2, 1.0), (5, 1.0)];
+        assert_eq!(merge_exact_topk(&cands, 2, false), vec![2, 5]);
+    }
+
+    #[test]
+    fn merge_kind_covers_the_zoo() {
+        for name in crate::strategies::zoo_names() {
+            assert!(merge_kind(name).is_some(), "no merge kind for {name}");
+        }
+        assert!(merge_kind("auto").is_none());
+        assert!(merge_kind("nonsense").is_none());
+        assert_eq!(merge_kind("core_set"), Some(MergeKind::Refine));
+        assert_eq!(
+            merge_kind("margin_confidence"),
+            Some(MergeKind::ExactTopK { column: ScoreColumn::Margin, ascending: true })
+        );
+    }
+
+    #[test]
+    fn candidate_roundtrips_through_json() {
+        let c = Candidate {
+            idx: 17,
+            score: 0.25,
+            scores: vec![0.1, 0.2, 0.3, 0.4],
+            emb: vec![1.5, -2.5],
+        };
+        let text = crate::json::to_string(&c.to_value(true));
+        let back = Candidate::from_value(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, c);
+        // slim form drops the heavy fields
+        let slim =
+            Candidate::from_value(&crate::json::parse(
+                &crate::json::to_string(&c.to_value(false)),
+            )
+            .unwrap())
+            .unwrap();
+        assert_eq!(slim.idx, 17);
+        assert!(slim.emb.is_empty());
+    }
+
+    #[test]
+    fn nan_score_survives_the_wire_as_nan() {
+        let c = Candidate { idx: 1, score: f32::NAN, scores: vec![], emb: vec![] };
+        let text = crate::json::to_string(&c.to_value(false));
+        let back = Candidate::from_value(&crate::json::parse(&text).unwrap()).unwrap();
+        assert!(back.score.is_nan());
+    }
+
+    #[test]
+    fn mat_roundtrips_through_json() {
+        let m = Mat::from_vec(vec![1.0, 2.5, -3.0, 0.125, 4.0, 5.0], 2, 3);
+        let text = crate::json::to_string(&mat_to_value(&m));
+        let back = mat_from_value(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, m);
+        assert!(mat_from_value(&crate::json::parse("{\"rows\":2}").unwrap()).is_err());
+    }
+}

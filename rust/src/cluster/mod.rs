@@ -1,0 +1,32 @@
+//! Coordinator/worker cluster: scale one AL session across N replica
+//! servers (DESIGN.md §Cluster).
+//!
+//! The paper's server–client design (§3.2, Fig 1) runs one `AlServer`
+//! per box; the ROADMAP's north star is heavy multi-user traffic, and the
+//! biggest remaining lever on end-to-end AL latency is scanning one
+//! pushed pool on N machines at once. This subsystem adds a second
+//! serving topology on top of the existing framed-JSON RPC protocol:
+//!
+//! * [`shard`] — deterministic shard plans (contiguous / strided) mapping
+//!   global pool positions onto workers.
+//! * [`worker`] — the worker role: any `AlServer` already dispatches the
+//!   worker-facing `scan_shard` / `select_shard` / `drop_session`
+//!   methods; this module adds coordinator registration and the
+//!   candidate-building logic.
+//! * [`coordinator`] — the `AlClient`-compatible front: scatter on
+//!   `push_data`, scatter-gather with failure-aware re-dispatch on
+//!   `query`, per-shard scan metrics and a straggler gauge.
+//! * [`merge`] — distributed strategy semantics: exact top-k merge for
+//!   the uncertainty strategies (provably identical to the single-server
+//!   selection), coordinator-side sampling for `random`, and a
+//!   candidate-then-refine pass for the diversity/hybrid strategies.
+
+pub mod coordinator;
+pub mod merge;
+pub mod shard;
+pub mod worker;
+
+pub use coordinator::{Coordinator, CoordinatorDeps};
+pub use merge::{merge_kind, MergeKind};
+pub use shard::{plan, ShardPlan};
+pub use worker::register_with;

@@ -1,0 +1,102 @@
+//! Shard planning: how one pushed pool is split across N workers.
+//!
+//! A plan maps every global pool position to exactly one shard, keeps the
+//! per-shard index lists ascending (so a worker's local tie-breaks agree
+//! with global tie-breaks — the exact-merge proof in `merge` depends on
+//! this), and balances shard sizes within one sample of each other.
+
+use crate::config::ShardPolicy;
+
+/// Assignment of global pool indices to shards. `shards[i]` holds the
+/// (ascending) global indices scanned by shard `i`; shards may be empty
+/// when there are more workers than samples.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub shards: Vec<Vec<usize>>,
+}
+
+impl ShardPlan {
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(Vec::len).collect()
+    }
+
+    pub fn total(&self) -> usize {
+        self.shards.iter().map(Vec::len).sum()
+    }
+}
+
+/// Split `0..n_items` into `n_shards` parts under `policy`.
+pub fn plan(n_items: usize, n_shards: usize, policy: ShardPolicy) -> ShardPlan {
+    assert!(n_shards >= 1, "plan needs >= 1 shard");
+    let mut shards: Vec<Vec<usize>> = (0..n_shards).map(|_| Vec::new()).collect();
+    match policy {
+        ShardPolicy::Contiguous => {
+            // first (n_items % n_shards) shards get one extra item
+            let base = n_items / n_shards;
+            let extra = n_items % n_shards;
+            let mut next = 0usize;
+            for (i, shard) in shards.iter_mut().enumerate() {
+                let take = base + usize::from(i < extra);
+                shard.extend(next..next + take);
+                next += take;
+            }
+        }
+        ShardPolicy::Strided => {
+            for j in 0..n_items {
+                shards[j % n_shards].push(j);
+            }
+        }
+    }
+    ShardPlan { shards }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_partition(p: &ShardPlan, n: usize) {
+        let mut all: Vec<usize> = p.shards.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>(), "not a partition of 0..{n}");
+        for (i, s) in p.shards.iter().enumerate() {
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "shard {i} not ascending: {s:?}");
+        }
+    }
+
+    #[test]
+    fn contiguous_partitions_and_balances() {
+        for (n, k) in [(10, 3), (12, 4), (1, 1), (7, 7), (100, 6)] {
+            let p = plan(n, k, ShardPolicy::Contiguous);
+            assert_eq!(p.shards.len(), k);
+            assert_partition(&p, n);
+            let sizes = p.shard_sizes();
+            let (min, max) =
+                (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn strided_partitions_and_balances() {
+        for (n, k) in [(10, 3), (12, 4), (5, 8)] {
+            let p = plan(n, k, ShardPolicy::Strided);
+            assert_partition(&p, n);
+            let sizes = p.shard_sizes();
+            let (min, max) =
+                (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced {sizes:?}");
+        }
+        // stride shape: shard 0 of 3 gets 0, 3, 6, ...
+        let p = plan(7, 3, ShardPolicy::Strided);
+        assert_eq!(p.shards[0], vec![0, 3, 6]);
+        assert_eq!(p.shards[1], vec![1, 4]);
+    }
+
+    #[test]
+    fn more_shards_than_items_leaves_empties() {
+        let p = plan(2, 5, ShardPolicy::Contiguous);
+        assert_partition(&p, 2);
+        assert_eq!(p.shard_sizes().iter().filter(|&&s| s == 0).count(), 3);
+        assert_eq!(plan(0, 3, ShardPolicy::Strided).total(), 0);
+    }
+}

@@ -1,0 +1,173 @@
+//! Cluster worker role (DESIGN.md §Cluster).
+//!
+//! A worker *is* an `AlServer` — the worker-facing RPC methods
+//! (`scan_shard`, `select_shard`, `drop_session`) live in the server
+//! dispatch and reuse the same session/pipeline/strategy code paths as
+//! `push_data`/`query`, so `serve --role worker` starts a plain server.
+//! This module adds what the role needs on top: registration with a
+//! coordinator and the candidate-building logic `select_shard` serves.
+
+use crate::json::{Map, Value};
+use crate::runtime::backend::ComputeBackend;
+use crate::server::rpc::RpcError;
+use crate::server::AlClient;
+use crate::strategies::{self, SelectCtx};
+use crate::util::mat::Mat;
+
+use super::merge::{merge_kind, Candidate, MergeKind};
+
+/// Register `worker_addr` ("host:port" as the *coordinator* should dial
+/// it — a bind address of 0.0.0.0 is not routable) with the coordinator
+/// at `coordinator`. Idempotent: re-registering a known address revives
+/// it.
+pub fn register_with(worker_addr: &str, coordinator: &str) -> Result<(), RpcError> {
+    let mut c = AlClient::connect(coordinator)?;
+    let mut p = Map::new();
+    p.insert("addr", Value::from(worker_addr));
+    c.call("register", Value::Object(p))?;
+    Ok(())
+}
+
+/// Build the `select_shard` candidate list from a ready session's scan
+/// outputs. `ok_rows[rel]` maps a strategy-relative index back to the
+/// shard-local pool index the coordinator's plan understands.
+#[allow(clippy::too_many_arguments)]
+pub fn build_candidates(
+    strategy: &str,
+    budget: usize,
+    with_embeddings: bool,
+    ok_rows: &[usize],
+    cand_emb: &Mat,
+    cand_scores: &Mat,
+    labeled: &Mat,
+    backend: &dyn ComputeBackend,
+    seed: u64,
+) -> Result<Vec<Value>, String> {
+    let kind = merge_kind(strategy)
+        .ok_or_else(|| format!("select_shard: unknown strategy '{strategy}'"))?;
+    let strat = strategies::by_name(strategy)
+        .ok_or_else(|| format!("select_shard: unknown strategy '{strategy}'"))?;
+    let ctx = SelectCtx {
+        scores: cand_scores,
+        embeddings: cand_emb,
+        labeled,
+        backend,
+        seed,
+    };
+    let picked = strat.select(&ctx, budget).map_err(|e| e.to_string())?;
+    Ok(picked
+        .iter()
+        .map(|&rel| {
+            let score = match kind {
+                MergeKind::ExactTopK { column, .. } => {
+                    cand_scores.get(rel, column as usize)
+                }
+                // refine/random merges never read the scalar
+                _ => 0.0,
+            };
+            Candidate {
+                idx: ok_rows[rel],
+                score,
+                scores: if with_embeddings { cand_scores.row(rel).to_vec() } else { vec![] },
+                emb: if with_embeddings { cand_emb.row(rel).to_vec() } else { vec![] },
+            }
+            .to_value(with_embeddings)
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::HostBackend;
+    use crate::util::topk;
+
+    #[test]
+    fn candidates_are_local_topk_with_scores() {
+        // 6 ok rows out of an 8-row shard (rows 2 and 5 failed upstream).
+        let ok_rows = vec![0, 1, 3, 4, 6, 7];
+        let mut scores = Mat::zeros(6, 4);
+        let lc = [0.9f32, 0.1, 0.5, 0.7, 0.3, 0.8];
+        for (i, &v) in lc.iter().enumerate() {
+            scores.set(i, 0, v);
+        }
+        let emb = Mat::zeros(6, 4);
+        let labeled = Mat::zeros(0, 4);
+        let backend = HostBackend::new();
+        let out = build_candidates(
+            "least_confidence",
+            3,
+            false,
+            &ok_rows,
+            &emb,
+            &scores,
+            &labeled,
+            &backend,
+            7,
+        )
+        .unwrap();
+        let want = topk::top_k_desc(&lc, 3); // [0, 5, 3] in rel indices
+        let got_idx: Vec<usize> =
+            out.iter().map(|v| v.get("idx").unwrap().as_usize().unwrap()).collect();
+        let want_idx: Vec<usize> = want.iter().map(|&rel| ok_rows[rel]).collect();
+        assert_eq!(got_idx, want_idx);
+        // slim wire form: no embeddings attached
+        assert!(out[0].get("emb").is_none());
+        let s = out[0].get("score").unwrap().as_f64().unwrap();
+        assert!((s - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn refine_candidates_carry_embeddings() {
+        let ok_rows: Vec<usize> = (0..10).collect();
+        let mut emb = Mat::zeros(10, 3);
+        for i in 0..10 {
+            emb.set(i, 0, i as f32);
+        }
+        let scores = Mat::zeros(10, 4);
+        let labeled = Mat::zeros(0, 3);
+        let backend = HostBackend::new();
+        let out = build_candidates(
+            "k_center_greedy",
+            4,
+            true,
+            &ok_rows,
+            &emb,
+            &scores,
+            &labeled,
+            &backend,
+            7,
+        )
+        .unwrap();
+        assert_eq!(out.len(), 4);
+        for v in &out {
+            let c = Candidate::from_value(v).unwrap();
+            assert_eq!(c.emb.len(), 3);
+            assert_eq!(c.scores.len(), 4);
+            // embedding row matches the candidate's local index
+            // (ok_rows is the identity here)
+            assert_eq!(c.emb[0], c.idx as f32);
+        }
+    }
+
+    #[test]
+    fn unknown_strategy_is_an_error() {
+        let emb = Mat::zeros(1, 2);
+        let scores = Mat::zeros(1, 4);
+        let labeled = Mat::zeros(0, 2);
+        let backend = HostBackend::new();
+        let e = build_candidates(
+            "auto",
+            1,
+            false,
+            &[0],
+            &emb,
+            &scores,
+            &labeled,
+            &backend,
+            0,
+        )
+        .unwrap_err();
+        assert!(e.contains("unknown strategy"), "{e}");
+    }
+}

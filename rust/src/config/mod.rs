@@ -160,6 +160,60 @@ impl Default for StoreConfig {
     }
 }
 
+/// How the coordinator splits a pushed pool across workers
+/// (`cluster.shard_policy`; DESIGN.md §Cluster).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Contiguous ranges: shard i gets pool[i*chunk .. (i+1)*chunk].
+    Contiguous,
+    /// Round-robin: sample j goes to shard j % n (evens out any positional
+    /// skew in the pushed manifest).
+    Strided,
+}
+
+impl ShardPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShardPolicy::Contiguous => "contiguous",
+            ShardPolicy::Strided => "strided",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ShardPolicy> {
+        match s {
+            "contiguous" => Some(ShardPolicy::Contiguous),
+            "strided" => Some(ShardPolicy::Strided),
+            _ => None,
+        }
+    }
+}
+
+/// `cluster.*` — the coordinator/worker scale-out topology (DESIGN.md
+/// §Cluster). Empty `workers` means the coordinator starts with no static
+/// members and relies on the `register` RPC.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Worker addresses ("host:port") the coordinator dispatches to.
+    pub workers: Vec<String>,
+    pub shard_policy: ShardPolicy,
+    /// Candidate multiplier for the distributed diversity/hybrid
+    /// strategies: each worker returns `oversample_factor * budget /
+    /// n_workers` candidates for the coordinator's refine pass. Keep
+    /// >= the expected worker count so the candidate union always covers
+    /// a full budget.
+    pub oversample_factor: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            workers: vec![],
+            shard_policy: ShardPolicy::Contiguous,
+            oversample_factor: 4,
+        }
+    }
+}
+
 /// Data-cache settings (paper §3.3 "data cache").
 #[derive(Debug, Clone, PartialEq)]
 pub struct CacheConfig {
@@ -184,6 +238,7 @@ pub struct AlaasConfig {
     pub al_worker: WorkerConfig,
     pub store: StoreConfig,
     pub cache: CacheConfig,
+    pub cluster: ClusterConfig,
     /// Directory holding `manifest.json` + `*.hlo.txt` from `make artifacts`.
     pub artifacts_dir: String,
 }
@@ -197,6 +252,7 @@ impl Default for AlaasConfig {
             al_worker: WorkerConfig::default(),
             store: StoreConfig::default(),
             cache: CacheConfig::default(),
+            cluster: ClusterConfig::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -319,6 +375,31 @@ impl AlaasConfig {
             }
         }
 
+        if let Some(s) = v.get("cluster") {
+            let c = &mut cfg.cluster;
+            if let Some(x) = s.get("workers") {
+                let arr = x
+                    .as_array()
+                    .ok_or_else(|| cerr("cluster.workers", "expected list of \"host:port\""))?;
+                c.workers = arr
+                    .iter()
+                    .map(|w| req_str(w, "cluster.workers[]"))
+                    .collect::<Result<Vec<_>, _>>()?;
+            }
+            if let Some(x) = s.get("shard_policy") {
+                let name = req_str(x, "cluster.shard_policy")?;
+                c.shard_policy = ShardPolicy::parse(&name).ok_or_else(|| {
+                    cerr(
+                        "cluster.shard_policy",
+                        format!("unknown policy '{name}' (contiguous|strided)"),
+                    )
+                })?;
+            }
+            if let Some(x) = s.get("oversample_factor") {
+                c.oversample_factor = req_usize(x, "cluster.oversample_factor")?;
+            }
+        }
+
         if let Some(s) = v.get("cache") {
             let c = &mut cfg.cache;
             if let Some(x) = s.get("enabled") {
@@ -373,6 +454,17 @@ impl AlaasConfig {
         }
         if self.cache.shards == 0 {
             return Err(cerr("cache.shards", "must be >= 1"));
+        }
+        if self.cluster.oversample_factor == 0 {
+            return Err(cerr("cluster.oversample_factor", "must be >= 1"));
+        }
+        for w in &self.cluster.workers {
+            if !w.contains(':') {
+                return Err(cerr(
+                    "cluster.workers",
+                    format!("worker address '{w}' is not host:port"),
+                ));
+            }
         }
         if !(0.0..1.0).contains(&self.store.jitter) {
             return Err(cerr("store.jitter", "must be in [0, 1)"));
@@ -475,6 +567,43 @@ al_worker:
         assert!(AlaasConfig::from_yaml_str("name:\n  nested: 1\n").is_err());
         assert!(AlaasConfig::from_yaml_str("al_worker:\n  port: \"sixty\"\n").is_err());
         assert!(AlaasConfig::from_yaml_str("cache:\n  enabled: 3\n").is_err());
+    }
+
+    #[test]
+    fn parses_cluster_section() {
+        let cfg = AlaasConfig::from_yaml_str(
+            r#"
+cluster:
+  workers:
+    - "127.0.0.1:60036"
+    - "127.0.0.1:60037"
+  shard_policy: strided
+  oversample_factor: 6
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.workers.len(), 2);
+        assert_eq!(cfg.cluster.workers[1], "127.0.0.1:60037");
+        assert_eq!(cfg.cluster.shard_policy, ShardPolicy::Strided);
+        assert_eq!(cfg.cluster.oversample_factor, 6);
+    }
+
+    #[test]
+    fn cluster_defaults_and_validation() {
+        let cfg = AlaasConfig::from_yaml_str("").unwrap();
+        assert!(cfg.cluster.workers.is_empty());
+        assert_eq!(cfg.cluster.shard_policy, ShardPolicy::Contiguous);
+        assert_eq!(cfg.cluster.oversample_factor, 4);
+
+        let e = AlaasConfig::from_yaml_str("cluster:\n  shard_policy: diagonal\n").unwrap_err();
+        assert_eq!(e.field, "cluster.shard_policy");
+        let e =
+            AlaasConfig::from_yaml_str("cluster:\n  oversample_factor: 0\n").unwrap_err();
+        assert_eq!(e.field, "cluster.oversample_factor");
+        let e = AlaasConfig::from_yaml_str("cluster:\n  workers: [noport]\n").unwrap_err();
+        assert_eq!(e.field, "cluster.workers");
+        let e = AlaasConfig::from_yaml_str("cluster:\n  workers: 3\n").unwrap_err();
+        assert_eq!(e.field, "cluster.workers");
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub mod agent;
 pub mod baselines;
 pub mod cache;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod data;
 pub mod json;

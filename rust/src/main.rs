@@ -22,6 +22,7 @@ use std::sync::Arc;
 use alaas::agent::{run_pshea, PsheaConfig};
 use alaas::cache::DataCache;
 use alaas::cli::{Args, Schema};
+use alaas::cluster::{Coordinator, CoordinatorDeps};
 use alaas::config::AlaasConfig;
 use alaas::data::DatasetSpec;
 use alaas::metrics::Registry;
@@ -36,7 +37,7 @@ const SCHEMA: Schema = Schema {
     value_flags: &[
         "config", "dataset", "out", "seed", "pool", "init", "test", "budget",
         "strategy", "target", "max-budget", "round-budget", "addr", "session",
-        "backend", "replicas", "rounds",
+        "backend", "replicas", "rounds", "role", "coordinator",
     ],
     bool_flags: &["verbose", "quiet"],
 };
@@ -79,7 +80,8 @@ fn main() {
 
 fn usage() -> &'static str {
     "usage: alaas <serve|gen-data|query|agent|strategies|help> [flags]\n\
-     serve      --config <yml>\n\
+     serve      --config <yml> [--role single|worker|coordinator] [--coordinator host:port]\n\
+     \u{20}          (worker: --addr <host:port> = address advertised to the coordinator)\n\
      gen-data   --dataset <cifarsim|svhnsim> --out <dir> [--init N --pool N --test N --seed N]\n\
      query      --addr <host:port> --dataset <name> [--budget N --strategy S --seed N]\n\
      agent      --dataset <name> [--target A --max-budget N --round-budget N --backend host|pjrt --rounds N]\n\
@@ -106,22 +108,94 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         Some(path) => AlaasConfig::from_yaml_file(path)?,
         None => AlaasConfig::default(),
     };
-    let backend = make_backend(args.get_or("backend", "pjrt"), cfg.al_worker.replicas)
-        .or_else(|e| {
-            eprintln!("pjrt backend unavailable ({e}); falling back to host backend");
-            make_backend("host", cfg.al_worker.replicas)
-        })?;
-    let deps = ServerDeps {
-        store: Arc::new(StoreRouter::new("/", &cfg.store)),
-        cache: Arc::new(DataCache::from_config(&cfg.cache)),
-        backend,
-        metrics: Registry::new(),
-    };
-    let server = AlServer::start(cfg, deps)?;
-    println!("alaas server listening on {}", server.addr());
-    println!("press ctrl-c to stop");
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    match args.get_or("role", "single") {
+        role @ ("single" | "worker") => {
+            let backend = make_backend(args.get_or("backend", "pjrt"), cfg.al_worker.replicas)
+                .or_else(|e| {
+                    eprintln!("pjrt backend unavailable ({e}); falling back to host backend");
+                    make_backend("host", cfg.al_worker.replicas)
+                })?;
+            let deps = ServerDeps {
+                store: Arc::new(StoreRouter::new("/", &cfg.store)),
+                cache: Arc::new(DataCache::from_config(&cfg.cache)),
+                backend,
+                metrics: Registry::new(),
+            };
+            let server = AlServer::start(cfg, deps)?;
+            println!("alaas {role} listening on {}", server.addr());
+            if role == "worker" {
+                if let Some(coord) = args.get("coordinator") {
+                    // the coordinator must be able to dial this address:
+                    // pass --addr when binding a wildcard interface
+                    let advertised = args
+                        .get("addr")
+                        .map(str::to_string)
+                        .unwrap_or_else(|| server.addr().to_string());
+                    if advertised.starts_with("0.0.0.0") {
+                        eprintln!(
+                            "warning: advertising {advertised}; pass --addr \
+                             <routable-host:port> so the coordinator can reach \
+                             this worker"
+                        );
+                    }
+                    register_with_retry(&advertised, coord);
+                } else {
+                    println!(
+                        "no --coordinator given; waiting for scan_shard from a \
+                         coordinator configured with this address"
+                    );
+                }
+            }
+            println!("press ctrl-c to stop");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "coordinator" => {
+            // the coordinator only refines candidate unions; host math is
+            // plenty, but honor an explicit --backend pjrt
+            let backend = make_backend(args.get_or("backend", "host"), cfg.al_worker.replicas)
+                .or_else(|e| {
+                    eprintln!("backend unavailable ({e}); falling back to host backend");
+                    make_backend("host", cfg.al_worker.replicas)
+                })?;
+            let n_workers = cfg.cluster.workers.len();
+            let coord = Coordinator::start(
+                cfg,
+                CoordinatorDeps { backend, metrics: Registry::new() },
+            )?;
+            println!(
+                "alaas coordinator listening on {} ({n_workers} configured workers; \
+                 more may join via register)",
+                coord.addr()
+            );
+            println!("press ctrl-c to stop");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        other => Err(anyhow::anyhow!(
+            "unknown role '{other}' (single|worker|coordinator)"
+        )),
+    }
+}
+
+/// Register a worker with its coordinator, retrying while the coordinator
+/// boots. Registration failure is not fatal: the worker keeps serving and
+/// a coordinator restart can re-register it.
+fn register_with_retry(addr: &str, coordinator: &str) {
+    for attempt in 1..=10u32 {
+        match alaas::cluster::worker::register_with(addr, coordinator) {
+            Ok(()) => {
+                println!("registered with coordinator at {coordinator}");
+                return;
+            }
+            Err(e) if attempt < 10 => {
+                eprintln!("register attempt {attempt} failed ({e}); retrying");
+                std::thread::sleep(std::time::Duration::from_millis(500 * attempt as u64));
+            }
+            Err(e) => eprintln!("could not register with {coordinator}: {e}"),
+        }
     }
 }
 

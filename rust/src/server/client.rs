@@ -37,7 +37,9 @@ impl AlClient {
         Ok(AlClient { stream, next_id: 1 })
     }
 
-    fn call(&mut self, method: &str, params: Value) -> Result<Value, RpcError> {
+    /// Raw RPC call — the escape hatch the cluster layer uses for methods
+    /// outside the Figure 2 client API (`register`, `scan_shard`, ...).
+    pub fn call(&mut self, method: &str, params: Value) -> Result<Value, RpcError> {
         let id = self.next_id;
         self.next_id += 1;
         rpc::send_request(&mut self.stream, id, method, params)?;

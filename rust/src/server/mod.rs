@@ -5,6 +5,9 @@
 //!   TCP (the gRPC substitution; DESIGN.md §Substitutions).
 //! * [`server`] — `AlServer`: sessions, background dataset processing
 //!   through the pipeline, query serving, the agent endpoint, metrics.
+//!   Also speaks the worker-facing cluster methods (`scan_shard`,
+//!   `select_shard`) so any server can join a coordinator's pool
+//!   (DESIGN.md §Cluster).
 //! * [`client`] — `AlClient`: the few-LoC user-facing API of Figure 2
 //!   (`push_data`, `query(budget)`).
 
@@ -14,4 +17,4 @@ pub mod rpc;
 pub mod server;
 
 pub use client::AlClient;
-pub use server::{AlServer, ServerDeps};
+pub use server::{AlServer, ServerDeps, SELECT_SEED};

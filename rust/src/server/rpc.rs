@@ -7,8 +7,12 @@
 //! is ~60 MB; beyond that, shard the push).
 
 use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
 
 use crate::json::{self, Map, Value};
+use crate::metrics::Registry;
 
 /// Hard cap on frame payloads.
 pub const MAX_FRAME: usize = 64 * 1024 * 1024;
@@ -113,6 +117,69 @@ pub fn send_error(w: &mut impl Write, id: u64, error: &str) -> Result<(), RpcErr
     write_frame(w, json::to_string(&Value::Object(m)).as_bytes())
 }
 
+/// Serve framed request/response RPC on one connection until clean EOF,
+/// a broken frame, an I/O failure, or `shutdown` flips. Shared by the
+/// single server and the cluster coordinator so the idle-probe/shutdown
+/// behavior cannot diverge. Per-request latency is recorded under
+/// `rpc.{method}` in `metrics`.
+///
+/// The idle wait uses a bounded 250ms peek so the handler re-checks the
+/// shutdown flag instead of pinning its thread forever; once bytes are
+/// available the frame is read under a generous timeout (a frame, once
+/// started, arrives promptly).
+pub fn serve_conn(
+    stream: &mut TcpStream,
+    tag: &'static str,
+    shutdown: &AtomicBool,
+    metrics: &Registry,
+    mut handle: impl FnMut(&str, &Value) -> Result<Value, String>,
+) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    stream.set_nodelay(true).ok();
+    loop {
+        stream.set_read_timeout(Some(Duration::from_millis(250))).ok();
+        let mut probe = [0u8; 1];
+        loop {
+            if shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            match stream.peek(&mut probe) {
+                Ok(0) => return, // clean EOF
+                Ok(_) => break,  // a frame is waiting
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    continue
+                }
+                Err(_) => return,
+            }
+        }
+        stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+        let req = match recv_request(stream) {
+            Ok(r) => r,
+            Err(RpcError::Closed) => return,
+            Err(e) => {
+                crate::log_debug!(tag, "bad frame from {peer}: {e}");
+                // protocol is broken on this conn; drop it
+                return;
+            }
+        };
+        let t0 = Instant::now();
+        let result = handle(&req.method, &req.params);
+        metrics.time(&format!("rpc.{}", req.method), t0.elapsed());
+        let io = match result {
+            Ok(v) => send_result(stream, req.id, v),
+            Err(e) => send_error(stream, req.id, &e),
+        };
+        if io.is_err() {
+            return;
+        }
+    }
+}
+
 /// Receive a response for `expect_id`; remote errors surface as `Remote`.
 pub fn recv_response(r: &mut impl Read, expect_id: u64) -> Result<Value, RpcError> {
     let buf = read_frame(r)?;
@@ -211,5 +278,102 @@ mod tests {
         buf.extend_from_slice(b"short");
         let mut r = std::io::Cursor::new(buf);
         assert!(matches!(read_frame(&mut r), Err(RpcError::Io(_))));
+    }
+
+    #[test]
+    fn partial_length_prefix_is_closed_not_panic() {
+        // a peer dying mid-header (1..3 of the 4 length bytes) must
+        // surface as Closed on every prefix length, never panic
+        for n in 0..4usize {
+            let buf = vec![0x10u8; n];
+            let mut r = std::io::Cursor::new(buf);
+            assert!(
+                matches!(read_frame(&mut r), Err(RpcError::Closed)),
+                "prefix of {n} bytes"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_write_is_rejected() {
+        // the write side enforces the cap too, so a bad caller cannot emit
+        // a frame every reader would then reject
+        let payload = vec![0u8; MAX_FRAME + 1];
+        let mut buf = Vec::new();
+        assert!(matches!(
+            write_frame(&mut buf, &payload),
+            Err(RpcError::FrameTooLarge(_))
+        ));
+        assert!(buf.is_empty(), "nothing may reach the wire");
+    }
+
+    #[test]
+    fn barely_oversized_length_rejected_before_allocation() {
+        // MAX_FRAME itself is fine; MAX_FRAME + 1 must fail from the
+        // 4-byte header alone (the cursor holds no payload to allocate)
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&((MAX_FRAME as u32) + 1).to_le_bytes());
+        let mut r = std::io::Cursor::new(buf);
+        assert!(matches!(
+            read_frame(&mut r),
+            Err(RpcError::FrameTooLarge(n)) if n == MAX_FRAME + 1
+        ));
+    }
+
+    /// Random JSON payload generator for the round-trip property
+    /// (integers within the exact-f64 range, so serialization is
+    /// lossless by construction).
+    fn random_value(rng: &mut crate::util::rng::Rng, depth: usize) -> Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.below(2) == 0),
+            2 => Value::from(rng.below(1_000_000) as i64 - 500_000),
+            3 => {
+                let n = rng.below(12);
+                Value::from(
+                    (0..n)
+                        .map(|_| b"ab\"\\\n\t {}[]:,\x7f"[rng.below(14)] as char)
+                        .collect::<String>(),
+                )
+            }
+            4 => Value::Array(
+                (0..rng.below(4)).map(|_| random_value(rng, depth - 1)).collect(),
+            ),
+            _ => {
+                let mut m = Map::new();
+                for i in 0..rng.below(4) {
+                    m.insert(format!("k{i}"), random_value(rng, depth - 1));
+                }
+                Value::Object(m)
+            }
+        }
+    }
+
+    #[test]
+    fn prop_request_roundtrip_over_random_payloads() {
+        crate::util::prop::check("rpc-roundtrip", 80, |rng| {
+            let params = random_value(rng, 3);
+            let id = rng.next_u64() >> 12; // keep within exact-f64 range
+            let mut buf = Vec::new();
+            send_request(&mut buf, id, "query", params.clone())
+                .map_err(|e| format!("send: {e}"))?;
+            let mut r = std::io::Cursor::new(buf);
+            let req = recv_request(&mut r).map_err(|e| format!("recv: {e}"))?;
+            crate::prop_assert!(req.id == id, "id {} != {id}", req.id);
+            crate::prop_assert!(req.method == "query", "method {}", req.method);
+            crate::prop_assert!(
+                req.params == params,
+                "params mismatch:\n got {:?}\nwant {:?}",
+                req.params,
+                params
+            );
+            // and the response direction
+            let mut buf = Vec::new();
+            send_result(&mut buf, id, params.clone()).map_err(|e| format!("send: {e}"))?;
+            let mut r = std::io::Cursor::new(buf);
+            let back = recv_response(&mut r, id).map_err(|e| format!("recv: {e}"))?;
+            crate::prop_assert!(back == params, "response payload mismatch");
+            Ok(())
+        });
     }
 }

@@ -11,7 +11,7 @@
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::cache::DataCache;
@@ -20,12 +20,17 @@ use crate::json::{Map, Value};
 use crate::metrics::Registry;
 use crate::pipeline::{run_pipeline, BatchPolicy, DataflowMode, PipelineParams};
 use crate::runtime::backend::ComputeBackend;
-use crate::server::rpc::{self, RpcError};
+use crate::server::rpc;
 use crate::store::{Manifest, SampleRef, StoreRouter};
 use crate::strategies::{self, SelectCtx};
 use crate::trainer::{self, LinearHead, TrainConfig};
 use crate::util::mat::Mat;
 use crate::util::pool::ThreadPool;
+
+/// Seed for strategy-internal randomness at query time. One constant for
+/// the single server and the cluster coordinator so distributed selection
+/// reproduces the single-server path exactly (DESIGN.md §Cluster).
+pub const SELECT_SEED: u64 = 0x5e1ec7;
 
 /// Shared server dependencies (built once per process).
 pub struct ServerDeps {
@@ -159,55 +164,13 @@ fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
 }
 
 fn handle_conn(mut stream: TcpStream, state: Arc<ServerState>) {
-    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-    stream.set_nodelay(true).ok();
-    loop {
-        // Idle-wait with a bounded peek so this handler re-checks the
-        // shutdown flag instead of pinning its thread forever; once bytes
-        // are available the full frame is read with a generous timeout
-        // (a frame, once started, arrives promptly).
-        stream.set_read_timeout(Some(Duration::from_millis(250))).ok();
-        let mut probe = [0u8; 1];
-        loop {
-            if state.shutdown.load(Ordering::SeqCst) {
-                return;
-            }
-            match stream.peek(&mut probe) {
-                Ok(0) => return, // clean EOF
-                Ok(_) => break,  // a frame is waiting
-                Err(e)
-                    if matches!(
-                        e.kind(),
-                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                    ) =>
-                {
-                    continue
-                }
-                Err(_) => return,
-            }
-        }
-        stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
-        let req = match rpc::recv_request(&mut stream) {
-            Ok(r) => r,
-            Err(RpcError::Closed) => return,
-            Err(e) => {
-                crate::log_debug!("server", "bad frame from {peer}: {e}");
-                // protocol is broken on this conn; drop it
-                return;
-            }
-        };
-        let t0 = Instant::now();
-        let method = req.method.clone();
-        let result = dispatch(&state, &req.method, &req.params);
-        state.deps.metrics.time(&format!("rpc.{method}"), t0.elapsed());
-        let io = match result {
-            Ok(v) => rpc::send_result(&mut stream, req.id, v),
-            Err(e) => rpc::send_error(&mut stream, req.id, &e),
-        };
-        if io.is_err() {
-            return;
-        }
-    }
+    rpc::serve_conn(
+        &mut stream,
+        "server",
+        &state.shutdown,
+        &state.deps.metrics,
+        |method, params| dispatch(&state, method, params),
+    );
 }
 
 fn dispatch(state: &Arc<ServerState>, method: &str, params: &Value) -> Result<Value, String> {
@@ -228,16 +191,58 @@ fn dispatch(state: &Arc<ServerState>, method: &str, params: &Value) -> Result<Va
             m.insert("entries", Value::from(state.deps.cache.len()));
             Ok(Value::Object(m))
         }
+        // worker-facing cluster methods (DESIGN.md §Cluster)
+        "scan_shard" => scan_shard(state, params),
+        "select_shard" => select_shard(state, params),
+        "drop_session" => {
+            let session_id = str_param(params, "session")?;
+            let dropped =
+                state.sessions.lock().unwrap().remove(&session_id).is_some();
+            let mut m = Map::new();
+            m.insert("dropped", Value::Bool(dropped));
+            Ok(Value::Object(m))
+        }
         other => Err(format!("unknown method '{other}'")),
     }
 }
 
-fn str_param(params: &Value, key: &str) -> Result<String, String> {
+pub(crate) fn str_param(params: &Value, key: &str) -> Result<String, String> {
     params
         .get(key)
         .and_then(Value::as_str)
         .map(str::to_string)
         .ok_or_else(|| format!("missing string param '{key}'"))
+}
+
+/// Decode + validate the optional `init_labels` request field against the
+/// manifest's init split. Shared with the cluster coordinator so the two
+/// push endpoints cannot drift.
+pub(crate) fn parse_init_labels(
+    params: &Value,
+    init_len: usize,
+) -> Result<Option<Vec<u8>>, String> {
+    let labels: Option<Vec<u8>> = match params.get("init_labels") {
+        None | Some(Value::Null) => None,
+        Some(Value::Array(a)) => Some(
+            a.iter()
+                .map(|v| {
+                    v.as_usize()
+                        .and_then(|u| u8::try_from(u).ok())
+                        .ok_or_else(|| "bad init label".to_string())
+                })
+                .collect::<Result<Vec<u8>, _>>()?,
+        ),
+        _ => return Err("init_labels must be an array".into()),
+    };
+    if let Some(l) = &labels {
+        if l.len() != init_len {
+            return Err(format!(
+                "init_labels len {} != init split len {init_len}",
+                l.len()
+            ));
+        }
+    }
+    Ok(labels)
 }
 
 fn get_session(state: &ServerState, id: &str) -> Result<Arc<SessionSlot>, String> {
@@ -255,28 +260,7 @@ fn push_data(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> 
     let session_id = str_param(params, "session")?;
     let manifest_v = params.get("manifest").ok_or("missing param 'manifest'")?;
     let manifest = Manifest::from_value(manifest_v).map_err(|e| e.to_string())?;
-    let init_labels: Option<Vec<u8>> = match params.get("init_labels") {
-        None | Some(Value::Null) => None,
-        Some(Value::Array(a)) => Some(
-            a.iter()
-                .map(|v| {
-                    v.as_usize()
-                        .and_then(|u| u8::try_from(u).ok())
-                        .ok_or_else(|| "bad init label".to_string())
-                })
-                .collect::<Result<Vec<u8>, _>>()?,
-        ),
-        _ => return Err("init_labels must be an array".into()),
-    };
-    if let Some(l) = &init_labels {
-        if l.len() != manifest.init.len() {
-            return Err(format!(
-                "init_labels len {} != init split len {}",
-                l.len(),
-                manifest.init.len()
-            ));
-        }
-    }
+    let init_labels = parse_init_labels(params, manifest.init.len())?;
 
     let nc = manifest.num_classes;
     let d_embed = 64; // trunk output width (manifest.model geometry)
@@ -422,6 +406,41 @@ fn status(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
     Ok(Value::Object(m))
 }
 
+/// Block until a session leaves `Processing` (or `wait_ms` elapses);
+/// returns the guard on the ready session, or the failure message.
+fn wait_ready<'a>(
+    slot: &'a SessionSlot,
+    wait_ms: u64,
+) -> Result<MutexGuard<'a, Session>, String> {
+    let deadline = Instant::now() + Duration::from_millis(wait_ms);
+    let mut s = slot.s.lock().unwrap();
+    while s.status == SessionStatus::Processing {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return Err("query timed out waiting for processing".into());
+        }
+        let (guard, _) = slot.ready.wait_timeout(s, left).unwrap();
+        s = guard;
+    }
+    if let SessionStatus::Failed(e) = &s.status {
+        return Err(format!("session processing failed: {e}"));
+    }
+    Ok(s)
+}
+
+/// The selectable view of a ready session: non-failed pool rows and their
+/// gathered embeddings/scores. `ok_rows[rel]` maps a strategy-relative
+/// index back to the absolute pool position.
+fn candidate_view(s: &Session) -> (Vec<usize>, Mat, Mat) {
+    let pool_emb = s.pool_emb.as_ref().expect("ready session has embeddings");
+    let pool_scores = s.pool_scores.as_ref().expect("ready session has scores");
+    let ok_rows: Vec<usize> =
+        (0..pool_emb.rows()).filter(|i| !s.failed.contains(i)).collect();
+    let cand_emb = pool_emb.gather_rows(&ok_rows);
+    let cand_scores = pool_scores.gather_rows(&ok_rows);
+    (ok_rows, cand_emb, cand_scores)
+}
+
 /// `query {session, budget, strategy?, wait_ms?}`.
 fn query(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
     let session_id = str_param(params, "session")?;
@@ -446,30 +465,12 @@ fn query(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
         params.get("wait_ms").and_then(Value::as_usize).unwrap_or(120_000) as u64;
 
     let slot = get_session(state, &session_id)?;
-    // wait for processing
-    let deadline = Instant::now() + Duration::from_millis(wait_ms);
-    let mut s = slot.s.lock().unwrap();
-    while s.status == SessionStatus::Processing {
-        let left = deadline.saturating_duration_since(Instant::now());
-        if left.is_zero() {
-            return Err("query timed out waiting for processing".into());
-        }
-        let (guard, _) = slot.ready.wait_timeout(s, left).unwrap();
-        s = guard;
-    }
-    if let SessionStatus::Failed(e) = &s.status {
-        return Err(format!("session processing failed: {e}"));
-    }
+    let s = wait_ready(&slot, wait_ms)?;
 
     let strat = strategies::by_name(&strategy_name)
         .ok_or_else(|| format!("unknown strategy '{strategy_name}'"))?;
-    let pool_emb = s.pool_emb.as_ref().expect("ready session has embeddings");
-    let pool_scores = s.pool_scores.as_ref().expect("ready session has scores");
     // exclude failed rows from the candidate set
-    let ok_rows: Vec<usize> =
-        (0..pool_emb.rows()).filter(|i| !s.failed.contains(i)).collect();
-    let cand_emb = pool_emb.gather_rows(&ok_rows);
-    let cand_scores = pool_scores.gather_rows(&ok_rows);
+    let (ok_rows, cand_emb, cand_scores) = candidate_view(&s);
     let empty = Mat::zeros(0, cand_emb.cols());
     let labeled = s.init_emb.as_ref().unwrap_or(&empty);
     let t0 = Instant::now();
@@ -478,7 +479,7 @@ fn query(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
         embeddings: &cand_emb,
         labeled,
         backend: state.deps.backend.as_ref(),
-        seed: 0x5e1ec7,
+        seed: SELECT_SEED,
     };
     let picked = strat.select(&ctx, budget).map_err(|e| e.to_string())?;
     let select_elapsed = t0.elapsed();
@@ -501,5 +502,81 @@ fn query(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
     m.insert("selected", Value::Array(selected));
     m.insert("select_ms", Value::Number(select_elapsed.as_secs_f64() * 1e3));
     m.insert("scan_ms", Value::Number(s.scan_elapsed.as_secs_f64() * 1e3));
+    Ok(Value::Object(m))
+}
+
+/// `scan_shard {session, shard, manifest, init_labels?}` — worker-facing
+/// push: identical to `push_data` except the manifest's pool is one shard
+/// of a cluster session (the coordinator owns the global index space).
+fn scan_shard(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
+    let shard = params.get("shard").and_then(Value::as_usize).unwrap_or(0);
+    let v = push_data(state, params)?;
+    state.deps.metrics.counter("cluster.shards_accepted").fetch_add(1, Ordering::Relaxed);
+    let mut m = match v {
+        Value::Object(m) => m,
+        _ => Map::new(),
+    };
+    m.insert("shard", Value::from(shard));
+    Ok(Value::Object(m))
+}
+
+/// `select_shard {session, budget, strategy?, with_embeddings?,
+/// with_init_emb?, wait_ms?}` — worker-facing select (DESIGN.md §Cluster).
+///
+/// Always waits for the scan and reports the shard's failed local indices
+/// plus scan timing; with `budget > 0` it additionally returns the local
+/// candidate list for the coordinator's merge (top-k scalars for the
+/// uncertainty strategies, embeddings for the refine protocol). `budget =
+/// 0` is the coordinator's probe for coordinator-side strategies (random).
+fn select_shard(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
+    let session_id = str_param(params, "session")?;
+    let budget = params.get("budget").and_then(Value::as_usize).unwrap_or(0);
+    let with_embeddings =
+        params.get("with_embeddings").and_then(Value::as_bool).unwrap_or(false);
+    let with_init_emb =
+        params.get("with_init_emb").and_then(Value::as_bool).unwrap_or(false);
+    let wait_ms =
+        params.get("wait_ms").and_then(Value::as_usize).unwrap_or(120_000) as u64;
+
+    let slot = get_session(state, &session_id)?;
+    let s = wait_ready(&slot, wait_ms)?;
+
+    let mut m = Map::new();
+    m.insert(
+        "failed",
+        Value::Array(s.failed.iter().map(|&i| Value::from(i)).collect()),
+    );
+    m.insert("scan_ms", Value::Number(s.scan_elapsed.as_secs_f64() * 1e3));
+    m.insert("pool_samples", Value::from(s.manifest.pool.len()));
+    if with_init_emb {
+        let empty = Mat::zeros(0, 0);
+        m.insert(
+            "init_emb",
+            crate::cluster::merge::mat_to_value(s.init_emb.as_ref().unwrap_or(&empty)),
+        );
+    }
+    if budget > 0 {
+        let strategy = params
+            .get("strategy")
+            .and_then(Value::as_str)
+            .ok_or("missing strategy for budget > 0")?;
+        let (ok_rows, cand_emb, cand_scores) = candidate_view(&s);
+        let empty = Mat::zeros(0, cand_emb.cols());
+        let labeled = s.init_emb.as_ref().unwrap_or(&empty);
+        let t0 = Instant::now();
+        let cands = crate::cluster::worker::build_candidates(
+            strategy,
+            budget,
+            with_embeddings,
+            &ok_rows,
+            &cand_emb,
+            &cand_scores,
+            labeled,
+            state.deps.backend.as_ref(),
+            SELECT_SEED,
+        )?;
+        state.deps.metrics.time("al.select_shard", t0.elapsed());
+        m.insert("candidates", Value::Array(cands));
+    }
     Ok(Value::Object(m))
 }

@@ -130,6 +130,80 @@ mod tests {
     }
 
     #[test]
+    fn all_nan_input_is_deterministic_by_index() {
+        let scores = vec![f32::NAN; 5];
+        assert_eq!(top_k_desc(&scores, 3), vec![0, 1, 2]);
+        assert_eq!(top_k_asc(&scores, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn nan_fills_only_leftover_slots() {
+        // k exceeds the finite count: every finite score is selected
+        // before any NaN, in both directions.
+        let scores = vec![f32::NAN, 0.4, f32::NAN, 0.2, 0.9];
+        assert_eq!(top_k_desc(&scores, 4), vec![4, 1, 3, 0]);
+        assert_eq!(top_k_asc(&scores, 4), vec![3, 1, 4, 0]);
+    }
+
+    #[test]
+    fn nan_never_selected_in_asc_direction() {
+        // top_k_asc negates scores; -NaN is still NaN and must still lose
+        // to every finite value.
+        let scores = vec![f32::NAN, 5.0, 1.0, f32::NAN, 3.0];
+        assert_eq!(top_k_asc(&scores, 2), vec![2, 4]);
+    }
+
+    #[test]
+    fn duplicate_scores_stay_deterministic_at_the_boundary() {
+        // the k-th and (k+1)-th best tie: selection must cut on index
+        let scores = vec![0.5, 0.9, 0.5, 0.5, 0.1];
+        assert_eq!(top_k_desc(&scores, 2), vec![1, 0]);
+        assert_eq!(top_k_desc(&scores, 3), vec![1, 0, 2]);
+        // repeated runs agree (heap order is an implementation detail)
+        for k in 0..=5 {
+            assert_eq!(top_k_desc(&scores, k), top_k_desc(&scores, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn prop_nan_and_duplicates_match_reference_order() {
+        crate::util::prop::check("topk-nan-dup", 60, |rng| {
+            let n = 1 + rng.below(150);
+            let k = rng.below(n + 3);
+            let scores: Vec<f32> = (0..n)
+                .map(|_| match rng.below(4) {
+                    0 => f32::NAN,
+                    1 => 0.5, // force duplicates
+                    _ => rng.f32(),
+                })
+                .collect();
+            let got = top_k_desc(&scores, k);
+            // reference: total order = finite desc, NaN last, ties by index
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| {
+                let (x, y) = (scores[a], scores[b]);
+                match (x.is_nan(), y.is_nan()) {
+                    (true, true) => a.cmp(&b),
+                    (true, false) => std::cmp::Ordering::Greater,
+                    (false, true) => std::cmp::Ordering::Less,
+                    (false, false) => y.partial_cmp(&x).unwrap().then(a.cmp(&b)),
+                }
+            });
+            idx.truncate(k.min(n));
+            crate::prop_assert!(got == idx, "n={n} k={k}: {got:?} != {idx:?}");
+            // a NaN may appear only after every finite score is taken
+            let finite = scores.iter().filter(|s| !s.is_nan()).count();
+            for (pos, &i) in got.iter().enumerate() {
+                crate::prop_assert!(
+                    !scores[i].is_nan() || pos >= finite,
+                    "NaN at position {pos} before finite scores ran out"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn argmax_argmin() {
         assert_eq!(argmax(&[1.0, 3.0, 2.0]), Some(1));
         assert_eq!(argmin(&[1.0, 3.0, 2.0]), Some(0));

@@ -1,0 +1,334 @@
+//! Cluster integration over real TCP: a coordinator + N in-process
+//! workers against the same dataset as a single `AlServer`, proving the
+//! distributed selection semantics (DESIGN.md §Cluster):
+//!
+//! * exact index parity for random + the four uncertainty strategies,
+//! * quality parity (cover radius within a constant factor) for the
+//!   candidate-then-refine diversity/hybrid strategies,
+//! * failure-aware scatter-gather: a worker killed after push still
+//!   yields a full-budget selection via shard re-dispatch.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use alaas::cache::DataCache;
+use alaas::cluster::{worker::register_with, Coordinator, CoordinatorDeps};
+use alaas::config::AlaasConfig;
+use alaas::data::{generate_into_store, DatasetSpec, Oracle};
+use alaas::metrics::Registry;
+use alaas::pipeline::{run_pipeline, PipelineParams};
+use alaas::runtime::backend::ComputeBackend;
+use alaas::runtime::HostBackend;
+use alaas::server::{AlClient, AlServer, ServerDeps};
+use alaas::store::{Manifest, ObjectStore, SampleRef, StoreRouter};
+use alaas::trainer::LinearHead;
+
+/// Write dataset blobs through the router's s3sim *backing* store (fast
+/// path) while servers read them through s3sim URIs.
+struct NoopWrap(Arc<StoreRouter>);
+
+impl ObjectStore for NoopWrap {
+    fn get(&self, key: &str) -> alaas::store::StoreResult<Vec<u8>> {
+        self.0.s3sim_backing().get(key)
+    }
+    fn put(&self, key: &str, data: &[u8]) -> alaas::store::StoreResult<()> {
+        self.0.s3sim_backing().put(key, data)
+    }
+    fn exists(&self, key: &str) -> bool {
+        self.0.s3sim_backing().exists(key)
+    }
+    fn list(&self, prefix: &str) -> alaas::store::StoreResult<Vec<String>> {
+        self.0.s3sim_backing().list(prefix)
+    }
+    fn kind(&self) -> &'static str {
+        "wrap"
+    }
+}
+
+struct Harness {
+    coordinator: Coordinator,
+    coord_metrics: Arc<Registry>,
+    workers: Vec<AlServer>,
+    single: AlServer,
+    manifest: Manifest,
+    init_labels: Vec<u8>,
+    store: Arc<StoreRouter>,
+}
+
+fn base_config() -> AlaasConfig {
+    let mut cfg = AlaasConfig::default();
+    cfg.al_worker.host = "127.0.0.1".into();
+    cfg.al_worker.port = 0; // ephemeral
+    cfg.store.get_latency_us = 0;
+    cfg.store.bandwidth_mib_s = 0.0;
+    cfg.store.jitter = 0.0;
+    cfg
+}
+
+fn server_deps(store: Arc<StoreRouter>) -> ServerDeps {
+    ServerDeps {
+        store,
+        cache: Arc::new(DataCache::new(256 << 20, 8, true)),
+        backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
+        metrics: Registry::new(),
+    }
+}
+
+/// One shared store, `n_workers` worker servers + one single server over
+/// the same dataset, and a coordinator wired to the workers.
+fn harness(pool: usize, n_workers: usize) -> Harness {
+    let cfg = base_config();
+    let store = Arc::new(StoreRouter::new("/tmp", &cfg.store));
+    let spec = DatasetSpec::cifarsim(7).with_sizes(60, pool, 0);
+    let backing: Arc<dyn ObjectStore> =
+        Arc::new(NoopWrap(store.clone())) as Arc<dyn ObjectStore>;
+    let manifest = generate_into_store(&spec, &backing, "s3sim", "cl-ds");
+    let oracle = Oracle::load(&backing, "cl-ds").unwrap();
+    let init_ids: Vec<u32> = manifest.init.iter().map(|s| s.id).collect();
+    let init_labels = oracle.label(&init_ids);
+
+    let workers: Vec<AlServer> = (0..n_workers)
+        .map(|_| AlServer::start(cfg.clone(), server_deps(store.clone())).unwrap())
+        .collect();
+    let single = AlServer::start(cfg.clone(), server_deps(store.clone())).unwrap();
+
+    let mut coord_cfg = cfg;
+    coord_cfg.cluster.workers =
+        workers.iter().map(|w| w.addr().to_string()).collect();
+    let coord_metrics = Registry::new();
+    let coordinator = Coordinator::start(
+        coord_cfg,
+        CoordinatorDeps {
+            backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
+            metrics: coord_metrics.clone(),
+        },
+    )
+    .unwrap();
+    Harness { coordinator, coord_metrics, workers, single, manifest, init_labels, store }
+}
+
+fn ids(sel: &[SampleRef]) -> Vec<u32> {
+    sel.iter().map(|s| s.id).collect()
+}
+
+fn assert_valid(sel: &[SampleRef], manifest: &Manifest, budget: usize) {
+    assert_eq!(sel.len(), budget.min(manifest.pool.len()), "selection size");
+    let pool_ids: std::collections::HashSet<u32> =
+        manifest.pool.iter().map(|s| s.id).collect();
+    let mut seen = std::collections::HashSet::new();
+    for s in sel {
+        assert!(pool_ids.contains(&s.id), "id {} not in pool", s.id);
+        assert!(seen.insert(s.id), "duplicate id {}", s.id);
+    }
+}
+
+#[test]
+fn exact_parity_random_and_uncertainty() {
+    let h = harness(320, 4);
+    let mut single = AlClient::connect(&h.single.addr().to_string()).unwrap();
+    let mut cluster = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
+    single.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+    cluster.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+    for strategy in [
+        "random",
+        "least_confidence",
+        "margin_confidence",
+        "ratio_confidence",
+        "entropy",
+    ] {
+        let (want, _, _) = single.query("s", 40, Some(strategy)).unwrap();
+        let (got, named, _) = cluster.query("s", 40, Some(strategy)).unwrap();
+        assert_eq!(named, strategy);
+        assert_valid(&got, &h.manifest, 40);
+        assert_eq!(
+            ids(&got),
+            ids(&want),
+            "{strategy}: 4-worker selection differs from single server"
+        );
+    }
+}
+
+/// Pool embeddings in manifest order (embeddings are trunk-only, so the
+/// untrained head reproduces exactly what the servers computed).
+fn pool_embeddings(h: &Harness) -> alaas::util::mat::Mat {
+    let cache = DataCache::new(0, 1, false);
+    let backend: Arc<dyn ComputeBackend> = Arc::new(HostBackend::new());
+    let head = LinearHead::zeros(64, h.manifest.num_classes);
+    let out = run_pipeline(
+        &h.manifest.pool,
+        &h.store,
+        &cache,
+        &backend,
+        &head,
+        &PipelineParams::default(),
+        None,
+    )
+    .unwrap();
+    assert!(out.errors.is_empty());
+    out.embeddings
+}
+
+fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Max over the pool of the min distance to a selection — the k-center
+/// objective both diversity strategies optimize.
+fn cover_radius(emb: &alaas::util::mat::Mat, rows: &[usize]) -> f32 {
+    let mut worst = 0.0f32;
+    for i in 0..emb.rows() {
+        let best = rows
+            .iter()
+            .map(|&s| sqdist(emb.row(i), emb.row(s)))
+            .fold(f32::INFINITY, f32::min);
+        worst = worst.max(best);
+    }
+    worst
+}
+
+#[test]
+fn refine_parity_for_diversity_and_hybrid() {
+    let h = harness(240, 4);
+    let mut single = AlClient::connect(&h.single.addr().to_string()).unwrap();
+    let mut cluster = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
+    single.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+    cluster.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+
+    let emb = pool_embeddings(&h);
+    let id_to_row: HashMap<u32, usize> =
+        h.manifest.pool.iter().enumerate().map(|(i, s)| (s.id, i)).collect();
+    let rows =
+        |sel: &[SampleRef]| -> Vec<usize> { sel.iter().map(|s| id_to_row[&s.id]).collect() };
+
+    for strategy in ["k_center_greedy", "core_set", "dbal"] {
+        let (want, _, _) = single.query("s", 24, Some(strategy)).unwrap();
+        let (got, _, _) = cluster.query("s", 24, Some(strategy)).unwrap();
+        assert_valid(&got, &h.manifest, 24);
+        // distributed selection is deterministic
+        let (again, _, _) = cluster.query("s", 24, Some(strategy)).unwrap();
+        assert_eq!(ids(&got), ids(&again), "{strategy}: not deterministic");
+        if strategy != "dbal" {
+            // quality parity: the refined union must cover the pool nearly
+            // as tightly as the single-server selection
+            // radii are squared distances, so 4x here = 2x in metric terms
+            let r_single = cover_radius(&emb, &rows(&want));
+            let r_cluster = cover_radius(&emb, &rows(&got));
+            assert!(
+                r_cluster <= 4.0 * r_single + 1e-4,
+                "{strategy}: cluster cover radius {r_cluster} vs single {r_single}"
+            );
+        }
+    }
+}
+
+#[test]
+fn worker_death_mid_scan_redispatches() {
+    let mut h = harness(180, 3);
+    let mut cluster = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
+    cluster.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+    // kill one worker right after the scatter — its shard may still be
+    // scanning; the coordinator must re-dispatch it to a survivor
+    let dead = h.workers.remove(0);
+    dead.shutdown();
+    let (sel, _, _) = cluster.query("s", 40, Some("entropy")).unwrap();
+    assert_valid(&sel, &h.manifest, 40);
+    // a second query (now fully re-assigned) also works, as does a
+    // refine-protocol strategy over the surviving workers
+    let (sel2, _, _) = cluster.query("s", 40, Some("entropy")).unwrap();
+    assert_eq!(ids(&sel), ids(&sel2));
+    let (div, _, _) = cluster.query("s", 15, Some("k_center_greedy")).unwrap();
+    assert_valid(&div, &h.manifest, 15);
+}
+
+#[test]
+fn workers_can_register_dynamically() {
+    let cfg = base_config();
+    let store = Arc::new(StoreRouter::new("/tmp", &cfg.store));
+    let spec = DatasetSpec::cifarsim(9).with_sizes(40, 120, 0);
+    let backing: Arc<dyn ObjectStore> =
+        Arc::new(NoopWrap(store.clone())) as Arc<dyn ObjectStore>;
+    let manifest = generate_into_store(&spec, &backing, "s3sim", "reg-ds");
+    let oracle = Oracle::load(&backing, "reg-ds").unwrap();
+    let init_ids: Vec<u32> = manifest.init.iter().map(|s| s.id).collect();
+    let labels = oracle.label(&init_ids);
+
+    // coordinator starts empty; push_data must fail until workers join
+    let coordinator = Coordinator::start(
+        cfg.clone(),
+        CoordinatorDeps {
+            backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
+            metrics: Registry::new(),
+        },
+    )
+    .unwrap();
+    let mut client = AlClient::connect(&coordinator.addr().to_string()).unwrap();
+    let err = client.push_data("s", &manifest, Some(&labels)).unwrap_err();
+    assert!(format!("{err}").contains("no live workers"), "{err}");
+
+    let w1 = AlServer::start(cfg.clone(), server_deps(store.clone())).unwrap();
+    let w2 = AlServer::start(cfg.clone(), server_deps(store.clone())).unwrap();
+    let coord_addr = coordinator.addr().to_string();
+    register_with(&w1.addr().to_string(), &coord_addr).unwrap();
+    register_with(&w2.addr().to_string(), &coord_addr).unwrap();
+    assert_eq!(coordinator.live_workers(), 2);
+
+    client.push_data("s", &manifest, Some(&labels)).unwrap();
+    let (sel, _, _) = client.query("s", 20, Some("least_confidence")).unwrap();
+    assert_valid(&sel, &manifest, 20);
+
+    let status = client.call("cluster_status", alaas::json::Value::Null).unwrap();
+    let workers = status.get("workers").unwrap().as_array().unwrap();
+    assert_eq!(workers.len(), 2);
+    assert!(workers.iter().all(|w| w.get("alive").unwrap().as_bool() == Some(true)));
+}
+
+#[test]
+fn per_shard_metrics_and_straggler_gauge() {
+    let h = harness(160, 4);
+    let mut cluster = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
+    cluster.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+    cluster.query("s", 20, Some("entropy")).unwrap();
+
+    let snap = h.coord_metrics.snapshot();
+    let hists = snap.get("histograms").unwrap();
+    for i in 0..4 {
+        let name = format!("cluster.shard{i}.scan");
+        let shard = hists.get(&name).unwrap_or_else(|| panic!("missing {name}"));
+        assert!(
+            shard.get("count").unwrap().as_i64().unwrap() >= 1,
+            "{name} never recorded"
+        );
+    }
+    assert!(hists.get("cluster.shard_scan").is_some());
+    let counters = snap.get("counters").unwrap();
+    assert!(
+        counters.get("cluster.scan.straggler_ms").is_some(),
+        "straggler gauge missing"
+    );
+    // the same numbers are visible to clients through the metrics RPC
+    let remote = cluster.metrics().unwrap();
+    assert!(remote.get("histograms").unwrap().get("cluster.shard0.scan").is_some());
+}
+
+#[test]
+fn coordinator_error_paths() {
+    let h = harness(60, 2);
+    let mut cluster = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
+    let err = cluster.query("nope", 5, None).unwrap_err();
+    assert!(format!("{err}").contains("unknown session"), "{err}");
+    cluster.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+    let err = cluster.query("s", 5, Some("not_a_strategy")).unwrap_err();
+    assert!(format!("{err}").contains("unknown strategy"), "{err}");
+    let err = cluster.query("s", 5, Some("auto")).unwrap_err();
+    assert!(format!("{err}").contains("agent"), "{err}");
+    // budget larger than the pool degrades to the whole pool
+    let (sel, _, _) = cluster.query("s", 10_000, Some("random")).unwrap();
+    assert_eq!(sel.len(), 60);
+    // the connection survives the error responses
+    cluster.ping().unwrap();
+    // the client-facing surface matches the single server
+    let zoo = cluster.strategies().unwrap();
+    assert!(zoo.contains(&"core_set".to_string()));
+    let cs = cluster.cache_stats().unwrap();
+    assert!(cs.get("misses").unwrap().as_i64().unwrap() > 0);
+}
