@@ -1,0 +1,156 @@
+//! JSON (v1) vs binary-tensor (v2) wire comparison (DESIGN.md §Wire):
+//! encode, decode, and full round trip over loopback TCP for a 10k x 64
+//! embedding matrix — the `select_shard with_embeddings` shape the
+//! cluster's refine protocol ships per worker.
+//!
+//! Run: `cargo bench --bench rpc_wire`
+//!
+//! Besides the table, the bench writes a machine-readable
+//! `BENCH_PR2.json` at the repo root so the perf trajectory is tracked
+//! across PRs.
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use alaas::json::{self, Map, Value};
+use alaas::server::rpc;
+use alaas::server::wire::{self, Payload, WireMode};
+use alaas::util::bench::{fmt_dur, measure, Sample, Table};
+use alaas::util::mat::Mat;
+use alaas::util::rng::Rng;
+
+const ROWS: usize = 10_000;
+const COLS: usize = 64;
+
+/// The envelope a worker's refine reply would carry: slim candidate list
+/// in the header, the [ROWS, COLS] embedding matrix as the bulk payload.
+fn payload(m: Mat) -> (Value, Vec<Mat>) {
+    let mut p = Payload::default();
+    let ph = p.stash_mat(m);
+    let mut result = Map::new();
+    result.insert("scan_ms", Value::Number(12.5));
+    result.insert("cand_emb", ph);
+    let mut env = Map::new();
+    env.insert("id", Value::from(1u64));
+    env.insert("result", Value::Object(result));
+    (Value::Object(env), p.tensors)
+}
+
+struct ModeStats {
+    mode: WireMode,
+    bytes: usize,
+    encode: Sample,
+    decode: Sample,
+    roundtrip: Sample,
+}
+
+fn stat_obj(s: &ModeStats) -> Value {
+    let ms = |d: Duration| Value::Number(d.as_secs_f64() * 1e3);
+    let mut m = Map::new();
+    m.insert("payload_bytes", Value::from(s.bytes));
+    m.insert("encode_ms_mean", ms(s.encode.mean()));
+    m.insert("decode_ms_mean", ms(s.decode.mean()));
+    m.insert("roundtrip_ms_mean", ms(s.roundtrip.mean()));
+    m.insert("roundtrip_ms_p50", ms(s.roundtrip.percentile(0.5)));
+    m.insert("roundtrip_ms_min", ms(s.roundtrip.min()));
+    Value::Object(m)
+}
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let m = Mat::from_vec(
+        (0..ROWS * COLS).map(|_| rng.normal_f32()).collect(),
+        ROWS,
+        COLS,
+    );
+    let (env, tensors) = payload(m);
+
+    // Loopback echo peer: decode each frame and send it back re-encoded
+    // in the same mode, i.e. one full server-side codec pass per trip.
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        while let Ok((mut s, _)) = listener.accept() {
+            s.set_nodelay(true).ok();
+            loop {
+                let buf = match rpc::read_frame(&mut s) {
+                    Ok(b) => b,
+                    Err(_) => break,
+                };
+                let (v, t, mode) = wire::decode_payload(&buf).expect("echo decode");
+                let bytes = wire::encode_payload(&v, &t, mode).expect("echo encode");
+                if rpc::write_frame(&mut s, &bytes).is_err() {
+                    break;
+                }
+            }
+        }
+    });
+
+    let mut table = Table::new(
+        &format!("rpc_wire: {ROWS}x{COLS} f32 matrix, JSON vs binary frames"),
+        &["wire", "payload", "encode", "decode", "roundtrip(mean)", "roundtrip(min)"],
+    );
+    let mut stats = Vec::new();
+    for mode in [WireMode::Json, WireMode::Binary] {
+        let bytes = wire::encode_payload(&env, &tensors, mode).expect("encode");
+        let nbytes = bytes.len();
+        let encode = measure(1, 5, || {
+            let b = wire::encode_payload(&env, &tensors, mode).unwrap();
+            assert_eq!(b.len(), nbytes);
+        });
+        let decode = measure(1, 5, || {
+            let (_, t, m) = wire::decode_payload(&bytes).unwrap();
+            assert_eq!(m, mode);
+            // json inlines, so sections only exist on the binary wire
+            assert_eq!(t.len(), usize::from(mode == WireMode::Binary));
+        });
+        let mut conn = std::net::TcpStream::connect(addr).expect("connect echo");
+        conn.set_nodelay(true).ok();
+        let roundtrip = measure(1, 5, || {
+            let b = wire::encode_payload(&env, &tensors, mode).unwrap();
+            rpc::write_frame(&mut conn, &b).unwrap();
+            let back = rpc::read_frame(&mut conn).unwrap();
+            let (_, _, m) = wire::decode_payload(&back).unwrap();
+            assert_eq!(m, mode);
+        });
+        table.row(&[
+            mode.as_str().to_string(),
+            format!("{:.2} MiB", nbytes as f64 / (1024.0 * 1024.0)),
+            fmt_dur(encode.mean()),
+            fmt_dur(decode.mean()),
+            fmt_dur(roundtrip.mean()),
+            fmt_dur(roundtrip.min()),
+        ]);
+        stats.push(ModeStats { mode, bytes: nbytes, encode, decode, roundtrip });
+    }
+    table.print();
+
+    let (j, b) = (&stats[0], &stats[1]);
+    let payload_ratio = j.bytes as f64 / b.bytes as f64;
+    let rt_speedup =
+        j.roundtrip.mean().as_secs_f64() / b.roundtrip.mean().as_secs_f64().max(1e-12);
+    println!(
+        "\npayload ratio (json/binary): {payload_ratio:.2}x   \
+         roundtrip speedup: {rt_speedup:.2}x"
+    );
+
+    let mut root = Map::new();
+    root.insert("bench", Value::from("rpc_wire"));
+    root.insert("case", Value::from(format!("{ROWS}x{COLS}")));
+    root.insert(j.mode.as_str(), stat_obj(j));
+    root.insert(b.mode.as_str(), stat_obj(b));
+    root.insert("payload_ratio", Value::Number(payload_ratio));
+    root.insert("roundtrip_speedup", Value::Number(rt_speedup));
+    let out = json::to_string_pretty(&Value::Object(root));
+    // cargo runs benches from the package root (rust/); the tracking file
+    // lives at the repo root next to ROADMAP.md
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_PR2.json"
+    } else {
+        "BENCH_PR2.json"
+    };
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -31,6 +31,7 @@ use crate::metrics::Registry;
 use crate::runtime::backend::ComputeBackend;
 use crate::server::rpc::{self, RpcError};
 use crate::server::server::{parse_init_labels, str_param};
+use crate::server::wire::{self, Payload, WireMode};
 use crate::server::SELECT_SEED;
 use crate::store::{Manifest, SampleRef};
 use crate::strategies::{self, SelectCtx};
@@ -82,6 +83,10 @@ struct CoordState {
     sessions: Mutex<HashMap<String, Arc<Mutex<ClusterSession>>>>,
     /// Monotonic push counter feeding `ClusterSession::epoch`.
     push_epoch: std::sync::atomic::AtomicU64,
+    /// Negotiated wire encoding per worker address (DESIGN.md §Wire):
+    /// absent = optimistic binary; `Json` after a peer refused or garbled
+    /// a v2 frame. Cleared when the address (re-)registers.
+    wire_modes: Mutex<HashMap<String, WireMode>>,
     shutdown: AtomicBool,
 }
 
@@ -112,6 +117,7 @@ impl Coordinator {
             workers: Mutex::new(workers),
             sessions: Mutex::new(HashMap::new()),
             push_epoch: std::sync::atomic::AtomicU64::new(0),
+            wire_modes: Mutex::new(HashMap::new()),
             shutdown: AtomicBool::new(false),
         });
         let accept_state = state.clone();
@@ -177,23 +183,32 @@ fn handle_conn(mut stream: TcpStream, state: Arc<CoordState>) {
         "cluster",
         &state.shutdown,
         &state.deps.metrics,
-        |method, params| dispatch(&state, method, params),
+        state.config.server.wire,
+        |method, params, _mode| dispatch(&state, method, params),
     );
 }
 
-fn dispatch(state: &Arc<CoordState>, method: &str, params: &Value) -> Result<Value, String> {
+fn dispatch(
+    state: &Arc<CoordState>,
+    method: &str,
+    params: &Payload,
+) -> Result<Payload, String> {
     match method {
-        "ping" => Ok(Value::from("pong")),
-        "register" => register(state, params),
-        "push_data" => push_data(state, params),
-        "status" => status(state, params),
-        "query" => query(state, params),
-        "metrics" => Ok(state.deps.metrics.snapshot()),
-        "strategies" => Ok(Value::Array(
+        "hello" => Ok(Payload::json(wire::hello_reply(
+            &params.value,
+            state.config.server.wire,
+        ))),
+        "ping" => Ok(Payload::json(Value::from("pong"))),
+        "register" => register(state, &params.value).map(Payload::json),
+        "push_data" => push_data(state, params).map(Payload::json),
+        "status" => status(state, &params.value).map(Payload::json),
+        "query" => query(state, &params.value).map(Payload::json),
+        "metrics" => Ok(Payload::json(state.deps.metrics.snapshot())),
+        "strategies" => Ok(Payload::json(Value::Array(
             strategies::zoo_names().into_iter().map(Value::from).collect(),
-        )),
-        "cache_stats" => cache_stats(state),
-        "cluster_status" => Ok(cluster_status(state)),
+        ))),
+        "cache_stats" => cache_stats(state).map(Payload::json),
+        "cluster_status" => Ok(Payload::json(cluster_status(state))),
         other => Err(format!("unknown method '{other}'")),
     }
 }
@@ -214,13 +229,15 @@ fn select_rpc_timeout(wait_ms: u64) -> Duration {
     Duration::from_millis(wait_ms) + Duration::from_secs(60)
 }
 
-/// One blocking RPC to a worker over a fresh connection.
-fn call_worker(
+/// One blocking RPC to a worker over a fresh connection, in `mode`.
+fn call_worker_once(
+    state: &CoordState,
     addr: &str,
     method: &str,
-    params: Value,
+    params: &Payload,
     read_timeout: Duration,
-) -> Result<Value, RpcError> {
+    mode: WireMode,
+) -> Result<Payload, RpcError> {
     let sock = addr
         .to_socket_addrs()
         .ok()
@@ -229,8 +246,122 @@ fn call_worker(
     let mut stream = TcpStream::connect_timeout(&sock, Duration::from_secs(2))?;
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(read_timeout)).ok();
-    rpc::send_request(&mut stream, 1, method, params)?;
-    rpc::recv_response(&mut stream, 1)
+    let metrics = Some(state.deps.metrics.as_ref());
+    rpc::send_request_wire(&mut stream, 1, method, params, mode, metrics)?;
+    rpc::recv_response_wire(&mut stream, 1, metrics)
+}
+
+/// Does this failure look like "the peer cannot speak the binary wire"
+/// rather than a dead worker or an application error? `Some(true)` means
+/// the peer said so explicitly (`ERR_BINARY_DISABLED` from a JSON-forced
+/// v2 server) — safe to cache the downgrade. `Some(false)` means the
+/// transport died the way a pre-v2 peer garbling a v2 frame would
+/// (`Closed`/`Malformed`) — worth one JSON retry, but NOT a cached
+/// downgrade, since a transient connection drop looks identical and must
+/// not strand a healthy binary worker on the slow path.
+fn wire_refusal(e: &RpcError) -> Option<bool> {
+    match e {
+        RpcError::Remote(msg) if msg.contains(wire::ERR_BINARY_DISABLED) => Some(true),
+        RpcError::Closed | RpcError::Malformed(_) => Some(false),
+        _ => None,
+    }
+}
+
+/// Record that `addr` speaks JSON only (until it re-`register`s).
+fn cache_json_downgrade(state: &CoordState, addr: &str) {
+    state
+        .deps
+        .metrics
+        .counter("wire.json_fallbacks")
+        .fetch_add(1, Ordering::Relaxed);
+    state
+        .wire_modes
+        .lock()
+        .unwrap()
+        .insert(addr.to_string(), WireMode::Json);
+}
+
+/// One v1 `hello` round trip asking `addr` for the binary wire.
+/// `Some(true)` = peer agreed; `Some(false)` = peer answered but cannot
+/// or will not speak v2 (including pre-v2 "unknown method"); `None` =
+/// transport failure, nothing learned — stay optimistic rather than
+/// stranding a flaky-but-binary worker on the slow path.
+fn probe_binary(state: &CoordState, addr: &str) -> Option<bool> {
+    let mut p = Map::new();
+    p.insert("wire", Value::from(WireMode::Binary.as_str()));
+    p.insert("version", Value::from(wire::WIRE_VERSION as u64));
+    let params = Payload::json(Value::Object(p));
+    match call_worker_once(state, addr, "hello", &params, POLL_RPC_TIMEOUT, WireMode::Json) {
+        Ok(r) => Some(r.value.get("wire").and_then(Value::as_str) == Some("binary")),
+        Err(RpcError::Remote(_)) => Some(false),
+        Err(_) => None,
+    }
+}
+
+/// One blocking RPC to a worker: optimistic binary (unless this process
+/// is configured `wire = "json"` or the address is cached as JSON-only),
+/// with a one-shot JSON retry when the peer refuses the v2 frame; the
+/// address is downgraded to JSON-only on an explicit refusal, or when a
+/// follow-up `hello` probe confirms the peer cannot speak v2.
+fn call_worker(
+    state: &CoordState,
+    addr: &str,
+    method: &str,
+    params: &Payload,
+    read_timeout: Duration,
+) -> Result<Payload, RpcError> {
+    let mode = if state.config.server.wire == WireMode::Json {
+        WireMode::Json
+    } else {
+        *state
+            .wire_modes
+            .lock()
+            .unwrap()
+            .get(addr)
+            .unwrap_or(&WireMode::Binary)
+    };
+    match call_worker_once(state, addr, method, params, read_timeout, mode) {
+        Err(e) if mode == WireMode::Binary => match wire_refusal(&e) {
+            Some(cache_downgrade) => {
+                crate::log_debug!(
+                    "cluster",
+                    "worker {addr} refused binary wire ({e}); retrying as JSON"
+                );
+                let retry = call_worker_once(
+                    state,
+                    addr,
+                    method,
+                    params,
+                    read_timeout,
+                    WireMode::Json,
+                );
+                if retry.is_ok() {
+                    if cache_downgrade {
+                        // explicit refusal: downgrade sticks immediately
+                        cache_json_downgrade(state, addr);
+                    } else {
+                        // ambiguous (Closed/Malformed): a pre-v2 peer and
+                        // a transient drop look identical from the failed
+                        // call alone. One cheap hello probe decides, so a
+                        // pre-v2 worker doesn't pay a doubled bulk send on
+                        // every future RPC and a healthy binary worker
+                        // isn't stranded on the slow path.
+                        state
+                            .deps
+                            .metrics
+                            .counter("wire.json_retries")
+                            .fetch_add(1, Ordering::Relaxed);
+                        if probe_binary(state, addr) == Some(false) {
+                            cache_json_downgrade(state, addr);
+                        }
+                    }
+                }
+                retry
+            }
+            None => Err(e),
+        },
+        other => other,
+    }
 }
 
 /// Snapshot of live worker slots as (slot index, addr).
@@ -282,6 +413,8 @@ fn register(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
     }
     let live = ws.iter().filter(|w| w.alive).count();
     drop(ws);
+    // a (re)registered worker may have a new wire config; renegotiate
+    state.wire_modes.lock().unwrap().remove(&addr);
     crate::log_info!("cluster", "worker {addr} registered ({live} live)");
     let mut m = Map::new();
     m.insert("workers", Value::from(live));
@@ -312,18 +445,25 @@ fn scan_shard_params(
     manifest: &Manifest,
     indices: &[usize],
     init_labels: Option<&[u8]>,
-) -> Value {
+) -> Payload {
     let mut p = Map::new();
     p.insert("session", Value::from(shard_session_id(session, epoch, shard_idx)));
     p.insert("shard", Value::from(shard_idx));
     p.insert("manifest", sub_manifest(manifest, indices, shard_idx).to_value());
     if let Some(l) = init_labels {
+        // labels stay in the v1 integer-array form: these params are
+        // built before the wire mode for the target worker is known, and
+        // the JSON-fallback retry of this exact payload must remain
+        // parseable by a pre-v2 worker (unlike AlClient, which only uses
+        // the tensor form after a successful binary negotiation). Labels
+        // are init-split-sized — noise next to the embedding tensors the
+        // binary plane exists for.
         p.insert(
             "init_labels",
             Value::Array(l.iter().map(|&x| Value::from(x as u64)).collect()),
         );
     }
-    Value::Object(p)
+    Payload::json(Value::Object(p))
 }
 
 /// Send one shard to a worker: the preferred slot first, then any other
@@ -345,7 +485,7 @@ fn dispatch_shard(
     order.extend(live_slots(state).into_iter().map(|(i, _)| i).filter(|&i| i != preferred));
     for slot in order {
         let Some(addr) = worker_addr(state, slot) else { continue };
-        match call_worker(&addr, "scan_shard", params.clone(), FAST_RPC_TIMEOUT) {
+        match call_worker(state, &addr, "scan_shard", &params, FAST_RPC_TIMEOUT) {
             Ok(_) => return Ok(slot),
             // the worker is alive and rejected the push itself (bad
             // manifest, spawn failure): deterministic — retrying the
@@ -363,9 +503,9 @@ fn dispatch_shard(
 }
 
 /// `push_data {session, manifest, init_labels?}` — shard + scatter.
-fn push_data(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
-    let session_id = str_param(params, "session")?;
-    let manifest_v = params.get("manifest").ok_or("missing param 'manifest'")?;
+fn push_data(state: &Arc<CoordState>, params: &Payload) -> Result<Value, String> {
+    let session_id = str_param(&params.value, "session")?;
+    let manifest_v = params.value.get("manifest").ok_or("missing param 'manifest'")?;
     let manifest = Manifest::from_value(manifest_v).map_err(|e| e.to_string())?;
     let init_labels = parse_init_labels(params, manifest.init.len())?;
 
@@ -486,7 +626,8 @@ fn drop_shard_sessions(
         let Some(addr) = worker_addr(state, slot) else { continue };
         let mut p = Map::new();
         p.insert("session", Value::from(shard_session_id(session, epoch, shard_idx)));
-        if call_worker(&addr, "drop_session", Value::Object(p), POLL_RPC_TIMEOUT).is_err() {
+        let params = Payload::json(Value::Object(p));
+        if call_worker(state, &addr, "drop_session", &params, POLL_RPC_TIMEOUT).is_err() {
             crate::log_debug!(
                 "cluster",
                 "drop_session for shard {shard_idx} on {addr} failed (ignored)"
@@ -551,7 +692,7 @@ fn select_on_shard(
     p.insert("with_embeddings", Value::Bool(job.with_embeddings));
     p.insert("with_init_emb", Value::Bool(job.with_init_emb));
     p.insert("wait_ms", Value::from(wait_ms as usize));
-    let params = Value::Object(p);
+    let params = Payload::json(Value::Object(p));
 
     let mut slot = job.worker;
     let mut last_err = String::from("no live workers");
@@ -569,7 +710,7 @@ fn select_on_shard(
             }
         };
         let select_timeout = select_rpc_timeout(wait_ms);
-        let resp = match call_worker(&addr, "select_shard", params.clone(), select_timeout) {
+        let resp = match call_worker(state, &addr, "select_shard", &params, select_timeout) {
             Err(RpcError::Remote(e)) if e.contains("unknown session") => {
                 state
                     .deps
@@ -582,9 +723,10 @@ fn select_on_shard(
                     job.shard
                 );
                 call_worker(
+                    state,
                     &addr,
                     "scan_shard",
-                    scan_shard_params(
+                    &scan_shard_params(
                         session,
                         epoch,
                         job.shard,
@@ -595,13 +737,13 @@ fn select_on_shard(
                     FAST_RPC_TIMEOUT,
                 )
                 .and_then(|_| {
-                    call_worker(&addr, "select_shard", params.clone(), select_timeout)
+                    call_worker(state, &addr, "select_shard", &params, select_timeout)
                 })
             }
             other => other,
         };
         match resp {
-            Ok(v) => return decode_shard_reply(&v, job, slot),
+            Ok(v) => return decode_shard_reply(v, job, slot),
             Err(RpcError::Remote(e)) => {
                 // the worker is alive; the request itself is bad
                 return Err(format!("shard {}: {e}", job.shard));
@@ -631,10 +773,13 @@ fn next_live_slot(state: &CoordState, after: usize) -> Option<usize> {
 }
 
 fn decode_shard_reply(
-    v: &Value,
+    reply: Payload,
     job: &ShardJob,
     worker: usize,
 ) -> Result<ShardReply, String> {
+    // consumed by value: each tensor section is used exactly once, so
+    // the bulk matrices are moved out rather than cloned
+    let Payload { value: v, mut tensors } = reply;
     let to_global = |local: usize| -> Result<usize, String> {
         job.indices
             .get(local)
@@ -654,16 +799,35 @@ fn decode_shard_reply(
         .collect::<Result<Vec<_>, _>>()?;
     let mut candidates = Vec::new();
     if let Some(arr) = v.get("candidates").and_then(Value::as_array) {
-        for c in arr {
+        // refine-protocol matrices arrive packed: one [N, 4] score and one
+        // [N, D] embedding tensor whose rows parallel the slim candidate
+        // list. A PR1-era worker instead embeds per-candidate float
+        // arrays, which Candidate::from_value still decodes.
+        let cand_scores = wire::take_mat(&v, &mut tensors, "cand_scores")?;
+        let cand_emb = wire::take_mat(&v, &mut tensors, "cand_emb")?;
+        for m in [&cand_scores, &cand_emb].into_iter().flatten() {
+            if m.rows() != arr.len() {
+                return Err(format!(
+                    "shard {}: packed tensor rows {} != {} candidates",
+                    job.shard,
+                    m.rows(),
+                    arr.len()
+                ));
+            }
+        }
+        for (i, c) in arr.iter().enumerate() {
             let mut cand = Candidate::from_value(c)?;
             cand.idx = to_global(cand.idx)?;
+            if let Some(m) = &cand_scores {
+                cand.scores = m.row(i).to_vec();
+            }
+            if let Some(m) = &cand_emb {
+                cand.emb = m.row(i).to_vec();
+            }
             candidates.push(cand);
         }
     }
-    let init_emb = match v.get("init_emb") {
-        Some(m) => Some(merge::mat_from_value(m)?),
-        None => None,
-    };
+    let init_emb = wire::take_mat(&v, &mut tensors, "init_emb")?;
     Ok(ShardReply {
         shard: job.shard,
         candidates,
@@ -902,8 +1066,10 @@ fn poll_shard_status(
         Some(addr) => {
             let mut p = Map::new();
             p.insert("session", Value::from(shard_session_id(session, epoch, shard)));
-            match call_worker(&addr, "status", Value::Object(p), POLL_RPC_TIMEOUT) {
+            let params = Payload::json(Value::Object(p));
+            match call_worker(state, &addr, "status", &params, POLL_RPC_TIMEOUT) {
                 Ok(v) => v
+                    .value
                     .get("status")
                     .and_then(Value::as_str)
                     .unwrap_or("unknown")
@@ -995,8 +1161,9 @@ fn cache_stats(state: &Arc<CoordState>) -> Result<Value, String> {
             .map(|(slot, addr)| {
                 let (slot, addr) = (*slot, addr.as_str());
                 sc.spawn(move || {
-                    match call_worker(addr, "cache_stats", Value::Null, POLL_RPC_TIMEOUT) {
-                        Ok(v) => Some(v),
+                    let params = Payload::json(Value::Null);
+                    match call_worker(state, addr, "cache_stats", &params, POLL_RPC_TIMEOUT) {
+                        Ok(v) => Some(v.value),
                         Err(_) => {
                             mark_dead(state, slot);
                             None

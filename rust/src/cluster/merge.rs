@@ -22,7 +22,12 @@ use std::cmp::Ordering;
 
 use crate::json::{Map, Value};
 use crate::strategies::ScoreColumn;
-use crate::util::mat::Mat;
+
+// Matrix wire forms live in the data-plane module with the v2 protocol
+// (DESIGN.md §Wire); Candidate's slim/fat JSON forms reuse them.
+use crate::server::wire::{f32s_from_value, f32s_to_value};
+#[cfg(test)]
+use crate::server::wire::{mat_from_value, mat_to_value};
 
 /// How the coordinator combines per-shard results for a strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -138,43 +143,10 @@ impl Candidate {
     }
 }
 
-fn f32s_to_value(xs: &[f32]) -> Value {
-    Value::Array(xs.iter().map(|&x| Value::Number(x as f64)).collect())
-}
-
-fn f32s_from_value(v: &Value) -> Result<Vec<f32>, String> {
-    let arr = v.as_array().ok_or("expected number array")?;
-    Ok(arr
-        .iter()
-        .map(|x| match x {
-            Value::Number(n) => *n as f32,
-            _ => f32::NAN,
-        })
-        .collect())
-}
-
-/// Wire form of a matrix: `{rows, cols, data: [f64...]}` (row-major).
-pub fn mat_to_value(m: &Mat) -> Value {
-    let mut o = Map::new();
-    o.insert("rows", Value::from(m.rows()));
-    o.insert("cols", Value::from(m.cols()));
-    o.insert("data", f32s_to_value(m.as_slice()));
-    Value::Object(o)
-}
-
-pub fn mat_from_value(v: &Value) -> Result<Mat, String> {
-    let rows = v.get("rows").and_then(Value::as_usize).ok_or("mat missing rows")?;
-    let cols = v.get("cols").and_then(Value::as_usize).ok_or("mat missing cols")?;
-    let data = f32s_from_value(v.get("data").ok_or("mat missing data")?)?;
-    if data.len() != rows * cols {
-        return Err(format!("mat data len {} != {rows}x{cols}", data.len()));
-    }
-    Ok(Mat::from_vec(data, rows, cols))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::mat::Mat;
     use crate::util::topk;
 
     /// Split scores into shards, take each shard's local top-k, merge, and

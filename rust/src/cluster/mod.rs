@@ -5,7 +5,8 @@
 //! per box; the ROADMAP's north star is heavy multi-user traffic, and the
 //! biggest remaining lever on end-to-end AL latency is scanning one
 //! pushed pool on N machines at once. This subsystem adds a second
-//! serving topology on top of the existing framed-JSON RPC protocol:
+//! serving topology on top of the framed RPC protocol (JSON v1 or the
+//! binary tensor data plane, DESIGN.md §Wire):
 //!
 //! * [`shard`] — deterministic shard plans (contiguous / strided) mapping
 //!   global pool positions onto workers.

@@ -30,7 +30,10 @@ pub fn register_with(worker_addr: &str, coordinator: &str) -> Result<(), RpcErro
 
 /// Build the `select_shard` candidate list from a ready session's scan
 /// outputs. `ok_rows[rel]` maps a strategy-relative index back to the
-/// shard-local pool index the coordinator's plan understands.
+/// shard-local pool index the coordinator's plan understands. The server
+/// puts the slim `{idx, score}` pairs in the JSON header and — under the
+/// refine protocol — packs the per-candidate `scores`/`emb` rows into two
+/// tensor sections (DESIGN.md §Wire).
 #[allow(clippy::too_many_arguments)]
 pub fn build_candidates(
     strategy: &str,
@@ -42,7 +45,7 @@ pub fn build_candidates(
     labeled: &Mat,
     backend: &dyn ComputeBackend,
     seed: u64,
-) -> Result<Vec<Value>, String> {
+) -> Result<Vec<Candidate>, String> {
     let kind = merge_kind(strategy)
         .ok_or_else(|| format!("select_shard: unknown strategy '{strategy}'"))?;
     let strat = strategies::by_name(strategy)
@@ -71,7 +74,6 @@ pub fn build_candidates(
                 scores: if with_embeddings { cand_scores.row(rel).to_vec() } else { vec![] },
                 emb: if with_embeddings { cand_emb.row(rel).to_vec() } else { vec![] },
             }
-            .to_value(with_embeddings)
         })
         .collect())
 }
@@ -107,14 +109,14 @@ mod tests {
         )
         .unwrap();
         let want = topk::top_k_desc(&lc, 3); // [0, 5, 3] in rel indices
-        let got_idx: Vec<usize> =
-            out.iter().map(|v| v.get("idx").unwrap().as_usize().unwrap()).collect();
+        let got_idx: Vec<usize> = out.iter().map(|c| c.idx).collect();
         let want_idx: Vec<usize> = want.iter().map(|&rel| ok_rows[rel]).collect();
         assert_eq!(got_idx, want_idx);
-        // slim wire form: no embeddings attached
-        assert!(out[0].get("emb").is_none());
-        let s = out[0].get("score").unwrap().as_f64().unwrap();
-        assert!((s - 0.9).abs() < 1e-6);
+        // slim candidates: no embeddings attached, and the slim wire form
+        // drops the heavy fields too
+        assert!(out[0].emb.is_empty());
+        assert!(out[0].to_value(false).get("emb").is_none());
+        assert!((out[0].score - 0.9).abs() < 1e-6);
     }
 
     #[test]
@@ -140,8 +142,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(out.len(), 4);
-        for v in &out {
-            let c = Candidate::from_value(v).unwrap();
+        for c in &out {
             assert_eq!(c.emb.len(), 3);
             assert_eq!(c.scores.len(), 4);
             // embedding row matches the candidate's local index

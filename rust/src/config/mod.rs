@@ -8,6 +8,7 @@
 //! setup, so the quickstart config is a handful of lines (Fig 2).
 
 use crate::json::Value;
+use crate::server::wire::WireMode;
 use crate::yamlmini;
 
 /// Validation failure: which field, what's wrong.
@@ -214,6 +215,23 @@ impl Default for ClusterConfig {
     }
 }
 
+/// `server.*` — RPC data-plane settings (DESIGN.md §Wire).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    /// Wire encoding this process *sends* and, server-side, whether v2
+    /// binary requests are accepted: `binary` (default — v2 tensor
+    /// frames, negotiated per peer with automatic JSON fallback) or
+    /// `json` (force v1 frames only; v2 requests are refused with the
+    /// stable `binary wire disabled` error).
+    pub wire: WireMode,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { wire: WireMode::Binary }
+    }
+}
+
 /// Data-cache settings (paper §3.3 "data cache").
 #[derive(Debug, Clone, PartialEq)]
 pub struct CacheConfig {
@@ -239,6 +257,7 @@ pub struct AlaasConfig {
     pub store: StoreConfig,
     pub cache: CacheConfig,
     pub cluster: ClusterConfig,
+    pub server: ServerConfig,
     /// Directory holding `manifest.json` + `*.hlo.txt` from `make artifacts`.
     pub artifacts_dir: String,
 }
@@ -253,6 +272,7 @@ impl Default for AlaasConfig {
             store: StoreConfig::default(),
             cache: CacheConfig::default(),
             cluster: ClusterConfig::default(),
+            server: ServerConfig::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -397,6 +417,16 @@ impl AlaasConfig {
             }
             if let Some(x) = s.get("oversample_factor") {
                 c.oversample_factor = req_usize(x, "cluster.oversample_factor")?;
+            }
+        }
+
+        if let Some(s) = v.get("server") {
+            let c = &mut cfg.server;
+            if let Some(x) = s.get("wire") {
+                let name = req_str(x, "server.wire")?;
+                c.wire = WireMode::parse(&name).ok_or_else(|| {
+                    cerr("server.wire", format!("unknown wire mode '{name}' (json|binary)"))
+                })?;
             }
         }
 
@@ -604,6 +634,18 @@ cluster:
         assert_eq!(e.field, "cluster.workers");
         let e = AlaasConfig::from_yaml_str("cluster:\n  workers: 3\n").unwrap_err();
         assert_eq!(e.field, "cluster.workers");
+    }
+
+    #[test]
+    fn parses_server_wire_knob() {
+        let cfg = AlaasConfig::from_yaml_str("server:\n  wire: json\n").unwrap();
+        assert_eq!(cfg.server.wire, WireMode::Json);
+        let cfg = AlaasConfig::from_yaml_str("server:\n  wire: binary\n").unwrap();
+        assert_eq!(cfg.server.wire, WireMode::Binary);
+        // default prefers the binary data plane
+        assert_eq!(AlaasConfig::default().server.wire, WireMode::Binary);
+        let e = AlaasConfig::from_yaml_str("server:\n  wire: msgpack\n").unwrap_err();
+        assert_eq!(e.field, "server.wire");
     }
 
     #[test]

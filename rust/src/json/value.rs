@@ -28,6 +28,14 @@ impl Map {
         self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
     }
 
+    /// Remove a key, returning its value; the other entries keep their
+    /// order. Lets RPC decode move large subtrees out of an envelope
+    /// instead of cloning them.
+    pub fn remove(&mut self, key: &str) -> Option<Value> {
+        let i = self.entries.iter().position(|(k, _)| k == key)?;
+        Some(self.entries.remove(i).1)
+    }
+
     pub fn contains_key(&self, key: &str) -> bool {
         self.get(key).is_some()
     }
@@ -221,6 +229,17 @@ mod tests {
         m.insert("a", Value::from(3));
         assert_eq!(m.keys().collect::<Vec<_>>(), vec!["a", "b"]);
         assert_eq!(m.get("a").unwrap().as_i64(), Some(3));
+    }
+
+    #[test]
+    fn map_remove_takes_value_and_keeps_order() {
+        let mut m = Map::new();
+        m.insert("a", Value::from(1));
+        m.insert("b", Value::from(2));
+        m.insert("c", Value::from(3));
+        assert_eq!(m.remove("b").unwrap().as_i64(), Some(2));
+        assert!(m.remove("b").is_none());
+        assert_eq!(m.keys().collect::<Vec<_>>(), vec!["a", "c"]);
     }
 
     #[test]

@@ -177,7 +177,10 @@ fn fetch_and_preprocess(
     Ok(tensor)
 }
 
-/// Infer one assembled batch and scatter rows into the output.
+/// Infer one assembled batch and scatter rows into the output. `scratch`
+/// is a per-worker buffer for the flattened batch, reused across calls so
+/// the steady state allocates nothing (its capacity is reclaimed via
+/// `Mat::into_vec` after the forward pass).
 #[allow(clippy::too_many_arguments)]
 fn infer_batch(
     batch: &[Ready],
@@ -187,10 +190,13 @@ fn infer_batch(
     errors: &Mutex<Vec<(usize, String)>>,
     processed: &std::sync::atomic::AtomicUsize,
     metrics: Option<&Arc<Registry>>,
+    scratch: &mut Vec<f32>,
 ) {
     let t0 = Instant::now();
     let img_dim = batch[0].tensor.len();
-    let mut flat = Vec::with_capacity(batch.len() * img_dim);
+    let mut flat = std::mem::take(scratch);
+    flat.clear();
+    flat.reserve(batch.len() * img_dim);
     for r in batch {
         flat.extend_from_slice(&r.tensor);
     }
@@ -215,6 +221,7 @@ fn infer_batch(
         mreg.time("stage.infer", t0.elapsed());
         mreg.meter("infer.images").add(batch.len() as u64);
     }
+    *scratch = m.into_vec();
 }
 
 /// Figure 3c: all stages concurrent, bounded queues in between.
@@ -286,11 +293,15 @@ fn run_pipelined(
         for _ in 0..params.infer_threads.max(1) {
             let batch_rx = batch_rx.clone();
             s.spawn(move || {
+                let mut scratch = Vec::new();
                 while let Some(batch) = batch_rx.recv() {
                     if batch.is_empty() {
                         continue;
                     }
-                    infer_batch(&batch, backend, head, out, errors, processed, metrics);
+                    infer_batch(
+                        &batch, backend, head, out, errors, processed, metrics,
+                        &mut scratch,
+                    );
                 }
             });
         }
@@ -341,8 +352,9 @@ fn run_serial_offset(
             Err(e) => errors.lock().unwrap().push((base + off, e)),
         }
     }
+    let mut scratch = Vec::new();
     for chunk in ready.chunks(params.batch.max_batch.max(1)) {
-        infer_batch(chunk, backend, head, out, errors, processed, metrics);
+        infer_batch(chunk, backend, head, out, errors, processed, metrics, &mut scratch);
     }
     Ok(())
 }

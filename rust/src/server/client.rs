@@ -5,45 +5,113 @@
 //! al_client.push_data(data_list)
 //! selected = al_client.query(budget=10)
 //! ```
+//!
+//! On connect the client negotiates the wire encoding with one `hello`
+//! round trip (DESIGN.md §Wire): a v2-capable server answers
+//! `{wire: "binary"}` and subsequent frames carry tensors as raw f32
+//! sections; a JSON-forced or pre-v2 server leaves the connection on the
+//! v1 JSON wire. `connect_with_wire(addr, WireMode::Json)` skips the
+//! probe and forces v1 frames.
 
 use std::net::TcpStream;
 use std::time::Duration;
 
 use crate::json::{Map, Value};
 use crate::server::rpc::{self, RpcError};
+use crate::server::wire::{self, Payload, WireMode};
 use crate::store::{Manifest, SampleRef};
+use crate::util::mat::Mat;
+
+/// Read deadline for the connect-time `hello` probe: a peer that accepts
+/// TCP but never answers must fail the constructor, not hang it.
+const HELLO_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Blocking RPC client for an AL server.
 pub struct AlClient {
     stream: TcpStream,
     next_id: u64,
+    mode: WireMode,
 }
 
 impl AlClient {
-    /// Connect to `addr` ("host:port").
+    /// Connect to `addr` ("host:port"), preferring the binary wire.
     pub fn connect(addr: &str) -> Result<AlClient, RpcError> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true).ok();
-        Ok(AlClient { stream, next_id: 1 })
+        Self::connect_with_wire(addr, WireMode::Binary)
     }
 
-    /// Connect with a timeout.
+    /// Connect with an explicit wire preference. `Binary` performs the
+    /// `hello` negotiation (falling back to JSON when the peer refuses or
+    /// predates it); `Json` skips the probe and speaks v1 frames only.
+    pub fn connect_with_wire(addr: &str, prefer: WireMode) -> Result<AlClient, RpcError> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let mut c = AlClient { stream, next_id: 1, mode: WireMode::Json };
+        if prefer == WireMode::Binary {
+            c.negotiate(HELLO_TIMEOUT)?;
+        }
+        Ok(c)
+    }
+
+    /// Connect with a timeout (binary-preferring, like `connect`); the
+    /// timeout also bounds the `hello` negotiation round trip.
     pub fn connect_timeout(
         addr: std::net::SocketAddr,
         timeout: Duration,
     ) -> Result<AlClient, RpcError> {
         let stream = TcpStream::connect_timeout(&addr, timeout)?;
         stream.set_nodelay(true).ok();
-        Ok(AlClient { stream, next_id: 1 })
+        let mut c = AlClient { stream, next_id: 1, mode: WireMode::Json };
+        c.negotiate(timeout)?;
+        Ok(c)
     }
 
-    /// Raw RPC call — the escape hatch the cluster layer uses for methods
-    /// outside the Figure 2 client API (`register`, `scan_shard`, ...).
-    pub fn call(&mut self, method: &str, params: Value) -> Result<Value, RpcError> {
+    /// The wire encoding negotiated for this connection.
+    pub fn wire_mode(&self) -> WireMode {
+        self.mode
+    }
+
+    /// One `hello` round trip (always sent as v1 JSON, so any peer can
+    /// answer). A peer that doesn't know the method — or that refuses
+    /// binary — leaves the connection on the JSON wire. A probe that
+    /// times out fails the connect: the stream would be desynced if the
+    /// reply arrived later.
+    fn negotiate(&mut self, timeout: Duration) -> Result<(), RpcError> {
+        self.stream.set_read_timeout(Some(timeout)).ok();
+        let mut p = Map::new();
+        p.insert("wire", Value::from(WireMode::Binary.as_str()));
+        p.insert("version", Value::from(wire::WIRE_VERSION as u64));
+        let reply = self.call("hello", Value::Object(p));
+        // restore the blocking default for regular calls (query may
+        // legitimately wait out a long scan)
+        self.stream.set_read_timeout(None).ok();
+        match reply {
+            Ok(v) => {
+                if v.get("wire").and_then(Value::as_str) == Some("binary") {
+                    self.mode = WireMode::Binary;
+                }
+                Ok(())
+            }
+            // pre-v2 peer: "unknown method 'hello'" — stay on JSON; any
+            // other remote error is a real failure, not a version skew,
+            // and must surface rather than silently degrade the wire
+            Err(RpcError::Remote(msg)) if msg.contains("unknown method") => Ok(()),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Raw RPC call with tensor sections — the escape hatch the cluster
+    /// layer uses for matrix-bearing methods outside the Figure 2 API.
+    pub fn call_wire(&mut self, method: &str, params: Payload) -> Result<Payload, RpcError> {
         let id = self.next_id;
         self.next_id += 1;
-        rpc::send_request(&mut self.stream, id, method, params)?;
-        rpc::recv_response(&mut self.stream, id)
+        rpc::send_request_wire(&mut self.stream, id, method, &params, self.mode, None)?;
+        rpc::recv_response_wire(&mut self.stream, id, None)
+    }
+
+    /// Raw RPC call returning a plain `Value` (tensor sections, if the
+    /// server sent any, are inlined into it).
+    pub fn call(&mut self, method: &str, params: Value) -> Result<Value, RpcError> {
+        self.call_wire(method, Payload::json(params))?.into_inline_value()
     }
 
     /// Liveness check.
@@ -59,22 +127,38 @@ impl AlClient {
     /// Push a dataset manifest; the server starts processing in the
     /// background. `init_labels` (parallel to `manifest.init`) lets the
     /// server fine-tune the head on the seed set before scoring the pool.
+    /// On the binary wire the labels ride as a tensor section; on JSON
+    /// they keep the v1 integer-array form.
     pub fn push_data(
         &mut self,
         session: &str,
         manifest: &Manifest,
         init_labels: Option<&[u8]>,
     ) -> Result<(), RpcError> {
+        let mut payload = Payload::default();
         let mut p = Map::new();
         p.insert("session", Value::from(session));
         p.insert("manifest", manifest.to_value());
         if let Some(l) = init_labels {
-            p.insert(
-                "init_labels",
-                Value::Array(l.iter().map(|&x| Value::from(x as u64)).collect()),
-            );
+            match self.mode {
+                WireMode::Binary => {
+                    let m = Mat::from_vec(
+                        l.iter().map(|&x| x as f32).collect(),
+                        1,
+                        l.len(),
+                    );
+                    p.insert("init_labels", payload.stash_mat(m));
+                }
+                WireMode::Json => {
+                    p.insert(
+                        "init_labels",
+                        Value::Array(l.iter().map(|&x| Value::from(x as u64)).collect()),
+                    );
+                }
+            }
         }
-        self.call("push_data", Value::Object(p))?;
+        payload.value = Value::Object(p);
+        self.call_wire("push_data", payload)?;
         Ok(())
     }
 

@@ -1,8 +1,12 @@
 //! Server–client architecture (paper §3.2, Figure 1) — "users can use AL
 //! as a web service".
 //!
-//! * [`rpc`] — wire protocol: 4-byte-LE length-prefixed JSON frames over
-//!   TCP (the gRPC substitution; DESIGN.md §Substitutions).
+//! * [`rpc`] — wire protocol: 4-byte-LE length-prefixed frames over TCP
+//!   (the gRPC substitution; DESIGN.md §Substitutions), JSON (v1) or
+//!   binary-tensor (v2) payloads.
+//! * [`wire`] — the v2 binary tensor data plane: JSON control header +
+//!   raw little-endian f32 tensor sections, per-connection negotiation,
+//!   `[server] wire` forcing knob (DESIGN.md §Wire).
 //! * [`server`] — `AlServer`: sessions, background dataset processing
 //!   through the pipeline, query serving, the agent endpoint, metrics.
 //!   Also speaks the worker-facing cluster methods (`scan_shard`,
@@ -15,6 +19,8 @@ pub mod client;
 pub mod rpc;
 #[allow(clippy::module_inception)]
 pub mod server;
+pub mod wire;
 
 pub use client::AlClient;
 pub use server::{AlServer, ServerDeps, SELECT_SEED};
+pub use wire::{Payload, WireMode};

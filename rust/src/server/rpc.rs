@@ -1,10 +1,18 @@
-//! Wire protocol: length-prefixed JSON frames.
+//! Wire protocol: length-prefixed frames, JSON (v1) or binary-tensor (v2).
 //!
-//! Frame = `u32 little-endian payload length` + `payload` (UTF-8 JSON).
+//! Frame = `u32 little-endian payload length` + `payload`. A v1 payload is
+//! UTF-8 JSON; a v2 payload (first byte `wire::BIN_MAGIC`) is a JSON
+//! control header plus raw f32 tensor sections (see `wire` module docs).
 //! Requests: `{"id": n, "method": "...", "params": {...}}`.
 //! Responses: `{"id": n, "result": ...}` or `{"id": n, "error": "..."}`.
 //! Max frame size 64 MiB (a pushed manifest for a million-sample dataset
 //! is ~60 MB; beyond that, shard the push).
+//!
+//! Receivers always accept both encodings (the tag byte disambiguates);
+//! only senders pick a [`WireMode`]. A server configured `wire = "json"`
+//! additionally refuses v2 *requests* with the stable
+//! [`wire::ERR_BINARY_DISABLED`] error so binary-preferring peers can fall
+//! back per connection.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -13,6 +21,8 @@ use std::time::{Duration, Instant};
 
 use crate::json::{self, Map, Value};
 use crate::metrics::Registry;
+
+use super::wire::{self, Payload, WireMode};
 
 /// Hard cap on frame payloads.
 pub const MAX_FRAME: usize = 64 * 1024 * 1024;
@@ -32,12 +42,14 @@ pub enum RpcError {
     Closed,
 }
 
-/// A parsed request.
+/// A parsed request: params plus any tensor sections that rode the frame,
+/// and which encoding the peer used (replies mirror it).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     pub id: u64,
     pub method: String,
-    pub params: Value,
+    pub params: Payload,
+    pub mode: WireMode,
 }
 
 /// Write one frame.
@@ -68,26 +80,54 @@ pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>, RpcError> {
     Ok(buf)
 }
 
-/// Serialize + send a request.
+fn note_tx(metrics: Option<&Registry>, bytes: usize, encode: Duration) {
+    if let Some(m) = metrics {
+        m.counter("wire.tx_bytes").fetch_add(bytes as u64, Ordering::Relaxed);
+        m.time("wire.encode", encode);
+    }
+}
+
+fn note_rx(metrics: Option<&Registry>, bytes: usize, decode: Duration, mode: WireMode) {
+    if let Some(m) = metrics {
+        m.counter("wire.rx_bytes").fetch_add(bytes as u64, Ordering::Relaxed);
+        m.time("wire.decode", decode);
+        m.counter(match mode {
+            WireMode::Json => "wire.frames.json",
+            WireMode::Binary => "wire.frames.binary",
+        })
+        .fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Serialize + send a request in `mode`; tensor payloads inline into the
+/// JSON text when `mode` is `Json`.
+pub fn send_request_wire(
+    w: &mut impl Write,
+    id: u64,
+    method: &str,
+    params: &Payload,
+    mode: WireMode,
+    metrics: Option<&Registry>,
+) -> Result<(), RpcError> {
+    let t0 = Instant::now();
+    let bytes = wire::encode_message(id, Some(method), params, mode)?;
+    note_tx(metrics, bytes.len(), t0.elapsed());
+    write_frame(w, &bytes)
+}
+
+/// Serialize + send a request (v1 JSON convenience form).
 pub fn send_request(
     w: &mut impl Write,
     id: u64,
     method: &str,
     params: Value,
 ) -> Result<(), RpcError> {
-    let mut m = Map::new();
-    m.insert("id", Value::from(id));
-    m.insert("method", Value::from(method));
-    m.insert("params", params);
-    write_frame(w, json::to_string(&Value::Object(m)).as_bytes())
+    send_request_wire(w, id, method, &Payload::json(params), WireMode::Json, None)
 }
 
-/// Receive + parse a request frame.
-pub fn recv_request(r: &mut impl Read) -> Result<Request, RpcError> {
-    let buf = read_frame(r)?;
-    let text = std::str::from_utf8(&buf)
-        .map_err(|e| RpcError::Malformed(format!("non-utf8 frame: {e}")))?;
-    let v = json::parse(text).map_err(|e| RpcError::Malformed(e.to_string()))?;
+/// Decode one frame's bytes into a `Request`.
+pub fn decode_request(buf: &[u8]) -> Result<Request, RpcError> {
+    let (v, tensors, mode) = wire::decode_payload(buf)?;
     let id = v
         .get("id")
         .and_then(Value::as_i64)
@@ -97,19 +137,41 @@ pub fn recv_request(r: &mut impl Read) -> Result<Request, RpcError> {
         .and_then(Value::as_str)
         .ok_or_else(|| RpcError::Malformed("missing method".into()))?
         .to_string();
-    let params = v.get("params").cloned().unwrap_or(Value::Null);
-    Ok(Request { id, method, params })
+    // move the params subtree out of the envelope (a push_data manifest
+    // is most of the frame) instead of cloning it
+    let params = match v {
+        Value::Object(mut m) => m.remove("params").unwrap_or(Value::Null),
+        _ => Value::Null,
+    };
+    Ok(Request { id, method, params: Payload { value: params, tensors }, mode })
 }
 
-/// Serialize + send a success response.
+/// Receive + parse a request frame (either encoding).
+pub fn recv_request(r: &mut impl Read) -> Result<Request, RpcError> {
+    decode_request(&read_frame(r)?)
+}
+
+/// Serialize + send a success response in `mode`.
+pub fn send_result_wire(
+    w: &mut impl Write,
+    id: u64,
+    result: &Payload,
+    mode: WireMode,
+    metrics: Option<&Registry>,
+) -> Result<(), RpcError> {
+    let t0 = Instant::now();
+    let bytes = wire::encode_message(id, None, result, mode)?;
+    note_tx(metrics, bytes.len(), t0.elapsed());
+    write_frame(w, &bytes)
+}
+
+/// Serialize + send a success response (v1 JSON convenience form).
 pub fn send_result(w: &mut impl Write, id: u64, result: Value) -> Result<(), RpcError> {
-    let mut m = Map::new();
-    m.insert("id", Value::from(id));
-    m.insert("result", result);
-    write_frame(w, json::to_string(&Value::Object(m)).as_bytes())
+    send_result_wire(w, id, &Payload::json(result), WireMode::Json, None)
 }
 
-/// Serialize + send an error response.
+/// Serialize + send an error response. Errors always go as v1 JSON so
+/// every peer — including one that never spoke v2 — can read them.
 pub fn send_error(w: &mut impl Write, id: u64, error: &str) -> Result<(), RpcError> {
     let mut m = Map::new();
     m.insert("id", Value::from(id));
@@ -121,7 +183,13 @@ pub fn send_error(w: &mut impl Write, id: u64, error: &str) -> Result<(), RpcErr
 /// a broken frame, an I/O failure, or `shutdown` flips. Shared by the
 /// single server and the cluster coordinator so the idle-probe/shutdown
 /// behavior cannot diverge. Per-request latency is recorded under
-/// `rpc.{method}` in `metrics`.
+/// `rpc.{method}` in `metrics`; wire-level byte counts and codec times
+/// land under `wire.*`.
+///
+/// `wire_mode` is this server's configured data plane: replies mirror
+/// the request's encoding, and when the config forces `Json` a v2
+/// request is answered with the stable `ERR_BINARY_DISABLED` error (the
+/// connection stays up so the peer can retry in JSON).
 ///
 /// The idle wait uses a bounded 250ms peek so the handler re-checks the
 /// shutdown flag instead of pinning its thread forever; once bytes are
@@ -132,7 +200,8 @@ pub fn serve_conn(
     tag: &'static str,
     shutdown: &AtomicBool,
     metrics: &Registry,
-    mut handle: impl FnMut(&str, &Value) -> Result<Value, String>,
+    wire_mode: WireMode,
+    mut handle: impl FnMut(&str, &Payload, WireMode) -> Result<Payload, String>,
 ) {
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     stream.set_nodelay(true).ok();
@@ -158,20 +227,60 @@ pub fn serve_conn(
             }
         }
         stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
-        let req = match recv_request(stream) {
-            Ok(r) => r,
+        let buf = match read_frame(stream) {
+            Ok(b) => b,
             Err(RpcError::Closed) => return,
+            Err(e) => {
+                crate::log_debug!(tag, "bad frame from {peer}: {e}");
+                return;
+            }
+        };
+        let t_decode = Instant::now();
+        if wire_mode == WireMode::Json && buf.first() == Some(&wire::BIN_MAGIC) {
+            // forced-JSON server: refuse the v2 frame from its header
+            // alone — never decode tensor sections that will be
+            // discarded — and keep the connection so the peer can
+            // renegotiate
+            let id = match wire::decode_binary_header(&buf) {
+                Ok(v) => v.get("id").and_then(Value::as_i64).unwrap_or(0) as u64,
+                Err(e) => {
+                    crate::log_debug!(tag, "bad frame from {peer}: {e}");
+                    return;
+                }
+            };
+            note_rx(Some(metrics), buf.len(), t_decode.elapsed(), WireMode::Binary);
+            if send_error(stream, id, wire::ERR_BINARY_DISABLED).is_err() {
+                return;
+            }
+            continue;
+        }
+        let req = match decode_request(&buf) {
+            Ok(r) => r,
             Err(e) => {
                 crate::log_debug!(tag, "bad frame from {peer}: {e}");
                 // protocol is broken on this conn; drop it
                 return;
             }
         };
+        note_rx(Some(metrics), buf.len(), t_decode.elapsed(), req.mode);
         let t0 = Instant::now();
-        let result = handle(&req.method, &req.params);
+        // handlers get the request's encoding so version-sensitive
+        // responses (select_shard's candidate schema) can stay
+        // v1-compatible on the JSON wire
+        let result = handle(&req.method, &req.params, req.mode);
         metrics.time(&format!("rpc.{}", req.method), t0.elapsed());
         let io = match result {
-            Ok(v) => send_result(stream, req.id, v),
+            Ok(p) => match send_result_wire(stream, req.id, &p, req.mode, Some(metrics)) {
+                // encode-side failures (frame cap, bad tensor refs)
+                // happen before any bytes hit the stream — e.g. a JSON
+                // fallback inflating a tensor reply past MAX_FRAME where
+                // the binary form fits. Report them as an error reply
+                // instead of silently dropping the connection.
+                Err(e) if !matches!(e, RpcError::Io(_)) => {
+                    send_error(stream, req.id, &format!("reply encoding failed: {e}"))
+                }
+                other => other,
+            },
             Err(e) => send_error(stream, req.id, &e),
         };
         if io.is_err() {
@@ -180,12 +289,17 @@ pub fn serve_conn(
     }
 }
 
-/// Receive a response for `expect_id`; remote errors surface as `Remote`.
-pub fn recv_response(r: &mut impl Read, expect_id: u64) -> Result<Value, RpcError> {
+/// Receive a response for `expect_id` in either encoding; remote errors
+/// surface as `Remote`. Returns the result value plus tensor sections.
+pub fn recv_response_wire(
+    r: &mut impl Read,
+    expect_id: u64,
+    metrics: Option<&Registry>,
+) -> Result<Payload, RpcError> {
     let buf = read_frame(r)?;
-    let text = std::str::from_utf8(&buf)
-        .map_err(|e| RpcError::Malformed(format!("non-utf8 frame: {e}")))?;
-    let v = json::parse(text).map_err(|e| RpcError::Malformed(e.to_string()))?;
+    let t0 = Instant::now();
+    let (v, tensors, mode) = wire::decode_payload(&buf)?;
+    note_rx(metrics, buf.len(), t0.elapsed(), mode);
     let id = v
         .get("id")
         .and_then(Value::as_i64)
@@ -198,15 +312,27 @@ pub fn recv_response(r: &mut impl Read, expect_id: u64) -> Result<Value, RpcErro
     if let Some(e) = v.get("error").and_then(Value::as_str) {
         return Err(RpcError::Remote(e.to_string()));
     }
-    v.get("result")
-        .cloned()
-        .ok_or_else(|| RpcError::Malformed("missing result".into()))
+    // move, don't clone: result can be a multi-MB inline matrix on the
+    // JSON wire
+    let result = match v {
+        Value::Object(mut m) => m.remove("result"),
+        _ => None,
+    }
+    .ok_or_else(|| RpcError::Malformed("missing result".into()))?;
+    Ok(Payload { value: result, tensors })
+}
+
+/// Receive a response as a plain `Value` (tensor sections, if any, are
+/// inlined) — the v1-compatible view callers without bulk data use.
+pub fn recv_response(r: &mut impl Read, expect_id: u64) -> Result<Value, RpcError> {
+    recv_response_wire(r, expect_id, None)?.into_inline_value()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::json::value::obj;
+    use crate::util::mat::Mat;
 
     #[test]
     fn frame_roundtrip() {
@@ -225,12 +351,68 @@ mod tests {
         let req = recv_request(&mut r).unwrap();
         assert_eq!(req.id, 7);
         assert_eq!(req.method, "query");
-        assert_eq!(req.params.get("budget").unwrap().as_i64(), Some(10));
+        assert_eq!(req.mode, WireMode::Json);
+        assert_eq!(req.params.value.get("budget").unwrap().as_i64(), Some(10));
 
         let mut buf = Vec::new();
         send_result(&mut buf, 7, Value::from("ok")).unwrap();
         let mut r = std::io::Cursor::new(buf);
         assert_eq!(recv_response(&mut r, 7).unwrap().as_str(), Some("ok"));
+    }
+
+    #[test]
+    fn binary_request_roundtrip_carries_tensors() {
+        let m = Mat::from_vec(vec![1.0, f32::NAN, -3.5, 0.0], 2, 2);
+        let mut p = Payload::default();
+        let ph = p.stash_mat(m.clone());
+        p.value = obj([("emb", ph)]);
+        let mut buf = Vec::new();
+        send_request_wire(&mut buf, 9, "scan_shard", &p, WireMode::Binary, None).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        let req = recv_request(&mut r).unwrap();
+        assert_eq!(req.mode, WireMode::Binary);
+        assert_eq!(req.method, "scan_shard");
+        let back = req.params.mat("emb").unwrap().unwrap();
+        assert_eq!(back.shape(), (2, 2));
+        assert!(back.get(0, 1).is_nan());
+        assert_eq!(back.get(1, 0), -3.5);
+    }
+
+    #[test]
+    fn json_mode_inlines_tensor_payloads() {
+        let m = Mat::from_vec(vec![0.5, 1.5], 1, 2);
+        let mut p = Payload::default();
+        let ph = p.stash_mat(m.clone());
+        p.value = obj([("emb", ph)]);
+        let mut buf = Vec::new();
+        send_request_wire(&mut buf, 3, "scan_shard", &p, WireMode::Json, None).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        let req = recv_request(&mut r).unwrap();
+        assert_eq!(req.mode, WireMode::Json);
+        assert!(req.params.tensors.is_empty(), "json frames carry no sections");
+        // the field arrives in the inline {rows, cols, data} form
+        assert_eq!(req.params.mat("emb").unwrap().unwrap(), m);
+    }
+
+    #[test]
+    fn binary_response_roundtrip_and_inlined_view() {
+        let m = Mat::from_vec(vec![2.0, 4.0, 6.0], 3, 1);
+        let mut p = Payload::default();
+        let ph = p.stash_mat(m.clone());
+        p.value = obj([("init_emb", ph)]);
+        let mut buf = Vec::new();
+        send_result_wire(&mut buf, 5, &p, WireMode::Binary, None).unwrap();
+        // tensor-aware view
+        let mut r = std::io::Cursor::new(buf.clone());
+        let got = recv_response_wire(&mut r, 5, None).unwrap();
+        assert_eq!(got.mat("init_emb").unwrap().unwrap(), m);
+        // v1-compatible Value view inlines the section
+        let mut r = std::io::Cursor::new(buf);
+        let v = recv_response(&mut r, 5).unwrap();
+        assert_eq!(
+            super::super::wire::mat_from_value(v.get("init_emb").unwrap()).unwrap(),
+            m
+        );
     }
 
     #[test]
@@ -340,7 +522,7 @@ mod tests {
                 (0..rng.below(4)).map(|_| random_value(rng, depth - 1)).collect(),
             ),
             _ => {
-                let mut m = Map::new();
+                let mut m = crate::json::Map::new();
                 for i in 0..rng.below(4) {
                     m.insert(format!("k{i}"), random_value(rng, depth - 1));
                 }
@@ -354,25 +536,31 @@ mod tests {
         crate::util::prop::check("rpc-roundtrip", 80, |rng| {
             let params = random_value(rng, 3);
             let id = rng.next_u64() >> 12; // keep within exact-f64 range
-            let mut buf = Vec::new();
-            send_request(&mut buf, id, "query", params.clone())
-                .map_err(|e| format!("send: {e}"))?;
-            let mut r = std::io::Cursor::new(buf);
-            let req = recv_request(&mut r).map_err(|e| format!("recv: {e}"))?;
-            crate::prop_assert!(req.id == id, "id {} != {id}", req.id);
-            crate::prop_assert!(req.method == "query", "method {}", req.method);
-            crate::prop_assert!(
-                req.params == params,
-                "params mismatch:\n got {:?}\nwant {:?}",
-                req.params,
-                params
-            );
-            // and the response direction
-            let mut buf = Vec::new();
-            send_result(&mut buf, id, params.clone()).map_err(|e| format!("send: {e}"))?;
-            let mut r = std::io::Cursor::new(buf);
-            let back = recv_response(&mut r, id).map_err(|e| format!("recv: {e}"))?;
-            crate::prop_assert!(back == params, "response payload mismatch");
+            // run the same payload through both encodings
+            for mode in [WireMode::Json, WireMode::Binary] {
+                let p = Payload::json(params.clone());
+                let mut buf = Vec::new();
+                send_request_wire(&mut buf, id, "query", &p, mode, None)
+                    .map_err(|e| format!("send: {e}"))?;
+                let mut r = std::io::Cursor::new(buf);
+                let req = recv_request(&mut r).map_err(|e| format!("recv: {e}"))?;
+                crate::prop_assert!(req.id == id, "id {} != {id}", req.id);
+                crate::prop_assert!(req.method == "query", "method {}", req.method);
+                crate::prop_assert!(req.mode == mode, "mode {:?}", req.mode);
+                crate::prop_assert!(
+                    req.params.value == params,
+                    "params mismatch ({mode:?}):\n got {:?}\nwant {:?}",
+                    req.params.value,
+                    params
+                );
+                // and the response direction
+                let mut buf = Vec::new();
+                send_result_wire(&mut buf, id, &Payload::json(params.clone()), mode, None)
+                    .map_err(|e| format!("send: {e}"))?;
+                let mut r = std::io::Cursor::new(buf);
+                let back = recv_response(&mut r, id).map_err(|e| format!("recv: {e}"))?;
+                crate::prop_assert!(back == params, "response payload mismatch ({mode:?})");
+            }
             Ok(())
         });
     }

@@ -21,6 +21,7 @@ use crate::metrics::Registry;
 use crate::pipeline::{run_pipeline, BatchPolicy, DataflowMode, PipelineParams};
 use crate::runtime::backend::ComputeBackend;
 use crate::server::rpc;
+use crate::server::wire::{self, Payload, WireMode};
 use crate::store::{Manifest, SampleRef, StoreRouter};
 use crate::strategies::{self, SelectCtx};
 use crate::trainer::{self, LinearHead, TrainConfig};
@@ -169,38 +170,48 @@ fn handle_conn(mut stream: TcpStream, state: Arc<ServerState>) {
         "server",
         &state.shutdown,
         &state.deps.metrics,
-        |method, params| dispatch(&state, method, params),
+        state.config.server.wire,
+        |method, params, mode| dispatch(&state, method, params, mode),
     );
 }
 
-fn dispatch(state: &Arc<ServerState>, method: &str, params: &Value) -> Result<Value, String> {
+fn dispatch(
+    state: &Arc<ServerState>,
+    method: &str,
+    params: &Payload,
+    mode: WireMode,
+) -> Result<Payload, String> {
     match method {
-        "ping" => Ok(Value::from("pong")),
-        "push_data" => push_data(state, params),
-        "status" => status(state, params),
-        "query" => query(state, params),
-        "metrics" => Ok(state.deps.metrics.snapshot()),
-        "strategies" => Ok(Value::Array(
+        "hello" => Ok(Payload::json(wire::hello_reply(
+            &params.value,
+            state.config.server.wire,
+        ))),
+        "ping" => Ok(Payload::json(Value::from("pong"))),
+        "push_data" => push_data(state, params).map(Payload::json),
+        "status" => status(state, &params.value).map(Payload::json),
+        "query" => query(state, &params.value).map(Payload::json),
+        "metrics" => Ok(Payload::json(state.deps.metrics.snapshot())),
+        "strategies" => Ok(Payload::json(Value::Array(
             strategies::zoo_names().into_iter().map(Value::from).collect(),
-        )),
+        ))),
         "cache_stats" => {
             let mut m = Map::new();
             m.insert("hits", Value::from(state.deps.cache.hits()));
             m.insert("misses", Value::from(state.deps.cache.misses()));
             m.insert("bytes", Value::from(state.deps.cache.bytes()));
             m.insert("entries", Value::from(state.deps.cache.len()));
-            Ok(Value::Object(m))
+            Ok(Payload::json(Value::Object(m)))
         }
         // worker-facing cluster methods (DESIGN.md §Cluster)
-        "scan_shard" => scan_shard(state, params),
-        "select_shard" => select_shard(state, params),
+        "scan_shard" => scan_shard(state, params).map(Payload::json),
+        "select_shard" => select_shard(state, params, mode),
         "drop_session" => {
-            let session_id = str_param(params, "session")?;
+            let session_id = str_param(&params.value, "session")?;
             let dropped =
                 state.sessions.lock().unwrap().remove(&session_id).is_some();
             let mut m = Map::new();
             m.insert("dropped", Value::Bool(dropped));
-            Ok(Value::Object(m))
+            Ok(Payload::json(Value::Object(m)))
         }
         other => Err(format!("unknown method '{other}'")),
     }
@@ -216,23 +227,43 @@ pub(crate) fn str_param(params: &Value, key: &str) -> Result<String, String> {
 
 /// Decode + validate the optional `init_labels` request field against the
 /// manifest's init split. Shared with the cluster coordinator so the two
-/// push endpoints cannot drift.
+/// push endpoints cannot drift. Accepts the v1 integer-array form and the
+/// v2 tensor form (placeholder or inline matrix), so a binary push that
+/// falls back to JSON mid-negotiation still parses.
 pub(crate) fn parse_init_labels(
-    params: &Value,
+    params: &Payload,
     init_len: usize,
 ) -> Result<Option<Vec<u8>>, String> {
-    let labels: Option<Vec<u8>> = match params.get("init_labels") {
+    let labels: Option<Vec<u8>> = match params.value.get("init_labels") {
         None | Some(Value::Null) => None,
-        Some(Value::Array(a)) => Some(
-            a.iter()
-                .map(|v| {
-                    v.as_usize()
-                        .and_then(|u| u8::try_from(u).ok())
-                        .ok_or_else(|| "bad init label".to_string())
-                })
-                .collect::<Result<Vec<u8>, _>>()?,
-        ),
-        _ => return Err("init_labels must be an array".into()),
+        Some(v) => {
+            if let Some(m) = wire::maybe_mat(v, &params.tensors)? {
+                Some(
+                    m.as_slice()
+                        .iter()
+                        .map(|&x| {
+                            if x.fract() == 0.0 && (0.0..=255.0).contains(&x) {
+                                Ok(x as u8)
+                            } else {
+                                Err("bad init label".to_string())
+                            }
+                        })
+                        .collect::<Result<Vec<u8>, _>>()?,
+                )
+            } else if let Value::Array(a) = v {
+                Some(
+                    a.iter()
+                        .map(|v| {
+                            v.as_usize()
+                                .and_then(|u| u8::try_from(u).ok())
+                                .ok_or_else(|| "bad init label".to_string())
+                        })
+                        .collect::<Result<Vec<u8>, _>>()?,
+                )
+            } else {
+                return Err("init_labels must be an array or tensor".into());
+            }
+        }
     };
     if let Some(l) = &labels {
         if l.len() != init_len {
@@ -256,9 +287,9 @@ fn get_session(state: &ServerState, id: &str) -> Result<Arc<SessionSlot>, String
 }
 
 /// `push_data {session, manifest, init_labels?}` — register and process.
-fn push_data(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
-    let session_id = str_param(params, "session")?;
-    let manifest_v = params.get("manifest").ok_or("missing param 'manifest'")?;
+fn push_data(state: &Arc<ServerState>, params: &Payload) -> Result<Value, String> {
+    let session_id = str_param(&params.value, "session")?;
+    let manifest_v = params.value.get("manifest").ok_or("missing param 'manifest'")?;
     let manifest = Manifest::from_value(manifest_v).map_err(|e| e.to_string())?;
     let init_labels = parse_init_labels(params, manifest.init.len())?;
 
@@ -508,8 +539,8 @@ fn query(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
 /// `scan_shard {session, shard, manifest, init_labels?}` — worker-facing
 /// push: identical to `push_data` except the manifest's pool is one shard
 /// of a cluster session (the coordinator owns the global index space).
-fn scan_shard(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
-    let shard = params.get("shard").and_then(Value::as_usize).unwrap_or(0);
+fn scan_shard(state: &Arc<ServerState>, params: &Payload) -> Result<Value, String> {
+    let shard = params.value.get("shard").and_then(Value::as_usize).unwrap_or(0);
     let v = push_data(state, params)?;
     state.deps.metrics.counter("cluster.shards_accepted").fetch_add(1, Ordering::Relaxed);
     let mut m = match v {
@@ -528,19 +559,31 @@ fn scan_shard(state: &Arc<ServerState>, params: &Value) -> Result<Value, String>
 /// candidate list for the coordinator's merge (top-k scalars for the
 /// uncertainty strategies, embeddings for the refine protocol). `budget =
 /// 0` is the coordinator's probe for coordinator-side strategies (random).
-fn select_shard(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
-    let session_id = str_param(params, "session")?;
-    let budget = params.get("budget").and_then(Value::as_usize).unwrap_or(0);
+///
+/// Matrix results travel per the request's encoding (DESIGN.md §Wire):
+/// on the v2 binary wire, `init_emb` and the packed
+/// `cand_scores`/`cand_emb` rows (parallel to the slim `candidates`
+/// list) ride as tensor sections; on the v1 JSON wire the candidates
+/// keep the PR1 fat per-candidate schema, so pre-v2 coordinators decode
+/// the refine protocol unchanged.
+fn select_shard(
+    state: &Arc<ServerState>,
+    params: &Payload,
+    mode: WireMode,
+) -> Result<Payload, String> {
+    let session_id = str_param(&params.value, "session")?;
+    let budget = params.value.get("budget").and_then(Value::as_usize).unwrap_or(0);
     let with_embeddings =
-        params.get("with_embeddings").and_then(Value::as_bool).unwrap_or(false);
+        params.value.get("with_embeddings").and_then(Value::as_bool).unwrap_or(false);
     let with_init_emb =
-        params.get("with_init_emb").and_then(Value::as_bool).unwrap_or(false);
+        params.value.get("with_init_emb").and_then(Value::as_bool).unwrap_or(false);
     let wait_ms =
-        params.get("wait_ms").and_then(Value::as_usize).unwrap_or(120_000) as u64;
+        params.value.get("wait_ms").and_then(Value::as_usize).unwrap_or(120_000) as u64;
 
     let slot = get_session(state, &session_id)?;
     let s = wait_ready(&slot, wait_ms)?;
 
+    let mut out = Payload::default();
     let mut m = Map::new();
     m.insert(
         "failed",
@@ -550,13 +593,12 @@ fn select_shard(state: &Arc<ServerState>, params: &Value) -> Result<Value, Strin
     m.insert("pool_samples", Value::from(s.manifest.pool.len()));
     if with_init_emb {
         let empty = Mat::zeros(0, 0);
-        m.insert(
-            "init_emb",
-            crate::cluster::merge::mat_to_value(s.init_emb.as_ref().unwrap_or(&empty)),
-        );
+        let init = s.init_emb.as_ref().unwrap_or(&empty).clone();
+        m.insert("init_emb", out.stash_mat(init));
     }
     if budget > 0 {
         let strategy = params
+            .value
             .get("strategy")
             .and_then(Value::as_str)
             .ok_or("missing strategy for budget > 0")?;
@@ -576,7 +618,26 @@ fn select_shard(state: &Arc<ServerState>, params: &Value) -> Result<Value, Strin
             SELECT_SEED,
         )?;
         state.deps.metrics.time("al.select_shard", t0.elapsed());
-        m.insert("candidates", Value::Array(cands));
+        if with_embeddings && mode == WireMode::Json {
+            // v1 peers expect the fat per-candidate schema; the packed
+            // tensor form is a v2-only optimization
+            m.insert(
+                "candidates",
+                Value::Array(cands.iter().map(|c| c.to_value(true)).collect()),
+            );
+        } else {
+            m.insert(
+                "candidates",
+                Value::Array(cands.iter().map(|c| c.to_value(false)).collect()),
+            );
+            if with_embeddings {
+                let scores = Mat::from_rows(cands.iter().map(|c| c.scores.as_slice()));
+                let emb = Mat::from_rows(cands.iter().map(|c| c.emb.as_slice()));
+                m.insert("cand_scores", out.stash_mat(scores));
+                m.insert("cand_emb", out.stash_mat(emb));
+            }
+        }
     }
-    Ok(Value::Object(m))
+    out.value = Value::Object(m);
+    Ok(out)
 }

@@ -1,0 +1,756 @@
+//! Binary tensor data plane: the v2 wire format (DESIGN.md §Wire).
+//!
+//! A v1 frame is a length-prefixed JSON document. A v2 frame carries the
+//! same JSON *control header* plus zero or more raw little-endian f32
+//! tensor sections, so matrix-bearing RPCs (`select_shard` candidates,
+//! `init_emb`, pushed labels) never pay float formatting/parsing or the
+//! ~5-15x JSON size blowup. Layout of a v2 payload (inside the outer
+//! 4-byte-LE length frame, which still caps everything at `MAX_FRAME`):
+//!
+//! ```text
+//! [0]      magic 0xBF       (invalid as a UTF-8 first byte, so a v1 peer
+//!                            fails fast with "non-utf8 frame")
+//! [1]      version (2)
+//! [2..4]   n_tensors: u16 LE
+//! [4..8]   header_len: u32 LE
+//! [8..]    header: UTF-8 JSON (the usual request/response envelope)
+//! then per tensor:
+//!   rows: u32 LE, cols: u32 LE, rows*cols little-endian f32 values
+//! ```
+//!
+//! Inside the header, a tensor section is referenced by the placeholder
+//! object `{"$bin": <section index>}`. Encoding the same payload in JSON
+//! mode replaces every placeholder with the inline `{rows, cols, data}`
+//! object form, so one handler code path serves both modes and selection
+//! results are identical on either wire. Tensor round-trips are bit-exact
+//! in binary mode (NaN payloads and infinities survive); JSON mode keeps
+//! the v1 behavior (non-finite values serialize as `null` and decode as
+//! NaN).
+
+use crate::json::{self, Map, Value};
+use crate::util::mat::Mat;
+
+use super::rpc::{RpcError, MAX_FRAME};
+
+/// First byte of a v2 payload. 0xBF is a UTF-8 continuation byte, so it
+/// can never begin a v1 JSON frame.
+pub const BIN_MAGIC: u8 = 0xBF;
+
+/// Wire protocol version carried in byte 1 of a v2 payload.
+pub const WIRE_VERSION: u8 = 2;
+
+/// Error message a JSON-forced server returns for a v2 request; clients
+/// match on it to fall back to JSON for that peer.
+pub const ERR_BINARY_DISABLED: &str = "binary wire disabled";
+
+/// Which encoding a sender uses (receivers always accept both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireMode {
+    /// v1 frames only: everything inline JSON.
+    Json,
+    /// v2 frames: JSON control header + raw f32 tensor sections.
+    Binary,
+}
+
+impl WireMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WireMode::Json => "json",
+            WireMode::Binary => "binary",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WireMode> {
+        match s {
+            "json" => Some(WireMode::Json),
+            "binary" => Some(WireMode::Binary),
+            _ => None,
+        }
+    }
+}
+
+/// A decoded (or to-be-encoded) message body: the JSON value plus the
+/// tensor sections its `{"$bin": i}` placeholders refer to. In JSON mode
+/// the tensors are inlined at encode time and the list is empty after
+/// decode.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Payload {
+    pub value: Value,
+    pub tensors: Vec<Mat>,
+}
+
+impl Default for Payload {
+    fn default() -> Self {
+        Payload { value: Value::Null, tensors: Vec::new() }
+    }
+}
+
+impl Payload {
+    /// Plain JSON payload with no tensor sections.
+    pub fn json(value: Value) -> Payload {
+        Payload { value, tensors: Vec::new() }
+    }
+
+    /// Append a tensor section and return the placeholder to embed in
+    /// `value` wherever the matrix logically lives.
+    pub fn stash_mat(&mut self, m: Mat) -> Value {
+        self.tensors.push(m);
+        placeholder(self.tensors.len() - 1)
+    }
+
+    /// Resolve an optional matrix-valued field of `value` (placeholder or
+    /// inline `{rows, cols, data}`); `Ok(None)` when absent/null.
+    pub fn mat(&self, key: &str) -> Result<Option<Mat>, String> {
+        opt_mat(&self.value, &self.tensors, key)
+    }
+
+    /// The plain-`Value` view: inlines any tensor sections into the value
+    /// (no-op without sections). The v1-compatible shape callers without
+    /// bulk data consume.
+    pub fn into_inline_value(self) -> Result<Value, RpcError> {
+        if self.tensors.is_empty() {
+            Ok(self.value)
+        } else {
+            inline_value(&self.value, &self.tensors)
+        }
+    }
+}
+
+/// `{"$bin": idx}`.
+pub fn placeholder(idx: usize) -> Value {
+    let mut m = Map::new();
+    m.insert("$bin", Value::from(idx));
+    Value::Object(m)
+}
+
+/// Section index when `v` is a tensor placeholder.
+pub fn placeholder_index(v: &Value) -> Option<usize> {
+    let m = v.as_object()?;
+    if m.len() == 1 {
+        m.get("$bin")?.as_usize()
+    } else {
+        None
+    }
+}
+
+/// True when `v` looks like the inline `{rows, cols, data}` matrix form.
+fn is_inline_mat(v: &Value) -> bool {
+    v.as_object().is_some_and(|m| {
+        m.contains_key("rows") && m.contains_key("cols") && m.contains_key("data")
+    })
+}
+
+/// Inline JSON form of a matrix: `{rows, cols, data: [f64...]}` row-major
+/// (non-finite entries become `null` when serialized to text).
+pub fn mat_to_value(m: &Mat) -> Value {
+    let mut o = Map::new();
+    o.insert("rows", Value::from(m.rows()));
+    o.insert("cols", Value::from(m.cols()));
+    o.insert("data", f32s_to_value(m.as_slice()));
+    Value::Object(o)
+}
+
+pub fn mat_from_value(v: &Value) -> Result<Mat, String> {
+    let rows = v.get("rows").and_then(Value::as_usize).ok_or("mat missing rows")?;
+    let cols = v.get("cols").and_then(Value::as_usize).ok_or("mat missing cols")?;
+    let data = f32s_from_value(v.get("data").ok_or("mat missing data")?)?;
+    if data.len() != rows * cols {
+        return Err(format!("mat data len {} != {rows}x{cols}", data.len()));
+    }
+    Ok(Mat::from_vec(data, rows, cols))
+}
+
+pub fn f32s_to_value(xs: &[f32]) -> Value {
+    Value::Array(xs.iter().map(|&x| Value::Number(x as f64)).collect())
+}
+
+/// Non-number entries (the `null` a non-finite float serializes to)
+/// decode back to NaN, matching the v1 convention.
+pub fn f32s_from_value(v: &Value) -> Result<Vec<f32>, String> {
+    let arr = v.as_array().ok_or("expected number array")?;
+    Ok(arr
+        .iter()
+        .map(|x| match x {
+            Value::Number(n) => *n as f32,
+            _ => f32::NAN,
+        })
+        .collect())
+}
+
+/// Resolve a matrix value in either wire form.
+pub fn resolve_mat(v: &Value, tensors: &[Mat]) -> Result<Mat, String> {
+    if let Some(i) = placeholder_index(v) {
+        return tensors
+            .get(i)
+            .cloned()
+            .ok_or_else(|| format!("tensor ref ${i} out of range ({} sections)", tensors.len()));
+    }
+    mat_from_value(v)
+}
+
+/// Optional matrix-valued field: placeholder, inline object, or absent.
+pub fn opt_mat(value: &Value, tensors: &[Mat], key: &str) -> Result<Option<Mat>, String> {
+    match value.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(v) => resolve_mat(v, tensors).map(Some),
+    }
+}
+
+/// Like [`opt_mat`], but *moves* a placeholder-referenced section out of
+/// `tensors` (leaving an empty matrix behind) instead of cloning it —
+/// for decode paths that consume each section exactly once, where a
+/// clone would double the bulk-data cost the binary plane saves.
+pub fn take_mat(
+    value: &Value,
+    tensors: &mut [Mat],
+    key: &str,
+) -> Result<Option<Mat>, String> {
+    match value.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(v) => {
+            if let Some(i) = placeholder_index(v) {
+                let slot = tensors.get_mut(i).ok_or_else(|| {
+                    format!("tensor ref ${i} out of range ({} sections)", tensors.len())
+                })?;
+                Ok(Some(std::mem::replace(slot, Mat::zeros(0, 0))))
+            } else {
+                mat_from_value(v).map(Some)
+            }
+        }
+    }
+}
+
+/// Matrix view of a field that may also be something else entirely
+/// (`init_labels` keeps its v1 integer-array form): `Ok(None)` when `v`
+/// is neither a placeholder nor an inline matrix object.
+pub fn maybe_mat(v: &Value, tensors: &[Mat]) -> Result<Option<Mat>, String> {
+    if placeholder_index(v).is_some() || is_inline_mat(v) {
+        resolve_mat(v, tensors).map(Some)
+    } else {
+        Ok(None)
+    }
+}
+
+/// Replace every `{"$bin": i}` placeholder in `v` with the inline form of
+/// `tensors[i]` (the JSON-mode encoding of a tensor-bearing payload).
+pub fn inline_value(v: &Value, tensors: &[Mat]) -> Result<Value, RpcError> {
+    if let Some(i) = placeholder_index(v) {
+        let m = tensors
+            .get(i)
+            .ok_or_else(|| RpcError::Malformed(format!("tensor ref ${i} out of range")))?;
+        return Ok(mat_to_value(m));
+    }
+    match v {
+        Value::Array(a) => {
+            let mut out = Vec::with_capacity(a.len());
+            for e in a {
+                out.push(inline_value(e, tensors)?);
+            }
+            Ok(Value::Array(out))
+        }
+        Value::Object(m) => {
+            let mut out = Map::new();
+            for (k, e) in m.iter() {
+                out.insert(k.to_string(), inline_value(e, tensors)?);
+            }
+            Ok(Value::Object(out))
+        }
+        other => Ok(other.clone()),
+    }
+}
+
+/// Byte length of a tensor section's data, with overflow/size/dimension
+/// validation shared by encode and decode (so an oversized section is
+/// rejected on both sides, before any allocation on the read side).
+fn tensor_byte_len(rows: usize, cols: usize) -> Result<usize, RpcError> {
+    if rows > u32::MAX as usize || cols > u32::MAX as usize {
+        return Err(RpcError::Malformed(format!("tensor dims {rows}x{cols} exceed u32")));
+    }
+    let bytes = rows
+        .checked_mul(cols)
+        .and_then(|e| e.checked_mul(4))
+        .ok_or(RpcError::FrameTooLarge(usize::MAX))?;
+    if bytes > MAX_FRAME {
+        return Err(RpcError::FrameTooLarge(bytes));
+    }
+    Ok(bytes)
+}
+
+/// Assemble a v2 payload from pre-serialized header text + sections.
+fn encode_binary(header: Vec<u8>, tensors: &[Mat]) -> Result<Vec<u8>, RpcError> {
+    if tensors.len() > u16::MAX as usize {
+        return Err(RpcError::Malformed(format!(
+            "{} tensor sections exceed the u16 frame field",
+            tensors.len()
+        )));
+    }
+    let mut total = 8usize
+        .checked_add(header.len())
+        .ok_or(RpcError::FrameTooLarge(usize::MAX))?;
+    for t in tensors {
+        let nbytes = tensor_byte_len(t.rows(), t.cols())?;
+        total = total
+            .checked_add(8 + nbytes)
+            .ok_or(RpcError::FrameTooLarge(usize::MAX))?;
+    }
+    if total > MAX_FRAME {
+        return Err(RpcError::FrameTooLarge(total));
+    }
+    let mut out = Vec::with_capacity(total);
+    out.push(BIN_MAGIC);
+    out.push(WIRE_VERSION);
+    out.extend_from_slice(&(tensors.len() as u16).to_le_bytes());
+    out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(&header);
+    // stage f32s in fixed-size stack chunks so the output grows by bulk
+    // appends instead of 640k four-byte pushes for a 10k x 64 section
+    // (each paying a length/capacity check)
+    let mut stage = [0u8; 4096];
+    for t in tensors {
+        out.extend_from_slice(&(t.rows() as u32).to_le_bytes());
+        out.extend_from_slice(&(t.cols() as u32).to_le_bytes());
+        for chunk in t.as_slice().chunks(stage.len() / 4) {
+            let mut n = 0;
+            for &x in chunk {
+                stage[n..n + 4].copy_from_slice(&x.to_le_bytes());
+                n += 4;
+            }
+            out.extend_from_slice(&stage[..n]);
+        }
+    }
+    Ok(out)
+}
+
+/// Encode an envelope + tensor sections into frame-payload bytes for
+/// `mode`. JSON mode inlines the tensors into the envelope text.
+pub fn encode_payload(
+    envelope: &Value,
+    tensors: &[Mat],
+    mode: WireMode,
+) -> Result<Vec<u8>, RpcError> {
+    match mode {
+        WireMode::Json => {
+            let text = if tensors.is_empty() {
+                json::to_string(envelope)
+            } else {
+                json::to_string(&inline_value(envelope, tensors)?)
+            };
+            Ok(text.into_bytes())
+        }
+        WireMode::Binary => encode_binary(json::to_string(envelope).into_bytes(), tensors),
+    }
+}
+
+/// Encode a full request/response message without cloning the payload
+/// value: the `{"id", "method"?, "params"/"result"}` envelope is spliced
+/// as text around the separately-serialized payload (a `push_data`
+/// manifest is tens of MB of JSON — building an envelope `Value` around
+/// it would deep-copy the tree on the hot path). `method: Some` produces
+/// a request with `params`; `None` a response with `result`.
+pub fn encode_message(
+    id: u64,
+    method: Option<&str>,
+    payload: &Payload,
+    mode: WireMode,
+) -> Result<Vec<u8>, RpcError> {
+    let value_text = match mode {
+        WireMode::Json if !payload.tensors.is_empty() => {
+            json::to_string(&inline_value(&payload.value, &payload.tensors)?)
+        }
+        _ => json::to_string(&payload.value),
+    };
+    let header = match method {
+        Some(m) => format!(
+            "{{\"id\":{id},\"method\":{},\"params\":{value_text}}}",
+            json::to_string(&Value::from(m))
+        ),
+        None => format!("{{\"id\":{id},\"result\":{value_text}}}"),
+    };
+    match mode {
+        WireMode::Json => Ok(header.into_bytes()),
+        WireMode::Binary => encode_binary(header.into_bytes(), &payload.tensors),
+    }
+}
+
+/// Validate the v2 preamble (magic byte already checked by the caller)
+/// and parse the control header. Returns the header value, the section
+/// count, and the offset where tensor sections begin — shared by the
+/// full decode and the header-only refusal path so the two cannot
+/// diverge.
+fn decode_v2_preamble(bytes: &[u8]) -> Result<(Value, usize, usize), RpcError> {
+    if bytes.len() < 8 {
+        return Err(RpcError::Malformed("truncated v2 frame header".into()));
+    }
+    if bytes[1] != WIRE_VERSION {
+        return Err(RpcError::Malformed(format!("unsupported wire version {}", bytes[1])));
+    }
+    let n_tensors = u16::from_le_bytes([bytes[2], bytes[3]]) as usize;
+    let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+    let hdr = bytes
+        .get(8..8 + hlen)
+        .ok_or_else(|| RpcError::Malformed("truncated v2 header".into()))?;
+    let text = std::str::from_utf8(hdr)
+        .map_err(|e| RpcError::Malformed(format!("non-utf8 v2 header: {e}")))?;
+    let v = json::parse(text).map_err(|e| RpcError::Malformed(e.to_string()))?;
+    Ok((v, n_tensors, 8 + hlen))
+}
+
+/// Parse only the control header of a v2 payload; the tensor sections
+/// are left untouched. A JSON-forced server uses this to learn the
+/// request id it must refuse without paying a potentially tens-of-MB
+/// section decode for a frame it will discard.
+pub fn decode_binary_header(bytes: &[u8]) -> Result<Value, RpcError> {
+    if bytes.first() != Some(&BIN_MAGIC) {
+        return Err(RpcError::Malformed("not a v2 payload".into()));
+    }
+    decode_v2_preamble(bytes).map(|(v, _, _)| v)
+}
+
+/// Decode frame-payload bytes, auto-detecting v1 JSON vs v2 binary by the
+/// magic byte. Returns the envelope, the tensor sections (empty for v1),
+/// and which encoding arrived.
+pub fn decode_payload(bytes: &[u8]) -> Result<(Value, Vec<Mat>, WireMode), RpcError> {
+    if bytes.first() != Some(&BIN_MAGIC) {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|e| RpcError::Malformed(format!("non-utf8 frame: {e}")))?;
+        let v = json::parse(text).map_err(|e| RpcError::Malformed(e.to_string()))?;
+        return Ok((v, Vec::new(), WireMode::Json));
+    }
+    let (v, n_tensors, mut off) = decode_v2_preamble(bytes)?;
+    let mut tensors = Vec::with_capacity(n_tensors.min(64));
+    for i in 0..n_tensors {
+        let dims = bytes
+            .get(off..off + 8)
+            .ok_or_else(|| RpcError::Malformed(format!("truncated tensor section {i}")))?;
+        let rows = u32::from_le_bytes([dims[0], dims[1], dims[2], dims[3]]) as usize;
+        let cols = u32::from_le_bytes([dims[4], dims[5], dims[6], dims[7]]) as usize;
+        off += 8;
+        let nbytes = tensor_byte_len(rows, cols)?;
+        let data = bytes
+            .get(off..off + nbytes)
+            .ok_or_else(|| RpcError::Malformed(format!("truncated tensor section {i}")))?;
+        off += nbytes;
+        let mut vals = Vec::with_capacity(nbytes / 4);
+        for ch in data.chunks_exact(4) {
+            vals.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+        }
+        tensors.push(Mat::from_vec(vals, rows, cols));
+    }
+    if off != bytes.len() {
+        return Err(RpcError::Malformed(format!(
+            "{} trailing bytes after tensor sections",
+            bytes.len() - off
+        )));
+    }
+    Ok((v, tensors, WireMode::Binary))
+}
+
+/// `hello {wire, version}` reply: binary is agreed only when the peer
+/// asked for it and this server's config allows it.
+pub fn hello_reply(params: &Value, server: WireMode) -> Value {
+    let requested = params.get("wire").and_then(Value::as_str).unwrap_or("binary");
+    let agreed = if requested == "binary" && server == WireMode::Binary {
+        WireMode::Binary
+    } else {
+        WireMode::Json
+    };
+    let mut m = Map::new();
+    m.insert("wire", Value::from(agreed.as_str()));
+    m.insert("version", Value::from(WIRE_VERSION as u64));
+    Value::Object(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::value::obj;
+    use crate::util::rng::Rng;
+
+    fn bits(m: &Mat) -> Vec<u32> {
+        m.as_slice().iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn roundtrip_binary(env: &Value, tensors: &[Mat]) -> (Value, Vec<Mat>) {
+        let bytes = encode_payload(env, tensors, WireMode::Binary).unwrap();
+        let (v, t, mode) = decode_payload(&bytes).unwrap();
+        assert_eq!(mode, WireMode::Binary);
+        (v, t)
+    }
+
+    #[test]
+    fn binary_roundtrip_preserves_nan_and_inf_bits() {
+        let m = Mat::from_vec(
+            vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 1.5e-42, 3.25],
+            2,
+            3,
+        );
+        let env = obj([("m", placeholder(0))]);
+        let (v, t) = roundtrip_binary(&env, &[m.clone()]);
+        assert_eq!(v, env);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].shape(), (2, 3));
+        assert_eq!(bits(&t[0]), bits(&m), "f32 bits must survive the binary wire");
+        // the JSON wire keeps the v1 convention: non-finite becomes null,
+        // which decodes back as NaN
+        let bytes = encode_payload(&env, &[m], WireMode::Json).unwrap();
+        let (v, t, mode) = decode_payload(&bytes).unwrap();
+        assert_eq!(mode, WireMode::Json);
+        assert!(t.is_empty());
+        let back = resolve_mat(v.get("m").unwrap(), &t).unwrap();
+        assert!(back.get(0, 0).is_nan());
+        assert!(back.get(0, 1).is_nan(), "inf is null on the json wire");
+        assert_eq!(back.get(1, 2), 3.25);
+    }
+
+    #[test]
+    fn empty_tensors_roundtrip() {
+        for (r, c) in [(0, 0), (0, 5), (5, 0)] {
+            let m = Mat::zeros(r, c);
+            let env = obj([("m", placeholder(0))]);
+            let (_, t) = roundtrip_binary(&env, &[m]);
+            assert_eq!(t[0].shape(), (r, c), "{r}x{c}");
+        }
+        // zero sections is also fine
+        let (v, t) = roundtrip_binary(&obj([("x", Value::from(1i64))]), &[]);
+        assert!(t.is_empty());
+        assert_eq!(v.get("x").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn truncated_tensor_section_rejected() {
+        let m = Mat::from_vec(vec![1.0; 12], 3, 4);
+        let bytes =
+            encode_payload(&obj([("m", placeholder(0))]), &[m], WireMode::Binary).unwrap();
+        // chop anywhere inside the tensor region: header stays parseable,
+        // the section must fail loudly
+        for cut in [bytes.len() - 1, bytes.len() - 17, bytes.len() - 48 + 7] {
+            let err = decode_payload(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(&err, RpcError::Malformed(e) if e.contains("truncated")),
+                "cut at {cut}: {err}"
+            );
+        }
+        // trailing junk is also a framing error
+        let mut fat = bytes.clone();
+        fat.extend_from_slice(&[0u8; 3]);
+        let err = decode_payload(&fat).unwrap_err();
+        assert!(matches!(&err, RpcError::Malformed(e) if e.contains("trailing")), "{err}");
+    }
+
+    #[test]
+    fn oversized_section_rejected_on_both_sides() {
+        // decode side: a forged header claiming a huge tensor must be
+        // rejected from the 8 dim bytes alone, before any allocation
+        let mut bytes = vec![BIN_MAGIC, WIRE_VERSION, 1, 0];
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // header "{}"
+        bytes.extend_from_slice(b"{}");
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode_payload(&bytes), Err(RpcError::FrameTooLarge(_))));
+
+        // encode side: a real tensor over MAX_FRAME never reaches the wire
+        let m = Mat::zeros(MAX_FRAME / 4 + 1, 1);
+        assert!(matches!(
+            encode_payload(&Value::Null, &[m], WireMode::Binary),
+            Err(RpcError::FrameTooLarge(_))
+        ));
+    }
+
+    #[test]
+    fn bad_magic_version_and_short_frames_rejected() {
+        assert!(matches!(
+            decode_payload(&[BIN_MAGIC, 9, 0, 0, 0, 0, 0, 0]),
+            Err(RpcError::Malformed(_))
+        ));
+        assert!(matches!(decode_payload(&[BIN_MAGIC, WIRE_VERSION, 1]), Err(RpcError::Malformed(_))));
+        // plain JSON still parses
+        let (v, t, mode) = decode_payload(b"{\"a\":1}").unwrap();
+        assert_eq!(mode, WireMode::Json);
+        assert!(t.is_empty());
+        assert_eq!(v.get("a").unwrap().as_i64(), Some(1));
+        // junk is neither
+        assert!(decode_payload(&[0xFF, 0xFE]).is_err());
+    }
+
+    #[test]
+    fn take_mat_moves_sections_out() {
+        let mut tensors = vec![Mat::from_vec(vec![1.0, 2.0], 1, 2)];
+        let v = obj([("m", placeholder(0))]);
+        let got = take_mat(&v, &mut tensors, "m").unwrap().unwrap();
+        assert_eq!(got.as_slice(), &[1.0, 2.0]);
+        // the slot is emptied, not cloned
+        assert_eq!(tensors[0].shape(), (0, 0));
+        assert!(take_mat(&v, &mut [], "m").is_err());
+        assert!(take_mat(&v, &mut tensors, "absent").unwrap().is_none());
+        // inline form still resolves
+        let inline = obj([("m", mat_to_value(&got))]);
+        assert_eq!(take_mat(&inline, &mut tensors, "m").unwrap().unwrap(), got);
+    }
+
+    #[test]
+    fn header_only_decode_skips_sections() {
+        let m = Mat::from_vec(vec![1.0; 8], 2, 4);
+        let mut p = Payload::default();
+        let ph = p.stash_mat(m);
+        let env = obj([("id", Value::from(9i64)), ("params", obj([("emb", ph)]))]);
+        let bytes = encode_payload(&env, &p.tensors, WireMode::Binary).unwrap();
+        let v = decode_binary_header(&bytes).unwrap();
+        assert_eq!(v.get("id").unwrap().as_i64(), Some(9));
+        // a truncated tensor section doesn't matter on the header-only
+        // path (a JSON-forced server only needs the id to refuse)
+        let v = decode_binary_header(&bytes[..bytes.len() - 10]).unwrap();
+        assert_eq!(v.get("id").unwrap().as_i64(), Some(9));
+        // v1 payloads are not its business
+        assert!(decode_binary_header(b"{}").is_err());
+    }
+
+    #[test]
+    fn inline_value_resolves_nested_placeholders() {
+        let mut p = Payload::default();
+        let ph = p.stash_mat(Mat::from_vec(vec![1.0, 2.0], 1, 2));
+        p.value = obj([("deep", Value::Array(vec![obj([("m", ph)])]))]);
+        let flat = inline_value(&p.value, &p.tensors).unwrap();
+        let inner = flat.get("deep").unwrap().idx(0).unwrap().get("m").unwrap();
+        assert!(is_inline_mat(inner));
+        assert_eq!(mat_from_value(inner).unwrap(), p.tensors[0]);
+        // dangling ref is an error
+        assert!(inline_value(&placeholder(5), &p.tensors).is_err());
+    }
+
+    #[test]
+    fn maybe_mat_distinguishes_forms() {
+        let t = vec![Mat::zeros(2, 2)];
+        assert_eq!(maybe_mat(&placeholder(0), &t).unwrap().unwrap().shape(), (2, 2));
+        assert!(maybe_mat(&Value::Array(vec![]), &t).unwrap().is_none());
+        assert!(maybe_mat(&mat_to_value(&t[0]), &t).unwrap().is_some());
+        assert!(maybe_mat(&placeholder(3), &t).is_err());
+    }
+
+    /// Random JSON (finite numbers only, exact-int range) for header props.
+    fn random_header(rng: &mut Rng, depth: usize) -> Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.below(2) == 0),
+            2 => Value::from(rng.below(1_000_000) as i64 - 500_000),
+            3 => Value::from(
+                (0..rng.below(10))
+                    .map(|_| b"ab\"\\\n\t {}[]:,$"[rng.below(14)] as char)
+                    .collect::<String>(),
+            ),
+            4 => Value::Array(
+                (0..rng.below(4)).map(|_| random_header(rng, depth - 1)).collect(),
+            ),
+            _ => {
+                let mut m = Map::new();
+                for i in 0..rng.below(4) {
+                    m.insert(format!("k{i}"), random_header(rng, depth - 1));
+                }
+                Value::Object(m)
+            }
+        }
+    }
+
+    #[test]
+    fn prop_binary_roundtrip_over_random_payloads() {
+        crate::util::prop::check("wire-binary-roundtrip", 60, |rng| {
+            let header = random_header(rng, 3);
+            let n_tensors = rng.below(4);
+            let tensors: Vec<Mat> = (0..n_tensors)
+                .map(|_| {
+                    let (r, c) = (rng.below(12), 1 + rng.below(9));
+                    let mut data: Vec<f32> =
+                        (0..r * c).map(|_| rng.normal_f32()).collect();
+                    if !data.is_empty() && rng.below(3) == 0 {
+                        let i = rng.below(data.len());
+                        data[i] = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY]
+                            [rng.below(3)];
+                    }
+                    Mat::from_vec(data, r, c)
+                })
+                .collect();
+            let bytes = encode_payload(&header, &tensors, WireMode::Binary)
+                .map_err(|e| format!("encode: {e}"))?;
+            let (v, t, mode) =
+                decode_payload(&bytes).map_err(|e| format!("decode: {e}"))?;
+            crate::prop_assert!(mode == WireMode::Binary, "mode {mode:?}");
+            crate::prop_assert!(v == header, "header mismatch:\n got {v:?}\nwant {header:?}");
+            crate::prop_assert!(t.len() == tensors.len(), "tensor count");
+            for (a, b) in t.iter().zip(&tensors) {
+                crate::prop_assert!(a.shape() == b.shape(), "shape mismatch");
+                crate::prop_assert!(bits(a) == bits(b), "tensor bits mismatch");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_json_mode_matches_binary_for_finite_payloads() {
+        crate::util::prop::check("wire-json-parity", 40, |rng| {
+            let (r, c) = (1 + rng.below(20), 1 + rng.below(16));
+            let m = Mat::from_vec(
+                (0..r * c).map(|_| rng.normal_f32()).collect(),
+                r,
+                c,
+            );
+            let mut p = Payload::default();
+            let ph = p.stash_mat(m.clone());
+            p.value = obj([("m", ph)]);
+            let env = obj([("params", p.value.clone())]);
+
+            // binary wire
+            let bb = encode_payload(&env, &p.tensors, WireMode::Binary)
+                .map_err(|e| format!("{e}"))?;
+            let (bv, bt, _) = decode_payload(&bb).map_err(|e| format!("{e}"))?;
+            let bm = resolve_mat(bv.get("params").unwrap().get("m").unwrap(), &bt)
+                .map_err(|e| e.to_string())?;
+
+            // json wire (text round trip)
+            let jb = encode_payload(&env, &p.tensors, WireMode::Json)
+                .map_err(|e| format!("{e}"))?;
+            let (jv, jt, _) = decode_payload(&jb).map_err(|e| format!("{e}"))?;
+            let jm = resolve_mat(jv.get("params").unwrap().get("m").unwrap(), &jt)
+                .map_err(|e| e.to_string())?;
+
+            crate::prop_assert!(bits(&bm) == bits(&m), "binary not bit-exact");
+            crate::prop_assert!(
+                bits(&jm) == bits(&m),
+                "json text round trip not exact for finite f32"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn binary_payload_is_at_least_3x_smaller_than_json() {
+        // The acceptance bar from the rpc_wire bench, pinned as a
+        // deterministic unit test: payload bytes are a pure function of
+        // the data, no timing involved.
+        let mut rng = Rng::new(42);
+        let m = Mat::from_vec((0..1000 * 64).map(|_| rng.normal_f32()).collect(), 1000, 64);
+        let mut p = Payload::default();
+        let ph = p.stash_mat(m);
+        let env = obj([("id", Value::from(1i64)), ("result", obj([("emb", ph)]))]);
+        let json = encode_payload(&env, &p.tensors, WireMode::Json).unwrap();
+        let bin = encode_payload(&env, &p.tensors, WireMode::Binary).unwrap();
+        assert!(
+            json.len() >= 3 * bin.len(),
+            "json {} bytes vs binary {} bytes",
+            json.len(),
+            bin.len()
+        );
+    }
+
+    #[test]
+    fn hello_reply_negotiates() {
+        let req = obj([("wire", Value::from("binary"))]);
+        let r = hello_reply(&req, WireMode::Binary);
+        assert_eq!(r.get("wire").unwrap().as_str(), Some("binary"));
+        assert_eq!(r.get("version").unwrap().as_i64(), Some(WIRE_VERSION as i64));
+        // server forced to json refuses
+        let r = hello_reply(&req, WireMode::Json);
+        assert_eq!(r.get("wire").unwrap().as_str(), Some("json"));
+        // client asking for json gets json even from a binary server
+        let r = hello_reply(&obj([("wire", Value::from("json"))]), WireMode::Binary);
+        assert_eq!(r.get("wire").unwrap().as_str(), Some("json"));
+    }
+}

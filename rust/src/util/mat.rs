@@ -109,6 +109,20 @@ impl Mat {
         assert!(n <= self.rows, "take_rows grows");
         Mat::from_vec(self.data[..n * self.cols].to_vec(), n, self.cols)
     }
+
+    /// Transposed copy (`[R, C] -> [C, R]`). The host matmul kernels hoist
+    /// one of these so their inner loops walk contiguous rows instead of
+    /// striding by `cols` (runtime::backend §Perf).
+    pub fn transposed(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (j, &v) in row.iter().enumerate() {
+                out.data[j * self.rows + i] = v;
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -147,5 +161,20 @@ mod tests {
     #[should_panic(expected = "shape mismatch")]
     fn from_vec_checks_shape() {
         Mat::from_vec(vec![1.0; 5], 2, 3);
+    }
+
+    #[test]
+    fn transposed_roundtrip() {
+        let m = Mat::from_vec((0..6).map(|x| x as f32).collect(), 2, 3);
+        let t = m.transposed();
+        assert_eq!(t.shape(), (3, 2));
+        for i in 0..2 {
+            for j in 0..3 {
+                assert_eq!(t.get(j, i), m.get(i, j));
+            }
+        }
+        assert_eq!(t.transposed(), m);
+        // degenerate shapes
+        assert_eq!(Mat::zeros(0, 4).transposed().shape(), (4, 0));
     }
 }

@@ -19,7 +19,7 @@ use alaas::metrics::Registry;
 use alaas::pipeline::{run_pipeline, PipelineParams};
 use alaas::runtime::backend::ComputeBackend;
 use alaas::runtime::HostBackend;
-use alaas::server::{AlClient, AlServer, ServerDeps};
+use alaas::server::{AlClient, AlServer, ServerDeps, WireMode};
 use alaas::store::{Manifest, ObjectStore, SampleRef, StoreRouter};
 use alaas::trainer::LinearHead;
 
@@ -75,9 +75,23 @@ fn server_deps(store: Arc<StoreRouter>) -> ServerDeps {
 }
 
 /// One shared store, `n_workers` worker servers + one single server over
-/// the same dataset, and a coordinator wired to the workers.
+/// the same dataset, and a coordinator wired to the workers (everything
+/// on the default binary data plane).
 fn harness(pool: usize, n_workers: usize) -> Harness {
-    let cfg = base_config();
+    harness_wire(pool, n_workers, WireMode::Binary, WireMode::Binary)
+}
+
+/// Like `harness`, but forcing the coordinator's and the workers' wire
+/// configs independently (the mixed pairs exercise the §Wire negotiation
+/// fallback).
+fn harness_wire(
+    pool: usize,
+    n_workers: usize,
+    coord_wire: WireMode,
+    worker_wire: WireMode,
+) -> Harness {
+    let mut cfg = base_config();
+    cfg.server.wire = worker_wire;
     let store = Arc::new(StoreRouter::new("/tmp", &cfg.store));
     let spec = DatasetSpec::cifarsim(7).with_sizes(60, pool, 0);
     let backing: Arc<dyn ObjectStore> =
@@ -93,6 +107,7 @@ fn harness(pool: usize, n_workers: usize) -> Harness {
     let single = AlServer::start(cfg.clone(), server_deps(store.clone())).unwrap();
 
     let mut coord_cfg = cfg;
+    coord_cfg.server.wire = coord_wire;
     coord_cfg.cluster.workers =
         workers.iter().map(|w| w.addr().to_string()).collect();
     let coord_metrics = Registry::new();
@@ -308,6 +323,74 @@ fn per_shard_metrics_and_straggler_gauge() {
     // the same numbers are visible to clients through the metrics RPC
     let remote = cluster.metrics().unwrap();
     assert!(remote.get("histograms").unwrap().get("cluster.shard0.scan").is_some());
+}
+
+/// Selection parity across the wire matrix (DESIGN.md §Wire): every
+/// coordinator/worker encoding combination — including the mixed pair
+/// that exercises the binary→JSON negotiation fallback — must yield the
+/// exact single-server selection for the top-k strategies and the exact
+/// same refined selection as every other combination.
+#[test]
+fn wire_mode_parity_and_mixed_pair_fallback() {
+    let combos = [
+        (WireMode::Json, WireMode::Json),
+        (WireMode::Binary, WireMode::Binary),
+        // mixed pair: binary coordinator, JSON-forced workers
+        (WireMode::Binary, WireMode::Json),
+        (WireMode::Json, WireMode::Binary),
+    ];
+    let mut entropy_sel: Vec<Vec<u32>> = Vec::new();
+    let mut kcg_sel: Vec<Vec<u32>> = Vec::new();
+    for (coord_wire, worker_wire) in combos {
+        let tag = format!("coord={coord_wire:?} worker={worker_wire:?}");
+        let h = harness_wire(160, 2, coord_wire, worker_wire);
+        let mut single = AlClient::connect(&h.single.addr().to_string()).unwrap();
+        let mut cluster = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
+        single.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+        cluster.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+
+        // exact top-k strategy: must equal the single server bit-for-bit
+        let (want, _, _) = single.query("s", 20, Some("entropy")).unwrap();
+        let (got, _, _) = cluster.query("s", 20, Some("entropy")).unwrap();
+        assert_valid(&got, &h.manifest, 20);
+        assert_eq!(ids(&got), ids(&want), "{tag}: entropy parity broke");
+        entropy_sel.push(ids(&got));
+
+        // refine strategy: ships embeddings (tensor sections on the
+        // binary wire); the selection must not depend on the encoding
+        let (kcg, _, _) = cluster.query("s", 15, Some("k_center_greedy")).unwrap();
+        assert_valid(&kcg, &h.manifest, 15);
+        kcg_sel.push(ids(&kcg));
+
+        let snap = h.coord_metrics.snapshot();
+        let counters = snap.get("counters").unwrap();
+        let counter = |name: &str| -> i64 {
+            counters.get(name).and_then(|v| v.as_i64()).unwrap_or(0)
+        };
+        assert!(counter("wire.rx_bytes") > 0, "{tag}: no wire bytes recorded");
+        if coord_wire == WireMode::Binary && worker_wire == WireMode::Json {
+            // the mixed pair must have downgraded at least one worker
+            assert!(
+                counter("wire.json_fallbacks") >= 1,
+                "{tag}: negotiation fallback never fired"
+            );
+        }
+        if coord_wire == WireMode::Binary && worker_wire == WireMode::Binary {
+            assert!(
+                counter("wire.frames.binary") > 0,
+                "{tag}: binary cluster never exchanged a v2 frame"
+            );
+            assert_eq!(counter("wire.json_fallbacks"), 0, "{tag}: spurious fallback");
+        }
+    }
+    // the dataset and seeds are identical across harnesses, so selections
+    // must agree across every wire combination
+    for (i, sel) in entropy_sel.iter().enumerate().skip(1) {
+        assert_eq!(sel, &entropy_sel[0], "entropy differs across wire combos ({i})");
+    }
+    for (i, sel) in kcg_sel.iter().enumerate().skip(1) {
+        assert_eq!(sel, &kcg_sel[0], "k_center_greedy differs across wire combos ({i})");
+    }
 }
 
 #[test]

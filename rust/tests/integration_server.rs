@@ -10,7 +10,7 @@ use alaas::data::{generate_into_store, DatasetSpec, Oracle};
 use alaas::metrics::Registry;
 use alaas::runtime::backend::ComputeBackend;
 use alaas::runtime::HostBackend;
-use alaas::server::{AlClient, AlServer, ServerDeps};
+use alaas::server::{AlClient, AlServer, ServerDeps, WireMode};
 use alaas::store::{Manifest, ObjectStore, StoreRouter};
 
 struct Harness {
@@ -21,11 +21,16 @@ struct Harness {
 }
 
 /// Start a server on an ephemeral port with a generated dataset living in
-/// its s3sim store.
+/// its s3sim store (default binary data plane).
 fn harness(pool: usize) -> Harness {
+    harness_wire(pool, WireMode::Binary)
+}
+
+fn harness_wire(pool: usize, wire: WireMode) -> Harness {
     let mut cfg = AlaasConfig::default();
     cfg.al_worker.host = "127.0.0.1".into();
     cfg.al_worker.port = 0; // ephemeral
+    cfg.server.wire = wire;
     cfg.store.get_latency_us = 0;
     cfg.store.bandwidth_mib_s = 0.0;
     cfg.store.jitter = 0.0;
@@ -202,6 +207,60 @@ fn metrics_and_cache_stats_flow() {
     assert!(cs.get("misses").unwrap().as_i64().unwrap() > 0);
     let zoo = client.strategies().unwrap();
     assert!(zoo.contains(&"core_set".to_string()));
+}
+
+#[test]
+fn wire_negotiation_and_selection_parity_across_modes() {
+    let h = harness(150);
+    let addr = h.server.addr().to_string();
+    // default client negotiates the binary data plane via `hello`
+    let mut bin = AlClient::connect(&addr).unwrap();
+    assert_eq!(bin.wire_mode(), WireMode::Binary);
+    // a forced-JSON client keeps speaking v1 frames
+    let mut json = AlClient::connect_with_wire(&addr, WireMode::Json).unwrap();
+    assert_eq!(json.wire_mode(), WireMode::Json);
+
+    bin.push_data("b", &h.manifest, Some(&h.init_labels)).unwrap();
+    json.push_data("j", &h.manifest, Some(&h.init_labels)).unwrap();
+    let ids = |v: &[alaas::store::SampleRef]| -> Vec<u32> {
+        v.iter().map(|s| s.id).collect()
+    };
+    let (a, _, _) = bin.query("b", 25, Some("entropy")).unwrap();
+    let (b, _, _) = json.query("j", 25, Some("entropy")).unwrap();
+    assert_eq!(ids(&a), ids(&b), "selection must not depend on the wire encoding");
+
+    // binary frames actually flowed, and the wire metrics landed
+    let m = bin.metrics().unwrap();
+    let counters = m.get("counters").unwrap();
+    let counter = |name: &str| -> i64 {
+        counters.get(name).and_then(|v| v.as_i64()).unwrap_or(0)
+    };
+    assert!(counter("wire.frames.binary") > 0, "no v2 frames seen");
+    assert!(counter("wire.frames.json") > 0, "no v1 frames seen");
+    assert!(counter("wire.rx_bytes") > 0 && counter("wire.tx_bytes") > 0);
+    assert!(m.get("histograms").unwrap().get("wire.decode").is_some());
+    assert!(m.get("histograms").unwrap().get("wire.encode").is_some());
+}
+
+#[test]
+fn json_forced_server_downgrades_binary_clients() {
+    let h = harness_wire(80, WireMode::Json);
+    let addr = h.server.addr().to_string();
+    // the hello probe learns the server refuses binary; the session then
+    // runs entirely on v1 frames
+    let mut c = AlClient::connect(&addr).unwrap();
+    assert_eq!(c.wire_mode(), WireMode::Json);
+    c.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+    let (sel, _, _) = c.query("s", 10, Some("least_confidence")).unwrap();
+    assert_eq!(sel.len(), 10);
+    let m = c.metrics().unwrap();
+    let bin_frames = m
+        .get("counters")
+        .unwrap()
+        .get("wire.frames.binary")
+        .and_then(|v| v.as_i64())
+        .unwrap_or(0);
+    assert_eq!(bin_frames, 0, "a JSON-forced server should never see v2 frames");
 }
 
 #[test]
