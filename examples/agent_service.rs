@@ -1,0 +1,143 @@
+//! Agent-as-a-service quickstart (DESIGN.md §Agent): run the PSHEA
+//! auto-selection loop *on the cluster* instead of in the client process:
+//!
+//!   1. Start 2 workers + a coordinator (in-process, real TCP).
+//!   2. Push a dataset (init + pool + test) through the unchanged client
+//!      API — the pool shards across the workers, init/test replicate.
+//!   3. `agent_start` a background PSHEA job: every candidate strategy is
+//!      an arm whose per-round selection scatters over the worker shards
+//!      through the same `select_shard` wire a plain query uses.
+//!   4. Poll `agent_status` for the live round log, then print the final
+//!      trace from `agent_result`.
+//!
+//! Run: `cargo run --release --example agent_service`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use alaas::agent::PsheaConfig;
+use alaas::cache::DataCache;
+use alaas::cluster::{Coordinator, CoordinatorDeps};
+use alaas::config::AlaasConfig;
+use alaas::data::{generate_into_store, DatasetSpec, Oracle};
+use alaas::json::Value;
+use alaas::metrics::Registry;
+use alaas::runtime::backend::ComputeBackend;
+use alaas::runtime::HostBackend;
+use alaas::server::{AlClient, AlServer, ServerDeps};
+use alaas::store::{ObjectStore, StoreRouter};
+
+const WORKERS: usize = 2;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = AlaasConfig::default();
+    cfg.al_worker.port = 0; // ephemeral everywhere
+
+    let store = Arc::new(StoreRouter::new("/tmp", &cfg.store));
+    let spec = DatasetSpec::cifarsim(42).with_sizes(150, 900, 300);
+    let scratch: Arc<dyn ObjectStore> = Arc::new(alaas::store::MemStore::new());
+    let manifest = generate_into_store(&spec, &scratch, "s3sim", "agent-quickstart");
+    for key in scratch.list("")? {
+        store.s3sim_backing().put(&key, &scratch.get(&key)?)?;
+    }
+    let oracle = Oracle::load(&scratch, "agent-quickstart")?;
+    let ids = |refs: &[alaas::store::SampleRef]| -> Vec<u32> {
+        refs.iter().map(|s| s.id).collect()
+    };
+    // init labels are pushed with the data; pool/test labels ride the
+    // agent_start RPC as the oracle the served loop charges per round
+    let init_labels = oracle.label(&ids(&manifest.init));
+    let pool_labels = oracle.eval_labels(&ids(&manifest.pool));
+    let test_labels = oracle.eval_labels(&ids(&manifest.test));
+    println!(
+        "dataset: {} (init {}, pool {}, test {})",
+        manifest.name,
+        manifest.init.len(),
+        manifest.pool.len(),
+        manifest.test.len()
+    );
+
+    let workers: Vec<AlServer> = (0..WORKERS)
+        .map(|_| {
+            AlServer::start(
+                cfg.clone(),
+                ServerDeps {
+                    store: store.clone(),
+                    cache: Arc::new(DataCache::from_config(&cfg.cache)),
+                    backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
+                    metrics: Registry::new(),
+                },
+            )
+        })
+        .collect::<std::io::Result<_>>()?;
+    let mut coord_cfg = cfg.clone();
+    coord_cfg.cluster.workers = workers.iter().map(|w| w.addr().to_string()).collect();
+    let metrics = Registry::new();
+    let coordinator = Coordinator::start(
+        coord_cfg,
+        CoordinatorDeps {
+            backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
+            metrics: metrics.clone(),
+        },
+    )?;
+    println!("coordinator: {} ({WORKERS} workers)", coordinator.addr());
+
+    let mut client = AlClient::connect(&coordinator.addr().to_string())?;
+    client.push_data("agent", &manifest, Some(&init_labels))?;
+
+    // 3 candidate arms under a tight budget; the server eliminates the
+    // weakest forecast each round (Algorithm 1)
+    let strategies: Vec<String> =
+        ["least_confidence", "entropy", "k_center_greedy"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    let pshea = PsheaConfig {
+        target_accuracy: 0.95,
+        max_budget: 2_000,
+        round_budget: 50,
+        max_rounds: 6,
+        min_history: 2,
+        ..Default::default()
+    };
+    let job =
+        client.agent_start("agent", &strategies, &pshea, &pool_labels, &test_labels, 42)?;
+    println!("agent job {job}: {} arms fan out across the shards", strategies.len());
+
+    let mut last_round = 0usize;
+    loop {
+        std::thread::sleep(Duration::from_millis(200));
+        let st = client.agent_status(&job)?;
+        let status = st.get("status").and_then(Value::as_str).unwrap_or("?").to_string();
+        let rounds = st.get("rounds").and_then(Value::as_usize).unwrap_or(0);
+        if rounds > last_round {
+            let live = st.get("live").and_then(Value::as_array).map(|a| a.len()).unwrap_or(0);
+            let spent = st.get("budget_spent").and_then(Value::as_usize).unwrap_or(0);
+            let best = st.get("best_accuracy").and_then(Value::as_f64).unwrap_or(0.0);
+            println!("  round {rounds}: {live} live, {spent} labels, best {best:.4}");
+            last_round = rounds;
+        }
+        if status != "running" {
+            break;
+        }
+    }
+
+    let trace = client.agent_result(&job, Duration::from_secs(600))?;
+    for rec in trace.records.iter().filter(|r| r.eliminated) {
+        println!("eliminated in round {}: {}", rec.round, rec.strategy);
+    }
+    println!(
+        "stop {:?} after {} rounds, {} labels; recommended: {}",
+        trace.stop,
+        trace.rounds,
+        trace.total_budget,
+        trace.recommendation().unwrap_or("(none)")
+    );
+
+    coordinator.shutdown();
+    for w in workers {
+        w.shutdown();
+    }
+    println!("agent service quickstart OK");
+    Ok(())
+}

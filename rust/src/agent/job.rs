@@ -1,0 +1,982 @@
+//! Agent-as-a-service: the PSHEA loop as a background server job
+//! (DESIGN.md §Agent).
+//!
+//! [`super::run_pshea`] stays the single Algorithm 1 implementation; this
+//! module adds what *serving* it needs:
+//!
+//! * [`ArmSelect`] — the hook that routes each arm's per-round selection
+//!   through the serving layers (the single server's candidate view, or
+//!   the coordinator's scatter/merge across worker shards).
+//! * [`AgentTask`] — an [`super::AlTask`] that replays the
+//!   `sim::AlExperiment` round semantics (baseline head from the init
+//!   split, per-round seed derivation via [`super::arm_round_seed`],
+//!   oracle labeling, last-layer retrain, test-split evaluation) on top
+//!   of that hook — the remote-vs-local parity tests pin the two
+//!   implementations to each other.
+//! * [`JobRegistry`] / [`JobSlot`] — cancellable, mid-run-queryable job
+//!   state behind the `agent_start` / `agent_status` / `agent_result` /
+//!   `agent_cancel` RPC family, shared by `AlServer` and the cluster
+//!   coordinator so the two dispatchers cannot drift.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::json::{Map, Value};
+use crate::metrics::Registry;
+use crate::runtime::backend::{ComputeBackend, RtResult, RuntimeError};
+use crate::trainer::{self, LinearHead, TrainConfig};
+use crate::util::mat::Mat;
+
+use super::pshea::{
+    run_pshea_observed, AlTask, PsheaConfig, PsheaObserver, PsheaTrace, RoundRecord,
+    StopReason,
+};
+
+/// Error text a cancelled job's select step surfaces; the drive wrapper
+/// checks the cancel flag (not this string) to classify the outcome.
+pub const CANCELLED: &str = "agent job cancelled";
+
+/// One picked sample: global pool position plus its embedding row.
+pub type Picked = (usize, Vec<f32>);
+
+/// The serving-layer selection hook one agent arm round goes through.
+pub trait ArmSelect: Send {
+    /// Select `budget` unlabeled pool samples for one arm round.
+    /// `exclude` holds the arm's already-labeled global pool positions in
+    /// labeling order, `arm_labeled` their embeddings (same order, used
+    /// as extra labeled context for the diversity strategies), and
+    /// uncertainty scores are recomputed under the arm's current `head`.
+    fn select_arm(
+        &mut self,
+        strategy: &str,
+        budget: usize,
+        head: &LinearHead,
+        exclude: &[usize],
+        arm_labeled: &Mat,
+        seed: u64,
+    ) -> Result<Vec<Picked>, String>;
+}
+
+/// Per-arm state the served loop keeps (Algorithm 1's `d^l` per strategy).
+struct ArmState {
+    /// Global pool positions labeled so far, in labeling order.
+    labeled: Vec<usize>,
+    /// Oracle labels parallel to `labeled`.
+    labels: Vec<u8>,
+    /// Embedding rows parallel to `labeled`.
+    emb_rows: Vec<Vec<f32>>,
+    head: LinearHead,
+    /// Completed rounds (drives the per-round seed derivation).
+    rounds: u64,
+}
+
+/// [`AlTask`] over a ready session's data + an [`ArmSelect`] hook.
+pub struct AgentTask<S: ArmSelect> {
+    sel: S,
+    backend: Arc<dyn ComputeBackend>,
+    /// Selectable (non-failed) pool size; bounds every arm's labeling.
+    selectable_pool: usize,
+    init_emb: Mat,
+    init_labels: Vec<u8>,
+    /// Oracle labels by global pool position (the label service the RPC
+    /// carries in place of a human annotator).
+    pool_labels: Vec<u8>,
+    test_emb: Mat,
+    test_labels: Vec<u8>,
+    num_classes: usize,
+    train_cfg: TrainConfig,
+    seed: u64,
+    cancel: Option<Arc<AtomicBool>>,
+    baseline: Option<LinearHead>,
+    arms: BTreeMap<String, ArmState>,
+}
+
+impl<S: ArmSelect> AgentTask<S> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        sel: S,
+        backend: Arc<dyn ComputeBackend>,
+        selectable_pool: usize,
+        init_emb: Mat,
+        init_labels: Vec<u8>,
+        pool_labels: Vec<u8>,
+        test_emb: Mat,
+        test_labels: Vec<u8>,
+        num_classes: usize,
+        seed: u64,
+        cancel: Option<Arc<AtomicBool>>,
+    ) -> AgentTask<S> {
+        assert_eq!(init_emb.rows(), init_labels.len(), "init emb/labels length");
+        assert_eq!(test_emb.rows(), test_labels.len(), "test emb/labels length");
+        AgentTask {
+            sel,
+            backend,
+            selectable_pool,
+            init_emb,
+            init_labels,
+            pool_labels,
+            test_emb,
+            test_labels,
+            num_classes,
+            train_cfg: TrainConfig::default(),
+            seed,
+            cancel,
+            baseline: None,
+            arms: BTreeMap::new(),
+        }
+    }
+
+    /// Head trained on the init split only (Algorithm 1 line 5) — every
+    /// new arm starts from it, exactly like `sim::AlExperiment::baseline`.
+    fn baseline_head(&mut self) -> RtResult<LinearHead> {
+        if self.baseline.is_none() {
+            let (h, _) = trainer::fit(
+                self.backend.as_ref(),
+                &self.init_emb,
+                &self.init_labels,
+                self.num_classes,
+                &self.train_cfg,
+            )?;
+            self.baseline = Some(h);
+        }
+        Ok(self.baseline.clone().unwrap())
+    }
+}
+
+impl<S: ArmSelect> AlTask for AgentTask<S> {
+    fn run_round(&mut self, strategy: &str, budget: usize) -> RtResult<Option<f64>> {
+        if self.cancel.as_ref().is_some_and(|c| c.load(Ordering::SeqCst)) {
+            return Err(RuntimeError::Pool(CANCELLED.into()));
+        }
+        let base = self.baseline_head()?;
+        self.arms.entry(strategy.to_string()).or_insert_with(|| ArmState {
+            labeled: vec![],
+            labels: vec![],
+            emb_rows: vec![],
+            head: base,
+            rounds: 0,
+        });
+        // snapshot the arm so the select call doesn't hold a borrow
+        let (head, exclude, arm_mat, n_prev) = {
+            let arm = self.arms.get(strategy).unwrap();
+            if self.selectable_pool - arm.labeled.len() < budget {
+                return Ok(None);
+            }
+            let arm_mat = if arm.emb_rows.is_empty() {
+                Mat::zeros(0, self.init_emb.cols())
+            } else {
+                Mat::from_rows(arm.emb_rows.iter().map(|r| r.as_slice()))
+            };
+            (arm.head.clone(), arm.labeled.clone(), arm_mat, arm.rounds)
+        };
+        let seed = super::arm_round_seed(self.seed, n_prev);
+        let picked = self
+            .sel
+            .select_arm(strategy, budget, &head, &exclude, &arm_mat, seed)
+            .map_err(RuntimeError::Pool)?;
+        if picked.len() < budget {
+            return Ok(None); // candidate set ran dry mid-merge
+        }
+        // oracle labels the selection; the arm absorbs it
+        let arm = self.arms.get_mut(strategy).unwrap();
+        for (g, emb) in picked {
+            let label = *self.pool_labels.get(g).ok_or_else(|| {
+                RuntimeError::Shape(format!("picked index {g} outside pool labels"))
+            })?;
+            arm.labeled.push(g);
+            arm.labels.push(label);
+            arm.emb_rows.push(emb);
+        }
+        // retrain from scratch on init + the arm's labeled set, evaluate
+        let lab_mat = Mat::from_rows(arm.emb_rows.iter().map(|r| r.as_slice()));
+        let emb = self.init_emb.vstack(&lab_mat);
+        let mut labels = self.init_labels.clone();
+        labels.extend_from_slice(&arm.labels);
+        let (new_head, _) = trainer::fit(
+            self.backend.as_ref(),
+            &emb,
+            &labels,
+            self.num_classes,
+            &self.train_cfg,
+        )?;
+        let acc = trainer::evaluate(
+            self.backend.as_ref(),
+            &new_head,
+            &self.test_emb,
+            &self.test_labels,
+        )?;
+        let arm = self.arms.get_mut(strategy).unwrap();
+        arm.head = new_head;
+        arm.rounds += 1;
+        Ok(Some(acc.top1))
+    }
+}
+
+/// Lifecycle of a job slot.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobStatus {
+    Running,
+    Done,
+    Cancelled,
+    Failed(String),
+}
+
+impl JobStatus {
+    pub fn as_string(&self) -> String {
+        match self {
+            JobStatus::Running => "running".into(),
+            JobStatus::Done => "done".into(),
+            JobStatus::Cancelled => "cancelled".into(),
+            JobStatus::Failed(e) => format!("failed: {e}"),
+        }
+    }
+}
+
+/// Why/when an arm left the field, as `agent_status` reports it.
+#[derive(Debug, Clone)]
+pub struct EliminatedArm {
+    pub strategy: String,
+    pub round: usize,
+    /// The forecast that killed it.
+    pub predicted: f64,
+    /// Its last observed accuracy.
+    pub observed: f64,
+}
+
+/// Queryable mid-run state of one job.
+#[derive(Debug)]
+pub struct JobState {
+    pub status: JobStatus,
+    pub strategies: Vec<String>,
+    pub live: Vec<String>,
+    pub eliminated: Vec<EliminatedArm>,
+    pub records: Vec<RoundRecord>,
+    pub rounds: usize,
+    pub budget_spent: usize,
+    pub best_accuracy: f64,
+    pub trace: Option<PsheaTrace>,
+}
+
+/// One job: state + completion signal + cancel flag. The flag is an
+/// `Arc` so the running [`AgentTask`] shares the very same bool
+/// `agent_cancel` flips — no snapshot can desync.
+pub struct JobSlot {
+    pub state: Mutex<JobState>,
+    pub done: Condvar,
+    pub cancel: Arc<AtomicBool>,
+}
+
+/// Finished jobs kept for late `agent_status`/`agent_result` readers
+/// before the registry starts evicting the oldest ones — without a cap a
+/// long-running server would accumulate every past job's full round log
+/// and trace forever.
+const MAX_FINISHED_JOBS: usize = 64;
+
+/// Registry of agent jobs on one serving process.
+#[derive(Default)]
+pub struct JobRegistry {
+    jobs: Mutex<HashMap<String, Arc<JobSlot>>>,
+    next: AtomicU64,
+}
+
+impl JobRegistry {
+    pub fn new() -> JobRegistry {
+        JobRegistry::default()
+    }
+
+    pub fn create(&self, strategies: &[String]) -> (String, Arc<JobSlot>) {
+        let seq = self.next.fetch_add(1, Ordering::Relaxed);
+        let id = format!("job-{seq}");
+        let slot = Arc::new(JobSlot {
+            state: Mutex::new(JobState {
+                status: JobStatus::Running,
+                strategies: strategies.to_vec(),
+                live: strategies.to_vec(),
+                eliminated: vec![],
+                records: vec![],
+                rounds: 0,
+                budget_spent: 0,
+                best_accuracy: 0.0,
+                trace: None,
+            }),
+            done: Condvar::new(),
+            cancel: Arc::new(AtomicBool::new(false)),
+        });
+        let mut jobs = self.jobs.lock().unwrap();
+        jobs.insert(id.clone(), slot.clone());
+        // evict the oldest *finished* jobs beyond the cap (ids carry the
+        // monotonic sequence number; running jobs are never evicted)
+        if jobs.len() > MAX_FINISHED_JOBS {
+            let mut finished: Vec<(u64, String)> = jobs
+                .iter()
+                .filter(|(_, s)| s.state.lock().unwrap().status != JobStatus::Running)
+                .filter_map(|(k, _)| {
+                    k.strip_prefix("job-").and_then(|n| n.parse::<u64>().ok()).map(|n| (n, k.clone()))
+                })
+                .collect();
+            finished.sort_unstable_by_key(|(n, _)| *n);
+            let excess = jobs.len().saturating_sub(MAX_FINISHED_JOBS);
+            for (_, k) in finished.into_iter().take(excess) {
+                jobs.remove(&k);
+            }
+        }
+        drop(jobs);
+        (id, slot)
+    }
+
+    pub fn get(&self, id: &str) -> Result<Arc<JobSlot>, String> {
+        self.jobs
+            .lock()
+            .unwrap()
+            .get(id)
+            .cloned()
+            .ok_or_else(|| format!("unknown job '{id}'"))
+    }
+
+    /// Mark a job failed by id — the spawn-failure path, where the slot
+    /// `Arc` was consumed by the never-run thread closure. Without this a
+    /// failed spawn would leave a ghost job `running` forever (and
+    /// eviction never removes running jobs).
+    pub fn fail_orphan(&self, id: &str, metrics: &Registry, err: &str) {
+        if let Ok(slot) = self.get(id) {
+            fail(&slot, metrics, format!("job thread spawn failed: {err}"));
+        }
+    }
+}
+
+/// Observer publishing loop progress into the slot + `agent.*` metrics.
+struct SlotObserver<'a> {
+    slot: &'a JobSlot,
+    metrics: &'a Registry,
+    round_started: Instant,
+}
+
+impl PsheaObserver for SlotObserver<'_> {
+    fn on_record(&mut self, rec: &RoundRecord) {
+        let mut s = self.slot.state.lock().unwrap();
+        s.best_accuracy = s.best_accuracy.max(rec.accuracy);
+        s.records.push(rec.clone());
+    }
+
+    fn on_eliminated(&mut self, strategy: &str, round: usize, predicted: f64, observed: f64) {
+        let mut s = self.slot.state.lock().unwrap();
+        if let Some(r) = s
+            .records
+            .iter_mut()
+            .rev()
+            .find(|r| r.round == round && r.strategy == strategy)
+        {
+            r.eliminated = true;
+        }
+        s.live.retain(|x| x != strategy);
+        s.eliminated.push(EliminatedArm {
+            strategy: strategy.to_string(),
+            round,
+            predicted,
+            observed,
+        });
+        self.metrics.counter("agent.eliminations").fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn on_round(&mut self, round: usize, live: &[String], total_budget: usize, a_max: f64) {
+        let mut s = self.slot.state.lock().unwrap();
+        let delta = total_budget.saturating_sub(s.budget_spent);
+        s.rounds = round + 1;
+        s.budget_spent = total_budget;
+        s.best_accuracy = s.best_accuracy.max(a_max);
+        s.live = live.to_vec();
+        drop(s);
+        self.metrics.meter("agent.labels").add(delta as u64);
+        self.metrics.counter("agent.rounds").fetch_add(1, Ordering::Relaxed);
+        self.metrics.counter("agent.live_arms").store(live.len() as u64, Ordering::Relaxed);
+        self.metrics.time("agent.round", self.round_started.elapsed());
+        self.round_started = Instant::now();
+    }
+}
+
+/// Mark a job failed before its task ever ran (e.g. session scan failed).
+pub fn fail(slot: &JobSlot, metrics: &Registry, err: String) {
+    let mut s = slot.state.lock().unwrap();
+    s.status = JobStatus::Failed(err);
+    metrics.counter("agent.jobs_failed").fetch_add(1, Ordering::Relaxed);
+    slot.done.notify_all();
+}
+
+/// Run Algorithm 1 for `slot` on `task`, publishing progress as it goes.
+/// Called on the job's background thread; classifies the outcome via the
+/// slot's cancel flag and signals completion.
+pub fn drive<S: ArmSelect>(
+    slot: &JobSlot,
+    mut task: AgentTask<S>,
+    strategies: &[String],
+    cfg: &PsheaConfig,
+    metrics: &Registry,
+) {
+    metrics.counter("agent.jobs_started").fetch_add(1, Ordering::Relaxed);
+    let outcome = {
+        let mut obs = SlotObserver { slot, metrics, round_started: Instant::now() };
+        run_pshea_observed(&mut task, strategies, cfg, &mut obs)
+    };
+    let mut s = slot.state.lock().unwrap();
+    match outcome {
+        Ok(trace) => {
+            s.rounds = trace.rounds;
+            s.budget_spent = trace.total_budget;
+            s.best_accuracy = trace.best_accuracy;
+            s.live = trace.survivors.clone();
+            s.records = trace.records.clone();
+            s.status = JobStatus::Done;
+            s.trace = Some(trace);
+            metrics.counter("agent.jobs_done").fetch_add(1, Ordering::Relaxed);
+        }
+        Err(e) => {
+            if slot.cancel.load(Ordering::SeqCst) {
+                s.status = JobStatus::Cancelled;
+                metrics.counter("agent.jobs_cancelled").fetch_add(1, Ordering::Relaxed);
+            } else {
+                s.status = JobStatus::Failed(e.to_string());
+                metrics.counter("agent.jobs_failed").fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    drop(s);
+    slot.done.notify_all();
+}
+
+/// Block until the job leaves `Running` (or `wait` elapses).
+pub fn wait_done(slot: &JobSlot, wait: Duration) -> Result<(), String> {
+    let deadline = Instant::now() + wait;
+    let mut s = slot.state.lock().unwrap();
+    while s.status == JobStatus::Running {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return Err("agent_result timed out (job still running)".into());
+        }
+        let (guard, _) = slot.done.wait_timeout(s, left).unwrap();
+        s = guard;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Wire forms: config, records, traces, and the shared RPC handlers.
+// ---------------------------------------------------------------------------
+
+fn str_field(v: &Value, key: &str) -> Result<String, String> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing string param '{key}'"))
+}
+
+pub fn stop_to_str(s: StopReason) -> &'static str {
+    match s {
+        StopReason::TargetReached => "target_reached",
+        StopReason::BudgetExhausted => "budget_exhausted",
+        StopReason::Converged => "converged",
+        StopReason::RoundLimit => "round_limit",
+        StopReason::PoolExhausted => "pool_exhausted",
+    }
+}
+
+pub fn stop_from_str(s: &str) -> Option<StopReason> {
+    match s {
+        "target_reached" => Some(StopReason::TargetReached),
+        "budget_exhausted" => Some(StopReason::BudgetExhausted),
+        "converged" => Some(StopReason::Converged),
+        "round_limit" => Some(StopReason::RoundLimit),
+        "pool_exhausted" => Some(StopReason::PoolExhausted),
+        _ => None,
+    }
+}
+
+pub fn config_to_value(cfg: &PsheaConfig) -> Value {
+    let mut m = Map::new();
+    m.insert("target_accuracy", Value::Number(cfg.target_accuracy));
+    m.insert("max_budget", Value::from(cfg.max_budget));
+    m.insert("round_budget", Value::from(cfg.round_budget));
+    m.insert("converge_rounds", Value::from(cfg.converge_rounds));
+    m.insert("converge_eps", Value::Number(cfg.converge_eps));
+    m.insert("max_rounds", Value::from(cfg.max_rounds));
+    m.insert("min_history", Value::from(cfg.min_history));
+    if let Some(a0) = cfg.initial_accuracy {
+        m.insert("initial_accuracy", Value::Number(a0));
+    }
+    Value::Object(m)
+}
+
+/// Overlay RPC-supplied knobs onto `base` (the server's `[agent]` config
+/// defaults). Absent fields keep the defaults; present fields must have
+/// the right type.
+pub fn config_from_value(mut base: PsheaConfig, v: Option<&Value>) -> Result<PsheaConfig, String> {
+    let Some(v) = v else { return Ok(base) };
+    if v.is_null() {
+        return Ok(base);
+    }
+    if v.as_object().is_none() {
+        return Err("agent config must be an object".into());
+    }
+    let f64_field = |key: &str| -> Result<Option<f64>, String> {
+        match v.get(key) {
+            None | Some(Value::Null) => Ok(None),
+            Some(x) => x
+                .as_f64()
+                .map(Some)
+                .ok_or_else(|| format!("agent config '{key}' must be a number")),
+        }
+    };
+    let usize_field = |key: &str| -> Result<Option<usize>, String> {
+        match v.get(key) {
+            None | Some(Value::Null) => Ok(None),
+            Some(x) => x
+                .as_usize()
+                .map(Some)
+                .ok_or_else(|| format!("agent config '{key}' must be a non-negative integer")),
+        }
+    };
+    if let Some(x) = f64_field("target_accuracy")? {
+        base.target_accuracy = x;
+    }
+    if let Some(x) = usize_field("max_budget")? {
+        base.max_budget = x;
+    }
+    if let Some(x) = usize_field("round_budget")? {
+        base.round_budget = x;
+    }
+    if let Some(x) = usize_field("converge_rounds")? {
+        base.converge_rounds = x;
+    }
+    if let Some(x) = f64_field("converge_eps")? {
+        base.converge_eps = x;
+    }
+    if let Some(x) = usize_field("max_rounds")? {
+        base.max_rounds = x;
+    }
+    if let Some(x) = usize_field("min_history")? {
+        base.min_history = x;
+    }
+    if let Some(x) = f64_field("initial_accuracy")? {
+        base.initial_accuracy = Some(x);
+    }
+    // same invariant the [active_learning.agent] config section enforces:
+    // the RPC entry point must not be able to overspend the cap that the
+    // config-file entry point guards (run_pshea stops *before* a round
+    // would exceed max_budget, so round 0 would otherwise run unchecked)
+    if base.round_budget == 0 || base.round_budget > base.max_budget {
+        return Err("agent config 'round_budget' must be in [1, max_budget]".into());
+    }
+    Ok(base)
+}
+
+pub fn record_to_value(r: &RoundRecord) -> Value {
+    let mut m = Map::new();
+    m.insert("round", Value::from(r.round));
+    m.insert("strategy", Value::from(r.strategy.clone()));
+    m.insert("budget_spent", Value::from(r.budget_spent));
+    m.insert("accuracy", Value::Number(r.accuracy));
+    match r.predicted_next {
+        Some(p) => m.insert("predicted_next", Value::Number(p)),
+        None => m.insert("predicted_next", Value::Null),
+    }
+    m.insert("eliminated", Value::Bool(r.eliminated));
+    Value::Object(m)
+}
+
+pub fn record_from_value(v: &Value) -> Result<RoundRecord, String> {
+    Ok(RoundRecord {
+        round: v.get("round").and_then(Value::as_usize).ok_or("record missing round")?,
+        strategy: str_field(v, "strategy")?,
+        budget_spent: v
+            .get("budget_spent")
+            .and_then(Value::as_usize)
+            .ok_or("record missing budget_spent")?,
+        accuracy: v
+            .get("accuracy")
+            .and_then(Value::as_f64)
+            .ok_or("record missing accuracy")?,
+        predicted_next: v.get("predicted_next").and_then(Value::as_f64),
+        eliminated: v.get("eliminated").and_then(Value::as_bool).unwrap_or(false),
+    })
+}
+
+/// The `agent_status` reply shape (also embedded in `agent_result`).
+pub fn status_value(job_id: &str, s: &JobState) -> Value {
+    let mut m = Map::new();
+    m.insert("job", Value::from(job_id));
+    m.insert("status", Value::from(s.status.as_string()));
+    m.insert("rounds", Value::from(s.rounds));
+    m.insert("budget_spent", Value::from(s.budget_spent));
+    m.insert("best_accuracy", Value::Number(s.best_accuracy));
+    m.insert(
+        "live",
+        Value::Array(s.live.iter().map(|x| Value::from(x.clone())).collect()),
+    );
+    m.insert(
+        "eliminated",
+        Value::Array(
+            s.eliminated
+                .iter()
+                .map(|e| {
+                    let mut em = Map::new();
+                    em.insert("strategy", Value::from(e.strategy.clone()));
+                    em.insert("round", Value::from(e.round));
+                    em.insert("predicted", Value::Number(e.predicted));
+                    em.insert("observed", Value::Number(e.observed));
+                    Value::Object(em)
+                })
+                .collect(),
+        ),
+    );
+    m.insert(
+        "records",
+        Value::Array(s.records.iter().map(record_to_value).collect()),
+    );
+    Value::Object(m)
+}
+
+/// The `agent_result` reply: status fields + the completed trace.
+fn result_value(job_id: &str, s: &JobState) -> Result<Value, String> {
+    let trace = s.trace.as_ref().ok_or("job finished without a trace")?;
+    let mut m = match status_value(job_id, s) {
+        Value::Object(m) => m,
+        _ => Map::new(),
+    };
+    m.insert(
+        "survivors",
+        Value::Array(trace.survivors.iter().map(|x| Value::from(x.clone())).collect()),
+    );
+    m.insert("stop", Value::from(stop_to_str(trace.stop)));
+    m.insert("total_budget", Value::from(trace.total_budget));
+    m.insert(
+        "recommendation",
+        trace.recommendation().map(Value::from).unwrap_or(Value::Null),
+    );
+    Ok(Value::Object(m))
+}
+
+/// Parse an `agent_result` reply back into a [`PsheaTrace`] (client side).
+pub fn trace_from_value(v: &Value) -> Result<PsheaTrace, String> {
+    let records = v
+        .get("records")
+        .and_then(Value::as_array)
+        .ok_or("agent result missing records")?
+        .iter()
+        .map(record_from_value)
+        .collect::<Result<Vec<_>, _>>()?;
+    let survivors = v
+        .get("survivors")
+        .and_then(Value::as_array)
+        .ok_or("agent result missing survivors")?
+        .iter()
+        .map(|x| x.as_str().map(str::to_string).ok_or_else(|| "bad survivor".to_string()))
+        .collect::<Result<Vec<_>, _>>()?;
+    let stop = v
+        .get("stop")
+        .and_then(Value::as_str)
+        .and_then(stop_from_str)
+        .ok_or("agent result missing stop reason")?;
+    Ok(PsheaTrace {
+        records,
+        survivors,
+        stop,
+        total_budget: v
+            .get("total_budget")
+            .and_then(Value::as_usize)
+            .ok_or("agent result missing total_budget")?,
+        best_accuracy: v.get("best_accuracy").and_then(Value::as_f64).unwrap_or(0.0),
+        rounds: v.get("rounds").and_then(Value::as_usize).unwrap_or(0),
+    })
+}
+
+/// Shared `agent_status` handler.
+pub fn rpc_status(reg: &JobRegistry, params: &Value) -> Result<Value, String> {
+    let id = str_field(params, "job")?;
+    let slot = reg.get(&id)?;
+    let s = slot.state.lock().unwrap();
+    Ok(status_value(&id, &s))
+}
+
+/// Shared `agent_result` handler: blocks until the job completes (or
+/// `wait_ms` elapses), then returns the trace — or an error for a
+/// cancelled/failed job.
+pub fn rpc_result(reg: &JobRegistry, params: &Value) -> Result<Value, String> {
+    let id = str_field(params, "job")?;
+    let wait_ms = params.get("wait_ms").and_then(Value::as_usize).unwrap_or(600_000) as u64;
+    let slot = reg.get(&id)?;
+    wait_done(&slot, Duration::from_millis(wait_ms))?;
+    let s = slot.state.lock().unwrap();
+    match &s.status {
+        JobStatus::Done => result_value(&id, &s),
+        other => Err(format!("agent job {id} is {}", other.as_string())),
+    }
+}
+
+/// Shared `agent_cancel` handler. Returns whether the job was still
+/// running when the flag was raised; labeling spend stops at the next
+/// round boundary.
+pub fn rpc_cancel(reg: &JobRegistry, params: &Value) -> Result<Value, String> {
+    let id = str_field(params, "job")?;
+    let slot = reg.get(&id)?;
+    slot.cancel.store(true, Ordering::SeqCst);
+    let was_running = slot.state.lock().unwrap().status == JobStatus::Running;
+    let mut m = Map::new();
+    m.insert("job", Value::from(id));
+    m.insert("cancelled", Value::Bool(was_running));
+    Ok(Value::Object(m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::HostBackend;
+    use crate::util::rng::Rng;
+
+    /// Selector over a fixed in-memory pool: scores under the arm head,
+    /// exactly like the served selectors, so AgentTask semantics are
+    /// testable without a server.
+    struct PoolSelect {
+        pool_emb: Mat,
+        init_emb: Mat,
+        backend: Arc<dyn ComputeBackend>,
+    }
+
+    impl ArmSelect for PoolSelect {
+        fn select_arm(
+            &mut self,
+            strategy: &str,
+            budget: usize,
+            head: &LinearHead,
+            exclude: &[usize],
+            arm_labeled: &Mat,
+            seed: u64,
+        ) -> Result<Vec<Picked>, String> {
+            let strat = crate::strategies::by_name(strategy)
+                .ok_or_else(|| format!("unknown strategy '{strategy}'"))?;
+            let excl: std::collections::HashSet<usize> = exclude.iter().copied().collect();
+            let ok_rows: Vec<usize> =
+                (0..self.pool_emb.rows()).filter(|i| !excl.contains(i)).collect();
+            let cand_emb = self.pool_emb.gather_rows(&ok_rows);
+            let logits = self
+                .backend
+                .eval_logits(&cand_emb, &head.w, &head.b)
+                .map_err(|e| e.to_string())?;
+            let scores = self.backend.scores(&logits).map_err(|e| e.to_string())?;
+            let labeled = if arm_labeled.rows() == 0 {
+                self.init_emb.clone()
+            } else {
+                self.init_emb.vstack(arm_labeled)
+            };
+            let ctx = crate::strategies::SelectCtx {
+                scores: &scores,
+                embeddings: &cand_emb,
+                labeled: &labeled,
+                backend: self.backend.as_ref(),
+                seed,
+            };
+            let picked = strat.select(&ctx, budget).map_err(|e| e.to_string())?;
+            Ok(picked
+                .into_iter()
+                .map(|rel| (ok_rows[rel], cand_emb.row(rel).to_vec()))
+                .collect())
+        }
+    }
+
+    fn toy(seed: u64) -> (Mat, Vec<u8>, Mat, Vec<u8>, Mat, Vec<u8>, usize) {
+        let mut rng = Rng::new(seed);
+        let c = 4;
+        let d = 8;
+        let gen = |rng: &mut Rng, n: usize| -> (Mat, Vec<u8>) {
+            let mut m = Mat::zeros(n, d);
+            let mut labels = Vec::with_capacity(n);
+            for i in 0..n {
+                let class = rng.below(c);
+                labels.push(class as u8);
+                let row = m.row_mut(i);
+                for v in row.iter_mut() {
+                    *v = 0.4 * rng.normal_f32();
+                }
+                row[class] += 2.0;
+            }
+            (m, labels)
+        };
+        let (init_emb, init_labels) = gen(&mut rng, 16);
+        let (pool_emb, pool_labels) = gen(&mut rng, 120);
+        let (test_emb, test_labels) = gen(&mut rng, 80);
+        (init_emb, init_labels, pool_emb, pool_labels, test_emb, test_labels, c)
+    }
+
+    fn task(seed: u64, cancel: Option<Arc<AtomicBool>>) -> AgentTask<PoolSelect> {
+        let (init_emb, init_labels, pool_emb, pool_labels, test_emb, test_labels, c) =
+            toy(seed);
+        let backend: Arc<dyn ComputeBackend> = Arc::new(HostBackend::new());
+        let n = pool_emb.rows();
+        let sel = PoolSelect {
+            pool_emb,
+            init_emb: init_emb.clone(),
+            backend: backend.clone(),
+        };
+        AgentTask::new(
+            sel, backend, n, init_emb, init_labels, pool_labels, test_emb, test_labels,
+            c, seed, cancel,
+        )
+    }
+
+    fn quick_cfg(rounds: usize) -> PsheaConfig {
+        PsheaConfig {
+            target_accuracy: 1.1,
+            max_budget: 1_000_000,
+            round_budget: 10,
+            converge_rounds: 0,
+            converge_eps: 0.0,
+            max_rounds: rounds,
+            min_history: 2,
+            initial_accuracy: None,
+        }
+    }
+
+    #[test]
+    fn agent_task_matches_al_experiment_round_semantics() {
+        // Same data through AgentTask and sim::AlExperiment must produce
+        // identical accuracy sequences — the parity the remote tests rely
+        // on, pinned here without any server in the way.
+        let (init_emb, init_labels, pool_emb, pool_labels, test_emb, test_labels, c) =
+            toy(11);
+        let backend: Arc<dyn ComputeBackend> = Arc::new(HostBackend::new());
+        let oracle = Arc::new(crate::data::Oracle::from_labels(pool_labels.clone()));
+        let mut exp = crate::sim::AlExperiment::from_embeddings(
+            backend.clone(),
+            pool_emb.clone(),
+            (0..pool_emb.rows() as u32).collect(),
+            init_emb.clone(),
+            init_labels.clone(),
+            test_emb.clone(),
+            test_labels.clone(),
+            oracle,
+            c,
+            TrainConfig::default(),
+            11,
+        );
+        let mut t = task(11, None);
+        for strategy in ["least_confidence", "entropy"] {
+            for _ in 0..3 {
+                let a = t.run_round(strategy, 15).unwrap().unwrap();
+                let b = exp.run_round(strategy, 15).unwrap().unwrap();
+                assert_eq!(a, b, "{strategy}: AgentTask diverged from AlExperiment");
+            }
+        }
+    }
+
+    #[test]
+    fn drive_publishes_progress_and_completion() {
+        let reg = JobRegistry::new();
+        let strategies = vec!["least_confidence".to_string(), "random".to_string()];
+        let (id, slot) = reg.create(&strategies);
+        let metrics = Registry::new();
+        drive(&slot, task(3, None), &strategies, &quick_cfg(3), &metrics);
+        let s = slot.state.lock().unwrap();
+        assert_eq!(s.status, JobStatus::Done);
+        assert_eq!(s.rounds, 3);
+        assert!(s.budget_spent > 0);
+        assert!(s.trace.is_some());
+        // the wire round trip of the result preserves the trace
+        drop(s);
+        let v = rpc_result(&reg, &{
+            let mut m = Map::new();
+            m.insert("job", Value::from(id.clone()));
+            Value::Object(m)
+        })
+        .unwrap();
+        let trace = trace_from_value(&v).unwrap();
+        let s = slot.state.lock().unwrap();
+        let want = s.trace.as_ref().unwrap();
+        assert_eq!(trace.survivors, want.survivors);
+        assert_eq!(trace.stop, want.stop);
+        assert_eq!(trace.total_budget, want.total_budget);
+        assert_eq!(trace.records.len(), want.records.len());
+        for (a, b) in trace.records.iter().zip(&want.records) {
+            assert_eq!(a.strategy, b.strategy);
+            assert_eq!(a.eliminated, b.eliminated);
+            assert_eq!(a.accuracy, b.accuracy, "f64 must round-trip exactly");
+        }
+    }
+
+    #[test]
+    fn cancel_flag_stops_the_loop_as_cancelled() {
+        let reg = JobRegistry::new();
+        let strategies = vec!["entropy".to_string()];
+        let (_, slot) = reg.create(&strategies);
+        slot.cancel.store(true, Ordering::SeqCst);
+        let metrics = Registry::new();
+        let cancel = Some(slot.cancel.clone());
+        drive(&slot, task(5, cancel), &strategies, &quick_cfg(5), &metrics);
+        let s = slot.state.lock().unwrap();
+        assert_eq!(s.status, JobStatus::Cancelled);
+        assert_eq!(s.budget_spent, 0, "no labels after cancel");
+    }
+
+    #[test]
+    fn config_round_trips_and_validates() {
+        let cfg = PsheaConfig {
+            max_rounds: 7,
+            min_history: 2,
+            initial_accuracy: Some(0.5),
+            ..Default::default()
+        };
+        let v = config_to_value(&cfg);
+        let back = config_from_value(PsheaConfig::default(), Some(&v)).unwrap();
+        assert_eq!(back.max_rounds, 7);
+        assert_eq!(back.min_history, 2);
+        assert_eq!(back.initial_accuracy, Some(0.5));
+        assert_eq!(back.round_budget, cfg.round_budget);
+        // absent config keeps the defaults
+        let d = config_from_value(PsheaConfig::default(), None).unwrap();
+        assert_eq!(d.round_budget, PsheaConfig::default().round_budget);
+        // zero round budget rejected
+        let mut m = Map::new();
+        m.insert("round_budget", Value::from(0usize));
+        assert!(config_from_value(PsheaConfig::default(), Some(&Value::Object(m))).is_err());
+        // a round budget exceeding the cap would overspend max_budget on
+        // round 0 (the loop's guard only fires from round 1) — rejected,
+        // matching the [active_learning.agent] config validation
+        let mut m = Map::new();
+        m.insert("max_budget", Value::from(100usize));
+        m.insert("round_budget", Value::from(10_000usize));
+        assert!(config_from_value(PsheaConfig::default(), Some(&Value::Object(m))).is_err());
+    }
+
+    #[test]
+    fn registry_evicts_oldest_finished_jobs_beyond_cap() {
+        let reg = JobRegistry::new();
+        let strategies = vec!["entropy".to_string()];
+        let mut ids = Vec::new();
+        for _ in 0..(MAX_FINISHED_JOBS + 10) {
+            let (id, slot) = reg.create(&strategies);
+            slot.state.lock().unwrap().status = JobStatus::Done;
+            ids.push(id);
+        }
+        // the oldest finished jobs were evicted, the newest survive
+        assert!(reg.get(&ids[0]).is_err(), "oldest job should be evicted");
+        assert!(reg.get(ids.last().unwrap()).is_ok());
+        assert!(reg.jobs.lock().unwrap().len() <= MAX_FINISHED_JOBS);
+    }
+
+    #[test]
+    fn unknown_job_and_stop_reason_round_trip() {
+        let reg = JobRegistry::new();
+        let mut m = Map::new();
+        m.insert("job", Value::from("nope"));
+        let err = rpc_status(&reg, &Value::Object(m)).unwrap_err();
+        assert!(err.contains("unknown job"), "{err}");
+        for s in [
+            StopReason::TargetReached,
+            StopReason::BudgetExhausted,
+            StopReason::Converged,
+            StopReason::RoundLimit,
+            StopReason::PoolExhausted,
+        ] {
+            assert_eq!(stop_from_str(stop_to_str(s)), Some(s));
+        }
+    }
+}

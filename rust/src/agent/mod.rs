@@ -1,7 +1,21 @@
-//! The AL agent (paper §3.3): performance predictor + PSHEA controller.
+//! The AL agent (paper §3.3): performance predictor + PSHEA controller,
+//! plus the server-side job machinery that runs the loop as a service
+//! (DESIGN.md §Agent).
 
+pub mod job;
 mod predictor;
 mod pshea;
 
 pub use predictor::NegExpPredictor;
-pub use pshea::{AlTask, PsheaConfig, PsheaTrace, RoundRecord, StopReason, run_pshea};
+pub use pshea::{
+    run_pshea, run_pshea_observed, AlTask, PsheaConfig, PsheaObserver, PsheaTrace,
+    RoundRecord, StopReason,
+};
+
+/// Per-round strategy seed derivation. `sim::AlExperiment` (in-process)
+/// and the served agent job both derive their `SelectCtx` seed from the
+/// experiment seed and the arm's completed-round count through this one
+/// function — remote-vs-local PSHEA parity depends on it.
+pub fn arm_round_seed(base: u64, n_prev_rounds: u64) -> u64 {
+    base ^ n_prev_rounds.wrapping_mul(0x9E37_79B9)
+}

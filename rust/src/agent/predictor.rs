@@ -211,6 +211,114 @@ mod tests {
         assert!(NegExpPredictor::fit(&[], &[]).is_none());
     }
 
+    /// Noiseless curves identify their asymptote: the fitted `a_inf` is
+    /// what PSHEA ultimately ranks arms by, so recovery must hold across
+    /// the whole (a0, a_inf, k) range the loop sees.
+    #[test]
+    fn prop_recovers_asymptote_on_noiseless_curves() {
+        crate::util::prop::check("negexp-asymptote", 60, |rng| {
+            let a0 = 0.3 + 0.3 * rng.f64();
+            let a_inf = a0 + 0.15 + 0.35 * rng.f64();
+            let k = 0.001 + 0.002 * rng.f64();
+            let n = 5 + rng.below(4);
+            let xs: Vec<f64> = (0..n).map(|i| 500.0 * (i + 1) as f64).collect();
+            let ys = curve(a_inf, a0, k, &xs);
+            let p = NegExpPredictor::fit(&xs, &ys)
+                .ok_or_else(|| "fit failed".to_string())?;
+            prop_assert!(
+                (p.a_inf - a_inf).abs() < 0.05,
+                "a_inf {} want {a_inf} (a0 {a0} k {k} n {n})",
+                p.a_inf
+            );
+            Ok(())
+        });
+    }
+
+    /// Any monotone nondecreasing history fits to a nonnegative-rate
+    /// curve whose predictions are themselves monotone in `x` and bounded
+    /// by the asymptote.
+    #[test]
+    fn prop_predictions_monotone_for_monotone_histories() {
+        crate::util::prop::check("negexp-monotone", 60, |rng| {
+            let n = 3 + rng.below(6);
+            let mut y = 0.2 + 0.3 * rng.f64();
+            let mut ys = Vec::with_capacity(n);
+            for _ in 0..n {
+                ys.push(y);
+                y += rng.f64() * 0.25 * (0.95 - y).max(0.0);
+            }
+            let xs: Vec<f64> = (0..n).map(|i| 300.0 * (i + 1) as f64).collect();
+            let p = NegExpPredictor::fit(&xs, &ys)
+                .ok_or_else(|| "fit failed on monotone history".to_string())?;
+            prop_assert!(p.k >= 0.0, "negative rate {}", p.k);
+            let last = *xs.last().unwrap();
+            let mut prev = p.predict(last);
+            for step in 1..16 {
+                let cur = p.predict(last + 300.0 * step as f64);
+                prop_assert!(cur >= prev - 1e-9, "not monotone at step {step}");
+                prop_assert!(cur <= p.a_inf + 1e-9, "overshoots asymptote");
+                prev = cur;
+            }
+            Ok(())
+        });
+    }
+
+    /// Degenerate histories (constant, 2-point, arbitrary/decreasing)
+    /// never panic; when a fit comes back its predictions are finite and
+    /// sane.
+    #[test]
+    fn prop_degenerate_histories_never_panic() {
+        crate::util::prop::check("negexp-degenerate", 80, |rng| {
+            match rng.below(3) {
+                0 => {
+                    // constant history -> flat forecast at the constant
+                    let n = 2 + rng.below(6);
+                    let c = rng.f64();
+                    let xs: Vec<f64> = (0..n).map(|i| 100.0 * (i + 1) as f64).collect();
+                    let ys = vec![c; n];
+                    let p = NegExpPredictor::fit(&xs, &ys)
+                        .ok_or_else(|| "flat fit failed".to_string())?;
+                    prop_assert!(
+                        (p.predict(*xs.last().unwrap() + 500.0) - c).abs() < 1e-9,
+                        "flat history must predict flat"
+                    );
+                }
+                1 => {
+                    // 2 increasing points -> the fit passes through both
+                    let y0 = 0.2 + 0.4 * rng.f64();
+                    let y1 = y0 + 0.05 + 0.3 * rng.f64();
+                    let xs = [200.0, 700.0];
+                    let ys = [y0, y1];
+                    let p = NegExpPredictor::fit(&xs, &ys)
+                        .ok_or_else(|| "2-point fit failed".to_string())?;
+                    prop_assert!(
+                        (p.predict(xs[1]) - y1).abs() < 1e-6,
+                        "2-point fit not exact: {} vs {y1}",
+                        p.predict(xs[1])
+                    );
+                    let next = p.predict(1200.0);
+                    prop_assert!(next.is_finite() && (0.0..=2.0).contains(&next));
+                }
+                _ => {
+                    // arbitrary (possibly decreasing) history: fit may
+                    // decline, but must not panic, and any prediction it
+                    // does produce stays finite and bounded
+                    let n = 2 + rng.below(6);
+                    let xs: Vec<f64> = (0..n).map(|i| 100.0 * (i + 1) as f64).collect();
+                    let ys: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+                    if let Some(p) = NegExpPredictor::fit(&xs, &ys) {
+                        let next = p.predict(*xs.last().unwrap() + 300.0);
+                        prop_assert!(
+                            next.is_finite() && (-1.0..=2.0).contains(&next),
+                            "wild prediction {next} from {ys:?}"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn monotone_increasing_prediction() {
         let xs = [1000.0, 2000.0, 3000.0, 4000.0];

@@ -112,11 +112,39 @@ impl PsheaTrace {
     }
 }
 
+/// Mid-run hook into the loop: the served agent job (`agent/job.rs`)
+/// publishes progress through this so `agent_status` can report the round
+/// log, live/eliminated arms, and budget while the job runs. All methods
+/// default to no-ops; `()` is the null observer `run_pshea` uses.
+pub trait PsheaObserver {
+    /// One arm finished one round (the record is not yet marked
+    /// eliminated — elimination is decided at end of round).
+    fn on_record(&mut self, _rec: &RoundRecord) {}
+    /// An arm was eliminated at the end of `round`: `predicted` is the
+    /// forecast that killed it, `observed` its last measured accuracy.
+    fn on_eliminated(&mut self, _strategy: &str, _round: usize, _predicted: f64, _observed: f64) {
+    }
+    /// A full round completed with `live` arms still in play.
+    fn on_round(&mut self, _round: usize, _live: &[String], _total_budget: usize, _a_max: f64) {}
+}
+
+impl PsheaObserver for () {}
+
 /// Run Algorithm 1 over `strategies` on `task`.
 pub fn run_pshea(
     task: &mut dyn AlTask,
     strategies: &[String],
     cfg: &PsheaConfig,
+) -> RtResult<PsheaTrace> {
+    run_pshea_observed(task, strategies, cfg, &mut ())
+}
+
+/// [`run_pshea`] with a progress observer (the agent-job entry point).
+pub fn run_pshea_observed(
+    task: &mut dyn AlTask,
+    strategies: &[String],
+    cfg: &PsheaConfig,
+    obs: &mut dyn PsheaObserver,
 ) -> RtResult<PsheaTrace> {
     assert!(!strategies.is_empty(), "need at least one candidate strategy");
     let mut live: Vec<String> = strategies.to_vec();
@@ -176,6 +204,7 @@ pub fn run_pshea(
                 predicted_next: pred,
                 eliminated: false,
             });
+            obs.on_record(records.last().unwrap());
         }
 
         // strategy-level early stopping (lines 22-24): drop the worst
@@ -197,9 +226,17 @@ pub fn run_pshea(
             {
                 rec.eliminated = true;
             }
+            let forecast = predicted
+                .iter()
+                .find(|(s, _)| *s == worst)
+                .map(|(_, p)| *p)
+                .unwrap_or(f64::NAN);
+            let observed = history[&worst].1.last().copied().unwrap_or(f64::NAN);
+            obs.on_eliminated(&worst, round, forecast, observed);
         }
 
         stall_rounds = if a_max - prev_a_max < cfg.converge_eps { stall_rounds + 1 } else { 0 };
+        obs.on_round(round, &live, total_budget, a_max);
         round += 1;
     }
 
@@ -375,6 +412,151 @@ mod tests {
         // flash's forecast saturates at ~0.75 while slow_start's keeps
         // climbing; the survivor must be slow_start.
         assert_eq!(trace.survivors, vec!["slow_start".to_string()]);
+    }
+
+    /// Full elimination order on crossing curves is pinned: the arm that
+    /// saturates lowest goes first even though it *currently* leads, then
+    /// the mid curve — refactors of Algorithm 1 cannot silently change
+    /// which forecast loses.
+    #[test]
+    fn crossing_curves_elimination_order_is_pinned() {
+        let mut task = CurveTask::new(&[
+            ("flash", 0.75, 0.70, 0.02), // leads early, saturates at 0.75
+            ("mid", 0.85, 0.55, 0.004),
+            ("slow_start", 0.95, 0.40, 0.0012), // trails early, wins late
+        ]);
+        let strategies: Vec<String> =
+            ["flash", "mid", "slow_start"].iter().map(|s| s.to_string()).collect();
+        let trace = run_pshea(&mut task, &strategies, &cfg(8)).unwrap();
+        let order: Vec<(usize, &str)> = trace
+            .records
+            .iter()
+            .filter(|r| r.eliminated)
+            .map(|r| (r.round, r.strategy.as_str()))
+            .collect();
+        assert_eq!(order, vec![(2, "flash"), (3, "mid")]);
+        assert_eq!(trace.survivors, vec!["slow_start".to_string()]);
+    }
+
+    /// `min_history` delays the first kill: with 5 required observations
+    /// no arm may be eliminated before round 4, and every earlier round
+    /// runs the full field.
+    #[test]
+    fn min_history_guard_delays_elimination() {
+        let mut task = CurveTask::new(&[
+            ("good", 0.95, 0.5, 0.002),
+            ("mid", 0.85, 0.5, 0.002),
+            ("bad", 0.70, 0.5, 0.002),
+        ]);
+        let strategies: Vec<String> =
+            ["good", "mid", "bad"].iter().map(|s| s.to_string()).collect();
+        let mut c = cfg(8);
+        c.min_history = 5;
+        let trace = run_pshea(&mut task, &strategies, &c).unwrap();
+        for r in 0..4 {
+            assert_eq!(trace.round(r).count(), 3, "round {r} lost an arm early");
+            assert!(
+                trace.round(r).all(|rec| !rec.eliminated),
+                "elimination before min_history at round {r}"
+            );
+        }
+        let elim4: Vec<&str> = trace
+            .round(4)
+            .filter(|r| r.eliminated)
+            .map(|r| r.strategy.as_str())
+            .collect();
+        assert_eq!(elim4, vec!["bad"]);
+    }
+
+    /// Algorithm 1 initializes `a_max = a_0`: a baseline that already
+    /// meets the target stops the loop before any budget is spent.
+    #[test]
+    fn initial_accuracy_meeting_target_spends_nothing() {
+        let mut task = CurveTask::new(&[("a", 0.9, 0.5, 0.001), ("b", 0.8, 0.5, 0.001)]);
+        let mut c = cfg(8);
+        c.target_accuracy = 0.95;
+        c.initial_accuracy = Some(0.97);
+        let strategies: Vec<String> = ["a", "b"].iter().map(|s| s.to_string()).collect();
+        let trace = run_pshea(&mut task, &strategies, &c).unwrap();
+        assert_eq!(trace.stop, StopReason::TargetReached);
+        assert_eq!(trace.rounds, 0);
+        assert_eq!(trace.total_budget, 0);
+        assert!(trace.records.is_empty());
+        assert!((trace.best_accuracy - 0.97).abs() < 1e-12);
+        // no history -> survivor ranking is the stable input order
+        assert_eq!(trace.survivors, strategies);
+    }
+
+    /// Budget exhaustion with identical arms: the stop fires before the
+    /// over-budget round starts, and equal accuracies keep the *input*
+    /// order (stable sort) — names chosen so alphabetical order would
+    /// differ and expose a tie-break regression.
+    #[test]
+    fn budget_exhaustion_tie_break_keeps_input_order() {
+        let mut task =
+            CurveTask::new(&[("zeta", 0.7, 0.7, 0.0), ("alpha", 0.7, 0.7, 0.0)]);
+        let strategies: Vec<String> =
+            ["zeta", "alpha"].iter().map(|s| s.to_string()).collect();
+        let mut c = cfg(0);
+        c.max_budget = 2500; // 2 rounds of 2x500 fit; the 3rd would hit 3000
+        let trace = run_pshea(&mut task, &strategies, &c).unwrap();
+        assert_eq!(trace.stop, StopReason::BudgetExhausted);
+        assert_eq!(trace.rounds, 2);
+        assert_eq!(trace.total_budget, 2000);
+        assert!(trace.total_budget <= c.max_budget);
+        assert_eq!(trace.survivors, strategies, "tie must keep input order");
+    }
+
+    /// The observer sees the same story the trace tells: every record,
+    /// every elimination (with the killing forecast), every round.
+    #[test]
+    fn observer_mirrors_trace() {
+        #[derive(Default)]
+        struct Spy {
+            records: usize,
+            eliminated: Vec<(String, usize)>,
+            rounds: Vec<usize>,
+            last_budget: usize,
+        }
+        impl PsheaObserver for Spy {
+            fn on_record(&mut self, _rec: &RoundRecord) {
+                self.records += 1;
+            }
+            fn on_eliminated(
+                &mut self,
+                strategy: &str,
+                round: usize,
+                predicted: f64,
+                observed: f64,
+            ) {
+                assert!(predicted.is_finite() && observed.is_finite());
+                self.eliminated.push((strategy.to_string(), round));
+            }
+            fn on_round(&mut self, round: usize, live: &[String], total: usize, _a: f64) {
+                assert!(!live.is_empty());
+                self.rounds.push(round);
+                self.last_budget = total;
+            }
+        }
+        let mut task = CurveTask::new(&[
+            ("good", 0.95, 0.5, 0.002),
+            ("bad", 0.70, 0.5, 0.002),
+        ]);
+        let strategies: Vec<String> =
+            ["good", "bad"].iter().map(|s| s.to_string()).collect();
+        let mut spy = Spy::default();
+        let trace =
+            run_pshea_observed(&mut task, &strategies, &cfg(6), &mut spy).unwrap();
+        assert_eq!(spy.records, trace.records.len());
+        let want_elim: Vec<(String, usize)> = trace
+            .records
+            .iter()
+            .filter(|r| r.eliminated)
+            .map(|r| (r.strategy.clone(), r.round))
+            .collect();
+        assert_eq!(spy.eliminated, want_elim);
+        assert_eq!(spy.rounds, (0..trace.rounds).collect::<Vec<_>>());
+        assert_eq!(spy.last_budget, trace.total_budget);
     }
 
     #[test]

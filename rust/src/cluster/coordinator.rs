@@ -19,22 +19,24 @@
 //! Per-shard scan timings land in `cluster.shard{i}.scan` and the
 //! max-minus-min spread in the `cluster.scan.straggler_ms` gauge.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::agent::job::{self, AgentTask, ArmSelect, JobRegistry, Picked};
 use crate::config::AlaasConfig;
 use crate::json::{Map, Value};
 use crate::metrics::Registry;
 use crate::runtime::backend::ComputeBackend;
 use crate::server::rpc::{self, RpcError};
-use crate::server::server::{parse_init_labels, str_param};
+use crate::server::server::{parse_agent_start, parse_init_labels, str_param};
 use crate::server::wire::{self, Payload, WireMode};
 use crate::server::SELECT_SEED;
 use crate::store::{Manifest, SampleRef};
 use crate::strategies::{self, SelectCtx};
+use crate::trainer::LinearHead;
 use crate::util::mat::Mat;
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
@@ -74,6 +76,9 @@ struct ClusterSession {
     /// Labeled-set embeddings, fetched once from a worker for the refine
     /// protocol.
     init_emb: Option<Mat>,
+    /// Test-split embeddings, fetched once from a worker for agent-job
+    /// evaluation (the test split is replicated to every shard).
+    test_emb: Option<Mat>,
 }
 
 struct CoordState {
@@ -87,6 +92,8 @@ struct CoordState {
     /// absent = optimistic binary; `Json` after a peer refused or garbled
     /// a v2 frame. Cleared when the address (re-)registers.
     wire_modes: Mutex<HashMap<String, WireMode>>,
+    /// Background PSHEA jobs fanning out over worker shards (§Agent).
+    jobs: JobRegistry,
     shutdown: AtomicBool,
 }
 
@@ -118,6 +125,7 @@ impl Coordinator {
             sessions: Mutex::new(HashMap::new()),
             push_epoch: std::sync::atomic::AtomicU64::new(0),
             wire_modes: Mutex::new(HashMap::new()),
+            jobs: JobRegistry::new(),
             shutdown: AtomicBool::new(false),
         });
         let accept_state = state.clone();
@@ -209,6 +217,12 @@ fn dispatch(
         ))),
         "cache_stats" => cache_stats(state).map(Payload::json),
         "cluster_status" => Ok(Payload::json(cluster_status(state))),
+        // agent-as-a-service job family (DESIGN.md §Agent): same surface
+        // as the single server, arms fan out over the worker shards
+        "agent_start" => agent_start(state, params).map(Payload::json),
+        "agent_status" => job::rpc_status(&state.jobs, &params.value).map(Payload::json),
+        "agent_result" => job::rpc_result(&state.jobs, &params.value).map(Payload::json),
+        "agent_cancel" => job::rpc_cancel(&state.jobs, &params.value).map(Payload::json),
         other => Err(format!("unknown method '{other}'")),
     }
 }
@@ -426,7 +440,12 @@ fn shard_session_id(session: &str, epoch: u64, shard: usize) -> String {
 }
 
 /// Sub-manifest for one shard: the full init split (every worker
-/// fine-tunes the identical head) plus the shard's pool slice.
+/// fine-tunes the identical head) plus the shard's pool slice. Shard 0
+/// additionally carries the full test split — the agent job evaluates
+/// arm accuracy on it (§Agent), and one scanned copy suffices; both
+/// shard policies put pool index 0 on shard 0, so shard 0 is non-empty
+/// whenever the pool is, and a re-dispatch of shard 0 re-pushes the test
+/// split with it.
 fn sub_manifest(m: &Manifest, indices: &[usize], shard_idx: usize) -> Manifest {
     Manifest {
         name: format!("{}#shard{shard_idx}", m.name),
@@ -434,7 +453,7 @@ fn sub_manifest(m: &Manifest, indices: &[usize], shard_idx: usize) -> Manifest {
         img_dim: m.img_dim,
         init: m.init.clone(),
         pool: indices.iter().map(|&i| m.pool[i].clone()).collect(),
-        test: vec![],
+        test: if shard_idx == 0 { m.test.clone() } else { vec![] },
     }
 }
 
@@ -586,6 +605,7 @@ fn push_data(state: &Arc<CoordState>, params: &Payload) -> Result<Value, String>
             epoch,
             shards,
             init_emb: None,
+            test_emb: None,
         })),
     );
     let replaced = previous.is_some();
@@ -656,6 +676,7 @@ struct ShardReply {
     failed_global: Vec<usize>,
     scan_ms: f64,
     init_emb: Option<Mat>,
+    test_emb: Option<Mat>,
     /// Slot that finally served the shard (differs from the assignment
     /// after a re-dispatch).
     worker: usize,
@@ -668,37 +689,65 @@ struct ShardJob {
     budget: usize,
     with_embeddings: bool,
     with_init_emb: bool,
+    with_test_emb: bool,
+    /// Agent-path extras (§Agent): absent/empty on the plain query path.
+    seed: Option<u64>,
+    /// Shard-local indices the arm already labeled.
+    exclude: Vec<usize>,
+    /// The arm's current head (rides as tensor sections on the v2 wire).
+    head: Option<LinearHead>,
+    /// The arm's labeled embeddings (extra labeled context for refine).
+    labeled_emb: Option<Mat>,
 }
 
-/// Run `select_shard` for one shard, re-dispatching to a survivor (fresh
-/// `scan_shard` + `select_shard`) when the owning worker is unreachable.
+impl ShardJob {
+    fn plain(
+        shard: usize,
+        indices: Vec<usize>,
+        worker: usize,
+        budget: usize,
+        with_embeddings: bool,
+        with_init_emb: bool,
+    ) -> ShardJob {
+        ShardJob {
+            shard,
+            indices,
+            worker,
+            budget,
+            with_embeddings,
+            with_init_emb,
+            with_test_emb: false,
+            seed: None,
+            exclude: vec![],
+            head: None,
+            labeled_emb: None,
+        }
+    }
+}
+
+/// Call one worker-facing method for a shard, walking survivors on
+/// transport failure and re-pushing the shard (`scan_shard`) on `unknown
+/// session` — the shared re-dispatch skeleton for `select_shard` and
+/// `fetch_rows`. Returns the reply plus the slot that finally served it.
 #[allow(clippy::too_many_arguments)]
-fn select_on_shard(
+fn call_shard_redispatch(
     state: &CoordState,
     session: &str,
     epoch: u64,
-    job: &ShardJob,
+    shard_idx: usize,
+    indices: &[usize],
+    start_slot: usize,
     manifest: &Manifest,
     init_labels: Option<&[u8]>,
-    strategy: &str,
-    wait_ms: u64,
-) -> Result<ShardReply, String> {
-    let mut p = Map::new();
-    p.insert("session", Value::from(shard_session_id(session, epoch, job.shard)));
-    p.insert("budget", Value::from(job.budget));
-    if job.budget > 0 {
-        p.insert("strategy", Value::from(strategy));
-    }
-    p.insert("with_embeddings", Value::Bool(job.with_embeddings));
-    p.insert("with_init_emb", Value::Bool(job.with_init_emb));
-    p.insert("wait_ms", Value::from(wait_ms as usize));
-    let params = Payload::json(Value::Object(p));
-
-    let mut slot = job.worker;
+    method: &str,
+    params: &Payload,
+    read_timeout: Duration,
+) -> Result<(Payload, usize), String> {
+    let mut slot = start_slot;
     let mut last_err = String::from("no live workers");
     // first attempt on the assigned worker, then walk survivors; a worker
     // that doesn't know the session (never saw the shard, or restarted)
-    // gets a fresh scan_shard push before selecting.
+    // gets a fresh scan_shard push before serving.
     for _attempt in 0..=live_slots(state).len() {
         let Some(addr) = worker_addr(state, slot) else {
             match next_live_slot(state, slot) {
@@ -709,8 +758,7 @@ fn select_on_shard(
                 None => break,
             }
         };
-        let select_timeout = select_rpc_timeout(wait_ms);
-        let resp = match call_worker(state, &addr, "select_shard", &params, select_timeout) {
+        let resp = match call_worker(state, &addr, method, params, read_timeout) {
             Err(RpcError::Remote(e)) if e.contains("unknown session") => {
                 state
                     .deps
@@ -719,34 +767,24 @@ fn select_on_shard(
                     .fetch_add(1, Ordering::Relaxed);
                 crate::log_warn!(
                     "cluster",
-                    "re-dispatching shard {} of '{session}' to {addr}",
-                    job.shard
+                    "re-dispatching shard {shard_idx} of '{session}' to {addr}"
                 );
                 call_worker(
                     state,
                     &addr,
                     "scan_shard",
-                    &scan_shard_params(
-                        session,
-                        epoch,
-                        job.shard,
-                        manifest,
-                        &job.indices,
-                        init_labels,
-                    ),
+                    &scan_shard_params(session, epoch, shard_idx, manifest, indices, init_labels),
                     FAST_RPC_TIMEOUT,
                 )
-                .and_then(|_| {
-                    call_worker(state, &addr, "select_shard", &params, select_timeout)
-                })
+                .and_then(|_| call_worker(state, &addr, method, params, read_timeout))
             }
             other => other,
         };
         match resp {
-            Ok(v) => return decode_shard_reply(v, job, slot),
+            Ok(v) => return Ok((v, slot)),
             Err(RpcError::Remote(e)) => {
                 // the worker is alive; the request itself is bad
-                return Err(format!("shard {}: {e}", job.shard));
+                return Err(format!("shard {shard_idx}: {e}"));
             }
             Err(e) => {
                 last_err = format!("worker {addr}: {e}");
@@ -758,7 +796,69 @@ fn select_on_shard(
             }
         }
     }
-    Err(format!("shard {}: no live worker served it ({last_err})", job.shard))
+    Err(format!("shard {shard_idx}: no live worker served it ({last_err})"))
+}
+
+/// Run `select_shard` for one shard, re-dispatching to a survivor when
+/// the owning worker is unreachable.
+#[allow(clippy::too_many_arguments)]
+fn select_on_shard(
+    state: &CoordState,
+    session: &str,
+    epoch: u64,
+    job: &ShardJob,
+    manifest: &Manifest,
+    init_labels: Option<&[u8]>,
+    strategy: &str,
+    wait_ms: u64,
+) -> Result<ShardReply, String> {
+    let mut params = Payload::default();
+    let mut p = Map::new();
+    p.insert("session", Value::from(shard_session_id(session, epoch, job.shard)));
+    p.insert("budget", Value::from(job.budget));
+    if job.budget > 0 {
+        p.insert("strategy", Value::from(strategy));
+    }
+    p.insert("with_embeddings", Value::Bool(job.with_embeddings));
+    p.insert("with_init_emb", Value::Bool(job.with_init_emb));
+    if job.with_test_emb {
+        p.insert("with_test_emb", Value::Bool(true));
+    }
+    p.insert("wait_ms", Value::from(wait_ms as usize));
+    if let Some(seed) = job.seed {
+        p.insert("seed", Value::from(seed));
+    }
+    if !job.exclude.is_empty() {
+        p.insert(
+            "exclude",
+            Value::Array(job.exclude.iter().map(|&i| Value::from(i)).collect()),
+        );
+    }
+    if let Some(h) = &job.head {
+        // tensor placeholders: raw f32 sections on the binary wire,
+        // inlined {rows, cols, data} objects on a JSON retry
+        p.insert("head_w", params.stash_mat(h.w.clone()));
+        p.insert("head_b", params.stash_mat(Mat::from_vec(h.b.clone(), 1, h.b.len())));
+    }
+    if let Some(l) = &job.labeled_emb {
+        p.insert("labeled_emb", params.stash_mat(l.clone()));
+    }
+    params.value = Value::Object(p);
+
+    let (reply, slot) = call_shard_redispatch(
+        state,
+        session,
+        epoch,
+        job.shard,
+        &job.indices,
+        job.worker,
+        manifest,
+        init_labels,
+        "select_shard",
+        &params,
+        select_rpc_timeout(wait_ms),
+    )?;
+    decode_shard_reply(reply, job, slot)
 }
 
 fn next_live_slot(state: &CoordState, after: usize) -> Option<usize> {
@@ -828,14 +928,92 @@ fn decode_shard_reply(
         }
     }
     let init_emb = wire::take_mat(&v, &mut tensors, "init_emb")?;
+    let test_emb = wire::take_mat(&v, &mut tensors, "test_emb")?;
     Ok(ShardReply {
         shard: job.shard,
         candidates,
         failed_global,
         scan_ms: v.get("scan_ms").and_then(Value::as_f64).unwrap_or(0.0),
         init_emb,
+        test_emb,
         worker,
     })
+}
+
+/// Scatter a set of shard jobs concurrently and absorb the bookkeeping
+/// every caller needs: worker reassignment after re-dispatch, caching of
+/// fetched init/test embeddings, per-shard scan metrics, and the
+/// straggler gauge. Shared by `query` and the agent job's selector.
+#[allow(clippy::too_many_arguments)]
+fn scatter_jobs(
+    state: &CoordState,
+    session_id: &str,
+    sess: &Arc<Mutex<ClusterSession>>,
+    manifest: &Manifest,
+    init_labels: Option<&[u8]>,
+    epoch: u64,
+    jobs: &[ShardJob],
+    strategy: &str,
+    wait_ms: u64,
+) -> Result<Vec<ShardReply>, String> {
+    let replies: Vec<Result<ShardReply, String>> = std::thread::scope(|sc| {
+        let handles: Vec<_> = jobs
+            .iter()
+            .map(|job| {
+                sc.spawn(move || {
+                    select_on_shard(
+                        state, session_id, epoch, job, manifest, init_labels, strategy,
+                        wait_ms,
+                    )
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err("shard query panicked".into())))
+            .collect()
+    });
+    let mut out = Vec::with_capacity(replies.len());
+    for r in replies {
+        out.push(r?);
+    }
+
+    // bookkeeping: re-dispatched assignments + fetched embeddings
+    {
+        let mut s = sess.lock().unwrap();
+        for r in &out {
+            s.shards[r.shard].worker = r.worker;
+            if let Some(m) = &r.init_emb {
+                if s.init_emb.is_none() {
+                    s.init_emb = Some(m.clone());
+                }
+            }
+            if let Some(m) = &r.test_emb {
+                if s.test_emb.is_none() {
+                    s.test_emb = Some(m.clone());
+                }
+            }
+        }
+    }
+    // per-shard scan metrics + straggler spread
+    let mut scan_min = f64::INFINITY;
+    let mut scan_max: f64 = 0.0;
+    for r in &out {
+        let d = Duration::from_secs_f64((r.scan_ms / 1e3).max(0.0));
+        state.deps.metrics.time("cluster.shard_scan", d);
+        state.deps.metrics.time(&format!("cluster.shard{}.scan", r.shard), d);
+        scan_min = scan_min.min(r.scan_ms);
+        scan_max = scan_max.max(r.scan_ms);
+    }
+    if !out.is_empty() {
+        let straggler_ms = (scan_max - scan_min).max(0.0) as u64;
+        state
+            .deps
+            .metrics
+            .counter("cluster.scan.straggler_ms")
+            .store(straggler_ms, Ordering::Relaxed);
+    }
+    Ok(out)
 }
 
 /// `query {session, budget, strategy?, wait_ms?}` — scatter, merge,
@@ -895,81 +1073,31 @@ fn query(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
         .into_iter()
         .filter(|(_, idx, _)| !idx.is_empty())
         .enumerate()
-        .map(|(pos, (shard, indices, worker))| ShardJob {
-            shard,
-            indices,
-            worker,
-            budget: local_budget,
-            with_embeddings,
-            with_init_emb: need_init_emb && pos == 0,
+        .map(|(pos, (shard, indices, worker))| {
+            ShardJob::plain(
+                shard,
+                indices,
+                worker,
+                local_budget,
+                with_embeddings,
+                need_init_emb && pos == 0,
+            )
         })
         .collect();
 
     let t_query = Instant::now();
-    let replies: Vec<Result<ShardReply, String>> = std::thread::scope(|sc| {
-        let handles: Vec<_> = jobs
-            .iter()
-            .map(|job| {
-                let (manifest, init_labels, session, strategy) = (
-                    &manifest,
-                    &init_labels,
-                    session_id.as_str(),
-                    strategy_name.as_str(),
-                );
-                sc.spawn(move || {
-                    select_on_shard(
-                        state,
-                        session,
-                        epoch,
-                        job,
-                        manifest,
-                        init_labels.as_deref(),
-                        strategy,
-                        wait_ms,
-                    )
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().unwrap_or_else(|_| Err("shard query panicked".into())))
-            .collect()
-    });
-    let mut shard_replies = Vec::with_capacity(replies.len());
-    for r in replies {
-        shard_replies.push(r?);
-    }
-
-    // bookkeeping: re-dispatched assignments, fetched init embeddings,
-    // per-shard scan metrics + straggler spread
-    {
-        let mut s = sess.lock().unwrap();
-        for r in &shard_replies {
-            s.shards[r.shard].worker = r.worker;
-            if let Some(m) = &r.init_emb {
-                if s.init_emb.is_none() {
-                    s.init_emb = Some(m.clone());
-                }
-            }
-        }
-    }
-    let mut scan_min = f64::INFINITY;
-    let mut scan_max: f64 = 0.0;
-    for r in &shard_replies {
-        let d = Duration::from_secs_f64((r.scan_ms / 1e3).max(0.0));
-        state.deps.metrics.time("cluster.shard_scan", d);
-        state.deps.metrics.time(&format!("cluster.shard{}.scan", r.shard), d);
-        scan_min = scan_min.min(r.scan_ms);
-        scan_max = scan_max.max(r.scan_ms);
-    }
-    if !shard_replies.is_empty() {
-        let straggler_ms = (scan_max - scan_min).max(0.0) as u64;
-        state
-            .deps
-            .metrics
-            .counter("cluster.scan.straggler_ms")
-            .store(straggler_ms, Ordering::Relaxed);
-    }
+    let shard_replies = scatter_jobs(
+        state,
+        &session_id,
+        &sess,
+        &manifest,
+        init_labels.as_deref(),
+        epoch,
+        &jobs,
+        &strategy_name,
+        wait_ms,
+    )?;
+    let scan_max = shard_replies.iter().fold(0.0f64, |a, r| a.max(r.scan_ms));
 
     // merge
     let t0 = Instant::now();
@@ -1047,10 +1175,411 @@ fn query(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
     m.insert("strategy", Value::from(strategy_name));
     m.insert("selected", Value::Array(selected));
     m.insert("select_ms", Value::Number(select_elapsed.as_secs_f64() * 1e3));
-    m.insert(
-        "scan_ms",
-        Value::Number(if scan_max.is_finite() { scan_max } else { 0.0 }),
-    );
+    m.insert("scan_ms", Value::Number(scan_max));
+    Ok(Value::Object(m))
+}
+
+/// Shard-spec snapshot of a session: (shard index, global indices, worker).
+type ShardSpecs = Vec<(usize, Vec<usize>, usize)>;
+
+fn snapshot_shards(sess: &Arc<Mutex<ClusterSession>>) -> (Manifest, Option<Vec<u8>>, u64, ShardSpecs) {
+    let s = sess.lock().unwrap();
+    let specs: ShardSpecs = s
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(i, sh)| (i, sh.indices.clone(), sh.worker))
+        .collect();
+    (s.manifest.clone(), s.init_labels.clone(), s.epoch, specs)
+}
+
+/// Distributed [`ArmSelect`]: one PSHEA arm's selection scattered over the
+/// session's worker shards through the same `select_shard` wire the plain
+/// query uses, merged per the strategy's protocol (DESIGN.md §Agent).
+struct ClusterArmSelect {
+    state: Arc<CoordState>,
+    session_id: String,
+    sess: Arc<Mutex<ClusterSession>>,
+    /// Init-split embeddings (labeled-context base for the refine merge).
+    init_emb: Mat,
+    wait_ms: u64,
+}
+
+impl ClusterArmSelect {
+    /// Build one agent-path job per non-empty shard, mapping the arm's
+    /// global exclusions onto shard-local indices.
+    fn jobs_for(
+        specs: ShardSpecs,
+        budget: usize,
+        with_embeddings: bool,
+        seed: u64,
+        excl: &HashSet<usize>,
+        head: Option<&LinearHead>,
+        labeled_emb: Option<&Mat>,
+    ) -> Vec<ShardJob> {
+        specs
+            .into_iter()
+            .filter(|(_, idx, _)| !idx.is_empty())
+            .map(|(shard, indices, worker)| {
+                let exclude: Vec<usize> = indices
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(l, g)| excl.contains(g).then_some(l))
+                    .collect();
+                ShardJob {
+                    shard,
+                    indices,
+                    worker,
+                    budget,
+                    with_embeddings,
+                    with_init_emb: false,
+                    with_test_emb: false,
+                    seed: Some(seed),
+                    exclude,
+                    head: head.cloned(),
+                    labeled_emb: labeled_emb.cloned(),
+                }
+            })
+            .collect()
+    }
+
+    /// Fetch embeddings of specific global pool indices from their
+    /// owning shards (`fetch_rows`), in `picked` order — the agent path
+    /// of the coordinator-side `random` merge needs the rows it sampled.
+    fn fetch_embeddings(
+        &self,
+        manifest: &Manifest,
+        init_labels: Option<&[u8]>,
+        epoch: u64,
+        specs: &ShardSpecs,
+        picked: &[usize],
+    ) -> Result<Vec<Picked>, String> {
+        if picked.is_empty() {
+            return Ok(vec![]);
+        }
+        let mut where_of: HashMap<usize, (usize, usize)> = HashMap::new();
+        for (si, (_, indices, _)) in specs.iter().enumerate() {
+            for (l, g) in indices.iter().enumerate() {
+                where_of.insert(*g, (si, l));
+            }
+        }
+        let mut per_shard: HashMap<usize, Vec<(usize, usize)>> = HashMap::new();
+        for &g in picked {
+            let &(si, l) = where_of
+                .get(&g)
+                .ok_or_else(|| format!("index {g} not covered by any shard"))?;
+            per_shard.entry(si).or_default().push((g, l));
+        }
+        let mut emb_of: HashMap<usize, Vec<f32>> = HashMap::new();
+        for (si, items) in per_shard {
+            let (shard_idx, indices, worker) = &specs[si];
+            let mut p = Map::new();
+            p.insert(
+                "session",
+                Value::from(shard_session_id(&self.session_id, epoch, *shard_idx)),
+            );
+            p.insert(
+                "rows",
+                Value::Array(items.iter().map(|&(_, l)| Value::from(l)).collect()),
+            );
+            p.insert("wait_ms", Value::from(self.wait_ms as usize));
+            let params = Payload::json(Value::Object(p));
+            let (reply, _slot) = call_shard_redispatch(
+                &self.state,
+                &self.session_id,
+                epoch,
+                *shard_idx,
+                indices,
+                *worker,
+                manifest,
+                init_labels,
+                "fetch_rows",
+                &params,
+                select_rpc_timeout(self.wait_ms),
+            )?;
+            let Payload { value: v, mut tensors } = reply;
+            let m = wire::take_mat(&v, &mut tensors, "emb")?
+                .ok_or("fetch_rows reply missing emb")?;
+            if m.rows() != items.len() {
+                return Err(format!(
+                    "fetch_rows returned {} rows, wanted {}",
+                    m.rows(),
+                    items.len()
+                ));
+            }
+            for (row, &(g, _)) in items.iter().enumerate() {
+                emb_of.insert(g, m.row(row).to_vec());
+            }
+        }
+        picked
+            .iter()
+            .map(|&g| {
+                emb_of
+                    .remove(&g)
+                    .map(|e| (g, e))
+                    .ok_or_else(|| format!("missing embedding for index {g}"))
+            })
+            .collect()
+    }
+}
+
+impl ArmSelect for ClusterArmSelect {
+    fn select_arm(
+        &mut self,
+        strategy: &str,
+        budget: usize,
+        head: &LinearHead,
+        exclude: &[usize],
+        arm_labeled: &Mat,
+        seed: u64,
+    ) -> Result<Vec<Picked>, String> {
+        let kind = merge::merge_kind(strategy)
+            .ok_or_else(|| format!("unknown strategy '{strategy}'"))?;
+        let excl: HashSet<usize> = exclude.iter().copied().collect();
+        let (manifest, init_labels, epoch, specs) = snapshot_shards(&self.sess);
+        let n_shards = specs.iter().filter(|(_, idx, _)| !idx.is_empty()).count().max(1);
+        match kind {
+            MergeKind::ExactTopK { ascending, .. } => {
+                // local top-k under the arm's head with its exclusions;
+                // the union provably contains the global top-k, and the
+                // shared total order makes the merge exact (§Cluster).
+                // Candidates stay slim (scalars only) — the arm needs the
+                // embeddings of the `budget` winners, not of every
+                // shard's whole candidate list, so those are fetched
+                // afterwards via fetch_rows (k× less tensor traffic).
+                let jobs = Self::jobs_for(
+                    specs.clone(),
+                    budget,
+                    false,
+                    seed,
+                    &excl,
+                    Some(head),
+                    None,
+                );
+                let replies = scatter_jobs(
+                    &self.state,
+                    &self.session_id,
+                    &self.sess,
+                    &manifest,
+                    init_labels.as_deref(),
+                    epoch,
+                    &jobs,
+                    strategy,
+                    self.wait_ms,
+                )?;
+                let pairs: Vec<(usize, f32)> = replies
+                    .iter()
+                    .flat_map(|r| r.candidates.iter().map(|c| (c.idx, c.score)))
+                    .collect();
+                let picked =
+                    merge::merge_exact_topk(&pairs, budget.min(pairs.len()), ascending);
+                self.fetch_embeddings(&manifest, init_labels.as_deref(), epoch, &specs, &picked)
+            }
+            MergeKind::Random => {
+                // probe for failure lists; sampling is a pure function of
+                // (ok-row count, seed) — identical to the single server
+                let jobs = Self::jobs_for(specs.clone(), 0, false, seed, &excl, None, None);
+                let replies = scatter_jobs(
+                    &self.state,
+                    &self.session_id,
+                    &self.sess,
+                    &manifest,
+                    init_labels.as_deref(),
+                    epoch,
+                    &jobs,
+                    strategy,
+                    self.wait_ms,
+                )?;
+                let failed: HashSet<usize> = replies
+                    .iter()
+                    .flat_map(|r| r.failed_global.iter().copied())
+                    .collect();
+                let ok: Vec<usize> = (0..manifest.pool.len())
+                    .filter(|g| !failed.contains(g) && !excl.contains(g))
+                    .collect();
+                let mut rng = Rng::new(seed);
+                let picked: Vec<usize> = rng
+                    .sample_indices(ok.len(), budget.min(ok.len()))
+                    .into_iter()
+                    .map(|rel| ok[rel])
+                    .collect();
+                self.fetch_embeddings(&manifest, init_labels.as_deref(), epoch, &specs, &picked)
+            }
+            MergeKind::Refine => {
+                let oversample = self.state.config.cluster.oversample_factor;
+                let local = (oversample * budget).div_ceil(n_shards).max(1);
+                let arm_ctx = (arm_labeled.rows() > 0).then_some(arm_labeled);
+                let jobs =
+                    Self::jobs_for(specs, local, true, seed, &excl, Some(head), arm_ctx);
+                let replies = scatter_jobs(
+                    &self.state,
+                    &self.session_id,
+                    &self.sess,
+                    &manifest,
+                    init_labels.as_deref(),
+                    epoch,
+                    &jobs,
+                    strategy,
+                    self.wait_ms,
+                )?;
+                let all: Vec<&Candidate> =
+                    replies.iter().flat_map(|r| r.candidates.iter()).collect();
+                if all.is_empty() {
+                    return Ok(vec![]);
+                }
+                let emb = Mat::from_rows(all.iter().map(|c| c.emb.as_slice()));
+                let scores = Mat::from_rows(all.iter().map(|c| c.scores.as_slice()));
+                let labeled = if arm_labeled.rows() == 0 {
+                    self.init_emb.clone()
+                } else {
+                    self.init_emb.vstack(arm_labeled)
+                };
+                let strat = strategies::by_name(strategy)
+                    .ok_or_else(|| format!("unknown strategy '{strategy}'"))?;
+                let ctx = SelectCtx {
+                    scores: &scores,
+                    embeddings: &emb,
+                    labeled: &labeled,
+                    backend: self.state.deps.backend.as_ref(),
+                    seed,
+                };
+                let picked = strat.select(&ctx, budget).map_err(|e| e.to_string())?;
+                Ok(picked
+                    .into_iter()
+                    .map(|rel| (all[rel].idx, all[rel].emb.clone()))
+                    .collect())
+            }
+        }
+    }
+}
+
+/// Probe every shard (waiting out scans), cache init/test embeddings on
+/// the session, and return `(init_emb, test_emb, selectable_pool)` — the
+/// agent job's bootstrap step on the coordinator.
+fn agent_bootstrap(
+    state: &Arc<CoordState>,
+    session_id: &str,
+    sess: &Arc<Mutex<ClusterSession>>,
+    wait_ms: u64,
+) -> Result<(Mat, Mat, usize), String> {
+    let (manifest, init_labels, epoch, specs) = snapshot_shards(sess);
+    let (have_init, have_test) = {
+        let s = sess.lock().unwrap();
+        (s.init_emb.is_some(), s.test_emb.is_some())
+    };
+    let jobs: Vec<ShardJob> = specs
+        .into_iter()
+        .filter(|(_, idx, _)| !idx.is_empty())
+        .enumerate()
+        .map(|(pos, (shard, indices, worker))| {
+            // the test split lives on shard 0 only (see sub_manifest)
+            let want_test = !have_test && shard == 0;
+            let mut j =
+                ShardJob::plain(shard, indices, worker, 0, false, !have_init && pos == 0);
+            j.with_test_emb = want_test;
+            j
+        })
+        .collect();
+    let replies = scatter_jobs(
+        state,
+        session_id,
+        sess,
+        &manifest,
+        init_labels.as_deref(),
+        epoch,
+        &jobs,
+        "",
+        wait_ms,
+    )?;
+    let failed: HashSet<usize> = replies
+        .iter()
+        .flat_map(|r| r.failed_global.iter().copied())
+        .collect();
+    let selectable = manifest.pool.len() - failed.len();
+    let s = sess.lock().unwrap();
+    let init_emb =
+        s.init_emb.clone().ok_or("agent bootstrap did not yield init embeddings")?;
+    let test_emb =
+        s.test_emb.clone().ok_or("agent bootstrap did not yield test embeddings")?;
+    Ok((init_emb, test_emb, selectable))
+}
+
+/// `agent_start {session, strategies, config?, seed?, pool_labels,
+/// test_labels, wait_ms?}` — spawn a background PSHEA job whose arms
+/// evaluate across the session's worker shards (DESIGN.md §Agent).
+fn agent_start(state: &Arc<CoordState>, params: &Payload) -> Result<Value, String> {
+    let session_id = str_param(&params.value, "session")?;
+    let sess = get_session(state, &session_id)?;
+    let (manifest, init_labels) = {
+        let s = sess.lock().unwrap();
+        (s.manifest.clone(), s.init_labels.clone())
+    };
+    let p = parse_agent_start(
+        params,
+        state.config.active_learning.agent.to_pshea(),
+        &manifest,
+        init_labels.is_some(),
+    )?;
+    let num_classes = manifest.num_classes;
+    let n_arms = p.strategies.len();
+    let (job_id, job_slot) = state.jobs.create(&p.strategies);
+    let bg = state.clone();
+    let jid = job_id.clone();
+    std::thread::Builder::new()
+        .name(format!("alaas-agent-{job_id}"))
+        .spawn(move || {
+            let (init_emb, test_emb, selectable) =
+                match agent_bootstrap(&bg, &session_id, &sess, p.wait_ms) {
+                    Ok(x) => x,
+                    Err(e) => {
+                        job::fail(&job_slot, &bg.deps.metrics, e);
+                        return;
+                    }
+                };
+            let init_labels = match init_labels {
+                Some(l) => l,
+                None => {
+                    job::fail(&job_slot, &bg.deps.metrics, "missing init labels".into());
+                    return;
+                }
+            };
+            let sel = ClusterArmSelect {
+                state: bg.clone(),
+                session_id: session_id.clone(),
+                sess,
+                init_emb: init_emb.clone(),
+                wait_ms: p.wait_ms,
+            };
+            let task = AgentTask::new(
+                sel,
+                bg.deps.backend.clone(),
+                selectable,
+                init_emb,
+                init_labels,
+                p.pool_labels,
+                test_emb,
+                p.test_labels,
+                num_classes,
+                p.seed,
+                Some(job_slot.cancel.clone()),
+            );
+            crate::log_info!(
+                "cluster",
+                "agent job {jid} started on '{session_id}' ({} arms across shards)",
+                p.strategies.len()
+            );
+            job::drive(&job_slot, task, &p.strategies, &p.cfg, &bg.deps.metrics);
+        })
+        .map_err(|e| {
+            // no thread will ever finish this slot: mark it failed so it
+            // doesn't sit in the registry as a ghost "running" job
+            state.jobs.fail_orphan(&job_id, &state.deps.metrics, &e.to_string());
+            e.to_string()
+        })?;
+
+    let mut m = Map::new();
+    m.insert("job", Value::from(job_id));
+    m.insert("strategies", Value::from(n_arms));
     Ok(Value::Object(m))
 }
 

@@ -83,7 +83,9 @@ impl Default for ActiveLearningConfig {
     }
 }
 
-/// PSHEA agent knobs (Algorithm 1 inputs).
+/// PSHEA agent knobs (Algorithm 1 inputs; the full `PsheaConfig` surface,
+/// with identical defaults). These are the per-server defaults the
+/// `agent_start` RPC starts from — a request may override any field.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AgentConfig {
     /// Target accuracy `a_t` (stop when reached).
@@ -95,6 +97,10 @@ pub struct AgentConfig {
     /// Rounds with < `converge_eps` improvement that count as converged.
     pub converge_rounds: usize,
     pub converge_eps: f64,
+    /// Hard cap on rounds (0 = unlimited).
+    pub max_rounds: usize,
+    /// Observations each arm needs before elimination starts.
+    pub min_history: usize,
 }
 
 impl Default for AgentConfig {
@@ -105,6 +111,24 @@ impl Default for AgentConfig {
             round_budget: 500,
             converge_rounds: 3,
             converge_eps: 0.002,
+            max_rounds: 0,
+            min_history: 3,
+        }
+    }
+}
+
+impl AgentConfig {
+    /// The `PsheaConfig` these knobs describe (the server's job defaults).
+    pub fn to_pshea(&self) -> crate::agent::PsheaConfig {
+        crate::agent::PsheaConfig {
+            target_accuracy: self.target_accuracy,
+            max_budget: self.max_budget,
+            round_budget: self.round_budget,
+            converge_rounds: self.converge_rounds,
+            converge_eps: self.converge_eps,
+            max_rounds: self.max_rounds,
+            min_history: self.min_history,
+            initial_accuracy: None,
         }
     }
 }
@@ -350,6 +374,19 @@ impl AlaasConfig {
                 if let Some(x) = a.get("round_budget") {
                     c.agent.round_budget = req_usize(x, "active_learning.agent.round_budget")?;
                 }
+                if let Some(x) = a.get("converge_rounds") {
+                    c.agent.converge_rounds =
+                        req_usize(x, "active_learning.agent.converge_rounds")?;
+                }
+                if let Some(x) = a.get("converge_eps") {
+                    c.agent.converge_eps = req_f64(x, "active_learning.agent.converge_eps")?;
+                }
+                if let Some(x) = a.get("max_rounds") {
+                    c.agent.max_rounds = req_usize(x, "active_learning.agent.max_rounds")?;
+                }
+                if let Some(x) = a.get("min_history") {
+                    c.agent.min_history = req_usize(x, "active_learning.agent.min_history")?;
+                }
             }
         }
 
@@ -480,6 +517,12 @@ impl AlaasConfig {
             return Err(cerr(
                 "active_learning.agent.round_budget",
                 "must be in [1, max_budget]",
+            ));
+        }
+        if a.min_history == 0 {
+            return Err(cerr(
+                "active_learning.agent.min_history",
+                "must be >= 1 (the predictor needs history before killing arms)",
             ));
         }
         if self.cache.shards == 0 {
@@ -660,5 +703,45 @@ cluster:
         )
         .unwrap_err();
         assert_eq!(e.field, "active_learning.agent.round_budget");
+        let e = AlaasConfig::from_yaml_str(
+            "active_learning:\n  agent:\n    min_history: 0\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.field, "active_learning.agent.min_history");
+    }
+
+    #[test]
+    fn agent_section_carries_the_full_pshea_surface() {
+        let cfg = AlaasConfig::from_yaml_str(
+            r#"
+active_learning:
+  agent:
+    target_accuracy: 0.9
+    max_budget: 4000
+    round_budget: 100
+    converge_rounds: 5
+    converge_eps: 0.01
+    max_rounds: 12
+    min_history: 2
+"#,
+        )
+        .unwrap();
+        let a = &cfg.active_learning.agent;
+        assert_eq!(a.converge_rounds, 5);
+        assert_eq!(a.max_rounds, 12);
+        assert_eq!(a.min_history, 2);
+        let p = a.to_pshea();
+        assert_eq!(p.round_budget, 100);
+        assert_eq!(p.max_rounds, 12);
+        assert_eq!(p.min_history, 2);
+        assert_eq!(p.initial_accuracy, None);
+        assert!((p.converge_eps - 0.01).abs() < 1e-12);
+        // defaults mirror PsheaConfig's defaults exactly
+        let d = AgentConfig::default().to_pshea();
+        let pd = crate::agent::PsheaConfig::default();
+        assert_eq!(d.round_budget, pd.round_budget);
+        assert_eq!(d.min_history, pd.min_history);
+        assert_eq!(d.max_rounds, pd.max_rounds);
+        assert_eq!(d.converge_rounds, pd.converge_rounds);
     }
 }

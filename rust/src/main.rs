@@ -19,7 +19,7 @@
 
 use std::sync::Arc;
 
-use alaas::agent::{run_pshea, PsheaConfig};
+use alaas::agent::{run_pshea, PsheaConfig, PsheaTrace};
 use alaas::cache::DataCache;
 use alaas::cli::{Args, Schema};
 use alaas::cluster::{Coordinator, CoordinatorDeps};
@@ -37,7 +37,7 @@ const SCHEMA: Schema = Schema {
     value_flags: &[
         "config", "dataset", "out", "seed", "pool", "init", "test", "budget",
         "strategy", "target", "max-budget", "round-budget", "addr", "session",
-        "backend", "replicas", "rounds", "role", "coordinator",
+        "backend", "replicas", "rounds", "role", "coordinator", "remote",
     ],
     bool_flags: &["verbose", "quiet"],
 };
@@ -85,6 +85,8 @@ fn usage() -> &'static str {
      gen-data   --dataset <cifarsim|svhnsim> --out <dir> [--init N --pool N --test N --seed N]\n\
      query      --addr <host:port> --dataset <name> [--budget N --strategy S --seed N]\n\
      agent      --dataset <name> [--target A --max-budget N --round-budget N --backend host|pjrt --rounds N]\n\
+     \u{20}          [--remote <host:port>] = run PSHEA as a server-side job (agent_start RPC;\n\
+     \u{20}          on a coordinator the arms fan out across worker shards)\n\
      strategies"
 }
 
@@ -226,27 +228,25 @@ fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_query(args: &Args) -> anyhow::Result<()> {
-    let addr = args.get("addr").ok_or_else(|| anyhow::anyhow!("--addr required"))?;
-    let name = args.get_or("dataset", "cifarsim");
-    let seed = args.get_usize("seed", 42)? as u64;
-    let budget = args.get_usize("budget", 100)?;
-    let strategy = args.get("strategy");
-
-    // Dataset is written under a temp dir as file:// URIs so both client
-    // and server processes can read it.
-    let dir = std::env::temp_dir().join(format!("alaas-query-{seed}"));
+/// Generate a dataset under a temp dir with absolute `file://` URIs so
+/// both the client and a server process can read it; returns the
+/// manifest plus the oracle. Shared by `query` and `agent --remote`.
+fn generate_local_dataset(
+    name: &str,
+    seed: u64,
+    init: usize,
+    pool: usize,
+    test: usize,
+    tag: &str,
+) -> anyhow::Result<(alaas::store::Manifest, alaas::data::Oracle)> {
+    let dir = std::env::temp_dir().join(format!("alaas-{tag}-{seed}"));
     let store: Arc<dyn ObjectStore> = Arc::new(alaas::store::LocalFsStore::new(&dir)?);
     let spec = match name {
         "cifarsim" => DatasetSpec::cifarsim(seed),
         "svhnsim" => DatasetSpec::svhnsim(seed),
         other => return Err(anyhow::anyhow!("unknown dataset '{other}'")),
     }
-    .with_sizes(
-        args.get_usize("init", 200)?,
-        args.get_usize("pool", 1000)?,
-        args.get_usize("test", 0)?,
-    );
+    .with_sizes(init, pool, test);
     let mut manifest = alaas::data::generate_into_store(&spec, &store, "file", name);
     // rewrite URIs to absolute file paths
     let rewrite = |refs: &mut Vec<alaas::store::SampleRef>| {
@@ -258,8 +258,25 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
     rewrite(&mut manifest.init);
     rewrite(&mut manifest.pool);
     rewrite(&mut manifest.test);
-
     let oracle = alaas::data::Oracle::load(&store, name)?;
+    Ok((manifest, oracle))
+}
+
+fn cmd_query(args: &Args) -> anyhow::Result<()> {
+    let addr = args.get("addr").ok_or_else(|| anyhow::anyhow!("--addr required"))?;
+    let name = args.get_or("dataset", "cifarsim");
+    let seed = args.get_usize("seed", 42)? as u64;
+    let budget = args.get_usize("budget", 100)?;
+    let strategy = args.get("strategy");
+
+    let (manifest, oracle) = generate_local_dataset(
+        name,
+        seed,
+        args.get_usize("init", 200)?,
+        args.get_usize("pool", 1000)?,
+        args.get_usize("test", 0)?,
+        "query",
+    )?;
     let init_ids: Vec<u32> = manifest.init.iter().map(|s| s.id).collect();
     let init_labels = oracle.label(&init_ids);
 
@@ -283,7 +300,93 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn print_trace(trace: &PsheaTrace) {
+    for r in 0..trace.rounds {
+        println!("round {r}:");
+        for rec in trace.round(r) {
+            println!(
+                "  {:18} acc {:.4} pred-next {} {}",
+                rec.strategy,
+                rec.accuracy,
+                rec.predicted_next.map(|p| format!("{p:.4}")).unwrap_or_else(|| "-".into()),
+                if rec.eliminated { "ELIMINATED" } else { "" }
+            );
+        }
+    }
+    println!(
+        "stop: {:?} after {} rounds, budget {} labels, best accuracy {:.4}",
+        trace.stop, trace.rounds, trace.total_budget, trace.best_accuracy
+    );
+    println!("recommended strategy: {}", trace.recommendation().unwrap_or("(none)"));
+}
+
+/// `agent --remote <addr>`: run PSHEA as a server-side job — push a local
+/// dataset, `agent_start`, poll `agent_status`, print the final trace.
+/// Against a coordinator the candidate arms evaluate across the cluster.
+fn cmd_agent_remote(args: &Args, addr: &str) -> anyhow::Result<()> {
+    let name = args.get_or("dataset", "cifarsim");
+    let seed = args.get_usize("seed", 42)? as u64;
+    let (manifest, oracle) = generate_local_dataset(
+        name,
+        seed,
+        args.get_usize("init", 300)?,
+        args.get_usize("pool", 2000)?,
+        args.get_usize("test", 500)?,
+        "agent",
+    )?;
+    let init_ids: Vec<u32> = manifest.init.iter().map(|s| s.id).collect();
+    let init_labels = oracle.label(&init_ids);
+    let pool_ids: Vec<u32> = manifest.pool.iter().map(|s| s.id).collect();
+    let pool_labels = oracle.eval_labels(&pool_ids);
+    let test_ids: Vec<u32> = manifest.test.iter().map(|s| s.id).collect();
+    let test_labels = oracle.eval_labels(&test_ids);
+
+    let cfg = PsheaConfig {
+        target_accuracy: args.get_f64("target", 0.95)?,
+        max_budget: args.get_usize("max-budget", 10_000)?,
+        round_budget: args.get_usize("round-budget", 200)?,
+        max_rounds: args.get_usize("rounds", 8)?,
+        ..Default::default()
+    };
+    let strategies: Vec<String> =
+        alaas::strategies::candidate_names().into_iter().map(str::to_string).collect();
+
+    let mut client = AlClient::connect(addr)?;
+    client.ping()?;
+    let session = args.get_or("session", "agent-cli");
+    client.push_data(session, &manifest, Some(&init_labels))?;
+    let job =
+        client.agent_start(session, &strategies, &cfg, &pool_labels, &test_labels, seed)?;
+    println!("agent job {job} started on {addr} ({} candidate arms)", strategies.len());
+
+    let mut last_round = 0usize;
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(500));
+        let st = client.agent_status(&job)?;
+        let status =
+            st.get("status").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+        let rounds = st.get("rounds").and_then(|v| v.as_usize()).unwrap_or(0);
+        let live =
+            st.get("live").and_then(|v| v.as_array()).map(|a| a.len()).unwrap_or(0);
+        let budget = st.get("budget_spent").and_then(|v| v.as_usize()).unwrap_or(0);
+        let best = st.get("best_accuracy").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        if rounds > last_round {
+            println!("  round {rounds}: {live} live arms, {budget} labels, best {best:.4}");
+            last_round = rounds;
+        }
+        if status != "running" {
+            break;
+        }
+    }
+    let trace = client.agent_result(&job, std::time::Duration::from_secs(3600))?;
+    print_trace(&trace);
+    Ok(())
+}
+
 fn cmd_agent(args: &Args) -> anyhow::Result<()> {
+    if let Some(addr) = args.get("remote") {
+        return cmd_agent_remote(args, addr);
+    }
     let name = args.get_or("dataset", "cifarsim");
     let seed = args.get_usize("seed", 42)? as u64;
     let spec = match name {
@@ -330,22 +433,6 @@ fn cmd_agent(args: &Args) -> anyhow::Result<()> {
         cfg.max_budget
     );
     let trace = run_pshea(&mut exp, &strategies, &cfg)?;
-    for r in 0..trace.rounds {
-        println!("round {r}:");
-        for rec in trace.round(r) {
-            println!(
-                "  {:18} acc {:.4} pred-next {} {}",
-                rec.strategy,
-                rec.accuracy,
-                rec.predicted_next.map(|p| format!("{p:.4}")).unwrap_or_else(|| "-".into()),
-                if rec.eliminated { "ELIMINATED" } else { "" }
-            );
-        }
-    }
-    println!(
-        "stop: {:?} after {} rounds, budget {} labels, best accuracy {:.4}",
-        trace.stop, trace.rounds, trace.total_budget, trace.best_accuracy
-    );
-    println!("recommended strategy: {}", trace.recommendation().unwrap_or("(none)"));
+    print_trace(&trace);
     Ok(())
 }

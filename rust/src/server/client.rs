@@ -16,6 +16,8 @@
 use std::net::TcpStream;
 use std::time::Duration;
 
+use crate::agent::job as agent_job;
+use crate::agent::{PsheaConfig, PsheaTrace};
 use crate::json::{Map, Value};
 use crate::server::rpc::{self, RpcError};
 use crate::server::wire::{self, Payload, WireMode};
@@ -227,5 +229,70 @@ impl AlClient {
         Ok(v.as_array()
             .map(|a| a.iter().filter_map(|x| x.as_str().map(str::to_string)).collect())
             .unwrap_or_default())
+    }
+
+    /// Start a server-side PSHEA job over a pushed session (DESIGN.md
+    /// §Agent): the server runs Algorithm 1 in the background, selecting
+    /// through its normal query path (across worker shards on a
+    /// coordinator). `pool_labels`/`test_labels` are the oracle arrays
+    /// parallel to the manifest's pool/test splits; `seed` must match the
+    /// in-process experiment's seed for trace parity. Returns the job id.
+    pub fn agent_start(
+        &mut self,
+        session: &str,
+        strategies: &[String],
+        cfg: &PsheaConfig,
+        pool_labels: &[u8],
+        test_labels: &[u8],
+        seed: u64,
+    ) -> Result<String, RpcError> {
+        let mut p = Map::new();
+        p.insert("session", Value::from(session));
+        p.insert(
+            "strategies",
+            Value::Array(strategies.iter().map(|s| Value::from(s.clone())).collect()),
+        );
+        p.insert("config", agent_job::config_to_value(cfg));
+        p.insert("seed", Value::from(seed));
+        // labels stay in the v1 integer-array form on both wires: they
+        // are split-sized (bytes, not matrices) and must survive a JSON
+        // renegotiation of this exact payload
+        let labels = |l: &[u8]| {
+            Value::Array(l.iter().map(|&x| Value::from(x as u64)).collect())
+        };
+        p.insert("pool_labels", labels(pool_labels));
+        p.insert("test_labels", labels(test_labels));
+        let v = self.call("agent_start", Value::Object(p))?;
+        v.get("job")
+            .and_then(Value::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| RpcError::Malformed("agent_start reply missing job id".into()))
+    }
+
+    /// Mid-run job state: status string, round log, live/eliminated arms,
+    /// budget spent (the raw `agent_status` reply).
+    pub fn agent_status(&mut self, job: &str) -> Result<Value, RpcError> {
+        let mut p = Map::new();
+        p.insert("job", Value::from(job));
+        self.call("agent_status", Value::Object(p))
+    }
+
+    /// Block until the job completes and return its full trace. A
+    /// cancelled or failed job surfaces as a `Remote` error.
+    pub fn agent_result(&mut self, job: &str, wait: Duration) -> Result<PsheaTrace, RpcError> {
+        let mut p = Map::new();
+        p.insert("job", Value::from(job));
+        p.insert("wait_ms", Value::from(wait.as_millis().min(u64::MAX as u128) as u64));
+        let v = self.call("agent_result", Value::Object(p))?;
+        agent_job::trace_from_value(&v).map_err(RpcError::Malformed)
+    }
+
+    /// Request cancellation; labeling spend stops at the next round
+    /// boundary. Returns whether the job was still running.
+    pub fn agent_cancel(&mut self, job: &str) -> Result<bool, RpcError> {
+        let mut p = Map::new();
+        p.insert("job", Value::from(job));
+        let v = self.call("agent_cancel", Value::Object(p))?;
+        Ok(v.get("cancelled").and_then(Value::as_bool).unwrap_or(false))
     }
 }

@@ -14,6 +14,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
+use crate::agent::job::{self, AgentTask, ArmSelect, JobRegistry, Picked};
 use crate::cache::DataCache;
 use crate::config::{AlaasConfig, StrategyChoice};
 use crate::json::{Map, Value};
@@ -60,6 +61,11 @@ struct Session {
     failed: Vec<usize>,
     /// Init-split embeddings (labeled context for diversity strategies).
     init_emb: Option<Mat>,
+    /// Init-split labels as pushed (the agent job retrains with them).
+    init_labels: Option<Vec<u8>>,
+    /// Test-split embeddings (agent-job accuracy evaluation; scanned when
+    /// the manifest carries a test split).
+    test_emb: Option<Mat>,
     scan_elapsed: Duration,
 }
 
@@ -72,6 +78,8 @@ struct ServerState {
     config: AlaasConfig,
     deps: ServerDeps,
     sessions: Mutex<HashMap<String, Arc<SessionSlot>>>,
+    /// Background PSHEA jobs (DESIGN.md §Agent).
+    jobs: JobRegistry,
     shutdown: AtomicBool,
 }
 
@@ -93,6 +101,7 @@ impl AlServer {
             config,
             deps,
             sessions: Mutex::new(HashMap::new()),
+            jobs: JobRegistry::new(),
             shutdown: AtomicBool::new(false),
         });
         let accept_state = state.clone();
@@ -202,9 +211,15 @@ fn dispatch(
             m.insert("entries", Value::from(state.deps.cache.len()));
             Ok(Payload::json(Value::Object(m)))
         }
+        // agent-as-a-service job family (DESIGN.md §Agent)
+        "agent_start" => agent_start(state, params).map(Payload::json),
+        "agent_status" => job::rpc_status(&state.jobs, &params.value).map(Payload::json),
+        "agent_result" => job::rpc_result(&state.jobs, &params.value).map(Payload::json),
+        "agent_cancel" => job::rpc_cancel(&state.jobs, &params.value).map(Payload::json),
         // worker-facing cluster methods (DESIGN.md §Cluster)
         "scan_shard" => scan_shard(state, params).map(Payload::json),
         "select_shard" => select_shard(state, params, mode),
+        "fetch_rows" => fetch_rows(state, &params.value),
         "drop_session" => {
             let session_id = str_param(&params.value, "session")?;
             let dropped =
@@ -225,16 +240,18 @@ pub(crate) fn str_param(params: &Value, key: &str) -> Result<String, String> {
         .ok_or_else(|| format!("missing string param '{key}'"))
 }
 
-/// Decode + validate the optional `init_labels` request field against the
-/// manifest's init split. Shared with the cluster coordinator so the two
-/// push endpoints cannot drift. Accepts the v1 integer-array form and the
-/// v2 tensor form (placeholder or inline matrix), so a binary push that
-/// falls back to JSON mid-negotiation still parses.
-pub(crate) fn parse_init_labels(
+/// Decode + validate an optional u8 label-array field (`init_labels`,
+/// `pool_labels`, `test_labels`) against the length of its split. Shared
+/// with the cluster coordinator so the endpoints cannot drift. Accepts
+/// the v1 integer-array form and the v2 tensor form (placeholder or
+/// inline matrix), so a binary push that falls back to JSON
+/// mid-negotiation still parses.
+pub(crate) fn parse_label_array(
     params: &Payload,
-    init_len: usize,
+    key: &str,
+    split_len: usize,
 ) -> Result<Option<Vec<u8>>, String> {
-    let labels: Option<Vec<u8>> = match params.value.get("init_labels") {
+    let labels: Option<Vec<u8>> = match params.value.get(key) {
         None | Some(Value::Null) => None,
         Some(v) => {
             if let Some(m) = wire::maybe_mat(v, &params.tensors)? {
@@ -245,7 +262,7 @@ pub(crate) fn parse_init_labels(
                             if x.fract() == 0.0 && (0.0..=255.0).contains(&x) {
                                 Ok(x as u8)
                             } else {
-                                Err("bad init label".to_string())
+                                Err(format!("bad {key} label"))
                             }
                         })
                         .collect::<Result<Vec<u8>, _>>()?,
@@ -256,24 +273,45 @@ pub(crate) fn parse_init_labels(
                         .map(|v| {
                             v.as_usize()
                                 .and_then(|u| u8::try_from(u).ok())
-                                .ok_or_else(|| "bad init label".to_string())
+                                .ok_or_else(|| format!("bad {key} label"))
                         })
                         .collect::<Result<Vec<u8>, _>>()?,
                 )
             } else {
-                return Err("init_labels must be an array or tensor".into());
+                return Err(format!("{key} must be an array or tensor"));
             }
         }
     };
     if let Some(l) = &labels {
-        if l.len() != init_len {
-            return Err(format!(
-                "init_labels len {} != init split len {init_len}",
-                l.len()
-            ));
+        if l.len() != split_len {
+            return Err(format!("{key} len {} != split len {split_len}", l.len()));
         }
     }
     Ok(labels)
+}
+
+/// The original `init_labels` entry point (see [`parse_label_array`]).
+pub(crate) fn parse_init_labels(
+    params: &Payload,
+    init_len: usize,
+) -> Result<Option<Vec<u8>>, String> {
+    parse_label_array(params, "init_labels", init_len)
+}
+
+/// Strict `seed` field parse: JSON numbers are f64, so a seed at or
+/// beyond 2^53 cannot travel losslessly — reject it instead of silently
+/// substituting a default and breaking the remote-vs-local parity
+/// contract. (Per-round derived seeds XOR small constants into the base,
+/// which cannot set bits >= 53, so a valid base keeps every derived seed
+/// exact too.)
+pub(crate) fn parse_seed(params: &Value) -> Result<Option<u64>, String> {
+    match params.get("seed") {
+        None | Some(Value::Null) => Ok(None),
+        Some(v) => v.as_usize().map(|s| Some(s as u64)).ok_or_else(|| {
+            "seed must be a non-negative integer below 2^53 (JSON numbers are f64)"
+                .to_string()
+        }),
+    }
 }
 
 fn get_session(state: &ServerState, id: &str) -> Result<Arc<SessionSlot>, String> {
@@ -305,6 +343,8 @@ fn push_data(state: &Arc<ServerState>, params: &Payload) -> Result<Value, String
             pool_scores: None,
             failed: vec![],
             init_emb: None,
+            init_labels: init_labels.clone(),
+            test_emb: None,
             scan_elapsed: Duration::ZERO,
         }),
         ready: Condvar::new(),
@@ -407,6 +447,23 @@ fn process_session(
     )
     .map_err(|e| e.to_string())?;
 
+    // 3. test-split scan when the manifest carries one (embeddings only;
+    // the agent job evaluates arm accuracy on it — DESIGN.md §Agent)
+    let mut test_emb = None;
+    if !manifest.test.is_empty() {
+        let t = run_pipeline(
+            &manifest.test,
+            &deps.store,
+            &deps.cache,
+            &deps.backend,
+            &head,
+            &params,
+            Some(&deps.metrics),
+        )
+        .map_err(|e| e.to_string())?;
+        test_emb = Some(t.embeddings);
+    }
+
     let mut s = slot.s.lock().unwrap();
     s.head = head;
     s.failed = out.errors.iter().map(|(i, _)| *i).collect();
@@ -414,6 +471,7 @@ fn process_session(
     s.pool_emb = Some(out.embeddings);
     s.pool_scores = Some(out.scores);
     s.init_emb = init_emb;
+    s.test_emb = test_emb;
     Ok(())
 }
 
@@ -459,14 +517,17 @@ fn wait_ready<'a>(
     Ok(s)
 }
 
-/// The selectable view of a ready session: non-failed pool rows and their
+/// The selectable view of a ready session: non-failed pool rows (minus
+/// `exclude` — an agent arm's already-labeled positions) and their
 /// gathered embeddings/scores. `ok_rows[rel]` maps a strategy-relative
 /// index back to the absolute pool position.
-fn candidate_view(s: &Session) -> (Vec<usize>, Mat, Mat) {
+fn candidate_view(s: &Session, exclude: &[usize]) -> (Vec<usize>, Mat, Mat) {
     let pool_emb = s.pool_emb.as_ref().expect("ready session has embeddings");
     let pool_scores = s.pool_scores.as_ref().expect("ready session has scores");
-    let ok_rows: Vec<usize> =
-        (0..pool_emb.rows()).filter(|i| !s.failed.contains(i)).collect();
+    let excl: std::collections::HashSet<usize> = exclude.iter().copied().collect();
+    let ok_rows: Vec<usize> = (0..pool_emb.rows())
+        .filter(|i| !s.failed.contains(i) && !excl.contains(i))
+        .collect();
     let cand_emb = pool_emb.gather_rows(&ok_rows);
     let cand_scores = pool_scores.gather_rows(&ok_rows);
     (ok_rows, cand_emb, cand_scores)
@@ -501,7 +562,7 @@ fn query(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
     let strat = strategies::by_name(&strategy_name)
         .ok_or_else(|| format!("unknown strategy '{strategy_name}'"))?;
     // exclude failed rows from the candidate set
-    let (ok_rows, cand_emb, cand_scores) = candidate_view(&s);
+    let (ok_rows, cand_emb, cand_scores) = candidate_view(&s, &[]);
     let empty = Mat::zeros(0, cand_emb.cols());
     let labeled = s.init_emb.as_ref().unwrap_or(&empty);
     let t0 = Instant::now();
@@ -552,16 +613,26 @@ fn scan_shard(state: &Arc<ServerState>, params: &Payload) -> Result<Value, Strin
 }
 
 /// `select_shard {session, budget, strategy?, with_embeddings?,
-/// with_init_emb?, wait_ms?}` — worker-facing select (DESIGN.md §Cluster).
+/// with_init_emb?, with_test_emb?, wait_ms?, seed?, exclude?, head_w?,
+/// head_b?, labeled_emb?}` — worker-facing select (DESIGN.md §Cluster).
 ///
 /// Always waits for the scan and reports the shard's failed local indices
 /// plus scan timing; with `budget > 0` it additionally returns the local
 /// candidate list for the coordinator's merge (top-k scalars for the
 /// uncertainty strategies, embeddings for the refine protocol). `budget =
-/// 0` is the coordinator's probe for coordinator-side strategies (random).
+/// 0` is the coordinator's probe for coordinator-side strategies (random)
+/// and for the agent job's bootstrap fetch of init/test embeddings.
+///
+/// The optional agent-path fields (DESIGN.md §Agent) let one PSHEA arm
+/// select through the same code path the plain query uses: `exclude`
+/// drops the arm's already-labeled local pool indices from the candidate
+/// view, `head_w`/`head_b` recompute the uncertainty scores under the
+/// arm's current head (tensor sections on the v2 wire), `labeled_emb`
+/// extends the labeled context with the arm's labeled embeddings, and
+/// `seed` overrides the query-path `SELECT_SEED`.
 ///
 /// Matrix results travel per the request's encoding (DESIGN.md §Wire):
-/// on the v2 binary wire, `init_emb` and the packed
+/// on the v2 binary wire, `init_emb`/`test_emb` and the packed
 /// `cand_scores`/`cand_emb` rows (parallel to the slim `candidates`
 /// list) ride as tensor sections; on the v1 JSON wire the candidates
 /// keep the PR1 fat per-candidate schema, so pre-v2 coordinators decode
@@ -577,8 +648,23 @@ fn select_shard(
         params.value.get("with_embeddings").and_then(Value::as_bool).unwrap_or(false);
     let with_init_emb =
         params.value.get("with_init_emb").and_then(Value::as_bool).unwrap_or(false);
+    let with_test_emb =
+        params.value.get("with_test_emb").and_then(Value::as_bool).unwrap_or(false);
     let wait_ms =
         params.value.get("wait_ms").and_then(Value::as_usize).unwrap_or(120_000) as u64;
+    let seed = parse_seed(&params.value)?.unwrap_or(SELECT_SEED);
+    let exclude: Vec<usize> = match params.value.get("exclude") {
+        None | Some(Value::Null) => vec![],
+        Some(v) => v
+            .as_array()
+            .ok_or("exclude must be an index array")?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| "bad exclude index".to_string()))
+            .collect::<Result<Vec<_>, _>>()?,
+    };
+    let head_w = params.mat("head_w")?;
+    let head_b = params.mat("head_b")?;
+    let labeled_extra = params.mat("labeled_emb")?;
 
     let slot = get_session(state, &session_id)?;
     let s = wait_ready(&slot, wait_ms)?;
@@ -596,15 +682,39 @@ fn select_shard(
         let init = s.init_emb.as_ref().unwrap_or(&empty).clone();
         m.insert("init_emb", out.stash_mat(init));
     }
+    if with_test_emb {
+        // only answer when the session actually scanned a test split, so
+        // the coordinator can't cache an empty matrix as "the" test set
+        if let Some(t) = s.test_emb.as_ref() {
+            m.insert("test_emb", out.stash_mat(t.clone()));
+        }
+    }
     if budget > 0 {
         let strategy = params
             .value
             .get("strategy")
             .and_then(Value::as_str)
             .ok_or("missing strategy for budget > 0")?;
-        let (ok_rows, cand_emb, cand_scores) = candidate_view(&s);
+        let (ok_rows, cand_emb, cand_scores) = candidate_view(&s, &exclude);
+        // agent arms carry their own head: rescore the candidates under it
+        let cand_scores = match (&head_w, &head_b) {
+            (Some(w), Some(b)) => {
+                let logits = state
+                    .deps
+                    .backend
+                    .eval_logits(&cand_emb, w, b.as_slice())
+                    .map_err(|e| e.to_string())?;
+                state.deps.backend.scores(&logits).map_err(|e| e.to_string())?
+            }
+            (None, None) => cand_scores,
+            _ => return Err("head_w and head_b must be sent together".into()),
+        };
         let empty = Mat::zeros(0, cand_emb.cols());
-        let labeled = s.init_emb.as_ref().unwrap_or(&empty);
+        let base_labeled = s.init_emb.as_ref().unwrap_or(&empty);
+        let labeled = match &labeled_extra {
+            Some(extra) if extra.rows() > 0 => base_labeled.vstack(extra),
+            _ => base_labeled.clone(),
+        };
         let t0 = Instant::now();
         let cands = crate::cluster::worker::build_candidates(
             strategy,
@@ -613,9 +723,9 @@ fn select_shard(
             &ok_rows,
             &cand_emb,
             &cand_scores,
-            labeled,
+            &labeled,
             state.deps.backend.as_ref(),
-            SELECT_SEED,
+            seed,
         )?;
         state.deps.metrics.time("al.select_shard", t0.elapsed());
         if with_embeddings && mode == WireMode::Json {
@@ -640,4 +750,235 @@ fn select_shard(
     }
     out.value = Value::Object(m);
     Ok(out)
+}
+
+/// `fetch_rows {session, rows, wait_ms?}` — pool-embedding rows by local
+/// index, as one tensor in row-request order. The coordinator uses this
+/// to materialize the embeddings of a coordinator-side selection (the
+/// agent path of the `random` merge — DESIGN.md §Agent).
+fn fetch_rows(state: &Arc<ServerState>, params: &Value) -> Result<Payload, String> {
+    let session_id = str_param(params, "session")?;
+    let rows: Vec<usize> = params
+        .get("rows")
+        .and_then(Value::as_array)
+        .ok_or("missing index array 'rows'")?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| "bad row index".to_string()))
+        .collect::<Result<Vec<_>, _>>()?;
+    let wait_ms = params.get("wait_ms").and_then(Value::as_usize).unwrap_or(120_000) as u64;
+    let slot = get_session(state, &session_id)?;
+    let s = wait_ready(&slot, wait_ms)?;
+    let pool_emb = s.pool_emb.as_ref().expect("ready session has embeddings");
+    for &r in &rows {
+        if r >= pool_emb.rows() {
+            return Err(format!("row {r} out of range ({} pool rows)", pool_emb.rows()));
+        }
+    }
+    let mut out = Payload::default();
+    let ph = out.stash_mat(pool_emb.gather_rows(&rows));
+    let mut m = Map::new();
+    m.insert("emb", ph);
+    m.insert("rows", Value::from(rows.len()));
+    out.value = Value::Object(m);
+    Ok(out)
+}
+
+/// Single-server [`ArmSelect`]: one agent arm's selection over the
+/// session's candidate view — the same `candidate_view` + strategy-select
+/// path `query` uses, with the arm's head, exclusions, and seed.
+struct LocalArmSelect {
+    slot: Arc<SessionSlot>,
+    backend: Arc<dyn ComputeBackend>,
+}
+
+impl ArmSelect for LocalArmSelect {
+    fn select_arm(
+        &mut self,
+        strategy: &str,
+        budget: usize,
+        head: &LinearHead,
+        exclude: &[usize],
+        arm_labeled: &Mat,
+        seed: u64,
+    ) -> Result<Vec<Picked>, String> {
+        let strat = strategies::by_name(strategy)
+            .ok_or_else(|| format!("unknown strategy '{strategy}'"))?;
+        let s = self.slot.s.lock().unwrap();
+        if s.status != SessionStatus::Ready {
+            return Err("session left ready state mid-job".into());
+        }
+        let (ok_rows, cand_emb, _scan_scores) = candidate_view(&s, exclude);
+        let logits = self
+            .backend
+            .eval_logits(&cand_emb, &head.w, &head.b)
+            .map_err(|e| e.to_string())?;
+        let scores = self.backend.scores(&logits).map_err(|e| e.to_string())?;
+        let empty = Mat::zeros(0, cand_emb.cols());
+        let base = s.init_emb.as_ref().unwrap_or(&empty);
+        let labeled = if arm_labeled.rows() == 0 {
+            base.clone()
+        } else {
+            base.vstack(arm_labeled)
+        };
+        let ctx = SelectCtx {
+            scores: &scores,
+            embeddings: &cand_emb,
+            labeled: &labeled,
+            backend: self.backend.as_ref(),
+            seed,
+        };
+        let picked = strat.select(&ctx, budget).map_err(|e| e.to_string())?;
+        Ok(picked
+            .into_iter()
+            .map(|rel| (ok_rows[rel], cand_emb.row(rel).to_vec()))
+            .collect())
+    }
+}
+
+/// Validate the shared `agent_start` request surface: strategy names,
+/// config overlay, seed, and the oracle label arrays. Used by both the
+/// single server and the cluster coordinator.
+pub(crate) struct AgentStartParams {
+    pub strategies: Vec<String>,
+    pub cfg: crate::agent::PsheaConfig,
+    pub seed: u64,
+    pub pool_labels: Vec<u8>,
+    pub test_labels: Vec<u8>,
+    pub wait_ms: u64,
+}
+
+pub(crate) fn parse_agent_start(
+    params: &Payload,
+    defaults: crate::agent::PsheaConfig,
+    manifest: &Manifest,
+    init_labels_present: bool,
+) -> Result<AgentStartParams, String> {
+    if manifest.init.is_empty() || !init_labels_present {
+        return Err(
+            "agent_start needs a session pushed with a labeled init split (the \
+             baseline model of Algorithm 1 trains on it)"
+                .into(),
+        );
+    }
+    if manifest.test.is_empty() {
+        return Err(
+            "agent_start needs a session whose manifest carries a test split \
+             (arm accuracy is evaluated on it)"
+                .into(),
+        );
+    }
+    let strategies: Vec<String> = params
+        .value
+        .get("strategies")
+        .and_then(Value::as_array)
+        .ok_or("missing param 'strategies'")?
+        .iter()
+        .map(|v| {
+            v.as_str().map(str::to_string).ok_or_else(|| "bad strategy name".to_string())
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    if strategies.is_empty() {
+        return Err("strategies must be non-empty".into());
+    }
+    for s in &strategies {
+        if strategies::by_name(s).is_none() {
+            return Err(format!("unknown strategy '{s}'"));
+        }
+    }
+    let cfg = job::config_from_value(defaults, params.value.get("config"))?;
+    let seed = parse_seed(&params.value)?.unwrap_or(SELECT_SEED);
+    let pool_labels = parse_label_array(params, "pool_labels", manifest.pool.len())?
+        .ok_or("missing param 'pool_labels' (the oracle for the pool split)")?;
+    let test_labels = parse_label_array(params, "test_labels", manifest.test.len())?
+        .ok_or("missing param 'test_labels' (ground truth for evaluation)")?;
+    let wait_ms =
+        params.value.get("wait_ms").and_then(Value::as_usize).unwrap_or(120_000) as u64;
+    Ok(AgentStartParams { strategies, cfg, seed, pool_labels, test_labels, wait_ms })
+}
+
+/// `agent_start {session, strategies, config?, seed?, pool_labels,
+/// test_labels, wait_ms?}` — spawn a background PSHEA job over a pushed
+/// session and return its job id (DESIGN.md §Agent).
+fn agent_start(state: &Arc<ServerState>, params: &Payload) -> Result<Value, String> {
+    let session_id = str_param(&params.value, "session")?;
+    let slot = get_session(state, &session_id)?;
+    let (manifest, have_init_labels) = {
+        let s = slot.s.lock().unwrap();
+        (s.manifest.clone(), s.init_labels.is_some())
+    };
+    let p = parse_agent_start(
+        params,
+        state.config.active_learning.agent.to_pshea(),
+        &manifest,
+        have_init_labels,
+    )?;
+    let n_arms = p.strategies.len();
+    let (job_id, job_slot) = state.jobs.create(&p.strategies);
+    let bg = state.clone();
+    let thread_job = job_id.clone();
+    std::thread::Builder::new()
+        .name(format!("alaas-agent-{job_id}"))
+        .spawn(move || {
+            // wait out the scan on the job thread so agent_start returns
+            // immediately even while the session is still processing
+            let data = match wait_ready(&slot, p.wait_ms) {
+                Ok(s) => {
+                    let init_emb = s.init_emb.clone();
+                    let init_labels = s.init_labels.clone();
+                    let test_emb = s.test_emb.clone();
+                    let selectable = s
+                        .pool_emb
+                        .as_ref()
+                        .map(|m| m.rows())
+                        .unwrap_or(0)
+                        .saturating_sub(s.failed.len());
+                    let nc = s.manifest.num_classes;
+                    drop(s);
+                    match (init_emb, init_labels, test_emb) {
+                        (Some(ie), Some(il), Some(te)) => Ok((ie, il, te, selectable, nc)),
+                        _ => Err("session is missing init/test scan outputs".to_string()),
+                    }
+                }
+                Err(e) => Err(e),
+            };
+            let (init_emb, init_labels, test_emb, selectable, nc) = match data {
+                Ok(d) => d,
+                Err(e) => {
+                    job::fail(&job_slot, &bg.deps.metrics, e);
+                    return;
+                }
+            };
+            let sel =
+                LocalArmSelect { slot: slot.clone(), backend: bg.deps.backend.clone() };
+            let task = AgentTask::new(
+                sel,
+                bg.deps.backend.clone(),
+                selectable,
+                init_emb,
+                init_labels,
+                p.pool_labels,
+                test_emb,
+                p.test_labels,
+                nc,
+                p.seed,
+                Some(job_slot.cancel.clone()),
+            );
+            crate::log_info!(
+                "server",
+                "agent job {thread_job} started on session '{session_id}' ({} arms)",
+                p.strategies.len()
+            );
+            job::drive(&job_slot, task, &p.strategies, &p.cfg, &bg.deps.metrics);
+        })
+        .map_err(|e| {
+            // no thread will ever finish this slot: mark it failed so it
+            // doesn't sit in the registry as a ghost "running" job
+            state.jobs.fail_orphan(&job_id, &state.deps.metrics, &e.to_string());
+            e.to_string()
+        })?;
+
+    let mut m = Map::new();
+    m.insert("job", Value::from(job_id));
+    m.insert("strategies", Value::from(n_arms));
+    Ok(Value::Object(m))
 }

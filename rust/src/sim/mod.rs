@@ -229,7 +229,8 @@ impl AlExperiment {
             embeddings: &avail_emb,
             labeled: &labeled_emb,
             backend: self.backend.as_ref(),
-            seed: self.seed ^ n_prev_rounds.wrapping_mul(0x9E37_79B9),
+            // shared with the served agent job (remote parity contract)
+            seed: crate::agent::arm_round_seed(self.seed, n_prev_rounds),
         };
         let picked_rel = strat.select(&ctx, budget)?;
         let picked_abs: Vec<usize> = picked_rel.iter().map(|&r| avail[r]).collect();

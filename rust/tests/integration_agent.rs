@@ -1,0 +1,425 @@
+//! Agent-as-a-service integration (DESIGN.md §Agent): the PSHEA loop run
+//! as a server-side job must reproduce the in-process `pshea::run` trace
+//! bit-for-bit — same elimination order, surviving strategy, and
+//! rounds-to-stop — on both serving topologies:
+//!
+//! * single `AlServer` (`agent_start` selects over the session's
+//!   candidate view),
+//! * 2-worker coordinator (each arm's select scatters over the worker
+//!   shards and merges exactly, per §Cluster).
+//!
+//! Plus the job-lifecycle edge cases: unknown ids, status after
+//! completion, cancellation actually stopping labeling spend, and a
+//! worker killed mid-job degrading via shard re-dispatch.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use alaas::agent::{run_pshea, PsheaConfig, PsheaTrace, StopReason};
+use alaas::cache::DataCache;
+use alaas::cluster::{Coordinator, CoordinatorDeps};
+use alaas::config::AlaasConfig;
+use alaas::data::{generate, generate_into_store, DatasetSpec, Oracle};
+use alaas::metrics::Registry;
+use alaas::runtime::backend::ComputeBackend;
+use alaas::runtime::HostBackend;
+use alaas::server::{AlClient, AlServer, ServerDeps};
+use alaas::sim::AlExperiment;
+use alaas::store::{Manifest, ObjectStore, StoreRouter};
+use alaas::trainer::TrainConfig;
+
+/// Write dataset blobs through the router's s3sim *backing* store (fast
+/// path) while servers read them through s3sim URIs.
+struct NoopWrap(Arc<StoreRouter>);
+
+impl ObjectStore for NoopWrap {
+    fn get(&self, key: &str) -> alaas::store::StoreResult<Vec<u8>> {
+        self.0.s3sim_backing().get(key)
+    }
+    fn put(&self, key: &str, data: &[u8]) -> alaas::store::StoreResult<()> {
+        self.0.s3sim_backing().put(key, data)
+    }
+    fn exists(&self, key: &str) -> bool {
+        self.0.s3sim_backing().exists(key)
+    }
+    fn list(&self, prefix: &str) -> alaas::store::StoreResult<Vec<String>> {
+        self.0.s3sim_backing().list(prefix)
+    }
+    fn kind(&self) -> &'static str {
+        "wrap"
+    }
+}
+
+/// The shared fixture: every test uses this spec so the in-process
+/// comparator and the remote jobs see byte-identical data.
+const DATA_SEED: u64 = 7;
+const AGENT_SEED: u64 = 4242;
+const N_INIT: usize = 60;
+const N_POOL: usize = 240;
+const N_TEST: usize = 120;
+
+fn spec() -> DatasetSpec {
+    DatasetSpec::cifarsim(DATA_SEED).with_sizes(N_INIT, N_POOL, N_TEST)
+}
+
+fn base_config() -> AlaasConfig {
+    let mut cfg = AlaasConfig::default();
+    cfg.al_worker.host = "127.0.0.1".into();
+    cfg.al_worker.port = 0; // ephemeral
+    cfg.store.get_latency_us = 0;
+    cfg.store.bandwidth_mib_s = 0.0;
+    cfg.store.jitter = 0.0;
+    cfg
+}
+
+fn server_deps(store: Arc<StoreRouter>) -> ServerDeps {
+    ServerDeps {
+        store,
+        cache: Arc::new(DataCache::new(256 << 20, 8, true)),
+        backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
+        metrics: Registry::new(),
+    }
+}
+
+/// Labels the agent RPC needs: init (push), pool oracle, test truth.
+struct Labels {
+    init: Vec<u8>,
+    pool: Vec<u8>,
+    test: Vec<u8>,
+}
+
+fn dataset(store: &Arc<StoreRouter>, bucket: &str) -> (Manifest, Labels) {
+    let backing: Arc<dyn ObjectStore> =
+        Arc::new(NoopWrap(store.clone())) as Arc<dyn ObjectStore>;
+    let manifest = generate_into_store(&spec(), &backing, "s3sim", bucket);
+    let oracle = Oracle::load(&backing, bucket).unwrap();
+    let ids = |refs: &[alaas::store::SampleRef]| -> Vec<u32> {
+        refs.iter().map(|s| s.id).collect()
+    };
+    let labels = Labels {
+        init: oracle.label(&ids(&manifest.init)),
+        pool: oracle.eval_labels(&ids(&manifest.pool)),
+        test: oracle.eval_labels(&ids(&manifest.test)),
+    };
+    (manifest, labels)
+}
+
+/// The headline fixture config: unreachable target so the loop runs to
+/// its round limit; min_history 2 so eliminations start at round 1.
+fn agent_cfg() -> PsheaConfig {
+    PsheaConfig {
+        target_accuracy: 2.0,
+        max_budget: 1_000_000,
+        round_budget: 20,
+        converge_rounds: 0,
+        converge_eps: 0.0,
+        max_rounds: 4,
+        min_history: 2,
+        initial_accuracy: None,
+    }
+}
+
+fn arm_names() -> Vec<String> {
+    ["least_confidence", "margin_confidence", "entropy"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+/// The ground truth: Algorithm 1 run in-process on the same generated
+/// data, via `sim::AlExperiment` (the CLI agent's engine).
+fn in_process_trace() -> PsheaTrace {
+    let gen = generate(&spec());
+    let backend: Arc<dyn ComputeBackend> = Arc::new(HostBackend::new());
+    let mut exp = AlExperiment::from_generated(
+        backend,
+        &gen,
+        spec().num_classes,
+        TrainConfig::default(),
+        AGENT_SEED,
+    )
+    .unwrap();
+    run_pshea(&mut exp, &arm_names(), &agent_cfg()).unwrap()
+}
+
+fn elimination_order(t: &PsheaTrace) -> Vec<(usize, String)> {
+    t.records
+        .iter()
+        .filter(|r| r.eliminated)
+        .map(|r| (r.round, r.strategy.clone()))
+        .collect()
+}
+
+fn assert_trace_parity(got: &PsheaTrace, want: &PsheaTrace, tag: &str) {
+    assert_eq!(got.stop, want.stop, "{tag}: stop reason");
+    assert_eq!(got.rounds, want.rounds, "{tag}: rounds-to-stop");
+    assert_eq!(got.survivors, want.survivors, "{tag}: surviving strategy");
+    assert_eq!(
+        elimination_order(got),
+        elimination_order(want),
+        "{tag}: elimination order"
+    );
+    assert_eq!(got.total_budget, want.total_budget, "{tag}: budget spent");
+    assert_eq!(got.records.len(), want.records.len(), "{tag}: record count");
+    for (a, b) in got.records.iter().zip(&want.records) {
+        assert_eq!((a.round, &a.strategy), (b.round, &b.strategy), "{tag}: record order");
+        assert!(
+            (a.accuracy - b.accuracy).abs() < 1e-9,
+            "{tag}: round {} {} accuracy {} vs {}",
+            a.round,
+            a.strategy,
+            a.accuracy,
+            b.accuracy
+        );
+    }
+    assert!((got.best_accuracy - want.best_accuracy).abs() < 1e-9, "{tag}: best accuracy");
+}
+
+struct SingleHarness {
+    server: AlServer,
+    manifest: Manifest,
+    labels: Labels,
+}
+
+fn single_harness() -> SingleHarness {
+    let cfg = base_config();
+    let store = Arc::new(StoreRouter::new("/tmp", &cfg.store));
+    let (manifest, labels) = dataset(&store, "ag-ds");
+    let server = AlServer::start(cfg, server_deps(store)).expect("server starts");
+    SingleHarness { server, manifest, labels }
+}
+
+struct ClusterHarness {
+    coordinator: Coordinator,
+    coord_metrics: Arc<Registry>,
+    workers: Vec<AlServer>,
+    manifest: Manifest,
+    labels: Labels,
+}
+
+fn cluster_harness(n_workers: usize) -> ClusterHarness {
+    let cfg = base_config();
+    let store = Arc::new(StoreRouter::new("/tmp", &cfg.store));
+    let (manifest, labels) = dataset(&store, "ag-cl-ds");
+    let workers: Vec<AlServer> = (0..n_workers)
+        .map(|_| AlServer::start(cfg.clone(), server_deps(store.clone())).unwrap())
+        .collect();
+    let mut coord_cfg = cfg;
+    coord_cfg.cluster.workers = workers.iter().map(|w| w.addr().to_string()).collect();
+    let coord_metrics = Registry::new();
+    let coordinator = Coordinator::start(
+        coord_cfg,
+        CoordinatorDeps {
+            backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
+            metrics: coord_metrics.clone(),
+        },
+    )
+    .unwrap();
+    ClusterHarness { coordinator, coord_metrics, workers, manifest, labels }
+}
+
+fn run_remote_job(
+    client: &mut AlClient,
+    manifest: &Manifest,
+    labels: &Labels,
+    cfg: &PsheaConfig,
+) -> PsheaTrace {
+    client.push_data("s", manifest, Some(&labels.init)).unwrap();
+    let job = client
+        .agent_start("s", &arm_names(), cfg, &labels.pool, &labels.test, AGENT_SEED)
+        .unwrap();
+    client.agent_result(&job, Duration::from_secs(600)).unwrap()
+}
+
+#[test]
+fn remote_agent_matches_in_process_pshea_on_single_server() {
+    let want = in_process_trace();
+    // the loop must actually eliminate arms for the parity to be
+    // meaningful: 3 arms, elimination from round 1, round limit 4
+    assert_eq!(want.stop, StopReason::RoundLimit);
+    assert_eq!(elimination_order(&want).len(), 2);
+    assert_eq!(want.survivors.len(), 1);
+
+    let h = single_harness();
+    let mut client = AlClient::connect(&h.server.addr().to_string()).unwrap();
+    let got = run_remote_job(&mut client, &h.manifest, &h.labels, &agent_cfg());
+    assert_trace_parity(&got, &want, "single-server");
+}
+
+#[test]
+fn remote_agent_matches_in_process_pshea_on_cluster() {
+    let want = in_process_trace();
+    let h = cluster_harness(2);
+    let mut client = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
+    let got = run_remote_job(&mut client, &h.manifest, &h.labels, &agent_cfg());
+    assert_trace_parity(&got, &want, "2-worker coordinator");
+    drop(h.workers);
+}
+
+#[test]
+fn agent_job_edge_cases_unknown_id_and_status_after_completion() {
+    let h = single_harness();
+    let mut client = AlClient::connect(&h.server.addr().to_string()).unwrap();
+
+    // unknown job ids are clean remote errors on every method
+    for call in ["agent_status", "agent_result", "agent_cancel"] {
+        let mut p = alaas::json::Map::new();
+        p.insert("job", alaas::json::Value::from("nope"));
+        let err = client.call(call, alaas::json::Value::Object(p)).unwrap_err();
+        assert!(format!("{err}").contains("unknown job"), "{call}: {err}");
+    }
+    // starting on an unknown session fails cleanly too
+    let err = client
+        .agent_start("ghost", &arm_names(), &agent_cfg(), &[], &[], 1)
+        .unwrap_err();
+    assert!(format!("{err}").contains("unknown session"), "{err}");
+
+    // a quick 2-round single-arm job; status after completion keeps the
+    // full round log and the final state
+    client.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+    let cfg = PsheaConfig { max_rounds: 2, ..agent_cfg() };
+    let strategies = vec!["entropy".to_string()];
+    let job = client
+        .agent_start("s", &strategies, &cfg, &h.labels.pool, &h.labels.test, AGENT_SEED)
+        .unwrap();
+    let trace = client.agent_result(&job, Duration::from_secs(600)).unwrap();
+    assert_eq!(trace.rounds, 2);
+    assert_eq!(trace.total_budget, 2 * cfg.round_budget);
+    assert_eq!(trace.survivors, strategies);
+
+    let st = client.agent_status(&job).unwrap();
+    assert_eq!(st.get("status").unwrap().as_str(), Some("done"));
+    assert_eq!(st.get("rounds").unwrap().as_usize(), Some(2));
+    assert_eq!(
+        st.get("budget_spent").unwrap().as_usize(),
+        Some(2 * cfg.round_budget)
+    );
+    assert_eq!(
+        st.get("records").unwrap().as_array().map(|a| a.len()),
+        Some(2),
+        "round log preserved after completion"
+    );
+
+    // label-array validation: wrong pool_labels length is refused
+    let err = client
+        .agent_start("s", &strategies, &cfg, &[1, 2, 3], &h.labels.test, 1)
+        .unwrap_err();
+    assert!(format!("{err}").contains("pool_labels"), "{err}");
+}
+
+#[test]
+fn agent_cancel_mid_run_stops_labeling_spend() {
+    let h = single_harness();
+    let mut client = AlClient::connect(&h.server.addr().to_string()).unwrap();
+    client.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+    // a long job: tiny rounds, no caps except the pool itself
+    let cfg = PsheaConfig {
+        target_accuracy: 2.0,
+        max_budget: 1_000_000,
+        round_budget: 1,
+        converge_rounds: 0,
+        converge_eps: 0.0,
+        max_rounds: 0,
+        min_history: 2,
+        initial_accuracy: None,
+    };
+    let strategies = vec!["least_confidence".to_string(), "entropy".to_string()];
+    let job = client
+        .agent_start("s", &strategies, &cfg, &h.labels.pool, &h.labels.test, AGENT_SEED)
+        .unwrap();
+    // wait until the job demonstrably spends budget, then cancel
+    let mut spent = 0;
+    for _ in 0..600 {
+        let st = client.agent_status(&job).unwrap();
+        spent = st.get("budget_spent").unwrap().as_usize().unwrap();
+        if spent >= 3 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(spent >= 3, "job never started spending");
+    assert!(client.agent_cancel(&job).unwrap(), "job should still be running");
+    let err = client.agent_result(&job, Duration::from_secs(120)).unwrap_err();
+    assert!(format!("{err}").contains("cancelled"), "{err}");
+    // spend is frozen: the status after cancellation stops moving
+    let st = client.agent_status(&job).unwrap();
+    assert_eq!(st.get("status").unwrap().as_str(), Some("cancelled"));
+    let frozen = st.get("budget_spent").unwrap().as_usize().unwrap();
+    assert!(frozen < N_POOL * 2, "cancel did not stop the loop");
+    std::thread::sleep(Duration::from_millis(300));
+    let st = client.agent_status(&job).unwrap();
+    assert_eq!(
+        st.get("budget_spent").unwrap().as_usize().unwrap(),
+        frozen,
+        "labeling spend moved after cancellation"
+    );
+    // cancelling a finished job reports not-running
+    assert!(!client.agent_cancel(&job).unwrap());
+}
+
+#[test]
+fn worker_killed_mid_job_redispatches_and_finishes() {
+    let want = in_process_trace();
+    let mut h = cluster_harness(2);
+    let mut client = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
+    client.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+    let job = client
+        .agent_start(
+            "s",
+            &arm_names(),
+            &agent_cfg(),
+            &h.labels.pool,
+            &h.labels.test,
+            AGENT_SEED,
+        )
+        .unwrap();
+    // kill one worker immediately: its shard must be re-dispatched to the
+    // survivor and the job must still finish with the exact trace (the
+    // top-k merges are shard-layout independent)
+    let dead = h.workers.remove(0);
+    dead.shutdown();
+    let got = client.agent_result(&job, Duration::from_secs(600)).unwrap();
+    assert_trace_parity(&got, &want, "kill-mid-job");
+
+    let snap = h.coord_metrics.snapshot();
+    let counters = snap.get("counters").unwrap();
+    let counter = |name: &str| -> i64 {
+        counters.get(name).and_then(|v| v.as_i64()).unwrap_or(0)
+    };
+    assert!(
+        counter("cluster.shard_redispatch") >= 1,
+        "the dead worker's shard was never re-dispatched"
+    );
+    assert!(counter("cluster.workers_dead") >= 1);
+    assert!(
+        counters.get("cluster.scan.straggler_ms").is_some(),
+        "straggler gauge missing"
+    );
+    assert!(counter("agent.jobs_done") == 1);
+}
+
+#[test]
+fn agent_metrics_flow_on_single_server() {
+    let h = single_harness();
+    let mut client = AlClient::connect(&h.server.addr().to_string()).unwrap();
+    let got = run_remote_job(&mut client, &h.manifest, &h.labels, &agent_cfg());
+    assert!(!got.survivors.is_empty());
+    let m = client.metrics().unwrap();
+    let counters = m.get("counters").unwrap();
+    let counter = |name: &str| -> i64 {
+        counters.get(name).and_then(|v| v.as_i64()).unwrap_or(0)
+    };
+    assert_eq!(counter("agent.jobs_started"), 1);
+    assert_eq!(counter("agent.jobs_done"), 1);
+    assert_eq!(counter("agent.eliminations"), 2);
+    assert_eq!(counter("agent.live_arms"), 1);
+    assert!(counter("agent.rounds") >= 4);
+    let meters = m.get("meters").unwrap();
+    assert_eq!(
+        meters.get("agent.labels").unwrap().get("count").unwrap().as_usize(),
+        Some(got.total_budget)
+    );
+    assert!(m.get("histograms").unwrap().get("agent.round").is_some());
+    // the agent path records rpc latencies like every other method
+    assert!(m.get("histograms").unwrap().get("rpc.agent_start").is_some());
+}
