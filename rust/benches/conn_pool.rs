@@ -1,0 +1,181 @@
+//! Pooled vs per-call dialing for worker RPCs (DESIGN.md §Wire): the same
+//! echo exchange driven through a `ConnPool` with reuse on
+//! (`max_idle_per_peer = 4`) and off (`= 0`: every call dials and
+//! `hello`-negotiates a fresh connection), for a small control-plane call
+//! and for the 10k x 64 `select_shard`-sized scatter payload.
+//!
+//! Run: `cargo bench --bench conn_pool`
+//!
+//! Besides the table, the bench writes a machine-readable `BENCH_PR4.json`
+//! at the repo root; CI's bench-regression gate (`tools/bench_gate.py`)
+//! checks its ratios against `tools/bench_baseline.json`.
+
+use std::net::TcpListener;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+use alaas::json::{self, Map, Value};
+use alaas::metrics::Registry;
+use alaas::server::pool::{ConnPool, PoolConfig};
+use alaas::server::rpc;
+use alaas::server::wire::{self, Payload, WireMode};
+use alaas::util::bench::{fmt_dur, measure, Sample, Table};
+use alaas::util::mat::Mat;
+use alaas::util::rng::Rng;
+
+const SCATTER_ROWS: usize = 10_000;
+const SCATTER_COLS: usize = 64;
+
+/// Loopback RPC server speaking the real dispatch loop (`serve_conn`):
+/// answers `hello` (so pooled dials negotiate the binary wire exactly as
+/// against an `AlServer`) and echoes `echo` params back as the result.
+fn start_echo_server() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    let shutdown = Arc::new(AtomicBool::new(false));
+    std::thread::spawn(move || {
+        let metrics = Registry::new();
+        for conn in listener.incoming() {
+            let Ok(mut stream) = conn else { continue };
+            let metrics = metrics.clone();
+            let shutdown = shutdown.clone();
+            std::thread::spawn(move || {
+                rpc::serve_conn(
+                    &mut stream,
+                    "bench",
+                    &shutdown,
+                    &metrics,
+                    WireMode::Binary,
+                    |method, params, _mode| match method {
+                        "hello" => {
+                            Ok(Payload::json(wire::hello_reply(&params.value, WireMode::Binary)))
+                        }
+                        "echo" => Ok(params.to_payload()),
+                        other => Err(format!("unknown method '{other}'")),
+                    },
+                );
+            });
+        }
+    });
+    addr
+}
+
+struct CaseStats {
+    pooled: Sample,
+    per_call: Sample,
+    pooled_dials: u64,
+    per_call_dials: u64,
+}
+
+fn run_case(addr: &str, params: &Payload, warmup: usize, runs: usize) -> CaseStats {
+    let mut samples = Vec::new();
+    let mut dials = Vec::new();
+    for max_idle in [4usize, 0] {
+        let metrics = Registry::new();
+        let pool = ConnPool::new(
+            PoolConfig { max_idle_per_peer: max_idle, idle_timeout_ms: 60_000 },
+            WireMode::Binary,
+            Some(metrics.clone()),
+        );
+        let sample = measure(warmup, runs, || {
+            let body = pool.call(addr, "echo", params, None).expect("echo call");
+            assert!(!body.value.is_null());
+        });
+        samples.push(sample);
+        dials.push(metrics.counter("pool.dials").load(std::sync::atomic::Ordering::Relaxed));
+    }
+    let per_call = samples.pop().unwrap();
+    let pooled = samples.pop().unwrap();
+    let per_call_dials = dials.pop().unwrap();
+    let pooled_dials = dials.pop().unwrap();
+    CaseStats { pooled, per_call, pooled_dials, per_call_dials }
+}
+
+fn case_obj(s: &CaseStats) -> Value {
+    let ms = |d: Duration| Value::Number(d.as_secs_f64() * 1e3);
+    let cps = |smp: &Sample| Value::Number(1.0 / smp.mean().as_secs_f64().max(1e-12));
+    let mut m = Map::new();
+    m.insert("pooled_ms_mean", ms(s.pooled.mean()));
+    m.insert("per_call_ms_mean", ms(s.per_call.mean()));
+    m.insert("pooled_ms_p50", ms(s.pooled.percentile(0.5)));
+    m.insert("per_call_ms_p50", ms(s.per_call.percentile(0.5)));
+    m.insert("pooled_calls_per_sec", cps(&s.pooled));
+    m.insert("per_call_calls_per_sec", cps(&s.per_call));
+    m.insert(
+        "pooled_speedup",
+        Value::Number(
+            s.per_call.mean().as_secs_f64() / s.pooled.mean().as_secs_f64().max(1e-12),
+        ),
+    );
+    m.insert("pooled_dials", Value::from(s.pooled_dials));
+    m.insert("per_call_dials", Value::from(s.per_call_dials));
+    Value::Object(m)
+}
+
+fn main() {
+    let addr = start_echo_server();
+
+    // small control-plane call: the agent-loop / probe shape where the
+    // dial used to dominate the payload
+    let mut p = Map::new();
+    p.insert("session", Value::from("bench"));
+    p.insert("budget", Value::from(16usize));
+    let small = Payload::json(Value::Object(p));
+    let small_stats = run_case(&addr, &small, 20, 200);
+
+    // 10k x 64 scatter payload: the select_shard refine shape from
+    // benches/rpc_wire.rs, now over pooled vs fresh connections
+    let mut rng = Rng::new(7);
+    let m = Mat::from_vec(
+        (0..SCATTER_ROWS * SCATTER_COLS).map(|_| rng.normal_f32()).collect(),
+        SCATTER_ROWS,
+        SCATTER_COLS,
+    );
+    let mut scatter = Payload::default();
+    let ph = scatter.stash_mat(m);
+    let mut sp = Map::new();
+    sp.insert("cand_emb", ph);
+    sp.insert("scan_ms", Value::Number(12.5));
+    scatter.value = Value::Object(sp);
+    let scatter_stats = run_case(&addr, &scatter, 2, 15);
+
+    let mut table = Table::new(
+        &format!(
+            "conn_pool: pooled vs per-call dialing (small call + {SCATTER_ROWS}x{SCATTER_COLS} scatter)"
+        ),
+        &["case", "pooled(mean)", "per_call(mean)", "speedup", "pooled dials", "per-call dials"],
+    );
+    for (name, s) in [("small", &small_stats), ("scatter", &scatter_stats)] {
+        table.row(&[
+            name.to_string(),
+            fmt_dur(s.pooled.mean()),
+            fmt_dur(s.per_call.mean()),
+            format!(
+                "{:.2}x",
+                s.per_call.mean().as_secs_f64() / s.pooled.mean().as_secs_f64().max(1e-12)
+            ),
+            s.pooled_dials.to_string(),
+            s.per_call_dials.to_string(),
+        ]);
+    }
+    table.print();
+
+    let mut root = Map::new();
+    root.insert("bench", Value::from("conn_pool"));
+    root.insert("case", Value::from(format!("small + {SCATTER_ROWS}x{SCATTER_COLS}")));
+    root.insert("small", case_obj(&small_stats));
+    root.insert("scatter", case_obj(&scatter_stats));
+    let out = json::to_string_pretty(&Value::Object(root));
+    // cargo runs benches from the package root (rust/); the tracking file
+    // lives at the repo root next to ROADMAP.md
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_PR4.json"
+    } else {
+        "BENCH_PR4.json"
+    };
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -20,7 +20,7 @@
 //! max-minus-min spread in the `cluster.scan.straggler_ms` gauge.
 
 use std::collections::{HashMap, HashSet};
-use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -30,9 +30,10 @@ use crate::config::AlaasConfig;
 use crate::json::{Map, Value};
 use crate::metrics::Registry;
 use crate::runtime::backend::ComputeBackend;
+use crate::server::pool::{self, ConnPool};
 use crate::server::rpc::{self, RpcError};
 use crate::server::server::{parse_agent_start, parse_init_labels, str_param};
-use crate::server::wire::{self, Payload, WireMode};
+use crate::server::wire::{self, Body, Payload};
 use crate::server::SELECT_SEED;
 use crate::store::{Manifest, SampleRef};
 use crate::strategies::{self, SelectCtx};
@@ -88,10 +89,12 @@ struct CoordState {
     sessions: Mutex<HashMap<String, Arc<Mutex<ClusterSession>>>>,
     /// Monotonic push counter feeding `ClusterSession::epoch`.
     push_epoch: std::sync::atomic::AtomicU64,
-    /// Negotiated wire encoding per worker address (DESIGN.md §Wire):
-    /// absent = optimistic binary; `Json` after a peer refused or garbled
-    /// a v2 frame. Cleared when the address (re-)registers.
-    wire_modes: Mutex<HashMap<String, WireMode>>,
+    /// Persistent, per-worker negotiated connections (DESIGN.md §Wire):
+    /// every worker RPC checks one out instead of dialing, so an
+    /// N-shard scatter costs at most one dial per worker, not one per
+    /// call. Invalidated per address on re-registration and on observed
+    /// death.
+    pool: ConnPool,
     /// Background PSHEA jobs fanning out over worker shards (§Agent).
     jobs: JobRegistry,
     shutdown: AtomicBool,
@@ -118,13 +121,22 @@ impl Coordinator {
             .iter()
             .map(|a| WorkerSlot { addr: a.clone(), alive: true })
             .collect();
+        // worker connections: dial + negotiate once per worker, reuse
+        // across every scatter (connect timeout matches the old per-call
+        // dial so dead-worker detection latency is unchanged)
+        let conn_pool = ConnPool::new(
+            config.server.pool.clone(),
+            config.server.wire,
+            Some(deps.metrics.clone()),
+        )
+        .with_timeouts(WORKER_DIAL_TIMEOUT, POLL_RPC_TIMEOUT);
         let state = Arc::new(CoordState {
             config,
             deps,
             workers: Mutex::new(workers),
             sessions: Mutex::new(HashMap::new()),
             push_epoch: std::sync::atomic::AtomicU64::new(0),
-            wire_modes: Mutex::new(HashMap::new()),
+            pool: conn_pool,
             jobs: JobRegistry::new(),
             shutdown: AtomicBool::new(false),
         });
@@ -153,7 +165,10 @@ impl Coordinator {
         if self.state.shutdown.swap(true, Ordering::SeqCst) {
             return;
         }
-        let _ = TcpStream::connect(self.addr);
+        // wake the accept loop through the shared dialing path (the
+        // pool's `dial`), not an ad-hoc `TcpStream::connect`, so liveness
+        // checks and real RPCs cannot diverge
+        let _ = pool::dial(&self.addr.to_string(), Duration::from_millis(500));
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
         }
@@ -199,7 +214,7 @@ fn handle_conn(mut stream: TcpStream, state: Arc<CoordState>) {
 fn dispatch(
     state: &Arc<CoordState>,
     method: &str,
-    params: &Payload,
+    params: &Body,
 ) -> Result<Payload, String> {
     match method {
         "hello" => Ok(Payload::json(wire::hello_reply(
@@ -234,6 +249,9 @@ const FAST_RPC_TIMEOUT: Duration = Duration::from_secs(30);
 /// Monitoring polls (`status`, `cache_stats`) must never hang the
 /// coordinator on one stuck worker.
 const POLL_RPC_TIMEOUT: Duration = Duration::from_secs(10);
+/// Connect timeout for worker dials (the pre-pool per-call value, kept
+/// so dead-worker detection latency is unchanged).
+const WORKER_DIAL_TIMEOUT: Duration = Duration::from_secs(2);
 
 /// Read deadline for a `select_shard` call: the worker may legitimately
 /// block for the client-requested `wait_ms` while its scan finishes, so
@@ -243,139 +261,20 @@ fn select_rpc_timeout(wait_ms: u64) -> Duration {
     Duration::from_millis(wait_ms) + Duration::from_secs(60)
 }
 
-/// One blocking RPC to a worker over a fresh connection, in `mode`.
-fn call_worker_once(
-    state: &CoordState,
-    addr: &str,
-    method: &str,
-    params: &Payload,
-    read_timeout: Duration,
-    mode: WireMode,
-) -> Result<Payload, RpcError> {
-    let sock = addr
-        .to_socket_addrs()
-        .ok()
-        .and_then(|mut it| it.next())
-        .ok_or_else(|| RpcError::Malformed(format!("bad worker addr '{addr}'")))?;
-    let mut stream = TcpStream::connect_timeout(&sock, Duration::from_secs(2))?;
-    stream.set_nodelay(true).ok();
-    stream.set_read_timeout(Some(read_timeout)).ok();
-    let metrics = Some(state.deps.metrics.as_ref());
-    rpc::send_request_wire(&mut stream, 1, method, params, mode, metrics)?;
-    rpc::recv_response_wire(&mut stream, 1, metrics)
-}
-
-/// Does this failure look like "the peer cannot speak the binary wire"
-/// rather than a dead worker or an application error? `Some(true)` means
-/// the peer said so explicitly (`ERR_BINARY_DISABLED` from a JSON-forced
-/// v2 server) — safe to cache the downgrade. `Some(false)` means the
-/// transport died the way a pre-v2 peer garbling a v2 frame would
-/// (`Closed`/`Malformed`) — worth one JSON retry, but NOT a cached
-/// downgrade, since a transient connection drop looks identical and must
-/// not strand a healthy binary worker on the slow path.
-fn wire_refusal(e: &RpcError) -> Option<bool> {
-    match e {
-        RpcError::Remote(msg) if msg.contains(wire::ERR_BINARY_DISABLED) => Some(true),
-        RpcError::Closed | RpcError::Malformed(_) => Some(false),
-        _ => None,
-    }
-}
-
-/// Record that `addr` speaks JSON only (until it re-`register`s).
-fn cache_json_downgrade(state: &CoordState, addr: &str) {
-    state
-        .deps
-        .metrics
-        .counter("wire.json_fallbacks")
-        .fetch_add(1, Ordering::Relaxed);
-    state
-        .wire_modes
-        .lock()
-        .unwrap()
-        .insert(addr.to_string(), WireMode::Json);
-}
-
-/// One v1 `hello` round trip asking `addr` for the binary wire.
-/// `Some(true)` = peer agreed; `Some(false)` = peer answered but cannot
-/// or will not speak v2 (including pre-v2 "unknown method"); `None` =
-/// transport failure, nothing learned — stay optimistic rather than
-/// stranding a flaky-but-binary worker on the slow path.
-fn probe_binary(state: &CoordState, addr: &str) -> Option<bool> {
-    let mut p = Map::new();
-    p.insert("wire", Value::from(WireMode::Binary.as_str()));
-    p.insert("version", Value::from(wire::WIRE_VERSION as u64));
-    let params = Payload::json(Value::Object(p));
-    match call_worker_once(state, addr, "hello", &params, POLL_RPC_TIMEOUT, WireMode::Json) {
-        Ok(r) => Some(r.value.get("wire").and_then(Value::as_str) == Some("binary")),
-        Err(RpcError::Remote(_)) => Some(false),
-        Err(_) => None,
-    }
-}
-
-/// One blocking RPC to a worker: optimistic binary (unless this process
-/// is configured `wire = "json"` or the address is cached as JSON-only),
-/// with a one-shot JSON retry when the peer refuses the v2 frame; the
-/// address is downgraded to JSON-only on an explicit refusal, or when a
-/// follow-up `hello` probe confirms the peer cannot speak v2.
+/// One blocking RPC to a worker over a pooled, wire-negotiated
+/// connection (DESIGN.md §Wire). The pool dials + `hello`-negotiates at
+/// most once per connection, reuses it across calls, evicts stale
+/// sockets, and retries a dead *parked* connection once on a fresh dial —
+/// so transport errors surfacing here mean the worker itself is
+/// unreachable, exactly as with the old per-call dial.
 fn call_worker(
     state: &CoordState,
     addr: &str,
     method: &str,
     params: &Payload,
     read_timeout: Duration,
-) -> Result<Payload, RpcError> {
-    let mode = if state.config.server.wire == WireMode::Json {
-        WireMode::Json
-    } else {
-        *state
-            .wire_modes
-            .lock()
-            .unwrap()
-            .get(addr)
-            .unwrap_or(&WireMode::Binary)
-    };
-    match call_worker_once(state, addr, method, params, read_timeout, mode) {
-        Err(e) if mode == WireMode::Binary => match wire_refusal(&e) {
-            Some(cache_downgrade) => {
-                crate::log_debug!(
-                    "cluster",
-                    "worker {addr} refused binary wire ({e}); retrying as JSON"
-                );
-                let retry = call_worker_once(
-                    state,
-                    addr,
-                    method,
-                    params,
-                    read_timeout,
-                    WireMode::Json,
-                );
-                if retry.is_ok() {
-                    if cache_downgrade {
-                        // explicit refusal: downgrade sticks immediately
-                        cache_json_downgrade(state, addr);
-                    } else {
-                        // ambiguous (Closed/Malformed): a pre-v2 peer and
-                        // a transient drop look identical from the failed
-                        // call alone. One cheap hello probe decides, so a
-                        // pre-v2 worker doesn't pay a doubled bulk send on
-                        // every future RPC and a healthy binary worker
-                        // isn't stranded on the slow path.
-                        state
-                            .deps
-                            .metrics
-                            .counter("wire.json_retries")
-                            .fetch_add(1, Ordering::Relaxed);
-                        if probe_binary(state, addr) == Some(false) {
-                            cache_json_downgrade(state, addr);
-                        }
-                    }
-                }
-                retry
-            }
-            None => Err(e),
-        },
-        other => other,
-    }
+) -> Result<Body, RpcError> {
+    state.pool.call(addr, method, params, Some(read_timeout))
 }
 
 /// Snapshot of live worker slots as (slot index, addr).
@@ -401,8 +300,11 @@ fn mark_dead(state: &CoordState, slot: usize) {
     if let Some(w) = ws.get_mut(slot) {
         if w.alive {
             w.alive = false;
-            crate::log_warn!("cluster", "worker {} ({}) marked dead", slot, w.addr);
+            let addr = w.addr.clone();
+            crate::log_warn!("cluster", "worker {} ({}) marked dead", slot, addr);
             drop(ws);
+            // its pooled connections are junk now; free the sockets
+            state.pool.invalidate(&addr);
             // count actual transitions, not every observation of a dead slot
             state
                 .deps
@@ -427,8 +329,10 @@ fn register(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
     }
     let live = ws.iter().filter(|w| w.alive).count();
     drop(ws);
-    // a (re)registered worker may have a new wire config; renegotiate
-    state.wire_modes.lock().unwrap().remove(&addr);
+    // a (re)registered worker may be a new process with a new wire
+    // config: drop its pooled connections so the next call re-dials and
+    // re-negotiates instead of writing into a dead socket
+    state.pool.invalidate(&addr);
     crate::log_info!("cluster", "worker {addr} registered ({live} live)");
     let mut m = Map::new();
     m.insert("workers", Value::from(live));
@@ -522,7 +426,7 @@ fn dispatch_shard(
 }
 
 /// `push_data {session, manifest, init_labels?}` — shard + scatter.
-fn push_data(state: &Arc<CoordState>, params: &Payload) -> Result<Value, String> {
+fn push_data(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> {
     let session_id = str_param(&params.value, "session")?;
     let manifest_v = params.value.get("manifest").ok_or("missing param 'manifest'")?;
     let manifest = Manifest::from_value(manifest_v).map_err(|e| e.to_string())?;
@@ -742,7 +646,7 @@ fn call_shard_redispatch(
     method: &str,
     params: &Payload,
     read_timeout: Duration,
-) -> Result<(Payload, usize), String> {
+) -> Result<(Body, usize), String> {
     let mut slot = start_slot;
     let mut last_err = String::from("no live workers");
     // first attempt on the assigned worker, then walk survivors; a worker
@@ -873,13 +777,15 @@ fn next_live_slot(state: &CoordState, after: usize) -> Option<usize> {
 }
 
 fn decode_shard_reply(
-    reply: Payload,
+    reply: Body,
     job: &ShardJob,
     worker: usize,
 ) -> Result<ShardReply, String> {
-    // consumed by value: each tensor section is used exactly once, so
-    // the bulk matrices are moved out rather than cloned
-    let Payload { value: v, mut tensors } = reply;
+    // zero-copy consume (DESIGN.md §Wire): the reply's tensor sections
+    // stay in the received frame buffer; candidate score/embedding rows
+    // are copied exactly once, straight from that buffer into the merge
+    // inputs — no intermediate Mat per section.
+    let v = &reply.value;
     let to_global = |local: usize| -> Result<usize, String> {
         job.indices
             .get(local)
@@ -903,8 +809,8 @@ fn decode_shard_reply(
         // [N, D] embedding tensor whose rows parallel the slim candidate
         // list. A PR1-era worker instead embeds per-candidate float
         // arrays, which Candidate::from_value still decodes.
-        let cand_scores = wire::take_mat(&v, &mut tensors, "cand_scores")?;
-        let cand_emb = wire::take_mat(&v, &mut tensors, "cand_emb")?;
+        let cand_scores = reply.mat_ref("cand_scores")?;
+        let cand_emb = reply.mat_ref("cand_emb")?;
         for m in [&cand_scores, &cand_emb].into_iter().flatten() {
             if m.rows() != arr.len() {
                 return Err(format!(
@@ -919,16 +825,16 @@ fn decode_shard_reply(
             let mut cand = Candidate::from_value(c)?;
             cand.idx = to_global(cand.idx)?;
             if let Some(m) = &cand_scores {
-                cand.scores = m.row(i).to_vec();
+                cand.scores = m.row_vec(i);
             }
             if let Some(m) = &cand_emb {
-                cand.emb = m.row(i).to_vec();
+                cand.emb = m.row_vec(i);
             }
             candidates.push(cand);
         }
     }
-    let init_emb = wire::take_mat(&v, &mut tensors, "init_emb")?;
-    let test_emb = wire::take_mat(&v, &mut tensors, "test_emb")?;
+    let init_emb = reply.mat("init_emb")?;
+    let test_emb = reply.mat("test_emb")?;
     Ok(ShardReply {
         shard: job.shard,
         candidates,
@@ -1130,10 +1036,7 @@ fn query(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
             if all.is_empty() {
                 vec![]
             } else {
-                let emb =
-                    Mat::from_rows(all.iter().map(|c| c.emb.as_slice()));
-                let scores =
-                    Mat::from_rows(all.iter().map(|c| c.scores.as_slice()));
+                let (scores, emb) = merge::refine_inputs(&all);
                 let labeled = {
                     let s = sess.lock().unwrap();
                     s.init_emb.clone().unwrap_or_else(|| Mat::zeros(0, emb.cols()))
@@ -1297,9 +1200,9 @@ impl ClusterArmSelect {
                 &params,
                 select_rpc_timeout(self.wait_ms),
             )?;
-            let Payload { value: v, mut tensors } = reply;
-            let m = wire::take_mat(&v, &mut tensors, "emb")?
-                .ok_or("fetch_rows reply missing emb")?;
+            // zero-copy: each requested row is copied once, straight out
+            // of the reply's frame buffer
+            let m = reply.mat_ref("emb")?.ok_or("fetch_rows reply missing emb")?;
             if m.rows() != items.len() {
                 return Err(format!(
                     "fetch_rows returned {} rows, wanted {}",
@@ -1308,7 +1211,7 @@ impl ClusterArmSelect {
                 ));
             }
             for (row, &(g, _)) in items.iter().enumerate() {
-                emb_of.insert(g, m.row(row).to_vec());
+                emb_of.insert(g, m.row_vec(row));
             }
         }
         picked
@@ -1427,8 +1330,7 @@ impl ArmSelect for ClusterArmSelect {
                 if all.is_empty() {
                     return Ok(vec![]);
                 }
-                let emb = Mat::from_rows(all.iter().map(|c| c.emb.as_slice()));
-                let scores = Mat::from_rows(all.iter().map(|c| c.scores.as_slice()));
+                let (scores, emb) = merge::refine_inputs(&all);
                 let labeled = if arm_labeled.rows() == 0 {
                     self.init_emb.clone()
                 } else {
@@ -1507,7 +1409,7 @@ fn agent_bootstrap(
 /// `agent_start {session, strategies, config?, seed?, pool_labels,
 /// test_labels, wait_ms?}` — spawn a background PSHEA job whose arms
 /// evaluate across the session's worker shards (DESIGN.md §Agent).
-fn agent_start(state: &Arc<CoordState>, params: &Payload) -> Result<Value, String> {
+fn agent_start(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> {
     let session_id = str_param(&params.value, "session")?;
     let sess = get_session(state, &session_id)?;
     let (manifest, init_labels) = {

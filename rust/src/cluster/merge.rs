@@ -22,9 +22,13 @@ use std::cmp::Ordering;
 
 use crate::json::{Map, Value};
 use crate::strategies::ScoreColumn;
+use crate::util::mat::Mat;
 
 // Matrix wire forms live in the data-plane module with the v2 protocol
-// (DESIGN.md §Wire); Candidate's slim/fat JSON forms reuse them.
+// (DESIGN.md §Wire); Candidate's slim/fat JSON forms reuse them. On the
+// v2 wire the packed candidate tensors are consumed zero-copy: rows are
+// copied once from the frame buffer into `Candidate::scores`/`emb`
+// (coordinator::decode_shard_reply), then stacked here.
 use crate::server::wire::{f32s_from_value, f32s_to_value};
 #[cfg(test)]
 use crate::server::wire::{mat_from_value, mat_to_value};
@@ -95,6 +99,16 @@ pub fn merge_exact_topk(
     v.sort_by(|a, b| cmp_best_first(a.1, b.1, ascending).then_with(|| a.0.cmp(&b.0)));
     v.truncate(budget);
     v.into_iter().map(|(i, _)| i).collect()
+}
+
+/// Stack a candidate union's per-row score/embedding vectors into the
+/// `[N, 4]` / `[N, D]` matrices the refine pass consumes — shared by the
+/// plain `query` merge and the agent arm's distributed select so the two
+/// cannot drift.
+pub fn refine_inputs(all: &[&Candidate]) -> (Mat, Mat) {
+    let scores = Mat::from_rows(all.iter().map(|c| c.scores.as_slice()));
+    let emb = Mat::from_rows(all.iter().map(|c| c.emb.as_slice()));
+    (scores, emb)
 }
 
 /// One worker-reported candidate. `idx` is a *local* pool index on the

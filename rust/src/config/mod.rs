@@ -8,6 +8,7 @@
 //! setup, so the quickstart config is a handful of lines (Fig 2).
 
 use crate::json::Value;
+use crate::server::pool::PoolConfig;
 use crate::server::wire::WireMode;
 use crate::yamlmini;
 
@@ -248,11 +249,15 @@ pub struct ServerConfig {
     /// `json` (force v1 frames only; v2 requests are refused with the
     /// stable `binary wire disabled` error).
     pub wire: WireMode,
+    /// `server.pool.*` — persistent-connection pool for outbound RPCs
+    /// (`max_idle_per_peer`, `idle_timeout_ms`; `max_idle_per_peer: 0`
+    /// disables reuse: every call dials + negotiates a fresh connection).
+    pub pool: PoolConfig,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { wire: WireMode::Binary }
+        ServerConfig { wire: WireMode::Binary, pool: PoolConfig::default() }
     }
 }
 
@@ -465,6 +470,15 @@ impl AlaasConfig {
                     cerr("server.wire", format!("unknown wire mode '{name}' (json|binary)"))
                 })?;
             }
+            if let Some(p) = s.get("pool") {
+                if let Some(x) = p.get("max_idle_per_peer") {
+                    c.pool.max_idle_per_peer = req_usize(x, "server.pool.max_idle_per_peer")?;
+                }
+                if let Some(x) = p.get("idle_timeout_ms") {
+                    c.pool.idle_timeout_ms =
+                        req_usize(x, "server.pool.idle_timeout_ms")? as u64;
+                }
+            }
         }
 
         if let Some(s) = v.get("cache") {
@@ -541,6 +555,12 @@ impl AlaasConfig {
         }
         if !(0.0..1.0).contains(&self.store.jitter) {
             return Err(cerr("store.jitter", "must be in [0, 1)"));
+        }
+        if self.server.pool.idle_timeout_ms == 0 {
+            return Err(cerr(
+                "server.pool.idle_timeout_ms",
+                "must be >= 1 (set pool.max_idle_per_peer: 0 to disable reuse instead)",
+            ));
         }
         Ok(())
     }
@@ -689,6 +709,37 @@ cluster:
         assert_eq!(AlaasConfig::default().server.wire, WireMode::Binary);
         let e = AlaasConfig::from_yaml_str("server:\n  wire: msgpack\n").unwrap_err();
         assert_eq!(e.field, "server.wire");
+    }
+
+    #[test]
+    fn parses_server_pool_knobs() {
+        let cfg = AlaasConfig::from_yaml_str(
+            "server:\n  pool:\n    max_idle_per_peer: 8\n    idle_timeout_ms: 5000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.server.pool.max_idle_per_peer, 8);
+        assert_eq!(cfg.server.pool.idle_timeout_ms, 5000);
+        // defaults: pooling on
+        let d = AlaasConfig::default().server.pool;
+        assert_eq!(d.max_idle_per_peer, 4);
+        assert_eq!(d.idle_timeout_ms, 30_000);
+        // 0 = per-call dialing is a legal escape hatch ...
+        let cfg = AlaasConfig::from_yaml_str(
+            "server:\n  pool:\n    max_idle_per_peer: 0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.server.pool.max_idle_per_peer, 0);
+        // ... but a zero idle timeout is a config error, not a footgun
+        let e = AlaasConfig::from_yaml_str(
+            "server:\n  pool:\n    idle_timeout_ms: 0\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.field, "server.pool.idle_timeout_ms");
+        let e = AlaasConfig::from_yaml_str(
+            "server:\n  pool:\n    max_idle_per_peer: \"many\"\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.field, "server.pool.max_idle_per_peer");
     }
 
     #[test]

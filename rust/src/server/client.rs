@@ -6,37 +6,52 @@
 //! selected = al_client.query(budget=10)
 //! ```
 //!
-//! On connect the client negotiates the wire encoding with one `hello`
-//! round trip (DESIGN.md §Wire): a v2-capable server answers
-//! `{wire: "binary"}` and subsequent frames carry tensors as raw f32
-//! sections; a JSON-forced or pre-v2 server leaves the connection on the
-//! v1 JSON wire. `connect_with_wire(addr, WireMode::Json)` skips the
-//! probe and forces v1 frames.
+//! On connect the client dials through a [`ConnPool`] holding one
+//! persistent connection, negotiated with one `hello` round trip
+//! (DESIGN.md §Wire): a v2-capable server answers `{wire: "binary"}` and
+//! subsequent frames carry tensors as raw f32 sections; a JSON-forced or
+//! pre-v2 server leaves the connection on the v1 JSON wire.
+//! `connect_with_wire(addr, WireMode::Json)` skips the probe and forces
+//! v1 frames. If the pooled connection goes stale (server restart, idle
+//! close), the next call transparently re-dials and re-negotiates.
 
-use std::net::TcpStream;
 use std::time::Duration;
 
 use crate::agent::job as agent_job;
 use crate::agent::{PsheaConfig, PsheaTrace};
 use crate::json::{Map, Value};
-use crate::server::rpc::{self, RpcError};
-use crate::server::wire::{self, Payload, WireMode};
+use crate::server::pool::{ConnPool, PoolConfig};
+use crate::server::rpc::RpcError;
+use crate::server::wire::{Payload, WireMode};
 use crate::store::{Manifest, SampleRef};
 use crate::util::mat::Mat;
 
-/// Read deadline for the connect-time `hello` probe: a peer that accepts
-/// TCP but never answers must fail the constructor, not hang it.
-const HELLO_TIMEOUT: Duration = Duration::from_secs(10);
-
 /// Blocking RPC client for an AL server.
 pub struct AlClient {
-    stream: TcpStream,
-    next_id: u64,
+    pool: ConnPool,
+    addr: String,
     mode: WireMode,
 }
 
+/// The client keeps exactly one parked connection (it is a sequential,
+/// blocking API) and tolerates long pauses between calls before the pool
+/// ages it out and transparently re-dials.
+fn client_pool_config() -> PoolConfig {
+    PoolConfig { max_idle_per_peer: 1, idle_timeout_ms: 300_000 }
+}
+
+/// Connect bound for `connect`/`connect_with_wire` (and any transparent
+/// re-dial): generous enough for a lossy link's SYN retransmits, but a
+/// black-holed peer fails the constructor instead of hanging for the
+/// OS default (minutes). Use [`AlClient::connect_timeout`] for a
+/// tighter bound.
+const CLIENT_DIAL_TIMEOUT: Duration = Duration::from_secs(30);
+/// Read deadline for the dial-time `hello` negotiation.
+const CLIENT_HELLO_TIMEOUT: Duration = Duration::from_secs(10);
+
 impl AlClient {
     /// Connect to `addr` ("host:port"), preferring the binary wire.
+    /// Connect attempts are bounded by [`CLIENT_DIAL_TIMEOUT`].
     pub fn connect(addr: &str) -> Result<AlClient, RpcError> {
         Self::connect_with_wire(addr, WireMode::Binary)
     }
@@ -45,13 +60,9 @@ impl AlClient {
     /// `hello` negotiation (falling back to JSON when the peer refuses or
     /// predates it); `Json` skips the probe and speaks v1 frames only.
     pub fn connect_with_wire(addr: &str, prefer: WireMode) -> Result<AlClient, RpcError> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true).ok();
-        let mut c = AlClient { stream, next_id: 1, mode: WireMode::Json };
-        if prefer == WireMode::Binary {
-            c.negotiate(HELLO_TIMEOUT)?;
-        }
-        Ok(c)
+        let pool = ConnPool::new(client_pool_config(), prefer, None)
+            .with_timeouts(CLIENT_DIAL_TIMEOUT, CLIENT_HELLO_TIMEOUT);
+        Self::establish(pool, addr)
     }
 
     /// Connect with a timeout (binary-preferring, like `connect`); the
@@ -60,54 +71,66 @@ impl AlClient {
         addr: std::net::SocketAddr,
         timeout: Duration,
     ) -> Result<AlClient, RpcError> {
-        let stream = TcpStream::connect_timeout(&addr, timeout)?;
-        stream.set_nodelay(true).ok();
-        let mut c = AlClient { stream, next_id: 1, mode: WireMode::Json };
-        c.negotiate(timeout)?;
-        Ok(c)
+        let pool = ConnPool::new(client_pool_config(), WireMode::Binary, None)
+            .with_timeouts(timeout, timeout);
+        Self::establish(pool, &addr.to_string())
     }
 
-    /// The wire encoding negotiated for this connection.
+    /// Eagerly dial + negotiate the first connection so an unreachable or
+    /// hung peer fails the constructor, and `wire_mode()` reports the
+    /// negotiated plane immediately.
+    fn establish(pool: ConnPool, addr: &str) -> Result<AlClient, RpcError> {
+        let conn = pool.checkout(addr)?;
+        let mode = conn.mode();
+        pool.checkin(addr, conn);
+        Ok(AlClient { pool, addr: addr.to_string(), mode })
+    }
+
+    /// The wire encoding negotiated for the current pooled connection (a
+    /// transparent re-dial may renegotiate it).
     pub fn wire_mode(&self) -> WireMode {
         self.mode
     }
 
-    /// One `hello` round trip (always sent as v1 JSON, so any peer can
-    /// answer). A peer that doesn't know the method — or that refuses
-    /// binary — leaves the connection on the JSON wire. A probe that
-    /// times out fails the connect: the stream would be desynced if the
-    /// reply arrived later.
-    fn negotiate(&mut self, timeout: Duration) -> Result<(), RpcError> {
-        self.stream.set_read_timeout(Some(timeout)).ok();
-        let mut p = Map::new();
-        p.insert("wire", Value::from(WireMode::Binary.as_str()));
-        p.insert("version", Value::from(wire::WIRE_VERSION as u64));
-        let reply = self.call("hello", Value::Object(p));
-        // restore the blocking default for regular calls (query may
-        // legitimately wait out a long scan)
-        self.stream.set_read_timeout(None).ok();
-        match reply {
-            Ok(v) => {
-                if v.get("wire").and_then(Value::as_str) == Some("binary") {
-                    self.mode = WireMode::Binary;
-                }
-                Ok(())
-            }
-            // pre-v2 peer: "unknown method 'hello'" — stay on JSON; any
-            // other remote error is a real failure, not a version skew,
-            // and must surface rather than silently degrade the wire
-            Err(RpcError::Remote(msg)) if msg.contains("unknown method") => Ok(()),
-            Err(e) => Err(e),
-        }
-    }
-
     /// Raw RPC call with tensor sections — the escape hatch the cluster
     /// layer uses for matrix-bearing methods outside the Figure 2 API.
+    ///
+    /// Retry semantics: a parked connection that dies mid-exchange is
+    /// transparently re-dialed and the request **re-sent once** — fine
+    /// for the idempotent built-in methods, but a non-idempotent custom
+    /// method may execute twice; use [`AlClient::call_wire_once`] for
+    /// those.
     pub fn call_wire(&mut self, method: &str, params: Payload) -> Result<Payload, RpcError> {
-        let id = self.next_id;
-        self.next_id += 1;
-        rpc::send_request_wire(&mut self.stream, id, method, &params, self.mode, None)?;
-        rpc::recv_response_wire(&mut self.stream, id, None)
+        self.call_raw(method, params, true)
+    }
+
+    /// [`AlClient::call_wire`] without the stale-connection re-send: an
+    /// ambiguous mid-exchange failure surfaces as an error instead of
+    /// possibly executing the method twice (what the built-in
+    /// `agent_start` wrapper uses).
+    pub fn call_wire_once(
+        &mut self,
+        method: &str,
+        params: Payload,
+    ) -> Result<Payload, RpcError> {
+        self.call_raw(method, params, false)
+    }
+
+    fn call_raw(
+        &mut self,
+        method: &str,
+        params: Payload,
+        retry_stale: bool,
+    ) -> Result<Payload, RpcError> {
+        let (body, mode) = if retry_stale {
+            self.pool.call_negotiated(&self.addr, method, &params, None)?
+        } else {
+            self.pool.call_once(&self.addr, method, &params, None)?
+        };
+        // track renegotiations so mode-sensitive encodes (push_data's
+        // label form) follow the live connection
+        self.mode = mode;
+        Ok(body.into_payload())
     }
 
     /// Raw RPC call returning a plain `Value` (tensor sections, if the
@@ -262,7 +285,12 @@ impl AlClient {
         };
         p.insert("pool_labels", labels(pool_labels));
         p.insert("test_labels", labels(test_labels));
-        let v = self.call("agent_start", Value::Object(p))?;
+        // agent_start spawns a background job server-side: never let the
+        // pool silently re-send it after an ambiguous mid-exchange
+        // failure, or two jobs could spend the labeling budget
+        let v = self
+            .call_raw("agent_start", Payload::json(Value::Object(p)), false)?
+            .into_inline_value()?;
         v.get("job")
             .and_then(Value::as_str)
             .map(str::to_string)

@@ -6,7 +6,11 @@
 //!   binary-tensor (v2) payloads.
 //! * [`wire`] — the v2 binary tensor data plane: JSON control header +
 //!   raw little-endian f32 tensor sections, per-connection negotiation,
-//!   `[server] wire` forcing knob (DESIGN.md §Wire).
+//!   `[server] wire` forcing knob, zero-copy decode views (DESIGN.md
+//!   §Wire).
+//! * [`pool`] — per-peer persistent connection pool: dial + negotiate
+//!   once, reuse across calls, detect/evict stale sockets, `[server.pool]`
+//!   knobs and `pool.*` metrics (DESIGN.md §Wire).
 //! * [`server`] — `AlServer`: sessions, background dataset processing
 //!   through the pipeline, query serving, the agent endpoint, metrics.
 //!   Also speaks the worker-facing cluster methods (`scan_shard`,
@@ -16,11 +20,13 @@
 //!   (`push_data`, `query(budget)`).
 
 pub mod client;
+pub mod pool;
 pub mod rpc;
 #[allow(clippy::module_inception)]
 pub mod server;
 pub mod wire;
 
 pub use client::AlClient;
+pub use pool::{ConnPool, PoolConfig};
 pub use server::{AlServer, ServerDeps, SELECT_SEED};
-pub use wire::{Payload, WireMode};
+pub use wire::{Body, MatRef, MatView, Payload, WireMode};

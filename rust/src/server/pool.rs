@@ -1,0 +1,715 @@
+//! Per-peer persistent connection pool for the RPC stack (DESIGN.md
+//! §Wire).
+//!
+//! PR 2 made the payloads cheap; this layer makes the *calls* cheap. The
+//! small-call-heavy paths (agent arm rounds, shard probes, status polls)
+//! previously paid a fresh `TcpStream::connect` — and, for the
+//! coordinator, an optimistic-send-or-fallback wire dance — on every RPC.
+//! A [`ConnPool`] instead keeps up to `max_idle_per_peer` negotiated
+//! connections parked per peer:
+//!
+//! * **Negotiation happens once per connection.** A binary-preferring
+//!   pool sends one v1 `hello {wire, version}` on each fresh dial; the
+//!   agreed [`WireMode`] rides with the connection for its lifetime, so
+//!   no call ever sends v2 frames blind. A peer that refuses binary (or
+//!   predates `hello`) leaves the connection on v1 and counts one
+//!   `wire.json_fallbacks`.
+//! * **Stale connections are detected, evicted, and re-dialed.** A
+//!   checkout probes the parked socket with a non-blocking peek (a
+//!   restarted peer shows EOF); a call that dies mid-flight on a *reused*
+//!   connection with a dead-socket error is retried exactly once on a
+//!   fresh dial. Errors on fresh connections propagate unchanged, so the
+//!   cluster's mark-dead / re-dispatch semantics are preserved
+//!   bit-for-bit.
+//! * **Idle hygiene.** Connections parked longer than `idle_timeout_ms`
+//!   are closed at the next checkout; `invalidate` drops a peer's whole
+//!   idle set (worker re-registration, observed death).
+//!
+//! Metrics (when constructed with a registry): `pool.hits`, `pool.dials`,
+//! `pool.evictions`, `pool.retries` counters and the `pool.in_flight`
+//! gauge.
+
+use std::collections::HashMap;
+use std::io::ErrorKind;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::json::{Map, Value};
+use crate::metrics::Registry;
+
+use super::rpc::{self, RpcError};
+use super::wire::{self, Body, Payload, WireMode};
+
+/// `[server.pool]` knobs (DESIGN.md §Wire).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolConfig {
+    /// Idle connections kept per peer. `0` disables reuse entirely —
+    /// every call dials, negotiates (one `hello` round trip), and
+    /// closes. Kept as an escape hatch and for parity testing; note it
+    /// is *costlier* than the pre-pool coordinator, which sent
+    /// optimistically without a negotiation round trip.
+    pub max_idle_per_peer: usize,
+    /// Idle connections parked longer than this are closed at the next
+    /// checkout.
+    pub idle_timeout_ms: u64,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig { max_idle_per_peer: 4, idle_timeout_ms: 30_000 }
+    }
+}
+
+/// Default per-candidate-address connect timeout.
+pub const DIAL_TIMEOUT: Duration = Duration::from_secs(5);
+/// Read deadline for the dial-time `hello`: a peer that accepts TCP but
+/// never answers must fail the dial, not hang it.
+const HELLO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Resolve `addr` ("host:port") and connect, TCP_NODELAY set — the
+/// single dialing path shared by pooled RPCs and the servers' shutdown
+/// wakeups, so liveness behavior cannot diverge between "real" and
+/// bookkeeping connections. Every resolved candidate address is tried
+/// (an instant refusal on `::1` falls through to `127.0.0.1`), but
+/// `timeout` bounds the *total* time across all of them, so a
+/// black-holed multi-address peer still fails within one timeout —
+/// dead-peer detection latency matches a single-address dial.
+pub fn dial(addr: &str, timeout: Duration) -> Result<TcpStream, RpcError> {
+    let deadline = Instant::now() + timeout;
+    let mut last: Option<std::io::Error> = None;
+    for sock in addr
+        .to_socket_addrs()
+        .map_err(|e| RpcError::Malformed(format!("bad peer address '{addr}': {e}")))?
+    {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            // deadline burned before this attempt (e.g. slow DNS inside
+            // to_socket_addrs, or earlier candidates): that's a timeout,
+            // not a bad address
+            last = last.or_else(|| {
+                Some(std::io::Error::new(
+                    ErrorKind::TimedOut,
+                    format!("dial deadline exhausted before connecting to '{addr}'"),
+                ))
+            });
+            break;
+        }
+        match TcpStream::connect_timeout(&sock, left) {
+            Ok(s) => {
+                s.set_nodelay(true).ok();
+                return Ok(s);
+            }
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(match last {
+        Some(e) => RpcError::Io(e),
+        None => RpcError::Malformed(format!("address '{addr}' resolved to nothing")),
+    })
+}
+
+/// A connection checked out of the pool. Return it with
+/// [`ConnPool::checkin`] after a successful exchange; drop it on failure
+/// (the socket state is unknown mid-protocol).
+pub struct PooledConn {
+    stream: TcpStream,
+    /// Wire encoding negotiated once for this connection's lifetime.
+    mode: WireMode,
+    next_id: u64,
+    /// Came from the idle set (vs freshly dialed) — drives the
+    /// retry-once policy.
+    reused: bool,
+    generation: u64,
+}
+
+impl PooledConn {
+    pub fn mode(&self) -> WireMode {
+        self.mode
+    }
+
+    pub fn is_reused(&self) -> bool {
+        self.reused
+    }
+}
+
+struct IdleConn {
+    stream: TcpStream,
+    mode: WireMode,
+    next_id: u64,
+    parked_at: Instant,
+}
+
+#[derive(Default)]
+struct PeerState {
+    idle: Vec<IdleConn>,
+    /// Bumped by `invalidate`; a checkout from an older generation is
+    /// dropped at checkin instead of being pooled.
+    generation: u64,
+}
+
+/// Thread-safe per-peer pool of persistent, wire-negotiated connections.
+pub struct ConnPool {
+    cfg: PoolConfig,
+    /// Wire encoding this process asks peers for (`server.wire`).
+    prefer: WireMode,
+    dial_timeout: Duration,
+    hello_timeout: Duration,
+    metrics: Option<Arc<Registry>>,
+    peers: Mutex<HashMap<String, PeerState>>,
+}
+
+impl ConnPool {
+    pub fn new(cfg: PoolConfig, prefer: WireMode, metrics: Option<Arc<Registry>>) -> ConnPool {
+        ConnPool {
+            cfg,
+            prefer,
+            dial_timeout: DIAL_TIMEOUT,
+            hello_timeout: HELLO_TIMEOUT,
+            metrics,
+            peers: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Override both the connect and the `hello` deadlines (the client's
+    /// `connect_timeout` surface).
+    pub fn with_timeouts(mut self, dial: Duration, hello: Duration) -> ConnPool {
+        self.dial_timeout = dial;
+        self.hello_timeout = hello;
+        self
+    }
+
+    fn count(&self, name: &str, n: u64) {
+        if let Some(m) = &self.metrics {
+            m.counter(name).fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    fn registry(&self) -> Option<&Registry> {
+        self.metrics.as_deref()
+    }
+
+    /// Idle connections currently parked for `addr` (tests/benches).
+    pub fn idle_conns(&self, addr: &str) -> usize {
+        self.peers.lock().unwrap().get(addr).map(|p| p.idle.len()).unwrap_or(0)
+    }
+
+    /// Drop every idle connection to `addr` and mark in-flight ones as
+    /// non-poolable — for peers known to have restarted or died (worker
+    /// re-registration, observed transport failure).
+    pub fn invalidate(&self, addr: &str) {
+        let mut peers = self.peers.lock().unwrap();
+        if let Some(p) = peers.get_mut(addr) {
+            p.generation += 1;
+            if !p.idle.is_empty() {
+                self.count("pool.evictions", p.idle.len() as u64);
+                p.idle.clear();
+            }
+        }
+    }
+
+    /// Check out a connection to `addr`: the freshest live idle one, or a
+    /// fresh dial (+ one-time wire negotiation) when none survives the
+    /// idle-timeout and staleness checks.
+    pub fn checkout(&self, addr: &str) -> Result<PooledConn, RpcError> {
+        let idle_timeout = Duration::from_millis(self.cfg.idle_timeout_ms);
+        loop {
+            let (cand, generation) = {
+                let mut peers = self.peers.lock().unwrap();
+                let p = peers.entry(addr.to_string()).or_default();
+                // age out from the oldest end first
+                let before = p.idle.len();
+                p.idle.retain(|c| c.parked_at.elapsed() <= idle_timeout);
+                let aged = before - p.idle.len();
+                if aged > 0 {
+                    self.count("pool.evictions", aged as u64);
+                }
+                (p.idle.pop(), p.generation)
+            };
+            match cand {
+                Some(c) => {
+                    if stream_is_stale(&c.stream) {
+                        // a restarted/dead peer: close and try the next
+                        self.count("pool.evictions", 1);
+                        continue;
+                    }
+                    self.count("pool.hits", 1);
+                    return Ok(PooledConn {
+                        stream: c.stream,
+                        mode: c.mode,
+                        next_id: c.next_id,
+                        reused: true,
+                        generation,
+                    });
+                }
+                None => return self.dial_negotiated(addr, generation),
+            }
+        }
+    }
+
+    /// Park a connection for reuse. Dropped instead when pooling is off,
+    /// the peer's idle set is full, or the peer was invalidated after
+    /// this connection was checked out.
+    pub fn checkin(&self, addr: &str, conn: PooledConn) {
+        if self.cfg.max_idle_per_peer == 0 {
+            return; // per-call mode: close by drop, nothing to count
+        }
+        let mut peers = self.peers.lock().unwrap();
+        let p = peers.entry(addr.to_string()).or_default();
+        if conn.generation != p.generation || p.idle.len() >= self.cfg.max_idle_per_peer {
+            self.count("pool.evictions", 1);
+            return;
+        }
+        p.idle.push(IdleConn {
+            stream: conn.stream,
+            mode: conn.mode,
+            next_id: conn.next_id,
+            parked_at: Instant::now(),
+        });
+    }
+
+    /// Dial + negotiate one fresh connection. The `hello` rides the new
+    /// socket as v1 JSON (any peer can answer); a refusal or a pre-v2
+    /// `unknown method` error leaves the connection on the JSON wire.
+    fn dial_negotiated(&self, addr: &str, generation: u64) -> Result<PooledConn, RpcError> {
+        let mut stream = dial(addr, self.dial_timeout)?;
+        let mut next_id = 1u64;
+        let mut mode = WireMode::Json;
+        if self.prefer == WireMode::Binary {
+            stream.set_read_timeout(Some(self.hello_timeout)).ok();
+            let mut p = Map::new();
+            p.insert("wire", Value::from(WireMode::Binary.as_str()));
+            p.insert("version", Value::from(wire::WIRE_VERSION as u64));
+            let id = next_id;
+            next_id += 1;
+            rpc::send_request_wire(
+                &mut stream,
+                id,
+                "hello",
+                &Payload::json(Value::Object(p)),
+                WireMode::Json,
+                self.registry(),
+            )?;
+            match rpc::recv_response_body(&mut stream, id, self.registry()) {
+                Ok(b) => {
+                    if b.value.get("wire").and_then(Value::as_str) == Some("binary") {
+                        mode = WireMode::Binary;
+                    }
+                }
+                // pre-v2 peer: no `hello` method — stay on JSON; any
+                // other remote error is a real failure, not version skew
+                Err(RpcError::Remote(msg)) if msg.contains("unknown method") => {}
+                Err(e) => return Err(e),
+            }
+            stream.set_read_timeout(None).ok();
+            if mode == WireMode::Json {
+                // the peer cannot (or will not) speak v2: every call on
+                // this connection now pays the slow JSON plane
+                self.count("wire.json_fallbacks", 1);
+            }
+        }
+        self.count("pool.dials", 1);
+        Ok(PooledConn { stream, mode, next_id, reused: false, generation })
+    }
+
+    /// One blocking request/response exchange over a pooled connection,
+    /// for an **idempotent** (safely re-sendable) method. Tensor payloads
+    /// encode per the connection's negotiated mode (raw sections on v2,
+    /// inlined JSON on v1). A dead-socket failure on a *reused*
+    /// connection is retried once on a fresh dial; all other failures —
+    /// including any failure of the fresh attempt — propagate, so
+    /// callers' liveness handling sees exactly what a per-call dial
+    /// would have seen.
+    pub fn call(
+        &self,
+        addr: &str,
+        method: &str,
+        params: &Payload,
+        read_timeout: Option<Duration>,
+    ) -> Result<Body, RpcError> {
+        self.call_negotiated(addr, method, params, read_timeout).map(|(b, _)| b)
+    }
+
+    /// [`ConnPool::call`], also reporting the connection's negotiated
+    /// [`WireMode`] (clients mirror it for mode-sensitive encodes).
+    pub fn call_negotiated(
+        &self,
+        addr: &str,
+        method: &str,
+        params: &Payload,
+        read_timeout: Option<Duration>,
+    ) -> Result<(Body, WireMode), RpcError> {
+        self.call_gauged(addr, method, params, read_timeout, true)
+    }
+
+    /// [`ConnPool::call_negotiated`] for **non-idempotent** methods
+    /// (`agent_start`): a parked connection dying mid-exchange is
+    /// ambiguous — the server may already be running the request — so it
+    /// surfaces as an error instead of being silently re-sent. The
+    /// checkout-time staleness peek still rescues the common
+    /// already-dead-socket case before anything is written.
+    pub fn call_once(
+        &self,
+        addr: &str,
+        method: &str,
+        params: &Payload,
+        read_timeout: Option<Duration>,
+    ) -> Result<(Body, WireMode), RpcError> {
+        self.call_gauged(addr, method, params, read_timeout, false)
+    }
+
+    fn call_gauged(
+        &self,
+        addr: &str,
+        method: &str,
+        params: &Payload,
+        read_timeout: Option<Duration>,
+        retry_stale: bool,
+    ) -> Result<(Body, WireMode), RpcError> {
+        let gauge = self.metrics.as_ref().map(|m| m.counter("pool.in_flight"));
+        if let Some(g) = &gauge {
+            g.fetch_add(1, Ordering::Relaxed);
+        }
+        let out = self.call_inner(addr, method, params, read_timeout, retry_stale);
+        if let Some(g) = &gauge {
+            g.fetch_sub(1, Ordering::Relaxed);
+        }
+        out
+    }
+
+    fn call_inner(
+        &self,
+        addr: &str,
+        method: &str,
+        params: &Payload,
+        read_timeout: Option<Duration>,
+        retry_stale: bool,
+    ) -> Result<(Body, WireMode), RpcError> {
+        let mut conn = self.checkout(addr)?;
+        let reused = conn.reused;
+        match self.roundtrip(&mut conn, method, params, read_timeout) {
+            Ok(body) => {
+                let mode = conn.mode;
+                self.checkin(addr, conn);
+                Ok((body, mode))
+            }
+            Err(e) if retry_stale && reused && is_dead_socket(&e) => {
+                // the parked connection died under us (peer restart, idle
+                // close): its siblings are just as old — flush them and
+                // run the request once on a fresh dial. A genuinely dead
+                // peer fails the dial and surfaces exactly as before.
+                drop(conn);
+                self.invalidate(addr);
+                self.count("pool.retries", 1);
+                let mut fresh = self.dial_and_track(addr)?;
+                match self.roundtrip(&mut fresh, method, params, read_timeout) {
+                    Ok(body) => {
+                        let mode = fresh.mode;
+                        self.checkin(addr, fresh);
+                        Ok((body, mode))
+                    }
+                    Err(e2) => Err(e2),
+                }
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn dial_and_track(&self, addr: &str) -> Result<PooledConn, RpcError> {
+        let generation =
+            self.peers.lock().unwrap().entry(addr.to_string()).or_default().generation;
+        self.dial_negotiated(addr, generation)
+    }
+
+    fn roundtrip(
+        &self,
+        conn: &mut PooledConn,
+        method: &str,
+        params: &Payload,
+        read_timeout: Option<Duration>,
+    ) -> Result<Body, RpcError> {
+        conn.stream.set_read_timeout(read_timeout).ok();
+        let id = conn.next_id;
+        conn.next_id += 1;
+        rpc::send_request_wire(&mut conn.stream, id, method, params, conn.mode, self.registry())?;
+        rpc::recv_response_body(&mut conn.stream, id, self.registry())
+    }
+}
+
+/// Peer-closed detection without consuming stream bytes: a non-blocking
+/// peek on a healthy idle connection yields `WouldBlock`; EOF, any other
+/// error, or unsolicited bytes (protocol desync) all mean the connection
+/// cannot carry another RPC.
+fn stream_is_stale(s: &TcpStream) -> bool {
+    if s.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let mut probe = [0u8; 1];
+    let stale = match s.peek(&mut probe) {
+        Ok(_) => true,
+        Err(e) if e.kind() == ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = s.set_nonblocking(false);
+    stale
+}
+
+/// Did this failure come from a socket that died between calls (as a
+/// restarted peer's parked connection does)? Timeouts are deliberately
+/// excluded: a slow peer must surface as slow, not be retried into
+/// double execution.
+fn is_dead_socket(e: &RpcError) -> bool {
+    match e {
+        RpcError::Closed => true,
+        RpcError::Io(io) => matches!(
+            io.kind(),
+            ErrorKind::ConnectionReset
+                | ErrorKind::ConnectionAborted
+                | ErrorKind::BrokenPipe
+                | ErrorKind::UnexpectedEof
+                | ErrorKind::NotConnected
+        ),
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::value::obj;
+    use crate::util::mat::Mat;
+    use std::net::{Shutdown, TcpListener};
+    use std::sync::atomic::AtomicBool;
+
+    /// Scripted RPC peer: answers `hello` per a flippable wire policy,
+    /// echoes any other method, and records each non-hello request's
+    /// encoding. Open sockets are tracked so a test can slam them shut
+    /// (simulating a peer restart).
+    struct MiniPeer {
+        addr: String,
+        seen: Arc<Mutex<Vec<WireMode>>>,
+        wire: Arc<Mutex<WireMode>>,
+        conns: Arc<Mutex<Vec<TcpStream>>>,
+        shutdown: Arc<AtomicBool>,
+    }
+
+    impl MiniPeer {
+        fn start(initial_wire: WireMode) -> MiniPeer {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            let seen = Arc::new(Mutex::new(Vec::new()));
+            let wire = Arc::new(Mutex::new(initial_wire));
+            let conns = Arc::new(Mutex::new(Vec::new()));
+            let shutdown = Arc::new(AtomicBool::new(false));
+            let (seen2, wire2, conns2, stop) =
+                (seen.clone(), wire.clone(), conns.clone(), shutdown.clone());
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(mut stream) = stream else { continue };
+                    conns2.lock().unwrap().push(stream.try_clone().unwrap());
+                    let (seen, policy) = (seen2.clone(), wire2.clone());
+                    std::thread::spawn(move || loop {
+                        let Ok(buf) = rpc::read_frame(&mut stream) else { return };
+                        let Ok(req) = rpc::decode_request_frame(buf) else { return };
+                        let reply = if req.method == "hello" {
+                            Payload::json(wire::hello_reply(
+                                &req.params.value,
+                                *policy.lock().unwrap(),
+                            ))
+                        } else {
+                            seen.lock().unwrap().push(req.mode);
+                            req.params.to_payload()
+                        };
+                        if rpc::send_result_wire(&mut stream, req.id, &reply, req.mode, None)
+                            .is_err()
+                        {
+                            return;
+                        }
+                    });
+                }
+            });
+            MiniPeer { addr, seen, wire, conns, shutdown }
+        }
+
+        /// Close every accepted socket — what a peer restart looks like
+        /// from the pool's side.
+        fn kill_conns(&self) {
+            for c in self.conns.lock().unwrap().drain(..) {
+                let _ = c.shutdown(Shutdown::Both);
+            }
+            // let the FINs land so staleness is observable at the next
+            // checkout peek (loopback: effectively immediate; the sleep
+            // absorbs scheduler noise on loaded CI runners)
+            std::thread::sleep(Duration::from_millis(50));
+        }
+
+        fn seen_modes(&self) -> Vec<WireMode> {
+            self.seen.lock().unwrap().clone()
+        }
+    }
+
+    impl Drop for MiniPeer {
+        fn drop(&mut self) {
+            self.shutdown.store(true, Ordering::SeqCst);
+            let _ = dial(&self.addr, Duration::from_millis(200));
+        }
+    }
+
+    fn counter(m: &Registry, name: &str) -> u64 {
+        m.counter(name).load(Ordering::Relaxed)
+    }
+
+    fn tensor_params() -> Payload {
+        let mut p = Payload::default();
+        let ph = p.stash_mat(Mat::from_vec(vec![1.0, 2.0, 3.0, 4.0], 2, 2));
+        p.value = obj([("emb", ph)]);
+        p
+    }
+
+    #[test]
+    fn reuses_one_connection_across_calls() {
+        let peer = MiniPeer::start(WireMode::Binary);
+        let metrics = Registry::new();
+        let pool = ConnPool::new(PoolConfig::default(), WireMode::Binary, Some(metrics.clone()));
+        for _ in 0..5 {
+            let body = pool.call(&peer.addr, "echo", &tensor_params(), None).unwrap();
+            assert_eq!(body.mat("emb").unwrap().unwrap().shape(), (2, 2));
+        }
+        assert_eq!(counter(&metrics, "pool.dials"), 1, "N calls must not mean N dials");
+        assert_eq!(counter(&metrics, "pool.hits"), 4);
+        assert_eq!(counter(&metrics, "pool.retries"), 0);
+        assert_eq!(counter(&metrics, "pool.in_flight"), 0, "gauge must return to zero");
+        assert_eq!(pool.idle_conns(&peer.addr), 1);
+        // every request rode the once-negotiated binary wire
+        assert!(peer.seen_modes().iter().all(|&m| m == WireMode::Binary));
+        assert_eq!(counter(&metrics, "wire.json_fallbacks"), 0);
+    }
+
+    #[test]
+    fn peer_restart_forces_redial_and_renegotiation() {
+        let peer = MiniPeer::start(WireMode::Binary);
+        let metrics = Registry::new();
+        let pool = ConnPool::new(PoolConfig::default(), WireMode::Binary, Some(metrics.clone()));
+        pool.call(&peer.addr, "echo", &tensor_params(), None).unwrap();
+        // "restart": all sockets die and the reborn peer is JSON-forced
+        peer.kill_conns();
+        *peer.wire.lock().unwrap() = WireMode::Json;
+        pool.call(&peer.addr, "echo", &tensor_params(), None).unwrap();
+        // the second call must have re-dialed and re-negotiated (hello
+        // again — never send v2 blind on a fresh socket): the restarted
+        // peer saw a v1 frame
+        assert_eq!(peer.seen_modes(), vec![WireMode::Binary, WireMode::Json]);
+        assert_eq!(counter(&metrics, "pool.dials"), 2);
+        assert_eq!(counter(&metrics, "wire.json_fallbacks"), 1);
+        assert!(counter(&metrics, "pool.evictions") >= 1);
+    }
+
+    #[test]
+    fn call_once_recovers_stale_conns_via_peek_not_retry() {
+        let peer = MiniPeer::start(WireMode::Binary);
+        let metrics = Registry::new();
+        let pool = ConnPool::new(PoolConfig::default(), WireMode::Binary, Some(metrics.clone()));
+        pool.call(&peer.addr, "echo", &Payload::json(Value::Null), None).unwrap();
+        // the parked conn dies; a non-idempotent call must still succeed —
+        // the checkout-time staleness peek evicts the dead socket before
+        // anything is written, so no mid-exchange retry is ever needed
+        peer.kill_conns();
+        let (_, mode) = pool
+            .call_once(&peer.addr, "echo", &Payload::json(Value::Null), None)
+            .unwrap();
+        assert_eq!(mode, WireMode::Binary);
+        assert_eq!(counter(&metrics, "pool.dials"), 2);
+        assert_eq!(counter(&metrics, "pool.retries"), 0, "call_once must never re-send");
+    }
+
+    #[test]
+    fn idle_timeout_evicts_parked_connections() {
+        let peer = MiniPeer::start(WireMode::Binary);
+        let metrics = Registry::new();
+        let cfg = PoolConfig { max_idle_per_peer: 4, idle_timeout_ms: 25 };
+        let pool = ConnPool::new(cfg, WireMode::Binary, Some(metrics.clone()));
+        pool.call(&peer.addr, "echo", &Payload::json(Value::Null), None).unwrap();
+        assert_eq!(pool.idle_conns(&peer.addr), 1);
+        std::thread::sleep(Duration::from_millis(80));
+        pool.call(&peer.addr, "echo", &Payload::json(Value::Null), None).unwrap();
+        assert_eq!(counter(&metrics, "pool.dials"), 2, "aged-out conn must not be reused");
+        assert!(counter(&metrics, "pool.evictions") >= 1);
+        assert_eq!(counter(&metrics, "pool.hits"), 0);
+    }
+
+    #[test]
+    fn max_idle_zero_disables_reuse() {
+        let peer = MiniPeer::start(WireMode::Binary);
+        let metrics = Registry::new();
+        let cfg = PoolConfig { max_idle_per_peer: 0, idle_timeout_ms: 30_000 };
+        let pool = ConnPool::new(cfg, WireMode::Binary, Some(metrics.clone()));
+        for _ in 0..3 {
+            pool.call(&peer.addr, "echo", &Payload::json(Value::Null), None).unwrap();
+        }
+        assert_eq!(counter(&metrics, "pool.dials"), 3);
+        assert_eq!(counter(&metrics, "pool.hits"), 0);
+        assert_eq!(pool.idle_conns(&peer.addr), 0);
+    }
+
+    #[test]
+    fn concurrent_checkout_exhausts_then_caps_idle() {
+        let peer = MiniPeer::start(WireMode::Binary);
+        let metrics = Registry::new();
+        let cfg = PoolConfig { max_idle_per_peer: 2, idle_timeout_ms: 30_000 };
+        let pool = ConnPool::new(cfg, WireMode::Binary, Some(metrics.clone()));
+        // 6 simultaneous holders: the pool must dial past its idle cap
+        // (it bounds parked sockets, not in-flight concurrency) ...
+        let conns: Vec<PooledConn> = std::thread::scope(|s| {
+            let handles: Vec<_> =
+                (0..6).map(|_| s.spawn(|| pool.checkout(&peer.addr).unwrap())).collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(counter(&metrics, "pool.dials"), 6, "exhausted pool must dial");
+        // ... and keep only max_idle of them at checkin
+        for c in conns {
+            pool.checkin(&peer.addr, c);
+        }
+        assert_eq!(pool.idle_conns(&peer.addr), 2);
+        assert_eq!(counter(&metrics, "pool.evictions"), 4);
+        // the parked pair still serves calls
+        pool.call(&peer.addr, "echo", &Payload::json(Value::Null), None).unwrap();
+        assert_eq!(counter(&metrics, "pool.hits"), 1);
+    }
+
+    #[test]
+    fn invalidate_drops_idle_and_blocks_stale_checkin() {
+        let peer = MiniPeer::start(WireMode::Binary);
+        let metrics = Registry::new();
+        let pool = ConnPool::new(PoolConfig::default(), WireMode::Binary, Some(metrics.clone()));
+        let held = pool.checkout(&peer.addr).unwrap();
+        pool.call(&peer.addr, "echo", &Payload::json(Value::Null), None).unwrap();
+        assert_eq!(pool.idle_conns(&peer.addr), 1);
+        pool.invalidate(&peer.addr);
+        assert_eq!(pool.idle_conns(&peer.addr), 0);
+        // a conn checked out before the invalidation must not re-enter
+        pool.checkin(&peer.addr, held);
+        assert_eq!(pool.idle_conns(&peer.addr), 0);
+        assert!(counter(&metrics, "pool.evictions") >= 2);
+    }
+
+    #[test]
+    fn dial_failure_propagates_as_io() {
+        // grab a port, then free it: nothing listens there
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let pool = ConnPool::new(PoolConfig::default(), WireMode::Binary, None)
+            .with_timeouts(Duration::from_millis(300), Duration::from_millis(300));
+        let err = pool.call(&addr, "echo", &Payload::json(Value::Null), None).unwrap_err();
+        assert!(matches!(err, RpcError::Io(_)), "{err}");
+        assert!(matches!(
+            dial("not-an-address", Duration::from_millis(100)),
+            Err(RpcError::Malformed(_))
+        ));
+    }
+}

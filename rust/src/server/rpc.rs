@@ -22,7 +22,7 @@ use std::time::{Duration, Instant};
 use crate::json::{self, Map, Value};
 use crate::metrics::Registry;
 
-use super::wire::{self, Payload, WireMode};
+use super::wire::{self, Body, Payload, WireMode};
 
 /// Hard cap on frame payloads.
 pub const MAX_FRAME: usize = 64 * 1024 * 1024;
@@ -42,13 +42,15 @@ pub enum RpcError {
     Closed,
 }
 
-/// A parsed request: params plus any tensor sections that rode the frame,
-/// and which encoding the peer used (replies mirror it).
-#[derive(Debug, Clone, PartialEq)]
-pub struct Request {
+/// A parsed request: params (as a zero-copy [`Body`] whose tensor
+/// sections stay in the received frame buffer until a handler consumes
+/// them — DESIGN.md §Wire) plus which encoding the peer used (replies
+/// mirror it).
+#[derive(Debug)]
+pub struct RequestFrame {
     pub id: u64,
     pub method: String,
-    pub params: Payload,
+    pub params: Body,
     pub mode: WireMode,
 }
 
@@ -125,9 +127,10 @@ pub fn send_request(
     send_request_wire(w, id, method, &Payload::json(params), WireMode::Json, None)
 }
 
-/// Decode one frame's bytes into a `Request`.
-pub fn decode_request(buf: &[u8]) -> Result<Request, RpcError> {
-    let (v, tensors, mode) = wire::decode_payload(buf)?;
+/// Decode one frame's bytes (taking ownership of them) into a
+/// [`RequestFrame`] whose tensor sections are borrowed from the buffer.
+pub fn decode_request_frame(buf: Vec<u8>) -> Result<RequestFrame, RpcError> {
+    let (v, tensors, mode) = wire::decode_frame(buf)?;
     let id = v
         .get("id")
         .and_then(Value::as_i64)
@@ -143,12 +146,12 @@ pub fn decode_request(buf: &[u8]) -> Result<Request, RpcError> {
         Value::Object(mut m) => m.remove("params").unwrap_or(Value::Null),
         _ => Value::Null,
     };
-    Ok(Request { id, method, params: Payload { value: params, tensors }, mode })
+    Ok(RequestFrame { id, method, params: Body { value: params, tensors }, mode })
 }
 
-/// Receive + parse a request frame (either encoding).
-pub fn recv_request(r: &mut impl Read) -> Result<Request, RpcError> {
-    decode_request(&read_frame(r)?)
+/// Receive + parse a request frame (either encoding), zero-copy.
+pub fn recv_request(r: &mut impl Read) -> Result<RequestFrame, RpcError> {
+    decode_request_frame(read_frame(r)?)
 }
 
 /// Serialize + send a success response in `mode`.
@@ -201,7 +204,7 @@ pub fn serve_conn(
     shutdown: &AtomicBool,
     metrics: &Registry,
     wire_mode: WireMode,
-    mut handle: impl FnMut(&str, &Payload, WireMode) -> Result<Payload, String>,
+    mut handle: impl FnMut(&str, &Body, WireMode) -> Result<Payload, String>,
 ) {
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     stream.set_nodelay(true).ok();
@@ -254,7 +257,10 @@ pub fn serve_conn(
             }
             continue;
         }
-        let req = match decode_request(&buf) {
+        let buf_len = buf.len();
+        // zero-copy decode: tensor sections stay in `buf` (now owned by
+        // the request) until the handler materializes the ones it uses
+        let req = match decode_request_frame(buf) {
             Ok(r) => r,
             Err(e) => {
                 crate::log_debug!(tag, "bad frame from {peer}: {e}");
@@ -262,7 +268,7 @@ pub fn serve_conn(
                 return;
             }
         };
-        note_rx(Some(metrics), buf.len(), t_decode.elapsed(), req.mode);
+        note_rx(Some(metrics), buf_len, t_decode.elapsed(), req.mode);
         let t0 = Instant::now();
         // handlers get the request's encoding so version-sensitive
         // responses (select_shard's candidate schema) can stay
@@ -290,16 +296,19 @@ pub fn serve_conn(
 }
 
 /// Receive a response for `expect_id` in either encoding; remote errors
-/// surface as `Remote`. Returns the result value plus tensor sections.
-pub fn recv_response_wire(
+/// surface as `Remote`. Returns the result value plus a [`Body`] whose
+/// tensor sections are still borrowed from the frame buffer — the
+/// zero-copy path the connection pool and the cluster merge use.
+pub fn recv_response_body(
     r: &mut impl Read,
     expect_id: u64,
     metrics: Option<&Registry>,
-) -> Result<Payload, RpcError> {
+) -> Result<Body, RpcError> {
     let buf = read_frame(r)?;
+    let buf_len = buf.len();
     let t0 = Instant::now();
-    let (v, tensors, mode) = wire::decode_payload(&buf)?;
-    note_rx(metrics, buf.len(), t0.elapsed(), mode);
+    let (v, tensors, mode) = wire::decode_frame(buf)?;
+    note_rx(metrics, buf_len, t0.elapsed(), mode);
     let id = v
         .get("id")
         .and_then(Value::as_i64)
@@ -319,7 +328,17 @@ pub fn recv_response_wire(
         _ => None,
     }
     .ok_or_else(|| RpcError::Malformed("missing result".into()))?;
-    Ok(Payload { value: result, tensors })
+    Ok(Body { value: result, tensors })
+}
+
+/// Receive a response with every tensor section materialized (the owned
+/// view; [`recv_response_body`] is the zero-copy form).
+pub fn recv_response_wire(
+    r: &mut impl Read,
+    expect_id: u64,
+    metrics: Option<&Registry>,
+) -> Result<Payload, RpcError> {
+    recv_response_body(r, expect_id, metrics).map(Body::into_payload)
 }
 
 /// Receive a response as a plain `Value` (tensor sections, if any, are
@@ -413,6 +432,23 @@ mod tests {
             super::super::wire::mat_from_value(v.get("init_emb").unwrap()).unwrap(),
             m
         );
+    }
+
+    #[test]
+    fn zero_copy_response_serves_views() {
+        let m = Mat::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 3, 2);
+        let mut p = Payload::default();
+        let ph = p.stash_mat(m.clone());
+        p.value = obj([("emb", ph)]);
+        let mut buf = Vec::new();
+        send_result_wire(&mut buf, 11, &p, WireMode::Binary, None).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        let body = recv_response_body(&mut r, 11, None).unwrap();
+        // one section, still raw bytes; rows copy straight out
+        assert_eq!(body.tensors.len(), 1);
+        let view = body.mat_ref("emb").unwrap().unwrap();
+        assert_eq!(view.row_vec(2), &[5.0, 6.0]);
+        assert_eq!(body.mat("emb").unwrap().unwrap(), m);
     }
 
     #[test]

@@ -22,7 +22,7 @@ use crate::metrics::Registry;
 use crate::pipeline::{run_pipeline, BatchPolicy, DataflowMode, PipelineParams};
 use crate::runtime::backend::ComputeBackend;
 use crate::server::rpc;
-use crate::server::wire::{self, Payload, WireMode};
+use crate::server::wire::{self, Body, Payload, WireMode};
 use crate::store::{Manifest, SampleRef, StoreRouter};
 use crate::strategies::{self, SelectCtx};
 use crate::trainer::{self, LinearHead, TrainConfig};
@@ -139,8 +139,9 @@ impl AlServer {
         if self.state.shutdown.swap(true, Ordering::SeqCst) {
             return;
         }
-        // poke the listener awake
-        let _ = TcpStream::connect(self.addr);
+        // poke the listener awake, through the same dialing path real
+        // RPCs use (pool::dial) so liveness behavior cannot diverge
+        let _ = crate::server::pool::dial(&self.addr.to_string(), Duration::from_millis(500));
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
         }
@@ -187,7 +188,7 @@ fn handle_conn(mut stream: TcpStream, state: Arc<ServerState>) {
 fn dispatch(
     state: &Arc<ServerState>,
     method: &str,
-    params: &Payload,
+    params: &Body,
     mode: WireMode,
 ) -> Result<Payload, String> {
     match method {
@@ -247,14 +248,14 @@ pub(crate) fn str_param(params: &Value, key: &str) -> Result<String, String> {
 /// inline matrix), so a binary push that falls back to JSON
 /// mid-negotiation still parses.
 pub(crate) fn parse_label_array(
-    params: &Payload,
+    params: &Body,
     key: &str,
     split_len: usize,
 ) -> Result<Option<Vec<u8>>, String> {
     let labels: Option<Vec<u8>> = match params.value.get(key) {
         None | Some(Value::Null) => None,
         Some(v) => {
-            if let Some(m) = wire::maybe_mat(v, &params.tensors)? {
+            if let Some(m) = params.maybe_mat(v)? {
                 Some(
                     m.as_slice()
                         .iter()
@@ -292,7 +293,7 @@ pub(crate) fn parse_label_array(
 
 /// The original `init_labels` entry point (see [`parse_label_array`]).
 pub(crate) fn parse_init_labels(
-    params: &Payload,
+    params: &Body,
     init_len: usize,
 ) -> Result<Option<Vec<u8>>, String> {
     parse_label_array(params, "init_labels", init_len)
@@ -325,7 +326,7 @@ fn get_session(state: &ServerState, id: &str) -> Result<Arc<SessionSlot>, String
 }
 
 /// `push_data {session, manifest, init_labels?}` — register and process.
-fn push_data(state: &Arc<ServerState>, params: &Payload) -> Result<Value, String> {
+fn push_data(state: &Arc<ServerState>, params: &Body) -> Result<Value, String> {
     let session_id = str_param(&params.value, "session")?;
     let manifest_v = params.value.get("manifest").ok_or("missing param 'manifest'")?;
     let manifest = Manifest::from_value(manifest_v).map_err(|e| e.to_string())?;
@@ -600,7 +601,7 @@ fn query(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
 /// `scan_shard {session, shard, manifest, init_labels?}` — worker-facing
 /// push: identical to `push_data` except the manifest's pool is one shard
 /// of a cluster session (the coordinator owns the global index space).
-fn scan_shard(state: &Arc<ServerState>, params: &Payload) -> Result<Value, String> {
+fn scan_shard(state: &Arc<ServerState>, params: &Body) -> Result<Value, String> {
     let shard = params.value.get("shard").and_then(Value::as_usize).unwrap_or(0);
     let v = push_data(state, params)?;
     state.deps.metrics.counter("cluster.shards_accepted").fetch_add(1, Ordering::Relaxed);
@@ -639,7 +640,7 @@ fn scan_shard(state: &Arc<ServerState>, params: &Payload) -> Result<Value, Strin
 /// the refine protocol unchanged.
 fn select_shard(
     state: &Arc<ServerState>,
-    params: &Payload,
+    params: &Body,
     mode: WireMode,
 ) -> Result<Payload, String> {
     let session_id = str_param(&params.value, "session")?;
@@ -662,6 +663,8 @@ fn select_shard(
             .map(|x| x.as_usize().ok_or_else(|| "bad exclude index".to_string()))
             .collect::<Result<Vec<_>, _>>()?,
     };
+    // materialized straight from the frame buffer, one copy each (the
+    // zero-copy decode path — DESIGN.md §Wire)
     let head_w = params.mat("head_w")?;
     let head_b = params.mat("head_b")?;
     let labeled_extra = params.mat("labeled_emb")?;
@@ -848,7 +851,7 @@ pub(crate) struct AgentStartParams {
 }
 
 pub(crate) fn parse_agent_start(
-    params: &Payload,
+    params: &Body,
     defaults: crate::agent::PsheaConfig,
     manifest: &Manifest,
     init_labels_present: bool,
@@ -899,7 +902,7 @@ pub(crate) fn parse_agent_start(
 /// `agent_start {session, strategies, config?, seed?, pool_labels,
 /// test_labels, wait_ms?}` — spawn a background PSHEA job over a pushed
 /// session and return its job id (DESIGN.md §Agent).
-fn agent_start(state: &Arc<ServerState>, params: &Payload) -> Result<Value, String> {
+fn agent_start(state: &Arc<ServerState>, params: &Body) -> Result<Value, String> {
     let session_id = str_param(&params.value, "session")?;
     let slot = get_session(state, &session_id)?;
     let (manifest, have_init_labels) = {

@@ -116,6 +116,213 @@ impl Payload {
     }
 }
 
+/// Decoded *inbound* message: the envelope/params value plus the tensor
+/// sections still sitting in the received frame buffer (zero-copy decode,
+/// DESIGN.md §Wire). [`Payload`] is its outbound mirror: handlers receive
+/// a `Body`, materialize only the matrices they actually consume (each at
+/// most once, straight into its destination), and reply with a `Payload`.
+#[derive(Debug, Default)]
+pub struct Body {
+    pub value: Value,
+    pub tensors: TensorBuf,
+}
+
+impl Body {
+    /// Plain JSON body with no tensor sections.
+    pub fn json(value: Value) -> Body {
+        Body { value, tensors: TensorBuf::empty() }
+    }
+
+    /// Resolve an optional matrix-valued field of `value` (placeholder or
+    /// inline `{rows, cols, data}`) into an owned `Mat` — one copy out of
+    /// the frame buffer. `Ok(None)` when absent/null.
+    pub fn mat(&self, key: &str) -> Result<Option<Mat>, String> {
+        Ok(self.mat_ref(key)?.map(MatRef::into_mat))
+    }
+
+    /// Borrowed form of [`Body::mat`]: a `MatView` over the frame buffer
+    /// for v2 sections, an owned `Mat` for the inline JSON form.
+    pub fn mat_ref(&self, key: &str) -> Result<Option<MatRef<'_>>, String> {
+        match self.value.get(key) {
+            None | Some(Value::Null) => Ok(None),
+            Some(v) => self.resolve_ref(v).map(Some),
+        }
+    }
+
+    fn resolve_ref(&self, v: &Value) -> Result<MatRef<'_>, String> {
+        if let Some(i) = placeholder_index(v) {
+            self.tensors.view(i).map(MatRef::View).ok_or_else(|| {
+                format!("tensor ref ${i} out of range ({} sections)", self.tensors.len())
+            })
+        } else {
+            mat_from_value(v).map(MatRef::Owned)
+        }
+    }
+
+    /// Matrix form of a value that may be something else entirely (label
+    /// arrays keep their v1 integer form): `Ok(None)` when `v` is neither
+    /// a placeholder nor an inline matrix object.
+    pub fn maybe_mat(&self, v: &Value) -> Result<Option<Mat>, String> {
+        if placeholder_index(v).is_some() || is_inline_mat(v) {
+            self.resolve_ref(v).map(|m| Some(m.into_mat()))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Materialize every section — the owned, v1-compatible view for
+    /// callers that keep the tensors around.
+    pub fn into_payload(self) -> Payload {
+        Payload { value: self.value, tensors: self.tensors.materialize() }
+    }
+
+    /// Owned copy with every section materialized (echo/test helper).
+    pub fn to_payload(&self) -> Payload {
+        Payload { value: self.value.clone(), tensors: self.tensors.materialize() }
+    }
+
+    /// Plain-`Value` view: inlines any tensor sections into the value
+    /// (no-op without sections).
+    pub fn into_inline_value(self) -> Result<Value, RpcError> {
+        if self.tensors.is_empty() {
+            Ok(self.value)
+        } else {
+            inline_value(&self.value, &self.tensors.materialize())
+        }
+    }
+}
+
+/// Tensor sections of a decoded v2 frame, kept as raw bytes of the
+/// received buffer. Views decode f32s on access; nothing is materialized
+/// until a consumer asks (zero-copy decode).
+#[derive(Debug, Default)]
+pub struct TensorBuf {
+    buf: Vec<u8>,
+    sections: Vec<Section>,
+}
+
+/// One validated tensor section: shape + byte offset into the frame.
+#[derive(Debug, Clone, Copy)]
+struct Section {
+    rows: usize,
+    cols: usize,
+    off: usize,
+}
+
+impl TensorBuf {
+    pub fn empty() -> TensorBuf {
+        TensorBuf::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sections.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sections.is_empty()
+    }
+
+    /// Borrowed view of section `i`.
+    pub fn view(&self, i: usize) -> Option<MatView<'_>> {
+        self.sections.get(i).map(|s| MatView {
+            data: &self.buf[s.off..s.off + s.rows * s.cols * 4],
+            rows: s.rows,
+            cols: s.cols,
+        })
+    }
+
+    /// Owned `Mat` per section (the v1-compatible materialization).
+    pub fn materialize(&self) -> Vec<Mat> {
+        (0..self.len()).map(|i| self.view(i).expect("indexed section").to_mat()).collect()
+    }
+}
+
+/// Borrowed `[rows, cols]` f32 matrix over a frame buffer's raw
+/// little-endian bytes. Alignment-free by construction: values decode on
+/// access with `from_le_bytes`, so the section can start at any offset.
+#[derive(Debug, Clone, Copy)]
+pub struct MatView<'a> {
+    data: &'a [u8],
+    rows: usize,
+    cols: usize,
+}
+
+impl MatView<'_> {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        let o = (i * self.cols + j) * 4;
+        f32::from_le_bytes([self.data[o], self.data[o + 1], self.data[o + 2], self.data[o + 3]])
+    }
+
+    /// Copy row `i` into a fresh vec — the scatter/merge path's
+    /// per-candidate copy, straight from the frame buffer.
+    pub fn row_vec(&self, i: usize) -> Vec<f32> {
+        let base = i * self.cols * 4;
+        let mut out = Vec::with_capacity(self.cols);
+        for ch in self.data[base..base + self.cols * 4].chunks_exact(4) {
+            out.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+        }
+        out
+    }
+
+    /// Materialize the whole section as an owned `Mat` (one pass).
+    pub fn to_mat(&self) -> Mat {
+        let mut vals = Vec::with_capacity(self.rows * self.cols);
+        for ch in self.data.chunks_exact(4) {
+            vals.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+        }
+        Mat::from_vec(vals, self.rows, self.cols)
+    }
+}
+
+/// Owned-or-borrowed matrix field resolved from a decoded frame.
+#[derive(Debug)]
+pub enum MatRef<'a> {
+    View(MatView<'a>),
+    Owned(Mat),
+}
+
+impl MatRef<'_> {
+    pub fn rows(&self) -> usize {
+        match self {
+            MatRef::View(v) => v.rows(),
+            MatRef::Owned(m) => m.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            MatRef::View(v) => v.cols(),
+            MatRef::Owned(m) => m.cols(),
+        }
+    }
+
+    pub fn row_vec(&self, i: usize) -> Vec<f32> {
+        match self {
+            MatRef::View(v) => v.row_vec(i),
+            MatRef::Owned(m) => m.row(i).to_vec(),
+        }
+    }
+
+    pub fn into_mat(self) -> Mat {
+        match self {
+            MatRef::View(v) => v.to_mat(),
+            MatRef::Owned(m) => m,
+        }
+    }
+}
+
 /// `{"$bin": idx}`.
 pub fn placeholder(idx: usize) -> Value {
     let mut m = Map::new();
@@ -193,41 +400,6 @@ pub fn opt_mat(value: &Value, tensors: &[Mat], key: &str) -> Result<Option<Mat>,
     match value.get(key) {
         None | Some(Value::Null) => Ok(None),
         Some(v) => resolve_mat(v, tensors).map(Some),
-    }
-}
-
-/// Like [`opt_mat`], but *moves* a placeholder-referenced section out of
-/// `tensors` (leaving an empty matrix behind) instead of cloning it —
-/// for decode paths that consume each section exactly once, where a
-/// clone would double the bulk-data cost the binary plane saves.
-pub fn take_mat(
-    value: &Value,
-    tensors: &mut [Mat],
-    key: &str,
-) -> Result<Option<Mat>, String> {
-    match value.get(key) {
-        None | Some(Value::Null) => Ok(None),
-        Some(v) => {
-            if let Some(i) = placeholder_index(v) {
-                let slot = tensors.get_mut(i).ok_or_else(|| {
-                    format!("tensor ref ${i} out of range ({} sections)", tensors.len())
-                })?;
-                Ok(Some(std::mem::replace(slot, Mat::zeros(0, 0))))
-            } else {
-                mat_from_value(v).map(Some)
-            }
-        }
-    }
-}
-
-/// Matrix view of a field that may also be something else entirely
-/// (`init_labels` keeps its v1 integer-array form): `Ok(None)` when `v`
-/// is neither a placeholder nor an inline matrix object.
-pub fn maybe_mat(v: &Value, tensors: &[Mat]) -> Result<Option<Mat>, String> {
-    if placeholder_index(v).is_some() || is_inline_mat(v) {
-        resolve_mat(v, tensors).map(Some)
-    } else {
-        Ok(None)
     }
 }
 
@@ -406,18 +578,13 @@ pub fn decode_binary_header(bytes: &[u8]) -> Result<Value, RpcError> {
     decode_v2_preamble(bytes).map(|(v, _, _)| v)
 }
 
-/// Decode frame-payload bytes, auto-detecting v1 JSON vs v2 binary by the
-/// magic byte. Returns the envelope, the tensor sections (empty for v1),
-/// and which encoding arrived.
-pub fn decode_payload(bytes: &[u8]) -> Result<(Value, Vec<Mat>, WireMode), RpcError> {
-    if bytes.first() != Some(&BIN_MAGIC) {
-        let text = std::str::from_utf8(bytes)
-            .map_err(|e| RpcError::Malformed(format!("non-utf8 frame: {e}")))?;
-        let v = json::parse(text).map_err(|e| RpcError::Malformed(e.to_string()))?;
-        return Ok((v, Vec::new(), WireMode::Json));
-    }
+/// Walk and validate the tensor-section table of a v2 payload — shared by
+/// the materializing and zero-copy decodes so their error behavior cannot
+/// diverge. Returns the parsed header plus per-section shape/offset metas;
+/// no tensor data is touched beyond bounds checks.
+fn parse_v2(bytes: &[u8]) -> Result<(Value, Vec<Section>), RpcError> {
     let (v, n_tensors, mut off) = decode_v2_preamble(bytes)?;
-    let mut tensors = Vec::with_capacity(n_tensors.min(64));
+    let mut sections = Vec::with_capacity(n_tensors.min(64));
     for i in 0..n_tensors {
         let dims = bytes
             .get(off..off + 8)
@@ -426,15 +593,11 @@ pub fn decode_payload(bytes: &[u8]) -> Result<(Value, Vec<Mat>, WireMode), RpcEr
         let cols = u32::from_le_bytes([dims[4], dims[5], dims[6], dims[7]]) as usize;
         off += 8;
         let nbytes = tensor_byte_len(rows, cols)?;
-        let data = bytes
-            .get(off..off + nbytes)
-            .ok_or_else(|| RpcError::Malformed(format!("truncated tensor section {i}")))?;
-        off += nbytes;
-        let mut vals = Vec::with_capacity(nbytes / 4);
-        for ch in data.chunks_exact(4) {
-            vals.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+        if bytes.get(off..off + nbytes).is_none() {
+            return Err(RpcError::Malformed(format!("truncated tensor section {i}")));
         }
-        tensors.push(Mat::from_vec(vals, rows, cols));
+        sections.push(Section { rows, cols, off });
+        off += nbytes;
     }
     if off != bytes.len() {
         return Err(RpcError::Malformed(format!(
@@ -442,7 +605,48 @@ pub fn decode_payload(bytes: &[u8]) -> Result<(Value, Vec<Mat>, WireMode), RpcEr
             bytes.len() - off
         )));
     }
+    Ok((v, sections))
+}
+
+fn section_mat(bytes: &[u8], s: &Section) -> Mat {
+    let data = &bytes[s.off..s.off + s.rows * s.cols * 4];
+    let mut vals = Vec::with_capacity(s.rows * s.cols);
+    for ch in data.chunks_exact(4) {
+        vals.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+    }
+    Mat::from_vec(vals, s.rows, s.cols)
+}
+
+/// Decode frame-payload bytes, auto-detecting v1 JSON vs v2 binary by the
+/// magic byte. Returns the envelope, the tensor sections (empty for v1),
+/// and which encoding arrived. Every section is materialized; hot paths
+/// use [`decode_frame`] instead and materialize per consumed field.
+pub fn decode_payload(bytes: &[u8]) -> Result<(Value, Vec<Mat>, WireMode), RpcError> {
+    if bytes.first() != Some(&BIN_MAGIC) {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|e| RpcError::Malformed(format!("non-utf8 frame: {e}")))?;
+        let v = json::parse(text).map_err(|e| RpcError::Malformed(e.to_string()))?;
+        return Ok((v, Vec::new(), WireMode::Json));
+    }
+    let (v, sections) = parse_v2(bytes)?;
+    let tensors = sections.iter().map(|s| section_mat(bytes, s)).collect();
     Ok((v, tensors, WireMode::Binary))
+}
+
+/// Zero-copy decode: like [`decode_payload`], but the returned
+/// [`TensorBuf`] takes ownership of the frame bytes and serves borrowed
+/// [`MatView`]s instead of materializing every section up front. The
+/// section table is fully validated here (truncation, size caps, trailing
+/// bytes), so views can slice without further checks.
+pub fn decode_frame(bytes: Vec<u8>) -> Result<(Value, TensorBuf, WireMode), RpcError> {
+    if bytes.first() != Some(&BIN_MAGIC) {
+        let text = std::str::from_utf8(&bytes)
+            .map_err(|e| RpcError::Malformed(format!("non-utf8 frame: {e}")))?;
+        let v = json::parse(text).map_err(|e| RpcError::Malformed(e.to_string()))?;
+        return Ok((v, TensorBuf::empty(), WireMode::Json));
+    }
+    let (v, sections) = parse_v2(&bytes)?;
+    Ok((v, TensorBuf { buf: bytes, sections }, WireMode::Binary))
 }
 
 /// `hello {wire, version}` reply: binary is agreed only when the peer
@@ -573,21 +777,6 @@ mod tests {
     }
 
     #[test]
-    fn take_mat_moves_sections_out() {
-        let mut tensors = vec![Mat::from_vec(vec![1.0, 2.0], 1, 2)];
-        let v = obj([("m", placeholder(0))]);
-        let got = take_mat(&v, &mut tensors, "m").unwrap().unwrap();
-        assert_eq!(got.as_slice(), &[1.0, 2.0]);
-        // the slot is emptied, not cloned
-        assert_eq!(tensors[0].shape(), (0, 0));
-        assert!(take_mat(&v, &mut [], "m").is_err());
-        assert!(take_mat(&v, &mut tensors, "absent").unwrap().is_none());
-        // inline form still resolves
-        let inline = obj([("m", mat_to_value(&got))]);
-        assert_eq!(take_mat(&inline, &mut tensors, "m").unwrap().unwrap(), got);
-    }
-
-    #[test]
     fn header_only_decode_skips_sections() {
         let m = Mat::from_vec(vec![1.0; 8], 2, 4);
         let mut p = Payload::default();
@@ -615,15 +804,6 @@ mod tests {
         assert_eq!(mat_from_value(inner).unwrap(), p.tensors[0]);
         // dangling ref is an error
         assert!(inline_value(&placeholder(5), &p.tensors).is_err());
-    }
-
-    #[test]
-    fn maybe_mat_distinguishes_forms() {
-        let t = vec![Mat::zeros(2, 2)];
-        assert_eq!(maybe_mat(&placeholder(0), &t).unwrap().unwrap().shape(), (2, 2));
-        assert!(maybe_mat(&Value::Array(vec![]), &t).unwrap().is_none());
-        assert!(maybe_mat(&mat_to_value(&t[0]), &t).unwrap().is_some());
-        assert!(maybe_mat(&placeholder(3), &t).is_err());
     }
 
     /// Random JSON (finite numbers only, exact-int range) for header props.
@@ -738,6 +918,100 @@ mod tests {
             json.len(),
             bin.len()
         );
+    }
+
+    #[test]
+    fn decode_frame_views_match_materialized_decode() {
+        let m0 = Mat::from_vec(vec![f32::NAN, 1.5, -2.25, 0.0, 7.0, -0.0], 2, 3);
+        let m1 = Mat::from_vec(vec![3.5; 8], 4, 2);
+        let env = obj([("a", placeholder(0)), ("b", placeholder(1))]);
+        let bytes =
+            encode_payload(&env, &[m0.clone(), m1.clone()], WireMode::Binary).unwrap();
+        let (v_full, mats, _) = decode_payload(&bytes).unwrap();
+        let (v, tb, mode) = decode_frame(bytes).unwrap();
+        assert_eq!(mode, WireMode::Binary);
+        assert_eq!(v, v_full);
+        assert_eq!(tb.len(), 2);
+        for (i, want) in mats.iter().enumerate() {
+            let view = tb.view(i).unwrap();
+            assert_eq!(view.shape(), want.shape());
+            assert_eq!(bits(&view.to_mat()), bits(want), "section {i} bits");
+            for r in 0..want.rows() {
+                assert_eq!(
+                    view.row_vec(r).iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    want.row(r).iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "section {i} row {r}"
+                );
+            }
+        }
+        // element access decodes at arbitrary (unaligned) offsets
+        assert_eq!(tb.view(1).unwrap().get(3, 1), 3.5);
+        assert!(tb.view(2).is_none());
+        // materialize reproduces the eager decode exactly (bitwise — the
+        // NaN payload makes PartialEq useless here)
+        let mzd = tb.materialize();
+        assert_eq!(mzd.len(), mats.len());
+        for (a, b) in mzd.iter().zip(&mats) {
+            assert_eq!(bits(a), bits(b));
+        }
+    }
+
+    #[test]
+    fn decode_frame_rejects_what_decode_payload_rejects() {
+        let m = Mat::from_vec(vec![1.0; 12], 3, 4);
+        let bytes =
+            encode_payload(&obj([("m", placeholder(0))]), &[m], WireMode::Binary).unwrap();
+        for cut in [bytes.len() - 1, bytes.len() - 17] {
+            assert!(matches!(
+                decode_frame(bytes[..cut].to_vec()),
+                Err(RpcError::Malformed(e)) if e.contains("truncated")
+            ));
+        }
+        let mut fat = bytes.clone();
+        fat.extend_from_slice(&[0u8; 2]);
+        assert!(matches!(
+            decode_frame(fat),
+            Err(RpcError::Malformed(e)) if e.contains("trailing")
+        ));
+        // v1 text still decodes with no sections
+        let (v, tb, mode) = decode_frame(b"{\"a\":4}".to_vec()).unwrap();
+        assert_eq!(mode, WireMode::Json);
+        assert!(tb.is_empty());
+        assert_eq!(v.get("a").unwrap().as_i64(), Some(4));
+    }
+
+    #[test]
+    fn body_resolves_placeholder_inline_and_label_forms() {
+        let m = Mat::from_vec(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        let env = obj([
+            ("emb", placeholder(0)),
+            ("inline", mat_to_value(&m)),
+            ("labels", Value::Array(vec![Value::from(1i64), Value::from(0i64)])),
+        ]);
+        let bytes = encode_payload(&env, &[m.clone()], WireMode::Binary).unwrap();
+        let (value, tensors, _) = decode_frame(bytes).unwrap();
+        let body = Body { value, tensors };
+        // placeholder resolves through a view, inline through an owned Mat
+        assert_eq!(body.mat("emb").unwrap().unwrap(), m);
+        assert!(matches!(body.mat_ref("emb").unwrap().unwrap(), MatRef::View(_)));
+        assert_eq!(body.mat("inline").unwrap().unwrap(), m);
+        assert!(matches!(body.mat_ref("inline").unwrap().unwrap(), MatRef::Owned(_)));
+        assert!(body.mat("absent").unwrap().is_none());
+        // maybe_mat: matrix forms yes, plain arrays no
+        let labels = body.value.get("labels").unwrap().clone();
+        assert!(body.maybe_mat(&labels).unwrap().is_none());
+        let ph = body.value.get("emb").unwrap().clone();
+        assert_eq!(body.maybe_mat(&ph).unwrap().unwrap(), m);
+        // a dangling ref is an error, mirroring resolve_mat
+        assert!(Body::json(obj([("x", placeholder(7))])).mat("x").is_err());
+        // row access goes straight to the frame buffer
+        let r = body.mat_ref("emb").unwrap().unwrap();
+        assert_eq!(r.row_vec(1), &[3.0, 4.0]);
+        assert_eq!((r.rows(), r.cols()), (2, 2));
+        // the owned views keep the v1-compatible shapes
+        let p = body.to_payload();
+        assert_eq!(p.tensors.len(), 1);
+        assert_eq!(p.tensors[0], m);
     }
 
     #[test]

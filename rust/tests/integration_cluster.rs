@@ -90,6 +90,18 @@ fn harness_wire(
     coord_wire: WireMode,
     worker_wire: WireMode,
 ) -> Harness {
+    harness_custom(pool, n_workers, coord_wire, worker_wire, &|_| {})
+}
+
+/// Full-control variant: `coord_tweak` runs over the coordinator's config
+/// before start (e.g. disabling the connection pool).
+fn harness_custom(
+    pool: usize,
+    n_workers: usize,
+    coord_wire: WireMode,
+    worker_wire: WireMode,
+    coord_tweak: &dyn Fn(&mut AlaasConfig),
+) -> Harness {
     let mut cfg = base_config();
     cfg.server.wire = worker_wire;
     let store = Arc::new(StoreRouter::new("/tmp", &cfg.store));
@@ -110,6 +122,7 @@ fn harness_wire(
     coord_cfg.server.wire = coord_wire;
     coord_cfg.cluster.workers =
         workers.iter().map(|w| w.addr().to_string()).collect();
+    coord_tweak(&mut coord_cfg);
     let coord_metrics = Registry::new();
     let coordinator = Coordinator::start(
         coord_cfg,
@@ -391,6 +404,64 @@ fn wire_mode_parity_and_mixed_pair_fallback() {
     for (i, sel) in kcg_sel.iter().enumerate().skip(1) {
         assert_eq!(sel, &kcg_sel[0], "k_center_greedy differs across wire combos ({i})");
     }
+}
+
+/// The PR 4 acceptance pin, deterministic (counts, not timings): N
+/// scatter RPCs over the connection pool perform at most one dial per
+/// worker — not one per RPC, as the pre-pool coordinator did.
+#[test]
+fn pooled_scatter_dials_once_per_worker_not_per_rpc() {
+    let h = harness(160, 3);
+    let mut cluster = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
+    cluster.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+    for strategy in ["entropy", "random", "k_center_greedy"] {
+        let (sel, _, _) = cluster.query("s", 20, Some(strategy)).unwrap();
+        assert_valid(&sel, &h.manifest, 20);
+    }
+    let snap = h.coord_metrics.snapshot();
+    let counters = snap.get("counters").unwrap();
+    let counter =
+        |name: &str| -> i64 { counters.get(name).and_then(|v| v.as_i64()).unwrap_or(0) };
+    // 1 push + 3 query scatters = 12 worker RPCs over 3 workers: the pool
+    // dials each worker exactly once and reuses the negotiated conn
+    assert_eq!(counter("pool.dials"), 3, "scatter must reuse pooled connections");
+    assert!(counter("pool.hits") >= 9, "reused calls must count as hits");
+    assert_eq!(counter("pool.retries"), 0, "healthy cluster must not retry");
+    assert_eq!(counter("pool.in_flight"), 0, "gauge must return to zero");
+    // negotiation happened on the pooled dials, not per call
+    assert_eq!(counter("wire.json_fallbacks"), 0);
+}
+
+/// Pooling is a transport optimization only: with `[server.pool]` reuse
+/// disabled the coordinator dials per call (the pre-pool behavior) and
+/// every selection is identical.
+#[test]
+fn per_call_dialing_matches_pooled_selections() {
+    let pooled = harness(200, 3);
+    let per_call = harness_custom(200, 3, WireMode::Binary, WireMode::Binary, &|cfg| {
+        cfg.server.pool.max_idle_per_peer = 0;
+    });
+    let mut a = AlClient::connect(&pooled.coordinator.addr().to_string()).unwrap();
+    let mut b = AlClient::connect(&per_call.coordinator.addr().to_string()).unwrap();
+    a.push_data("s", &pooled.manifest, Some(&pooled.init_labels)).unwrap();
+    b.push_data("s", &per_call.manifest, Some(&per_call.init_labels)).unwrap();
+    for strategy in ["entropy", "least_confidence", "random", "k_center_greedy"] {
+        let (x, _, _) = a.query("s", 24, Some(strategy)).unwrap();
+        let (y, _, _) = b.query("s", 24, Some(strategy)).unwrap();
+        assert_valid(&x, &pooled.manifest, 24);
+        assert_eq!(ids(&x), ids(&y), "{strategy}: pooled vs per-call selections diverged");
+    }
+    // and per-call mode really did dial per scatter RPC
+    let snap = per_call.coord_metrics.snapshot();
+    let counters = snap.get("counters").unwrap();
+    let counter =
+        |name: &str| -> i64 { counters.get(name).and_then(|v| v.as_i64()).unwrap_or(0) };
+    assert!(
+        counter("pool.dials") >= 3 + 4 * 3,
+        "expected a dial per scatter RPC, saw {}",
+        counter("pool.dials")
+    );
+    assert_eq!(counter("pool.hits"), 0, "per-call mode must never reuse");
 }
 
 #[test]

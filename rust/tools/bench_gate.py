@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for the CI lane.
+
+Reads the BENCH_*.json files the bench targets emit (rpc_wire ->
+BENCH_PR2.json, conn_pool -> BENCH_PR4.json), matches each against the
+committed baseline (tools/bench_baseline.json), and fails the job when a
+gated metric regresses more than the configured tolerance below its
+baseline value.
+
+Baseline values are deliberately machine-independent *ratios* (payload
+cut, pooled-vs-per-call speedup): CI runners vary wildly in absolute
+speed, but a ratio of two measurements taken on the same runner in the
+same process is stable. Entries with a `null` baseline are record-only:
+the gate prints the measured value so maintainers can ratchet the
+baseline from a green run's artifact, but never fails on them.
+
+Usage (CI runs this from the rust/ package root):
+
+    python3 tools/bench_gate.py --baseline tools/bench_baseline.json \
+        ../BENCH_PR2.json ../BENCH_PR4.json
+"""
+
+import argparse
+import json
+import sys
+
+
+def lookup(doc, dotted):
+    cur = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("results", nargs="+", help="BENCH_*.json files to gate")
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    tolerance = float(baseline.get("tolerance", 0.15))
+
+    docs = {}
+    for path in args.results:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            print(f"FAIL  missing bench output: {path}")
+            return 1
+        name = doc.get("bench")
+        if not name:
+            print(f"FAIL  {path} has no 'bench' field")
+            return 1
+        docs[name] = (path, doc)
+
+    failures = 0
+    checked = 0
+    for check in baseline.get("checks", []):
+        bench, metric = check["bench"], check["metric"]
+        floor = check.get("baseline")
+        if bench not in docs:
+            print(f"FAIL  no results for bench '{bench}' (needed by {metric})")
+            failures += 1
+            continue
+        path, doc = docs[bench]
+        measured = lookup(doc, metric)
+        if not isinstance(measured, (int, float)):
+            print(f"FAIL  {bench}:{metric} missing from {path}")
+            failures += 1
+            continue
+        if floor is None:
+            print(f"note  {bench}:{metric} = {measured:.4g} (record-only, no baseline)")
+            continue
+        checked += 1
+        cutoff = float(floor) * (1.0 - tolerance)
+        if measured < cutoff:
+            print(
+                f"FAIL  {bench}:{metric} = {measured:.4g} "
+                f"< {cutoff:.4g} (baseline {floor} - {tolerance:.0%})"
+            )
+            failures += 1
+        else:
+            print(f"ok    {bench}:{metric} = {measured:.4g} (>= {cutoff:.4g})")
+
+    if failures:
+        print(f"\nbench gate: {failures} regression(s) past the {tolerance:.0%} tolerance")
+        return 1
+    print(f"\nbench gate: {checked} gated metric(s) within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
