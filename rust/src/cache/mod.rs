@@ -79,11 +79,7 @@ impl DataCache {
     }
 
     fn shard_for(&self, key: &str) -> &Mutex<Shard> {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in key.bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x1000_0000_01b3);
-        }
+        let h = crate::util::fnv1a(key.as_bytes());
         &self.shards[(h as usize) % self.shards.len()]
     }
 

@@ -2,13 +2,23 @@
 //! session across N workers (DESIGN.md §Cluster).
 //!
 //! The coordinator accepts the unchanged client API (`push_data`,
-//! `query`, `status`, `metrics`, ...) plus `register` for dynamic worker
-//! membership. On `push_data` it shards the manifest's pool across the
-//! live workers (each worker also receives the full init split so every
-//! replica fine-tunes the identical head) and scatters `scan_shard`
-//! calls; each worker then pipelines its own shard concurrently. On
-//! `query` it scatters `select_shard`, re-dispatching a dead worker's
-//! shard to a survivor, and merges:
+//! `query`, `status`, `metrics`, ...) plus the membership surface:
+//! one-shot `register`, and — with `[cluster.membership]` enabled — the
+//! `heartbeat`/`members`/`deregister` lease protocol. On `push_data` it
+//! shards the manifest's pool across the live workers (each worker also
+//! receives the full init split so every replica fine-tunes the
+//! identical head) and scatters `scan_shard` calls; each worker then
+//! pipelines its own shard concurrently. Every scatter runs against a
+//! **generation-numbered membership view**: when the view moves (a
+//! worker joins, dies, or returns), the session's shard layout is
+//! re-planned by the rendezvous planner (`membership::assign`) before
+//! the next scatter — a joiner takes over a proportional slice of the
+//! pool, a dead worker's rows scatter across *all* survivors — while
+//! scatters already in flight complete against the layout they started
+//! on (shard instances are identified by stable `sid`s, lazily
+//! re-pushable on `unknown session`). On `query` it scatters
+//! `select_shard`, re-dispatching a dead worker's shard to a survivor,
+//! and merges:
 //!
 //! * exact top-k for the uncertainty strategies,
 //! * coordinator-side sampling for `random`,
@@ -42,6 +52,7 @@ use crate::util::mat::Mat;
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
 
+use super::membership::{self, Membership, MsClock};
 use super::merge::{self, Candidate, MergeKind};
 use super::shard;
 
@@ -59,10 +70,18 @@ struct WorkerSlot {
 }
 
 /// One shard of a cluster session: which global pool positions it covers
-/// and which worker slot currently owns it.
+/// and which worker slot currently owns it. `sid` is the stable identity
+/// baked into the worker-side shard session id — it survives worker
+/// reassignment (re-dispatch) but a rebalance that changes the shard's
+/// row set mints a fresh one, so in-flight scatters pinned to the old
+/// layout can never read the new content through a stale index mapping.
 struct ShardState {
+    sid: u64,
     indices: Vec<usize>,
     worker: usize,
+    /// Exactly one shard per session carries the manifest's test split
+    /// (agent-job evaluation, DESIGN.md §Agent).
+    carries_test: bool,
 }
 
 struct ClusterSession {
@@ -73,12 +92,27 @@ struct ClusterSession {
     /// re-pushed session never collides with (or reads through) shard
     /// data from an earlier push.
     epoch: u64,
+    /// Membership view generation this session's shard layout reflects
+    /// (0 under static config). A scatter whose view moved past it
+    /// triggers `maybe_rebalance` first.
+    view_gen: u64,
+    /// Next shard instance id (`ShardState::sid`) for this session.
+    next_sid: u64,
     shards: Vec<ShardState>,
+    /// Shard instances retired by rebalances, as `(epoch, sid, last
+    /// slot)`. A scatter pinned to the old layout may lazily re-push
+    /// one of these onto a worker *after* the rebalance freed it; every
+    /// sweep (next rebalance, or the fast path when the view is
+    /// current) re-drops them so re-pushed orphans cannot accumulate in
+    /// worker memory. Entries carry their own epoch so obligations
+    /// survive a session re-push. Bounded by [`RETIRED_CAP`], newest
+    /// kept (`ledger_push`).
+    retired: Vec<(u64, u64, usize)>,
     /// Labeled-set embeddings, fetched once from a worker for the refine
     /// protocol.
     init_emb: Option<Mat>,
     /// Test-split embeddings, fetched once from a worker for agent-job
-    /// evaluation (the test split is replicated to every shard).
+    /// evaluation.
     test_emb: Option<Mat>,
 }
 
@@ -95,6 +129,13 @@ struct CoordState {
     /// call. Invalidated per address on re-registration and on observed
     /// death.
     pool: ConnPool,
+    /// Live-membership lease table + generation-numbered view (DESIGN.md
+    /// §Cluster). Inert when `[cluster.membership]` is disabled: the
+    /// static worker table alone drives scatter, exactly as in PR 1.
+    membership: Mutex<Membership>,
+    /// Clock the leases are measured on; carries a virtual offset so the
+    /// fault-injection harness can expire leases deterministically.
+    clock: MsClock,
     /// Background PSHEA jobs fanning out over worker shards (§Agent).
     jobs: JobRegistry,
     shutdown: AtomicBool,
@@ -105,6 +146,8 @@ pub struct Coordinator {
     addr: SocketAddr,
     state: Arc<CoordState>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    /// Lease-expiry / keepalive-probe sweep (membership enabled only).
+    tick_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
@@ -130,6 +173,17 @@ impl Coordinator {
             Some(deps.metrics.clone()),
         )
         .with_timeouts(WORKER_DIAL_TIMEOUT, POLL_RPC_TIMEOUT);
+        let clock = MsClock::new();
+        let mut mem = Membership::new();
+        if config.cluster.membership.enabled {
+            // statically configured workers boot as presumed-live members
+            // (exactly the PR 1 assumption) — but now they must keep
+            // heartbeating to stay in the view
+            let now = clock.now_ms();
+            for w in &config.cluster.workers {
+                mem.heartbeat(w, now, config.cluster.membership.lease_ms);
+            }
+        }
         let state = Arc::new(CoordState {
             config,
             deps,
@@ -137,15 +191,46 @@ impl Coordinator {
             sessions: Mutex::new(HashMap::new()),
             push_epoch: std::sync::atomic::AtomicU64::new(0),
             pool: conn_pool,
+            membership: Mutex::new(mem),
+            clock,
             jobs: JobRegistry::new(),
             shutdown: AtomicBool::new(false),
         });
+        {
+            let mem = state.membership.lock().unwrap();
+            update_membership_gauges(&state, mem.generation(), mem.len());
+        }
         let accept_state = state.clone();
         let accept_thread = std::thread::Builder::new()
             .name("alaas-coord-accept".into())
             .spawn(move || accept_loop(listener, accept_state))?;
+        let tick_thread = if state.config.cluster.membership.enabled {
+            let tick_state = state.clone();
+            let interval = Duration::from_millis(
+                (state.config.cluster.membership.heartbeat_ms / 2).clamp(10, 1_000),
+            );
+            Some(
+                std::thread::Builder::new()
+                    .name("alaas-coord-membership".into())
+                    .spawn(move || loop {
+                        // sleep in small slices so shutdown joins promptly
+                        let mut slept = Duration::ZERO;
+                        while slept < interval {
+                            if tick_state.shutdown.load(Ordering::SeqCst) {
+                                return;
+                            }
+                            let step = Duration::from_millis(25).min(interval - slept);
+                            std::thread::sleep(step);
+                            slept += step;
+                        }
+                        membership_tick(&tick_state);
+                    })?,
+            )
+        } else {
+            None
+        };
         crate::log_info!("cluster", "coordinator listening on {addr}");
-        Ok(Coordinator { addr, state, accept_thread: Some(accept_thread) })
+        Ok(Coordinator { addr, state, accept_thread: Some(accept_thread), tick_thread })
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -155,6 +240,30 @@ impl Coordinator {
     /// Number of currently-live registered workers.
     pub fn live_workers(&self) -> usize {
         self.state.workers.lock().unwrap().iter().filter(|w| w.alive).count()
+    }
+
+    /// `(generation, live members)` of the membership view — `(0, live
+    /// slot count)` when membership is disabled.
+    pub fn membership_snapshot(&self) -> (u64, usize) {
+        if self.state.config.cluster.membership.enabled {
+            let mem = self.state.membership.lock().unwrap();
+            (mem.generation(), mem.len())
+        } else {
+            (0, self.live_workers())
+        }
+    }
+
+    /// Advance the membership clock by `ms` of *virtual* time — the
+    /// fault-injection harness's deterministic lease expiry (leases are
+    /// measured on this clock, never on `Instant::now` directly).
+    pub fn advance_time(&self, ms: u64) {
+        self.state.clock.advance(ms);
+    }
+
+    /// Run one membership sweep (lease expiry + keepalive probes) now,
+    /// without waiting for the background tick.
+    pub fn membership_tick(&self) {
+        membership_tick(&self.state);
     }
 
     pub fn shutdown(mut self) {
@@ -170,6 +279,9 @@ impl Coordinator {
         // checks and real RPCs cannot diverge
         let _ = pool::dial(&self.addr.to_string(), Duration::from_millis(500));
         if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.tick_thread.take() {
             let _ = h.join();
         }
     }
@@ -223,6 +335,10 @@ fn dispatch(
         ))),
         "ping" => Ok(Payload::json(Value::from("pong"))),
         "register" => register(state, &params.value).map(Payload::json),
+        // live-membership lease protocol (DESIGN.md §Cluster)
+        "heartbeat" => heartbeat_rpc(state, &params.value).map(Payload::json),
+        "members" => Ok(Payload::json(members_rpc(state))),
+        "deregister" => deregister_rpc(state, &params.value).map(Payload::json),
         "push_data" => push_data(state, params).map(Payload::json),
         "status" => status(state, &params.value).map(Payload::json),
         "query" => query(state, &params.value).map(Payload::json),
@@ -295,6 +411,20 @@ fn worker_addr(state: &CoordState, slot: usize) -> Option<String> {
     ws.get(slot).filter(|w| w.alive).map(|w| w.addr.clone())
 }
 
+/// Slot index for `addr` in the worker table, creating or reviving it.
+/// Returns `(slot, newly_alive)`.
+fn ensure_slot(state: &CoordState, addr: &str) -> (usize, bool) {
+    let mut ws = state.workers.lock().unwrap();
+    if let Some(i) = ws.iter().position(|w| w.addr == addr) {
+        let newly_alive = !ws[i].alive;
+        ws[i].alive = true;
+        (i, newly_alive)
+    } else {
+        ws.push(WorkerSlot { addr: addr.to_string(), alive: true });
+        (ws.len() - 1, true)
+    }
+}
+
 fn mark_dead(state: &CoordState, slot: usize) {
     let mut ws = state.workers.lock().unwrap();
     if let Some(w) = ws.get_mut(slot) {
@@ -311,6 +441,292 @@ fn mark_dead(state: &CoordState, slot: usize) {
                 .metrics
                 .counter("cluster.workers_dead")
                 .fetch_add(1, Ordering::Relaxed);
+            // live membership: an observed transport death leaves the
+            // view (generation bump → sessions rebalance the dead
+            // worker's rows across the survivors on their next scatter)
+            // — but only if a keepalive probe agrees. One RPC timing out
+            // against a slow-but-healthy, still-heartbeating worker is
+            // not proof of death, and evicting it would oscillate the
+            // view (rebalance out, heartbeat re-join, rebalance back —
+            // two full rescans of its rows per cycle). The probe dials
+            // fresh: the idle set was invalidated above, so a stale
+            // parked socket cannot fake health.
+            if state.config.cluster.membership.enabled {
+                if state.pool.probe_peer(&addr, PROBE_TIMEOUT) {
+                    crate::log_info!(
+                        "cluster",
+                        "worker {addr} failed an RPC but answers probes; \
+                         keeping its membership (slot revives on its next beat)"
+                    );
+                } else {
+                    let (removed, generation, live) = {
+                        let mut mem = state.membership.lock().unwrap();
+                        let removed = mem.remove(&addr);
+                        (removed, mem.generation(), mem.len())
+                    };
+                    if removed {
+                        state
+                            .deps
+                            .metrics
+                            .counter("membership.evictions")
+                            .fetch_add(1, Ordering::Relaxed);
+                        update_membership_gauges(state, generation, live);
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn update_membership_gauges(state: &CoordState, generation: u64, live: usize) {
+    state.deps.metrics.gauge_set("membership.generation", generation);
+    state.deps.metrics.gauge_set("membership.live_workers", live as u64);
+}
+
+/// Join/renew `addr` in the membership view (the `register` and
+/// `heartbeat` paths). Returns `(joined, generation)`.
+fn membership_join(state: &CoordState, addr: &str) -> (bool, u64) {
+    let lease_ms = state.config.cluster.membership.lease_ms;
+    let now = state.clock.now_ms();
+    let (joined, generation, live) = {
+        let mut mem = state.membership.lock().unwrap();
+        let (joined, generation) = mem.heartbeat(addr, now, lease_ms);
+        (joined, generation, mem.len())
+    };
+    if joined {
+        state.deps.metrics.counter("membership.joins").fetch_add(1, Ordering::Relaxed);
+        // a joining (or returning) worker may be a new process: drop its
+        // pooled connections so the next call re-dials + re-negotiates
+        state.pool.invalidate(addr);
+        crate::log_info!(
+            "cluster",
+            "worker {addr} joined the view (generation {generation}, {live} live)"
+        );
+    }
+    update_membership_gauges(state, generation, live);
+    (joined, generation)
+}
+
+/// `heartbeat {addr}` — lease renewal + auto-discovery. A first beat
+/// from an unknown address joins the worker into the view, bumping the
+/// generation (sessions rebalance a slice of the pool onto it at their
+/// next scatter); later beats renew the lease. With membership disabled
+/// this degrades to `register` — the static-config fallback — so
+/// `--discover` workers interoperate with a statically configured
+/// coordinator.
+fn heartbeat_rpc(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
+    let addr = str_param(params, "addr")?;
+    if !addr.contains(':') {
+        return Err(format!("worker address '{addr}' is not host:port"));
+    }
+    state.deps.metrics.counter("membership.heartbeats").fetch_add(1, Ordering::Relaxed);
+    let (_, revived) = ensure_slot(state, &addr);
+    let mut m = Map::new();
+    if state.config.cluster.membership.enabled {
+        let (joined, generation) = membership_join(state, &addr);
+        m.insert("generation", Value::from(generation));
+        m.insert(
+            "lease_ms",
+            Value::from(state.config.cluster.membership.lease_ms as usize),
+        );
+        m.insert("joined", Value::Bool(joined));
+    } else {
+        if revived {
+            state.pool.invalidate(&addr);
+            crate::log_info!(
+                "cluster",
+                "worker {addr} registered via heartbeat (static membership)"
+            );
+        }
+        m.insert("generation", Value::from(0));
+        m.insert("joined", Value::Bool(revived));
+    }
+    Ok(Value::Object(m))
+}
+
+/// `deregister {addr}` — graceful leave: the worker's rows rebalance
+/// across the survivors at the next scatter instead of waiting out the
+/// lease.
+fn deregister_rpc(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
+    let addr = str_param(params, "addr")?;
+    let left = if state.config.cluster.membership.enabled {
+        let (removed, generation, live) = {
+            let mut mem = state.membership.lock().unwrap();
+            let removed = mem.remove(&addr);
+            (removed, mem.generation(), mem.len())
+        };
+        if removed {
+            state
+                .deps
+                .metrics
+                .counter("membership.deregisters")
+                .fetch_add(1, Ordering::Relaxed);
+            update_membership_gauges(state, generation, live);
+            crate::log_info!(
+                "cluster",
+                "worker {addr} deregistered (generation {generation}, {live} live)"
+            );
+        }
+        removed
+    } else {
+        false
+    };
+    // retire the slot quietly (a goodbye, not a death: no
+    // cluster.workers_dead count)
+    {
+        let mut ws = state.workers.lock().unwrap();
+        if let Some(w) = ws.iter_mut().find(|w| w.addr == addr) {
+            w.alive = false;
+        }
+    }
+    state.pool.invalidate(&addr);
+    let mut m = Map::new();
+    m.insert("left", Value::Bool(left));
+    Ok(Value::Object(m))
+}
+
+/// `members` — the generation-numbered membership view (the static slot
+/// table, generation 0, when membership is disabled).
+fn members_rpc(state: &Arc<CoordState>) -> Value {
+    let mut m = Map::new();
+    let enabled = state.config.cluster.membership.enabled;
+    m.insert("enabled", Value::Bool(enabled));
+    if enabled {
+        let now = state.clock.now_ms();
+        let (generation, leases) = {
+            let mem = state.membership.lock().unwrap();
+            (mem.generation(), mem.leases())
+        };
+        m.insert("generation", Value::from(generation));
+        m.insert(
+            "members",
+            Value::Array(
+                leases
+                    .into_iter()
+                    .map(|(addr, deadline)| {
+                        let mut e = Map::new();
+                        e.insert("addr", Value::from(addr));
+                        e.insert(
+                            "lease_ms_left",
+                            Value::from(deadline.saturating_sub(now) as usize),
+                        );
+                        Value::Object(e)
+                    })
+                    .collect(),
+            ),
+        );
+    } else {
+        let ws = state.workers.lock().unwrap();
+        m.insert("generation", Value::from(0));
+        m.insert(
+            "members",
+            Value::Array(
+                ws.iter()
+                    .filter(|w| w.alive)
+                    .map(|w| {
+                        let mut e = Map::new();
+                        e.insert("addr", Value::from(w.addr.clone()));
+                        Value::Object(e)
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    Value::Object(m)
+}
+
+/// Connect bound for one keepalive probe.
+const PROBE_TIMEOUT: Duration = Duration::from_millis(750);
+
+/// One membership sweep (the background tick; also callable directly
+/// through [`Coordinator::membership_tick`]): expire overdue leases,
+/// then keepalive-probe the members in the *suspect* half of their lease
+/// — reusing lease state, so a healthy recently-renewed worker is never
+/// probed — evicting dead peers before any query pays a scatter dial
+/// timeout. Probes go through `ConnPool::probe_peer`, which counts
+/// `pool.keepalive_probes` and never `pool.dials`.
+fn membership_tick(state: &Arc<CoordState>) {
+    let mcfg = &state.config.cluster.membership;
+    if !mcfg.enabled {
+        return;
+    }
+    let now = state.clock.now_ms();
+    let expired = state.membership.lock().unwrap().expire(now);
+    for addr in &expired {
+        state
+            .deps
+            .metrics
+            .counter("membership.expirations")
+            .fetch_add(1, Ordering::Relaxed);
+        crate::log_warn!("cluster", "worker {addr} lease expired");
+        retire_slot(state, addr);
+    }
+    // suspects: more than half the lease gone without a renewal
+    let suspects: Vec<String> = {
+        let mem = state.membership.lock().unwrap();
+        mem.leases()
+            .into_iter()
+            .filter(|(_, deadline)| deadline.saturating_sub(now) < mcfg.lease_ms / 2)
+            .map(|(addr, _)| addr)
+            .collect()
+    };
+    // probe concurrently: K unreachable suspects cost one probe timeout,
+    // not K of them, so the sweep cadence (and a shutdown joining this
+    // thread) never stalls behind a serial probe walk
+    let failed: Vec<String> = std::thread::scope(|sc| {
+        let handles: Vec<_> = suspects
+            .iter()
+            .map(|addr| {
+                let addr = addr.as_str();
+                sc.spawn(move || {
+                    (!state.pool.probe_peer(addr, PROBE_TIMEOUT)).then(|| addr.to_string())
+                })
+            })
+            .collect();
+        handles.into_iter().filter_map(|h| h.join().unwrap_or(None)).collect()
+    });
+    for addr in failed {
+        if state.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let removed = state.membership.lock().unwrap().remove(&addr);
+        if removed {
+            state
+                .deps
+                .metrics
+                .counter("membership.probe_evictions")
+                .fetch_add(1, Ordering::Relaxed);
+            crate::log_warn!(
+                "cluster",
+                "worker {addr} failed its keepalive probe; evicted"
+            );
+            retire_slot(state, &addr);
+        }
+    }
+    let (generation, live) = {
+        let mem = state.membership.lock().unwrap();
+        (mem.generation(), mem.len())
+    };
+    update_membership_gauges(state, generation, live);
+}
+
+/// Mark the slot for `addr` dead (transport-level bookkeeping only)
+/// after a membership departure the caller already recorded — unlike
+/// `mark_dead`, no probe runs here: lease expiry has made the verdict,
+/// and a wedged-but-alive process answering a probe must still leave.
+fn retire_slot(state: &CoordState, addr: &str) {
+    let mut ws = state.workers.lock().unwrap();
+    if let Some(w) = ws.iter_mut().find(|w| w.addr == addr) {
+        if w.alive {
+            w.alive = false;
+            drop(ws);
+            state.pool.invalidate(addr);
+            state
+                .deps
+                .metrics
+                .counter("cluster.workers_dead")
+                .fetch_add(1, Ordering::Relaxed);
+            crate::log_warn!("cluster", "worker {addr} retired from the slot table");
         }
     }
 }
@@ -333,46 +749,77 @@ fn register(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
     // config: drop its pooled connections so the next call re-dials and
     // re-negotiates instead of writing into a dead socket
     state.pool.invalidate(&addr);
+    // under live membership, a one-shot register grants one lease — the
+    // worker must heartbeat (`--discover`) to stay past it
+    if state.config.cluster.membership.enabled {
+        membership_join(state, &addr);
+    }
     crate::log_info!("cluster", "worker {addr} registered ({live} live)");
     let mut m = Map::new();
     m.insert("workers", Value::from(live));
     Ok(Value::Object(m))
 }
 
-fn shard_session_id(session: &str, epoch: u64, shard: usize) -> String {
-    format!("{session}@e{epoch}#shard{shard}")
+/// Worker-side session id for one shard *instance*: `epoch` isolates
+/// pushes of the same client session, `sid` isolates shard layouts —
+/// a rebalance mints fresh sids for changed shards, so a scatter pinned
+/// to the previous layout can never read re-planned content through a
+/// stale index mapping.
+fn shard_session_id(session: &str, epoch: u64, sid: u64) -> String {
+    format!("{session}@e{epoch}#s{sid}")
+}
+
+/// Identity + content of one shard as the scatter paths need it for
+/// selects and (re-)pushes. Snapshotting a session yields these, and a
+/// scatter runs entirely against its snapshot — the "pinned generation"
+/// guarantee: a concurrent rebalance changes the session's layout but
+/// never a scatter already in flight.
+#[derive(Clone)]
+struct ShardRef {
+    /// Position in the layout it was snapshotted from (metrics keys,
+    /// reply routing).
+    shard: usize,
+    /// Stable shard instance id (see [`ShardState::sid`]).
+    sid: u64,
+    /// Global pool positions this shard covers, ascending.
+    indices: Vec<usize>,
+    /// Worker slot assigned at snapshot time.
+    worker: usize,
+    /// Whether this shard's sub-manifest carries the test split.
+    carries_test: bool,
 }
 
 /// Sub-manifest for one shard: the full init split (every worker
-/// fine-tunes the identical head) plus the shard's pool slice. Shard 0
-/// additionally carries the full test split — the agent job evaluates
-/// arm accuracy on it (§Agent), and one scanned copy suffices; both
-/// shard policies put pool index 0 on shard 0, so shard 0 is non-empty
-/// whenever the pool is, and a re-dispatch of shard 0 re-pushes the test
-/// split with it.
-fn sub_manifest(m: &Manifest, indices: &[usize], shard_idx: usize) -> Manifest {
+/// fine-tunes the identical head) plus the shard's pool slice. Exactly
+/// one shard per session additionally carries the full test split — the
+/// agent job evaluates arm accuracy on it (§Agent), and one scanned copy
+/// suffices; a re-dispatch or rebalance of the carrier re-pushes the
+/// test split with it.
+fn sub_manifest(m: &Manifest, indices: &[usize], shard_idx: usize, with_test: bool) -> Manifest {
     Manifest {
         name: format!("{}#shard{shard_idx}", m.name),
         num_classes: m.num_classes,
         img_dim: m.img_dim,
         init: m.init.clone(),
         pool: indices.iter().map(|&i| m.pool[i].clone()).collect(),
-        test: if shard_idx == 0 { m.test.clone() } else { vec![] },
+        test: if with_test { m.test.clone() } else { vec![] },
     }
 }
 
 fn scan_shard_params(
     session: &str,
     epoch: u64,
-    shard_idx: usize,
+    sref: &ShardRef,
     manifest: &Manifest,
-    indices: &[usize],
     init_labels: Option<&[u8]>,
 ) -> Payload {
     let mut p = Map::new();
-    p.insert("session", Value::from(shard_session_id(session, epoch, shard_idx)));
-    p.insert("shard", Value::from(shard_idx));
-    p.insert("manifest", sub_manifest(manifest, indices, shard_idx).to_value());
+    p.insert("session", Value::from(shard_session_id(session, epoch, sref.sid)));
+    p.insert("shard", Value::from(sref.shard));
+    p.insert(
+        "manifest",
+        sub_manifest(manifest, &sref.indices, sref.shard, sref.carries_test).to_value(),
+    );
     if let Some(l) = init_labels {
         // labels stay in the v1 integer-array form: these params are
         // built before the wire mode for the target worker is known, and
@@ -389,21 +836,19 @@ fn scan_shard_params(
     Payload::json(Value::Object(p))
 }
 
-/// Send one shard to a worker: the preferred slot first, then any other
-/// live worker. Returns the slot that accepted it.
-#[allow(clippy::too_many_arguments)]
+/// Send one shard to a worker: the sref's assigned slot first, then any
+/// other live worker. Returns the slot that accepted it.
 fn dispatch_shard(
     state: &CoordState,
     session: &str,
     epoch: u64,
-    shard_idx: usize,
+    sref: &ShardRef,
     manifest: &Manifest,
-    indices: &[usize],
     init_labels: Option<&[u8]>,
-    preferred: usize,
 ) -> Result<usize, String> {
-    let params = scan_shard_params(session, epoch, shard_idx, manifest, indices, init_labels);
+    let params = scan_shard_params(session, epoch, sref, manifest, init_labels);
     let mut last_err = String::from("no live workers");
+    let preferred = sref.worker;
     let mut order = vec![preferred];
     order.extend(live_slots(state).into_iter().map(|(i, _)| i).filter(|&i| i != preferred));
     for slot in order {
@@ -414,7 +859,7 @@ fn dispatch_shard(
             // manifest, spawn failure): deterministic — retrying the
             // identical params elsewhere would only kill healthy slots
             Err(RpcError::Remote(e)) => {
-                return Err(format!("shard {shard_idx}: {e}"));
+                return Err(format!("shard {}: {e}", sref.shard));
             }
             Err(e) => {
                 last_err = format!("worker {addr}: {e}");
@@ -422,7 +867,7 @@ fn dispatch_shard(
             }
         }
     }
-    Err(format!("shard {shard_idx}: no live worker accepted ({last_err})"))
+    Err(format!("shard {}: no live worker accepted ({last_err})", sref.shard))
 }
 
 /// `push_data {session, manifest, init_labels?}` — shard + scatter.
@@ -437,93 +882,135 @@ fn push_data(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> {
         return Err("no live workers registered".into());
     }
     let epoch = state.push_epoch.fetch_add(1, Ordering::Relaxed);
-    let plan =
-        shard::plan(manifest.pool.len(), live.len(), state.config.cluster.shard_policy);
 
-    // Scatter every non-empty shard concurrently; a refused shard walks
-    // the remaining live workers before giving up.
-    let jobs: Vec<(usize, Vec<usize>, usize)> = plan
-        .shards
-        .iter()
+    // Plan row ownership: the rendezvous planner over the live membership
+    // view, or the PR 1 static shard plan when membership is disabled.
+    let (view_gen, planned): (u64, Vec<(Vec<usize>, usize)>) =
+        if state.config.cluster.membership.enabled {
+            let view = state.membership.lock().unwrap().view();
+            if view.members.is_empty() {
+                return Err("no live workers registered".into());
+            }
+            let assignment = membership::assign(manifest.pool.len(), &view.members);
+            let mut planned = Vec::new();
+            for (addr, rows) in assignment {
+                if rows.is_empty() {
+                    continue;
+                }
+                let slot = ensure_slot(state, &addr).0;
+                planned.push((rows, slot));
+            }
+            (view.generation, planned)
+        } else {
+            let plan = shard::plan(
+                manifest.pool.len(),
+                live.len(),
+                state.config.cluster.shard_policy,
+            );
+            (
+                0,
+                plan.shards
+                    .into_iter()
+                    .enumerate()
+                    .filter(|(_, idx)| !idx.is_empty())
+                    .map(|(i, idx)| (idx, live[i].0))
+                    .collect(),
+            )
+        };
+    let srefs: Vec<ShardRef> = planned
+        .into_iter()
         .enumerate()
-        .filter(|(_, idx)| !idx.is_empty())
-        .map(|(i, idx)| (i, idx.clone(), live[i].0))
+        .map(|(i, (indices, slot))| ShardRef {
+            shard: i,
+            sid: i as u64,
+            indices,
+            worker: slot,
+            carries_test: i == 0,
+        })
         .collect();
-    let outcomes: Vec<Result<(usize, Vec<usize>, usize), String>> =
-        std::thread::scope(|sc| {
-            let handles: Vec<_> = jobs
-                .iter()
-                .map(|job| {
-                    let (shard_idx, indices, preferred) = (job.0, &job.1, job.2);
-                    let (manifest, init_labels, session) =
-                        (&manifest, &init_labels, session_id.as_str());
-                    sc.spawn(move || {
-                        dispatch_shard(
-                            state,
-                            session,
-                            epoch,
-                            shard_idx,
-                            manifest,
-                            indices,
-                            init_labels.as_deref(),
-                            preferred,
-                        )
-                        .map(|slot| (shard_idx, indices.clone(), slot))
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().unwrap_or_else(|_| Err("dispatch panicked".into())))
-                .collect()
-        });
 
-    let mut ok = Vec::new();
+    // Scatter every shard concurrently; a refused shard walks the
+    // remaining live workers before giving up.
+    let outcomes: Vec<Result<usize, String>> = std::thread::scope(|sc| {
+        let handles: Vec<_> = srefs
+            .iter()
+            .map(|sref| {
+                let (manifest, init_labels, session) =
+                    (&manifest, &init_labels, session_id.as_str());
+                sc.spawn(move || {
+                    dispatch_shard(state, session, epoch, sref, manifest, init_labels.as_deref())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err("dispatch panicked".into())))
+            .collect()
+    });
+
+    let mut ok: Vec<(ShardRef, usize)> = Vec::new();
     let mut first_err = None;
-    for o in outcomes {
+    for (sref, o) in srefs.into_iter().zip(outcomes) {
         match o {
-            Ok(x) => ok.push(x),
+            Ok(slot) => ok.push((sref, slot)),
             Err(e) => first_err = first_err.or(Some(e)),
         }
     }
     if let Some(e) = first_err {
         // don't leave half a session resident on the workers
-        let accepted: Vec<(usize, usize)> =
-            ok.iter().map(|(i, _, slot)| (*i, *slot)).collect();
-        drop_shard_sessions(state, &session_id, epoch, &accepted);
+        let accepted: Vec<(u64, u64, usize)> =
+            ok.iter().map(|(s, slot)| (epoch, s.sid, *slot)).collect();
+        drop_shard_sessions(state, &session_id, &accepted);
         return Err(e);
     }
     let mut shards = Vec::new();
-    for (shard_idx, indices, slot) in ok {
-        debug_assert_eq!(shard_idx, shards.len());
-        shards.push(ShardState { indices, worker: slot });
+    for (sref, slot) in ok {
+        debug_assert_eq!(sref.shard, shards.len());
+        shards.push(ShardState {
+            sid: sref.sid,
+            indices: sref.indices,
+            worker: slot,
+            carries_test: sref.carries_test,
+        });
     }
     let n_shards = shards.len();
+    let next_sid = n_shards as u64;
     let sizes: Vec<Value> =
         shards.iter().map(|s| Value::from(s.indices.len())).collect();
-    let previous = state.sessions.lock().unwrap().insert(
-        session_id.clone(),
-        Arc::new(Mutex::new(ClusterSession {
-            manifest: manifest.clone(),
-            init_labels,
-            epoch,
-            shards,
-            init_emb: None,
-            test_emb: None,
-        })),
-    );
+    let new_sess = Arc::new(Mutex::new(ClusterSession {
+        manifest: manifest.clone(),
+        init_labels,
+        epoch,
+        view_gen,
+        next_sid,
+        shards,
+        retired: Vec::new(),
+        init_emb: None,
+        test_emb: None,
+    }));
+    let previous = state
+        .sessions
+        .lock()
+        .unwrap()
+        .insert(session_id.clone(), new_sess.clone());
     let replaced = previous.is_some();
     if let Some(old) = previous {
-        // free the old push's shard sessions; epoched ids mean they can
-        // never collide with the ones this push just created
-        let (old_epoch, stale): (u64, Vec<(usize, usize)>) = {
+        // free the old push's shard sessions (including instances its
+        // rebalances retired, which carry their own epochs); epoched ids
+        // mean they can never collide with the ones this push just
+        // created. Drops a down slot couldn't take move into the NEW
+        // session's ledger, so a wedged worker's resident copy is still
+        // swept once it rejoins.
+        let stale: Vec<(u64, u64, usize)> = {
             let o = old.lock().unwrap();
-            (
-                o.epoch,
-                o.shards.iter().enumerate().map(|(i, s)| (i, s.worker)).collect(),
-            )
+            o.shards
+                .iter()
+                .map(|s| (o.epoch, s.sid, s.worker))
+                .chain(o.retired.iter().copied())
+                .collect()
         };
-        drop_shard_sessions(state, &session_id, old_epoch, &stale);
+        let undelivered = drop_shard_sessions(state, &session_id, &stale);
+        retain_undelivered(&new_sess, undelivered);
     }
     state.deps.metrics.meter("cluster.pushed_samples").add(manifest.pool.len() as u64);
 
@@ -536,28 +1023,38 @@ fn push_data(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> {
     Ok(Value::Object(m))
 }
 
-/// Best-effort `drop_session` for `(shard id, worker slot)` pairs —
-/// cleanup after a partial push failure or a session re-push, so scanned
-/// shards don't accumulate in worker memory. Errors are ignored: a dead
-/// worker frees the memory on its own.
+/// Best-effort `drop_session` for `(epoch, shard sid, worker slot)`
+/// triples — cleanup after a partial push failure, a session re-push,
+/// or a rebalance, so scanned shards don't accumulate in worker memory.
+/// Transport errors are ignored (a dead process frees the memory on its
+/// own, and an in-flight scatter still pinned to a dropped instance
+/// re-pushes it lazily on `unknown session`), but triples whose slot is
+/// not alive are **returned undelivered** without any dial: the worker
+/// may be wedged-but-resident (lease-evicted, process alive), and
+/// ledger-keeping callers must retry once it rejoins and revives the
+/// slot.
 fn drop_shard_sessions(
     state: &CoordState,
     session: &str,
-    epoch: u64,
-    pairs: &[(usize, usize)],
-) {
-    for &(shard_idx, slot) in pairs {
-        let Some(addr) = worker_addr(state, slot) else { continue };
+    triples: &[(u64, u64, usize)],
+) -> Vec<(u64, u64, usize)> {
+    let mut undelivered = Vec::new();
+    for &(epoch, sid, slot) in triples {
+        let Some(addr) = worker_addr(state, slot) else {
+            undelivered.push((epoch, sid, slot));
+            continue;
+        };
         let mut p = Map::new();
-        p.insert("session", Value::from(shard_session_id(session, epoch, shard_idx)));
+        p.insert("session", Value::from(shard_session_id(session, epoch, sid)));
         let params = Payload::json(Value::Object(p));
         if call_worker(state, &addr, "drop_session", &params, POLL_RPC_TIMEOUT).is_err() {
             crate::log_debug!(
                 "cluster",
-                "drop_session for shard {shard_idx} on {addr} failed (ignored)"
+                "drop_session for shard instance {sid} on {addr} failed (ignored)"
             );
         }
     }
+    undelivered
 }
 
 fn get_session(
@@ -576,6 +1073,10 @@ fn get_session(
 /// What one shard's `select_shard` returned (indices already global).
 struct ShardReply {
     shard: usize,
+    /// Shard instance the reply belongs to — scatter bookkeeping only
+    /// writes back into the live layout if it still holds this instance
+    /// (a concurrent rebalance may have replaced it).
+    sid: u64,
     candidates: Vec<Candidate>,
     failed_global: Vec<usize>,
     scan_ms: f64,
@@ -587,9 +1088,7 @@ struct ShardReply {
 }
 
 struct ShardJob {
-    shard: usize,
-    indices: Vec<usize>,
-    worker: usize,
+    sref: ShardRef,
     budget: usize,
     with_embeddings: bool,
     with_init_emb: bool,
@@ -606,17 +1105,13 @@ struct ShardJob {
 
 impl ShardJob {
     fn plain(
-        shard: usize,
-        indices: Vec<usize>,
-        worker: usize,
+        sref: ShardRef,
         budget: usize,
         with_embeddings: bool,
         with_init_emb: bool,
     ) -> ShardJob {
         ShardJob {
-            shard,
-            indices,
-            worker,
+            sref,
             budget,
             with_embeddings,
             with_init_emb,
@@ -632,22 +1127,25 @@ impl ShardJob {
 /// Call one worker-facing method for a shard, walking survivors on
 /// transport failure and re-pushing the shard (`scan_shard`) on `unknown
 /// session` — the shared re-dispatch skeleton for `select_shard` and
-/// `fetch_rows`. Returns the reply plus the slot that finally served it.
+/// `fetch_rows`. The sref carries everything a re-push needs (indices,
+/// instance id, test-split ownership), which is what lets an in-flight
+/// scatter complete against its pinned layout even after a rebalance
+/// dropped the instance. Returns the reply plus the slot that finally
+/// served it.
 #[allow(clippy::too_many_arguments)]
 fn call_shard_redispatch(
     state: &CoordState,
     session: &str,
     epoch: u64,
-    shard_idx: usize,
-    indices: &[usize],
-    start_slot: usize,
+    sref: &ShardRef,
     manifest: &Manifest,
     init_labels: Option<&[u8]>,
     method: &str,
     params: &Payload,
     read_timeout: Duration,
 ) -> Result<(Body, usize), String> {
-    let mut slot = start_slot;
+    let shard_idx = sref.shard;
+    let mut slot = sref.worker;
     let mut last_err = String::from("no live workers");
     // first attempt on the assigned worker, then walk survivors; a worker
     // that doesn't know the session (never saw the shard, or restarted)
@@ -677,7 +1175,7 @@ fn call_shard_redispatch(
                     state,
                     &addr,
                     "scan_shard",
-                    &scan_shard_params(session, epoch, shard_idx, manifest, indices, init_labels),
+                    &scan_shard_params(session, epoch, sref, manifest, init_labels),
                     FAST_RPC_TIMEOUT,
                 )
                 .and_then(|_| call_worker(state, &addr, method, params, read_timeout))
@@ -718,7 +1216,7 @@ fn select_on_shard(
 ) -> Result<ShardReply, String> {
     let mut params = Payload::default();
     let mut p = Map::new();
-    p.insert("session", Value::from(shard_session_id(session, epoch, job.shard)));
+    p.insert("session", Value::from(shard_session_id(session, epoch, job.sref.sid)));
     p.insert("budget", Value::from(job.budget));
     if job.budget > 0 {
         p.insert("strategy", Value::from(strategy));
@@ -753,9 +1251,7 @@ fn select_on_shard(
         state,
         session,
         epoch,
-        job.shard,
-        &job.indices,
-        job.worker,
+        &job.sref,
         manifest,
         init_labels,
         "select_shard",
@@ -787,10 +1283,13 @@ fn decode_shard_reply(
     // inputs — no intermediate Mat per section.
     let v = &reply.value;
     let to_global = |local: usize| -> Result<usize, String> {
-        job.indices
+        job.sref
+            .indices
             .get(local)
             .copied()
-            .ok_or_else(|| format!("shard {}: local index {local} out of range", job.shard))
+            .ok_or_else(|| {
+                format!("shard {}: local index {local} out of range", job.sref.shard)
+            })
     };
     let failed_global = v
         .get("failed")
@@ -815,7 +1314,7 @@ fn decode_shard_reply(
             if m.rows() != arr.len() {
                 return Err(format!(
                     "shard {}: packed tensor rows {} != {} candidates",
-                    job.shard,
+                    job.sref.shard,
                     m.rows(),
                     arr.len()
                 ));
@@ -836,7 +1335,8 @@ fn decode_shard_reply(
     let init_emb = reply.mat("init_emb")?;
     let test_emb = reply.mat("test_emb")?;
     Ok(ShardReply {
-        shard: job.shard,
+        shard: job.sref.shard,
+        sid: job.sref.sid,
         candidates,
         failed_global,
         scan_ms: v.get("scan_ms").and_then(Value::as_f64).unwrap_or(0.0),
@@ -884,11 +1384,24 @@ fn scatter_jobs(
         out.push(r?);
     }
 
-    // bookkeeping: re-dispatched assignments + fetched embeddings
+    // bookkeeping: re-dispatched assignments + fetched embeddings. The
+    // worker write-back is keyed by the shard instance id (positions
+    // shift across rebalances; sids never do): a rebalance may have
+    // replaced this scatter's pinned layout mid-flight, and its replies
+    // must then not clobber the new ownership — instead the retired
+    // instance is remembered, because serving this reply may have
+    // lazily re-pushed it onto the worker after the rebalance freed it.
     {
         let mut s = sess.lock().unwrap();
         for r in &out {
-            s.shards[r.shard].worker = r.worker;
+            if let Some(sh) = s.shards.iter_mut().find(|sh| sh.sid == r.sid) {
+                sh.worker = r.worker;
+            } else {
+                // entry-keyed: redispatch can re-push one retired
+                // instance onto several workers in turn, and every copy
+                // must be swept
+                ledger_push(&mut s.retired, (epoch, r.sid, r.worker));
+            }
             if let Some(m) = &r.init_emb {
                 if s.init_emb.is_none() {
                     s.init_emb = Some(m.clone());
@@ -898,6 +1411,20 @@ fn scatter_jobs(
                 if s.test_emb.is_none() {
                     s.test_emb = Some(m.clone());
                 }
+            }
+        }
+    }
+    // if the client re-pushed this session id mid-flight, the
+    // bookkeeping above went into a replaced (dead) object whose ledger
+    // nothing will ever sweep — route every instance this scatter may
+    // have lazily re-pushed after push_data's cleanup into the *live*
+    // session's ledger instead, so the old-epoch shards are still freed
+    let current = state.sessions.lock().unwrap().get(session_id).cloned();
+    if let Some(cur) = current {
+        if !Arc::ptr_eq(&cur, sess) {
+            let mut c = cur.lock().unwrap();
+            for r in &out {
+                ledger_push(&mut c.retired, (epoch, r.sid, r.worker));
             }
         }
     }
@@ -913,11 +1440,7 @@ fn scatter_jobs(
     }
     if !out.is_empty() {
         let straggler_ms = (scan_max - scan_min).max(0.0) as u64;
-        state
-            .deps
-            .metrics
-            .counter("cluster.scan.straggler_ms")
-            .store(straggler_ms, Ordering::Relaxed);
+        state.deps.metrics.gauge_set("cluster.scan.straggler_ms", straggler_ms);
     }
     Ok(out)
 }
@@ -946,23 +1469,13 @@ fn query(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
         params.get("wait_ms").and_then(Value::as_usize).unwrap_or(120_000) as u64;
 
     let sess = get_session(state, &session_id)?;
-    let (manifest, init_labels, epoch, shard_specs, have_init_emb) = {
-        let s = sess.lock().unwrap();
-        let specs: Vec<(usize, Vec<usize>, usize)> = s
-            .shards
-            .iter()
-            .enumerate()
-            .map(|(i, sh)| (i, sh.indices.clone(), sh.worker))
-            .collect();
-        (
-            s.manifest.clone(),
-            s.init_labels.clone(),
-            s.epoch,
-            specs,
-            s.init_emb.is_some(),
-        )
-    };
-    let n_shards = shard_specs.iter().filter(|(_, idx, _)| !idx.is_empty()).count().max(1);
+    // catch the shard layout up with the membership view, then snapshot:
+    // the whole scatter below runs against this pinned layout even if
+    // the view moves again mid-flight
+    maybe_rebalance(state, &session_id, &sess)?;
+    let (manifest, init_labels, epoch, shard_specs) = snapshot_shards(&sess);
+    let have_init_emb = sess.lock().unwrap().init_emb.is_some();
+    let n_shards = shard_specs.iter().filter(|s| !s.indices.is_empty()).count().max(1);
 
     // per-shard candidate budget by merge protocol
     let oversample = state.config.cluster.oversample_factor;
@@ -977,17 +1490,10 @@ fn query(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
 
     let jobs: Vec<ShardJob> = shard_specs
         .into_iter()
-        .filter(|(_, idx, _)| !idx.is_empty())
+        .filter(|s| !s.indices.is_empty())
         .enumerate()
-        .map(|(pos, (shard, indices, worker))| {
-            ShardJob::plain(
-                shard,
-                indices,
-                worker,
-                local_budget,
-                with_embeddings,
-                need_init_emb && pos == 0,
-            )
+        .map(|(pos, sref)| {
+            ShardJob::plain(sref, local_budget, with_embeddings, need_init_emb && pos == 0)
         })
         .collect();
 
@@ -1082,18 +1588,387 @@ fn query(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
     Ok(Value::Object(m))
 }
 
-/// Shard-spec snapshot of a session: (shard index, global indices, worker).
-type ShardSpecs = Vec<(usize, Vec<usize>, usize)>;
+/// Shard-spec snapshot of a session: one [`ShardRef`] per shard of the
+/// current layout. Scatters run entirely against a snapshot — the
+/// pinned-generation guarantee.
+type ShardSpecs = Vec<ShardRef>;
 
-fn snapshot_shards(sess: &Arc<Mutex<ClusterSession>>) -> (Manifest, Option<Vec<u8>>, u64, ShardSpecs) {
+fn snapshot_shards(
+    sess: &Arc<Mutex<ClusterSession>>,
+) -> (Manifest, Option<Vec<u8>>, u64, ShardSpecs) {
     let s = sess.lock().unwrap();
     let specs: ShardSpecs = s
         .shards
         .iter()
         .enumerate()
-        .map(|(i, sh)| (i, sh.indices.clone(), sh.worker))
+        .map(|(i, sh)| ShardRef {
+            shard: i,
+            sid: sh.sid,
+            indices: sh.indices.clone(),
+            worker: sh.worker,
+            carries_test: sh.carries_test,
+        })
         .collect();
     (s.manifest.clone(), s.init_labels.clone(), s.epoch, specs)
+}
+
+/// Retired-instance ledger bound per session (`ClusterSession::retired`).
+const RETIRED_CAP: usize = 64;
+
+/// Enforce [`RETIRED_CAP`] on a ledger by evicting the **oldest**
+/// entries (front) — newest obligations are the ones most likely to
+/// still be deliverable.
+fn ledger_cap(retired: &mut Vec<(u64, u64, usize)>) {
+    if retired.len() > RETIRED_CAP {
+        let excess = retired.len() - RETIRED_CAP;
+        retired.drain(..excess);
+    }
+}
+
+/// Append one drop obligation to a retired ledger: dedup + cap.
+fn ledger_push(retired: &mut Vec<(u64, u64, usize)>, entry: (u64, u64, usize)) {
+    if retired.contains(&entry) {
+        return;
+    }
+    retired.push(entry);
+    ledger_cap(retired);
+}
+
+/// Append undelivered drop triples to the session's retired ledger so a
+/// later sweep can retry them (e.g. once a wedged worker rejoins and
+/// its slot is revived).
+fn retain_undelivered(
+    sess: &Arc<Mutex<ClusterSession>>,
+    undelivered: Vec<(u64, u64, usize)>,
+) {
+    if undelivered.is_empty() {
+        return;
+    }
+    let mut s = sess.lock().unwrap();
+    let mut retired = std::mem::take(&mut s.retired);
+    for p in undelivered {
+        ledger_push(&mut retired, p);
+    }
+    s.retired = retired;
+}
+
+/// Everything a rebalance attempt computes under the session lock, so
+/// the eager shard scatter can run with the lock *released*.
+struct RebalancePlan {
+    /// Generation the plan was computed from — install only if the
+    /// session is still on it.
+    base_gen: u64,
+    epoch: u64,
+    manifest: Manifest,
+    init_labels: Option<Vec<u8>>,
+    new_shards: Vec<ShardState>,
+    /// Positions in `new_shards` whose content changed (need a scan).
+    to_push: Vec<usize>,
+    /// Old instances not carried over, as `(epoch, sid, slot)`.
+    stale: Vec<(u64, u64, usize)>,
+    moved: usize,
+    reused_count: usize,
+}
+
+/// Re-plan a session's shard ownership when the membership view has
+/// moved past the generation its layout was scattered under — the
+/// tentpole of the live-membership subsystem (DESIGN.md §Cluster). The
+/// rendezvous planner keeps moves minimal: a joining worker takes its
+/// slice from every incumbent, a departed worker's rows scatter across
+/// *all* survivors (never dumped on one), and any (owner, rows) pair
+/// that did not change keeps its scanned shard session untouched — no
+/// rescan. Changed shards are scanned eagerly under fresh instance ids;
+/// a scatter already in flight keeps resolving its pinned ids (lazily
+/// re-pushed on `unknown session` if their content was dropped), so
+/// in-flight queries and agent rounds complete bit-identically against
+/// the generation they started on. No-op when membership is disabled or
+/// the generation is current.
+///
+/// Locking: the plan is computed under the session lock (cheap, no
+/// I/O), the `scan_shard` scatter runs with the lock **released** —
+/// status polls and in-flight scatter bookkeeping stay responsive
+/// through a multi-second rescan — and the new layout is installed only
+/// if the session is still on the generation the plan started from; a
+/// lost race frees this attempt's scans and retries.
+fn maybe_rebalance(
+    state: &Arc<CoordState>,
+    session_id: &str,
+    sess: &Arc<Mutex<ClusterSession>>,
+) -> Result<(), String> {
+    if !state.config.cluster.membership.enabled {
+        return Ok(());
+    }
+    for _attempt in 0..3 {
+        let view = state.membership.lock().unwrap().view();
+        let Some(plan) = plan_rebalance(state, session_id, &view, sess)? else {
+            return Ok(()); // already current (retired sweep done inside)
+        };
+
+        // eagerly scan the changed shards on their new owners
+        // (concurrent, like push_data); reused shards are untouched —
+        // no rescan, and no session lock held across the network
+        let pushes: Vec<(usize, ShardRef)> = plan
+            .to_push
+            .iter()
+            .map(|&pos| {
+                let sh = &plan.new_shards[pos];
+                (
+                    pos,
+                    ShardRef {
+                        shard: pos,
+                        sid: sh.sid,
+                        indices: sh.indices.clone(),
+                        worker: sh.worker,
+                        carries_test: sh.carries_test,
+                    },
+                )
+            })
+            .collect();
+        let outcomes: Vec<Result<(usize, usize), String>> = std::thread::scope(|sc| {
+            let handles: Vec<_> = pushes
+                .iter()
+                .map(|(pos, sref)| {
+                    let (pos, manifest, init_labels) =
+                        (*pos, &plan.manifest, &plan.init_labels);
+                    sc.spawn(move || {
+                        dispatch_shard(
+                            state,
+                            session_id,
+                            plan.epoch,
+                            sref,
+                            manifest,
+                            init_labels.as_deref(),
+                        )
+                        .map(|slot| (pos, slot))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| Err("rebalance dispatch panicked".into()))
+                })
+                .collect()
+        });
+        let mut new_shards = plan.new_shards;
+        let mut pushed_ok: Vec<(u64, u64, usize)> = Vec::new();
+        let mut first_err = None;
+        for o in outcomes {
+            match o {
+                Ok((pos, slot)) => {
+                    new_shards[pos].worker = slot;
+                    pushed_ok.push((plan.epoch, new_shards[pos].sid, slot));
+                }
+                Err(e) => first_err = first_err.or(Some(e)),
+            }
+        }
+        if let Some(e) = first_err {
+            // keep the old (still fully consistent) layout; the next
+            // scatter retries. Free what this attempt scanned (ledgering
+            // anything a down slot couldn't take).
+            let und = drop_shard_sessions(state, session_id, &pushed_ok);
+            retain_undelivered(sess, und);
+            return Err(format!("rebalance of '{session_id}' failed: {e}"));
+        }
+
+        // install — only if nothing moved underneath while unlocked.
+        // The sessions-map guard is held across the swap so a concurrent
+        // re-push of the same session id cannot interleave: either it
+        // already replaced the entry (this layout belongs to a dead
+        // object — free the scans and stop), or it waits behind the
+        // guard and then frees the layout installed here as part of its
+        // own replacement cleanup.
+        let drops;
+        {
+            let sessions = state.sessions.lock().unwrap();
+            let still_current = sessions
+                .get(session_id)
+                .map(|cur| Arc::ptr_eq(cur, sess))
+                .unwrap_or(false);
+            if !still_current {
+                // a client re-push replaced the session: free this
+                // attempt's scans, routing anything a down slot couldn't
+                // take into the live session's ledger (same guarantee as
+                // every other undelivered path)
+                let live = sessions.get(session_id).cloned();
+                drop(sessions);
+                let und = drop_shard_sessions(state, session_id, &pushed_ok);
+                if let Some(live) = live {
+                    retain_undelivered(&live, und);
+                }
+                return Ok(());
+            }
+            let mut s = sess.lock().unwrap();
+            if s.view_gen != plan.base_gen {
+                // a concurrent rebalance won the race: this attempt's
+                // scans are orphans — free them, retry
+                drop(s);
+                drop(sessions);
+                let und = drop_shard_sessions(state, session_id, &pushed_ok);
+                retain_undelivered(sess, und);
+                continue;
+            }
+            // oldest obligations first, this rebalance's stale instances
+            // last; the drop list below stays uncapped (every obligation
+            // gets its delivery attempt now) while the retained ledger
+            // is deduped + capped keeping the newest entries
+            let mut d = std::mem::take(&mut s.retired);
+            for e in plan.stale {
+                if !d.contains(&e) {
+                    d.push(e);
+                }
+            }
+            // remember the drops: a scatter pinned to the old layout may
+            // lazily re-push one of these instances after the free
+            // below; the next sweep re-frees it (no worker-memory leak)
+            let mut retained = d.clone();
+            ledger_cap(&mut retained);
+            s.retired = retained;
+            s.shards = new_shards;
+            s.view_gen = view.generation;
+            drops = d;
+        }
+        drop_shard_sessions(state, session_id, &drops);
+        state.deps.metrics.counter("membership.rebalances").fetch_add(1, Ordering::Relaxed);
+        state
+            .deps
+            .metrics
+            .counter("membership.moved_rows")
+            .fetch_add(plan.moved as u64, Ordering::Relaxed);
+        crate::log_info!(
+            "cluster",
+            "rebalanced '{session_id}' to generation {} ({} shards, {} reused, {} rows moved)",
+            view.generation,
+            plan.to_push.len() + plan.reused_count,
+            plan.reused_count,
+            plan.moved
+        );
+        return Ok(());
+    }
+    Err(format!(
+        "rebalance of '{session_id}' kept racing membership changes; retry the request"
+    ))
+}
+
+/// The plan phase of [`maybe_rebalance`], entirely under the session
+/// lock and free of I/O. Returns `None` when the layout is already on
+/// the view's generation (after sweeping any retired instances that an
+/// in-flight scatter may have re-pushed since the last rebalance).
+fn plan_rebalance(
+    state: &Arc<CoordState>,
+    session_id: &str,
+    view: &membership::View,
+    sess: &Arc<Mutex<ClusterSession>>,
+) -> Result<Option<RebalancePlan>, String> {
+    let mut s = sess.lock().unwrap();
+    if s.view_gen == view.generation {
+        // current — sweep any instances retired by earlier rebalances
+        // that an in-flight scatter may have lazily re-pushed since.
+        // Pairs whose worker slot is down stay in the ledger (no dial
+        // paid): a wedged process may still hold them, and its rejoin
+        // revives the slot so a later sweep can deliver the drop.
+        let retired = std::mem::take(&mut s.retired);
+        drop(s);
+        if !retired.is_empty() {
+            let undelivered = drop_shard_sessions(state, session_id, &retired);
+            retain_undelivered(sess, undelivered);
+        }
+        return Ok(None);
+    }
+    if view.members.is_empty() {
+        return Err("no live workers registered".into());
+    }
+    let assignment = membership::assign(s.manifest.pool.len(), &view.members);
+
+    // address each old shard currently lives on (reuse check + move count)
+    let addr_of_old: Vec<Option<String>> = {
+        let ws = state.workers.lock().unwrap();
+        s.shards.iter().map(|sh| ws.get(sh.worker).map(|w| w.addr.clone())).collect()
+    };
+    let mut old_shard_of_row: HashMap<usize, usize> = HashMap::new();
+    for (i, sh) in s.shards.iter().enumerate() {
+        for &g in &sh.indices {
+            old_shard_of_row.insert(g, i);
+        }
+    }
+
+    // build the new layout, reusing untouched (owner, rows) pairs
+    let mut new_shards: Vec<ShardState> = Vec::new();
+    let mut to_push: Vec<usize> = Vec::new(); // positions in new_shards
+    let mut reused_old: Vec<bool> = vec![false; s.shards.len()];
+    let mut next_sid = s.next_sid;
+    let mut moved = 0usize;
+    for (addr, rows) in assignment {
+        if rows.is_empty() {
+            continue;
+        }
+        moved += rows
+            .iter()
+            .filter(|&&g| {
+                old_shard_of_row
+                    .get(&g)
+                    .map(|&i| addr_of_old[i].as_deref() != Some(addr.as_str()))
+                    .unwrap_or(true)
+            })
+            .count();
+        let slot = ensure_slot(state, &addr).0;
+        let reused = s.shards.iter().enumerate().find_map(|(i, sh)| {
+            (!reused_old[i]
+                && addr_of_old[i].as_deref() == Some(addr.as_str())
+                && sh.indices == rows)
+                .then_some((i, sh.sid, sh.carries_test))
+        });
+        match reused {
+            Some((i, sid, carries_test)) => {
+                reused_old[i] = true;
+                new_shards.push(ShardState { sid, indices: rows, worker: slot, carries_test });
+            }
+            None => {
+                let sid = next_sid;
+                next_sid += 1;
+                to_push.push(new_shards.len());
+                new_shards.push(ShardState {
+                    sid,
+                    indices: rows,
+                    worker: slot,
+                    carries_test: false,
+                });
+            }
+        }
+    }
+    // reserve the minted sids now, so a racing attempt cannot collide
+    s.next_sid = next_sid;
+    // exactly one shard must carry the test split (agent evaluation,
+    // §Agent); if its previous carrier did not survive the re-plan,
+    // re-home it on a shard that is being scanned anyway
+    if !new_shards.is_empty()
+        && !s.manifest.test.is_empty()
+        && !new_shards.iter().any(|sh| sh.carries_test)
+    {
+        let pos = to_push.first().copied().unwrap_or(0);
+        new_shards[pos].carries_test = true;
+        if !to_push.contains(&pos) {
+            to_push.push(pos);
+        }
+    }
+    let stale: Vec<(u64, u64, usize)> = s
+        .shards
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !reused_old[*i])
+        .map(|(_, sh)| (s.epoch, sh.sid, sh.worker))
+        .collect();
+    Ok(Some(RebalancePlan {
+        base_gen: s.view_gen,
+        epoch: s.epoch,
+        manifest: s.manifest.clone(),
+        init_labels: s.init_labels.clone(),
+        new_shards,
+        to_push,
+        stale,
+        moved,
+        reused_count: reused_old.iter().filter(|&&r| r).count(),
+    }))
 }
 
 /// Distributed [`ArmSelect`]: one PSHEA arm's selection scattered over the
@@ -1122,17 +1997,16 @@ impl ClusterArmSelect {
     ) -> Vec<ShardJob> {
         specs
             .into_iter()
-            .filter(|(_, idx, _)| !idx.is_empty())
-            .map(|(shard, indices, worker)| {
-                let exclude: Vec<usize> = indices
+            .filter(|sref| !sref.indices.is_empty())
+            .map(|sref| {
+                let exclude: Vec<usize> = sref
+                    .indices
                     .iter()
                     .enumerate()
                     .filter_map(|(l, g)| excl.contains(g).then_some(l))
                     .collect();
                 ShardJob {
-                    shard,
-                    indices,
-                    worker,
+                    sref,
                     budget,
                     with_embeddings,
                     with_init_emb: false,
@@ -1161,8 +2035,8 @@ impl ClusterArmSelect {
             return Ok(vec![]);
         }
         let mut where_of: HashMap<usize, (usize, usize)> = HashMap::new();
-        for (si, (_, indices, _)) in specs.iter().enumerate() {
-            for (l, g) in indices.iter().enumerate() {
+        for (si, sref) in specs.iter().enumerate() {
+            for (l, g) in sref.indices.iter().enumerate() {
                 where_of.insert(*g, (si, l));
             }
         }
@@ -1175,11 +2049,11 @@ impl ClusterArmSelect {
         }
         let mut emb_of: HashMap<usize, Vec<f32>> = HashMap::new();
         for (si, items) in per_shard {
-            let (shard_idx, indices, worker) = &specs[si];
+            let sref = &specs[si];
             let mut p = Map::new();
             p.insert(
                 "session",
-                Value::from(shard_session_id(&self.session_id, epoch, *shard_idx)),
+                Value::from(shard_session_id(&self.session_id, epoch, sref.sid)),
             );
             p.insert(
                 "rows",
@@ -1187,19 +2061,38 @@ impl ClusterArmSelect {
             );
             p.insert("wait_ms", Value::from(self.wait_ms as usize));
             let params = Payload::json(Value::Object(p));
-            let (reply, _slot) = call_shard_redispatch(
+            let (reply, slot) = call_shard_redispatch(
                 &self.state,
                 &self.session_id,
                 epoch,
-                *shard_idx,
-                indices,
-                *worker,
+                sref,
                 manifest,
                 init_labels,
                 "fetch_rows",
                 &params,
                 select_rpc_timeout(self.wait_ms),
             )?;
+            // stale-instance bookkeeping (mirrors scatter_jobs): if a
+            // rebalance retired this pinned instance mid-flight — or the
+            // whole session was re-pushed and this object is dead —
+            // serving the call may have lazily re-pushed the instance;
+            // record the obligation in the *live* session's ledger so it
+            // cannot leak in worker memory
+            {
+                let live = self
+                    .state
+                    .sessions
+                    .lock()
+                    .unwrap()
+                    .get(&self.session_id)
+                    .cloned();
+                let target = live.unwrap_or_else(|| self.sess.clone());
+                let replaced = !Arc::ptr_eq(&target, &self.sess);
+                let mut s = target.lock().unwrap();
+                if replaced || !s.shards.iter().any(|sh| sh.sid == sref.sid) {
+                    ledger_push(&mut s.retired, (epoch, sref.sid, slot));
+                }
+            }
             // zero-copy: each requested row is copied once, straight out
             // of the reply's frame buffer
             let m = reply.mat_ref("emb")?.ok_or("fetch_rows reply missing emb")?;
@@ -1239,8 +2132,12 @@ impl ArmSelect for ClusterArmSelect {
         let kind = merge::merge_kind(strategy)
             .ok_or_else(|| format!("unknown strategy '{strategy}'"))?;
         let excl: HashSet<usize> = exclude.iter().copied().collect();
+        // each arm round catches up with the membership view before
+        // snapshotting — exact-merge arms are layout-independent, so a
+        // mid-job rebalance cannot change their selections (§Agent)
+        maybe_rebalance(&self.state, &self.session_id, &self.sess)?;
         let (manifest, init_labels, epoch, specs) = snapshot_shards(&self.sess);
-        let n_shards = specs.iter().filter(|(_, idx, _)| !idx.is_empty()).count().max(1);
+        let n_shards = specs.iter().filter(|s| !s.indices.is_empty()).count().max(1);
         match kind {
             MergeKind::ExactTopK { ascending, .. } => {
                 // local top-k under the arm's head with its exclusions;
@@ -1364,6 +2261,7 @@ fn agent_bootstrap(
     sess: &Arc<Mutex<ClusterSession>>,
     wait_ms: u64,
 ) -> Result<(Mat, Mat, usize), String> {
+    maybe_rebalance(state, session_id, sess)?;
     let (manifest, init_labels, epoch, specs) = snapshot_shards(sess);
     let (have_init, have_test) = {
         let s = sess.lock().unwrap();
@@ -1371,13 +2269,12 @@ fn agent_bootstrap(
     };
     let jobs: Vec<ShardJob> = specs
         .into_iter()
-        .filter(|(_, idx, _)| !idx.is_empty())
+        .filter(|sref| !sref.indices.is_empty())
         .enumerate()
-        .map(|(pos, (shard, indices, worker))| {
-            // the test split lives on shard 0 only (see sub_manifest)
-            let want_test = !have_test && shard == 0;
-            let mut j =
-                ShardJob::plain(shard, indices, worker, 0, false, !have_init && pos == 0);
+        .map(|(pos, sref)| {
+            // the test split lives on its carrier shard (see sub_manifest)
+            let want_test = !have_test && sref.carries_test;
+            let mut j = ShardJob::plain(sref, 0, false, !have_init && pos == 0);
             j.with_test_emb = want_test;
             j
         })
@@ -1490,13 +2387,13 @@ fn poll_shard_status(
     state: &CoordState,
     session: &str,
     epoch: u64,
-    shard: usize,
+    sid: u64,
     slot: usize,
 ) -> String {
     match worker_addr(state, slot) {
         Some(addr) => {
             let mut p = Map::new();
-            p.insert("session", Value::from(shard_session_id(session, epoch, shard)));
+            p.insert("session", Value::from(shard_session_id(session, epoch, sid)));
             let params = Payload::json(Value::Object(p));
             match call_worker(state, &addr, "status", &params, POLL_RPC_TIMEOUT) {
                 Ok(v) => v
@@ -1524,23 +2421,25 @@ fn poll_shard_status(
 fn status(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
     let session_id = str_param(params, "session")?;
     let sess = get_session(state, &session_id)?;
-    let (epoch, specs): (u64, Vec<(usize, usize, usize)>) = {
+    // passive view: no rebalance here — status must never mutate the
+    // cluster (a query will catch the layout up when it runs)
+    let (epoch, specs): (u64, Vec<(usize, u64, usize, usize)>) = {
         let s = sess.lock().unwrap();
         (
             s.epoch,
             s.shards
                 .iter()
                 .enumerate()
-                .map(|(i, sh)| (i, sh.worker, sh.indices.len()))
+                .map(|(i, sh)| (i, sh.sid, sh.worker, sh.indices.len()))
                 .collect(),
         )
     };
     let statuses: Vec<String> = std::thread::scope(|sc| {
         let handles: Vec<_> = specs
             .iter()
-            .map(|&(shard, slot, _)| {
+            .map(|&(_, sid, slot, _)| {
                 let session = session_id.as_str();
-                sc.spawn(move || poll_shard_status(state, session, epoch, shard, slot))
+                sc.spawn(move || poll_shard_status(state, session, epoch, sid, slot))
             })
             .collect();
         handles
@@ -1552,7 +2451,7 @@ fn status(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
     let mut processing = 0usize;
     let mut failed = 0usize;
     let mut unreachable = 0usize;
-    for ((shard, _, size), st) in specs.iter().zip(statuses) {
+    for ((shard, _, _, size), st) in specs.iter().zip(statuses) {
         if st == "processing" {
             processing += 1;
         } else if st.starts_with("failed") {
@@ -1654,11 +2553,13 @@ fn cluster_status(state: &Arc<CoordState>) -> Value {
                             let mut sm = Map::new();
                             sm.insert("worker", Value::from(sh.worker));
                             sm.insert("pool_samples", Value::from(sh.indices.len()));
+                            sm.insert("sid", Value::from(sh.sid));
                             Value::Object(sm)
                         })
                         .collect(),
                 ),
             );
+            m.insert("view_generation", Value::from(s.view_gen));
             Value::Object(m)
         })
         .collect();
@@ -1666,5 +2567,13 @@ fn cluster_status(state: &Arc<CoordState>) -> Value {
     m.insert("workers", Value::Array(workers));
     m.insert("sessions", Value::Array(sessions));
     m.insert("shard_policy", Value::from(state.config.cluster.shard_policy.as_str()));
+    let mut mm = Map::new();
+    mm.insert("enabled", Value::Bool(state.config.cluster.membership.enabled));
+    if state.config.cluster.membership.enabled {
+        let mem = state.membership.lock().unwrap();
+        mm.insert("generation", Value::from(mem.generation()));
+        mm.insert("live", Value::from(mem.len()));
+    }
+    m.insert("membership", Value::Object(mm));
     Value::Object(m)
 }

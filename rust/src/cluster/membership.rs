@@ -1,0 +1,502 @@
+//! Live cluster membership (DESIGN.md §Cluster): heartbeat/lease
+//! auto-discovery and the rendezvous rebalance planner.
+//!
+//! PR 1's coordinator assumed a fixed worker set: membership changed only
+//! through the one-shot `register` RPC, and a dead worker's entire shard
+//! was dumped onto one survivor. This module is the data model behind
+//! live membership:
+//!
+//! * [`Membership`] — a lease table keyed by worker address. Workers
+//!   renew their lease with periodic `heartbeat` RPCs; leases that
+//!   outlive `[cluster.membership] lease_ms` are swept out. Every join or
+//!   departure bumps a **generation** counter, and the
+//!   generation-numbered [`View`] is what the coordinator's scatter
+//!   paths key their shard layout on.
+//! * [`assign`] — the rebalance planner: a *pure function* from (pool
+//!   size, member set) to row ownership, via rendezvous
+//!   (highest-random-weight) hashing. Purity is the whole point: the
+//!   final layout depends only on the final member set — never on the
+//!   order membership events were observed in — every pool row is owned
+//!   exactly once, and a single join/leave moves only the rows the
+//!   changed member gains/loses (a joiner takes a proportional slice
+//!   from everyone; a leaver's rows scatter across *all* survivors, not
+//!   one). Property-tested below.
+//! * [`MsClock`] — the millisecond clock leases are measured on, with a
+//!   virtual offset so the fault-injection harness can expire leases
+//!   deterministically without waiting wall-clock time.
+//!
+//! All time flows through explicit `now_ms` parameters; `Membership`
+//! itself never reads a clock, which keeps every transition replayable
+//! in tests.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// `[cluster.membership]` knobs (DESIGN.md §Cluster). Disabled by
+/// default: the coordinator then runs the PR 1 static-config protocol
+/// (config `workers` + one-shot `register`) unchanged.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MembershipConfig {
+    /// Master switch for heartbeat/lease membership and shard
+    /// rebalancing.
+    pub enabled: bool,
+    /// Interval between worker heartbeats; the coordinator's
+    /// lease/probe sweep runs at half this.
+    pub heartbeat_ms: u64,
+    /// Lease granted per heartbeat. A worker silent for this long is
+    /// swept from the view; must cover several heartbeats so one lost
+    /// beat cannot expire a live worker.
+    pub lease_ms: u64,
+}
+
+impl Default for MembershipConfig {
+    fn default() -> Self {
+        MembershipConfig { enabled: false, heartbeat_ms: 500, lease_ms: 2500 }
+    }
+}
+
+/// Millisecond clock with a virtual offset. The coordinator stamps lease
+/// deadlines off one of these; `advance` lets the test harness move time
+/// forward (lease expiry without sleeping), which is why lease math must
+/// never touch `Instant::now` directly.
+pub struct MsClock {
+    start: Instant,
+    offset_ms: AtomicU64,
+}
+
+impl MsClock {
+    pub fn new() -> MsClock {
+        MsClock { start: Instant::now(), offset_ms: AtomicU64::new(0) }
+    }
+
+    pub fn now_ms(&self) -> u64 {
+        let real = self.start.elapsed().as_millis().min(u64::MAX as u128) as u64;
+        real.saturating_add(self.offset_ms.load(Ordering::Relaxed))
+    }
+
+    /// Jump the clock forward by `ms` (virtual-time fault injection).
+    pub fn advance(&self, ms: u64) {
+        self.offset_ms.fetch_add(ms, Ordering::Relaxed);
+    }
+}
+
+impl Default for MsClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Generation-numbered snapshot of the live worker set. `members` is
+/// ascending by address — a deterministic order for shard indexing that
+/// does not depend on join order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct View {
+    pub generation: u64,
+    pub members: Vec<String>,
+}
+
+/// The coordinator's lease table. Every membership transition (join,
+/// lease expiry, eviction, graceful deregister) bumps `generation`;
+/// lease renewals do not.
+#[derive(Debug, Default)]
+pub struct Membership {
+    generation: u64,
+    /// Member address -> lease deadline (ms on the coordinator's clock).
+    leases: BTreeMap<String, u64>,
+}
+
+impl Membership {
+    pub fn new() -> Membership {
+        Membership::default()
+    }
+
+    /// Renew (or establish) `addr`'s lease. Returns `(joined, generation)`
+    /// where `joined` is true when the address was not in the view — a
+    /// first contact or a return after expiry — which bumps the
+    /// generation.
+    pub fn heartbeat(&mut self, addr: &str, now_ms: u64, lease_ms: u64) -> (bool, u64) {
+        let joined = !self.leases.contains_key(addr);
+        self.leases.insert(addr.to_string(), now_ms.saturating_add(lease_ms));
+        if joined {
+            self.generation += 1;
+        }
+        (joined, self.generation)
+    }
+
+    /// Drop `addr` from the view (observed death, probe failure, or a
+    /// graceful deregister). Returns whether it was present.
+    pub fn remove(&mut self, addr: &str) -> bool {
+        if self.leases.remove(addr).is_some() {
+            self.generation += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Sweep out every member whose lease deadline has passed, returning
+    /// the expired addresses. One sweep bumps the generation at most
+    /// once, however many members it expires.
+    pub fn expire(&mut self, now_ms: u64) -> Vec<String> {
+        let dead: Vec<String> = self
+            .leases
+            .iter()
+            .filter(|(_, &deadline)| deadline < now_ms)
+            .map(|(a, _)| a.clone())
+            .collect();
+        if !dead.is_empty() {
+            for a in &dead {
+                self.leases.remove(a);
+            }
+            self.generation += 1;
+        }
+        dead
+    }
+
+    pub fn contains(&self, addr: &str) -> bool {
+        self.leases.contains_key(addr)
+    }
+
+    /// Milliseconds of lease left for `addr` (None if not a member; 0 if
+    /// overdue but not yet swept).
+    pub fn lease_remaining_ms(&self, addr: &str, now_ms: u64) -> Option<u64> {
+        self.leases.get(addr).map(|&d| d.saturating_sub(now_ms))
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn len(&self) -> usize {
+        self.leases.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.leases.is_empty()
+    }
+
+    /// Current members with their lease deadlines, ascending by address.
+    pub fn leases(&self) -> Vec<(String, u64)> {
+        self.leases.iter().map(|(a, &d)| (a.clone(), d)).collect()
+    }
+
+    pub fn view(&self) -> View {
+        View {
+            generation: self.generation,
+            members: self.leases.keys().cloned().collect(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rebalance planner: rendezvous hashing from (pool size, member set) to
+// row ownership.
+
+use crate::util::fnv1a;
+
+/// SplitMix64 finalizer: full-avalanche mixing so nearby row indices and
+/// similar addresses decorrelate.
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Rendezvous weight of `(member, row)`: the row is owned by the member
+/// with the highest weight.
+fn weight(member_hash: u64, row: usize) -> u64 {
+    mix(member_hash ^ mix((row as u64).wrapping_add(0x9E37_79B9_7F4A_7C15)))
+}
+
+/// The rebalance planner: split pool rows `0..n_rows` across `members`
+/// by rendezvous hashing. Pure in the member *set* — the result is
+/// independent of the order of `members`, so membership-event reordering
+/// cannot change the final layout — and stable per member: a join or
+/// leave only moves the rows the changed member wins or frees. Each
+/// member's row list is ascending (the exact-top-k merge's tie-break
+/// proof requires it, DESIGN.md §Cluster). Returns an empty map when
+/// `members` is empty.
+pub fn assign(n_rows: usize, members: &[String]) -> BTreeMap<String, Vec<usize>> {
+    let mut out: BTreeMap<String, Vec<usize>> =
+        members.iter().map(|m| (m.clone(), Vec::new())).collect();
+    if out.is_empty() {
+        return out;
+    }
+    // hash each member once; ties (astronomically unlikely) break by
+    // address so the winner never depends on slice order
+    let names: Vec<String> = out.keys().cloned().collect();
+    let hashed: Vec<u64> = names.iter().map(|m| fnv1a(m.as_bytes())).collect();
+    for row in 0..n_rows {
+        let best = (0..names.len())
+            .max_by_key(|&i| (weight(hashed[i], row), &names[i]))
+            .expect("non-empty members");
+        out.get_mut(&names[best]).expect("owner is a member").push(row);
+    }
+    out
+}
+
+/// Rows whose owner differs between two assignments — the planner's
+/// move count (metrics + minimality tests). Rows present in only one
+/// assignment count as moved.
+pub fn moved_rows(
+    old: &BTreeMap<String, Vec<usize>>,
+    new: &BTreeMap<String, Vec<usize>>,
+) -> usize {
+    let owner_of = |a: &BTreeMap<String, Vec<usize>>| -> BTreeMap<usize, &String> {
+        let mut m = BTreeMap::new();
+        for (member, rows) in a {
+            for &r in rows {
+                m.insert(r, member);
+            }
+        }
+        m
+    };
+    let old_of = owner_of(old);
+    let new_of = owner_of(new);
+    let mut moved = 0usize;
+    for (row, owner) in &new_of {
+        if old_of.get(row) != Some(owner) {
+            moved += 1;
+        }
+    }
+    for row in old_of.keys() {
+        if !new_of.contains_key(row) {
+            moved += 1;
+        }
+    }
+    moved
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn addr(i: usize) -> String {
+        format!("10.0.{}.{}:7{:03}", i / 8, i % 8, i)
+    }
+
+    /// Random distinct member set of size 1..=max.
+    fn random_members(rng: &mut crate::util::rng::Rng, max: usize) -> Vec<String> {
+        let k = 1 + rng.below(max);
+        let mut pool: Vec<usize> = (0..16).collect();
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            let j = rng.below(pool.len());
+            out.push(addr(pool.swap_remove(j)));
+        }
+        out
+    }
+
+    fn assert_partition(a: &BTreeMap<String, Vec<usize>>, n: usize) -> Result<(), String> {
+        let mut all: Vec<usize> = a.values().flatten().copied().collect();
+        all.sort_unstable();
+        crate::prop_assert!(
+            all == (0..n).collect::<Vec<_>>(),
+            "not a partition of 0..{n}: {all:?}"
+        );
+        for (m, rows) in a {
+            crate::prop_assert!(
+                rows.windows(2).all(|w| w[0] < w[1]),
+                "{m}: rows not ascending: {rows:?}"
+            );
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn prop_assign_partitions_every_row_exactly_once() {
+        prop::check("membership-assign-partition", 60, |rng| {
+            let members = random_members(rng, 8);
+            let n = rng.below(300);
+            let a = assign(n, &members);
+            crate::prop_assert!(a.len() == members.len(), "missing members in map");
+            assert_partition(&a, n)
+        });
+    }
+
+    #[test]
+    fn prop_assign_is_order_independent() {
+        prop::check("membership-assign-order", 40, |rng| {
+            let mut members = random_members(rng, 8);
+            let n = 1 + rng.below(200);
+            let base = assign(n, &members);
+            // shuffle and re-plan: the event/observation order of members
+            // must not matter
+            for _ in 0..3 {
+                let i = rng.below(members.len());
+                let j = rng.below(members.len());
+                members.swap(i, j);
+            }
+            let again = assign(n, &members);
+            crate::prop_assert!(base == again, "assignment depends on member order");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_single_join_moves_only_the_joiners_rows() {
+        prop::check("membership-join-minimal", 40, |rng| {
+            let mut members = random_members(rng, 6);
+            let n = 1 + rng.below(300);
+            let old = assign(n, &members);
+            let newcomer = addr(40 + rng.below(8));
+            members.push(newcomer.clone());
+            let new = assign(n, &members);
+            assert_partition(&new, n)?;
+            // incumbents only *lose* rows, and everything lost lands on
+            // the joiner — nothing shuffles between incumbents
+            let mut lost = Vec::new();
+            for (m, old_rows) in &old {
+                let new_rows = &new[m];
+                crate::prop_assert!(
+                    new_rows.iter().all(|r| old_rows.contains(r)),
+                    "{m} gained rows on an unrelated join"
+                );
+                lost.extend(old_rows.iter().filter(|r| !new_rows.contains(r)).copied());
+            }
+            lost.sort_unstable();
+            crate::prop_assert!(
+                lost == new[&newcomer],
+                "lost rows {:?} != joiner's rows {:?}",
+                lost,
+                new[&newcomer]
+            );
+            crate::prop_assert!(
+                moved_rows(&old, &new) == new[&newcomer].len(),
+                "moved_rows disagrees with the joiner's slice"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_single_leave_moves_only_the_leavers_rows() {
+        prop::check("membership-leave-minimal", 40, |rng| {
+            let members = random_members(rng, 6);
+            if members.len() < 2 {
+                return Ok(());
+            }
+            let n = 1 + rng.below(300);
+            let old = assign(n, &members);
+            let gone = members[rng.below(members.len())].clone();
+            let rest: Vec<String> =
+                members.iter().filter(|m| **m != gone).cloned().collect();
+            let new = assign(n, &rest);
+            assert_partition(&new, n)?;
+            // survivors keep every row they had; only the leaver's rows move
+            for (m, old_rows) in &old {
+                if *m == gone {
+                    continue;
+                }
+                crate::prop_assert!(
+                    old_rows.iter().all(|r| new[m].contains(r)),
+                    "{m} lost rows on an unrelated leave"
+                );
+            }
+            crate::prop_assert!(
+                moved_rows(&old, &new) == old[&gone].len(),
+                "moved_rows != the leaver's row count"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_event_reordering_converges_to_the_same_layout() {
+        prop::check("membership-event-reorder", 30, |rng| {
+            // apply a join and a leave in both orders: the final layout
+            // must be identical because assign() is a function of the
+            // final member set only
+            let mut members = random_members(rng, 5);
+            if members.len() < 2 {
+                return Ok(());
+            }
+            let n = 1 + rng.below(200);
+            let joiner = addr(50 + rng.below(8));
+            let leaver = members[rng.below(members.len())].clone();
+            let mut a_order: Vec<String> = members.clone();
+            a_order.push(joiner.clone());
+            a_order.retain(|m| *m != leaver);
+            members.retain(|m| *m != leaver);
+            members.push(joiner);
+            let a = assign(n, &a_order);
+            let b = assign(n, &members);
+            crate::prop_assert!(a == b, "event order changed the final layout");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn assignment_is_roughly_balanced() {
+        // deterministic (fixed addrs): rendezvous balance is statistical,
+        // so the bound is loose, but a pathological hash would blow it
+        let members: Vec<String> = (0..4).map(addr).collect();
+        let a = assign(1200, &members);
+        for (m, rows) in &a {
+            assert!(
+                rows.len() >= 150 && rows.len() <= 600,
+                "{m} owns {} of 1200 rows (expected ~300)",
+                rows.len()
+            );
+        }
+    }
+
+    #[test]
+    fn a_leavers_rows_scatter_across_multiple_survivors() {
+        // the PR 1 failure mode this planner replaces: the dead worker's
+        // shard must not be dumped onto one survivor
+        let members: Vec<String> = (0..3).map(addr).collect();
+        let old = assign(240, &members);
+        let rest: Vec<String> = members[1..].to_vec();
+        let new = assign(240, &rest);
+        let gained: Vec<usize> = rest
+            .iter()
+            .map(|m| new[m].len().saturating_sub(old[m].len()))
+            .collect();
+        assert!(
+            gained.iter().filter(|&&g| g > 0).count() >= 2,
+            "dead worker's rows were not split: gains {gained:?}"
+        );
+        assert_eq!(gained.iter().sum::<usize>(), old[&members[0]].len());
+    }
+
+    #[test]
+    fn lease_lifecycle_joins_renews_expires() {
+        let mut m = Membership::new();
+        let (joined, g1) = m.heartbeat("a:1", 100, 50);
+        assert!(joined);
+        assert_eq!(g1, 1);
+        // renewal: no generation bump
+        let (joined, g2) = m.heartbeat("a:1", 120, 50);
+        assert!(!joined);
+        assert_eq!(g2, 1);
+        assert_eq!(m.lease_remaining_ms("a:1", 130), Some(40));
+        m.heartbeat("b:2", 130, 50);
+        assert_eq!(m.view().members, vec!["a:1".to_string(), "b:2".to_string()]);
+        assert_eq!(m.view().generation, 2);
+        // only the overdue lease expires; one sweep = one generation bump
+        let dead = m.expire(175);
+        assert_eq!(dead, vec!["a:1".to_string()]);
+        assert_eq!(m.generation(), 3);
+        assert!(m.contains("b:2") && !m.contains("a:1"));
+        assert!(m.expire(175).is_empty());
+        assert_eq!(m.generation(), 3);
+        // a returning worker is a fresh join
+        let (joined, g) = m.heartbeat("a:1", 200, 50);
+        assert!(joined);
+        assert_eq!(g, 4);
+        assert!(m.remove("a:1"));
+        assert!(!m.remove("a:1"));
+        assert_eq!(m.generation(), 5);
+    }
+
+    #[test]
+    fn clock_advances_virtually() {
+        let c = MsClock::new();
+        let t0 = c.now_ms();
+        c.advance(5_000);
+        assert!(c.now_ms() >= t0 + 5_000);
+    }
+}

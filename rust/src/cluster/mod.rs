@@ -8,8 +8,11 @@
 //! serving topology on top of the framed RPC protocol (JSON v1 or the
 //! binary tensor data plane, DESIGN.md §Wire):
 //!
+//! * [`membership`] — live membership: heartbeat/lease auto-discovery, a
+//!   generation-numbered view, and the rendezvous rebalance planner that
+//!   re-maps pool rows when workers join, die, or return mid-session.
 //! * [`shard`] — deterministic shard plans (contiguous / strided) mapping
-//!   global pool positions onto workers.
+//!   global pool positions onto workers (the static-config layout).
 //! * [`worker`] — the worker role: any `AlServer` already dispatches the
 //!   worker-facing `scan_shard` / `select_shard` / `drop_session`
 //!   methods; this module adds coordinator registration and the
@@ -23,11 +26,13 @@
 //!   candidate-then-refine pass for the diversity/hybrid strategies.
 
 pub mod coordinator;
+pub mod membership;
 pub mod merge;
 pub mod shard;
 pub mod worker;
 
 pub use coordinator::{Coordinator, CoordinatorDeps};
+pub use membership::{Membership, MembershipConfig, MsClock, View};
 pub use merge::{merge_kind, MergeKind};
 pub use shard::{plan, ShardPlan};
-pub use worker::register_with;
+pub use worker::{register_with, Heartbeater};

@@ -5,11 +5,20 @@
 //! dispatch and reuse the same session/pipeline/strategy code paths as
 //! `push_data`/`query`, so `serve --role worker` starts a plain server.
 //! This module adds what the role needs on top: registration with a
-//! coordinator and the candidate-building logic `select_shard` serves.
+//! coordinator — one-shot (`register_with`) or live via the
+//! [`Heartbeater`] lease loop (`serve --role worker --discover`) — and
+//! the candidate-building logic `select_shard` serves.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::json::{Map, Value};
+use crate::metrics::Registry;
 use crate::runtime::backend::ComputeBackend;
+use crate::server::pool::{ConnPool, PoolConfig};
 use crate::server::rpc::RpcError;
+use crate::server::wire::{Payload, WireMode};
 use crate::server::AlClient;
 use crate::strategies::{self, SelectCtx};
 use crate::util::mat::Mat;
@@ -26,6 +35,189 @@ pub fn register_with(worker_addr: &str, coordinator: &str) -> Result<(), RpcErro
     p.insert("addr", Value::from(worker_addr));
     c.call("register", Value::Object(p))?;
     Ok(())
+}
+
+/// Background heartbeat/lease loop — the worker side of live membership
+/// (DESIGN.md §Cluster; `serve --role worker --discover <coordinator>`).
+///
+/// Every `heartbeat_ms` the loop renews this worker's lease with the
+/// coordinator over one pooled connection (re-dialed transparently after
+/// a coordinator restart, so workers re-register on reconnect with no
+/// operator action). When the coordinator has been unreachable for
+/// longer than the lease, the worker knows it has been expired from the
+/// view and flags itself deregistered (`membership.self_deregistered`);
+/// it keeps beating, and the first beat that lands is a fresh join
+/// (`membership.rejoins`) — the coordinator rebalances a slice of the
+/// pool back onto it.
+///
+/// [`Heartbeater::stop`] sends a best-effort graceful `deregister` (the
+/// coordinator rebalances immediately instead of waiting out the lease);
+/// [`Heartbeater::stop_quiet`] and plain `Drop` skip it — that is the
+/// crash-simulation path the fault-injection harness uses.
+pub struct Heartbeater {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    advertised: String,
+    coordinator: String,
+}
+
+impl Heartbeater {
+    pub fn start(
+        advertised: &str,
+        coordinator: &str,
+        heartbeat_ms: u64,
+        lease_ms: u64,
+        metrics: Option<Arc<Registry>>,
+    ) -> Heartbeater {
+        let stop = Arc::new(AtomicBool::new(false));
+        let (stop_bg, addr, coord) =
+            (stop.clone(), advertised.to_string(), coordinator.to_string());
+        let handle = std::thread::Builder::new()
+            .name("alaas-worker-heartbeat".into())
+            .spawn(move || {
+                heartbeat_loop(&addr, &coord, heartbeat_ms, lease_ms, metrics, &stop_bg)
+            })
+            .expect("spawn heartbeat thread");
+        Heartbeater {
+            stop,
+            handle: Some(handle),
+            advertised: advertised.to_string(),
+            coordinator: coordinator.to_string(),
+        }
+    }
+
+    /// Stop beating and gracefully `deregister` (best effort), so the
+    /// coordinator rebalances this worker's rows right away.
+    pub fn stop(mut self) {
+        self.stop_thread();
+        if rpc_once(&self.coordinator, "deregister", &self.advertised).is_ok() {
+            crate::log_info!("cluster", "deregistered from {}", self.coordinator);
+        }
+    }
+
+    /// Stop without deregistering — the coordinator must discover the
+    /// departure via lease expiry or keepalive probes (fault-injection
+    /// harness: a crashed or wedged process sends no goodbyes).
+    pub fn stop_quiet(mut self) {
+        self.stop_thread();
+    }
+
+    fn stop_thread(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Heartbeater {
+    fn drop(&mut self) {
+        // quiet by default; only the explicit `stop()` deregisters
+        self.stop_thread();
+    }
+}
+
+fn count(metrics: &Option<Arc<Registry>>, name: &str) {
+    if let Some(m) = metrics {
+        m.counter(name).fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+fn heartbeat_loop(
+    addr: &str,
+    coordinator: &str,
+    heartbeat_ms: u64,
+    lease_ms: u64,
+    metrics: Option<Arc<Registry>>,
+    stop: &AtomicBool,
+) {
+    // one parked connection; kept longer than the lease so a healthy
+    // loop never re-dials, while a coordinator restart is absorbed by
+    // the pool's stale-detect/redial path
+    let pool = ConnPool::new(
+        PoolConfig { max_idle_per_peer: 1, idle_timeout_ms: lease_ms.max(1_000) * 4 },
+        WireMode::Json,
+        None,
+    )
+    .with_timeouts(Duration::from_secs(2), Duration::from_secs(5));
+    let read_timeout = Duration::from_millis((heartbeat_ms * 4).max(1_000));
+    // start the overdue clock at process start, so a worker that never
+    // reaches the coordinator at all still flags itself after one lease
+    let mut last_ok = Instant::now();
+    // the coordinator's lease is authoritative (config may drift between
+    // the two sides); until a reply carries one, use the local knob
+    let mut lease = lease_ms;
+    let mut deregistered = false;
+    while !stop.load(Ordering::SeqCst) {
+        let mut p = Map::new();
+        p.insert("addr", Value::from(addr));
+        match pool.call(coordinator, "heartbeat", &Payload::json(Value::Object(p)), Some(read_timeout)) {
+            Ok(body) => {
+                if let Some(l) = body.value.get("lease_ms").and_then(Value::as_usize) {
+                    if l > 0 {
+                        lease = l as u64;
+                    }
+                }
+                if deregistered {
+                    deregistered = false;
+                    count(&metrics, "membership.rejoins");
+                    crate::log_info!(
+                        "cluster",
+                        "re-registered with coordinator {coordinator} after lease loss"
+                    );
+                }
+                last_ok = Instant::now();
+                count(&metrics, "membership.worker.heartbeats");
+            }
+            Err(e) => {
+                count(&metrics, "membership.worker.heartbeat_failures");
+                let overdue = last_ok.elapsed() >= Duration::from_millis(lease);
+                if overdue && !deregistered {
+                    // the coordinator has certainly expired us by now:
+                    // treat ourselves as out of the cluster (and say so
+                    // once), but keep beating — the next success re-joins
+                    deregistered = true;
+                    count(&metrics, "membership.self_deregistered");
+                    crate::log_warn!(
+                        "cluster",
+                        "lease with {coordinator} expired ({e}); self-deregistered, retrying"
+                    );
+                }
+            }
+        }
+        // sleep one heartbeat in small slices so stop() joins promptly
+        let mut slept = 0u64;
+        while slept < heartbeat_ms && !stop.load(Ordering::SeqCst) {
+            let step = 25u64.min(heartbeat_ms - slept);
+            std::thread::sleep(Duration::from_millis(step));
+            slept += step;
+        }
+    }
+}
+
+/// One fire-and-forget v1 RPC on a fresh connection (the graceful
+/// deregister; no negotiation, no pooling). Deliberately *not*
+/// `AlClient::deregister`: this runs on the worker's shutdown path and
+/// must be bounded by seconds even when the coordinator is already gone,
+/// while `AlClient::connect` eagerly dials with a 30 s bound (and its
+/// `connect_timeout` variant needs a resolved `SocketAddr`, which a
+/// hostname-configured coordinator address may not be).
+fn rpc_once(coordinator: &str, method: &str, addr: &str) -> Result<(), RpcError> {
+    let pool = ConnPool::new(
+        PoolConfig { max_idle_per_peer: 0, idle_timeout_ms: 1_000 },
+        WireMode::Json,
+        None,
+    )
+    .with_timeouts(Duration::from_secs(2), Duration::from_secs(2));
+    let mut p = Map::new();
+    p.insert("addr", Value::from(addr));
+    pool.call(
+        coordinator,
+        method,
+        &Payload::json(Value::Object(p)),
+        Some(Duration::from_secs(2)),
+    )
+    .map(|_| ())
 }
 
 /// Build the `select_shard` candidate list from a ready session's scan

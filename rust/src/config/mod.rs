@@ -7,6 +7,7 @@
 //! mid-run. Every field has a default matching the paper's experimental
 //! setup, so the quickstart config is a handful of lines (Fig 2).
 
+use crate::cluster::membership::MembershipConfig;
 use crate::json::Value;
 use crate::server::pool::PoolConfig;
 use crate::server::wire::WireMode;
@@ -228,6 +229,11 @@ pub struct ClusterConfig {
     /// >= the expected worker count so the candidate union always covers
     /// a full budget.
     pub oversample_factor: usize,
+    /// `cluster.membership.*` — heartbeat/lease live membership
+    /// (`enabled`, `heartbeat_ms`, `lease_ms`). Disabled by default:
+    /// static config + one-shot `register` keep working unchanged
+    /// (DESIGN.md §Cluster).
+    pub membership: MembershipConfig,
 }
 
 impl Default for ClusterConfig {
@@ -236,6 +242,7 @@ impl Default for ClusterConfig {
             workers: vec![],
             shard_policy: ShardPolicy::Contiguous,
             oversample_factor: 4,
+            membership: MembershipConfig::default(),
         }
     }
 }
@@ -460,6 +467,21 @@ impl AlaasConfig {
             if let Some(x) = s.get("oversample_factor") {
                 c.oversample_factor = req_usize(x, "cluster.oversample_factor")?;
             }
+            if let Some(m) = s.get("membership") {
+                if let Some(x) = m.get("enabled") {
+                    c.membership.enabled = x
+                        .as_bool()
+                        .ok_or_else(|| cerr("cluster.membership.enabled", "expected bool"))?;
+                }
+                if let Some(x) = m.get("heartbeat_ms") {
+                    c.membership.heartbeat_ms =
+                        req_usize(x, "cluster.membership.heartbeat_ms")? as u64;
+                }
+                if let Some(x) = m.get("lease_ms") {
+                    c.membership.lease_ms =
+                        req_usize(x, "cluster.membership.lease_ms")? as u64;
+                }
+            }
         }
 
         if let Some(s) = v.get("server") {
@@ -552,6 +574,21 @@ impl AlaasConfig {
                     format!("worker address '{w}' is not host:port"),
                 ));
             }
+        }
+        let mem = &self.cluster.membership;
+        if mem.heartbeat_ms == 0 {
+            return Err(cerr("cluster.membership.heartbeat_ms", "must be >= 1"));
+        }
+        if mem.lease_ms < 2 * mem.heartbeat_ms {
+            return Err(cerr(
+                "cluster.membership.lease_ms",
+                format!(
+                    "must be >= 2 * heartbeat_ms ({}) so one lost beat cannot \
+                     expire a live worker; got {}",
+                    2 * mem.heartbeat_ms,
+                    mem.lease_ms
+                ),
+            ));
         }
         if !(0.0..1.0).contains(&self.store.jitter) {
             return Err(cerr("store.jitter", "must be in [0, 1)"));
@@ -697,6 +734,50 @@ cluster:
         assert_eq!(e.field, "cluster.workers");
         let e = AlaasConfig::from_yaml_str("cluster:\n  workers: 3\n").unwrap_err();
         assert_eq!(e.field, "cluster.workers");
+    }
+
+    #[test]
+    fn parses_cluster_membership_section() {
+        let cfg = AlaasConfig::from_yaml_str(
+            r#"
+cluster:
+  membership:
+    enabled: true
+    heartbeat_ms: 250
+    lease_ms: 1500
+"#,
+        )
+        .unwrap();
+        let m = &cfg.cluster.membership;
+        assert!(m.enabled);
+        assert_eq!(m.heartbeat_ms, 250);
+        assert_eq!(m.lease_ms, 1500);
+        // defaults: disabled, static-config fallback
+        let d = AlaasConfig::default().cluster.membership;
+        assert!(!d.enabled);
+        assert_eq!(d.heartbeat_ms, 500);
+        assert_eq!(d.lease_ms, 2500);
+        AlaasConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn membership_validation_rejects_tight_or_zero_leases() {
+        // a lease shorter than two heartbeats would expire live workers
+        let e = AlaasConfig::from_yaml_str(
+            "cluster:\n  membership:\n    heartbeat_ms: 500\n    lease_ms: 900\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.field, "cluster.membership.lease_ms");
+        let e = AlaasConfig::from_yaml_str(
+            "cluster:\n  membership:\n    heartbeat_ms: 0\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.field, "cluster.membership.heartbeat_ms");
+        let e = AlaasConfig::from_yaml_str(
+            "cluster:\n  membership:\n    enabled: 3\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.field, "cluster.membership.enabled");
     }
 
     #[test]

@@ -37,7 +37,8 @@ const SCHEMA: Schema = Schema {
     value_flags: &[
         "config", "dataset", "out", "seed", "pool", "init", "test", "budget",
         "strategy", "target", "max-budget", "round-budget", "addr", "session",
-        "backend", "replicas", "rounds", "role", "coordinator", "remote",
+        "backend", "replicas", "rounds", "role", "coordinator", "discover",
+        "remote",
     ],
     bool_flags: &["verbose", "quiet"],
 };
@@ -81,6 +82,8 @@ fn main() {
 fn usage() -> &'static str {
     "usage: alaas <serve|gen-data|query|agent|strategies|help> [flags]\n\
      serve      --config <yml> [--role single|worker|coordinator] [--coordinator host:port]\n\
+     \u{20}          [--discover host:port] = join the coordinator via heartbeat/lease\n\
+     \u{20}          membership ([cluster.membership] config) instead of a one-shot register\n\
      \u{20}          (worker: --addr <host:port> = address advertised to the coordinator)\n\
      gen-data   --dataset <cifarsim|svhnsim> --out <dir> [--init N --pool N --test N --seed N]\n\
      query      --addr <host:port> --dataset <name> [--budget N --strategy S --seed N]\n\
@@ -123,28 +126,38 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 backend,
                 metrics: Registry::new(),
             };
+            let heartbeat_ms = cfg.cluster.membership.heartbeat_ms;
             let server = AlServer::start(cfg, deps)?;
             println!("alaas {role} listening on {}", server.addr());
             if role == "worker" {
-                if let Some(coord) = args.get("coordinator") {
-                    // the coordinator must be able to dial this address:
-                    // pass --addr when binding a wildcard interface
-                    let advertised = args
-                        .get("addr")
-                        .map(str::to_string)
-                        .unwrap_or_else(|| server.addr().to_string());
-                    if advertised.starts_with("0.0.0.0") {
-                        eprintln!(
-                            "warning: advertising {advertised}; pass --addr \
-                             <routable-host:port> so the coordinator can reach \
-                             this worker"
-                        );
-                    }
+                // the coordinator must be able to dial this address:
+                // pass --addr when binding a wildcard interface
+                let advertised = args
+                    .get("addr")
+                    .map(str::to_string)
+                    .unwrap_or_else(|| server.addr().to_string());
+                if advertised.starts_with("0.0.0.0") {
+                    eprintln!(
+                        "warning: advertising {advertised}; pass --addr \
+                         <routable-host:port> so the coordinator can reach \
+                         this worker"
+                    );
+                }
+                if let Some(coord) = args.get("discover") {
+                    // live membership: heartbeat/lease auto-discovery —
+                    // survives coordinator restarts and rejoins after a
+                    // lease loss (DESIGN.md §Cluster)
+                    server.discover(coord, Some(&advertised));
+                    println!(
+                        "heartbeating to coordinator {coord} every {heartbeat_ms}ms \
+                         (lease-based membership)"
+                    );
+                } else if let Some(coord) = args.get("coordinator") {
                     register_with_retry(&advertised, coord);
                 } else {
                     println!(
-                        "no --coordinator given; waiting for scan_shard from a \
-                         coordinator configured with this address"
+                        "no --discover/--coordinator given; waiting for scan_shard \
+                         from a coordinator configured with this address"
                     );
                 }
             }

@@ -200,6 +200,13 @@ impl Registry {
         self.histogram(name).record(d);
     }
 
+    /// Set a counter-backed gauge to an absolute value (membership view
+    /// generation, live-worker count, straggler spread): last write
+    /// wins, unlike the monotonic `fetch_add` counters.
+    pub fn gauge_set(&self, name: &str, v: u64) {
+        self.counter(name).store(v, Ordering::Relaxed);
+    }
+
     /// Full JSON snapshot (served by the `metrics` RPC).
     pub fn snapshot(&self) -> Value {
         let mut root = Map::new();
@@ -324,6 +331,19 @@ mod tests {
         assert_eq!(
             snap.get("meters").unwrap().get("e2e.images").unwrap().get("count").unwrap().as_i64(),
             Some(42)
+        );
+    }
+
+    #[test]
+    fn gauge_set_overwrites_instead_of_accumulating() {
+        let r = Registry::new();
+        r.gauge_set("membership.generation", 3);
+        r.gauge_set("membership.generation", 7);
+        assert_eq!(r.counter("membership.generation").load(Ordering::Relaxed), 7);
+        let snap = r.snapshot();
+        assert_eq!(
+            snap.get("counters").unwrap().get("membership.generation").unwrap().as_i64(),
+            Some(7)
         );
     }
 

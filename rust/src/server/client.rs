@@ -246,6 +246,33 @@ impl AlClient {
         self.call("cache_stats", Value::Null)
     }
 
+    /// Renew (or establish) `worker_addr`'s membership lease with a
+    /// coordinator (DESIGN.md §Cluster). Returns the membership view
+    /// generation — 0 when the coordinator has membership disabled and
+    /// the beat degraded to a static `register`.
+    pub fn heartbeat(&mut self, worker_addr: &str) -> Result<u64, RpcError> {
+        let mut p = Map::new();
+        p.insert("addr", Value::from(worker_addr));
+        let v = self.call("heartbeat", Value::Object(p))?;
+        Ok(v.get("generation").and_then(Value::as_usize).unwrap_or(0) as u64)
+    }
+
+    /// The coordinator's generation-numbered membership view:
+    /// `{enabled, generation, members: [{addr, lease_ms_left?}]}`.
+    pub fn members(&mut self) -> Result<Value, RpcError> {
+        self.call("members", Value::Null)
+    }
+
+    /// Gracefully remove `worker_addr` from the membership view (its
+    /// pool rows rebalance across the survivors at the next scatter).
+    /// Returns whether the address was a member.
+    pub fn deregister(&mut self, worker_addr: &str) -> Result<bool, RpcError> {
+        let mut p = Map::new();
+        p.insert("addr", Value::from(worker_addr));
+        let v = self.call("deregister", Value::Object(p))?;
+        Ok(v.get("left").and_then(Value::as_bool).unwrap_or(false))
+    }
+
     /// Names in the server's strategy zoo.
     pub fn strategies(&mut self) -> Result<Vec<String>, RpcError> {
         let v = self.call("strategies", Value::Null)?;

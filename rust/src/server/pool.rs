@@ -26,8 +26,10 @@
 //!   idle set (worker re-registration, observed death).
 //!
 //! Metrics (when constructed with a registry): `pool.hits`, `pool.dials`,
-//! `pool.evictions`, `pool.retries` counters and the `pool.in_flight`
-//! gauge.
+//! `pool.evictions`, `pool.retries`, `pool.keepalive_probes` counters and
+//! the `pool.in_flight` gauge. Keepalive probes (`probe_peer`) never
+//! count as dials: the dials-per-scatter pin stays meaningful with
+//! background health checking on.
 
 use std::collections::HashMap;
 use std::io::ErrorKind;
@@ -207,6 +209,29 @@ impl ConnPool {
                 p.idle.clear();
             }
         }
+    }
+
+    /// Background keepalive/health probe: is `addr` alive right now? A
+    /// healthy parked idle connection answers for free (non-blocking
+    /// peek); otherwise one bounded dial is made and immediately closed.
+    /// Probe dials count under `pool.keepalive_probes` — **never**
+    /// `pool.dials`, so health checking cannot distort the
+    /// dials-per-scatter invariant the cluster tests pin — and they
+    /// neither negotiate nor park, so a probe can never change any
+    /// connection's wire mode or the pool's contents. The coordinator's
+    /// membership sweep uses this to evict a dead worker before a query
+    /// pays the scatter dial timeout (DESIGN.md §Cluster).
+    pub fn probe_peer(&self, addr: &str, timeout: Duration) -> bool {
+        self.count("pool.keepalive_probes", 1);
+        {
+            let peers = self.peers.lock().unwrap();
+            if let Some(p) = peers.get(addr) {
+                if p.idle.iter().any(|c| !stream_is_stale(&c.stream)) {
+                    return true;
+                }
+            }
+        }
+        dial(addr, timeout).is_ok()
     }
 
     /// Check out a connection to `addr`: the freshest live idle one, or a
@@ -694,6 +719,36 @@ mod tests {
         pool.checkin(&peer.addr, held);
         assert_eq!(pool.idle_conns(&peer.addr), 0);
         assert!(counter(&metrics, "pool.evictions") >= 2);
+    }
+
+    /// The ISSUE 5 satellite pin: keepalive probes are invisible to
+    /// `pool.dials` (and to the pool's contents), so the
+    /// dials-once-per-worker scatter invariant survives health checking.
+    #[test]
+    fn probe_peer_counts_keepalives_not_dials() {
+        let peer = MiniPeer::start(WireMode::Binary);
+        let metrics = Registry::new();
+        let pool =
+            ConnPool::new(PoolConfig::default(), WireMode::Binary, Some(metrics.clone()));
+        // no parked connection: the probe dials, but only the keepalive
+        // counter moves, and nothing is parked or negotiated
+        assert!(pool.probe_peer(&peer.addr, Duration::from_millis(500)));
+        assert_eq!(counter(&metrics, "pool.keepalive_probes"), 1);
+        assert_eq!(counter(&metrics, "pool.dials"), 0, "probes must not count as dials");
+        assert_eq!(pool.idle_conns(&peer.addr), 0, "probes must not park connections");
+        // with a healthy parked connection the probe answers by peek
+        // (no dial at all), but still counts as a probe
+        pool.call(&peer.addr, "echo", &Payload::json(Value::Null), None).unwrap();
+        assert!(pool.probe_peer(&peer.addr, Duration::from_millis(500)));
+        assert_eq!(counter(&metrics, "pool.keepalive_probes"), 2);
+        // a dead peer fails the probe without touching pool.dials
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        assert!(!pool.probe_peer(&dead, Duration::from_millis(300)));
+        assert_eq!(counter(&metrics, "pool.keepalive_probes"), 3);
+        assert_eq!(counter(&metrics, "pool.dials"), 1, "only the real call dialed");
     }
 
     #[test]

@@ -80,6 +80,10 @@ struct ServerState {
     sessions: Mutex<HashMap<String, Arc<SessionSlot>>>,
     /// Background PSHEA jobs (DESIGN.md §Agent).
     jobs: JobRegistry,
+    /// Live-membership heartbeat loop when this server runs as a
+    /// discovered worker (`--discover`; DESIGN.md §Cluster). Stopped —
+    /// with a graceful `deregister` — on shutdown.
+    heartbeater: Mutex<Option<crate::cluster::worker::Heartbeater>>,
     shutdown: AtomicBool,
 }
 
@@ -102,6 +106,7 @@ impl AlServer {
             deps,
             sessions: Mutex::new(HashMap::new()),
             jobs: JobRegistry::new(),
+            heartbeater: Mutex::new(None),
             shutdown: AtomicBool::new(false),
         });
         let accept_state = state.clone();
@@ -129,6 +134,39 @@ impl AlServer {
         self.addr
     }
 
+    /// Announce this server to a cluster coordinator and keep its
+    /// membership lease alive (the `serve --role worker --discover`
+    /// path; DESIGN.md §Cluster). `advertised` is the address the
+    /// *coordinator* should dial — pass it when binding a wildcard
+    /// interface. Heartbeat cadence and lease come from this server's
+    /// `[cluster.membership]` config; the loop re-registers on reconnect
+    /// after a coordinator restart and self-deregisters (flagging
+    /// `membership.self_deregistered`) when its lease lapses. Calling
+    /// again replaces the previous loop.
+    pub fn discover(&self, coordinator: &str, advertised: Option<&str>) {
+        let advertised =
+            advertised.map(str::to_string).unwrap_or_else(|| self.addr.to_string());
+        let mcfg = &self.state.config.cluster.membership;
+        let hb = crate::cluster::worker::Heartbeater::start(
+            &advertised,
+            coordinator,
+            mcfg.heartbeat_ms,
+            mcfg.lease_ms,
+            Some(self.state.deps.metrics.clone()),
+        );
+        if let Some(prev) = self.state.heartbeater.lock().unwrap().replace(hb) {
+            prev.stop_quiet();
+        }
+    }
+
+    /// Detach (and return) the heartbeat loop without deregistering —
+    /// the fault-injection harness uses this to simulate a crashed or
+    /// wedged worker whose departure the coordinator must detect via
+    /// lease expiry or keepalive probes.
+    pub fn take_heartbeater(&self) -> Option<crate::cluster::worker::Heartbeater> {
+        self.state.heartbeater.lock().unwrap().take()
+    }
+
     /// Stop accepting and join the accept thread. In-flight handler
     /// threads finish their current request.
     pub fn shutdown(mut self) {
@@ -138,6 +176,11 @@ impl AlServer {
     fn shutdown_inner(&mut self) {
         if self.state.shutdown.swap(true, Ordering::SeqCst) {
             return;
+        }
+        // graceful leave: the coordinator rebalances this worker's rows
+        // immediately instead of waiting out the lease
+        if let Some(hb) = self.state.heartbeater.lock().unwrap().take() {
+            hb.stop();
         }
         // poke the listener awake, through the same dialing path real
         // RPCs use (pool::dial) so liveness behavior cannot diverge

@@ -45,11 +45,7 @@ impl LatencyModel {
             return 1.0;
         }
         // FNV-1a -> uniform in [0,1)
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in key.bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x1000_0000_01b3);
-        }
+        let h = crate::util::fnv1a(key.as_bytes());
         let u = (h >> 11) as f64 / (1u64 << 53) as f64;
         1.0 + self.jitter * (2.0 * u - 1.0)
     }

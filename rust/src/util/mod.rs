@@ -9,3 +9,28 @@ pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod topk;
+
+/// FNV-1a over a byte string — the crate's one deterministic string
+/// hash (store-latency jitter, cache sharding, property-test case
+/// seeds, membership rendezvous weights). Stability matters: several
+/// seeded behaviors are pinned by tests, so any change here is a
+/// breaking one.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod hash_tests {
+    #[test]
+    fn fnv1a_matches_the_reference_vectors() {
+        // published FNV-1a 64-bit test vectors
+        assert_eq!(super::fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(super::fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(super::fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+}

@@ -23,12 +23,7 @@ fn case_count(default_cases: u32) -> u32 {
 /// independent of execution order.
 fn case_seed(name: &str, i: u32) -> u64 {
     // FNV-1a over the name, mixed with the case index.
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in name.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x1000_0000_01b3);
-    }
-    h ^ ((i as u64) << 32 | 0x5bd1_e995)
+    crate::util::fnv1a(name.as_bytes()) ^ ((i as u64) << 32 | 0x5bd1_e995)
 }
 
 /// Run `f` for `cases` randomized cases. Panics on the first failure with

@@ -1,0 +1,679 @@
+#![allow(dead_code)]
+//! Shared cluster test harness (ISSUE 5 satellite): one dataset in a
+//! shared simulated store, a coordinator + N workers on ephemeral
+//! ports, an optional reference single server — plus scripted fault
+//! injection: kill / gracefully retire / restart a worker, wedge one
+//! (heartbeats stop, data-path sockets stay open), advance the
+//! coordinator's membership clock (virtual-time lease expiry), and bind
+//! any of those to a named point around the push/query flow. Every
+//! fault is appended to a per-harness log under
+//! `target/harness-logs/` (override with `ALAAS_HARNESS_LOG_DIR`), which
+//! CI uploads on failure.
+//!
+//! Used by `integration_cluster.rs`, `integration_agent.rs`, and
+//! `integration_membership.rs` in place of their previously copy-pasted
+//! spawn/kill boilerplate.
+
+use std::io::Write as _;
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use alaas::cache::DataCache;
+use alaas::cluster::{worker::register_with, Coordinator, CoordinatorDeps};
+use alaas::config::AlaasConfig;
+use alaas::data::{generate_into_store, DatasetSpec, Oracle};
+use alaas::json::Value;
+use alaas::metrics::Registry;
+use alaas::runtime::backend::ComputeBackend;
+use alaas::runtime::HostBackend;
+use alaas::server::{AlClient, AlServer, ServerDeps, WireMode};
+use alaas::store::{Manifest, ObjectStore, SampleRef, StoreRouter};
+
+/// Write dataset blobs through the router's s3sim *backing* store (fast
+/// path) while servers read them through s3sim URIs.
+pub struct NoopWrap(pub Arc<StoreRouter>);
+
+impl ObjectStore for NoopWrap {
+    fn get(&self, key: &str) -> alaas::store::StoreResult<Vec<u8>> {
+        self.0.s3sim_backing().get(key)
+    }
+    fn put(&self, key: &str, data: &[u8]) -> alaas::store::StoreResult<()> {
+        self.0.s3sim_backing().put(key, data)
+    }
+    fn exists(&self, key: &str) -> bool {
+        self.0.s3sim_backing().exists(key)
+    }
+    fn list(&self, prefix: &str) -> alaas::store::StoreResult<Vec<String>> {
+        self.0.s3sim_backing().list(prefix)
+    }
+    fn kind(&self) -> &'static str {
+        "wrap"
+    }
+}
+
+/// Oracle labels for every split: init rides with pushes; pool/test are
+/// the agent job's oracle arrays.
+pub struct Labels {
+    pub init: Vec<u8>,
+    pub pool: Vec<u8>,
+    pub test: Vec<u8>,
+}
+
+pub fn base_config() -> AlaasConfig {
+    let mut cfg = AlaasConfig::default();
+    cfg.al_worker.host = "127.0.0.1".into();
+    cfg.al_worker.port = 0; // ephemeral
+    cfg.store.get_latency_us = 0;
+    cfg.store.bandwidth_mib_s = 0.0;
+    cfg.store.jitter = 0.0;
+    cfg
+}
+
+pub fn server_deps(store: Arc<StoreRouter>) -> ServerDeps {
+    ServerDeps {
+        store,
+        cache: Arc::new(DataCache::new(256 << 20, 8, true)),
+        backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
+        metrics: Registry::new(),
+    }
+}
+
+/// Generate a dataset into the shared store and collect every split's
+/// oracle labels.
+pub fn dataset(store: &Arc<StoreRouter>, spec: &DatasetSpec, bucket: &str) -> (Manifest, Labels) {
+    let backing: Arc<dyn ObjectStore> =
+        Arc::new(NoopWrap(store.clone())) as Arc<dyn ObjectStore>;
+    let manifest = generate_into_store(spec, &backing, "s3sim", bucket);
+    let oracle = Oracle::load(&backing, bucket).unwrap();
+    let ids =
+        |refs: &[SampleRef]| -> Vec<u32> { refs.iter().map(|s| s.id).collect() };
+    let labels = Labels {
+        init: oracle.label(&ids(&manifest.init)),
+        pool: oracle.eval_labels(&ids(&manifest.pool)),
+        test: oracle.eval_labels(&ids(&manifest.test)),
+    };
+    (manifest, labels)
+}
+
+/// Named points in the push/query flow where scripted faults fire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPoint {
+    BeforePush,
+    AfterPush,
+    BeforeQuery,
+    AfterQuery,
+}
+
+/// Scripted fault actions (worker indices are harness slots).
+#[derive(Debug, Clone)]
+pub enum FaultAction {
+    /// Crash: no deregister, heartbeats stop, sockets die.
+    Kill(usize),
+    /// Graceful retirement: deregister, then shut down.
+    Leave(usize),
+    /// Start a fresh server process on the worker's old port.
+    Restart(usize),
+    /// Wedge: heartbeats stop but the server keeps serving.
+    Hang(usize),
+    /// Un-wedge a hung worker (it re-joins the view).
+    Resume(usize),
+    /// Advance the coordinator's membership clock (virtual time).
+    AdvanceMs(u64),
+    /// Force one membership sweep (lease expiry + keepalive probes).
+    Tick,
+}
+
+struct WorkerHandle {
+    server: Option<AlServer>,
+    advertised: String,
+    port: u16,
+}
+
+static HARNESS_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Builder for [`ClusterHarness`]; defaults match the historical
+/// `integration_cluster` fixture (seed 7, 60-init/240-pool, 3 workers,
+/// binary wire, membership off).
+pub struct HarnessBuilder {
+    data_seed: u64,
+    sizes: (usize, usize, usize),
+    bucket: String,
+    n_workers: usize,
+    coord_wire: WireMode,
+    worker_wire: WireMode,
+    membership: bool,
+    heartbeat_ms: u64,
+    lease_ms: u64,
+    with_single: bool,
+    coord_tweak: Option<Box<dyn Fn(&mut AlaasConfig)>>,
+}
+
+impl HarnessBuilder {
+    pub fn data_seed(mut self, s: u64) -> Self {
+        self.data_seed = s;
+        self
+    }
+    pub fn sizes(mut self, init: usize, pool: usize, test: usize) -> Self {
+        self.sizes = (init, pool, test);
+        self
+    }
+    pub fn bucket(mut self, b: &str) -> Self {
+        self.bucket = b.to_string();
+        self
+    }
+    pub fn workers(mut self, n: usize) -> Self {
+        self.n_workers = n;
+        self
+    }
+    pub fn wires(mut self, coord: WireMode, worker: WireMode) -> Self {
+        self.coord_wire = coord;
+        self.worker_wire = worker;
+        self
+    }
+    /// Enable heartbeat/lease membership. The lease is deliberately long
+    /// (60 s): in tests, expiry comes from virtual time
+    /// (`advance_time_ms` + `tick`) or keepalive probes, never from a
+    /// wall-clock race.
+    pub fn membership(mut self, on: bool) -> Self {
+        self.membership = on;
+        self
+    }
+    pub fn lease(mut self, heartbeat_ms: u64, lease_ms: u64) -> Self {
+        self.heartbeat_ms = heartbeat_ms;
+        self.lease_ms = lease_ms;
+        self
+    }
+    pub fn with_single(mut self, on: bool) -> Self {
+        self.with_single = on;
+        self
+    }
+    /// Mutate the coordinator's config before start (e.g. disable the
+    /// connection pool).
+    pub fn coord_tweak(mut self, f: impl Fn(&mut AlaasConfig) + 'static) -> Self {
+        self.coord_tweak = Some(Box::new(f));
+        self
+    }
+
+    pub fn build(self) -> ClusterHarness {
+        let mut cfg = base_config();
+        cfg.server.wire = self.worker_wire;
+        if self.membership {
+            cfg.cluster.membership.enabled = true;
+            cfg.cluster.membership.heartbeat_ms = self.heartbeat_ms;
+            cfg.cluster.membership.lease_ms = self.lease_ms;
+        }
+        let store = Arc::new(StoreRouter::new("/tmp", &cfg.store));
+        let spec = DatasetSpec::cifarsim(self.data_seed).with_sizes(
+            self.sizes.0,
+            self.sizes.1,
+            self.sizes.2,
+        );
+        let (manifest, labels) = dataset(&store, &spec, &self.bucket);
+        let log = HarnessLog::open(&self.bucket);
+
+        let single = self
+            .with_single
+            .then(|| AlServer::start(cfg.clone(), server_deps(store.clone())).unwrap());
+
+        let mut workers: Vec<WorkerHandle> = Vec::new();
+        let mut coord_cfg = cfg.clone();
+        coord_cfg.server.wire = self.coord_wire;
+        if let Some(tweak) = &self.coord_tweak {
+            tweak(&mut coord_cfg);
+        }
+        let coordinator;
+        let coord_metrics = Registry::new();
+        if self.membership {
+            // discovery order: coordinator first, workers join via
+            // heartbeats
+            coordinator = Coordinator::start(
+                coord_cfg.clone(),
+                CoordinatorDeps {
+                    backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
+                    metrics: coord_metrics.clone(),
+                },
+            )
+            .unwrap();
+            let coord_addr = coordinator.addr().to_string();
+            for _ in 0..self.n_workers {
+                let server =
+                    AlServer::start(cfg.clone(), server_deps(store.clone())).unwrap();
+                let advertised = server.addr().to_string();
+                let port = server.addr().port();
+                server.discover(&coord_addr, Some(&advertised));
+                workers.push(WorkerHandle { server: Some(server), advertised, port });
+            }
+        } else {
+            for _ in 0..self.n_workers {
+                let server =
+                    AlServer::start(cfg.clone(), server_deps(store.clone())).unwrap();
+                let advertised = server.addr().to_string();
+                let port = server.addr().port();
+                workers.push(WorkerHandle { server: Some(server), advertised, port });
+            }
+            coord_cfg.cluster.workers =
+                workers.iter().map(|w| w.advertised.clone()).collect();
+            coordinator = Coordinator::start(
+                coord_cfg.clone(),
+                CoordinatorDeps {
+                    backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
+                    metrics: coord_metrics.clone(),
+                },
+            )
+            .unwrap();
+        }
+        let coord_addr = coordinator.addr();
+        let h = ClusterHarness {
+            coordinator: Some(coordinator),
+            coord_metrics,
+            coord_addr,
+            coord_cfg,
+            cfg,
+            workers,
+            single,
+            manifest,
+            labels,
+            store,
+            membership: self.membership,
+            faults: Vec::new(),
+            log,
+        };
+        if self.membership {
+            h.wait_members(self.n_workers);
+        }
+        h.log(&format!(
+            "harness up: coordinator {} + {} workers (membership={})",
+            h.coord_addr,
+            h.workers.len(),
+            self.membership
+        ));
+        h
+    }
+}
+
+/// Coordinator + N workers + shared dataset + scripted fault injection.
+pub struct ClusterHarness {
+    coordinator: Option<Coordinator>,
+    pub coord_metrics: Arc<Registry>,
+    pub coord_addr: SocketAddr,
+    coord_cfg: AlaasConfig,
+    cfg: AlaasConfig,
+    workers: Vec<WorkerHandle>,
+    single: Option<AlServer>,
+    pub manifest: Manifest,
+    pub labels: Labels,
+    pub store: Arc<StoreRouter>,
+    membership: bool,
+    faults: Vec<(FaultPoint, FaultAction)>,
+    log: HarnessLog,
+}
+
+impl ClusterHarness {
+    pub fn builder() -> HarnessBuilder {
+        HarnessBuilder {
+            data_seed: 7,
+            sizes: (60, 240, 0),
+            bucket: "cl-ds".into(),
+            n_workers: 3,
+            coord_wire: WireMode::Binary,
+            worker_wire: WireMode::Binary,
+            membership: false,
+            heartbeat_ms: 50,
+            lease_ms: 60_000,
+            with_single: false,
+            coord_tweak: None,
+        }
+    }
+
+    pub fn coordinator(&self) -> &Coordinator {
+        self.coordinator.as_ref().expect("coordinator running")
+    }
+
+    pub fn client(&self) -> AlClient {
+        AlClient::connect(&self.coord_addr.to_string()).unwrap()
+    }
+
+    pub fn single_addr(&self) -> String {
+        self.single.as_ref().expect("harness built without a single server").addr().to_string()
+    }
+
+    pub fn single_client(&self) -> AlClient {
+        AlClient::connect(&self.single_addr()).unwrap()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn worker_addr(&self, i: usize) -> String {
+        self.workers[i].advertised.clone()
+    }
+
+    pub fn worker_alive(&self, i: usize) -> bool {
+        self.workers[i].server.is_some()
+    }
+
+    /// Reference to a live worker's server (its metrics, address, ...).
+    pub fn worker(&self, i: usize) -> &AlServer {
+        self.workers[i].server.as_ref().expect("worker is down")
+    }
+
+    pub fn log(&self, msg: &str) {
+        self.log.line(msg);
+    }
+
+    // -- fault injection ---------------------------------------------------
+
+    /// Crash worker `i`: heartbeats stop without a deregister and its
+    /// sockets die — the coordinator must find out via redispatch
+    /// failures, keepalive probes, or lease expiry.
+    pub fn kill_worker(&mut self, i: usize) {
+        self.log(&format!("KILL worker {i} ({})", self.workers[i].advertised));
+        let server = self.workers[i].server.take().expect("worker already down");
+        if let Some(hb) = server.take_heartbeater() {
+            hb.stop_quiet();
+        }
+        server.shutdown();
+    }
+
+    /// Gracefully retire worker `i`: deregisters (membership) then shuts
+    /// down, so rows rebalance without any lease wait.
+    pub fn leave_worker(&mut self, i: usize) {
+        self.log(&format!("LEAVE worker {i} ({})", self.workers[i].advertised));
+        let server = self.workers[i].server.take().expect("worker already down");
+        server.shutdown();
+    }
+
+    /// Restart a killed worker as a fresh process on its old port (it
+    /// re-joins via discovery under membership).
+    pub fn restart_worker(&mut self, i: usize) {
+        assert!(self.workers[i].server.is_none(), "worker {i} is still up");
+        self.log(&format!("RESTART worker {i} on port {}", self.workers[i].port));
+        let mut cfg = self.cfg.clone();
+        cfg.al_worker.port = self.workers[i].port;
+        let server = AlServer::start(cfg, server_deps(self.store.clone())).unwrap();
+        if self.membership {
+            server.discover(&self.coord_addr.to_string(), Some(&self.workers[i].advertised));
+        }
+        self.workers[i].server = Some(server);
+    }
+
+    /// Wedge worker `i`: its heartbeats stop but the server keeps
+    /// serving — keepalive probes still pass, so only *lease expiry*
+    /// (virtual time) can evict it. The realistic stuck-process failure.
+    pub fn hang_worker(&mut self, i: usize) {
+        self.log(&format!("HANG worker {i} ({})", self.workers[i].advertised));
+        if let Some(hb) = self.worker(i).take_heartbeater() {
+            hb.stop_quiet();
+        }
+    }
+
+    /// Un-wedge a hung worker: heartbeats resume and it re-joins the
+    /// view as a fresh member.
+    pub fn resume_worker(&mut self, i: usize) {
+        self.log(&format!("RESUME worker {i} ({})", self.workers[i].advertised));
+        let coord = self.coord_addr.to_string();
+        let advertised = self.workers[i].advertised.clone();
+        self.worker(i).discover(&coord, Some(&advertised));
+    }
+
+    /// Start an additional worker (not yet known to the coordinator).
+    pub fn add_worker_unregistered(&mut self) -> usize {
+        let server = AlServer::start(self.cfg.clone(), server_deps(self.store.clone())).unwrap();
+        let advertised = server.addr().to_string();
+        let port = server.addr().port();
+        self.log(&format!("ADD worker {} ({advertised}, unregistered)", self.workers.len()));
+        self.workers.push(WorkerHandle { server: Some(server), advertised, port });
+        self.workers.len() - 1
+    }
+
+    /// Start an additional worker and join it to the cluster (heartbeat
+    /// discovery under membership, one-shot register otherwise).
+    pub fn spawn_worker(&mut self) -> usize {
+        let i = self.add_worker_unregistered();
+        let coord = self.coord_addr.to_string();
+        let advertised = self.workers[i].advertised.clone();
+        if self.membership {
+            self.worker(i).discover(&coord, Some(&advertised));
+        } else {
+            register_with(&advertised, &coord).unwrap();
+        }
+        self.log(&format!("JOIN worker {i} ({advertised})"));
+        i
+    }
+
+    /// Advance the coordinator's membership clock (virtual-time lease
+    /// expiry — no wall-clock sleeps).
+    pub fn advance_time_ms(&self, ms: u64) {
+        self.log(&format!("ADVANCE clock +{ms}ms"));
+        self.coordinator().advance_time(ms);
+    }
+
+    /// Force one membership sweep now (lease expiry + keepalive probes).
+    pub fn tick(&self) {
+        self.coordinator().membership_tick();
+    }
+
+    /// Restart the coordinator on its old port with the same metrics
+    /// registry; sessions are lost (re-push), workers' heartbeat loops
+    /// re-register on their own.
+    pub fn restart_coordinator(&mut self) {
+        let old = self.coordinator.take().expect("coordinator running");
+        let port = self.coord_addr.port();
+        self.log(&format!("RESTART coordinator on port {port}"));
+        old.shutdown();
+        let mut cfg = self.coord_cfg.clone();
+        cfg.al_worker.port = port;
+        cfg.cluster.workers = vec![]; // rediscovery, not static config
+        let coordinator = Coordinator::start(
+            cfg,
+            CoordinatorDeps {
+                backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
+                metrics: self.coord_metrics.clone(),
+            },
+        )
+        .unwrap();
+        self.coord_addr = coordinator.addr();
+        self.coordinator = Some(coordinator);
+    }
+
+    // -- membership observation --------------------------------------------
+
+    /// Block until the membership view holds exactly `n` live members.
+    pub fn wait_members(&self, n: usize) {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let (_, live) = self.coordinator().membership_snapshot();
+            if live == n {
+                return;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "membership never settled at {n} members (currently {live})"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Block until `addr` has left the view (ticking each poll so lease
+    /// sweeps run even between background ticks).
+    pub fn wait_member_gone(&self, addr: &str) {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            self.tick();
+            let (_, members) = self.members_view();
+            if !members.iter().any(|m| m == addr) {
+                return;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "member {addr} never left the view ({members:?})"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// `(generation, member addresses)` via the `members` RPC.
+    pub fn members_view(&self) -> (u64, Vec<String>) {
+        let mut c = self.client();
+        let v = c.members().unwrap();
+        let generation =
+            v.get("generation").and_then(Value::as_usize).unwrap_or(0) as u64;
+        let members = v
+            .get("members")
+            .and_then(Value::as_array)
+            .map(|a| {
+                a.iter()
+                    .filter_map(|e| {
+                        e.get("addr").and_then(Value::as_str).map(str::to_string)
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        (generation, members)
+    }
+
+    /// Per-worker-address pool row counts of a session's current shard
+    /// layout (`cluster_status`).
+    pub fn shard_rows_by_worker(&self, session: &str) -> Vec<(String, usize)> {
+        let mut c = self.client();
+        let v = c.call("cluster_status", Value::Null).unwrap();
+        let workers: Vec<String> = v
+            .get("workers")
+            .and_then(Value::as_array)
+            .map(|a| {
+                a.iter()
+                    .filter_map(|w| {
+                        w.get("addr").and_then(Value::as_str).map(str::to_string)
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        let mut out = Vec::new();
+        for s in v.get("sessions").and_then(Value::as_array).unwrap_or(&[]) {
+            if s.get("session").and_then(Value::as_str) != Some(session) {
+                continue;
+            }
+            for sh in s.get("shards").and_then(Value::as_array).unwrap_or(&[]) {
+                let slot = sh.get("worker").and_then(Value::as_usize).unwrap_or(0);
+                let rows = sh.get("pool_samples").and_then(Value::as_usize).unwrap_or(0);
+                let addr = workers.get(slot).cloned().unwrap_or_default();
+                out.push((addr, rows));
+            }
+        }
+        out
+    }
+
+    /// A named counter from the coordinator's metrics registry.
+    pub fn coord_counter(&self, name: &str) -> u64 {
+        self.coord_metrics
+            .counter(name)
+            .load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    // -- scripted flow -----------------------------------------------------
+
+    /// Bind a fault action to a named point; it fires (once) when the
+    /// flow helpers below pass that point.
+    pub fn script(&mut self, point: FaultPoint, action: FaultAction) {
+        self.faults.push((point, action));
+    }
+
+    /// Fire every scripted action bound to `point`.
+    pub fn fire(&mut self, point: FaultPoint) {
+        let mut due = Vec::new();
+        self.faults.retain(|(p, a)| {
+            if *p == point {
+                due.push(a.clone());
+                false
+            } else {
+                true
+            }
+        });
+        for a in due {
+            self.log(&format!("fault at {point:?}: {a:?}"));
+            self.apply(a);
+        }
+    }
+
+    fn apply(&mut self, a: FaultAction) {
+        match a {
+            FaultAction::Kill(i) => self.kill_worker(i),
+            FaultAction::Leave(i) => self.leave_worker(i),
+            FaultAction::Restart(i) => self.restart_worker(i),
+            FaultAction::Hang(i) => self.hang_worker(i),
+            FaultAction::Resume(i) => self.resume_worker(i),
+            FaultAction::AdvanceMs(ms) => self.advance_time_ms(ms),
+            FaultAction::Tick => self.tick(),
+        }
+    }
+
+    /// Push the harness dataset under `session`, firing the
+    /// `BeforePush`/`AfterPush` fault points.
+    pub fn push(&mut self, client: &mut AlClient, session: &str) {
+        self.fire(FaultPoint::BeforePush);
+        client.push_data(session, &self.manifest, Some(&self.labels.init)).unwrap();
+        self.fire(FaultPoint::AfterPush);
+    }
+
+    /// Query selected ids, firing the `BeforeQuery`/`AfterQuery` points.
+    pub fn query_ids(
+        &mut self,
+        client: &mut AlClient,
+        session: &str,
+        budget: usize,
+        strategy: &str,
+    ) -> Vec<u32> {
+        self.fire(FaultPoint::BeforeQuery);
+        let (sel, _, _) = client.query(session, budget, Some(strategy)).unwrap();
+        self.fire(FaultPoint::AfterQuery);
+        sel.iter().map(|s| s.id).collect()
+    }
+}
+
+impl Drop for ClusterHarness {
+    fn drop(&mut self) {
+        self.log.line("harness down");
+    }
+}
+
+/// Append-only per-harness log file (uploaded by CI on failure).
+struct HarnessLog {
+    path: PathBuf,
+    file: Option<Mutex<std::fs::File>>,
+    t0: Instant,
+}
+
+impl HarnessLog {
+    fn open(tag: &str) -> HarnessLog {
+        let dir = std::env::var("ALAAS_HARNESS_LOG_DIR")
+            .unwrap_or_else(|_| "target/harness-logs".to_string());
+        let seq = HARNESS_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = PathBuf::from(dir)
+            .join(format!("{tag}-{}-{seq}.log", std::process::id()));
+        let file = std::fs::create_dir_all(path.parent().unwrap())
+            .ok()
+            .and_then(|_| {
+                std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(&path)
+                    .ok()
+            })
+            .map(Mutex::new);
+        HarnessLog { path, file, t0: Instant::now() }
+    }
+
+    fn line(&self, msg: &str) {
+        let stamped =
+            format!("[{:9.3}s] {msg}", self.t0.elapsed().as_secs_f64());
+        eprintln!("[harness] {stamped}");
+        if let Some(f) = &self.file {
+            let mut f = f.lock().unwrap();
+            let _ = writeln!(f, "{stamped}");
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Shared helpers for the integration test crates. Each `tests/*.rs`
+//! crate compiles this module independently (`mod common;`), so items
+//! unused by one crate are expected — dead-code lints are allowed at
+//! the module level in `cluster_harness`.
+
+pub mod cluster_harness;

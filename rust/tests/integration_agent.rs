@@ -10,45 +10,23 @@
 //!
 //! Plus the job-lifecycle edge cases: unknown ids, status after
 //! completion, cancellation actually stopping labeling spend, and a
-//! worker killed mid-job degrading via shard re-dispatch.
+//! worker killed mid-job degrading via shard re-dispatch. Topology
+//! plumbing comes from the shared `common::cluster_harness`.
+
+mod common;
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use alaas::agent::{run_pshea, PsheaConfig, PsheaTrace, StopReason};
-use alaas::cache::DataCache;
-use alaas::cluster::{Coordinator, CoordinatorDeps};
-use alaas::config::AlaasConfig;
-use alaas::data::{generate, generate_into_store, DatasetSpec, Oracle};
-use alaas::metrics::Registry;
+use alaas::data::{generate, DatasetSpec};
 use alaas::runtime::backend::ComputeBackend;
 use alaas::runtime::HostBackend;
-use alaas::server::{AlClient, AlServer, ServerDeps};
+use alaas::server::AlClient;
 use alaas::sim::AlExperiment;
-use alaas::store::{Manifest, ObjectStore, StoreRouter};
 use alaas::trainer::TrainConfig;
 
-/// Write dataset blobs through the router's s3sim *backing* store (fast
-/// path) while servers read them through s3sim URIs.
-struct NoopWrap(Arc<StoreRouter>);
-
-impl ObjectStore for NoopWrap {
-    fn get(&self, key: &str) -> alaas::store::StoreResult<Vec<u8>> {
-        self.0.s3sim_backing().get(key)
-    }
-    fn put(&self, key: &str, data: &[u8]) -> alaas::store::StoreResult<()> {
-        self.0.s3sim_backing().put(key, data)
-    }
-    fn exists(&self, key: &str) -> bool {
-        self.0.s3sim_backing().exists(key)
-    }
-    fn list(&self, prefix: &str) -> alaas::store::StoreResult<Vec<String>> {
-        self.0.s3sim_backing().list(prefix)
-    }
-    fn kind(&self) -> &'static str {
-        "wrap"
-    }
-}
+use common::cluster_harness::{ClusterHarness, Labels};
 
 /// The shared fixture: every test uses this spec so the in-process
 /// comparator and the remote jobs see byte-identical data.
@@ -60,48 +38,6 @@ const N_TEST: usize = 120;
 
 fn spec() -> DatasetSpec {
     DatasetSpec::cifarsim(DATA_SEED).with_sizes(N_INIT, N_POOL, N_TEST)
-}
-
-fn base_config() -> AlaasConfig {
-    let mut cfg = AlaasConfig::default();
-    cfg.al_worker.host = "127.0.0.1".into();
-    cfg.al_worker.port = 0; // ephemeral
-    cfg.store.get_latency_us = 0;
-    cfg.store.bandwidth_mib_s = 0.0;
-    cfg.store.jitter = 0.0;
-    cfg
-}
-
-fn server_deps(store: Arc<StoreRouter>) -> ServerDeps {
-    ServerDeps {
-        store,
-        cache: Arc::new(DataCache::new(256 << 20, 8, true)),
-        backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
-        metrics: Registry::new(),
-    }
-}
-
-/// Labels the agent RPC needs: init (push), pool oracle, test truth.
-struct Labels {
-    init: Vec<u8>,
-    pool: Vec<u8>,
-    test: Vec<u8>,
-}
-
-fn dataset(store: &Arc<StoreRouter>, bucket: &str) -> (Manifest, Labels) {
-    let backing: Arc<dyn ObjectStore> =
-        Arc::new(NoopWrap(store.clone())) as Arc<dyn ObjectStore>;
-    let manifest = generate_into_store(&spec(), &backing, "s3sim", bucket);
-    let oracle = Oracle::load(&backing, bucket).unwrap();
-    let ids = |refs: &[alaas::store::SampleRef]| -> Vec<u32> {
-        refs.iter().map(|s| s.id).collect()
-    };
-    let labels = Labels {
-        init: oracle.label(&ids(&manifest.init)),
-        pool: oracle.eval_labels(&ids(&manifest.pool)),
-        test: oracle.eval_labels(&ids(&manifest.test)),
-    };
-    (manifest, labels)
 }
 
 /// The headline fixture config: unreachable target so the loop runs to
@@ -175,52 +111,29 @@ fn assert_trace_parity(got: &PsheaTrace, want: &PsheaTrace, tag: &str) {
     assert!((got.best_accuracy - want.best_accuracy).abs() < 1e-9, "{tag}: best accuracy");
 }
 
-struct SingleHarness {
-    server: AlServer,
-    manifest: Manifest,
-    labels: Labels,
-}
-
-fn single_harness() -> SingleHarness {
-    let cfg = base_config();
-    let store = Arc::new(StoreRouter::new("/tmp", &cfg.store));
-    let (manifest, labels) = dataset(&store, "ag-ds");
-    let server = AlServer::start(cfg, server_deps(store)).expect("server starts");
-    SingleHarness { server, manifest, labels }
-}
-
-struct ClusterHarness {
-    coordinator: Coordinator,
-    coord_metrics: Arc<Registry>,
-    workers: Vec<AlServer>,
-    manifest: Manifest,
-    labels: Labels,
+/// Single-server fixture via the shared harness (no cluster workers).
+fn single_harness() -> ClusterHarness {
+    ClusterHarness::builder()
+        .bucket("ag-ds")
+        .data_seed(DATA_SEED)
+        .sizes(N_INIT, N_POOL, N_TEST)
+        .workers(0)
+        .with_single(true)
+        .build()
 }
 
 fn cluster_harness(n_workers: usize) -> ClusterHarness {
-    let cfg = base_config();
-    let store = Arc::new(StoreRouter::new("/tmp", &cfg.store));
-    let (manifest, labels) = dataset(&store, "ag-cl-ds");
-    let workers: Vec<AlServer> = (0..n_workers)
-        .map(|_| AlServer::start(cfg.clone(), server_deps(store.clone())).unwrap())
-        .collect();
-    let mut coord_cfg = cfg;
-    coord_cfg.cluster.workers = workers.iter().map(|w| w.addr().to_string()).collect();
-    let coord_metrics = Registry::new();
-    let coordinator = Coordinator::start(
-        coord_cfg,
-        CoordinatorDeps {
-            backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
-            metrics: coord_metrics.clone(),
-        },
-    )
-    .unwrap();
-    ClusterHarness { coordinator, coord_metrics, workers, manifest, labels }
+    ClusterHarness::builder()
+        .bucket("ag-cl-ds")
+        .data_seed(DATA_SEED)
+        .sizes(N_INIT, N_POOL, N_TEST)
+        .workers(n_workers)
+        .build()
 }
 
 fn run_remote_job(
     client: &mut AlClient,
-    manifest: &Manifest,
+    manifest: &alaas::store::Manifest,
     labels: &Labels,
     cfg: &PsheaConfig,
 ) -> PsheaTrace {
@@ -241,7 +154,7 @@ fn remote_agent_matches_in_process_pshea_on_single_server() {
     assert_eq!(want.survivors.len(), 1);
 
     let h = single_harness();
-    let mut client = AlClient::connect(&h.server.addr().to_string()).unwrap();
+    let mut client = h.single_client();
     let got = run_remote_job(&mut client, &h.manifest, &h.labels, &agent_cfg());
     assert_trace_parity(&got, &want, "single-server");
 }
@@ -250,16 +163,15 @@ fn remote_agent_matches_in_process_pshea_on_single_server() {
 fn remote_agent_matches_in_process_pshea_on_cluster() {
     let want = in_process_trace();
     let h = cluster_harness(2);
-    let mut client = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
+    let mut client = h.client();
     let got = run_remote_job(&mut client, &h.manifest, &h.labels, &agent_cfg());
     assert_trace_parity(&got, &want, "2-worker coordinator");
-    drop(h.workers);
 }
 
 #[test]
 fn agent_job_edge_cases_unknown_id_and_status_after_completion() {
     let h = single_harness();
-    let mut client = AlClient::connect(&h.server.addr().to_string()).unwrap();
+    let mut client = h.single_client();
 
     // unknown job ids are clean remote errors on every method
     for call in ["agent_status", "agent_result", "agent_cancel"] {
@@ -310,7 +222,7 @@ fn agent_job_edge_cases_unknown_id_and_status_after_completion() {
 #[test]
 fn agent_cancel_mid_run_stops_labeling_spend() {
     let h = single_harness();
-    let mut client = AlClient::connect(&h.server.addr().to_string()).unwrap();
+    let mut client = h.single_client();
     client.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
     // a long job: tiny rounds, no caps except the pool itself
     let cfg = PsheaConfig {
@@ -361,7 +273,7 @@ fn agent_cancel_mid_run_stops_labeling_spend() {
 fn worker_killed_mid_job_redispatches_and_finishes() {
     let want = in_process_trace();
     let mut h = cluster_harness(2);
-    let mut client = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
+    let mut client = h.client();
     client.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
     let job = client
         .agent_start(
@@ -376,8 +288,7 @@ fn worker_killed_mid_job_redispatches_and_finishes() {
     // kill one worker immediately: its shard must be re-dispatched to the
     // survivor and the job must still finish with the exact trace (the
     // top-k merges are shard-layout independent)
-    let dead = h.workers.remove(0);
-    dead.shutdown();
+    h.kill_worker(0);
     let got = client.agent_result(&job, Duration::from_secs(600)).unwrap();
     assert_trace_parity(&got, &want, "kill-mid-job");
 
@@ -401,7 +312,7 @@ fn worker_killed_mid_job_redispatches_and_finishes() {
 #[test]
 fn agent_metrics_flow_on_single_server() {
     let h = single_harness();
-    let mut client = AlClient::connect(&h.server.addr().to_string()).unwrap();
+    let mut client = h.single_client();
     let got = run_remote_job(&mut client, &h.manifest, &h.labels, &agent_cfg());
     assert!(!got.survivors.is_empty());
     let m = client.metrics().unwrap();

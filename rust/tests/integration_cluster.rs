@@ -7,132 +7,49 @@
 //!   candidate-then-refine diversity/hybrid strategies,
 //! * failure-aware scatter-gather: a worker killed after push still
 //!   yields a full-budget selection via shard re-dispatch.
+//!
+//! All topology spawn/kill plumbing lives in the shared
+//! `common::cluster_harness` (ISSUE 5 satellite); membership-enabled
+//! fault-injection scenarios live in `integration_membership.rs`.
+
+mod common;
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
 use alaas::cache::DataCache;
-use alaas::cluster::{worker::register_with, Coordinator, CoordinatorDeps};
-use alaas::config::AlaasConfig;
-use alaas::data::{generate_into_store, DatasetSpec, Oracle};
-use alaas::metrics::Registry;
+use alaas::cluster::worker::register_with;
 use alaas::pipeline::{run_pipeline, PipelineParams};
 use alaas::runtime::backend::ComputeBackend;
 use alaas::runtime::HostBackend;
-use alaas::server::{AlClient, AlServer, ServerDeps, WireMode};
-use alaas::store::{Manifest, ObjectStore, SampleRef, StoreRouter};
+use alaas::server::WireMode;
+use alaas::store::{Manifest, SampleRef};
 use alaas::trainer::LinearHead;
 
-/// Write dataset blobs through the router's s3sim *backing* store (fast
-/// path) while servers read them through s3sim URIs.
-struct NoopWrap(Arc<StoreRouter>);
+use common::cluster_harness::ClusterHarness;
 
-impl ObjectStore for NoopWrap {
-    fn get(&self, key: &str) -> alaas::store::StoreResult<Vec<u8>> {
-        self.0.s3sim_backing().get(key)
-    }
-    fn put(&self, key: &str, data: &[u8]) -> alaas::store::StoreResult<()> {
-        self.0.s3sim_backing().put(key, data)
-    }
-    fn exists(&self, key: &str) -> bool {
-        self.0.s3sim_backing().exists(key)
-    }
-    fn list(&self, prefix: &str) -> alaas::store::StoreResult<Vec<String>> {
-        self.0.s3sim_backing().list(prefix)
-    }
-    fn kind(&self) -> &'static str {
-        "wrap"
-    }
+/// The historical fixture: 60-init dataset, `pool` pool rows, N workers,
+/// plus the single-server reference.
+fn harness(pool: usize, n_workers: usize) -> ClusterHarness {
+    ClusterHarness::builder()
+        .sizes(60, pool, 0)
+        .workers(n_workers)
+        .with_single(true)
+        .build()
 }
 
-struct Harness {
-    coordinator: Coordinator,
-    coord_metrics: Arc<Registry>,
-    workers: Vec<AlServer>,
-    single: AlServer,
-    manifest: Manifest,
-    init_labels: Vec<u8>,
-    store: Arc<StoreRouter>,
-}
-
-fn base_config() -> AlaasConfig {
-    let mut cfg = AlaasConfig::default();
-    cfg.al_worker.host = "127.0.0.1".into();
-    cfg.al_worker.port = 0; // ephemeral
-    cfg.store.get_latency_us = 0;
-    cfg.store.bandwidth_mib_s = 0.0;
-    cfg.store.jitter = 0.0;
-    cfg
-}
-
-fn server_deps(store: Arc<StoreRouter>) -> ServerDeps {
-    ServerDeps {
-        store,
-        cache: Arc::new(DataCache::new(256 << 20, 8, true)),
-        backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
-        metrics: Registry::new(),
-    }
-}
-
-/// One shared store, `n_workers` worker servers + one single server over
-/// the same dataset, and a coordinator wired to the workers (everything
-/// on the default binary data plane).
-fn harness(pool: usize, n_workers: usize) -> Harness {
-    harness_wire(pool, n_workers, WireMode::Binary, WireMode::Binary)
-}
-
-/// Like `harness`, but forcing the coordinator's and the workers' wire
-/// configs independently (the mixed pairs exercise the §Wire negotiation
-/// fallback).
 fn harness_wire(
     pool: usize,
     n_workers: usize,
     coord_wire: WireMode,
     worker_wire: WireMode,
-) -> Harness {
-    harness_custom(pool, n_workers, coord_wire, worker_wire, &|_| {})
-}
-
-/// Full-control variant: `coord_tweak` runs over the coordinator's config
-/// before start (e.g. disabling the connection pool).
-fn harness_custom(
-    pool: usize,
-    n_workers: usize,
-    coord_wire: WireMode,
-    worker_wire: WireMode,
-    coord_tweak: &dyn Fn(&mut AlaasConfig),
-) -> Harness {
-    let mut cfg = base_config();
-    cfg.server.wire = worker_wire;
-    let store = Arc::new(StoreRouter::new("/tmp", &cfg.store));
-    let spec = DatasetSpec::cifarsim(7).with_sizes(60, pool, 0);
-    let backing: Arc<dyn ObjectStore> =
-        Arc::new(NoopWrap(store.clone())) as Arc<dyn ObjectStore>;
-    let manifest = generate_into_store(&spec, &backing, "s3sim", "cl-ds");
-    let oracle = Oracle::load(&backing, "cl-ds").unwrap();
-    let init_ids: Vec<u32> = manifest.init.iter().map(|s| s.id).collect();
-    let init_labels = oracle.label(&init_ids);
-
-    let workers: Vec<AlServer> = (0..n_workers)
-        .map(|_| AlServer::start(cfg.clone(), server_deps(store.clone())).unwrap())
-        .collect();
-    let single = AlServer::start(cfg.clone(), server_deps(store.clone())).unwrap();
-
-    let mut coord_cfg = cfg;
-    coord_cfg.server.wire = coord_wire;
-    coord_cfg.cluster.workers =
-        workers.iter().map(|w| w.addr().to_string()).collect();
-    coord_tweak(&mut coord_cfg);
-    let coord_metrics = Registry::new();
-    let coordinator = Coordinator::start(
-        coord_cfg,
-        CoordinatorDeps {
-            backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
-            metrics: coord_metrics.clone(),
-        },
-    )
-    .unwrap();
-    Harness { coordinator, coord_metrics, workers, single, manifest, init_labels, store }
+) -> ClusterHarness {
+    ClusterHarness::builder()
+        .sizes(60, pool, 0)
+        .workers(n_workers)
+        .with_single(true)
+        .wires(coord_wire, worker_wire)
+        .build()
 }
 
 fn ids(sel: &[SampleRef]) -> Vec<u32> {
@@ -153,10 +70,10 @@ fn assert_valid(sel: &[SampleRef], manifest: &Manifest, budget: usize) {
 #[test]
 fn exact_parity_random_and_uncertainty() {
     let h = harness(320, 4);
-    let mut single = AlClient::connect(&h.single.addr().to_string()).unwrap();
-    let mut cluster = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
-    single.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
-    cluster.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+    let mut single = h.single_client();
+    let mut cluster = h.client();
+    single.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+    cluster.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
     for strategy in [
         "random",
         "least_confidence",
@@ -178,7 +95,7 @@ fn exact_parity_random_and_uncertainty() {
 
 /// Pool embeddings in manifest order (embeddings are trunk-only, so the
 /// untrained head reproduces exactly what the servers computed).
-fn pool_embeddings(h: &Harness) -> alaas::util::mat::Mat {
+fn pool_embeddings(h: &ClusterHarness) -> alaas::util::mat::Mat {
     let cache = DataCache::new(0, 1, false);
     let backend: Arc<dyn ComputeBackend> = Arc::new(HostBackend::new());
     let head = LinearHead::zeros(64, h.manifest.num_classes);
@@ -217,10 +134,10 @@ fn cover_radius(emb: &alaas::util::mat::Mat, rows: &[usize]) -> f32 {
 #[test]
 fn refine_parity_for_diversity_and_hybrid() {
     let h = harness(240, 4);
-    let mut single = AlClient::connect(&h.single.addr().to_string()).unwrap();
-    let mut cluster = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
-    single.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
-    cluster.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+    let mut single = h.single_client();
+    let mut cluster = h.client();
+    single.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+    cluster.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
 
     let emb = pool_embeddings(&h);
     let id_to_row: HashMap<u32, usize> =
@@ -252,12 +169,11 @@ fn refine_parity_for_diversity_and_hybrid() {
 #[test]
 fn worker_death_mid_scan_redispatches() {
     let mut h = harness(180, 3);
-    let mut cluster = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
-    cluster.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+    let mut cluster = h.client();
+    cluster.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
     // kill one worker right after the scatter — its shard may still be
     // scanning; the coordinator must re-dispatch it to a survivor
-    let dead = h.workers.remove(0);
-    dead.shutdown();
+    h.kill_worker(0);
     let (sel, _, _) = cluster.query("s", 40, Some("entropy")).unwrap();
     assert_valid(&sel, &h.manifest, 40);
     // a second query (now fully re-assigned) also works, as does a
@@ -270,51 +186,42 @@ fn worker_death_mid_scan_redispatches() {
 
 #[test]
 fn workers_can_register_dynamically() {
-    let cfg = base_config();
-    let store = Arc::new(StoreRouter::new("/tmp", &cfg.store));
-    let spec = DatasetSpec::cifarsim(9).with_sizes(40, 120, 0);
-    let backing: Arc<dyn ObjectStore> =
-        Arc::new(NoopWrap(store.clone())) as Arc<dyn ObjectStore>;
-    let manifest = generate_into_store(&spec, &backing, "s3sim", "reg-ds");
-    let oracle = Oracle::load(&backing, "reg-ds").unwrap();
-    let init_ids: Vec<u32> = manifest.init.iter().map(|s| s.id).collect();
-    let labels = oracle.label(&init_ids);
-
     // coordinator starts empty; push_data must fail until workers join
-    let coordinator = Coordinator::start(
-        cfg.clone(),
-        CoordinatorDeps {
-            backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
-            metrics: Registry::new(),
-        },
-    )
-    .unwrap();
-    let mut client = AlClient::connect(&coordinator.addr().to_string()).unwrap();
-    let err = client.push_data("s", &manifest, Some(&labels)).unwrap_err();
+    let mut h = ClusterHarness::builder()
+        .bucket("reg-ds")
+        .data_seed(9)
+        .sizes(40, 120, 0)
+        .workers(0)
+        .build();
+    let mut client = h.client();
+    let err = client.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap_err();
     assert!(format!("{err}").contains("no live workers"), "{err}");
 
-    let w1 = AlServer::start(cfg.clone(), server_deps(store.clone())).unwrap();
-    let w2 = AlServer::start(cfg.clone(), server_deps(store.clone())).unwrap();
-    let coord_addr = coordinator.addr().to_string();
-    register_with(&w1.addr().to_string(), &coord_addr).unwrap();
-    register_with(&w2.addr().to_string(), &coord_addr).unwrap();
-    assert_eq!(coordinator.live_workers(), 2);
+    let w1 = h.add_worker_unregistered();
+    let w2 = h.add_worker_unregistered();
+    let coord_addr = h.coord_addr.to_string();
+    register_with(&h.worker_addr(w1), &coord_addr).unwrap();
+    register_with(&h.worker_addr(w2), &coord_addr).unwrap();
+    assert_eq!(h.coordinator().live_workers(), 2);
 
-    client.push_data("s", &manifest, Some(&labels)).unwrap();
+    client.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
     let (sel, _, _) = client.query("s", 20, Some("least_confidence")).unwrap();
-    assert_valid(&sel, &manifest, 20);
+    assert_valid(&sel, &h.manifest, 20);
 
     let status = client.call("cluster_status", alaas::json::Value::Null).unwrap();
     let workers = status.get("workers").unwrap().as_array().unwrap();
     assert_eq!(workers.len(), 2);
     assert!(workers.iter().all(|w| w.get("alive").unwrap().as_bool() == Some(true)));
+    // static fallback: the membership block reports disabled
+    let membership = status.get("membership").unwrap();
+    assert_eq!(membership.get("enabled").unwrap().as_bool(), Some(false));
 }
 
 #[test]
 fn per_shard_metrics_and_straggler_gauge() {
     let h = harness(160, 4);
-    let mut cluster = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
-    cluster.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+    let mut cluster = h.client();
+    cluster.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
     cluster.query("s", 20, Some("entropy")).unwrap();
 
     let snap = h.coord_metrics.snapshot();
@@ -357,10 +264,10 @@ fn wire_mode_parity_and_mixed_pair_fallback() {
     for (coord_wire, worker_wire) in combos {
         let tag = format!("coord={coord_wire:?} worker={worker_wire:?}");
         let h = harness_wire(160, 2, coord_wire, worker_wire);
-        let mut single = AlClient::connect(&h.single.addr().to_string()).unwrap();
-        let mut cluster = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
-        single.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
-        cluster.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+        let mut single = h.single_client();
+        let mut cluster = h.client();
+        single.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+        cluster.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
 
         // exact top-k strategy: must equal the single server bit-for-bit
         let (want, _, _) = single.query("s", 20, Some("entropy")).unwrap();
@@ -412,8 +319,8 @@ fn wire_mode_parity_and_mixed_pair_fallback() {
 #[test]
 fn pooled_scatter_dials_once_per_worker_not_per_rpc() {
     let h = harness(160, 3);
-    let mut cluster = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
-    cluster.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+    let mut cluster = h.client();
+    cluster.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
     for strategy in ["entropy", "random", "k_center_greedy"] {
         let (sel, _, _) = cluster.query("s", 20, Some(strategy)).unwrap();
         assert_valid(&sel, &h.manifest, 20);
@@ -438,13 +345,17 @@ fn pooled_scatter_dials_once_per_worker_not_per_rpc() {
 #[test]
 fn per_call_dialing_matches_pooled_selections() {
     let pooled = harness(200, 3);
-    let per_call = harness_custom(200, 3, WireMode::Binary, WireMode::Binary, &|cfg| {
-        cfg.server.pool.max_idle_per_peer = 0;
-    });
-    let mut a = AlClient::connect(&pooled.coordinator.addr().to_string()).unwrap();
-    let mut b = AlClient::connect(&per_call.coordinator.addr().to_string()).unwrap();
-    a.push_data("s", &pooled.manifest, Some(&pooled.init_labels)).unwrap();
-    b.push_data("s", &per_call.manifest, Some(&per_call.init_labels)).unwrap();
+    let per_call = ClusterHarness::builder()
+        .sizes(60, 200, 0)
+        .workers(3)
+        .coord_tweak(|cfg| {
+            cfg.server.pool.max_idle_per_peer = 0;
+        })
+        .build();
+    let mut a = pooled.client();
+    let mut b = per_call.client();
+    a.push_data("s", &pooled.manifest, Some(&pooled.labels.init)).unwrap();
+    b.push_data("s", &per_call.manifest, Some(&per_call.labels.init)).unwrap();
     for strategy in ["entropy", "least_confidence", "random", "k_center_greedy"] {
         let (x, _, _) = a.query("s", 24, Some(strategy)).unwrap();
         let (y, _, _) = b.query("s", 24, Some(strategy)).unwrap();
@@ -467,10 +378,10 @@ fn per_call_dialing_matches_pooled_selections() {
 #[test]
 fn coordinator_error_paths() {
     let h = harness(60, 2);
-    let mut cluster = AlClient::connect(&h.coordinator.addr().to_string()).unwrap();
+    let mut cluster = h.client();
     let err = cluster.query("nope", 5, None).unwrap_err();
     assert!(format!("{err}").contains("unknown session"), "{err}");
-    cluster.push_data("s", &h.manifest, Some(&h.init_labels)).unwrap();
+    cluster.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
     let err = cluster.query("s", 5, Some("not_a_strategy")).unwrap_err();
     assert!(format!("{err}").contains("unknown strategy"), "{err}");
     let err = cluster.query("s", 5, Some("auto")).unwrap_err();

@@ -1,0 +1,436 @@
+//! Live-membership integration (ISSUE 5; DESIGN.md §Cluster): workers
+//! join, die, wedge, and return mid-session via heartbeat/lease
+//! auto-discovery, and the coordinator rebalances shard ownership with
+//! the rendezvous planner — while selections stay bit-identical to the
+//! single-server reference (the exact-merge protocols are shard-layout
+//! independent). Fault injection comes from the shared
+//! `common::cluster_harness`: abrupt kills, graceful leaves, wedged
+//! processes (heartbeats stop, sockets stay open), scripted faults at
+//! named flow points, and virtual-time lease expiry through the
+//! coordinator's membership clock.
+//!
+//! Acceptance pins:
+//! * membership enabled + no faults ⇒ selections and agent traces
+//!   bit-identical to the static-config cluster and the in-process run;
+//! * a worker killed mid-session ⇒ its shard is redistributed across
+//!   ≥ 2 survivors (per-shard layout + scan metrics) and selections
+//!   still match the single-server reference.
+
+mod common;
+
+use std::time::Duration;
+
+use alaas::server::AlClient;
+
+use common::cluster_harness::{ClusterHarness, FaultAction, FaultPoint};
+
+/// Harness lease geometry (also the defaults in the builder): 50 ms
+/// beats, 60 s lease. Expiry in tests comes from the virtual clock or
+/// keepalive probes — never from a wall-clock race.
+const HB_MS: u64 = 50;
+const LEASE_MS: u64 = 60_000;
+
+fn membership_harness(pool: usize, n_workers: usize, bucket: &str) -> ClusterHarness {
+    ClusterHarness::builder()
+        .bucket(bucket)
+        .sizes(60, pool, 0)
+        .workers(n_workers)
+        .membership(true)
+        .lease(HB_MS, LEASE_MS)
+        .with_single(true)
+        .build()
+}
+
+const UNCERTAINTY: [&str; 5] =
+    ["random", "least_confidence", "margin_confidence", "ratio_confidence", "entropy"];
+
+/// Selection ids from the single-server reference for `strategy`.
+fn single_ids(h: &ClusterHarness, strategy: &str, budget: usize) -> Vec<u32> {
+    let mut c = h.single_client();
+    let (sel, _, _) = c.query("s", budget, Some(strategy)).unwrap();
+    sel.iter().map(|s| s.id).collect()
+}
+
+/// Assert the membership cluster matches the single server on every
+/// layout-independent strategy.
+fn assert_single_parity(h: &mut ClusterHarness, client: &mut AlClient, tag: &str) {
+    for strategy in UNCERTAINTY {
+        let want = single_ids(h, strategy, 40);
+        let got = h.query_ids(client, "s", 40, strategy);
+        assert_eq!(got, want, "{tag}: {strategy} diverged from the single server");
+    }
+}
+
+/// The tier-1 smoke (named in CI): one join and one graceful leave
+/// mid-session, selections exact throughout, rows actually rebalanced.
+#[test]
+fn membership_smoke_join_and_leave() {
+    let mut h = membership_harness(240, 2, "mem-smoke");
+    let mut client = h.client();
+    let mut single = h.single_client();
+    single.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+    h.push(&mut client, "s");
+    assert_single_parity(&mut h, &mut client, "2 workers");
+    let before: Vec<(String, usize)> = h.shard_rows_by_worker("s");
+    assert_eq!(before.len(), 2);
+
+    // -- join: the next query must use the new worker --------------------
+    let w = h.spawn_worker();
+    h.wait_members(3);
+    assert_single_parity(&mut h, &mut client, "after join");
+    let after_join = h.shard_rows_by_worker("s");
+    assert_eq!(after_join.len(), 3, "joiner did not receive a shard");
+    let joiner_rows = after_join
+        .iter()
+        .find(|(addr, _)| *addr == h.worker_addr(w))
+        .map(|(_, rows)| *rows)
+        .unwrap_or(0);
+    assert!(joiner_rows > 0, "joiner owns no rows: {after_join:?}");
+    // incumbents only shrank (minimal moves)
+    for (addr, rows) in &before {
+        let now = after_join.iter().find(|(a, _)| a == addr).map(|(_, r)| *r).unwrap();
+        assert!(now <= *rows, "{addr} grew on an unrelated join");
+    }
+    assert!(h.coord_counter("membership.rebalances") >= 1);
+    assert!(h.coord_counter("membership.moved_rows") as usize >= joiner_rows);
+
+    // -- graceful leave: rows rebalance immediately (no lease wait) ------
+    h.leave_worker(w);
+    h.wait_members(2);
+    assert!(h.coord_counter("membership.deregisters") >= 1);
+    assert_single_parity(&mut h, &mut client, "after leave");
+    let after_leave = h.shard_rows_by_worker("s");
+    assert_eq!(after_leave.len(), 2);
+    assert_eq!(
+        after_leave.iter().map(|(_, r)| r).sum::<usize>(),
+        h.manifest.pool.len(),
+        "rows lost in the rebalance"
+    );
+}
+
+/// Acceptance pin 1: with membership enabled and no faults injected, a
+/// 3-worker cluster produces bit-identical selections to the
+/// static-config cluster (and both to the single server).
+#[test]
+fn no_fault_parity_with_static_config_cluster() {
+    let mut mem = membership_harness(240, 3, "mem-par");
+    let stat = ClusterHarness::builder()
+        .bucket("mem-par")
+        .sizes(60, 240, 0)
+        .workers(3)
+        .build();
+    let mut mc = mem.client();
+    let mut sc = stat.client();
+    let mut single = mem.single_client();
+    single.push_data("s", &mem.manifest, Some(&mem.labels.init)).unwrap();
+    mem.push(&mut mc, "s");
+    sc.push_data("s", &stat.manifest, Some(&stat.labels.init)).unwrap();
+    for strategy in UNCERTAINTY {
+        let want = single_ids(&mem, strategy, 40);
+        let got_mem = mem.query_ids(&mut mc, "s", 40, strategy);
+        let (got_stat, _, _) = sc.query("s", 40, Some(strategy)).unwrap();
+        let got_stat: Vec<u32> = got_stat.iter().map(|s| s.id).collect();
+        assert_eq!(got_mem, want, "{strategy}: membership != single");
+        assert_eq!(got_mem, got_stat, "{strategy}: membership != static config");
+    }
+    // no faults ⇒ no rebalances, stable generation (3 joins)
+    assert_eq!(mem.coord_counter("membership.rebalances"), 0);
+    assert_eq!(mem.coord_counter("membership.live_workers"), 3);
+    assert_eq!(mem.coord_counter("membership.expirations"), 0);
+}
+
+/// Acceptance pin 1b: the server-side PSHEA agent produces the exact
+/// in-process trace on a membership-enabled cluster (arm scatters run
+/// against the versioned view; exact-merge arms are layout-independent).
+#[test]
+fn no_fault_agent_trace_parity() {
+    use alaas::agent::{run_pshea, PsheaConfig};
+    use alaas::data::{generate, DatasetSpec};
+    use alaas::runtime::backend::ComputeBackend;
+    use alaas::runtime::HostBackend;
+    use alaas::sim::AlExperiment;
+    use alaas::trainer::TrainConfig;
+    use std::sync::Arc;
+
+    let spec = DatasetSpec::cifarsim(7).with_sizes(60, 240, 120);
+    let cfg = PsheaConfig {
+        target_accuracy: 2.0,
+        max_budget: 1_000_000,
+        round_budget: 20,
+        converge_rounds: 0,
+        converge_eps: 0.0,
+        max_rounds: 4,
+        min_history: 2,
+        initial_accuracy: None,
+    };
+    let arms: Vec<String> =
+        ["least_confidence", "margin_confidence", "entropy"].map(String::from).to_vec();
+    let want = {
+        let gen = generate(&spec);
+        let backend: Arc<dyn ComputeBackend> = Arc::new(HostBackend::new());
+        let mut exp = AlExperiment::from_generated(
+            backend,
+            &gen,
+            spec.num_classes,
+            TrainConfig::default(),
+            4242,
+        )
+        .unwrap();
+        run_pshea(&mut exp, &arms, &cfg).unwrap()
+    };
+
+    let mut h = ClusterHarness::builder()
+        .bucket("mem-ag")
+        .sizes(60, 240, 120)
+        .workers(2)
+        .membership(true)
+        .lease(HB_MS, LEASE_MS)
+        .build();
+    let mut client = h.client();
+    h.push(&mut client, "s");
+    let job = client
+        .agent_start("s", &arms, &cfg, &h.labels.pool, &h.labels.test, 4242)
+        .unwrap();
+    let got = client.agent_result(&job, Duration::from_secs(600)).unwrap();
+    assert_eq!(got.stop, want.stop, "stop reason");
+    assert_eq!(got.rounds, want.rounds, "rounds-to-stop");
+    assert_eq!(got.survivors, want.survivors, "surviving strategy");
+    assert_eq!(got.total_budget, want.total_budget, "budget spent");
+    for (a, b) in got.records.iter().zip(&want.records) {
+        assert!(
+            (a.accuracy - b.accuracy).abs() < 1e-9,
+            "round {} {} accuracy {} vs {}",
+            a.round,
+            a.strategy,
+            a.accuracy,
+            b.accuracy
+        );
+    }
+}
+
+/// Acceptance pin 2: a worker killed mid-session is evicted (keepalive
+/// probe on the suspect half of its lease) and its shard is
+/// redistributed across **both** survivors — not dumped on one — while
+/// selections keep matching the single-server reference.
+#[test]
+fn dead_worker_shard_splits_across_survivors() {
+    let mut h = membership_harness(240, 3, "mem-kill");
+    let mut client = h.client();
+    let mut single = h.single_client();
+    single.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+    h.push(&mut client, "s");
+    let before = h.shard_rows_by_worker("s");
+    assert_eq!(before.len(), 3);
+    let dead_addr = h.worker_addr(0);
+    let dead_rows =
+        before.iter().find(|(a, _)| *a == dead_addr).map(|(_, r)| *r).unwrap();
+    assert!(dead_rows > 0);
+
+    h.kill_worker(0);
+    // age every lease into the suspect half: the next sweep probes all
+    // members, survivors pass, the dead socket fails and is evicted —
+    // before any query pays a scatter dial timeout
+    h.advance_time_ms(LEASE_MS / 2 + 1);
+    h.wait_member_gone(&dead_addr);
+    h.wait_members(2);
+    assert!(
+        h.coord_counter("membership.probe_evictions")
+            + h.coord_counter("membership.evictions")
+            >= 1,
+        "dead worker never evicted"
+    );
+
+    // next query rebalances: the dead shard splits across BOTH survivors
+    assert_single_parity(&mut h, &mut client, "after kill");
+    let after = h.shard_rows_by_worker("s");
+    assert_eq!(after.len(), 2, "expected 2 shards after the kill: {after:?}");
+    let mut gained = 0;
+    for (addr, rows) in &after {
+        let was = before.iter().find(|(a, _)| a == addr).map(|(_, r)| *r).unwrap();
+        assert!(*rows > was, "{addr} gained nothing from the dead shard");
+        gained += rows - was;
+    }
+    assert_eq!(gained, dead_rows, "dead worker's rows were not fully redistributed");
+    // per-shard scan metrics: both surviving shard positions rescanned
+    let snap = h.coord_metrics.snapshot();
+    let hists = snap.get("histograms").unwrap();
+    for i in 0..2 {
+        let name = format!("cluster.shard{i}.scan");
+        assert!(
+            hists.get(&name).and_then(|s| s.get("count")).and_then(|c| c.as_i64()).unwrap_or(0)
+                >= 1,
+            "{name} never recorded after the rebalance"
+        );
+    }
+    assert!(h.coord_counter("membership.rebalances") >= 1);
+    assert!(h.coord_counter("membership.moved_rows") as usize >= dead_rows);
+}
+
+/// A worker killed *at the moment a query is issued* (scripted fault at
+/// the named BeforeQuery point): whichever path races first — in-flight
+/// shard re-dispatch against the pinned layout, or eviction + rebalance
+/// — the selection must equal the single server's.
+#[test]
+fn kill_at_query_point_keeps_selection_exact() {
+    let mut h = membership_harness(200, 3, "mem-script");
+    let mut client = h.client();
+    let mut single = h.single_client();
+    single.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+    h.push(&mut client, "s");
+    let want = single_ids(&h, "entropy", 40);
+
+    h.script(FaultPoint::BeforeQuery, FaultAction::Kill(0));
+    let got = h.query_ids(&mut client, "s", 40, "entropy");
+    assert_eq!(got, want, "kill at BeforeQuery changed the selection");
+    // once the view settles, the layout is fully rebalanced and still exact
+    h.advance_time_ms(LEASE_MS / 2 + 1);
+    h.wait_members(2);
+    let got = h.query_ids(&mut client, "s", 40, "entropy");
+    assert_eq!(got, want, "post-eviction selection diverged");
+}
+
+/// A *wedged* worker (process alive, heartbeats stopped) passes
+/// keepalive probes — only virtual-time lease expiry can evict it. After
+/// resuming, it re-joins as a fresh member and takes back a slice.
+#[test]
+fn hung_worker_expires_via_virtual_time_then_rejoins() {
+    let mut h = membership_harness(200, 3, "mem-hang");
+    let mut client = h.client();
+    let mut single = h.single_client();
+    single.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+    h.push(&mut client, "s");
+    let hung_addr = h.worker_addr(0);
+
+    h.hang_worker(0);
+    // jump past the full lease: the hung worker cannot renew, so the
+    // sweep expires it. (Live workers are transiently expired too and
+    // re-join on their next beat within ~one heartbeat — the flap is
+    // absorbed by waiting for the view to settle.)
+    h.advance_time_ms(LEASE_MS + 1);
+    h.wait_member_gone(&hung_addr);
+    h.wait_members(2);
+    assert!(h.coord_counter("membership.expirations") >= 1, "lease never expired");
+    assert_single_parity(&mut h, &mut client, "hung worker evicted");
+    // the wedged process is still alive — it was evicted by lease, not
+    // by a dead socket
+    AlClient::connect(&hung_addr).unwrap().ping().unwrap();
+
+    // recovery: heartbeats resume, the worker re-joins, rows come back
+    h.resume_worker(0);
+    h.wait_members(3);
+    assert_single_parity(&mut h, &mut client, "hung worker rejoined");
+    let layout = h.shard_rows_by_worker("s");
+    assert!(
+        layout.iter().any(|(a, r)| *a == hung_addr && *r > 0),
+        "rejoined worker owns no rows: {layout:?}"
+    );
+}
+
+/// Coordinator restart: the workers' heartbeat loops keep beating at the
+/// old address, re-register with the new process on their own, and a
+/// re-pushed session serves exact selections again.
+#[test]
+fn coordinator_restart_workers_reregister() {
+    let mut h = membership_harness(160, 2, "mem-coord-restart");
+    let mut client = h.client();
+    let mut single = h.single_client();
+    single.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+    h.push(&mut client, "s");
+    assert_single_parity(&mut h, &mut client, "before restart");
+
+    h.restart_coordinator();
+    // rediscovery is automatic: no register calls, no static config
+    h.wait_members(2);
+    let mut client = h.client();
+    // sessions died with the coordinator; a re-push restores service
+    let err = client.query("s", 10, Some("entropy")).unwrap_err();
+    assert!(format!("{err}").contains("unknown session"), "{err}");
+    h.push(&mut client, "s");
+    assert_single_parity(&mut h, &mut client, "after restart");
+}
+
+/// The membership RPC surface and its metrics, pinned: heartbeat,
+/// members (generation + leases), deregister of an unknown address, the
+/// membership gauges, and — the ISSUE 5 pool satellite — keepalive
+/// probes counting under `pool.keepalive_probes`, never `pool.dials`.
+#[test]
+fn heartbeat_members_rpcs_and_metrics_pins() {
+    let mut h = membership_harness(160, 2, "mem-rpc");
+    let mut client = h.client();
+    h.push(&mut client, "s");
+    h.query_ids(&mut client, "s", 20, "entropy");
+
+    // members: generation-numbered view with live leases
+    let (generation, members) = h.members_view();
+    assert!(generation >= 2, "two joins must have bumped the generation");
+    assert_eq!(members.len(), 2);
+    let v = client.members().unwrap();
+    assert_eq!(v.get("enabled").unwrap().as_bool(), Some(true));
+    for e in v.get("members").unwrap().as_array().unwrap() {
+        let left = e.get("lease_ms_left").unwrap().as_usize().unwrap();
+        assert!(left > 0, "live member with an expired lease in `members`");
+    }
+
+    // heartbeat on a live member: renewal, not a join; same generation
+    let g = client.heartbeat(&h.worker_addr(0)).unwrap();
+    assert_eq!(g, generation, "a renewal must not bump the generation");
+    // deregister of a stranger is a clean no-op
+    assert!(!client.deregister("127.0.0.1:9").unwrap());
+
+    // gauges + counters
+    assert!(h.coord_counter("membership.heartbeats") >= 3);
+    assert_eq!(h.coord_counter("membership.joins"), 2);
+    assert_eq!(h.coord_counter("membership.generation"), generation);
+    assert_eq!(h.coord_counter("membership.live_workers"), 2);
+
+    // keepalive probes: age the leases into the suspect half, sweep, and
+    // verify probes ran without touching pool.dials (the PR 4 pin's
+    // invariant survives health checking)
+    let dials_before = h.coord_counter("pool.dials");
+    h.advance_time_ms(LEASE_MS / 2 + 1);
+    h.tick();
+    assert!(
+        h.coord_counter("pool.keepalive_probes") >= 1,
+        "suspect members were never probed"
+    );
+    assert_eq!(
+        h.coord_counter("pool.dials"),
+        dials_before,
+        "keepalive probes leaked into pool.dials"
+    );
+    h.wait_members(2); // probes passed: nobody was evicted
+    assert_eq!(h.coord_counter("membership.probe_evictions"), 0);
+
+    // worker-side heartbeat metrics are visible over the worker's own
+    // metrics RPC
+    let m = AlClient::connect(&h.worker_addr(0)).unwrap().metrics().unwrap();
+    let hb = m
+        .get("counters")
+        .and_then(|c| c.get("membership.worker.heartbeats"))
+        .and_then(|v| v.as_i64())
+        .unwrap_or(0);
+    assert!(hb >= 1, "worker never recorded a successful heartbeat");
+}
+
+/// Static-config interop: a `--discover` worker pointed at a coordinator
+/// with membership *disabled* still registers (heartbeat degrades to
+/// `register`), so mixed fleets keep working.
+#[test]
+fn heartbeat_degrades_to_register_when_membership_disabled() {
+    let mut h = ClusterHarness::builder()
+        .bucket("mem-fallback")
+        .sizes(40, 120, 0)
+        .workers(0)
+        .build();
+    let w = h.add_worker_unregistered();
+    let mut client = h.client();
+    let g = client.heartbeat(&h.worker_addr(w)).unwrap();
+    assert_eq!(g, 0, "disabled membership reports generation 0");
+    assert_eq!(h.coordinator().live_workers(), 1);
+    h.push(&mut client, "s");
+    let sel = h.query_ids(&mut client, "s", 15, "least_confidence");
+    assert_eq!(sel.len(), 15);
+    let v = client.members().unwrap();
+    assert_eq!(v.get("enabled").unwrap().as_bool(), Some(false));
+    assert_eq!(v.get("members").unwrap().as_array().unwrap().len(), 1);
+}
