@@ -46,6 +46,7 @@ fn start_echo_server() -> String {
                     "bench",
                     &shutdown,
                     &metrics,
+                    None,
                     WireMode::Binary,
                     |method, params, _mode| match method {
                         "hello" => {

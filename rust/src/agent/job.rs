@@ -89,6 +89,10 @@ pub struct AgentTask<S: ArmSelect> {
     train_cfg: TrainConfig,
     seed: u64,
     cancel: Option<Arc<AtomicBool>>,
+    /// When set, every arm round runs under an `agent.round` root span
+    /// annotated with the arm/round ids (DESIGN.md §Observability), so
+    /// the scatter RPCs the round issues assemble under one trace.
+    tracer: Option<Arc<crate::trace::Tracer>>,
     baseline: Option<LinearHead>,
     arms: BTreeMap<String, ArmState>,
 }
@@ -123,9 +127,17 @@ impl<S: ArmSelect> AgentTask<S> {
             train_cfg: TrainConfig::default(),
             seed,
             cancel,
+            tracer: None,
             baseline: None,
             arms: BTreeMap::new(),
         }
+    }
+
+    /// Trace each arm round (and the selection RPCs it fans out) under a
+    /// per-round root span.
+    pub fn with_tracer(mut self, tracer: Arc<crate::trace::Tracer>) -> AgentTask<S> {
+        self.tracer = Some(tracer);
+        self
     }
 
     /// Head trained on the init split only (Algorithm 1 line 5) — every
@@ -150,6 +162,14 @@ impl<S: ArmSelect> AlTask for AgentTask<S> {
         if self.cancel.as_ref().is_some_and(|c| c.load(Ordering::SeqCst)) {
             return Err(RuntimeError::Pool(CANCELLED.into()));
         }
+        // per-round root span: the selection RPCs this round fans out
+        // inherit its context through the thread-local slot
+        let tracer = self.tracer.clone();
+        let mut span = tracer.as_deref().map(|t| t.root("agent.round"));
+        if let Some(g) = span.as_mut() {
+            g.annotate("arm", strategy);
+            g.annotate("budget", budget);
+        }
         let base = self.baseline_head()?;
         self.arms.entry(strategy.to_string()).or_insert_with(|| ArmState {
             labeled: vec![],
@@ -172,6 +192,9 @@ impl<S: ArmSelect> AlTask for AgentTask<S> {
             (arm.head.clone(), arm.labeled.clone(), arm_mat, arm.rounds)
         };
         let seed = super::arm_round_seed(self.seed, n_prev);
+        if let Some(g) = span.as_mut() {
+            g.annotate("round", n_prev);
+        }
         let picked = self
             .sel
             .select_arm(strategy, budget, &head, &exclude, &arm_mat, seed)

@@ -119,6 +119,10 @@ struct ClusterSession {
 struct CoordState {
     config: AlaasConfig,
     deps: CoordinatorDeps,
+    /// Distributed-tracing plane (DESIGN.md §Observability). The pool
+    /// shares it so worker replies' piggybacked span subtrees land in
+    /// the coordinator ring, assembling one end-to-end tree per request.
+    tracer: Arc<crate::trace::Tracer>,
     workers: Mutex<Vec<WorkerSlot>>,
     sessions: Mutex<HashMap<String, Arc<Mutex<ClusterSession>>>>,
     /// Monotonic push counter feeding `ClusterSession::epoch`.
@@ -167,12 +171,18 @@ impl Coordinator {
         // worker connections: dial + negotiate once per worker, reuse
         // across every scatter (connect timeout matches the old per-call
         // dial so dead-worker detection latency is unchanged)
+        crate::util::logger::set_format_from_config(&config.observability.log_format);
+        let tracer = Arc::new(crate::trace::Tracer::new(
+            config.observability.trace,
+            config.observability.slow_query_ms,
+        ));
         let conn_pool = ConnPool::new(
             config.server.pool.clone(),
             config.server.wire,
             Some(deps.metrics.clone()),
         )
-        .with_timeouts(WORKER_DIAL_TIMEOUT, POLL_RPC_TIMEOUT);
+        .with_timeouts(WORKER_DIAL_TIMEOUT, POLL_RPC_TIMEOUT)
+        .with_tracer(tracer.clone());
         let clock = MsClock::new();
         let mut mem = Membership::new();
         if config.cluster.membership.enabled {
@@ -187,6 +197,7 @@ impl Coordinator {
         let state = Arc::new(CoordState {
             config,
             deps,
+            tracer,
             workers: Mutex::new(workers),
             sessions: Mutex::new(HashMap::new()),
             push_epoch: std::sync::atomic::AtomicU64::new(0),
@@ -318,6 +329,7 @@ fn handle_conn(mut stream: TcpStream, state: Arc<CoordState>) {
         "cluster",
         &state.shutdown,
         &state.deps.metrics,
+        Some(&state.tracer),
         state.config.server.wire,
         |method, params, _mode| dispatch(&state, method, params),
     );
@@ -343,6 +355,16 @@ fn dispatch(
         "status" => status(state, &params.value).map(Payload::json),
         "query" => query(state, &params.value).map(Payload::json),
         "metrics" => Ok(Payload::json(state.deps.metrics.snapshot())),
+        "metrics_text" => Ok(Payload::json(Value::from(
+            crate::metrics::render_prometheus(&state.deps.metrics.snapshot()),
+        ))),
+        // trace plane (DESIGN.md §Observability)
+        "trace_recent" => {
+            Ok(Payload::json(crate::trace::rpc_recent(&state.tracer, &params.value)))
+        }
+        "trace_get" => {
+            crate::trace::rpc_get(&state.tracer, &params.value).map(Payload::json)
+        }
         "strategies" => Ok(Payload::json(Value::Array(
             strategies::zoo_names().into_iter().map(Value::from).collect(),
         ))),
@@ -931,6 +953,9 @@ fn push_data(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> {
 
     // Scatter every shard concurrently; a refused shard walks the
     // remaining live workers before giving up.
+    let mut sg = state.tracer.child("scatter");
+    sg.annotate("shards", srefs.len());
+    let ctx = sg.ctx();
     let outcomes: Vec<Result<usize, String>> = std::thread::scope(|sc| {
         let handles: Vec<_> = srefs
             .iter()
@@ -938,7 +963,16 @@ fn push_data(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> {
                 let (manifest, init_labels, session) =
                     (&manifest, &init_labels, session_id.as_str());
                 sc.spawn(move || {
-                    dispatch_shard(state, session, epoch, sref, manifest, init_labels.as_deref())
+                    let mut g = state.tracer.child_of(ctx, "shard.push");
+                    g.annotate("shard", sref.shard);
+                    let r = dispatch_shard(
+                        state, session, epoch, sref, manifest, init_labels.as_deref(),
+                    );
+                    match &r {
+                        Ok(slot) => g.annotate("worker", slot),
+                        Err(e) => g.annotate("error", e),
+                    }
+                    r
                 })
             })
             .collect();
@@ -947,6 +981,7 @@ fn push_data(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> {
             .map(|h| h.join().unwrap_or_else(|_| Err("dispatch panicked".into())))
             .collect()
     });
+    drop(sg);
 
     let mut ok: Vec<(ShardRef, usize)> = Vec::new();
     let mut first_err = None;
@@ -1362,15 +1397,30 @@ fn scatter_jobs(
     strategy: &str,
     wait_ms: u64,
 ) -> Result<Vec<ShardReply>, String> {
+    let mut sg = state.tracer.child("scatter");
+    sg.annotate("shards", jobs.len());
+    // spawned shard threads don't inherit the thread-local span context:
+    // hand each one the scatter span's ctx explicitly
+    let ctx = sg.ctx();
     let replies: Vec<Result<ShardReply, String>> = std::thread::scope(|sc| {
         let handles: Vec<_> = jobs
             .iter()
             .map(|job| {
                 sc.spawn(move || {
-                    select_on_shard(
+                    let mut g = state.tracer.child_of(ctx, "shard.select");
+                    g.annotate("shard", job.sref.shard);
+                    let r = select_on_shard(
                         state, session_id, epoch, job, manifest, init_labels, strategy,
                         wait_ms,
-                    )
+                    );
+                    match &r {
+                        Ok(rep) => {
+                            g.annotate("worker", rep.worker);
+                            g.annotate("scan_ms", format!("{:.1}", rep.scan_ms));
+                        }
+                        Err(e) => g.annotate("error", e),
+                    }
+                    r
                 })
             })
             .collect();
@@ -1441,6 +1491,7 @@ fn scatter_jobs(
     if !out.is_empty() {
         let straggler_ms = (scan_max - scan_min).max(0.0) as u64;
         state.deps.metrics.gauge_set("cluster.scan.straggler_ms", straggler_ms);
+        sg.annotate("straggler_ms", straggler_ms);
     }
     Ok(out)
 }
@@ -1513,6 +1564,9 @@ fn query(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
 
     // merge
     let t0 = Instant::now();
+    let mut mg = state.tracer.child("merge");
+    mg.annotate("strategy", &strategy_name);
+    mg.annotate("budget", budget);
     let picked_global: Vec<usize> = match kind {
         MergeKind::ExactTopK { ascending, .. } => {
             let cands: Vec<(usize, f32)> = shard_replies
@@ -1565,6 +1619,8 @@ fn query(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
             }
         }
     };
+    mg.annotate("selected", picked_global.len());
+    drop(mg);
     let select_elapsed = t0.elapsed();
     state.deps.metrics.time("al.select", select_elapsed);
     state.deps.metrics.meter("al.selected").add(picked_global.len() as u64);
@@ -1724,6 +1780,9 @@ fn maybe_rebalance(
                 )
             })
             .collect();
+        let mut rg = state.tracer.child("rebalance");
+        rg.annotate("pushes", pushes.len());
+        let ctx = rg.ctx();
         let outcomes: Vec<Result<(usize, usize), String>> = std::thread::scope(|sc| {
             let handles: Vec<_> = pushes
                 .iter()
@@ -1731,7 +1790,9 @@ fn maybe_rebalance(
                     let (pos, manifest, init_labels) =
                         (*pos, &plan.manifest, &plan.init_labels);
                     sc.spawn(move || {
-                        dispatch_shard(
+                        let mut g = state.tracer.child_of(ctx, "shard.rescan");
+                        g.annotate("shard", pos);
+                        let r = dispatch_shard(
                             state,
                             session_id,
                             plan.epoch,
@@ -1739,7 +1800,12 @@ fn maybe_rebalance(
                             manifest,
                             init_labels.as_deref(),
                         )
-                        .map(|slot| (pos, slot))
+                        .map(|slot| (pos, slot));
+                        match &r {
+                            Ok((_, slot)) => g.annotate("worker", slot),
+                            Err(e) => g.annotate("error", e),
+                        }
+                        r
                     })
                 })
                 .collect();
@@ -2034,6 +2100,8 @@ impl ClusterArmSelect {
         if picked.is_empty() {
             return Ok(vec![]);
         }
+        let mut g = self.state.tracer.child("fetch_embeddings");
+        g.annotate("rows", picked.len());
         let mut where_of: HashMap<usize, (usize, usize)> = HashMap::new();
         for (si, sref) in specs.iter().enumerate() {
             for (l, g) in sref.indices.iter().enumerate() {
@@ -2361,7 +2429,8 @@ fn agent_start(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> 
                 num_classes,
                 p.seed,
                 Some(job_slot.cancel.clone()),
-            );
+            )
+            .with_tracer(bg.tracer.clone());
             crate::log_info!(
                 "cluster",
                 "agent job {jid} started on '{session_id}' ({} arms across shards)",

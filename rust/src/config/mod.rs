@@ -283,6 +283,27 @@ impl Default for CacheConfig {
     }
 }
 
+/// `observability.*` — tracing and log-output knobs (DESIGN.md
+/// §Observability).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObservabilityConfig {
+    /// Span tracing on/off. Off leaves only an inert atomic check on the
+    /// request path (<5% micro-hot-path overhead, pinned by test).
+    pub trace: bool,
+    /// Requests whose root span lasts at least this long are retained
+    /// verbatim in the slow-query log (0 disables capture).
+    pub slow_query_ms: u64,
+    /// Log line format: `text` or `json`. The `ALAAS_LOG_FORMAT` env var
+    /// outranks this.
+    pub log_format: String,
+}
+
+impl Default for ObservabilityConfig {
+    fn default() -> Self {
+        ObservabilityConfig { trace: true, slow_query_ms: 500, log_format: "text".into() }
+    }
+}
+
 /// Root config (Fig 2's `example.yml`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct AlaasConfig {
@@ -294,6 +315,7 @@ pub struct AlaasConfig {
     pub cache: CacheConfig,
     pub cluster: ClusterConfig,
     pub server: ServerConfig,
+    pub observability: ObservabilityConfig,
     /// Directory holding `manifest.json` + `*.hlo.txt` from `make artifacts`.
     pub artifacts_dir: String,
 }
@@ -309,6 +331,7 @@ impl Default for AlaasConfig {
             cache: CacheConfig::default(),
             cluster: ClusterConfig::default(),
             server: ServerConfig::default(),
+            observability: ObservabilityConfig::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -517,6 +540,20 @@ impl AlaasConfig {
             }
         }
 
+        if let Some(s) = v.get("observability") {
+            let c = &mut cfg.observability;
+            if let Some(x) = s.get("trace") {
+                c.trace =
+                    x.as_bool().ok_or_else(|| cerr("observability.trace", "expected bool"))?;
+            }
+            if let Some(x) = s.get("slow_query_ms") {
+                c.slow_query_ms = req_usize(x, "observability.slow_query_ms")? as u64;
+            }
+            if let Some(x) = s.get("log_format") {
+                c.log_format = req_str(x, "observability.log_format")?;
+            }
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -597,6 +634,13 @@ impl AlaasConfig {
             return Err(cerr(
                 "server.pool.idle_timeout_ms",
                 "must be >= 1 (set pool.max_idle_per_peer: 0 to disable reuse instead)",
+            ));
+        }
+        let fmt = self.observability.log_format.as_str();
+        if crate::util::logger::Format::parse(fmt).is_none() {
+            return Err(cerr(
+                "observability.log_format",
+                format!("unknown log format '{fmt}' (text|json)"),
             ));
         }
         Ok(())
@@ -821,6 +865,42 @@ cluster:
         )
         .unwrap_err();
         assert_eq!(e.field, "server.pool.max_idle_per_peer");
+    }
+
+    #[test]
+    fn parses_observability_section() {
+        let cfg = AlaasConfig::from_yaml_str(
+            r#"
+observability:
+  trace: false
+  slow_query_ms: 250
+  log_format: json
+"#,
+        )
+        .unwrap();
+        let o = &cfg.observability;
+        assert!(!o.trace);
+        assert_eq!(o.slow_query_ms, 250);
+        assert_eq!(o.log_format, "json");
+        // defaults: tracing on, 500ms slow-query threshold, text logs
+        let d = AlaasConfig::default().observability;
+        assert!(d.trace);
+        assert_eq!(d.slow_query_ms, 500);
+        assert_eq!(d.log_format, "text");
+    }
+
+    #[test]
+    fn observability_validation() {
+        let e = AlaasConfig::from_yaml_str("observability:\n  log_format: xml\n").unwrap_err();
+        assert_eq!(e.field, "observability.log_format");
+        let e = AlaasConfig::from_yaml_str("observability:\n  trace: 3\n").unwrap_err();
+        assert_eq!(e.field, "observability.trace");
+        let e =
+            AlaasConfig::from_yaml_str("observability:\n  slow_query_ms: \"fast\"\n").unwrap_err();
+        assert_eq!(e.field, "observability.slow_query_ms");
+        // slow_query_ms: 0 legitimately disables slow-query capture
+        let cfg = AlaasConfig::from_yaml_str("observability:\n  slow_query_ms: 0\n").unwrap();
+        assert_eq!(cfg.observability.slow_query_ms, 0);
     }
 
     #[test]

@@ -21,6 +21,7 @@ pub mod data;
 pub mod json;
 pub mod store;
 pub mod metrics;
+pub mod trace;
 pub mod pipeline;
 pub mod runtime;
 pub mod server;

@@ -38,7 +38,7 @@ const SCHEMA: Schema = Schema {
         "config", "dataset", "out", "seed", "pool", "init", "test", "budget",
         "strategy", "target", "max-budget", "round-budget", "addr", "session",
         "backend", "replicas", "rounds", "role", "coordinator", "discover",
-        "remote",
+        "remote", "id", "limit",
     ],
     bool_flags: &["verbose", "quiet"],
 };
@@ -61,6 +61,7 @@ fn main() {
         "gen-data" => cmd_gen_data(&args),
         "query" => cmd_query(&args),
         "agent" => cmd_agent(&args),
+        "trace" => cmd_trace(&args),
         "strategies" => {
             for s in alaas::strategies::zoo_names() {
                 println!("{s}");
@@ -80,7 +81,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: alaas <serve|gen-data|query|agent|strategies|help> [flags]\n\
+    "usage: alaas <serve|gen-data|query|agent|trace|strategies|help> [flags]\n\
      serve      --config <yml> [--role single|worker|coordinator] [--coordinator host:port]\n\
      \u{20}          [--discover host:port] = join the coordinator via heartbeat/lease\n\
      \u{20}          membership ([cluster.membership] config) instead of a one-shot register\n\
@@ -90,6 +91,9 @@ fn usage() -> &'static str {
      agent      --dataset <name> [--target A --max-budget N --round-budget N --backend host|pjrt --rounds N]\n\
      \u{20}          [--remote <host:port>] = run PSHEA as a server-side job (agent_start RPC;\n\
      \u{20}          on a coordinator the arms fan out across worker shards)\n\
+     trace      --addr <host:port> [--id <hex-trace-id>] [--limit N]\n\
+     \u{20}          without --id: list recent trace roots + the slow-query log;\n\
+     \u{20}          with --id: render that trace's span tree with per-stage self-times\n\
      strategies"
 }
 
@@ -310,6 +314,55 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
     if selected.len() > 10 {
         println!("  ... {} more", selected.len() - 10);
     }
+    Ok(())
+}
+
+/// `trace --addr <host:port> [--id <hex>] [--limit N]`: the queryable
+/// trace plane (DESIGN.md §Observability). Without `--id` it lists the
+/// newest trace roots and the slow-query log; with `--id` it fetches the
+/// assembled end-to-end span tree (worker subtrees included) and renders
+/// it with per-stage self-times.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    use alaas::json::Value;
+    let addr = args.get("addr").ok_or_else(|| anyhow::anyhow!("--addr required"))?;
+    let mut client = AlClient::connect(addr)?;
+    if let Some(raw) = args.get("id") {
+        let id = u64::from_str_radix(raw.trim_start_matches("0x"), 16)
+            .map_err(|_| anyhow::anyhow!("bad trace id '{raw}' (hex, as logs print it)"))?;
+        let spans = client.trace_get(id)?;
+        if spans.is_empty() {
+            return Err(anyhow::anyhow!(
+                "trace {id:012x} not found on {addr} (evicted, or never recorded)"
+            ));
+        }
+        print!("{}", alaas::trace::render_tree(&spans));
+        return Ok(());
+    }
+    let v = client.trace_recent(args.get_usize("limit", 0)?)?;
+    if !v.get("enabled").and_then(Value::as_bool).unwrap_or(false) {
+        println!("tracing is disabled on {addr} ([observability] trace = false)");
+    }
+    let roots = v.get("roots").and_then(Value::as_array).unwrap_or(&[]);
+    println!("{} recent trace roots on {addr}:", roots.len());
+    for r in roots {
+        let id = r.get("trace").and_then(Value::as_i64).unwrap_or(0) as u64;
+        let name = r.get("name").and_then(Value::as_str).unwrap_or("?");
+        let dur = r.get("dur_us").and_then(Value::as_usize).unwrap_or(0);
+        println!("  {id:012x}  {name}  {dur}us");
+    }
+    let slow = v.get("slow").and_then(Value::as_array).unwrap_or(&[]);
+    if !slow.is_empty() {
+        let thresh = v.get("slow_query_ms").and_then(Value::as_usize).unwrap_or(0);
+        println!("slow queries (root span > {thresh}ms, retained verbatim):");
+        for e in slow {
+            let id = e.get("trace").and_then(Value::as_i64).unwrap_or(0) as u64;
+            let name = e.get("name").and_then(Value::as_str).unwrap_or("?");
+            let dur = e.get("dur_ms").and_then(Value::as_usize).unwrap_or(0);
+            let spans = e.get("spans").and_then(Value::as_usize).unwrap_or(0);
+            println!("  {id:012x}  {name}  {dur}ms ({spans} spans)");
+        }
+    }
+    println!("inspect one with: alaas trace --addr {addr} --id <hex-trace-id>");
     Ok(())
 }
 

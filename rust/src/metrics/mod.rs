@@ -121,31 +121,90 @@ impl Default for Histogram {
     }
 }
 
-/// Items/sec over the meter's lifetime.
+/// Seconds of trailing history a meter keeps for its windowed rate.
+const WIN_SECS: usize = 60;
+
+/// One-second window bucket: `sec` is the absolute second (since the
+/// meter started) the bucket currently belongs to, `n` its event count.
+struct WinBucket {
+    sec: AtomicU64,
+    n: AtomicU64,
+}
+
+/// Throughput meter. `count()` is monotonic over the meter's lifetime;
+/// `rate_per_sec()` is the lifetime average (useful for batch runs) and
+/// `rate_1m()` the trailing-60s rate (what a long-lived server is doing
+/// *now*, per-second bucketed). Recording stays lock-free; a bucket
+/// rollover race can drop a blip from the window, never from `count()`.
 pub struct Meter {
     count: AtomicU64,
     started: Instant,
+    window: Vec<WinBucket>,
 }
 
 impl Meter {
     pub fn new() -> Self {
-        Meter { count: AtomicU64::new(0), started: Instant::now() }
+        Meter {
+            count: AtomicU64::new(0),
+            started: Instant::now(),
+            window: (0..WIN_SECS)
+                .map(|_| WinBucket { sec: AtomicU64::new(u64::MAX), n: AtomicU64::new(0) })
+                .collect(),
+        }
     }
 
     pub fn add(&self, n: u64) {
         self.count.fetch_add(n, Ordering::Relaxed);
+        self.add_window(self.started.elapsed().as_secs(), n);
+    }
+
+    fn add_window(&self, now_sec: u64, n: u64) {
+        let b = &self.window[(now_sec % WIN_SECS as u64) as usize];
+        let cur = b.sec.load(Ordering::Acquire);
+        if cur != now_sec
+            && b.sec
+                .compare_exchange(cur, now_sec, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+        {
+            // the CAS winner retires the bucket's previous second
+            b.n.store(0, Ordering::Release);
+        }
+        b.n.fetch_add(n, Ordering::Relaxed);
+    }
+
+    fn window_total(&self, now_sec: u64) -> u64 {
+        self.window
+            .iter()
+            .filter(|b| {
+                let sec = b.sec.load(Ordering::Acquire);
+                sec != u64::MAX && now_sec.saturating_sub(sec) < WIN_SECS as u64
+            })
+            .map(|b| b.n.load(Ordering::Relaxed))
+            .sum()
     }
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Lifetime-average items/sec.
     pub fn rate_per_sec(&self) -> f64 {
         let secs = self.started.elapsed().as_secs_f64();
         if secs <= 0.0 {
             return 0.0;
         }
         self.count() as f64 / secs
+    }
+
+    /// Items/sec over the trailing 60s window (falls back to the
+    /// lifetime span while the meter is younger than the window).
+    pub fn rate_1m(&self) -> f64 {
+        let elapsed = self.started.elapsed();
+        let span = elapsed.as_secs_f64().min(WIN_SECS as f64);
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.window_total(elapsed.as_secs()) as f64 / span
     }
 }
 
@@ -225,11 +284,62 @@ impl Registry {
             let mut mm = Map::new();
             mm.insert("count", Value::from(m.count()));
             mm.insert("rate_per_sec", Value::Number(m.rate_per_sec()));
+            mm.insert("rate_1m", Value::Number(m.rate_1m()));
             meters.insert(k.clone(), Value::Object(mm));
         }
         root.insert("meters", Value::Object(meters));
         Value::Object(root)
     }
+}
+
+/// Render a [`Registry::snapshot`] in the Prometheus text exposition
+/// format (`name{quantile="0.99"} value`), served by the `metrics_text`
+/// RPC so the service is scrapeable without custom tooling. Pure over
+/// the snapshot JSON, so a golden test can pin the exact output.
+pub fn render_prometheus(snapshot: &Value) -> String {
+    fn sanitize(name: &str) -> String {
+        name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect()
+    }
+    fn num(v: Option<&Value>) -> String {
+        let f = v.and_then(Value::as_f64).unwrap_or(0.0);
+        if f.fract() == 0.0 && f.abs() < 1e15 {
+            format!("{}", f as i64)
+        } else {
+            format!("{f}")
+        }
+    }
+    let mut out = String::new();
+    if let Some(counters) = snapshot.get("counters").and_then(Value::as_object) {
+        for (k, v) in counters.iter() {
+            out.push_str(&format!("alaas_{} {}\n", sanitize(k), num(Some(v))));
+        }
+    }
+    if let Some(hists) = snapshot.get("histograms").and_then(Value::as_object) {
+        for (k, h) in hists.iter() {
+            let name = sanitize(k);
+            out.push_str(&format!("alaas_{name}_count {}\n", num(h.get("count"))));
+            for (q, field) in [("0.5", "p50_us"), ("0.95", "p95_us"), ("0.99", "p99_us")] {
+                out.push_str(&format!(
+                    "alaas_{name}_us{{quantile=\"{q}\"}} {}\n",
+                    num(h.get(field))
+                ));
+            }
+            out.push_str(&format!("alaas_{name}_mean_us {}\n", num(h.get("mean_us"))));
+            out.push_str(&format!("alaas_{name}_max_us {}\n", num(h.get("max_us"))));
+        }
+    }
+    if let Some(meters) = snapshot.get("meters").and_then(Value::as_object) {
+        for (k, m) in meters.iter() {
+            let name = sanitize(k);
+            out.push_str(&format!("alaas_{name}_total {}\n", num(m.get("count"))));
+            out.push_str(&format!(
+                "alaas_{name}_rate_per_sec {}\n",
+                num(m.get("rate_per_sec"))
+            ));
+            out.push_str(&format!("alaas_{name}_rate_1m {}\n", num(m.get("rate_1m"))));
+        }
+    }
+    out
 }
 
 /// RAII timer recording into a histogram on drop.
@@ -345,6 +455,109 @@ mod tests {
             snap.get("counters").unwrap().get("membership.generation").unwrap().as_i64(),
             Some(7)
         );
+    }
+
+    #[test]
+    fn meter_window_tracks_current_rate_not_history() {
+        let m = Meter::new();
+        // synthetic clock: 5 events in the first second, then silence
+        // until second 120, then 12 events
+        m.add_window(0, 5);
+        assert_eq!(m.window_total(0), 5);
+        assert_eq!(m.window_total(59), 5, "still inside the 60s window");
+        assert_eq!(m.window_total(60), 0, "aged out");
+        m.add_window(120, 12);
+        // second 120 reuses bucket index 0; the old second-0 count is gone
+        assert_eq!(m.window_total(120), 12);
+        // adjacent seconds accumulate into distinct buckets
+        m.add_window(121, 3);
+        assert_eq!(m.window_total(121), 15);
+    }
+
+    #[test]
+    fn meter_count_stays_monotonic_and_rates_are_sane() {
+        let m = Meter::new();
+        m.add(10);
+        m.add(5);
+        assert_eq!(m.count(), 15);
+        assert!(m.rate_per_sec() > 0.0);
+        assert!(m.rate_1m() > 0.0);
+        let snap = {
+            let r = Registry::new();
+            r.meter("x").add(7);
+            r.snapshot()
+        };
+        let x = snap.get("meters").unwrap().get("x").unwrap();
+        assert_eq!(x.get("count").unwrap().as_i64(), Some(7));
+        assert!(x.get("rate_per_sec").is_some());
+        assert!(x.get("rate_1m").is_some());
+    }
+
+    #[test]
+    fn prometheus_rendering_matches_golden_snapshot() {
+        // hand-built snapshot so every value (incl. rates) is fixed
+        use crate::json::value::obj;
+        let snap = obj([
+            (
+                "counters",
+                obj([("cache.hits", Value::from(3u64)), ("rpc.errors", Value::from(0u64))]),
+            ),
+            (
+                "histograms",
+                obj([(
+                    "rpc.query",
+                    obj([
+                        ("count", Value::from(4u64)),
+                        ("mean_us", Value::Number(250.0)),
+                        ("p50_us", Value::Number(200.0)),
+                        ("p95_us", Value::Number(400.0)),
+                        ("p99_us", Value::Number(400.0)),
+                        ("max_us", Value::Number(412.5)),
+                    ]),
+                )]),
+            ),
+            (
+                "meters",
+                obj([(
+                    "pipeline.samples",
+                    obj([
+                        ("count", Value::from(42u64)),
+                        ("rate_per_sec", Value::Number(1.5)),
+                        ("rate_1m", Value::Number(6.0)),
+                    ]),
+                )]),
+            ),
+        ]);
+        let golden = "\
+alaas_cache_hits 3\n\
+alaas_rpc_errors 0\n\
+alaas_rpc_query_count 4\n\
+alaas_rpc_query_us{quantile=\"0.5\"} 200\n\
+alaas_rpc_query_us{quantile=\"0.95\"} 400\n\
+alaas_rpc_query_us{quantile=\"0.99\"} 400\n\
+alaas_rpc_query_mean_us 250\n\
+alaas_rpc_query_max_us 412.5\n\
+alaas_pipeline_samples_total 42\n\
+alaas_pipeline_samples_rate_per_sec 1.5\n\
+alaas_pipeline_samples_rate_1m 6\n";
+        assert_eq!(render_prometheus(&snap), golden);
+    }
+
+    #[test]
+    fn prometheus_rendering_of_live_registry_is_parseable() {
+        let r = Registry::new();
+        r.counter("cache.hits").fetch_add(3, Ordering::Relaxed);
+        r.time("stage.fetch", Duration::from_micros(120));
+        r.meter("e2e.images").add(42);
+        let text = render_prometheus(&r.snapshot());
+        for line in text.lines() {
+            let (name, value) = line.rsplit_once(' ').expect("name value");
+            assert!(name.starts_with("alaas_"), "{line}");
+            assert!(value.parse::<f64>().is_ok(), "{line}");
+        }
+        assert!(text.contains("alaas_cache_hits 3\n"));
+        assert!(text.contains("alaas_stage_fetch_us{quantile=\"0.95\"}"));
+        assert!(text.contains("alaas_e2e_images_total 42\n"));
     }
 
     #[test]

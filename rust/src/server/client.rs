@@ -241,6 +241,40 @@ impl AlClient {
         self.call("metrics", Value::Null)
     }
 
+    /// Server metrics in the Prometheus text exposition format.
+    pub fn metrics_text(&mut self) -> Result<String, RpcError> {
+        let v = self.call("metrics_text", Value::Null)?;
+        v.as_str()
+            .map(str::to_string)
+            .ok_or_else(|| RpcError::Malformed("metrics_text reply is not a string".into()))
+    }
+
+    /// Recent trace roots + the slow-query log (DESIGN.md
+    /// §Observability): `{enabled, slow_query_ms, roots, slow}`. `limit
+    /// = 0` returns the server's default window.
+    pub fn trace_recent(&mut self, limit: usize) -> Result<Value, RpcError> {
+        let mut p = Map::new();
+        if limit > 0 {
+            p.insert("n", Value::from(limit));
+        }
+        self.call("trace_recent", Value::Object(p))
+    }
+
+    /// Every retained span of one trace, assembled end-to-end (worker
+    /// subtrees included). Returns the reply's `spans` decoded.
+    pub fn trace_get(
+        &mut self,
+        trace_id: u64,
+    ) -> Result<Vec<crate::trace::SpanRecord>, RpcError> {
+        let mut p = Map::new();
+        p.insert("trace", Value::from(trace_id));
+        let v = self.call("trace_get", Value::Object(p))?;
+        let spans = v
+            .get("spans")
+            .ok_or_else(|| RpcError::Malformed("trace_get reply missing spans".into()))?;
+        Ok(crate::trace::spans_from_value(spans))
+    }
+
     /// Data-cache statistics.
     pub fn cache_stats(&mut self) -> Result<Value, RpcError> {
         self.call("cache_stats", Value::Null)

@@ -159,6 +159,9 @@ pub struct ConnPool {
     dial_timeout: Duration,
     hello_timeout: Duration,
     metrics: Option<Arc<Registry>>,
+    /// When set, span subtrees piggybacked on replies are adopted into
+    /// this tracer (the coordinator's end-to-end tree assembly).
+    tracer: Option<Arc<crate::trace::Tracer>>,
     peers: Mutex<HashMap<String, PeerState>>,
 }
 
@@ -170,6 +173,7 @@ impl ConnPool {
             dial_timeout: DIAL_TIMEOUT,
             hello_timeout: HELLO_TIMEOUT,
             metrics,
+            tracer: None,
             peers: Mutex::new(HashMap::new()),
         }
     }
@@ -179,6 +183,12 @@ impl ConnPool {
     pub fn with_timeouts(mut self, dial: Duration, hello: Duration) -> ConnPool {
         self.dial_timeout = dial;
         self.hello_timeout = hello;
+        self
+    }
+
+    /// Adopt remote span subtrees from replies into `tracer`.
+    pub fn with_tracer(mut self, tracer: Arc<crate::trace::Tracer>) -> ConnPool {
+        self.tracer = Some(tracer);
         self
     }
 
@@ -458,7 +468,7 @@ impl ConnPool {
         let id = conn.next_id;
         conn.next_id += 1;
         rpc::send_request_wire(&mut conn.stream, id, method, params, conn.mode, self.registry())?;
-        rpc::recv_response_body(&mut conn.stream, id, self.registry())
+        rpc::recv_response_traced(&mut conn.stream, id, self.registry(), self.tracer.as_deref())
     }
 }
 

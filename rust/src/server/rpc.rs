@@ -52,6 +52,10 @@ pub struct RequestFrame {
     pub method: String,
     pub params: Body,
     pub mode: WireMode,
+    /// Trace context from the envelope's optional `trace` field
+    /// (`SpanCtx::default()` when the peer sent none — old peers and
+    /// untraced callers look identical).
+    pub trace: crate::trace::SpanCtx,
 }
 
 /// Write one frame.
@@ -102,7 +106,10 @@ fn note_rx(metrics: Option<&Registry>, bytes: usize, decode: Duration, mode: Wir
 }
 
 /// Serialize + send a request in `mode`; tensor payloads inline into the
-/// JSON text when `mode` is `Json`.
+/// JSON text when `mode` is `Json`. When the calling thread has an
+/// active span (installed by a `trace::SpanGuard`), its context rides
+/// the envelope as `"trace":{"id","parent"}` — old peers ignore the
+/// unknown key, so propagation needs no negotiation.
 pub fn send_request_wire(
     w: &mut impl Write,
     id: u64,
@@ -112,7 +119,13 @@ pub fn send_request_wire(
     metrics: Option<&Registry>,
 ) -> Result<(), RpcError> {
     let t0 = Instant::now();
-    let bytes = wire::encode_message(id, Some(method), params, mode)?;
+    let ctx = crate::trace::current();
+    let extra = if ctx.is_active() {
+        Some(format!("\"trace\":{{\"id\":{},\"parent\":{}}}", ctx.trace_id, ctx.span_id))
+    } else {
+        None
+    };
+    let bytes = wire::encode_message_ext(id, Some(method), params, mode, extra.as_deref())?;
     note_tx(metrics, bytes.len(), t0.elapsed());
     write_frame(w, &bytes)
 }
@@ -140,13 +153,20 @@ pub fn decode_request_frame(buf: Vec<u8>) -> Result<RequestFrame, RpcError> {
         .and_then(Value::as_str)
         .ok_or_else(|| RpcError::Malformed("missing method".into()))?
         .to_string();
+    let trace = v
+        .get("trace")
+        .map(|t| crate::trace::SpanCtx {
+            trace_id: t.get("id").and_then(Value::as_i64).unwrap_or(0) as u64,
+            span_id: t.get("parent").and_then(Value::as_i64).unwrap_or(0) as u64,
+        })
+        .unwrap_or_default();
     // move the params subtree out of the envelope (a push_data manifest
     // is most of the frame) instead of cloning it
     let params = match v {
         Value::Object(mut m) => m.remove("params").unwrap_or(Value::Null),
         _ => Value::Null,
     };
-    Ok(RequestFrame { id, method, params: Body { value: params, tensors }, mode })
+    Ok(RequestFrame { id, method, params: Body { value: params, tensors }, mode, trace })
 }
 
 /// Receive + parse a request frame (either encoding), zero-copy.
@@ -162,8 +182,22 @@ pub fn send_result_wire(
     mode: WireMode,
     metrics: Option<&Registry>,
 ) -> Result<(), RpcError> {
+    send_result_ext(w, id, result, mode, metrics, None)
+}
+
+/// [`send_result_wire`] with an optional extra envelope fragment — how a
+/// traced server piggybacks its span subtree (`"trace_spans":[...]`) on
+/// the reply for the caller to adopt. Old callers ignore the field.
+pub fn send_result_ext(
+    w: &mut impl Write,
+    id: u64,
+    result: &Payload,
+    mode: WireMode,
+    metrics: Option<&Registry>,
+    extra: Option<&str>,
+) -> Result<(), RpcError> {
     let t0 = Instant::now();
-    let bytes = wire::encode_message(id, None, result, mode)?;
+    let bytes = wire::encode_message_ext(id, None, result, mode, extra)?;
     note_tx(metrics, bytes.len(), t0.elapsed());
     write_frame(w, &bytes)
 }
@@ -198,11 +232,18 @@ pub fn send_error(w: &mut impl Write, id: u64, error: &str) -> Result<(), RpcErr
 /// shutdown flag instead of pinning its thread forever; once bytes are
 /// available the frame is read under a generous timeout (a frame, once
 /// started, arrives promptly).
+///
+/// With a `tracer`, each request runs under an `rpc.{method}` span:
+/// continuing the caller's context when the envelope carried one
+/// (traced requests also piggyback this side's span subtree on the
+/// reply), or opening a fresh root trace for the entry-point methods in
+/// `trace::default_traced`.
 pub fn serve_conn(
     stream: &mut TcpStream,
     tag: &'static str,
     shutdown: &AtomicBool,
     metrics: &Registry,
+    tracer: Option<&crate::trace::Tracer>,
     wire_mode: WireMode,
     mut handle: impl FnMut(&str, &Body, WireMode) -> Result<Payload, String>,
 ) {
@@ -269,24 +310,54 @@ pub fn serve_conn(
             }
         };
         note_rx(Some(metrics), buf_len, t_decode.elapsed(), req.mode);
+        let traced = tracer.is_some_and(|t| t.enabled())
+            && (req.trace.is_active() || crate::trace::default_traced(&req.method));
         let t0 = Instant::now();
         // handlers get the request's encoding so version-sensitive
         // responses (select_shard's candidate schema) can stay
         // v1-compatible on the JSON wire
-        let result = handle(&req.method, &req.params, req.mode);
-        metrics.time(&format!("rpc.{}", req.method), t0.elapsed());
-        let io = match result {
-            Ok(p) => match send_result_wire(stream, req.id, &p, req.mode, Some(metrics)) {
-                // encode-side failures (frame cap, bad tensor refs)
-                // happen before any bytes hit the stream — e.g. a JSON
-                // fallback inflating a tensor reply past MAX_FRAME where
-                // the binary form fits. Report them as an error reply
-                // instead of silently dropping the connection.
-                Err(e) if !matches!(e, RpcError::Io(_)) => {
-                    send_error(stream, req.id, &format!("reply encoding failed: {e}"))
+        let (result, mut spans) = if traced {
+            let t = tracer.unwrap();
+            crate::trace::begin_collect();
+            let r = {
+                let mut g = t.request(&format!("rpc.{}", req.method), req.trace);
+                let r = handle(&req.method, &req.params, req.mode);
+                if let Err(e) = &r {
+                    g.annotate("error", e);
                 }
-                other => other,
-            },
+                r
+            };
+            (r, crate::trace::take_collected())
+        } else {
+            (handle(&req.method, &req.params, req.mode), Vec::new())
+        };
+        metrics.time(&format!("rpc.{}", req.method), t0.elapsed());
+        // piggyback this side's spans only when the caller is traced (it
+        // sent a context, so it has a tracer to adopt them into)
+        let extra = if req.trace.is_active() && !spans.is_empty() {
+            spans.truncate(crate::trace::MAX_PIGGYBACK);
+            Some(format!(
+                "\"trace_spans\":{}",
+                json::to_string(&crate::trace::spans_to_value(&spans))
+            ))
+        } else {
+            None
+        };
+        let io = match result {
+            Ok(p) => {
+                match send_result_ext(stream, req.id, &p, req.mode, Some(metrics), extra.as_deref())
+                {
+                    // encode-side failures (frame cap, bad tensor refs)
+                    // happen before any bytes hit the stream — e.g. a JSON
+                    // fallback inflating a tensor reply past MAX_FRAME where
+                    // the binary form fits. Report them as an error reply
+                    // instead of silently dropping the connection.
+                    Err(e) if !matches!(e, RpcError::Io(_)) => {
+                        send_error(stream, req.id, &format!("reply encoding failed: {e}"))
+                    }
+                    other => other,
+                }
+            }
             Err(e) => send_error(stream, req.id, &e),
         };
         if io.is_err() {
@@ -303,6 +374,19 @@ pub fn recv_response_body(
     r: &mut impl Read,
     expect_id: u64,
     metrics: Option<&Registry>,
+) -> Result<Body, RpcError> {
+    recv_response_traced(r, expect_id, metrics, None)
+}
+
+/// [`recv_response_body`] that also folds a `trace_spans` piggyback from
+/// the reply envelope into `tracer` (when both are present), so the
+/// callee's span subtree lands in the caller's ring. Replies without the
+/// field — old peers, untraced requests — behave identically.
+pub fn recv_response_traced(
+    r: &mut impl Read,
+    expect_id: u64,
+    metrics: Option<&Registry>,
+    tracer: Option<&crate::trace::Tracer>,
 ) -> Result<Body, RpcError> {
     let buf = read_frame(r)?;
     let buf_len = buf.len();
@@ -323,11 +407,14 @@ pub fn recv_response_body(
     }
     // move, don't clone: result can be a multi-MB inline matrix on the
     // JSON wire
-    let result = match v {
-        Value::Object(mut m) => m.remove("result"),
-        _ => None,
+    let (result, spans) = match v {
+        Value::Object(mut m) => (m.remove("result"), m.remove("trace_spans")),
+        _ => (None, None),
+    };
+    if let (Some(t), Some(sv)) = (tracer, spans) {
+        t.adopt(crate::trace::spans_from_value(&sv));
     }
-    .ok_or_else(|| RpcError::Malformed("missing result".into()))?;
+    let result = result.ok_or_else(|| RpcError::Malformed("missing result".into()))?;
     Ok(Body { value: result, tensors })
 }
 
@@ -536,6 +623,83 @@ mod tests {
             read_frame(&mut r),
             Err(RpcError::FrameTooLarge(n)) if n == MAX_FRAME + 1
         ));
+    }
+
+    #[test]
+    fn trace_context_rides_the_envelope_in_both_encodings() {
+        let tracer = crate::trace::Tracer::with_capacity(true, 0, 16);
+        for mode in [WireMode::Json, WireMode::Binary] {
+            let root = tracer.root("client.query");
+            let ctx = root.ctx();
+            let mut buf = Vec::new();
+            send_request_wire(&mut buf, 4, "query", &Payload::json(Value::Null), mode, None)
+                .unwrap();
+            drop(root);
+            let mut r = std::io::Cursor::new(buf);
+            let req = recv_request(&mut r).unwrap();
+            assert_eq!(req.trace.trace_id, ctx.trace_id, "{mode:?}");
+            assert_eq!(req.trace.span_id, ctx.span_id, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn untraced_and_old_peer_requests_decode_with_no_context() {
+        // no active span on this thread: the envelope carries no trace key
+        let mut buf = Vec::new();
+        send_request(&mut buf, 5, "query", Value::Null).unwrap();
+        let text = {
+            let mut r = std::io::Cursor::new(buf.clone());
+            String::from_utf8(read_frame(&mut r).unwrap()).unwrap()
+        };
+        assert!(!text.contains("trace"), "{text}");
+        let mut r = std::io::Cursor::new(buf);
+        let req = recv_request(&mut r).unwrap();
+        assert!(!req.trace.is_active());
+        // a hand-written old-peer frame (pre-trace wire) decodes the same
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"{\"id\":1,\"method\":\"query\",\"params\":null}").unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        let req = recv_request(&mut r).unwrap();
+        assert_eq!(req.trace, crate::trace::SpanCtx::default());
+    }
+
+    #[test]
+    fn trace_spans_piggyback_adopted_by_tracer_ignored_by_old_readers() {
+        let rec = crate::trace::SpanRecord {
+            trace_id: 77,
+            span_id: 78,
+            parent: 70,
+            name: "rpc.select_shard".into(),
+            start_ns: 5,
+            end_ns: 25,
+            notes: vec![],
+            root: false,
+        };
+        let frag = format!(
+            "\"trace_spans\":{}",
+            json::to_string(&crate::trace::spans_to_value(&[rec]))
+        );
+        let mut buf = Vec::new();
+        send_result_ext(
+            &mut buf,
+            9,
+            &Payload::json(Value::from(1i64)),
+            WireMode::Json,
+            None,
+            Some(&frag),
+        )
+        .unwrap();
+        // an old (trace-unaware) reader sees only the result
+        let mut r = std::io::Cursor::new(buf.clone());
+        assert_eq!(recv_response(&mut r, 9).unwrap().as_i64(), Some(1));
+        // a traced reader folds the subtree into its ring
+        let t = crate::trace::Tracer::with_capacity(true, 0, 8);
+        let mut r = std::io::Cursor::new(buf);
+        let body = recv_response_traced(&mut r, 9, None, Some(&t)).unwrap();
+        assert_eq!(body.value.as_i64(), Some(1));
+        let adopted = t.get(77);
+        assert_eq!(adopted.len(), 1);
+        assert_eq!(adopted[0].parent, 70);
     }
 
     /// Random JSON payload generator for the round-trip property

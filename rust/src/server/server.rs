@@ -77,6 +77,9 @@ struct SessionSlot {
 struct ServerState {
     config: AlaasConfig,
     deps: ServerDeps,
+    /// Distributed-tracing plane (DESIGN.md §Observability): request
+    /// spans, slow-query log, and the `trace_recent`/`trace_get` RPCs.
+    tracer: Arc<crate::trace::Tracer>,
     sessions: Mutex<HashMap<String, Arc<SessionSlot>>>,
     /// Background PSHEA jobs (DESIGN.md §Agent).
     jobs: JobRegistry,
@@ -101,9 +104,15 @@ impl AlServer {
         let listener =
             TcpListener::bind((config.al_worker.host.as_str(), config.al_worker.port))?;
         let addr = listener.local_addr()?;
+        crate::util::logger::set_format_from_config(&config.observability.log_format);
+        let tracer = Arc::new(crate::trace::Tracer::new(
+            config.observability.trace,
+            config.observability.slow_query_ms,
+        ));
         let state = Arc::new(ServerState {
             config,
             deps,
+            tracer,
             sessions: Mutex::new(HashMap::new()),
             jobs: JobRegistry::new(),
             heartbeater: Mutex::new(None),
@@ -223,6 +232,7 @@ fn handle_conn(mut stream: TcpStream, state: Arc<ServerState>) {
         "server",
         &state.shutdown,
         &state.deps.metrics,
+        Some(&state.tracer),
         state.config.server.wire,
         |method, params, mode| dispatch(&state, method, params, mode),
     );
@@ -244,6 +254,16 @@ fn dispatch(
         "status" => status(state, &params.value).map(Payload::json),
         "query" => query(state, &params.value).map(Payload::json),
         "metrics" => Ok(Payload::json(state.deps.metrics.snapshot())),
+        "metrics_text" => Ok(Payload::json(Value::from(
+            crate::metrics::render_prometheus(&state.deps.metrics.snapshot()),
+        ))),
+        // trace plane (DESIGN.md §Observability)
+        "trace_recent" => {
+            Ok(Payload::json(crate::trace::rpc_recent(&state.tracer, &params.value)))
+        }
+        "trace_get" => {
+            crate::trace::rpc_get(&state.tracer, &params.value).map(Payload::json)
+        }
         "strategies" => Ok(Payload::json(Value::Array(
             strategies::zoo_names().into_iter().map(Value::from).collect(),
         ))),
@@ -601,7 +621,11 @@ fn query(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
         params.get("wait_ms").and_then(Value::as_usize).unwrap_or(120_000) as u64;
 
     let slot = get_session(state, &session_id)?;
-    let s = wait_ready(&slot, wait_ms)?;
+    let s = {
+        let mut g = state.tracer.child("wait_ready");
+        g.annotate("session", &session_id);
+        wait_ready(&slot, wait_ms)?
+    };
 
     let strat = strategies::by_name(&strategy_name)
         .ok_or_else(|| format!("unknown strategy '{strategy_name}'"))?;
@@ -617,7 +641,12 @@ fn query(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
         backend: state.deps.backend.as_ref(),
         seed: SELECT_SEED,
     };
+    let mut g = state.tracer.child("select");
+    g.annotate("strategy", &strategy_name);
+    g.annotate("budget", budget);
     let picked = strat.select(&ctx, budget).map_err(|e| e.to_string())?;
+    g.annotate("selected", picked.len());
+    drop(g);
     let select_elapsed = t0.elapsed();
     state.deps.metrics.time("al.select", select_elapsed);
     state.deps.metrics.meter("al.selected").add(picked.len() as u64);
@@ -713,7 +742,13 @@ fn select_shard(
     let labeled_extra = params.mat("labeled_emb")?;
 
     let slot = get_session(state, &session_id)?;
-    let s = wait_ready(&slot, wait_ms)?;
+    let s = {
+        let mut g = state.tracer.child("scan.wait");
+        g.annotate("session", &session_id);
+        let s = wait_ready(&slot, wait_ms)?;
+        g.annotate("scan_ms", format!("{:.1}", s.scan_elapsed.as_secs_f64() * 1e3));
+        s
+    };
 
     let mut out = Payload::default();
     let mut m = Map::new();
@@ -762,6 +797,9 @@ fn select_shard(
             _ => base_labeled.clone(),
         };
         let t0 = Instant::now();
+        let mut g = state.tracer.child("select.candidates");
+        g.annotate("strategy", strategy);
+        g.annotate("budget", budget);
         let cands = crate::cluster::worker::build_candidates(
             strategy,
             budget,
@@ -773,6 +811,8 @@ fn select_shard(
             state.deps.backend.as_ref(),
             seed,
         )?;
+        g.annotate("returned", cands.len());
+        drop(g);
         state.deps.metrics.time("al.select_shard", t0.elapsed());
         if with_embeddings && mode == WireMode::Json {
             // v1 peers expect the fat per-candidate schema; the packed
@@ -821,7 +861,10 @@ fn fetch_rows(state: &Arc<ServerState>, params: &Value) -> Result<Payload, Strin
         }
     }
     let mut out = Payload::default();
+    let mut g = state.tracer.child("gather_rows");
+    g.annotate("rows", rows.len());
     let ph = out.stash_mat(pool_emb.gather_rows(&rows));
+    drop(g);
     let mut m = Map::new();
     m.insert("emb", ph);
     m.insert("rows", Value::from(rows.len()));
@@ -1008,7 +1051,8 @@ fn agent_start(state: &Arc<ServerState>, params: &Body) -> Result<Value, String>
                 nc,
                 p.seed,
                 Some(job_slot.cancel.clone()),
-            );
+            )
+            .with_tracer(bg.tracer.clone());
             crate::log_info!(
                 "server",
                 "agent job {thread_job} started on session '{session_id}' ({} arms)",

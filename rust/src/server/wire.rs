@@ -525,18 +525,39 @@ pub fn encode_message(
     payload: &Payload,
     mode: WireMode,
 ) -> Result<Vec<u8>, RpcError> {
+    encode_message_ext(id, method, payload, mode, None)
+}
+
+/// [`encode_message`] with an optional extra envelope field, passed as a
+/// pre-serialized `"key":value` fragment spliced next to `id`. This is
+/// how the trace context (`"trace":{...}` on requests) and the span
+/// piggyback (`"trace_spans":[...]` on responses) ride the envelope:
+/// decoders read only the keys they know, so old peers skip the field —
+/// the same forward-compatibility contract `hello` negotiation relies
+/// on.
+pub fn encode_message_ext(
+    id: u64,
+    method: Option<&str>,
+    payload: &Payload,
+    mode: WireMode,
+    extra: Option<&str>,
+) -> Result<Vec<u8>, RpcError> {
     let value_text = match mode {
         WireMode::Json if !payload.tensors.is_empty() => {
             json::to_string(&inline_value(&payload.value, &payload.tensors)?)
         }
         _ => json::to_string(&payload.value),
     };
+    let extra = match extra {
+        Some(frag) => format!(",{frag}"),
+        None => String::new(),
+    };
     let header = match method {
         Some(m) => format!(
-            "{{\"id\":{id},\"method\":{},\"params\":{value_text}}}",
+            "{{\"id\":{id}{extra},\"method\":{},\"params\":{value_text}}}",
             json::to_string(&Value::from(m))
         ),
-        None => format!("{{\"id\":{id},\"result\":{value_text}}}"),
+        None => format!("{{\"id\":{id}{extra},\"result\":{value_text}}}"),
     };
     match mode {
         WireMode::Json => Ok(header.into_bytes()),

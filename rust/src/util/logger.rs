@@ -2,7 +2,17 @@
 //!
 //! Level comes from `ALAAS_LOG` (`error|warn|info|debug|trace`, default
 //! `info`). Output goes to stderr so bench tables on stdout stay clean.
+//!
+//! Format comes from `ALAAS_LOG_FORMAT` (`text|json`, default `text`);
+//! the env var wins over `[observability] log_format` so an operator can
+//! flip a running deployment's output without editing config. JSON mode
+//! emits one object per line: `{ts, level, target, trace_id?, msg}`.
+//!
+//! Every line carries the thread's current trace id (installed by
+//! `trace::SpanGuard`), so grepping one id reconstructs a request across
+//! coordinator and workers.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::{SystemTime, UNIX_EPOCH};
 
@@ -39,7 +49,29 @@ impl Level {
     }
 }
 
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Format {
+    Text = 0,
+    Json = 1,
+}
+
+impl Format {
+    pub fn parse(s: &str) -> Option<Format> {
+        match s.to_ascii_lowercase().as_str() {
+            "text" => Some(Format::Text),
+            "json" => Some(Format::Json),
+            _ => None,
+        }
+    }
+}
+
 static MAX_LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+static FORMAT: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+
+thread_local! {
+    static TRACE: Cell<u64> = const { Cell::new(0) };
+}
 
 fn max_level() -> u8 {
     let v = MAX_LEVEL.load(Ordering::Relaxed);
@@ -54,9 +86,50 @@ fn max_level() -> u8 {
     from_env as u8
 }
 
+fn format() -> Format {
+    let v = FORMAT.load(Ordering::Relaxed);
+    if v != 255 {
+        return if v == Format::Json as u8 { Format::Json } else { Format::Text };
+    }
+    let from_env = std::env::var("ALAAS_LOG_FORMAT")
+        .ok()
+        .and_then(|s| Format::parse(&s))
+        .unwrap_or(Format::Text);
+    FORMAT.store(from_env as u8, Ordering::Relaxed);
+    from_env
+}
+
 /// Override the level programmatically (tests, CLI `--verbose`).
 pub fn set_level(level: Level) {
     MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Override the format programmatically.
+pub fn set_format(f: Format) {
+    FORMAT.store(f as u8, Ordering::Relaxed);
+}
+
+/// Apply `[observability] log_format` — a no-op when `ALAAS_LOG_FORMAT`
+/// is set, since the env var outranks config.
+pub fn set_format_from_config(s: &str) {
+    if std::env::var("ALAAS_LOG_FORMAT").is_ok() {
+        return;
+    }
+    if let Some(f) = Format::parse(s) {
+        set_format(f);
+    }
+}
+
+/// Install `trace_id` as this thread's current trace (0 = none);
+/// returns the previous value. Managed by `trace::SpanGuard` — call it
+/// directly only when threading a context by hand.
+pub fn set_trace(trace_id: u64) -> u64 {
+    TRACE.with(|t| t.replace(trace_id))
+}
+
+/// The trace id stamped on this thread's log lines (0 = none).
+pub fn current_trace() -> u64 {
+    TRACE.with(|t| t.get())
 }
 
 /// True when `level` would be emitted.
@@ -72,7 +145,31 @@ pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
     let now = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
     let secs = now.as_secs();
     let millis = now.subsec_millis();
-    eprintln!("[{secs}.{millis:03} {} {target}] {msg}", level.as_str());
+    let trace = current_trace();
+    match format() {
+        Format::Text => {
+            if trace != 0 {
+                eprintln!(
+                    "[{secs}.{millis:03} {} {target} t:{trace:012x}] {msg}",
+                    level.as_str()
+                );
+            } else {
+                eprintln!("[{secs}.{millis:03} {} {target}] {msg}", level.as_str());
+            }
+        }
+        Format::Json => {
+            use crate::json::{Map, Value};
+            let mut m = Map::new();
+            m.insert("ts", Value::from(secs as f64 + f64::from(millis) / 1_000.0));
+            m.insert("level", Value::from(level.as_str().trim_end()));
+            m.insert("target", Value::from(target));
+            if trace != 0 {
+                m.insert("trace_id", Value::from(format!("{trace:012x}")));
+            }
+            m.insert("msg", Value::from(msg.to_string()));
+            eprintln!("{}", crate::json::to_string(&Value::Object(m)));
+        }
+    }
 }
 
 #[macro_export]
@@ -105,5 +202,25 @@ mod tests {
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
         set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn format_parse() {
+        assert_eq!(Format::parse("json"), Some(Format::Json));
+        assert_eq!(Format::parse("TEXT"), Some(Format::Text));
+        assert_eq!(Format::parse("xml"), None);
+    }
+
+    #[test]
+    fn trace_slot_is_per_thread_and_restorable() {
+        assert_eq!(current_trace(), 0);
+        let prev = set_trace(0xabc);
+        assert_eq!(prev, 0);
+        assert_eq!(current_trace(), 0xabc);
+        std::thread::scope(|s| {
+            s.spawn(|| assert_eq!(current_trace(), 0, "trace slot must not leak across threads"));
+        });
+        set_trace(prev);
+        assert_eq!(current_trace(), 0);
     }
 }

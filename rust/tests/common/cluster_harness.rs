@@ -149,6 +149,7 @@ pub struct HarnessBuilder {
     lease_ms: u64,
     with_single: bool,
     coord_tweak: Option<Box<dyn Fn(&mut AlaasConfig)>>,
+    cfg_tweak: Option<Box<dyn Fn(&mut AlaasConfig)>>,
 }
 
 impl HarnessBuilder {
@@ -196,6 +197,12 @@ impl HarnessBuilder {
         self.coord_tweak = Some(Box::new(f));
         self
     }
+    /// Mutate the *base* config — workers, single server, and
+    /// coordinator alike (e.g. flip `[observability] trace` cluster-wide).
+    pub fn cfg_tweak(mut self, f: impl Fn(&mut AlaasConfig) + 'static) -> Self {
+        self.cfg_tweak = Some(Box::new(f));
+        self
+    }
 
     pub fn build(self) -> ClusterHarness {
         let mut cfg = base_config();
@@ -204,6 +211,9 @@ impl HarnessBuilder {
             cfg.cluster.membership.enabled = true;
             cfg.cluster.membership.heartbeat_ms = self.heartbeat_ms;
             cfg.cluster.membership.lease_ms = self.lease_ms;
+        }
+        if let Some(tweak) = &self.cfg_tweak {
+            tweak(&mut cfg);
         }
         let store = Arc::new(StoreRouter::new("/tmp", &cfg.store));
         let spec = DatasetSpec::cifarsim(self.data_seed).with_sizes(
@@ -325,6 +335,7 @@ impl ClusterHarness {
             lease_ms: 60_000,
             with_single: false,
             coord_tweak: None,
+            cfg_tweak: None,
         }
     }
 
@@ -632,10 +643,58 @@ impl ClusterHarness {
         self.fire(FaultPoint::AfterQuery);
         sel.iter().map(|s| s.id).collect()
     }
+
+    // -- failure diagnostics -----------------------------------------------
+
+    /// Capture the coordinator's recent traces + slow-query log and a
+    /// Prometheus-style metrics snapshot into the harness log. Runs
+    /// automatically when a test panics (the log dir is what CI uploads
+    /// on failure), so a red integration run ships the span trees that
+    /// explain *where* the request went sideways. Never panics: a dead
+    /// coordinator degrades to an error line, not a double panic.
+    pub fn dump_diagnostics(&self, why: &str) {
+        self.log(&format!("DIAGNOSTICS ({why}): trace_recent + metrics follow"));
+        match AlClient::connect(&self.coord_addr.to_string()) {
+            Ok(mut c) => {
+                match c.trace_recent(50) {
+                    Ok(v) => self
+                        .log(&format!("coord trace_recent: {}", alaas::json::to_string(&v))),
+                    Err(e) => self.log(&format!("coord trace_recent failed: {e}")),
+                }
+                match c.metrics_text() {
+                    Ok(text) => {
+                        for line in text.lines() {
+                            self.log(&format!("coord metric {line}"));
+                        }
+                    }
+                    Err(e) => self.log(&format!("coord metrics_text failed: {e}")),
+                }
+            }
+            Err(e) => self.log(&format!("coordinator unreachable for diagnostics: {e}")),
+        }
+        for (i, w) in self.workers.iter().enumerate() {
+            if w.server.is_none() {
+                continue;
+            }
+            match AlClient::connect(&w.advertised) {
+                Ok(mut c) => match c.trace_recent(20) {
+                    Ok(v) => self.log(&format!(
+                        "worker {i} trace_recent: {}",
+                        alaas::json::to_string(&v)
+                    )),
+                    Err(e) => self.log(&format!("worker {i} trace_recent failed: {e}")),
+                },
+                Err(e) => self.log(&format!("worker {i} unreachable for diagnostics: {e}")),
+            }
+        }
+    }
 }
 
 impl Drop for ClusterHarness {
     fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.dump_diagnostics("test panicked");
+        }
         self.log.line("harness down");
     }
 }

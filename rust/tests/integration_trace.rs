@@ -1,0 +1,215 @@
+//! End-to-end distributed tracing over real TCP (ISSUE 6 acceptance,
+//! DESIGN.md §Observability):
+//!
+//! * a 2-worker scattered query yields ONE assembled span tree on the
+//!   coordinator — `rpc.query` root, `scatter`/`merge` stage children,
+//!   and per shard an adopted worker subtree (`rpc.select_shard` with
+//!   its `scan.wait` / `select.candidates` stage spans),
+//! * the slow-query log retains such a trace verbatim past a tiny
+//!   threshold, and `metrics_text` serves Prometheus-style lines,
+//! * tracing is observation only: selections are bit-identical with
+//!   `[observability] trace = false`.
+
+mod common;
+
+use std::collections::HashMap;
+
+use alaas::json::Value;
+use alaas::trace::SpanRecord;
+
+use common::cluster_harness::ClusterHarness;
+
+fn span_by_name<'a>(spans: &'a [SpanRecord], name: &str) -> &'a SpanRecord {
+    spans
+        .iter()
+        .find(|s| s.name == name)
+        .unwrap_or_else(|| panic!("no '{name}' span in {:?}", names(spans)))
+}
+
+fn names(spans: &[SpanRecord]) -> Vec<&str> {
+    spans.iter().map(|s| s.name.as_str()).collect()
+}
+
+#[test]
+fn scattered_query_assembles_one_end_to_end_tree() {
+    let h = ClusterHarness::builder()
+        .sizes(60, 200, 0)
+        .workers(2)
+        .bucket("trace-ds")
+        // real scatter roundtrips take > 1 ms, so the query also lands in
+        // the slow-query log (retained verbatim, asserted below)
+        .cfg_tweak(|cfg| cfg.observability.slow_query_ms = 1)
+        .build();
+    let mut client = h.client();
+    client.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+    let (sel, _, _) = client.query("s", 20, Some("entropy")).unwrap();
+    assert_eq!(sel.len(), 20);
+
+    // the trace plane lists the query as a recent root
+    let recent = client.trace_recent(0).unwrap();
+    assert_eq!(recent.get("enabled").and_then(Value::as_bool), Some(true));
+    let roots = recent.get("roots").and_then(Value::as_array).unwrap();
+    let query_root = roots
+        .iter()
+        .find(|r| r.get("name").and_then(Value::as_str) == Some("rpc.query"))
+        .unwrap_or_else(|| panic!("no rpc.query root in {roots:?}"));
+    let trace_id =
+        query_root.get("trace").and_then(Value::as_i64).expect("trace id") as u64;
+
+    // one trace_get on the coordinator returns the full cross-process tree
+    let spans = client.trace_get(trace_id).unwrap();
+    assert!(
+        spans.iter().all(|s| s.trace_id == trace_id),
+        "mixed trace ids in {:?}",
+        names(&spans)
+    );
+    let by_id: HashMap<u64, &SpanRecord> =
+        spans.iter().map(|s| (s.span_id, s)).collect();
+
+    // coordinator skeleton: rpc.query root with scatter + merge children
+    let root = span_by_name(&spans, "rpc.query");
+    assert_eq!(root.parent, 0, "client sent no context, so the query roots");
+    let scatter = span_by_name(&spans, "scatter");
+    assert_eq!(scatter.parent, root.span_id);
+    let merge = span_by_name(&spans, "merge");
+    assert_eq!(merge.parent, root.span_id);
+
+    // one shard.select per worker, each with straggler-attributable notes
+    let shard_selects: Vec<&SpanRecord> =
+        spans.iter().filter(|s| s.name == "shard.select").collect();
+    assert_eq!(shard_selects.len(), 2, "one scatter leg per shard");
+    for leg in &shard_selects {
+        assert_eq!(leg.parent, scatter.span_id);
+        assert!(
+            leg.notes.iter().any(|(k, _)| k == "shard"),
+            "scatter leg missing shard note: {:?}",
+            leg.notes
+        );
+    }
+
+    // each leg adopted its worker's piggybacked subtree: an
+    // rpc.select_shard entry span plus the worker-side stage spans
+    for leg in &shard_selects {
+        let worker = spans
+            .iter()
+            .find(|s| s.name == "rpc.select_shard" && s.parent == leg.span_id)
+            .unwrap_or_else(|| {
+                panic!("shard leg {:?} has no worker subtree in {:?}", leg.notes, names(&spans))
+            });
+        for stage in ["scan.wait", "select.candidates"] {
+            let st = spans
+                .iter()
+                .find(|s| s.name == stage && s.parent == worker.span_id)
+                .unwrap_or_else(|| panic!("worker subtree missing '{stage}' stage span"));
+            assert!(st.duration_ns() <= worker.duration_ns());
+        }
+    }
+
+    // every span (except the root) hangs off a parent within the tree
+    for s in &spans {
+        assert!(
+            s.parent == 0 || by_id.contains_key(&s.parent),
+            "span '{}' dangles from unknown parent {:012x}",
+            s.name,
+            s.parent
+        );
+    }
+
+    // the rendered tree nests worker stages under the coordinator root
+    let rendered = alaas::trace::render_tree(&spans);
+    let root_line = rendered.lines().next().unwrap();
+    assert!(root_line.starts_with("rpc.query"), "{rendered}");
+    assert!(
+        rendered.lines().any(|l| l.starts_with("      rpc.select_shard")),
+        "worker subtree not nested at depth 3:\n{rendered}"
+    );
+
+    // >1ms root span: the slow-query log retained the trace verbatim
+    let slow = recent.get("slow").and_then(Value::as_array).unwrap();
+    assert!(
+        slow.iter().any(|e| {
+            e.get("trace").and_then(Value::as_i64) == Some(trace_id as i64)
+        }),
+        "query trace missing from slow log: {slow:?}"
+    );
+
+    // the Prometheus text surface serves over the same connection
+    let text = client.metrics_text().unwrap();
+    assert!(
+        text.lines().any(|l| l.starts_with("alaas_cluster_shard_scan_us{quantile=")),
+        "no per-shard scan series in metrics_text:\n{text}"
+    );
+}
+
+#[test]
+fn selections_bit_identical_with_tracing_disabled() {
+    let traced = ClusterHarness::builder()
+        .sizes(60, 200, 0)
+        .workers(2)
+        .bucket("trace-on-ds")
+        .build();
+    let untraced = ClusterHarness::builder()
+        .sizes(60, 200, 0)
+        .workers(2)
+        .bucket("trace-off-ds")
+        .cfg_tweak(|cfg| cfg.observability.trace = false)
+        .build();
+    let mut a = traced.client();
+    let mut b = untraced.client();
+    a.push_data("s", &traced.manifest, Some(&traced.labels.init)).unwrap();
+    b.push_data("s", &untraced.manifest, Some(&untraced.labels.init)).unwrap();
+
+    // tracing never touches the selection RNG or candidate order: exact
+    // ids for the top-k strategies and for the refine protocol alike
+    for strategy in ["entropy", "least_confidence", "random", "k_center_greedy"] {
+        let (x, _, _) = a.query("s", 24, Some(strategy)).unwrap();
+        let (y, _, _) = b.query("s", 24, Some(strategy)).unwrap();
+        let ids = |sel: &[alaas::store::SampleRef]| -> Vec<u32> {
+            sel.iter().map(|s| s.id).collect()
+        };
+        assert_eq!(
+            ids(&x),
+            ids(&y),
+            "{strategy}: tracing changed the selection"
+        );
+    }
+
+    // the disabled plane says so and records nothing
+    let recent = b.trace_recent(0).unwrap();
+    assert_eq!(recent.get("enabled").and_then(Value::as_bool), Some(false));
+    assert!(recent.get("roots").and_then(Value::as_array).unwrap().is_empty());
+
+    // ...while the traced cluster accumulated roots for the same flow
+    let recent = a.trace_recent(0).unwrap();
+    assert!(!recent.get("roots").and_then(Value::as_array).unwrap().is_empty());
+}
+
+/// `trace_get` is queryable by the hex string form the CLI and logs
+/// print, not just the raw number.
+#[test]
+fn trace_get_accepts_hex_string_ids() {
+    let h = ClusterHarness::builder()
+        .sizes(40, 80, 0)
+        .workers(2)
+        .bucket("trace-hex-ds")
+        .build();
+    let mut client = h.client();
+    client.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+    client.query("s", 10, Some("random")).unwrap();
+    let recent = client.trace_recent(1).unwrap();
+    let roots = recent.get("roots").and_then(Value::as_array).unwrap();
+    let id = roots[0].get("trace").and_then(Value::as_i64).unwrap() as u64;
+
+    let mut p = alaas::json::Map::new();
+    p.insert("trace", Value::from(format!("{id:012x}")));
+    let v = client.call("trace_get", Value::Object(p)).unwrap();
+    let spans = alaas::trace::spans_from_value(v.get("spans").unwrap());
+    assert!(!spans.is_empty());
+    assert!(spans.iter().all(|s| s.trace_id == id));
+
+    // unknown method shape: a bad hex id is a clean remote error
+    let mut p = alaas::json::Map::new();
+    p.insert("trace", Value::from("not-hex"));
+    let err = client.call("trace_get", Value::Object(p)).unwrap_err();
+    assert!(format!("{err}").contains("bad hex"), "{err}");
+}
