@@ -30,7 +30,7 @@ use crate::trainer::{self, LinearHead, TrainConfig};
 use crate::util::mat::Mat;
 
 use super::pshea::{
-    run_pshea_observed, AlTask, PsheaConfig, PsheaObserver, PsheaTrace, RoundRecord,
+    run_pshea_resumed, AlTask, PsheaConfig, PsheaObserver, PsheaTrace, RoundRecord,
     StopReason,
 };
 
@@ -155,6 +155,56 @@ impl<S: ArmSelect> AgentTask<S> {
         }
         Ok(self.baseline.clone().unwrap())
     }
+
+    /// Rebuild one arm from a crash-recovery spend ledger (DESIGN.md
+    /// §Durability): `labeled` holds the arm's picked global pool
+    /// positions in labeling order across `rounds` completed rounds,
+    /// `emb_rows` their embeddings re-fetched from the serving layer.
+    /// Oracle labels are recomputed from the pool label service, and the
+    /// head is retrained on init + the restored set — exactly the state
+    /// the last completed round's retrain left behind, so the next
+    /// `run_round` (seeded via `arm_round_seed(seed, rounds)`) behaves
+    /// bit-identically to the uninterrupted run's.
+    pub fn restore_arm(
+        &mut self,
+        strategy: &str,
+        labeled: Vec<usize>,
+        emb_rows: Vec<Vec<f32>>,
+        rounds: u64,
+    ) -> RtResult<()> {
+        if labeled.len() != emb_rows.len() {
+            return Err(RuntimeError::Shape(format!(
+                "restore_arm '{strategy}': {} indices vs {} embedding rows",
+                labeled.len(),
+                emb_rows.len()
+            )));
+        }
+        let labels = labeled
+            .iter()
+            .map(|&g| {
+                self.pool_labels.get(g).copied().ok_or_else(|| {
+                    RuntimeError::Shape(format!(
+                        "restore_arm '{strategy}': index {g} outside pool labels"
+                    ))
+                })
+            })
+            .collect::<RtResult<Vec<u8>>>()?;
+        let head = if labeled.is_empty() {
+            self.baseline_head()?
+        } else {
+            let lab_mat = Mat::from_rows(emb_rows.iter().map(|r| r.as_slice()));
+            let emb = self.init_emb.vstack(&lab_mat);
+            let mut all = self.init_labels.clone();
+            all.extend_from_slice(&labels);
+            trainer::fit(self.backend.as_ref(), &emb, &all, self.num_classes, &self.train_cfg)?
+                .0
+        };
+        self.arms.insert(
+            strategy.to_string(),
+            ArmState { labeled, labels, emb_rows, head, rounds },
+        );
+        Ok(())
+    }
 }
 
 impl<S: ArmSelect> AlTask for AgentTask<S> {
@@ -244,6 +294,12 @@ pub enum JobStatus {
     Done,
     Cancelled,
     Failed(String),
+    /// The serving process crashed mid-run and restart recovery could
+    /// not resume the job (its session is gone, or bootstrap failed).
+    /// Terminal, like `Failed`, but the spend ledger — every round
+    /// record and labeled-row spend replayed from the WAL — stays
+    /// queryable via `agent_status` (DESIGN.md §Durability).
+    Interrupted,
 }
 
 impl JobStatus {
@@ -253,6 +309,7 @@ impl JobStatus {
             JobStatus::Done => "done".into(),
             JobStatus::Cancelled => "cancelled".into(),
             JobStatus::Failed(e) => format!("failed: {e}"),
+            JobStatus::Interrupted => "interrupted".into(),
         }
     }
 }
@@ -367,6 +424,34 @@ impl JobRegistry {
             fail(&slot, metrics, format!("job thread spawn failed: {err}"));
         }
     }
+
+    /// Re-create a job slot under its original id during crash recovery
+    /// (WAL replay). The sequence counter is advanced past the restored
+    /// id so jobs started after the restart never collide with pre-crash
+    /// ones.
+    pub fn restore(&self, id: &str, state: JobState) -> Arc<JobSlot> {
+        if let Some(n) = id.strip_prefix("job-").and_then(|n| n.parse::<u64>().ok()) {
+            self.next.fetch_max(n + 1, Ordering::Relaxed);
+        }
+        let slot = Arc::new(JobSlot {
+            state: Mutex::new(state),
+            done: Condvar::new(),
+            cancel: Arc::new(AtomicBool::new(false)),
+        });
+        self.jobs.lock().unwrap().insert(id.to_string(), slot.clone());
+        slot
+    }
+
+    /// Is any job still running? The durability layer defers WAL
+    /// compaction while one is (round/spend records are not idempotent
+    /// across a snapshot rotation — DESIGN.md §Durability).
+    pub fn any_running(&self) -> bool {
+        self.jobs
+            .lock()
+            .unwrap()
+            .values()
+            .any(|s| s.state.lock().unwrap().status == JobStatus::Running)
+    }
 }
 
 /// Observer publishing loop progress into the slot + `agent.*` metrics.
@@ -427,20 +512,70 @@ pub fn fail(slot: &JobSlot, metrics: &Registry, err: String) {
     slot.done.notify_all();
 }
 
+/// Fans one PSHEA event stream out to the durability log first (so an
+/// event is durable before it becomes observable via `agent_status`),
+/// then the job slot.
+struct TeeObserver<'a, 'b> {
+    wal: &'b mut dyn PsheaObserver,
+    slot: SlotObserver<'a>,
+}
+
+impl PsheaObserver for TeeObserver<'_, '_> {
+    fn on_record(&mut self, rec: &RoundRecord) {
+        self.wal.on_record(rec);
+        self.slot.on_record(rec);
+    }
+    fn on_eliminated(&mut self, strategy: &str, round: usize, predicted: f64, observed: f64) {
+        self.wal.on_eliminated(strategy, round, predicted, observed);
+        self.slot.on_eliminated(strategy, round, predicted, observed);
+    }
+    fn on_round(&mut self, round: usize, live: &[String], total_budget: usize, a_max: f64) {
+        self.wal.on_round(round, live, total_budget, a_max);
+        self.slot.on_round(round, live, total_budget, a_max);
+    }
+}
+
 /// Run Algorithm 1 for `slot` on `task`, publishing progress as it goes.
 /// Called on the job's background thread; classifies the outcome via the
 /// slot's cancel flag and signals completion.
 pub fn drive<S: ArmSelect>(
     slot: &JobSlot,
-    mut task: AgentTask<S>,
+    task: AgentTask<S>,
     strategies: &[String],
     cfg: &PsheaConfig,
     metrics: &Registry,
 ) {
+    drive_with(slot, task, strategies, cfg, metrics, &[], None)
+}
+
+/// [`drive`] with crash-recovery hooks (DESIGN.md §Durability): `prior`
+/// holds the completed-round records an interrupted run left in the WAL
+/// (empty for a fresh job; the task's arms must already be restored via
+/// [`AgentTask::restore_arm`] to match), and `wal`, when present, sees
+/// every loop event before the job slot does — the coordinator logs
+/// round/elimination/spend records through it.
+pub fn drive_with<S: ArmSelect>(
+    slot: &JobSlot,
+    mut task: AgentTask<S>,
+    strategies: &[String],
+    cfg: &PsheaConfig,
+    metrics: &Registry,
+    prior: &[RoundRecord],
+    wal: Option<&mut dyn PsheaObserver>,
+) {
     metrics.counter("agent.jobs_started").fetch_add(1, Ordering::Relaxed);
     let outcome = {
-        let mut obs = SlotObserver { slot, metrics, round_started: Instant::now() };
-        run_pshea_observed(&mut task, strategies, cfg, &mut obs)
+        let slot_obs = SlotObserver { slot, metrics, round_started: Instant::now() };
+        match wal {
+            Some(w) => {
+                let mut tee = TeeObserver { wal: w, slot: slot_obs };
+                run_pshea_resumed(&mut task, strategies, cfg, prior, &mut tee)
+            }
+            None => {
+                let mut obs = slot_obs;
+                run_pshea_resumed(&mut task, strategies, cfg, prior, &mut obs)
+            }
+        }
     };
     let mut s = slot.state.lock().unwrap();
     match outcome {
@@ -983,6 +1118,188 @@ mod tests {
         assert!(reg.get(&ids[0]).is_err(), "oldest job should be evicted");
         assert!(reg.get(ids.last().unwrap()).is_ok());
         assert!(reg.jobs.lock().unwrap().len() <= MAX_FINISHED_JOBS);
+    }
+
+    /// Crash-resume parity at the job layer, no cluster in the way: run a
+    /// job to completion while recording every arm's spend ledger, then
+    /// for every possible crash point "restart" — rebuild the arms via
+    /// `restore_arm` from the ledger, resume via `drive_with` with the
+    /// prior records — and require the final state to match bit for bit.
+    #[test]
+    fn restored_job_resumes_bit_identical() {
+        struct RecordingSelect {
+            inner: PoolSelect,
+            picks: Arc<Mutex<BTreeMap<String, Vec<usize>>>>,
+        }
+        impl ArmSelect for RecordingSelect {
+            fn select_arm(
+                &mut self,
+                strategy: &str,
+                budget: usize,
+                head: &LinearHead,
+                exclude: &[usize],
+                arm_labeled: &Mat,
+                seed: u64,
+            ) -> Result<Vec<Picked>, String> {
+                let picked =
+                    self.inner.select_arm(strategy, budget, head, exclude, arm_labeled, seed)?;
+                self.picks
+                    .lock()
+                    .unwrap()
+                    .entry(strategy.to_string())
+                    .or_default()
+                    .extend(picked.iter().map(|(g, _)| *g));
+                Ok(picked)
+            }
+        }
+
+        let seed = 13;
+        let (init_emb, init_labels, pool_emb, pool_labels, test_emb, test_labels, c) =
+            toy(seed);
+        let backend: Arc<dyn ComputeBackend> = Arc::new(HostBackend::new());
+        let picks: Arc<Mutex<BTreeMap<String, Vec<usize>>>> = Default::default();
+        let sel = RecordingSelect {
+            inner: PoolSelect {
+                pool_emb: pool_emb.clone(),
+                init_emb: init_emb.clone(),
+                backend: backend.clone(),
+            },
+            picks: picks.clone(),
+        };
+        let full_task = AgentTask::new(
+            sel,
+            backend.clone(),
+            pool_emb.rows(),
+            init_emb.clone(),
+            init_labels.clone(),
+            pool_labels.clone(),
+            test_emb.clone(),
+            test_labels.clone(),
+            c,
+            seed,
+            None,
+        );
+        let strategies = vec!["least_confidence".to_string(), "entropy".to_string()];
+        let cfg = quick_cfg(4);
+        let reg = JobRegistry::new();
+        let (_, slot) = reg.create(&strategies);
+        let metrics = Registry::new();
+        drive(&slot, full_task, &strategies, &cfg, &metrics);
+        let full = {
+            let s = slot.state.lock().unwrap();
+            assert_eq!(s.status, JobStatus::Done);
+            s.trace.clone().unwrap()
+        };
+        let picks = picks.lock().unwrap().clone();
+
+        for cut in 1..=full.rounds {
+            let prior: Vec<RoundRecord> =
+                full.records.iter().filter(|r| r.round < cut).cloned().collect();
+            let mut task2 = AgentTask::new(
+                PoolSelect {
+                    pool_emb: pool_emb.clone(),
+                    init_emb: init_emb.clone(),
+                    backend: backend.clone(),
+                },
+                backend.clone(),
+                pool_emb.rows(),
+                init_emb.clone(),
+                init_labels.clone(),
+                pool_labels.clone(),
+                test_emb.clone(),
+                test_labels.clone(),
+                c,
+                seed,
+                None,
+            );
+            for s in &strategies {
+                let rounds = prior.iter().filter(|r| r.strategy == *s).count();
+                if rounds == 0 {
+                    continue;
+                }
+                let ledger: Vec<usize> =
+                    picks[s][..rounds * cfg.round_budget].to_vec();
+                let emb_rows: Vec<Vec<f32>> =
+                    ledger.iter().map(|&g| pool_emb.row(g).to_vec()).collect();
+                task2.restore_arm(s, ledger, emb_rows, rounds as u64).unwrap();
+            }
+            let eliminated: Vec<EliminatedArm> = prior
+                .iter()
+                .filter(|r| r.eliminated)
+                .map(|r| EliminatedArm {
+                    strategy: r.strategy.clone(),
+                    round: r.round,
+                    predicted: r.predicted_next.unwrap_or(f64::NAN),
+                    observed: r.accuracy,
+                })
+                .collect();
+            let live: Vec<String> = strategies
+                .iter()
+                .filter(|s| !prior.iter().any(|r| r.strategy == **s && r.eliminated))
+                .cloned()
+                .collect();
+            let slot2 = reg.restore(
+                "job-77",
+                JobState {
+                    status: JobStatus::Running,
+                    strategies: strategies.clone(),
+                    live,
+                    eliminated,
+                    records: prior.clone(),
+                    rounds: cut,
+                    budget_spent: prior.len() * cfg.round_budget,
+                    best_accuracy: prior.iter().map(|r| r.accuracy).fold(0.0, f64::max),
+                    trace: None,
+                },
+            );
+            drive_with(&slot2, task2, &strategies, &cfg, &metrics, &prior, None);
+            let s = slot2.state.lock().unwrap();
+            assert_eq!(s.status, JobStatus::Done, "cut at round {cut}");
+            let got = s.trace.as_ref().unwrap();
+            assert_eq!(got.records, full.records, "cut at round {cut}");
+            assert_eq!(got.survivors, full.survivors, "cut at round {cut}");
+            assert_eq!(got.stop, full.stop, "cut at round {cut}");
+            assert_eq!(got.total_budget, full.total_budget, "cut at round {cut}");
+            assert_eq!(s.records, full.records, "slot records, cut at round {cut}");
+            assert_eq!(s.budget_spent, full.total_budget, "cut at round {cut}");
+        }
+    }
+
+    #[test]
+    fn registry_restore_advances_sequence_and_interrupted_is_terminal() {
+        let reg = JobRegistry::new();
+        let strategies = vec!["entropy".to_string()];
+        let slot = reg.restore(
+            "job-41",
+            JobState {
+                status: JobStatus::Interrupted,
+                strategies: strategies.clone(),
+                live: strategies.clone(),
+                eliminated: vec![],
+                records: vec![],
+                rounds: 2,
+                budget_spent: 40,
+                best_accuracy: 0.5,
+                trace: None,
+            },
+        );
+        assert_eq!(slot.state.lock().unwrap().status.as_string(), "interrupted");
+        assert!(!reg.any_running(), "interrupted is terminal");
+        // new ids never collide with restored pre-crash ones
+        let (id, slot2) = reg.create(&strategies);
+        assert_eq!(id, "job-42");
+        assert!(reg.any_running());
+        // an interrupted job keeps its ledger queryable but agent_result
+        // reports the terminal state as an error, like failed/cancelled
+        let mut m = Map::new();
+        m.insert("job", Value::from("job-41"));
+        let status = rpc_status(&reg, &Value::Object(m.clone())).unwrap();
+        assert_eq!(status.get("status").and_then(Value::as_str), Some("interrupted"));
+        assert_eq!(status.get("budget_spent").and_then(Value::as_usize), Some(40));
+        m.insert("wait_ms", Value::from(1usize));
+        let err = rpc_result(&reg, &Value::Object(m)).unwrap_err();
+        assert!(err.contains("interrupted"), "{err}");
+        slot2.state.lock().unwrap().status = JobStatus::Done;
     }
 
     #[test]

@@ -8,8 +8,8 @@ mod pshea;
 
 pub use predictor::NegExpPredictor;
 pub use pshea::{
-    run_pshea, run_pshea_observed, AlTask, PsheaConfig, PsheaObserver, PsheaTrace,
-    RoundRecord, StopReason,
+    run_pshea, run_pshea_observed, run_pshea_resumed, AlTask, PsheaConfig, PsheaObserver,
+    PsheaTrace, RoundRecord, StopReason,
 };
 
 /// Per-round strategy seed derivation. `sim::AlExperiment` (in-process)

@@ -146,15 +146,57 @@ pub fn run_pshea_observed(
     cfg: &PsheaConfig,
     obs: &mut dyn PsheaObserver,
 ) -> RtResult<PsheaTrace> {
+    run_pshea_resumed(task, strategies, cfg, &[], obs)
+}
+
+/// [`run_pshea_observed`] continuing from `prior`: the completed-round
+/// records of an interrupted run (crash recovery, DESIGN.md §Durability).
+/// The controller state — per-arm accuracy history, live set, `a_max`,
+/// convergence stall counter, round number — is fully derivable from the
+/// ordered record list plus the config, so it is reconstructed here and
+/// the loop picks up exactly where the prior run's last *complete* round
+/// left off. `task` must already hold the matching arm state (labeled
+/// rows, retrained heads); the caller rebuilds it from the spend ledger.
+/// With an empty `prior` this *is* `run_pshea_observed`. The observer
+/// fires only for new events; the returned trace carries prior + new
+/// records.
+pub fn run_pshea_resumed(
+    task: &mut dyn AlTask,
+    strategies: &[String],
+    cfg: &PsheaConfig,
+    prior: &[RoundRecord],
+    obs: &mut dyn PsheaObserver,
+) -> RtResult<PsheaTrace> {
     assert!(!strategies.is_empty(), "need at least one candidate strategy");
-    let mut live: Vec<String> = strategies.to_vec();
+    let mut live: Vec<String> = strategies
+        .iter()
+        .filter(|s| !prior.iter().any(|r| r.strategy == **s && r.eliminated))
+        .cloned()
+        .collect();
     let mut history: std::collections::BTreeMap<String, (Vec<f64>, Vec<f64>)> =
         strategies.iter().map(|s| (s.clone(), (vec![], vec![]))).collect();
-    let mut records = Vec::new();
-    let mut total_budget = 0usize;
+    for rec in prior {
+        let (xs, ys) = history
+            .get_mut(&rec.strategy)
+            .expect("prior record for a strategy not in the candidate set");
+        xs.push(((xs.len() + 1) * cfg.round_budget) as f64);
+        ys.push(rec.accuracy);
+    }
+    let mut records = prior.to_vec();
+    let mut total_budget = prior.len() * cfg.round_budget;
+    let round_count = prior.iter().map(|r| r.round + 1).max().unwrap_or(0);
+    // a_max and the convergence stall counter are replayed round by round,
+    // exactly as the live loop would have updated them
     let mut a_max = cfg.initial_accuracy.unwrap_or(0.0);
     let mut stall_rounds = 0usize;
-    let mut round = 0usize;
+    for r in 0..round_count {
+        let prev_a_max = a_max;
+        for rec in prior.iter().filter(|rec| rec.round == r) {
+            a_max = a_max.max(rec.accuracy);
+        }
+        stall_rounds = if a_max - prev_a_max < cfg.converge_eps { stall_rounds + 1 } else { 0 };
+    }
+    let mut round = round_count;
     let stop;
 
     'outer: loop {
@@ -557,6 +599,105 @@ mod tests {
         assert_eq!(spy.eliminated, want_elim);
         assert_eq!(spy.rounds, (0..trace.rounds).collect::<Vec<_>>());
         assert_eq!(spy.last_budget, trace.total_budget);
+    }
+
+    /// Crash-recovery invariant: cutting a finished run after any number
+    /// of complete rounds and resuming from those records reproduces the
+    /// uninterrupted trace bit for bit — records (incl. forecasts),
+    /// elimination order, survivors, stop reason, budget.
+    #[test]
+    fn resumed_run_matches_uninterrupted_bit_for_bit() {
+        let curves: &[(&str, f64, f64, f64)] = &[
+            ("flash", 0.75, 0.70, 0.02),
+            ("mid", 0.85, 0.55, 0.004),
+            ("slow_start", 0.95, 0.40, 0.0012),
+        ];
+        let strategies: Vec<String> =
+            ["flash", "mid", "slow_start"].iter().map(|s| s.to_string()).collect();
+        let c = cfg(8);
+        let full = run_pshea(&mut CurveTask::new(curves), &strategies, &c).unwrap();
+        assert!(full.rounds >= 4, "test needs a multi-round run");
+        for cut in 1..=full.rounds {
+            let prior: Vec<RoundRecord> =
+                full.records.iter().filter(|r| r.round < cut).cloned().collect();
+            // rebuild the task's arm state as the job-resume path does:
+            // re-apply each arm's spend ledger
+            let mut task = CurveTask::new(curves);
+            for rec in &prior {
+                *task.spent.entry(rec.strategy.clone()).or_insert(0) += c.round_budget;
+            }
+            let resumed =
+                run_pshea_resumed(&mut task, &strategies, &c, &prior, &mut ()).unwrap();
+            assert_eq!(resumed.records, full.records, "cut at round {cut}");
+            assert_eq!(resumed.survivors, full.survivors, "cut at round {cut}");
+            assert_eq!(resumed.stop, full.stop, "cut at round {cut}");
+            assert_eq!(resumed.total_budget, full.total_budget, "cut at round {cut}");
+            assert_eq!(resumed.rounds, full.rounds, "cut at round {cut}");
+            assert_eq!(resumed.best_accuracy, full.best_accuracy, "cut at round {cut}");
+        }
+    }
+
+    /// The convergence stall counter survives a resume: a plateau run cut
+    /// mid-stall still converges at the same round with the same trace.
+    #[test]
+    fn resume_replays_convergence_stall_state() {
+        let curves: &[(&str, f64, f64, f64)] = &[("plateau", 0.72, 0.70, 0.05)];
+        let strategies = vec!["plateau".to_string()];
+        let mut c = cfg(0);
+        c.converge_rounds = 3;
+        c.converge_eps = 0.002;
+        let full = run_pshea(&mut CurveTask::new(curves), &strategies, &c).unwrap();
+        assert_eq!(full.stop, StopReason::Converged);
+        for cut in 1..=full.rounds {
+            let prior: Vec<RoundRecord> =
+                full.records.iter().filter(|r| r.round < cut).cloned().collect();
+            let mut task = CurveTask::new(curves);
+            for rec in &prior {
+                *task.spent.entry(rec.strategy.clone()).or_insert(0) += c.round_budget;
+            }
+            let resumed =
+                run_pshea_resumed(&mut task, &strategies, &c, &prior, &mut ()).unwrap();
+            assert_eq!(resumed.stop, StopReason::Converged, "cut at round {cut}");
+            assert_eq!(resumed.rounds, full.rounds, "cut at round {cut}");
+            assert_eq!(resumed.records, full.records, "cut at round {cut}");
+        }
+    }
+
+    /// On resume the observer reports only the new rounds, while the
+    /// returned trace still carries prior + new records.
+    #[test]
+    fn resume_observer_sees_only_new_events() {
+        #[derive(Default)]
+        struct Spy {
+            records: usize,
+            rounds: Vec<usize>,
+        }
+        impl PsheaObserver for Spy {
+            fn on_record(&mut self, _rec: &RoundRecord) {
+                self.records += 1;
+            }
+            fn on_round(&mut self, round: usize, _live: &[String], _t: usize, _a: f64) {
+                self.rounds.push(round);
+            }
+        }
+        let curves: &[(&str, f64, f64, f64)] =
+            &[("good", 0.95, 0.5, 0.002), ("bad", 0.70, 0.5, 0.002)];
+        let strategies: Vec<String> =
+            ["good", "bad"].iter().map(|s| s.to_string()).collect();
+        let c = cfg(6);
+        let full = run_pshea(&mut CurveTask::new(curves), &strategies, &c).unwrap();
+        let cut = 2;
+        let prior: Vec<RoundRecord> =
+            full.records.iter().filter(|r| r.round < cut).cloned().collect();
+        let mut task = CurveTask::new(curves);
+        for rec in &prior {
+            *task.spent.entry(rec.strategy.clone()).or_insert(0) += c.round_budget;
+        }
+        let mut spy = Spy::default();
+        let resumed =
+            run_pshea_resumed(&mut task, &strategies, &c, &prior, &mut spy).unwrap();
+        assert_eq!(spy.records, resumed.records.len() - prior.len());
+        assert_eq!(spy.rounds, (cut..resumed.rounds).collect::<Vec<_>>());
     }
 
     #[test]

@@ -31,12 +31,14 @@
 
 use std::collections::{HashMap, HashSet};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::agent::job::{self, AgentTask, ArmSelect, JobRegistry, Picked};
+use crate::agent::{PsheaConfig, RoundRecord};
 use crate::config::AlaasConfig;
+use crate::durable::{DurableLog, SharedLog};
 use crate::json::{Map, Value};
 use crate::metrics::Registry;
 use crate::runtime::backend::ComputeBackend;
@@ -54,6 +56,7 @@ use crate::util::rng::Rng;
 
 use super::membership::{self, Membership, MsClock};
 use super::merge::{self, Candidate, MergeKind};
+use super::recovery::{self, WalObserver};
 use super::shard;
 
 /// Coordinator dependencies. The backend only runs the refine pass over
@@ -142,6 +145,15 @@ struct CoordState {
     clock: MsClock,
     /// Background PSHEA jobs fanning out over worker shards (§Agent).
     jobs: JobRegistry,
+    /// Durability plane (DESIGN.md §Durability): CRC-framed WAL +
+    /// compacting snapshots under `[durability].data_dir`. `None` when
+    /// the section is disabled — every append site stays a no-op and the
+    /// coordinator is exactly the pre-durability in-memory server.
+    wal: Option<Arc<SharedLog>>,
+    /// Highest membership generation already recorded as a WAL `view`
+    /// record — gates `rec_view` appends so the per-tick gauge refresh
+    /// doesn't spam one record per sweep.
+    last_logged_view_gen: AtomicU64,
     shutdown: AtomicBool,
 }
 
@@ -194,19 +206,54 @@ impl Coordinator {
                 mem.heartbeat(w, now, config.cluster.membership.lease_ms);
             }
         }
+        // durability (DESIGN.md §Durability): open the WAL + snapshot
+        // pair and fold the replay BEFORE serving — restored sessions
+        // must be resolvable by the first request in
+        let (wal, recovered) = if config.durability.enabled {
+            let (log, replay) =
+                DurableLog::open(&config.durability, Some(deps.metrics.clone()))?;
+            if replay.torn_bytes > 0 {
+                crate::log_warn!(
+                    "cluster",
+                    "durable replay discarded a {}-byte torn WAL tail",
+                    replay.torn_bytes
+                );
+            }
+            let rec = recovery::fold(&replay);
+            (Some(SharedLog::new(log)), Some(rec))
+        } else {
+            (None, None)
+        };
+        if let Some(rec) = &recovered {
+            // the restarted lease table starts empty: raise the
+            // generation past everything the WAL observed, so every
+            // restored session's layout generation is stale and the
+            // first scatter re-homes it through `plan_rebalance`
+            if config.cluster.membership.enabled {
+                mem.restore_generation(rec.view_gen + 1);
+            }
+        }
+        let push_epoch =
+            recovered.as_ref().and_then(|r| r.max_epoch).map_or(0, |e| e + 1);
         let state = Arc::new(CoordState {
             config,
             deps,
             tracer,
             workers: Mutex::new(workers),
             sessions: Mutex::new(HashMap::new()),
-            push_epoch: std::sync::atomic::AtomicU64::new(0),
+            push_epoch: std::sync::atomic::AtomicU64::new(push_epoch),
             pool: conn_pool,
             membership: Mutex::new(mem),
             clock,
             jobs: JobRegistry::new(),
+            wal,
+            last_logged_view_gen: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
         });
+        let resumable = match recovered {
+            Some(rec) => install_recovered(&state, rec),
+            None => Vec::new(),
+        };
         {
             let mem = state.membership.lock().unwrap();
             update_membership_gauges(&state, mem.generation(), mem.len());
@@ -240,6 +287,11 @@ impl Coordinator {
         } else {
             None
         };
+        // resume threads go last: the accept loop above is already
+        // serving worker heartbeats, so their bootstrap retries converge
+        for (job, slot) in resumable {
+            spawn_resume(state.clone(), job, slot);
+        }
         crate::log_info!("cluster", "coordinator listening on {addr}");
         Ok(Coordinator { addr, state, accept_thread: Some(accept_thread), tick_thread })
     }
@@ -281,6 +333,20 @@ impl Coordinator {
         self.shutdown_inner();
     }
 
+    /// Crash simulation for the durability harness: seal the WAL first —
+    /// the on-disk state freezes at this instant, and any still-running
+    /// job or resume thread writes into the void from here on — then
+    /// tear down the accept/tick threads so the port frees for a
+    /// same-data-dir restart. Unlike [`Coordinator::shutdown`], nothing
+    /// is flushed, completed, or deregistered: exactly what a `kill -9`
+    /// would leave behind, minus the process exit.
+    pub fn hard_kill(mut self) {
+        if let Some(wal) = &self.state.wal {
+            wal.seal();
+        }
+        self.shutdown_inner();
+    }
+
     fn shutdown_inner(&mut self) {
         if self.state.shutdown.swap(true, Ordering::SeqCst) {
             return;
@@ -302,6 +368,310 @@ impl Drop for Coordinator {
     fn drop(&mut self) {
         self.shutdown_inner();
     }
+}
+
+/// Install WAL-replayed state into a fresh coordinator: sessions come
+/// back with their manifests and monotonic identifiers but **empty**
+/// shard layouts — the first scatter re-homes them onto whatever
+/// workers are actually alive now (`plan_rebalance` under live
+/// membership, [`rehome_static`] otherwise) — terminal jobs come back
+/// queryable via `agent_status`, and in-flight jobs are returned for
+/// the resume threads.
+fn install_recovered(
+    state: &Arc<CoordState>,
+    rec: recovery::Recovered,
+) -> Vec<(recovery::RecoveredJob, Arc<job::JobSlot>)> {
+    let metrics = &state.deps.metrics;
+    metrics
+        .counter("recovery.replayed_records")
+        .fetch_add(rec.replayed, Ordering::Relaxed);
+    metrics
+        .counter("recovery.skipped_records")
+        .fetch_add(rec.skipped, Ordering::Relaxed);
+    let n_sessions = rec.sessions.len();
+    {
+        let mut sessions = state.sessions.lock().unwrap();
+        for (name, rs) in rec.sessions {
+            sessions.insert(
+                name,
+                Arc::new(Mutex::new(ClusterSession {
+                    manifest: rs.manifest,
+                    init_labels: rs.init_labels,
+                    epoch: rs.epoch,
+                    view_gen: rs.view_gen,
+                    next_sid: rs.next_sid,
+                    shards: vec![],
+                    retired: vec![],
+                    init_emb: None,
+                    test_emb: None,
+                })),
+            );
+        }
+    }
+    let mut resumable = Vec::new();
+    for j in rec.jobs {
+        if let Some(st) = j.terminal_state() {
+            state.jobs.restore(&j.id, st);
+        } else if j.cancelled {
+            // the cancel was acknowledged before the crash but the final
+            // trace never landed: honor the ack, don't re-drive
+            state.jobs.restore(&j.id, j.state_as(job::JobStatus::Cancelled));
+        } else {
+            let slot = state.jobs.restore(&j.id, j.state_as(job::JobStatus::Running));
+            resumable.push((j, slot));
+        }
+    }
+    if n_sessions > 0 || !resumable.is_empty() {
+        crate::log_info!(
+            "cluster",
+            "recovered {n_sessions} session(s) and {} resumable job(s) from {}",
+            resumable.len(),
+            state.config.durability.data_dir
+        );
+    }
+    resumable
+}
+
+/// How many times a resume thread retries its bootstrap (one retry per
+/// heartbeat-ish interval) before declaring the job interrupted:
+/// restarted workers re-join within a beat or two, but the coordinator
+/// often comes back first.
+const RESUME_BOOTSTRAP_ATTEMPTS: u32 = 20;
+
+/// Drive one WAL-recovered in-flight job to completion on a background
+/// thread. Failure (session gone, workers never returned, embedding
+/// re-fetch failed) flips the job to `interrupted` — terminal like
+/// `failed`, but the replayed spend ledger stays queryable — instead of
+/// letting it vanish or sit "running" forever.
+fn spawn_resume(
+    state: Arc<CoordState>,
+    job: recovery::RecoveredJob,
+    slot: Arc<job::JobSlot>,
+) {
+    let job_id = job.id.clone();
+    let slot_on_err = slot.clone();
+    let metrics = state.deps.metrics.clone();
+    let spawned = std::thread::Builder::new()
+        .name(format!("alaas-resume-{}", job.id))
+        .spawn(move || {
+            if let Err(e) = resume_job(&state, &job, &slot) {
+                crate::log_warn!("cluster", "could not resume job {}: {e}", job.id);
+                state
+                    .deps
+                    .metrics
+                    .counter("agent.jobs_interrupted")
+                    .fetch_add(1, Ordering::Relaxed);
+                let mut s = slot.state.lock().unwrap();
+                s.status = job::JobStatus::Interrupted;
+                drop(s);
+                slot.done.notify_all();
+            }
+        });
+    if let Err(e) = spawned {
+        // no thread will ever finish this slot: don't leave it "running"
+        crate::log_warn!("cluster", "could not spawn resume thread for {job_id}: {e}");
+        metrics.counter("agent.jobs_interrupted").fetch_add(1, Ordering::Relaxed);
+        let mut s = slot_on_err.state.lock().unwrap();
+        s.status = job::JobStatus::Interrupted;
+        drop(s);
+        slot_on_err.done.notify_all();
+    }
+}
+
+/// The body of one resume thread: re-home the session, re-fetch the
+/// labeled rows' embeddings (embeddings are never stored in the WAL —
+/// the workers hold them), restore every live arm at its last completed
+/// round, durably mark the resume point, and re-enter the PSHEA loop.
+/// The resumed elimination trace is bit-identical to an uninterrupted
+/// run: each arm's per-round seed derives from (base seed, rounds run),
+/// and the crash-interrupted partial round was discarded at replay, so
+/// the loop re-runs it from the same state the first run entered it in.
+fn resume_job(
+    state: &Arc<CoordState>,
+    job: &recovery::RecoveredJob,
+    slot: &Arc<job::JobSlot>,
+) -> Result<(), String> {
+    let sess = get_session(state, &job.session)?;
+    let (manifest, init_labels) = {
+        let s = sess.lock().unwrap();
+        (s.manifest.clone(), s.init_labels.clone())
+    };
+    let init_labels = init_labels.ok_or("recovered session has no init labels")?;
+    let retry = Duration::from_millis(
+        state.config.cluster.membership.heartbeat_ms.clamp(50, 1_000),
+    );
+    let mut boot = Err("bootstrap not attempted".to_string());
+    for attempt in 0..RESUME_BOOTSTRAP_ATTEMPTS {
+        if state.shutdown.load(Ordering::SeqCst) {
+            return Err("coordinator shut down during resume".into());
+        }
+        boot = agent_bootstrap(state, &job.session, &sess, job.wait_ms);
+        if boot.is_ok() {
+            break;
+        }
+        if attempt + 1 < RESUME_BOOTSTRAP_ATTEMPTS {
+            std::thread::sleep(retry);
+        }
+    }
+    let (init_emb, test_emb, selectable) = boot?;
+    let cfg = job::config_from_value(
+        state.config.active_learning.agent.to_pshea(),
+        Some(&job.config),
+    )?;
+    let sel = ClusterArmSelect {
+        state: state.clone(),
+        session_id: job.session.clone(),
+        sess: sess.clone(),
+        init_emb: init_emb.clone(),
+        wait_ms: job.wait_ms,
+        wal_job: state.wal.as_ref().map(|w| (w.clone(), job.id.clone())),
+    };
+    // re-fetch each live arm's labeled-row embeddings against the
+    // freshly homed layout, in original pick order
+    let (_, _, epoch, specs) = snapshot_shards(&sess);
+    let mut restores: Vec<(String, Vec<usize>, Vec<Vec<f32>>)> = Vec::new();
+    for strategy in job.live() {
+        let picks = job.arm_picks(&strategy);
+        let fetched =
+            sel.fetch_embeddings(&manifest, Some(&init_labels), epoch, &specs, &picks)?;
+        let (labeled, rows) = fetched.into_iter().unzip();
+        restores.push((strategy, labeled, rows));
+    }
+    let mut task = AgentTask::new(
+        sel,
+        state.deps.backend.clone(),
+        selectable,
+        init_emb,
+        init_labels,
+        job.pool_labels.clone(),
+        test_emb,
+        job.test_labels.clone(),
+        manifest.num_classes,
+        job.seed,
+        Some(slot.cancel.clone()),
+    )
+    .with_tracer(state.tracer.clone());
+    for (strategy, labeled, rows) in restores {
+        let rounds = job.arm_rounds(&strategy);
+        task.restore_arm(&strategy, labeled, rows, rounds).map_err(|e| e.to_string())?;
+    }
+    // durable resume point: on a second crash, replay truncates the
+    // job's stream here instead of mixing two half-run rounds
+    if let Some(w) = &state.wal {
+        w.append(&recovery::rec_job_resume(&job.id, job.completed_rounds))?;
+    }
+    state
+        .deps
+        .metrics
+        .counter("recovery.resumed_jobs")
+        .fetch_add(1, Ordering::Relaxed);
+    crate::log_info!(
+        "cluster",
+        "resuming agent job {} on '{}' from round {}",
+        job.id,
+        job.session,
+        job.completed_rounds
+    );
+    drive_and_log_done(state, slot, task, &job.strategies, &cfg, &job.records, &job.id);
+    Ok(())
+}
+
+/// Run the PSHEA loop for one job and, when durability is on, tee every
+/// loop event into the WAL (durable before observable) and append the
+/// terminal `job_done` record when the loop exits — then attempt a
+/// compaction, since this job no longer blocks one.
+fn drive_and_log_done(
+    state: &Arc<CoordState>,
+    slot: &job::JobSlot,
+    task: AgentTask<ClusterArmSelect>,
+    strategies: &[String],
+    cfg: &PsheaConfig,
+    prior: &[RoundRecord],
+    job_id: &str,
+) {
+    match &state.wal {
+        Some(w) => {
+            let mut obs = WalObserver { wal: w.clone(), job: job_id.to_string() };
+            job::drive_with(
+                slot,
+                task,
+                strategies,
+                cfg,
+                &state.deps.metrics,
+                prior,
+                Some(&mut obs),
+            );
+            let (status, trace) = {
+                let st = slot.state.lock().unwrap();
+                (st.status.as_string(), st.trace.clone())
+            };
+            w.append_best_effort(&recovery::rec_job_done(job_id, &status, trace.as_ref()));
+            try_compact(state);
+        }
+        None => job::drive(slot, task, strategies, cfg, &state.deps.metrics),
+    }
+}
+
+/// [`job::fail`] plus the durable `job_done` record, so a restart
+/// reports the job failed instead of retrying a doomed resume.
+fn fail_logged(state: &CoordState, slot: &job::JobSlot, job_id: &str, err: String) {
+    job::fail(slot, &state.deps.metrics, err);
+    if let Some(w) = &state.wal {
+        let status = slot.state.lock().unwrap().status.as_string();
+        w.append_best_effort(&recovery::rec_job_done(job_id, &status, None));
+    }
+}
+
+/// Opportunistic WAL compaction. Gated on no running jobs: an in-flight
+/// job's stream (`job_start` .. `job_done`) cannot be represented in a
+/// snapshot, so compaction only runs between jobs — the closure
+/// re-checks after the rotation and aborts (harmlessly) if a job
+/// started in the window, because that job's `job_start` necessarily
+/// landed in the new, uncovered log.
+fn try_compact(state: &Arc<CoordState>) {
+    let Some(wal) = &state.wal else { return };
+    if state.jobs.any_running() {
+        return;
+    }
+    let st = state.clone();
+    let result = wal.compact_if_due(move || {
+        if st.jobs.any_running() {
+            return None;
+        }
+        Some(snapshot_records(&st))
+    });
+    if let Err(e) = result {
+        crate::log_warn!("cluster", "wal compaction failed: {e}");
+    }
+}
+
+/// The compaction snapshot: a *compacted log* — `{"records": [...]}` in
+/// the exact record vocabulary of the live WAL, replayed through the
+/// same fold on open. Finished jobs are dropped here, mirroring the
+/// in-process finished-job eviction; only sessions and the view
+/// high-water survive compaction.
+fn snapshot_records(state: &CoordState) -> Value {
+    let mut records = Vec::new();
+    if state.config.cluster.membership.enabled {
+        let generation = state.membership.lock().unwrap().generation();
+        if generation > 0 {
+            records.push(recovery::rec_view(generation));
+        }
+    }
+    let sessions: Vec<(String, Arc<Mutex<ClusterSession>>)> = {
+        let map = state.sessions.lock().unwrap();
+        let mut v: Vec<_> = map.iter().map(|(k, s)| (k.clone(), s.clone())).collect();
+        // deterministic order: replay equivalence shouldn't depend on
+        // hash-map iteration
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    };
+    for (name, sess) in sessions {
+        let s = sess.lock().unwrap();
+        records.push(recovery::rec_session(&name, &s.manifest, s.init_labels.as_deref()));
+        records.push(recovery::rec_layout(&name, s.epoch, s.view_gen, s.next_sid));
+    }
+    crate::json::value::obj([("records", Value::Array(records))])
 }
 
 fn accept_loop(listener: TcpListener, state: Arc<CoordState>) {
@@ -375,7 +745,17 @@ fn dispatch(
         "agent_start" => agent_start(state, params).map(Payload::json),
         "agent_status" => job::rpc_status(&state.jobs, &params.value).map(Payload::json),
         "agent_result" => job::rpc_result(&state.jobs, &params.value).map(Payload::json),
-        "agent_cancel" => job::rpc_cancel(&state.jobs, &params.value).map(Payload::json),
+        "agent_cancel" => {
+            let reply = job::rpc_cancel(&state.jobs, &params.value).map(Payload::json)?;
+            // durable after the fact: a crash between ack and the
+            // driver loop noticing still replays as cancelled
+            if let Some(wal) = &state.wal {
+                if let Ok(id) = str_param(&params.value, "job") {
+                    wal.append_best_effort(&recovery::rec_job_cancel(&id));
+                }
+            }
+            Ok(reply)
+        }
         other => Err(format!("unknown method '{other}'")),
     }
 }
@@ -503,6 +883,17 @@ fn mark_dead(state: &CoordState, slot: usize) {
 fn update_membership_gauges(state: &CoordState, generation: u64, live: usize) {
     state.deps.metrics.gauge_set("membership.generation", generation);
     state.deps.metrics.gauge_set("membership.live_workers", live as u64);
+    // every view transition funnels through here: record generation
+    // advances in the WAL (best-effort — a lost view record only lowers
+    // the generation floor recovery restores, and the +1 re-home
+    // guarantee comes from layout records too). `fetch_max` gates the
+    // append so per-tick gauge refreshes don't re-log the same view.
+    if let Some(wal) = &state.wal {
+        let prev = state.last_logged_view_gen.fetch_max(generation, Ordering::SeqCst);
+        if generation > prev {
+            wal.append_best_effort(&recovery::rec_view(generation));
+        }
+    }
 }
 
 /// Join/renew `addr` in the membership view (the `register` and
@@ -1012,6 +1403,27 @@ fn push_data(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> {
     let next_sid = n_shards as u64;
     let sizes: Vec<Value> =
         shards.iter().map(|s| Value::from(s.indices.len())).collect();
+    // durability: log the session + its layout identifiers BEFORE
+    // installing or acknowledging — a crash after this point replays
+    // the session; a failed append fails the push (the client retries)
+    // and frees the scattered shards
+    if let Some(wal) = &state.wal {
+        let logged = wal
+            .append(&recovery::rec_session(
+                &session_id,
+                &manifest,
+                init_labels.as_deref(),
+            ))
+            .and_then(|_| {
+                wal.append(&recovery::rec_layout(&session_id, epoch, view_gen, next_sid))
+            });
+        if let Err(e) = logged {
+            let accepted: Vec<(u64, u64, usize)> =
+                shards.iter().map(|s| (epoch, s.sid, s.worker)).collect();
+            drop_shard_sessions(state, &session_id, &accepted);
+            return Err(e);
+        }
+    }
     let new_sess = Arc::new(Mutex::new(ClusterSession {
         manifest: manifest.clone(),
         init_labels,
@@ -1048,6 +1460,7 @@ fn push_data(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> {
         retain_undelivered(&new_sess, undelivered);
     }
     state.deps.metrics.meter("cluster.pushed_samples").add(manifest.pool.len() as u64);
+    try_compact(state);
 
     let mut m = Map::new();
     m.insert("session", Value::from(session_id));
@@ -1752,7 +2165,10 @@ fn maybe_rebalance(
     sess: &Arc<Mutex<ClusterSession>>,
 ) -> Result<(), String> {
     if !state.config.cluster.membership.enabled {
-        return Ok(());
+        // the static-config counterpart of the rebalance below: a
+        // WAL-restored session comes back with an empty layout, and the
+        // first scatter re-homes it over the static worker table
+        return rehome_static(state, session_id, sess);
     }
     for _attempt in 0..3 {
         let view = state.membership.lock().unwrap().view();
@@ -1845,6 +2261,7 @@ fn maybe_rebalance(
         // guard and then frees the layout installed here as part of its
         // own replacement cleanup.
         let drops;
+        let installed_next_sid;
         {
             let sessions = state.sessions.lock().unwrap();
             let still_current = sessions
@@ -1892,7 +2309,19 @@ fn maybe_rebalance(
             s.retired = retained;
             s.shards = new_shards;
             s.view_gen = view.generation;
+            installed_next_sid = s.next_sid;
             drops = d;
+        }
+        // best-effort: a lost layout record only means recovery re-homes
+        // from the previous generation's identifiers (sid floor included
+        // in every earlier layout record, minted monotonically)
+        if let Some(wal) = &state.wal {
+            wal.append_best_effort(&recovery::rec_layout(
+                session_id,
+                plan.epoch,
+                view.generation,
+                installed_next_sid,
+            ));
         }
         drop_shard_sessions(state, session_id, &drops);
         state.deps.metrics.counter("membership.rebalances").fetch_add(1, Ordering::Relaxed);
@@ -1914,6 +2343,130 @@ fn maybe_rebalance(
     Err(format!(
         "rebalance of '{session_id}' kept racing membership changes; retry the request"
     ))
+}
+
+/// Re-home a session that has no shard layout onto the static worker
+/// table — the restart-recovery path when `[cluster.membership]` is
+/// disabled. (Under live membership the restored generation floor makes
+/// `plan_rebalance` rebuild the layout instead; this function no-ops on
+/// any session that already has shards.) Shard instance ids are minted
+/// from the restored `next_sid`, so pre-crash instances — possibly
+/// still resident in worker memory — are never read through a reused
+/// id.
+fn rehome_static(
+    state: &Arc<CoordState>,
+    session_id: &str,
+    sess: &Arc<Mutex<ClusterSession>>,
+) -> Result<(), String> {
+    let (manifest, init_labels, epoch, base_sid) = {
+        let s = sess.lock().unwrap();
+        if !s.shards.is_empty() || s.manifest.pool.is_empty() {
+            return Ok(());
+        }
+        (s.manifest.clone(), s.init_labels.clone(), s.epoch, s.next_sid)
+    };
+    let live = live_slots(state);
+    if live.is_empty() {
+        return Err("no live workers registered".into());
+    }
+    let plan =
+        shard::plan(manifest.pool.len(), live.len(), state.config.cluster.shard_policy);
+    let srefs: Vec<ShardRef> = plan
+        .shards
+        .into_iter()
+        .enumerate()
+        .filter(|(_, idx)| !idx.is_empty())
+        .enumerate()
+        .map(|(pos, (i, indices))| ShardRef {
+            shard: pos,
+            sid: base_sid + pos as u64,
+            indices,
+            worker: live[i].0,
+            carries_test: pos == 0,
+        })
+        .collect();
+    let outcomes: Vec<Result<usize, String>> = std::thread::scope(|sc| {
+        let handles: Vec<_> = srefs
+            .iter()
+            .map(|sref| {
+                let (manifest, init_labels) = (&manifest, &init_labels);
+                sc.spawn(move || {
+                    dispatch_shard(
+                        state,
+                        session_id,
+                        epoch,
+                        sref,
+                        manifest,
+                        init_labels.as_deref(),
+                    )
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err("dispatch panicked".into())))
+            .collect()
+    });
+    let mut new_shards: Vec<ShardState> = Vec::new();
+    let mut pushed_ok: Vec<(u64, u64, usize)> = Vec::new();
+    let mut first_err = None;
+    for (sref, o) in srefs.into_iter().zip(outcomes) {
+        match o {
+            Ok(slot) => {
+                pushed_ok.push((epoch, sref.sid, slot));
+                new_shards.push(ShardState {
+                    sid: sref.sid,
+                    indices: sref.indices,
+                    worker: slot,
+                    carries_test: sref.carries_test,
+                });
+            }
+            Err(e) => first_err = first_err.or(Some(e)),
+        }
+    }
+    if let Some(e) = first_err {
+        let und = drop_shard_sessions(state, session_id, &pushed_ok);
+        retain_undelivered(sess, und);
+        return Err(format!("re-homing '{session_id}' failed: {e}"));
+    }
+    let next_sid = base_sid + new_shards.len() as u64;
+    let n_shards = new_shards.len();
+    {
+        // install only if nothing raced us here (a concurrent re-home
+        // from another request thread, or a client re-push replacing the
+        // session object); a lost race frees this attempt's scans
+        let sessions = state.sessions.lock().unwrap();
+        let still_current = sessions
+            .get(session_id)
+            .map(|cur| Arc::ptr_eq(cur, sess))
+            .unwrap_or(false);
+        let mut s = sess.lock().unwrap();
+        if !still_current || !s.shards.is_empty() {
+            drop(s);
+            let live_sess = sessions.get(session_id).cloned();
+            drop(sessions);
+            let und = drop_shard_sessions(state, session_id, &pushed_ok);
+            if let Some(target) = live_sess {
+                retain_undelivered(&target, und);
+            }
+            return Ok(());
+        }
+        s.shards = new_shards;
+        s.next_sid = next_sid;
+    }
+    if let Some(wal) = &state.wal {
+        wal.append_best_effort(&recovery::rec_layout(session_id, epoch, 0, next_sid));
+    }
+    state
+        .deps
+        .metrics
+        .counter("recovery.rehomed_sessions")
+        .fetch_add(1, Ordering::Relaxed);
+    crate::log_info!(
+        "cluster",
+        "re-homed recovered session '{session_id}' onto {n_shards} shard(s)"
+    );
+    Ok(())
 }
 
 /// The plan phase of [`maybe_rebalance`], entirely under the session
@@ -2047,9 +2600,23 @@ struct ClusterArmSelect {
     /// Init-split embeddings (labeled-context base for the refine merge).
     init_emb: Mat,
     wait_ms: u64,
+    /// Durability plane for arm-round spend records: `(log, job id)` on
+    /// the agent path, `None` when durability is disabled.
+    wal_job: Option<(Arc<SharedLog>, String)>,
 }
 
 impl ClusterArmSelect {
+    /// Append the arm-round spend record — one per `select_arm` call,
+    /// empty rounds included, because replay counts these to find an
+    /// arm's resume point. Best-effort: a sealed or failing WAL never
+    /// blocks the round.
+    fn log_spend(&self, strategy: &str, picked: &[Picked]) {
+        if let Some((wal, job)) = &self.wal_job {
+            let idxs: Vec<usize> = picked.iter().map(|p| p.0).collect();
+            wal.append_best_effort(&recovery::rec_job_spend(job, strategy, &idxs));
+        }
+    }
+
     /// Build one agent-path job per non-empty shard, mapping the arm's
     /// global exclusions onto shard-local indices.
     fn jobs_for(
@@ -2206,7 +2773,7 @@ impl ArmSelect for ClusterArmSelect {
         maybe_rebalance(&self.state, &self.session_id, &self.sess)?;
         let (manifest, init_labels, epoch, specs) = snapshot_shards(&self.sess);
         let n_shards = specs.iter().filter(|s| !s.indices.is_empty()).count().max(1);
-        match kind {
+        let picked: Vec<Picked> = match kind {
             MergeKind::ExactTopK { ascending, .. } => {
                 // local top-k under the arm's head with its exclusions;
                 // the union provably contains the global top-k, and the
@@ -2241,7 +2808,7 @@ impl ArmSelect for ClusterArmSelect {
                     .collect();
                 let picked =
                     merge::merge_exact_topk(&pairs, budget.min(pairs.len()), ascending);
-                self.fetch_embeddings(&manifest, init_labels.as_deref(), epoch, &specs, &picked)
+                self.fetch_embeddings(&manifest, init_labels.as_deref(), epoch, &specs, &picked)?
             }
             MergeKind::Random => {
                 // probe for failure lists; sampling is a pure function of
@@ -2271,7 +2838,7 @@ impl ArmSelect for ClusterArmSelect {
                     .into_iter()
                     .map(|rel| ok[rel])
                     .collect();
-                self.fetch_embeddings(&manifest, init_labels.as_deref(), epoch, &specs, &picked)
+                self.fetch_embeddings(&manifest, init_labels.as_deref(), epoch, &specs, &picked)?
             }
             MergeKind::Refine => {
                 let oversample = self.state.config.cluster.oversample_factor;
@@ -2293,6 +2860,7 @@ impl ArmSelect for ClusterArmSelect {
                 let all: Vec<&Candidate> =
                     replies.iter().flat_map(|r| r.candidates.iter()).collect();
                 if all.is_empty() {
+                    self.log_spend(strategy, &[]);
                     return Ok(vec![]);
                 }
                 let (scores, emb) = merge::refine_inputs(&all);
@@ -2311,12 +2879,14 @@ impl ArmSelect for ClusterArmSelect {
                     seed,
                 };
                 let picked = strat.select(&ctx, budget).map_err(|e| e.to_string())?;
-                Ok(picked
+                picked
                     .into_iter()
                     .map(|rel| (all[rel].idx, all[rel].emb.clone()))
-                    .collect())
+                    .collect()
             }
-        }
+        };
+        self.log_spend(strategy, &picked);
+        Ok(picked)
     }
 }
 
@@ -2390,6 +2960,24 @@ fn agent_start(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> 
     let num_classes = manifest.num_classes;
     let n_arms = p.strategies.len();
     let (job_id, job_slot) = state.jobs.create(&p.strategies);
+    // Durability: the job must be on disk before any work happens (and
+    // before the reply carries its id) — a crash right after the ack
+    // must find it resumable.
+    if let Some(wal) = &state.wal {
+        if let Err(e) = wal.append(&recovery::rec_job_start(
+            &job_id,
+            &session_id,
+            &p.strategies,
+            job::config_to_value(&p.cfg),
+            p.seed,
+            &p.pool_labels,
+            &p.test_labels,
+            p.wait_ms,
+        )) {
+            state.jobs.fail_orphan(&job_id, &state.deps.metrics, &e);
+            return Err(e);
+        }
+    }
     let bg = state.clone();
     let jid = job_id.clone();
     std::thread::Builder::new()
@@ -2399,14 +2987,14 @@ fn agent_start(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> 
                 match agent_bootstrap(&bg, &session_id, &sess, p.wait_ms) {
                     Ok(x) => x,
                     Err(e) => {
-                        job::fail(&job_slot, &bg.deps.metrics, e);
+                        fail_logged(&bg, &job_slot, &jid, e);
                         return;
                     }
                 };
             let init_labels = match init_labels {
                 Some(l) => l,
                 None => {
-                    job::fail(&job_slot, &bg.deps.metrics, "missing init labels".into());
+                    fail_logged(&bg, &job_slot, &jid, "missing init labels".into());
                     return;
                 }
             };
@@ -2416,6 +3004,7 @@ fn agent_start(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> 
                 sess,
                 init_emb: init_emb.clone(),
                 wait_ms: p.wait_ms,
+                wal_job: bg.wal.as_ref().map(|w| (w.clone(), jid.clone())),
             };
             let task = AgentTask::new(
                 sel,
@@ -2436,7 +3025,7 @@ fn agent_start(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> 
                 "agent job {jid} started on '{session_id}' ({} arms across shards)",
                 p.strategies.len()
             );
-            job::drive(&job_slot, task, &p.strategies, &p.cfg, &bg.deps.metrics);
+            drive_and_log_done(&bg, &job_slot, task, &p.strategies, &p.cfg, &[], &jid);
         })
         .map_err(|e| {
             // no thread will ever finish this slot: mark it failed so it

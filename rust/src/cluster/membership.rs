@@ -168,6 +168,18 @@ impl Membership {
         self.generation
     }
 
+    /// Raise the generation counter to at least `floor`. Crash recovery
+    /// calls this with the WAL's recorded high-water view generation so a
+    /// restarted coordinator (whose lease table starts empty) can never
+    /// re-issue a generation number that pre-crash workers or shard
+    /// layouts already observed — view generations are monotone across
+    /// restarts, not just within a process lifetime.
+    pub fn restore_generation(&mut self, floor: u64) {
+        if self.generation < floor {
+            self.generation = floor;
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.leases.len()
     }
@@ -490,6 +502,21 @@ mod tests {
         assert!(m.remove("a:1"));
         assert!(!m.remove("a:1"));
         assert_eq!(m.generation(), 5);
+    }
+
+    #[test]
+    fn restore_generation_is_a_monotone_floor() {
+        let mut m = Membership::new();
+        m.heartbeat("a:1", 0, 50);
+        assert_eq!(m.generation(), 1);
+        // recovery floor from a WAL that had seen generation 9
+        m.restore_generation(9);
+        assert_eq!(m.generation(), 9);
+        // a floor below the current value is a no-op, never a regression
+        m.restore_generation(3);
+        assert_eq!(m.generation(), 9);
+        let (_, g) = m.heartbeat("b:2", 0, 50);
+        assert_eq!(g, 10);
     }
 
     #[test]

@@ -24,10 +24,14 @@
 //!   the uncertainty strategies (provably identical to the single-server
 //!   selection), coordinator-side sampling for `random`, and a
 //!   candidate-then-refine pass for the diversity/hybrid strategies.
+//! * [`recovery`] — crash recovery: the WAL record vocabulary the
+//!   coordinator appends through [`crate::durable`] and the pure replay
+//!   fold that rebuilds sessions and in-flight PSHEA jobs on restart.
 
 pub mod coordinator;
 pub mod membership;
 pub mod merge;
+pub(crate) mod recovery;
 pub mod shard;
 pub mod worker;
 

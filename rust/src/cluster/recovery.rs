@@ -1,0 +1,743 @@
+//! Coordinator crash recovery: the WAL record vocabulary and the pure
+//! replay fold (DESIGN.md §Durability).
+//!
+//! The coordinator's durable state is an ordered stream of small JSON
+//! records appended to a [`crate::durable::SharedLog`] *before* the
+//! operation they describe is acknowledged. This module owns both ends
+//! of that contract:
+//!
+//! * **Constructors** (`rec_*`) — the only place record shapes are
+//!   written, so the append sites and the replay can never skew.
+//! * **[`fold`]** — a pure function from a [`Replay`] (snapshot +
+//!   uncovered records) to [`Recovered`]: the sessions to re-install,
+//!   the PSHEA jobs to resume or report, and the monotonic high-waters
+//!   (view generation, push epoch) a restarted coordinator must not
+//!   regress below. Pure on purpose: replay is testable without a
+//!   cluster, and a snapshot is literally a compacted record list run
+//!   through the same `apply` as the live log.
+//!
+//! Job streams and the resume point: each arm-round appends a
+//! `job_spend` (the labeled rows the arm just bought) then a
+//! `job_record` (its measured accuracy); end-of-round appends
+//! `job_elim`s and one `job_round` marker. Replay resumes from the last
+//! `job_round` marker — records and spends past it belong to a round the
+//! crash interrupted, and are discarded so the resumed loop re-runs that
+//! round deterministically (same seed derivation, same picks). A
+//! `job_resume` marker records that truncation durably, so a second
+//! crash replays the same decision instead of mixing two half-rounds.
+//!
+//! Records that fail to apply (an unknown tag from a newer version, a
+//! malformed field) are skipped with a warning, never a panic: recovery
+//! degrades record-by-record, exactly like the torn-tail contract one
+//! layer down.
+
+use std::collections::BTreeMap;
+
+use crate::agent::job::{self, EliminatedArm, JobState, JobStatus};
+use crate::agent::{PsheaObserver, PsheaTrace, RoundRecord};
+use crate::durable::{Replay, SharedLog};
+use crate::json::{value::obj, Map, Value};
+use crate::store::Manifest;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// Record constructors.
+
+/// A session exists (created or replaced by `push_data`).
+pub(crate) fn rec_session(
+    session: &str,
+    manifest: &Manifest,
+    init_labels: Option<&[u8]>,
+) -> Value {
+    let mut m = Map::new();
+    m.insert("t", Value::from("session"));
+    m.insert("session", Value::from(session));
+    m.insert("manifest", manifest.to_value());
+    m.insert(
+        "init_labels",
+        match init_labels {
+            Some(l) => Value::Array(l.iter().map(|&x| Value::from(x as u64)).collect()),
+            None => Value::Null,
+        },
+    );
+    Value::Object(m)
+}
+
+/// A session's shard-layout identifiers moved (push or rebalance
+/// install). Only the monotonic identifiers are durable — concrete
+/// shard→worker ownership is rebuilt from live membership after a
+/// restart, so persisting it would only pin dead workers.
+pub(crate) fn rec_layout(session: &str, epoch: u64, view_gen: u64, next_sid: u64) -> Value {
+    obj([
+        ("t", Value::from("layout")),
+        ("session", Value::from(session)),
+        ("epoch", Value::from(epoch)),
+        ("view_gen", Value::from(view_gen)),
+        ("next_sid", Value::from(next_sid)),
+    ])
+}
+
+/// The membership view generation advanced.
+pub(crate) fn rec_view(generation: u64) -> Value {
+    obj([("t", Value::from("view")), ("generation", Value::from(generation))])
+}
+
+/// A PSHEA job was accepted (logged before the `agent_start` reply).
+/// Carries everything a restart needs to re-drive the loop: the oracle
+/// label arrays ride along because they exist only in the original
+/// request.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn rec_job_start(
+    job: &str,
+    session: &str,
+    strategies: &[String],
+    cfg_value: Value,
+    seed: u64,
+    pool_labels: &[u8],
+    test_labels: &[u8],
+    wait_ms: u64,
+) -> Value {
+    let labels = |l: &[u8]| Value::Array(l.iter().map(|&x| Value::from(x as u64)).collect());
+    obj([
+        ("t", Value::from("job_start")),
+        ("job", Value::from(job)),
+        ("session", Value::from(session)),
+        (
+            "strategies",
+            Value::Array(strategies.iter().map(|s| Value::from(s.clone())).collect()),
+        ),
+        ("config", cfg_value),
+        ("seed", Value::from(seed)),
+        ("pool_labels", labels(pool_labels)),
+        ("test_labels", labels(test_labels)),
+        ("wait_ms", Value::from(wait_ms)),
+    ])
+}
+
+/// One arm bought labels for `picked` (global pool indices, pick order).
+pub(crate) fn rec_job_spend(job: &str, strategy: &str, picked: &[usize]) -> Value {
+    obj([
+        ("t", Value::from("job_spend")),
+        ("job", Value::from(job)),
+        ("strategy", Value::from(strategy)),
+        ("picked", Value::Array(picked.iter().map(|&i| Value::from(i)).collect())),
+    ])
+}
+
+/// One arm finished one round (accuracy measured).
+pub(crate) fn rec_job_record(job: &str, rec: &RoundRecord) -> Value {
+    obj([
+        ("t", Value::from("job_record")),
+        ("job", Value::from(job)),
+        ("record", job::record_to_value(rec)),
+    ])
+}
+
+/// An arm was eliminated at the end of `round`.
+pub(crate) fn rec_job_elim(
+    job: &str,
+    strategy: &str,
+    round: usize,
+    predicted: f64,
+    observed: f64,
+) -> Value {
+    obj([
+        ("t", Value::from("job_elim")),
+        ("job", Value::from(job)),
+        ("strategy", Value::from(strategy)),
+        ("round", Value::from(round)),
+        ("predicted", Value::Number(predicted)),
+        ("observed", Value::Number(observed)),
+    ])
+}
+
+/// Round `round` fully completed — the resume point marker.
+pub(crate) fn rec_job_round(job: &str, round: usize) -> Value {
+    obj([
+        ("t", Value::from("job_round")),
+        ("job", Value::from(job)),
+        ("round", Value::from(round)),
+    ])
+}
+
+/// Restart recovery resumed this job from `from_round` completed rounds,
+/// discarding anything the crash left beyond them.
+pub(crate) fn rec_job_resume(job: &str, from_round: usize) -> Value {
+    obj([
+        ("t", Value::from("job_resume")),
+        ("job", Value::from(job)),
+        ("from_round", Value::from(from_round)),
+    ])
+}
+
+/// `agent_cancel` was acknowledged for this job.
+pub(crate) fn rec_job_cancel(job: &str) -> Value {
+    obj([("t", Value::from("job_cancel")), ("job", Value::from(job))])
+}
+
+/// The job reached a terminal state.
+pub(crate) fn rec_job_done(job: &str, status: &str, trace: Option<&PsheaTrace>) -> Value {
+    obj([
+        ("t", Value::from("job_done")),
+        ("job", Value::from(job)),
+        ("status", Value::from(status)),
+        ("trace", trace.map(trace_value).unwrap_or(Value::Null)),
+    ])
+}
+
+/// Serialize a trace in the exact shape [`job::trace_from_value`] parses.
+pub(crate) fn trace_value(t: &PsheaTrace) -> Value {
+    obj([
+        ("records", Value::Array(t.records.iter().map(job::record_to_value).collect())),
+        (
+            "survivors",
+            Value::Array(t.survivors.iter().map(|s| Value::from(s.clone())).collect()),
+        ),
+        ("stop", Value::from(job::stop_to_str(t.stop))),
+        ("total_budget", Value::from(t.total_budget)),
+        ("best_accuracy", Value::Number(t.best_accuracy)),
+        ("rounds", Value::from(t.rounds)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// The replay fold.
+
+/// A session as the WAL remembers it: manifest + monotonic identifiers.
+/// Shards are rebuilt from live membership after restart (lazy re-home).
+pub(crate) struct RecoveredSession {
+    pub manifest: Manifest,
+    pub init_labels: Option<Vec<u8>>,
+    pub epoch: u64,
+    pub view_gen: u64,
+    pub next_sid: u64,
+}
+
+/// A PSHEA job as replay reconstructed it. For an in-flight job (no
+/// `done`), `records`/`eliminated`/`spends` hold only the completed-round
+/// prefix after [`fold`] finishes — the partial final round is already
+/// discarded.
+pub(crate) struct RecoveredJob {
+    pub id: String,
+    pub session: String,
+    pub strategies: Vec<String>,
+    /// Serialized config overlay ([`job::config_from_value`] input).
+    pub config: Value,
+    pub seed: u64,
+    pub pool_labels: Vec<u8>,
+    pub test_labels: Vec<u8>,
+    pub wait_ms: u64,
+    pub records: Vec<RoundRecord>,
+    pub eliminated: Vec<EliminatedArm>,
+    /// Fully completed rounds (last `job_round` marker + 1).
+    pub completed_rounds: usize,
+    /// Per-strategy labeled picks, one entry per completed arm-round.
+    pub spends: BTreeMap<String, Vec<Vec<usize>>>,
+    pub cancelled: bool,
+    /// `(status string, trace value)` once the job finished pre-crash.
+    pub done: Option<(String, Option<Value>)>,
+}
+
+impl RecoveredJob {
+    /// Keep only the first `rounds` completed rounds: records, spends and
+    /// eliminations past them belong to a crash-interrupted round.
+    fn truncate_to(&mut self, rounds: usize) {
+        self.completed_rounds = rounds;
+        self.records.retain(|r| r.round < rounds);
+        self.eliminated.retain(|e| e.round < rounds);
+        let counts: BTreeMap<String, usize> = self
+            .strategies
+            .iter()
+            .map(|s| (s.clone(), self.records.iter().filter(|r| &r.strategy == s).count()))
+            .collect();
+        for (s, sp) in self.spends.iter_mut() {
+            sp.truncate(counts.get(s).copied().unwrap_or(0));
+        }
+    }
+
+    /// Completed rounds this arm has run (its `restore_arm` round count).
+    pub(crate) fn arm_rounds(&self, strategy: &str) -> u64 {
+        self.records.iter().filter(|r| r.strategy == strategy).count() as u64
+    }
+
+    /// Every row this arm labeled, in pick order.
+    pub(crate) fn arm_picks(&self, strategy: &str) -> Vec<usize> {
+        self.spends.get(strategy).map(|v| v.concat()).unwrap_or_default()
+    }
+
+    /// Strategies not yet eliminated in the kept prefix.
+    pub(crate) fn live(&self) -> Vec<String> {
+        self.strategies
+            .iter()
+            .filter(|s| !self.records.iter().any(|r| &r.strategy == *s && r.eliminated))
+            .cloned()
+            .collect()
+    }
+
+    /// A [`JobState`] for this job under `status`, from the kept prefix.
+    /// Total spend is summed from the per-arm cumulative ledgers, so it
+    /// stays honest even for an interrupted job.
+    pub(crate) fn state_as(&self, status: JobStatus) -> JobState {
+        let mut per_arm: BTreeMap<&str, usize> = BTreeMap::new();
+        for r in &self.records {
+            let e = per_arm.entry(r.strategy.as_str()).or_insert(0);
+            *e = (*e).max(r.budget_spent);
+        }
+        JobState {
+            status,
+            strategies: self.strategies.clone(),
+            live: self.live(),
+            eliminated: self.eliminated.clone(),
+            records: self.records.clone(),
+            rounds: self.completed_rounds,
+            budget_spent: per_arm.values().sum(),
+            best_accuracy: self.records.iter().fold(0.0, |a, r| a.max(r.accuracy)),
+            trace: None,
+        }
+    }
+
+    /// The [`JobState`] for a job that reached a terminal state before
+    /// the crash (`None` for in-flight jobs). A `done` trace that no
+    /// longer parses degrades to `Interrupted` — ledger kept, no panic.
+    pub(crate) fn terminal_state(&self) -> Option<JobState> {
+        let (status, trace_v) = self.done.as_ref()?;
+        Some(match status.as_str() {
+            "done" => {
+                match trace_v.as_ref().map(job::trace_from_value) {
+                    Some(Ok(trace)) => {
+                        let mut s = self.state_as(JobStatus::Done);
+                        s.live = trace.survivors.clone();
+                        s.records = trace.records.clone();
+                        s.rounds = trace.rounds;
+                        s.budget_spent = trace.total_budget;
+                        s.best_accuracy = trace.best_accuracy;
+                        s.trace = Some(trace);
+                        s
+                    }
+                    _ => self.state_as(JobStatus::Interrupted),
+                }
+            }
+            "cancelled" => self.state_as(JobStatus::Cancelled),
+            other => match other.strip_prefix("failed: ") {
+                Some(e) => self.state_as(JobStatus::Failed(e.to_string())),
+                None => self.state_as(JobStatus::Interrupted),
+            },
+        })
+    }
+}
+
+/// Everything [`fold`] reconstructs from one replay.
+pub(crate) struct Recovered {
+    pub sessions: Vec<(String, RecoveredSession)>,
+    pub jobs: Vec<RecoveredJob>,
+    /// Highest membership view generation the WAL observed.
+    pub view_gen: u64,
+    /// Highest push epoch observed (`None` when no session survived).
+    pub max_epoch: Option<u64>,
+    /// Records applied (snapshot + log), for `recovery.replayed_records`.
+    pub replayed: u64,
+    /// Records skipped as unreplayable (version skew, malformed).
+    pub skipped: u64,
+}
+
+/// Replay a [`Replay`] into [`Recovered`]. The snapshot's state is itself
+/// a `{"records": [...]}` list (a compacted log) run through the same
+/// per-record apply as the live records that follow it.
+pub(crate) fn fold(replay: &Replay) -> Recovered {
+    let mut out = Recovered {
+        sessions: Vec::new(),
+        jobs: Vec::new(),
+        view_gen: 0,
+        max_epoch: None,
+        replayed: 0,
+        skipped: 0,
+    };
+    let snap_records: &[Value] = replay
+        .snapshot
+        .as_ref()
+        .and_then(|s| s.get("records"))
+        .and_then(Value::as_array)
+        .unwrap_or(&[]);
+    for v in snap_records.iter().chain(replay.records.iter()) {
+        out.replayed += 1;
+        if let Err(e) = apply(&mut out, v) {
+            out.skipped += 1;
+            crate::log_warn!("durable", "skipping unreplayable WAL record: {e}");
+        }
+    }
+    // in-flight jobs: discard the crash-interrupted partial round
+    for j in out.jobs.iter_mut().filter(|j| j.done.is_none()) {
+        let completed = j.completed_rounds;
+        j.truncate_to(completed);
+    }
+    out
+}
+
+fn str_of(v: &Value, k: &str) -> Result<String, String> {
+    v.get(k)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("record missing string '{k}'"))
+}
+
+fn u64_of(v: &Value, k: &str) -> Result<u64, String> {
+    v.get(k)
+        .and_then(Value::as_i64)
+        .filter(|&x| x >= 0)
+        .map(|x| x as u64)
+        .ok_or_else(|| format!("record missing u64 '{k}'"))
+}
+
+fn usize_of(v: &Value, k: &str) -> Result<usize, String> {
+    v.get(k).and_then(Value::as_usize).ok_or_else(|| format!("record missing usize '{k}'"))
+}
+
+fn labels_of(v: &Value) -> Result<Vec<u8>, String> {
+    v.as_array()
+        .ok_or("labels not an array")?
+        .iter()
+        .map(|x| {
+            x.as_usize()
+                .filter(|&c| c <= u8::MAX as usize)
+                .map(|c| c as u8)
+                .ok_or_else(|| "bad label value".to_string())
+        })
+        .collect()
+}
+
+fn job_mut<'a>(out: &'a mut Recovered, v: &Value) -> Result<&'a mut RecoveredJob, String> {
+    let id = str_of(v, "job")?;
+    out.jobs
+        .iter_mut()
+        .find(|j| j.id == id)
+        .ok_or_else(|| format!("record for unknown job '{id}' (no job_start replayed)"))
+}
+
+fn apply(out: &mut Recovered, v: &Value) -> Result<(), String> {
+    match v.get("t").and_then(Value::as_str).ok_or("record has no 't' tag")? {
+        "session" => {
+            let name = str_of(v, "session")?;
+            let manifest =
+                Manifest::from_value(v.get("manifest").ok_or("session record missing manifest")?)
+                    .map_err(|e| e.to_string())?;
+            let init_labels = match v.get("init_labels") {
+                None | Some(Value::Null) => None,
+                Some(x) => Some(labels_of(x)?),
+            };
+            let rs = RecoveredSession {
+                manifest,
+                init_labels,
+                epoch: 0,
+                view_gen: 0,
+                next_sid: 0,
+            };
+            match out.sessions.iter_mut().find(|(n, _)| n == &name) {
+                Some((_, s)) => *s = rs, // re-push replaces
+                None => out.sessions.push((name, rs)),
+            }
+        }
+        "layout" => {
+            let name = str_of(v, "session")?;
+            let (epoch, view_gen, next_sid) =
+                (u64_of(v, "epoch")?, u64_of(v, "view_gen")?, u64_of(v, "next_sid")?);
+            let (_, s) = out
+                .sessions
+                .iter_mut()
+                .find(|(n, _)| n == &name)
+                .ok_or_else(|| format!("layout for unknown session '{name}'"))?;
+            s.epoch = epoch;
+            s.view_gen = s.view_gen.max(view_gen);
+            s.next_sid = s.next_sid.max(next_sid);
+            out.view_gen = out.view_gen.max(view_gen);
+            out.max_epoch = Some(out.max_epoch.map_or(epoch, |m| m.max(epoch)));
+        }
+        "view" => out.view_gen = out.view_gen.max(u64_of(v, "generation")?),
+        "job_start" => {
+            let id = str_of(v, "job")?;
+            let strategies = v
+                .get("strategies")
+                .and_then(Value::as_array)
+                .ok_or("job_start missing strategies")?
+                .iter()
+                .map(|x| x.as_str().map(str::to_string).ok_or("bad strategy".to_string()))
+                .collect::<Result<Vec<_>, _>>()?;
+            let j = RecoveredJob {
+                id,
+                session: str_of(v, "session")?,
+                strategies,
+                config: v.get("config").cloned().unwrap_or(Value::Null),
+                seed: u64_of(v, "seed")?,
+                pool_labels: labels_of(
+                    v.get("pool_labels").ok_or("job_start missing pool_labels")?,
+                )?,
+                test_labels: labels_of(
+                    v.get("test_labels").ok_or("job_start missing test_labels")?,
+                )?,
+                wait_ms: u64_of(v, "wait_ms")?,
+                records: Vec::new(),
+                eliminated: Vec::new(),
+                completed_rounds: 0,
+                spends: BTreeMap::new(),
+                cancelled: false,
+                done: None,
+            };
+            match out.jobs.iter_mut().find(|e| e.id == j.id) {
+                Some(e) => *e = j,
+                None => out.jobs.push(j),
+            }
+        }
+        "job_spend" => {
+            let strategy = str_of(v, "strategy")?;
+            let picked = v
+                .get("picked")
+                .and_then(Value::as_array)
+                .ok_or("job_spend missing picked")?
+                .iter()
+                .map(|x| x.as_usize().ok_or("bad picked index".to_string()))
+                .collect::<Result<Vec<_>, _>>()?;
+            job_mut(out, v)?.spends.entry(strategy).or_default().push(picked);
+        }
+        "job_record" => {
+            let rec =
+                job::record_from_value(v.get("record").ok_or("job_record missing record")?)?;
+            job_mut(out, v)?.records.push(rec);
+        }
+        "job_elim" => {
+            let arm = EliminatedArm {
+                strategy: str_of(v, "strategy")?,
+                round: usize_of(v, "round")?,
+                predicted: v.get("predicted").and_then(Value::as_f64).unwrap_or(0.0),
+                observed: v.get("observed").and_then(Value::as_f64).unwrap_or(0.0),
+            };
+            let j = job_mut(out, v)?;
+            // the live `job_record` append predates the end-of-round
+            // elimination verdict; stamp it in so the kept prefix carries
+            // the flag exactly like an in-memory trace would
+            if let Some(r) = j
+                .records
+                .iter_mut()
+                .rev()
+                .find(|r| r.strategy == arm.strategy && r.round == arm.round)
+            {
+                r.eliminated = true;
+            }
+            j.eliminated.push(arm);
+        }
+        "job_round" => {
+            let round = usize_of(v, "round")?;
+            let j = job_mut(out, v)?;
+            j.completed_rounds = j.completed_rounds.max(round + 1);
+        }
+        "job_resume" => {
+            let from = usize_of(v, "from_round")?;
+            job_mut(out, v)?.truncate_to(from);
+        }
+        "job_cancel" => job_mut(out, v)?.cancelled = true,
+        "job_done" => {
+            let status = str_of(v, "status")?;
+            let trace = match v.get("trace") {
+                None | Some(Value::Null) => None,
+                Some(t) => Some(t.clone()),
+            };
+            job_mut(out, v)?.done = Some((status, trace));
+        }
+        other => return Err(format!("unknown record type '{other}'")),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// The live-loop WAL observer.
+
+/// [`PsheaObserver`] that appends every loop event to the coordinator's
+/// WAL — teed *before* the slot observer by `job::drive_with`, so an
+/// event is durable before it is observable. Appends are best-effort:
+/// a full disk degrades durability (logged loudly), never the job.
+pub(crate) struct WalObserver {
+    pub wal: Arc<SharedLog>,
+    pub job: String,
+}
+
+impl PsheaObserver for WalObserver {
+    fn on_record(&mut self, rec: &RoundRecord) {
+        self.wal.append_best_effort(&rec_job_record(&self.job, rec));
+    }
+
+    fn on_eliminated(&mut self, strategy: &str, round: usize, predicted: f64, observed: f64) {
+        self.wal
+            .append_best_effort(&rec_job_elim(&self.job, strategy, round, predicted, observed));
+    }
+
+    fn on_round(&mut self, round: usize, _live: &[String], _total: usize, _a_max: f64) {
+        self.wal.append_best_effort(&rec_job_round(&self.job, round));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::SampleRef;
+
+    fn manifest(pool: usize) -> Manifest {
+        let refs = |n: usize, tag: &str| -> Vec<SampleRef> {
+            (0..n)
+                .map(|i| SampleRef { id: i as u32, uri: format!("mem://{tag}/{i}") })
+                .collect()
+        };
+        Manifest {
+            name: "m".into(),
+            num_classes: 2,
+            img_dim: 4,
+            init: refs(2, "init"),
+            pool: refs(pool, "pool"),
+            test: refs(2, "test"),
+        }
+    }
+
+    fn record(strategy: &str, round: usize, spent: usize, acc: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            strategy: strategy.into(),
+            budget_spent: spent,
+            accuracy: acc,
+            predicted_next: None,
+            eliminated: false,
+        }
+    }
+
+    fn start_record(id: &str) -> Value {
+        rec_job_start(
+            id,
+            "sess",
+            &["a".to_string(), "b".to_string()],
+            Value::Null,
+            7,
+            &[0, 1, 0, 1],
+            &[1, 0],
+            50,
+        )
+    }
+
+    fn replay_of(records: Vec<Value>) -> Replay {
+        Replay { snapshot: None, records, torn_bytes: 0 }
+    }
+
+    #[test]
+    fn fold_rebuilds_sessions_and_high_waters() {
+        let m = manifest(4);
+        let r = fold(&replay_of(vec![
+            rec_view(3),
+            rec_session("s1", &m, Some(&[0, 1])),
+            rec_layout("s1", 2, 5, 4),
+            rec_session("s2", &m, None),
+            rec_layout("s2", 6, 1, 2),
+            // re-push of s1 replaces it and advances the epoch
+            rec_session("s1", &m, Some(&[1, 1])),
+            rec_layout("s1", 7, 8, 9),
+        ]));
+        assert_eq!(r.skipped, 0);
+        assert_eq!(r.replayed, 7);
+        assert_eq!(r.sessions.len(), 2);
+        let s1 = &r.sessions.iter().find(|(n, _)| n == "s1").unwrap().1;
+        assert_eq!(s1.epoch, 7);
+        assert_eq!(s1.next_sid, 9);
+        assert_eq!(s1.init_labels.as_deref(), Some(&[1u8, 1][..]));
+        assert_eq!(r.view_gen, 8, "view high-water tracks layout view_gens too");
+        assert_eq!(r.max_epoch, Some(7));
+    }
+
+    #[test]
+    fn fold_discards_the_crash_interrupted_partial_round() {
+        let recs = vec![
+            start_record("job-3"),
+            // round 0 completes for both arms
+            rec_job_spend("job-3", "a", &[0, 1]),
+            rec_job_record("job-3", &record("a", 0, 2, 0.5)),
+            rec_job_spend("job-3", "b", &[2, 3]),
+            rec_job_record("job-3", &record("b", 0, 2, 0.4)),
+            rec_job_round("job-3", 0),
+            // round 1: arm a spent and recorded, b spent, then crash
+            rec_job_spend("job-3", "a", &[5, 6]),
+            rec_job_record("job-3", &record("a", 1, 4, 0.6)),
+            rec_job_spend("job-3", "b", &[7, 8]),
+        ];
+        let r = fold(&replay_of(recs));
+        let j = &r.jobs[0];
+        assert!(j.done.is_none());
+        assert_eq!(j.completed_rounds, 1);
+        assert_eq!(j.records.len(), 2, "round-1 record discarded");
+        assert_eq!(j.arm_picks("a"), vec![0, 1], "round-1 spend discarded with its round");
+        assert_eq!(j.arm_picks("b"), vec![2, 3]);
+        assert_eq!(j.arm_rounds("a"), 1);
+        let s = j.state_as(JobStatus::Interrupted);
+        assert_eq!(s.budget_spent, 4, "ledger sums per-arm cumulative spend");
+        assert_eq!(s.rounds, 1);
+    }
+
+    #[test]
+    fn resume_marker_truncates_before_second_run_records_apply() {
+        // first run reached round 1 (partial), recovery resumed from 1,
+        // second run re-ran round 1 with its own spends — replaying the
+        // whole stream must keep exactly one copy of round 1
+        let recs = vec![
+            start_record("job-1"),
+            rec_job_spend("job-1", "a", &[0]),
+            rec_job_record("job-1", &record("a", 0, 1, 0.5)),
+            rec_job_spend("job-1", "b", &[1]),
+            rec_job_record("job-1", &record("b", 0, 1, 0.4)),
+            rec_job_round("job-1", 0),
+            rec_job_spend("job-1", "a", &[2]), // interrupted round 1
+            rec_job_resume("job-1", 1),
+            rec_job_spend("job-1", "a", &[3]), // the re-run picks differently-framed rows
+            rec_job_record("job-1", &record("a", 1, 2, 0.6)),
+            rec_job_spend("job-1", "b", &[4]),
+            rec_job_record("job-1", &record("b", 1, 2, 0.5)),
+            rec_job_elim("job-1", "b", 1, 0.51, 0.5),
+            rec_job_round("job-1", 1),
+        ];
+        let r = fold(&replay_of(recs));
+        let j = &r.jobs[0];
+        assert_eq!(j.completed_rounds, 2);
+        assert_eq!(j.arm_picks("a"), vec![0, 3], "pre-crash partial spend dropped");
+        assert_eq!(j.arm_picks("b"), vec![1, 4]);
+        assert_eq!(j.live(), vec!["a".to_string()], "elimination stamped onto the record");
+        assert_eq!(j.eliminated.len(), 1);
+        assert!(j.records.iter().any(|x| x.strategy == "b" && x.round == 1 && x.eliminated));
+    }
+
+    #[test]
+    fn terminal_jobs_and_unknown_records_round_trip() {
+        let trace = PsheaTrace {
+            records: vec![record("a", 0, 2, 0.9)],
+            survivors: vec!["a".into()],
+            stop: crate::agent::StopReason::TargetReached,
+            total_budget: 4,
+            best_accuracy: 0.9,
+            rounds: 1,
+        };
+        let recs = vec![
+            start_record("job-9"),
+            rec_job_done("job-9", "done", Some(&trace)),
+            obj([("t", Value::from("from_the_future")), ("x", Value::from(1))]),
+            rec_job_spend("job-0", "a", &[1]), // job without a start: skipped
+        ];
+        let r = fold(&replay_of(recs));
+        assert_eq!(r.skipped, 2);
+        let s = r.jobs[0].terminal_state().unwrap();
+        assert_eq!(s.status, JobStatus::Done);
+        let t = s.trace.unwrap();
+        assert_eq!(t.total_budget, 4);
+        assert_eq!(t.survivors, vec!["a".to_string()]);
+        // snapshots replay through the same apply: wrap the same records
+        let snap = Replay {
+            snapshot: Some(obj([(
+                "records",
+                Value::Array(vec![start_record("job-9"), rec_job_done("job-9", "cancelled", None)]),
+            )])),
+            records: vec![],
+            torn_bytes: 0,
+        };
+        let r2 = fold(&snap);
+        assert_eq!(r2.jobs[0].terminal_state().unwrap().status, JobStatus::Cancelled);
+    }
+}

@@ -8,6 +8,7 @@
 //! setup, so the quickstart config is a handful of lines (Fig 2).
 
 use crate::cluster::membership::MembershipConfig;
+use crate::durable::{DurabilityConfig, FsyncPolicy};
 use crate::json::Value;
 use crate::server::pool::PoolConfig;
 use crate::server::wire::WireMode;
@@ -316,6 +317,11 @@ pub struct AlaasConfig {
     pub cluster: ClusterConfig,
     pub server: ServerConfig,
     pub observability: ObservabilityConfig,
+    /// `durability.*` — coordinator WAL + snapshot crash safety
+    /// (`enabled`, `data_dir`, `fsync`, `snapshot_every`; DESIGN.md
+    /// §Durability). Disabled by default: state stays in RAM exactly as
+    /// before.
+    pub durability: DurabilityConfig,
     /// Directory holding `manifest.json` + `*.hlo.txt` from `make artifacts`.
     pub artifacts_dir: String,
 }
@@ -332,6 +338,7 @@ impl Default for AlaasConfig {
             cluster: ClusterConfig::default(),
             server: ServerConfig::default(),
             observability: ObservabilityConfig::default(),
+            durability: DurabilityConfig::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -540,6 +547,26 @@ impl AlaasConfig {
             }
         }
 
+        if let Some(s) = v.get("durability") {
+            let c = &mut cfg.durability;
+            if let Some(x) = s.get("enabled") {
+                c.enabled =
+                    x.as_bool().ok_or_else(|| cerr("durability.enabled", "expected bool"))?;
+            }
+            if let Some(x) = s.get("data_dir") {
+                c.data_dir = req_str(x, "durability.data_dir")?;
+            }
+            if let Some(x) = s.get("fsync") {
+                let name = req_str(x, "durability.fsync")?;
+                c.fsync = FsyncPolicy::parse(&name).ok_or_else(|| {
+                    cerr("durability.fsync", format!("unknown policy '{name}' (always|never)"))
+                })?;
+            }
+            if let Some(x) = s.get("snapshot_every") {
+                c.snapshot_every = req_usize(x, "durability.snapshot_every")?;
+            }
+        }
+
         if let Some(s) = v.get("observability") {
             let c = &mut cfg.observability;
             if let Some(x) = s.get("trace") {
@@ -642,6 +669,13 @@ impl AlaasConfig {
                 "observability.log_format",
                 format!("unknown log format '{fmt}' (text|json)"),
             ));
+        }
+        let d = &self.durability;
+        if d.snapshot_every == 0 {
+            return Err(cerr("durability.snapshot_every", "must be >= 1"));
+        }
+        if d.enabled && d.data_dir.is_empty() {
+            return Err(cerr("durability.data_dir", "must be non-empty when durability is enabled"));
         }
         Ok(())
     }
@@ -901,6 +935,46 @@ observability:
         // slow_query_ms: 0 legitimately disables slow-query capture
         let cfg = AlaasConfig::from_yaml_str("observability:\n  slow_query_ms: 0\n").unwrap();
         assert_eq!(cfg.observability.slow_query_ms, 0);
+    }
+
+    #[test]
+    fn parses_durability_section() {
+        let cfg = AlaasConfig::from_yaml_str(
+            r#"
+durability:
+  enabled: true
+  data_dir: "/var/lib/alaas"
+  fsync: never
+  snapshot_every: 64
+"#,
+        )
+        .unwrap();
+        let d = &cfg.durability;
+        assert!(d.enabled);
+        assert_eq!(d.data_dir, "/var/lib/alaas");
+        assert_eq!(d.fsync, FsyncPolicy::Never);
+        assert_eq!(d.snapshot_every, 64);
+        // defaults: off, always-fsync, state stays in RAM
+        let d = AlaasConfig::default().durability;
+        assert!(!d.enabled);
+        assert_eq!(d.fsync, FsyncPolicy::Always);
+        assert_eq!(d.snapshot_every, 256);
+    }
+
+    #[test]
+    fn durability_validation() {
+        let e = AlaasConfig::from_yaml_str("durability:\n  fsync: sometimes\n").unwrap_err();
+        assert_eq!(e.field, "durability.fsync");
+        let e =
+            AlaasConfig::from_yaml_str("durability:\n  snapshot_every: 0\n").unwrap_err();
+        assert_eq!(e.field, "durability.snapshot_every");
+        let e = AlaasConfig::from_yaml_str(
+            "durability:\n  enabled: true\n  data_dir: \"\"\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.field, "durability.data_dir");
+        let e = AlaasConfig::from_yaml_str("durability:\n  enabled: 3\n").unwrap_err();
+        assert_eq!(e.field, "durability.enabled");
     }
 
     #[test]

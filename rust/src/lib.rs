@@ -18,6 +18,7 @@ pub mod cli;
 pub mod cluster;
 pub mod config;
 pub mod data;
+pub mod durable;
 pub mod json;
 pub mod store;
 pub mod metrics;

@@ -38,7 +38,7 @@ const SCHEMA: Schema = Schema {
         "config", "dataset", "out", "seed", "pool", "init", "test", "budget",
         "strategy", "target", "max-budget", "round-budget", "addr", "session",
         "backend", "replicas", "rounds", "role", "coordinator", "discover",
-        "remote", "id", "limit",
+        "remote", "id", "limit", "data-dir",
     ],
     bool_flags: &["verbose", "quiet"],
 };
@@ -86,6 +86,8 @@ fn usage() -> &'static str {
      \u{20}          [--discover host:port] = join the coordinator via heartbeat/lease\n\
      \u{20}          membership ([cluster.membership] config) instead of a one-shot register\n\
      \u{20}          (worker: --addr <host:port> = address advertised to the coordinator)\n\
+     \u{20}          [--data-dir <dir>] = coordinator crash safety: WAL + snapshots under\n\
+     \u{20}          <dir>; on restart, sessions and in-flight agent jobs are recovered\n\
      gen-data   --dataset <cifarsim|svhnsim> --out <dir> [--init N --pool N --test N --seed N]\n\
      query      --addr <host:port> --dataset <name> [--budget N --strategy S --seed N]\n\
      agent      --dataset <name> [--target A --max-budget N --round-budget N --backend host|pjrt --rounds N]\n\
@@ -113,10 +115,16 @@ fn make_backend(kind: &str, replicas: usize) -> anyhow::Result<Arc<dyn ComputeBa
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let cfg = match args.get("config") {
+    let mut cfg = match args.get("config") {
         Some(path) => AlaasConfig::from_yaml_file(path)?,
         None => AlaasConfig::default(),
     };
+    if let Some(dir) = args.get("data-dir") {
+        // CLI shorthand for the [durability] section: enable the WAL +
+        // snapshot pair under this directory (coordinator role)
+        cfg.durability.enabled = true;
+        cfg.durability.data_dir = dir.to_string();
+    }
     match args.get_or("role", "single") {
         role @ ("single" | "worker") => {
             let backend = make_backend(args.get_or("backend", "pjrt"), cfg.al_worker.replicas)

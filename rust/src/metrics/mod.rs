@@ -500,21 +500,53 @@ mod tests {
         let snap = obj([
             (
                 "counters",
-                obj([("cache.hits", Value::from(3u64)), ("rpc.errors", Value::from(0u64))]),
+                obj([
+                    ("cache.hits", Value::from(3u64)),
+                    // durability plane (DESIGN.md §Durability)
+                    ("recovery.replayed_records", Value::from(17u64)),
+                    ("recovery.resumed_jobs", Value::from(1u64)),
+                    ("rpc.errors", Value::from(0u64)),
+                    ("wal.appends", Value::from(9u64)),
+                    ("wal.bytes", Value::from(2048u64)),
+                ]),
             ),
             (
                 "histograms",
-                obj([(
-                    "rpc.query",
-                    obj([
-                        ("count", Value::from(4u64)),
-                        ("mean_us", Value::Number(250.0)),
-                        ("p50_us", Value::Number(200.0)),
-                        ("p95_us", Value::Number(400.0)),
-                        ("p99_us", Value::Number(400.0)),
-                        ("max_us", Value::Number(412.5)),
-                    ]),
-                )]),
+                obj([
+                    (
+                        "pool.backoff_ms",
+                        obj([
+                            ("count", Value::from(2u64)),
+                            ("mean_us", Value::Number(15000.0)),
+                            ("p50_us", Value::Number(10000.0)),
+                            ("p95_us", Value::Number(20000.0)),
+                            ("p99_us", Value::Number(20000.0)),
+                            ("max_us", Value::Number(20000.0)),
+                        ]),
+                    ),
+                    (
+                        "rpc.query",
+                        obj([
+                            ("count", Value::from(4u64)),
+                            ("mean_us", Value::Number(250.0)),
+                            ("p50_us", Value::Number(200.0)),
+                            ("p95_us", Value::Number(400.0)),
+                            ("p99_us", Value::Number(400.0)),
+                            ("max_us", Value::Number(412.5)),
+                        ]),
+                    ),
+                    (
+                        "wal.fsync_ms",
+                        obj([
+                            ("count", Value::from(9u64)),
+                            ("mean_us", Value::Number(800.0)),
+                            ("p50_us", Value::Number(500.0)),
+                            ("p95_us", Value::Number(2000.0)),
+                            ("p99_us", Value::Number(2000.0)),
+                            ("max_us", Value::Number(2500.0)),
+                        ]),
+                    ),
+                ]),
             ),
             (
                 "meters",
@@ -530,13 +562,29 @@ mod tests {
         ]);
         let golden = "\
 alaas_cache_hits 3\n\
+alaas_recovery_replayed_records 17\n\
+alaas_recovery_resumed_jobs 1\n\
 alaas_rpc_errors 0\n\
+alaas_wal_appends 9\n\
+alaas_wal_bytes 2048\n\
+alaas_pool_backoff_ms_count 2\n\
+alaas_pool_backoff_ms_us{quantile=\"0.5\"} 10000\n\
+alaas_pool_backoff_ms_us{quantile=\"0.95\"} 20000\n\
+alaas_pool_backoff_ms_us{quantile=\"0.99\"} 20000\n\
+alaas_pool_backoff_ms_mean_us 15000\n\
+alaas_pool_backoff_ms_max_us 20000\n\
 alaas_rpc_query_count 4\n\
 alaas_rpc_query_us{quantile=\"0.5\"} 200\n\
 alaas_rpc_query_us{quantile=\"0.95\"} 400\n\
 alaas_rpc_query_us{quantile=\"0.99\"} 400\n\
 alaas_rpc_query_mean_us 250\n\
 alaas_rpc_query_max_us 412.5\n\
+alaas_wal_fsync_ms_count 9\n\
+alaas_wal_fsync_ms_us{quantile=\"0.5\"} 500\n\
+alaas_wal_fsync_ms_us{quantile=\"0.95\"} 2000\n\
+alaas_wal_fsync_ms_us{quantile=\"0.99\"} 2000\n\
+alaas_wal_fsync_ms_mean_us 800\n\
+alaas_wal_fsync_ms_max_us 2500\n\
 alaas_pipeline_samples_total 42\n\
 alaas_pipeline_samples_rate_per_sec 1.5\n\
 alaas_pipeline_samples_rate_1m 6\n";

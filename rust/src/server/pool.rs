@@ -24,12 +24,19 @@
 //! * **Idle hygiene.** Connections parked longer than `idle_timeout_ms`
 //!   are closed at the next checkout; `invalidate` drops a peer's whole
 //!   idle set (worker re-registration, observed death).
+//! * **Redial backoff.** Consecutive dial *failures* to a peer open a
+//!   capped, exponentially growing wait window (25 ms doubling to
+//!   400 ms, deterministically jittered per `(addr, streak)` so a fleet
+//!   of clients never thunders in phase). A dial inside an open window
+//!   sleeps out the remainder first — a dead peer cannot be hot-loop
+//!   dialed during recovery — while the first dial after any success is
+//!   always immediate, so the happy path pays nothing.
 //!
 //! Metrics (when constructed with a registry): `pool.hits`, `pool.dials`,
-//! `pool.evictions`, `pool.retries`, `pool.keepalive_probes` counters and
-//! the `pool.in_flight` gauge. Keepalive probes (`probe_peer`) never
-//! count as dials: the dials-per-scatter pin stays meaningful with
-//! background health checking on.
+//! `pool.evictions`, `pool.retries`, `pool.keepalive_probes`,
+//! `pool.backoff_ms` counters and the `pool.in_flight` gauge. Keepalive
+//! probes (`probe_peer`) never count as dials: the dials-per-scatter pin
+//! stays meaningful with background health checking on.
 
 use std::collections::HashMap;
 use std::io::ErrorKind;
@@ -40,6 +47,7 @@ use std::time::{Duration, Instant};
 
 use crate::json::{Map, Value};
 use crate::metrics::Registry;
+use crate::util::fnv1a;
 
 use super::rpc::{self, RpcError};
 use super::wire::{self, Body, Payload, WireMode};
@@ -149,6 +157,36 @@ struct PeerState {
     /// Bumped by `invalidate`; a checkout from an older generation is
     /// dropped at checkin instead of being pooled.
     generation: u64,
+    /// Consecutive dial failures since the last successful dial — the
+    /// redial-backoff exponent. Only TCP connect failures count;
+    /// negotiation errors have their own bounded `hello` deadline.
+    fail_streak: u32,
+    /// When the streak's latest failure happened; the backoff window is
+    /// measured from here, so time already spent elsewhere (e.g. the
+    /// failed dial's own timeout) is credited against the wait.
+    last_fail: Option<Instant>,
+}
+
+/// Backoff floor: the window after the first failed dial.
+const BACKOFF_BASE_MS: u64 = 25;
+/// Backoff ceiling: windows stop growing here so a long-dead peer's
+/// eventual recovery is noticed within half a second.
+const BACKOFF_CAP_MS: u64 = 400;
+
+/// The jittered wait window before dial attempt `streak + 1`:
+/// `min(25ms * 2^(streak-1), 400ms)`, scaled into `[1/2, 1]` of itself by
+/// a hash of `(addr, streak)`. Deterministic on purpose — no RNG state,
+/// reproducible in tests — while still decorrelating different clients
+/// (different hash inputs) so they cannot redial a recovering peer in
+/// lockstep.
+fn backoff_wait_ms(addr: &str, streak: u32) -> u64 {
+    debug_assert!(streak >= 1);
+    let raw = BACKOFF_BASE_MS
+        .saturating_mul(1u64 << (streak.saturating_sub(1)).min(10))
+        .min(BACKOFF_CAP_MS);
+    let h = fnv1a(addr.as_bytes()) ^ (streak as u64);
+    // factor in [1/2, 1): wait = raw/2 + raw/2 * (h % 1024)/1024
+    raw / 2 + (raw / 2).saturating_mul(h % 1024) / 1024
 }
 
 /// Thread-safe per-peer pool of persistent, wire-negotiated connections.
@@ -308,7 +346,17 @@ impl ConnPool {
     /// socket as v1 JSON (any peer can answer); a refusal or a pre-v2
     /// `unknown method` error leaves the connection on the JSON wire.
     fn dial_negotiated(&self, addr: &str, generation: u64) -> Result<PooledConn, RpcError> {
-        let mut stream = dial(addr, self.dial_timeout)?;
+        self.backoff_before_dial(addr);
+        let mut stream = match dial(addr, self.dial_timeout) {
+            Ok(s) => {
+                self.note_dial_outcome(addr, true);
+                s
+            }
+            Err(e) => {
+                self.note_dial_outcome(addr, false);
+                return Err(e);
+            }
+        };
         let mut next_id = 1u64;
         let mut mode = WireMode::Json;
         if self.prefer == WireMode::Binary {
@@ -448,6 +496,39 @@ impl ConnPool {
                 }
             }
             Err(e) => Err(e),
+        }
+    }
+
+    /// Sleep out whatever remains of the peer's current backoff window.
+    /// No-op when the streak is zero (first dial, or any dial after a
+    /// success) or when the window already elapsed while the caller was
+    /// doing other work. The lock is never held across the sleep.
+    fn backoff_before_dial(&self, addr: &str) {
+        let wait = {
+            let peers = self.peers.lock().unwrap();
+            let Some(p) = peers.get(addr) else { return };
+            if p.fail_streak == 0 {
+                return;
+            }
+            let Some(last) = p.last_fail else { return };
+            Duration::from_millis(backoff_wait_ms(addr, p.fail_streak))
+                .saturating_sub(last.elapsed())
+        };
+        if !wait.is_zero() {
+            self.count("pool.backoff_ms", wait.as_millis() as u64);
+            std::thread::sleep(wait);
+        }
+    }
+
+    fn note_dial_outcome(&self, addr: &str, ok: bool) {
+        let mut peers = self.peers.lock().unwrap();
+        let p = peers.entry(addr.to_string()).or_default();
+        if ok {
+            p.fail_streak = 0;
+            p.last_fail = None;
+        } else {
+            p.fail_streak = p.fail_streak.saturating_add(1);
+            p.last_fail = Some(Instant::now());
         }
     }
 
@@ -759,6 +840,58 @@ mod tests {
         assert!(!pool.probe_peer(&dead, Duration::from_millis(300)));
         assert_eq!(counter(&metrics, "pool.keepalive_probes"), 3);
         assert_eq!(counter(&metrics, "pool.dials"), 1, "only the real call dialed");
+    }
+
+    #[test]
+    fn backoff_window_grows_caps_and_jitters_deterministically() {
+        for streak in 1..=12u32 {
+            let raw = BACKOFF_BASE_MS
+                .saturating_mul(1u64 << (streak - 1).min(10))
+                .min(BACKOFF_CAP_MS);
+            let w = backoff_wait_ms("10.0.0.1:7001", streak);
+            assert!(
+                w >= raw / 2 && w <= raw,
+                "streak {streak}: wait {w}ms outside [{}, {raw}]",
+                raw / 2
+            );
+            assert_eq!(
+                w,
+                backoff_wait_ms("10.0.0.1:7001", streak),
+                "jitter must be deterministic per (addr, streak)"
+            );
+        }
+        // different peers land on different points of the window
+        assert!(backoff_wait_ms("a:1", 40) <= BACKOFF_CAP_MS);
+    }
+
+    /// The ISSUE 7 satellite pin: a dead peer's redials open a growing
+    /// wait window (counted under `pool.backoff_ms`) instead of
+    /// hot-looping connect attempts, and the very first dial never waits.
+    #[test]
+    fn dead_peer_redials_back_off_instead_of_hot_looping() {
+        // grab a port, then free it: connects get an instant refusal,
+        // so any pool.backoff_ms growth is from the backoff sleep alone
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let metrics = Registry::new();
+        let pool = ConnPool::new(PoolConfig::default(), WireMode::Binary, Some(metrics.clone()))
+            .with_timeouts(Duration::from_millis(200), Duration::from_millis(200));
+        pool.call(&addr, "echo", &Payload::json(Value::Null), None).unwrap_err();
+        assert_eq!(counter(&metrics, "pool.backoff_ms"), 0, "first dial must not back off");
+        pool.call(&addr, "echo", &Payload::json(Value::Null), None).unwrap_err();
+        let after_second = counter(&metrics, "pool.backoff_ms");
+        // the counted wait is the window minus time already elapsed since
+        // the failure, so allow a few ms of rounding below the jitter floor
+        assert!(
+            after_second >= BACKOFF_BASE_MS / 2 - 5,
+            "second dial should wait out ~the base window, waited {after_second}ms"
+        );
+        pool.call(&addr, "echo", &Payload::json(Value::Null), None).unwrap_err();
+        let after_third = counter(&metrics, "pool.backoff_ms");
+        assert!(after_third > after_second, "the window must grow with the streak");
+        assert!(after_third <= 3 * BACKOFF_CAP_MS, "windows must stay capped");
     }
 
     #[test]

@@ -124,6 +124,10 @@ pub enum FaultAction {
     AdvanceMs(u64),
     /// Force one membership sweep (lease expiry + keepalive probes).
     Tick,
+    /// Hard-kill the coordinator (no flush, WAL sealed mid-write — the
+    /// `kill -9` simulation) and restart it on the same port over the
+    /// same data dir, exercising WAL + snapshot recovery.
+    CrashRestart,
 }
 
 struct WorkerHandle {
@@ -148,6 +152,7 @@ pub struct HarnessBuilder {
     heartbeat_ms: u64,
     lease_ms: u64,
     with_single: bool,
+    durable: bool,
     coord_tweak: Option<Box<dyn Fn(&mut AlaasConfig)>>,
     cfg_tweak: Option<Box<dyn Fn(&mut AlaasConfig)>>,
 }
@@ -189,6 +194,15 @@ impl HarnessBuilder {
     }
     pub fn with_single(mut self, on: bool) -> Self {
         self.with_single = on;
+        self
+    }
+    /// Give the coordinator a fresh durable data dir (WAL + snapshots)
+    /// under `target/harness-data/` (override with
+    /// `ALAAS_HARNESS_DATA_DIR`) — the prerequisite for
+    /// [`FaultAction::CrashRestart`] /
+    /// [`ClusterHarness::crash_restart_coordinator`].
+    pub fn durable(mut self, on: bool) -> Self {
+        self.durable = on;
         self
     }
     /// Mutate the coordinator's config before start (e.g. disable the
@@ -233,6 +247,19 @@ impl HarnessBuilder {
         coord_cfg.server.wire = self.coord_wire;
         if let Some(tweak) = &self.coord_tweak {
             tweak(&mut coord_cfg);
+        }
+        let data_dir = self.durable.then(|| {
+            let base = std::env::var("ALAAS_HARNESS_DATA_DIR")
+                .unwrap_or_else(|_| "target/harness-data".to_string());
+            let seq = HARNESS_SEQ.fetch_add(1, Ordering::Relaxed);
+            let path = PathBuf::from(base)
+                .join(format!("{}-{}-{seq}", self.bucket, std::process::id()));
+            std::fs::create_dir_all(&path).unwrap();
+            path.display().to_string()
+        });
+        if let Some(dir) = &data_dir {
+            coord_cfg.durability.enabled = true;
+            coord_cfg.durability.data_dir = dir.clone();
         }
         let coordinator;
         let coord_metrics = Registry::new();
@@ -282,6 +309,7 @@ impl HarnessBuilder {
             coord_addr,
             coord_cfg,
             cfg,
+            data_dir,
             workers,
             single,
             manifest,
@@ -311,6 +339,8 @@ pub struct ClusterHarness {
     pub coord_addr: SocketAddr,
     coord_cfg: AlaasConfig,
     cfg: AlaasConfig,
+    /// Coordinator WAL + snapshot dir when built with `.durable(true)`.
+    pub data_dir: Option<String>,
     workers: Vec<WorkerHandle>,
     single: Option<AlServer>,
     pub manifest: Manifest,
@@ -334,6 +364,7 @@ impl ClusterHarness {
             heartbeat_ms: 50,
             lease_ms: 60_000,
             with_single: false,
+            durable: false,
             coord_tweak: None,
             cfg_tweak: None,
         }
@@ -479,14 +510,32 @@ impl ClusterHarness {
         let mut cfg = self.coord_cfg.clone();
         cfg.al_worker.port = port;
         cfg.cluster.workers = vec![]; // rediscovery, not static config
-        let coordinator = Coordinator::start(
-            cfg,
-            CoordinatorDeps {
-                backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
-                metrics: self.coord_metrics.clone(),
-            },
-        )
-        .unwrap();
+        let coordinator = start_with_bind_retry(cfg, self.coord_metrics.clone());
+        self.coord_addr = coordinator.addr();
+        self.coordinator = Some(coordinator);
+    }
+
+    /// Hard-kill the coordinator — nothing is flushed, completed, or
+    /// deregistered; the WAL seals at this instant exactly as a `kill
+    /// -9` would leave it — then restart it on the same port over the
+    /// same data dir. With `.durable(true)` the restarted coordinator
+    /// replays its snapshot + WAL: sessions come back without a re-push
+    /// and in-flight agent jobs resume or report `interrupted`.
+    pub fn crash_restart_coordinator(&mut self) {
+        let old = self.coordinator.take().expect("coordinator running");
+        let port = self.coord_addr.port();
+        self.log(&format!(
+            "CRASH-RESTART coordinator on port {port} (data dir {:?})",
+            self.data_dir
+        ));
+        old.hard_kill();
+        let mut cfg = self.coord_cfg.clone();
+        cfg.al_worker.port = port;
+        if self.membership {
+            // rediscovery via worker heartbeat loops, not static config
+            cfg.cluster.workers = vec![];
+        }
+        let coordinator = start_with_bind_retry(cfg, self.coord_metrics.clone());
         self.coord_addr = coordinator.addr();
         self.coordinator = Some(coordinator);
     }
@@ -619,6 +668,7 @@ impl ClusterHarness {
             FaultAction::Resume(i) => self.resume_worker(i),
             FaultAction::AdvanceMs(ms) => self.advance_time_ms(ms),
             FaultAction::Tick => self.tick(),
+            FaultAction::CrashRestart => self.crash_restart_coordinator(),
         }
     }
 
@@ -696,6 +746,28 @@ impl Drop for ClusterHarness {
             self.dump_diagnostics("test panicked");
         }
         self.log.line("harness down");
+    }
+}
+
+/// Start a coordinator, retrying while the crashed predecessor's port
+/// drains — a hard kill can leave the listener in TIME_WAIT briefly.
+fn start_with_bind_retry(cfg: AlaasConfig, metrics: Arc<Registry>) -> Coordinator {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match Coordinator::start(
+            cfg.clone(),
+            CoordinatorDeps {
+                backend: Arc::new(HostBackend::new()) as Arc<dyn ComputeBackend>,
+                metrics: metrics.clone(),
+            },
+        ) {
+            Ok(c) => return c,
+            Err(e) if Instant::now() < deadline => {
+                eprintln!("[harness] coordinator bind retry: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => panic!("coordinator restart never bound: {e}"),
+        }
     }
 }
 

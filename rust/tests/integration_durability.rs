@@ -1,0 +1,282 @@
+//! Coordinator crash safety (DESIGN.md §Durability): a coordinator
+//! started with a durable data dir must survive a hard kill — nothing
+//! flushed, WAL sealed mid-stream — and come back with its sessions
+//! re-homed and its in-flight PSHEA jobs either resumed or terminal.
+//!
+//! The headline pin: a coordinator hard-killed mid-agent-job, restarted
+//! over the same data dir, resumes the job from its last completed
+//! round and finishes with a trace **bit-identical** to an
+//! uninterrupted in-process run — same elimination order, survivor,
+//! and budget spend. Plus: deterministic re-selection on recovered
+//! sessions (static re-home and membership rebalance paths), finished
+//! jobs' results surviving a restart, and a torn WAL tail being
+//! discarded without a panic.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use alaas::agent::{run_pshea, PsheaConfig, PsheaTrace};
+use alaas::data::{generate, DatasetSpec};
+use alaas::runtime::backend::ComputeBackend;
+use alaas::runtime::HostBackend;
+use alaas::sim::AlExperiment;
+use alaas::trainer::TrainConfig;
+
+use common::cluster_harness::ClusterHarness;
+
+/// Same fixture as `integration_agent.rs`, so the in-process comparator
+/// and the crash-resumed job see byte-identical data.
+const DATA_SEED: u64 = 7;
+const AGENT_SEED: u64 = 4242;
+const N_INIT: usize = 60;
+const N_POOL: usize = 240;
+const N_TEST: usize = 120;
+
+fn spec() -> DatasetSpec {
+    DatasetSpec::cifarsim(DATA_SEED).with_sizes(N_INIT, N_POOL, N_TEST)
+}
+
+/// Unreachable target so the loop runs to its round limit; min_history
+/// 2 so eliminations start at round 1 — the trace has real structure to
+/// compare.
+fn agent_cfg() -> PsheaConfig {
+    PsheaConfig {
+        target_accuracy: 2.0,
+        max_budget: 1_000_000,
+        round_budget: 20,
+        converge_rounds: 0,
+        converge_eps: 0.0,
+        max_rounds: 4,
+        min_history: 2,
+        initial_accuracy: None,
+    }
+}
+
+fn arm_names() -> Vec<String> {
+    ["least_confidence", "margin_confidence", "entropy"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+/// Ground truth: Algorithm 1 run in-process, uninterrupted.
+fn in_process_trace() -> PsheaTrace {
+    let gen = generate(&spec());
+    let backend: Arc<dyn ComputeBackend> = Arc::new(HostBackend::new());
+    let mut exp = AlExperiment::from_generated(
+        backend,
+        &gen,
+        spec().num_classes,
+        TrainConfig::default(),
+        AGENT_SEED,
+    )
+    .unwrap();
+    run_pshea(&mut exp, &arm_names(), &agent_cfg()).unwrap()
+}
+
+fn elimination_order(t: &PsheaTrace) -> Vec<(usize, String)> {
+    t.records
+        .iter()
+        .filter(|r| r.eliminated)
+        .map(|r| (r.round, r.strategy.clone()))
+        .collect()
+}
+
+fn assert_trace_parity(got: &PsheaTrace, want: &PsheaTrace, tag: &str) {
+    assert_eq!(got.stop, want.stop, "{tag}: stop reason");
+    assert_eq!(got.rounds, want.rounds, "{tag}: rounds-to-stop");
+    assert_eq!(got.survivors, want.survivors, "{tag}: surviving strategy");
+    assert_eq!(
+        elimination_order(got),
+        elimination_order(want),
+        "{tag}: elimination order"
+    );
+    assert_eq!(got.total_budget, want.total_budget, "{tag}: budget spent");
+    assert_eq!(got.records.len(), want.records.len(), "{tag}: record count");
+    for (a, b) in got.records.iter().zip(&want.records) {
+        assert_eq!((a.round, &a.strategy), (b.round, &b.strategy), "{tag}: record order");
+        assert!(
+            (a.accuracy - b.accuracy).abs() < 1e-9,
+            "{tag}: round {} {} accuracy {} vs {}",
+            a.round,
+            a.strategy,
+            a.accuracy,
+            b.accuracy
+        );
+    }
+    assert!((got.best_accuracy - want.best_accuracy).abs() < 1e-9, "{tag}: best accuracy");
+}
+
+fn durable_cluster(bucket: &str, n_workers: usize) -> ClusterHarness {
+    ClusterHarness::builder()
+        .bucket(bucket)
+        .data_seed(DATA_SEED)
+        .sizes(N_INIT, N_POOL, N_TEST)
+        .workers(n_workers)
+        .durable(true)
+        .build()
+}
+
+/// The acceptance pin: hard-kill the coordinator while an agent job has
+/// completed at least one round but not finished, restart it over the
+/// same data dir, and the job resumes from its last completed round —
+/// final trace bit-identical to the uninterrupted in-process run.
+#[test]
+fn coordinator_crash_mid_job_resumes_with_identical_trace() {
+    let want = in_process_trace();
+    // 3 arms, 2 eliminations, 1 survivor: the parity must have teeth
+    assert_eq!(elimination_order(&want).len(), 2);
+    assert_eq!(want.survivors.len(), 1);
+
+    let mut h = durable_cluster("dur-resume", 2);
+    let mut client = h.client();
+    client.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+    let job = client
+        .agent_start("s", &arm_names(), &agent_cfg(), &h.labels.pool, &h.labels.test, AGENT_SEED)
+        .unwrap();
+
+    // wait for one *completed* round (so the resume point is mid-job,
+    // not from scratch), then pull the plug while rounds remain
+    let mut rounds = 0;
+    for _ in 0..1_500 {
+        let st = client.agent_status(&job).unwrap();
+        rounds = st.get("rounds").unwrap().as_usize().unwrap();
+        if rounds >= 1 || st.get("status").unwrap().as_str() != Some("running") {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(rounds >= 1, "job never completed a round");
+    drop(client);
+    h.crash_restart_coordinator();
+
+    let mut client = h.client();
+    let got = client.agent_result(&job, Duration::from_secs(600)).unwrap();
+    assert_trace_parity(&got, &want, "crash-resumed");
+    let st = client.agent_status(&job).unwrap();
+    assert_eq!(st.get("status").unwrap().as_str(), Some("done"));
+
+    assert!(
+        h.coord_counter("recovery.replayed_records") > 0,
+        "restart did not replay the WAL"
+    );
+    assert_eq!(
+        h.coord_counter("recovery.resumed_jobs"),
+        1,
+        "the in-flight job was not resumed from the WAL"
+    );
+}
+
+/// Static worker table: a recovered session has no shard layout until
+/// first use; the next scatter re-homes it and selection is identical
+/// to the pre-crash layout (exact merges are layout-independent).
+#[test]
+fn crash_restart_recovers_sessions_without_repush() {
+    let mut h = durable_cluster("dur-static", 2);
+    let mut client = h.client();
+    h.push(&mut client, "s");
+    let before = h.query_ids(&mut client, "s", 25, "entropy");
+    drop(client);
+
+    h.crash_restart_coordinator();
+    let mut client = h.client();
+    // no re-push: the session must come back from the WAL
+    let after = h.query_ids(&mut client, "s", 25, "entropy");
+    assert_eq!(before, after, "recovered session selects differently");
+
+    assert!(h.coord_counter("recovery.replayed_records") >= 2);
+    assert!(
+        h.coord_counter("recovery.rehomed_sessions") >= 1,
+        "static re-home never ran"
+    );
+}
+
+/// Live membership: workers' heartbeat loops re-register with the
+/// restarted coordinator, the restored generation floor marks every
+/// recovered layout stale, and the first query rebalances onto the
+/// fresh view.
+#[test]
+fn crash_restart_under_membership_rehomes_via_rebalance() {
+    let mut h = ClusterHarness::builder()
+        .bucket("dur-mem")
+        .data_seed(DATA_SEED)
+        .sizes(N_INIT, N_POOL, N_TEST)
+        .workers(3)
+        .membership(true)
+        .durable(true)
+        .build();
+    let mut client = h.client();
+    h.push(&mut client, "s");
+    let before = h.query_ids(&mut client, "s", 25, "entropy");
+    drop(client);
+
+    h.crash_restart_coordinator();
+    h.wait_members(3);
+    let mut client = h.client();
+    let after = h.query_ids(&mut client, "s", 25, "entropy");
+    assert_eq!(before, after, "recovered session selects differently");
+    assert!(h.coord_counter("membership.rebalances") >= 1);
+}
+
+/// A job that finished *before* the crash replays as terminal: its
+/// status and full trace come back from the WAL's `job_done` record —
+/// no re-drive, no lost result.
+#[test]
+fn finished_job_result_survives_crash_restart() {
+    let mut h = durable_cluster("dur-done", 2);
+    let mut client = h.client();
+    client.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+    let cfg = PsheaConfig { max_rounds: 2, ..agent_cfg() };
+    let strategies = vec!["entropy".to_string()];
+    let job = client
+        .agent_start("s", &strategies, &cfg, &h.labels.pool, &h.labels.test, AGENT_SEED)
+        .unwrap();
+    let want = client.agent_result(&job, Duration::from_secs(600)).unwrap();
+    drop(client);
+
+    h.crash_restart_coordinator();
+    let mut client = h.client();
+    let st = client.agent_status(&job).unwrap();
+    assert_eq!(st.get("status").unwrap().as_str(), Some("done"));
+    let got = client.agent_result(&job, Duration::from_secs(60)).unwrap();
+    assert_trace_parity(&got, &want, "replayed-done");
+    assert_eq!(h.coord_counter("recovery.resumed_jobs"), 0);
+}
+
+/// A torn tail — the half-written frame a real `kill -9` leaves mid
+/// `write(2)` — is detected by CRC, truncated, and everything before it
+/// replays normally. No panic, no lost session.
+#[test]
+fn torn_wal_tail_is_discarded_and_session_still_recovers() {
+    use std::io::Write as _;
+
+    let mut h = durable_cluster("dur-torn", 2);
+    let mut client = h.client();
+    h.push(&mut client, "s");
+    drop(client);
+
+    // scribble garbage onto the live log's tail
+    let dir = h.data_dir.clone().expect("durable harness has a data dir");
+    let newest_wal = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("wal.") && n.ends_with(".log"))
+        })
+        .max()
+        .expect("no WAL file in the data dir");
+    let mut f = std::fs::OpenOptions::new().append(true).open(&newest_wal).unwrap();
+    f.write_all(&[0x37, 0x13, 0xde, 0xad, 0xbe, 0xef, 0x00, 0x42, 0x99]).unwrap();
+    f.sync_data().unwrap();
+    drop(f);
+
+    h.crash_restart_coordinator();
+    let mut client = h.client();
+    let ids = h.query_ids(&mut client, "s", 10, "entropy");
+    assert_eq!(ids.len(), 10, "session did not survive the torn tail");
+}
