@@ -50,7 +50,13 @@ fn start_echo_server() -> String {
                     WireMode::Binary,
                     |method, params, _mode| match method {
                         "hello" => {
-                            Ok(Payload::json(wire::hello_reply(&params.value, WireMode::Binary)))
+                            // mux off: this bench compares pooled vs per-call
+                            // dialing on the classic one-RPC-per-conn path
+                            Ok(Payload::json(wire::hello_reply(
+                                &params.value,
+                                WireMode::Binary,
+                                false,
+                            )))
                         }
                         "echo" => Ok(params.to_payload()),
                         other => Err(format!("unknown method '{other}'")),

@@ -1,0 +1,199 @@
+//! Multiplexed vs classic pooled scatter (DESIGN.md §Wire): the same
+//! `FAN`-wide fan-out of select-shaped RPCs driven (a) as in-flight
+//! requests interleaved on one muxed connection (`pool.start`/`pool.wait`,
+//! no thread per call) and (b) as blocking calls on a classic pool with
+//! one parked connection per concurrent call (one thread per call — the
+//! pre-mux scatter shape).
+//!
+//! Run: `cargo bench --bench mux_scatter`
+//!
+//! Besides the table, the bench writes a machine-readable `BENCH_PR8.json`
+//! at the repo root; CI's bench-regression gate (`tools/bench_gate.py`)
+//! checks its ratios against `tools/bench_baseline.json`. The hard gate is
+//! `single_conn`: the whole muxed scatter must ride exactly one socket.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use alaas::json::{self, Map, Value};
+use alaas::metrics::Registry;
+use alaas::server::pool::{ConnPool, PoolConfig};
+use alaas::server::rpc;
+use alaas::server::wire::{self, Payload, WireMode};
+use alaas::util::bench::{fmt_dur, measure, Sample, Table};
+use alaas::util::mat::Mat;
+use alaas::util::rng::Rng;
+
+/// Concurrent requests per scatter round — a plausible shard fan-out.
+const FAN: usize = 8;
+const ROWS: usize = 2_000;
+const COLS: usize = 32;
+const RPC_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Loopback RPC server speaking the real dispatch loop (`serve_conn`),
+/// counting accepted sockets so the bench can pin connection usage.
+fn start_server(mux: bool) -> (String, Arc<AtomicUsize>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    let accepted = Arc::new(AtomicUsize::new(0));
+    let counter = accepted.clone();
+    std::thread::spawn(move || {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let metrics = Registry::new();
+        for conn in listener.incoming() {
+            let Ok(mut stream) = conn else { continue };
+            counter.fetch_add(1, Ordering::SeqCst);
+            let metrics = metrics.clone();
+            let shutdown = shutdown.clone();
+            std::thread::spawn(move || {
+                rpc::serve_conn(
+                    &mut stream,
+                    "bench",
+                    &shutdown,
+                    &metrics,
+                    None,
+                    WireMode::Binary,
+                    move |method, params, _mode| match method {
+                        "hello" => Ok(Payload::json(wire::hello_reply(
+                            &params.value,
+                            WireMode::Binary,
+                            mux,
+                        ))),
+                        "select" => Ok(params.to_payload()),
+                        other => Err(format!("unknown method '{other}'")),
+                    },
+                );
+            });
+        }
+    });
+    (addr, accepted)
+}
+
+fn select_payload() -> Payload {
+    let mut rng = Rng::new(7);
+    let m = Mat::from_vec(
+        (0..ROWS * COLS).map(|_| rng.normal_f32()).collect(),
+        ROWS,
+        COLS,
+    );
+    let mut params = Payload::default();
+    let ph = params.stash_mat(m);
+    let mut p = Map::new();
+    p.insert("session", Value::from("bench"));
+    p.insert("budget", Value::from(16usize));
+    p.insert("cand_emb", ph);
+    params.value = Value::Object(p);
+    params
+}
+
+fn main() {
+    let params = select_payload();
+
+    // muxed scatter: FAN requests started back-to-back on one shared
+    // connection, then drained — the coordinator's phase-1/phase-3 shape
+    let (mux_addr, mux_accepted) = start_server(true);
+    let mux_pool = ConnPool::new(
+        PoolConfig { max_idle_per_peer: FAN, idle_timeout_ms: 60_000 },
+        WireMode::Binary,
+        Some(Registry::new()),
+    );
+    let mux_sample: Sample = measure(5, 40, || {
+        let calls: Vec<_> = (0..FAN)
+            .map(|_| {
+                mux_pool
+                    .start(&mux_addr, "select", &params, Some(RPC_TIMEOUT))
+                    .expect("start")
+                    .expect("peer granted mux")
+            })
+            .collect();
+        for c in calls {
+            let body = mux_pool.wait(c).expect("mux reply");
+            assert!(!body.value.is_null());
+        }
+    });
+    let mux_sockets = mux_accepted.load(Ordering::SeqCst);
+
+    // classic scatter: the pre-mux shape — one blocking call per thread,
+    // one parked connection per concurrent call
+    let (cls_addr, cls_accepted) = start_server(false);
+    let cls_pool = ConnPool::new(
+        PoolConfig { max_idle_per_peer: FAN, idle_timeout_ms: 60_000 },
+        WireMode::Binary,
+        Some(Registry::new()),
+    )
+    .with_mux(false);
+    let cls_sample: Sample = measure(5, 40, || {
+        std::thread::scope(|sc| {
+            let handles: Vec<_> = (0..FAN)
+                .map(|_| {
+                    sc.spawn(|| {
+                        let body = cls_pool
+                            .call(&cls_addr, "select", &params, Some(RPC_TIMEOUT))
+                            .expect("classic reply");
+                        assert!(!body.value.is_null());
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("scatter thread");
+            }
+        });
+    });
+    let cls_sockets = cls_accepted.load(Ordering::SeqCst);
+
+    let speedup = cls_sample.mean().as_secs_f64() / mux_sample.mean().as_secs_f64().max(1e-12);
+    let mut table = Table::new(
+        &format!("mux_scatter: {FAN}-wide scatter of {ROWS}x{COLS} selects, mux vs classic pool"),
+        &["path", "round(mean)", "round(p50)", "sockets"],
+    );
+    table.row(&[
+        "mux".into(),
+        fmt_dur(mux_sample.mean()),
+        fmt_dur(mux_sample.percentile(0.5)),
+        mux_sockets.to_string(),
+    ]);
+    table.row(&[
+        "classic".into(),
+        fmt_dur(cls_sample.mean()),
+        fmt_dur(cls_sample.percentile(0.5)),
+        cls_sockets.to_string(),
+    ]);
+    table.print();
+    println!("mux_vs_pooled speedup: {speedup:.2}x");
+
+    let ms = |d: Duration| Value::Number(d.as_secs_f64() * 1e3);
+    let mut root = Map::new();
+    root.insert("bench", Value::from("mux_scatter"));
+    root.insert("case", Value::from(format!("{FAN}-wide {ROWS}x{COLS} select scatter")));
+    root.insert("mux_ms_mean", ms(mux_sample.mean()));
+    root.insert("classic_ms_mean", ms(cls_sample.mean()));
+    root.insert("mux_ms_p50", ms(mux_sample.percentile(0.5)));
+    root.insert("classic_ms_p50", ms(cls_sample.percentile(0.5)));
+    root.insert(
+        "mux_scatters_per_sec",
+        Value::Number(1.0 / mux_sample.mean().as_secs_f64().max(1e-12)),
+    );
+    root.insert("mux_vs_pooled", Value::Number(speedup));
+    root.insert("mux_sockets", Value::from(mux_sockets));
+    root.insert("classic_sockets", Value::from(cls_sockets));
+    // the pin CI actually gates on: the whole muxed scatter (warmup and
+    // all rounds) rode exactly one connection
+    root.insert(
+        "single_conn",
+        Value::Number(if mux_sockets == 1 { 1.0 } else { 0.0 }),
+    );
+    let out = json::to_string_pretty(&Value::Object(root));
+    // cargo runs benches from the package root (rust/); the tracking file
+    // lives at the repo root next to ROADMAP.md
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_PR8.json"
+    } else {
+        "BENCH_PR8.json"
+    };
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

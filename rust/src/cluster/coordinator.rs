@@ -119,6 +119,25 @@ struct ClusterSession {
     test_emb: Option<Mat>,
 }
 
+/// Lock a session mutex, recovering from poisoning. A scatter (or any
+/// other holder) that panicked mid-operation must not turn every later
+/// query/status/cancel on the same session into a panic cascade: session
+/// mutations are transactional under the lock (ledger pushes, shard-list
+/// swaps), so the inner state is still serviceable. The first recovery is
+/// logged once so poisoning stays observable without flooding.
+fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| {
+        static LOGGED: AtomicBool = AtomicBool::new(false);
+        if !LOGGED.swap(true, Ordering::Relaxed) {
+            crate::log_warn!(
+                "cluster",
+                "recovered a poisoned session lock (a previous holder panicked); continuing with the inner state"
+            );
+        }
+        poisoned.into_inner()
+    })
+}
+
 struct CoordState {
     config: AlaasConfig,
     deps: CoordinatorDeps,
@@ -193,6 +212,7 @@ impl Coordinator {
             config.server.wire,
             Some(deps.metrics.clone()),
         )
+        .with_mux(config.server.mux)
         .with_timeouts(WORKER_DIAL_TIMEOUT, POLL_RPC_TIMEOUT)
         .with_tracer(tracer.clone());
         let clock = MsClock::new();
@@ -493,7 +513,7 @@ fn resume_job(
 ) -> Result<(), String> {
     let sess = get_session(state, &job.session)?;
     let (manifest, init_labels) = {
-        let s = sess.lock().unwrap();
+        let s = lock_recover(&sess);
         (s.manifest.clone(), s.init_labels.clone())
     };
     let init_labels = init_labels.ok_or("recovered session has no init labels")?;
@@ -667,7 +687,7 @@ fn snapshot_records(state: &CoordState) -> Value {
         v
     };
     for (name, sess) in sessions {
-        let s = sess.lock().unwrap();
+        let s = lock_recover(&sess);
         records.push(recovery::rec_session(&name, &s.manifest, s.init_labels.as_deref()));
         records.push(recovery::rec_layout(&name, s.epoch, s.view_gen, s.next_sid));
     }
@@ -714,6 +734,7 @@ fn dispatch(
         "hello" => Ok(Payload::json(wire::hello_reply(
             &params.value,
             state.config.server.wire,
+            state.config.server.mux,
         ))),
         "ping" => Ok(Payload::json(Value::from("pong"))),
         "register" => register(state, &params.value).map(Payload::json),
@@ -1096,7 +1117,21 @@ fn membership_tick(state: &Arc<CoordState>) {
                 })
             })
             .collect();
-        handles.into_iter().filter_map(|h| h.join().unwrap_or(None)).collect()
+        // a panicked probe thread is a failed probe, not a silent pass:
+        // swallowing it would keep a half-expired lease alive forever
+        handles
+            .into_iter()
+            .zip(&suspects)
+            .filter_map(|(h, addr)| {
+                h.join().unwrap_or_else(|_| {
+                    crate::log_warn!(
+                        "cluster",
+                        "keepalive probe of {addr} panicked; treating it as failed"
+                    );
+                    Some(addr.clone())
+                })
+            })
+            .collect()
     });
     for addr in failed {
         if state.shutdown.load(Ordering::SeqCst) {
@@ -1449,7 +1484,7 @@ fn push_data(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> {
         // session's ledger, so a wedged worker's resident copy is still
         // swept once it rejoins.
         let stale: Vec<(u64, u64, usize)> = {
-            let o = old.lock().unwrap();
+            let o = lock_recover(&old);
             o.shards
                 .iter()
                 .map(|s| (o.epoch, s.sid, s.worker))
@@ -1649,19 +1684,16 @@ fn call_shard_redispatch(
     Err(format!("shard {shard_idx}: no live worker served it ({last_err})"))
 }
 
-/// Run `select_shard` for one shard, re-dispatching to a survivor when
-/// the owning worker is unreachable.
-#[allow(clippy::too_many_arguments)]
-fn select_on_shard(
-    state: &CoordState,
+/// Build the `select_shard` request payload for one job — shared by the
+/// multiplexed fan-out and the blocking re-dispatch path, so both wires
+/// carry byte-identical requests.
+fn select_shard_params(
     session: &str,
     epoch: u64,
     job: &ShardJob,
-    manifest: &Manifest,
-    init_labels: Option<&[u8]>,
     strategy: &str,
     wait_ms: u64,
-) -> Result<ShardReply, String> {
+) -> Payload {
     let mut params = Payload::default();
     let mut p = Map::new();
     p.insert("session", Value::from(shard_session_id(session, epoch, job.sref.sid)));
@@ -1694,7 +1726,23 @@ fn select_on_shard(
         p.insert("labeled_emb", params.stash_mat(l.clone()));
     }
     params.value = Value::Object(p);
+    params
+}
 
+/// Run `select_shard` for one shard over the blocking path,
+/// re-dispatching to a survivor when the owning worker is unreachable.
+#[allow(clippy::too_many_arguments)]
+fn select_on_shard(
+    state: &CoordState,
+    session: &str,
+    epoch: u64,
+    job: &ShardJob,
+    manifest: &Manifest,
+    init_labels: Option<&[u8]>,
+    strategy: &str,
+    wait_ms: u64,
+) -> Result<ShardReply, String> {
+    let params = select_shard_params(session, epoch, job, strategy, wait_ms);
     let (reply, slot) = call_shard_redispatch(
         state,
         session,
@@ -1815,36 +1863,124 @@ fn scatter_jobs(
     // spawned shard threads don't inherit the thread-local span context:
     // hand each one the scatter span's ctx explicitly
     let ctx = sg.ctx();
-    let replies: Vec<Result<ShardReply, String>> = std::thread::scope(|sc| {
-        let handles: Vec<_> = jobs
-            .iter()
-            .map(|job| {
-                sc.spawn(move || {
-                    let mut g = state.tracer.child_of(ctx, "shard.select");
-                    g.annotate("shard", job.sref.shard);
-                    let r = select_on_shard(
-                        state, session_id, epoch, job, manifest, init_labels, strategy,
-                        wait_ms,
-                    );
-                    match &r {
-                        Ok(rep) => {
-                            g.annotate("worker", rep.worker);
-                            g.annotate("scan_ms", format!("{:.1}", rep.scan_ms));
+
+    // Phase 1 — multiplexed fan-out, zero threads: every job whose
+    // assigned worker speaks (or may speak) the muxed wire gets its
+    // request written onto the shared connection and parked as a
+    // completion slot. Each request is stamped with its own
+    // `shard.select` span: the guard installs the span as this thread's
+    // current context for the duration of the write (that is what
+    // `send_request_wire` piggybacks), then the context is restored so
+    // the next job's span parents under the scatter, not under its
+    // sibling — which also makes the guards safe to drop in completion
+    // order rather than LIFO.
+    let mut pending: Vec<Option<(pool::PendingCall, crate::trace::SpanGuard<'_>)>> =
+        Vec::with_capacity(jobs.len());
+    let mut fallback: Vec<usize> = Vec::new();
+    for (i, job) in jobs.iter().enumerate() {
+        let started = worker_addr(state, job.sref.worker).and_then(|addr| {
+            if state.pool.peer_muxes(&addr) == Some(false) {
+                return None;
+            }
+            let saved = crate::trace::current();
+            let mut g = state.tracer.child_of(ctx, "shard.select");
+            g.annotate("shard", job.sref.shard);
+            let params = select_shard_params(session_id, epoch, job, strategy, wait_ms);
+            let r = state.pool.start(
+                &addr,
+                "select_shard",
+                &params,
+                Some(select_rpc_timeout(wait_ms)),
+            );
+            crate::trace::set_current(saved);
+            match r {
+                Ok(Some(call)) => Some((call, g)),
+                // Ok(None): the peer refused mux on this dial. Err: the
+                // transport is already in trouble — either way the
+                // blocking path below owns mark-dead + survivor walking.
+                Ok(None) | Err(_) => {
+                    g.annotate("fallback", true);
+                    None
+                }
+            }
+        });
+        if started.is_none() {
+            fallback.push(i);
+        }
+        pending.push(started);
+    }
+
+    // Phase 2 — blocking fallback for classic peers (and dead slots):
+    // the pre-mux scatter, scoped to exactly the jobs that need it.
+    let mut results: Vec<Option<Result<ShardReply, String>>> =
+        jobs.iter().map(|_| None).collect();
+    if !fallback.is_empty() {
+        let classic: Vec<Result<ShardReply, String>> = std::thread::scope(|sc| {
+            let handles: Vec<_> = fallback
+                .iter()
+                .map(|&i| {
+                    let job = &jobs[i];
+                    sc.spawn(move || {
+                        let mut g = state.tracer.child_of(ctx, "shard.select");
+                        g.annotate("shard", job.sref.shard);
+                        let r = select_on_shard(
+                            state, session_id, epoch, job, manifest, init_labels, strategy,
+                            wait_ms,
+                        );
+                        match &r {
+                            Ok(rep) => {
+                                g.annotate("worker", rep.worker);
+                                g.annotate("scan_ms", format!("{:.1}", rep.scan_ms));
+                            }
+                            Err(e) => g.annotate("error", e),
                         }
-                        Err(e) => g.annotate("error", e),
-                    }
-                    r
+                        r
+                    })
                 })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().unwrap_or_else(|_| Err("shard query panicked".into())))
-            .collect()
-    });
-    let mut out = Vec::with_capacity(replies.len());
-    for r in replies {
-        out.push(r?);
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err("shard query panicked".into())))
+                .collect()
+        });
+        for (&i, r) in fallback.iter().zip(classic) {
+            results[i] = Some(r);
+        }
+    }
+
+    // Phase 3 — drain the mux completions. `pool.wait` parks on the
+    // shared connection's demux state; whichever waiter holds the reader
+    // pumps frames for everyone, so draining sequentially costs one
+    // wall-clock pass regardless of completion order. An `unknown
+    // session` (worker restarted, shard instance dropped) or transport
+    // failure recovers through the idempotent blocking path, which owns
+    // the scan_shard re-push and the survivor walk.
+    for (i, slot) in pending.into_iter().enumerate() {
+        let Some((call, mut g)) = slot else { continue };
+        let job = &jobs[i];
+        let r = match state.pool.wait(call) {
+            Ok(body) => decode_shard_reply(body, job, job.sref.worker),
+            Err(RpcError::Remote(e)) if !e.contains("unknown session") => {
+                // the worker is alive; the request itself is bad
+                Err(format!("shard {}: {e}", job.sref.shard))
+            }
+            Err(_) => select_on_shard(
+                state, session_id, epoch, job, manifest, init_labels, strategy, wait_ms,
+            ),
+        };
+        match &r {
+            Ok(rep) => {
+                g.annotate("worker", rep.worker);
+                g.annotate("scan_ms", format!("{:.1}", rep.scan_ms));
+            }
+            Err(e) => g.annotate("error", e),
+        }
+        results[i] = Some(r);
+    }
+
+    let mut out = Vec::with_capacity(results.len());
+    for r in results {
+        out.push(r.ok_or("shard job produced no result")??);
     }
 
     // bookkeeping: re-dispatched assignments + fetched embeddings. The
@@ -1855,7 +1991,7 @@ fn scatter_jobs(
     // instance is remembered, because serving this reply may have
     // lazily re-pushed it onto the worker after the rebalance freed it.
     {
-        let mut s = sess.lock().unwrap();
+        let mut s = lock_recover(&sess);
         for r in &out {
             if let Some(sh) = s.shards.iter_mut().find(|sh| sh.sid == r.sid) {
                 sh.worker = r.worker;
@@ -1885,7 +2021,7 @@ fn scatter_jobs(
     let current = state.sessions.lock().unwrap().get(session_id).cloned();
     if let Some(cur) = current {
         if !Arc::ptr_eq(&cur, sess) {
-            let mut c = cur.lock().unwrap();
+            let mut c = lock_recover(&cur);
             for r in &out {
                 ledger_push(&mut c.retired, (epoch, r.sid, r.worker));
             }
@@ -1938,7 +2074,7 @@ fn query(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
     // the view moves again mid-flight
     maybe_rebalance(state, &session_id, &sess)?;
     let (manifest, init_labels, epoch, shard_specs) = snapshot_shards(&sess);
-    let have_init_emb = sess.lock().unwrap().init_emb.is_some();
+    let have_init_emb = lock_recover(&sess).init_emb.is_some();
     let n_shards = shard_specs.iter().filter(|s| !s.indices.is_empty()).count().max(1);
 
     // per-shard candidate budget by merge protocol
@@ -2011,7 +2147,7 @@ fn query(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
             } else {
                 let (scores, emb) = merge::refine_inputs(&all);
                 let labeled = {
-                    let s = sess.lock().unwrap();
+                    let s = lock_recover(&sess);
                     s.init_emb.clone().unwrap_or_else(|| Mat::zeros(0, emb.cols()))
                 };
                 let strat = strategies::by_name(&strategy_name)
@@ -2065,7 +2201,7 @@ type ShardSpecs = Vec<ShardRef>;
 fn snapshot_shards(
     sess: &Arc<Mutex<ClusterSession>>,
 ) -> (Manifest, Option<Vec<u8>>, u64, ShardSpecs) {
-    let s = sess.lock().unwrap();
+    let s = lock_recover(&sess);
     let specs: ShardSpecs = s
         .shards
         .iter()
@@ -2113,7 +2249,7 @@ fn retain_undelivered(
     if undelivered.is_empty() {
         return;
     }
-    let mut s = sess.lock().unwrap();
+    let mut s = lock_recover(&sess);
     let mut retired = std::mem::take(&mut s.retired);
     for p in undelivered {
         ledger_push(&mut retired, p);
@@ -2281,7 +2417,7 @@ fn maybe_rebalance(
                 }
                 return Ok(());
             }
-            let mut s = sess.lock().unwrap();
+            let mut s = lock_recover(&sess);
             if s.view_gen != plan.base_gen {
                 // a concurrent rebalance won the race: this attempt's
                 // scans are orphans — free them, retry
@@ -2359,7 +2495,7 @@ fn rehome_static(
     sess: &Arc<Mutex<ClusterSession>>,
 ) -> Result<(), String> {
     let (manifest, init_labels, epoch, base_sid) = {
-        let s = sess.lock().unwrap();
+        let s = lock_recover(&sess);
         if !s.shards.is_empty() || s.manifest.pool.is_empty() {
             return Ok(());
         }
@@ -2440,7 +2576,7 @@ fn rehome_static(
             .get(session_id)
             .map(|cur| Arc::ptr_eq(cur, sess))
             .unwrap_or(false);
-        let mut s = sess.lock().unwrap();
+        let mut s = lock_recover(&sess);
         if !still_current || !s.shards.is_empty() {
             drop(s);
             let live_sess = sessions.get(session_id).cloned();
@@ -2479,7 +2615,7 @@ fn plan_rebalance(
     view: &membership::View,
     sess: &Arc<Mutex<ClusterSession>>,
 ) -> Result<Option<RebalancePlan>, String> {
-    let mut s = sess.lock().unwrap();
+    let mut s = lock_recover(&sess);
     if s.view_gen == view.generation {
         // current — sweep any instances retired by earlier rebalances
         // that an in-flight scatter may have lazily re-pushed since.
@@ -2723,7 +2859,7 @@ impl ClusterArmSelect {
                     .cloned();
                 let target = live.unwrap_or_else(|| self.sess.clone());
                 let replaced = !Arc::ptr_eq(&target, &self.sess);
-                let mut s = target.lock().unwrap();
+                let mut s = lock_recover(&target);
                 if replaced || !s.shards.iter().any(|sh| sh.sid == sref.sid) {
                     ledger_push(&mut s.retired, (epoch, sref.sid, slot));
                 }
@@ -2902,7 +3038,7 @@ fn agent_bootstrap(
     maybe_rebalance(state, session_id, sess)?;
     let (manifest, init_labels, epoch, specs) = snapshot_shards(sess);
     let (have_init, have_test) = {
-        let s = sess.lock().unwrap();
+        let s = lock_recover(&sess);
         (s.init_emb.is_some(), s.test_emb.is_some())
     };
     let jobs: Vec<ShardJob> = specs
@@ -2933,7 +3069,7 @@ fn agent_bootstrap(
         .flat_map(|r| r.failed_global.iter().copied())
         .collect();
     let selectable = manifest.pool.len() - failed.len();
-    let s = sess.lock().unwrap();
+    let s = lock_recover(&sess);
     let init_emb =
         s.init_emb.clone().ok_or("agent bootstrap did not yield init embeddings")?;
     let test_emb =
@@ -2948,7 +3084,7 @@ fn agent_start(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> 
     let session_id = str_param(&params.value, "session")?;
     let sess = get_session(state, &session_id)?;
     let (manifest, init_labels) = {
-        let s = sess.lock().unwrap();
+        let s = lock_recover(&sess);
         (s.manifest.clone(), s.init_labels.clone())
     };
     let p = parse_agent_start(
@@ -3040,7 +3176,35 @@ fn agent_start(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> 
     Ok(Value::Object(m))
 }
 
-/// Poll one shard's worker for its status string.
+/// The `status` poll request for one shard instance.
+fn shard_status_params(session: &str, epoch: u64, sid: u64) -> Payload {
+    let mut p = Map::new();
+    p.insert("session", Value::from(shard_session_id(session, epoch, sid)));
+    Payload::json(Value::Object(p))
+}
+
+/// Fold one shard-status RPC outcome into the status string the
+/// aggregator understands — shared by the multiplexed and blocking polls.
+fn shard_status_of(state: &CoordState, slot: usize, resp: Result<Body, RpcError>) -> String {
+    match resp {
+        Ok(v) => v
+            .value
+            .get("status")
+            .and_then(Value::as_str)
+            .unwrap_or("unknown")
+            .to_string(),
+        // the worker is reachable but lost the shard (e.g.
+        // restart): a query will re-dispatch — do NOT kill
+        // the slot over an application-level error
+        Err(RpcError::Remote(e)) => format!("needs-redispatch: {e}"),
+        Err(e) => {
+            mark_dead(state, slot);
+            format!("unreachable: {e}")
+        }
+    }
+}
+
+/// Poll one shard's worker for its status string (blocking path).
 fn poll_shard_status(
     state: &CoordState,
     session: &str,
@@ -3050,25 +3214,9 @@ fn poll_shard_status(
 ) -> String {
     match worker_addr(state, slot) {
         Some(addr) => {
-            let mut p = Map::new();
-            p.insert("session", Value::from(shard_session_id(session, epoch, sid)));
-            let params = Payload::json(Value::Object(p));
-            match call_worker(state, &addr, "status", &params, POLL_RPC_TIMEOUT) {
-                Ok(v) => v
-                    .value
-                    .get("status")
-                    .and_then(Value::as_str)
-                    .unwrap_or("unknown")
-                    .to_string(),
-                // the worker is reachable but lost the shard (e.g.
-                // restart): a query will re-dispatch — do NOT kill
-                // the slot over an application-level error
-                Err(RpcError::Remote(e)) => format!("needs-redispatch: {e}"),
-                Err(e) => {
-                    mark_dead(state, slot);
-                    format!("unreachable: {e}")
-                }
-            }
+            let params = shard_status_params(session, epoch, sid);
+            let resp = call_worker(state, &addr, "status", &params, POLL_RPC_TIMEOUT);
+            shard_status_of(state, slot, resp)
         }
         None => "unreachable: worker dead".into(),
     }
@@ -3082,7 +3230,7 @@ fn status(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
     // passive view: no rebalance here — status must never mutate the
     // cluster (a query will catch the layout up when it runs)
     let (epoch, specs): (u64, Vec<(usize, u64, usize, usize)>) = {
-        let s = sess.lock().unwrap();
+        let s = lock_recover(&sess);
         (
             s.epoch,
             s.shards
@@ -3092,19 +3240,50 @@ fn status(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
                 .collect(),
         )
     };
-    let statuses: Vec<String> = std::thread::scope(|sc| {
-        let handles: Vec<_> = specs
-            .iter()
-            .map(|&(_, sid, slot, _)| {
-                let session = session_id.as_str();
-                sc.spawn(move || poll_shard_status(state, session, epoch, sid, slot))
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().unwrap_or_else(|_| "unknown: poll panicked".into()))
-            .collect()
-    });
+    // multiplexed polls ride the shared per-worker connection as parked
+    // completion slots (no thread per shard); only classic peers get the
+    // pre-mux one-thread-per-poll treatment
+    let mut statuses: Vec<Option<String>> = specs.iter().map(|_| None).collect();
+    let mut pending: Vec<(usize, pool::PendingCall)> = Vec::new();
+    let mut fallback: Vec<usize> = Vec::new();
+    for (i, &(_, sid, slot, _)) in specs.iter().enumerate() {
+        let started = worker_addr(state, slot).and_then(|addr| {
+            if state.pool.peer_muxes(&addr) == Some(false) {
+                return None;
+            }
+            let params = shard_status_params(&session_id, epoch, sid);
+            state.pool.start(&addr, "status", &params, Some(POLL_RPC_TIMEOUT)).ok().flatten()
+        });
+        match started {
+            Some(call) => pending.push((i, call)),
+            None => fallback.push(i),
+        }
+    }
+    if !fallback.is_empty() {
+        let classic: Vec<String> = std::thread::scope(|sc| {
+            let handles: Vec<_> = fallback
+                .iter()
+                .map(|&i| {
+                    let (_, sid, slot, _) = specs[i];
+                    let session = session_id.as_str();
+                    sc.spawn(move || poll_shard_status(state, session, epoch, sid, slot))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| "unknown: poll panicked".into()))
+                .collect()
+        });
+        for (&i, st) in fallback.iter().zip(classic) {
+            statuses[i] = Some(st);
+        }
+    }
+    for (i, call) in pending {
+        let slot = specs[i].2;
+        statuses[i] = Some(shard_status_of(state, slot, state.pool.wait(call)));
+    }
+    let statuses: Vec<String> =
+        statuses.into_iter().map(|s| s.unwrap_or_else(|| "unknown".into())).collect();
     let mut shard_statuses = Vec::new();
     let mut processing = 0usize;
     let mut failed = 0usize;
@@ -3143,25 +3322,62 @@ fn status(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
 /// concurrently, like `status`).
 fn cache_stats(state: &Arc<CoordState>) -> Result<Value, String> {
     let slots = live_slots(state);
-    let replies: Vec<Option<Value>> = std::thread::scope(|sc| {
-        let handles: Vec<_> = slots
-            .iter()
-            .map(|(slot, addr)| {
-                let (slot, addr) = (*slot, addr.as_str());
-                sc.spawn(move || {
-                    let params = Payload::json(Value::Null);
-                    match call_worker(state, addr, "cache_stats", &params, POLL_RPC_TIMEOUT) {
-                        Ok(v) => Some(v.value),
-                        Err(_) => {
-                            mark_dead(state, slot);
-                            None
-                        }
-                    }
+    let fold = |slot: usize, resp: Result<Body, RpcError>| match resp {
+        Ok(v) => Some(v.value),
+        Err(_) => {
+            mark_dead(state, slot);
+            None
+        }
+    };
+    // mux-capable workers are polled as parked completion slots on the
+    // shared connection; classic peers keep the one-thread-per-poll path
+    let mut replies: Vec<Option<Value>> = slots.iter().map(|_| None).collect();
+    let mut pending: Vec<(usize, usize, pool::PendingCall)> = Vec::new();
+    let mut fallback: Vec<usize> = Vec::new();
+    for (i, (slot, addr)) in slots.iter().enumerate() {
+        let started = if state.pool.peer_muxes(addr) == Some(false) {
+            None
+        } else {
+            let params = Payload::json(Value::Null);
+            state.pool.start(addr, "cache_stats", &params, Some(POLL_RPC_TIMEOUT)).ok().flatten()
+        };
+        match started {
+            Some(call) => pending.push((i, *slot, call)),
+            None => fallback.push(i),
+        }
+    }
+    if !fallback.is_empty() {
+        let classic: Vec<Option<Value>> = std::thread::scope(|sc| {
+            let fold = &fold;
+            let handles: Vec<_> = fallback
+                .iter()
+                .map(|&i| {
+                    let (slot, addr) = (slots[i].0, slots[i].1.as_str());
+                    sc.spawn(move || {
+                        let params = Payload::json(Value::Null);
+                        fold(slot, call_worker(state, addr, "cache_stats", &params, POLL_RPC_TIMEOUT))
+                    })
                 })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap_or(None)).collect()
-    });
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        // don't silently fold a crashed poll thread into
+                        // "no stats" without a trace of it
+                        crate::log_warn!("cluster", "cache_stats poll thread panicked");
+                        None
+                    })
+                })
+                .collect()
+        });
+        for (&i, v) in fallback.iter().zip(classic) {
+            replies[i] = v;
+        }
+    }
+    for (i, slot, call) in pending {
+        replies[i] = fold(slot, state.pool.wait(call));
+    }
     let (mut hits, mut misses, mut bytes, mut entries) = (0u64, 0u64, 0u64, 0u64);
     for v in replies.into_iter().flatten() {
         let g = |k: &str| v.get(k).and_then(Value::as_i64).unwrap_or(0) as u64;
@@ -3198,7 +3414,7 @@ fn cluster_status(state: &Arc<CoordState>) -> Value {
         .unwrap()
         .iter()
         .map(|(name, sess)| {
-            let s = sess.lock().unwrap();
+            let s = lock_recover(&sess);
             let mut m = Map::new();
             m.insert("session", Value::from(name.clone()));
             m.insert("pool_samples", Value::from(s.manifest.pool.len()));
@@ -3234,4 +3450,30 @@ fn cluster_status(state: &Arc<CoordState>) -> Value {
     }
     m.insert("membership", Value::Object(mm));
     Value::Object(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A holder that panics while mutating under the session lock must
+    /// not brick the session: later lockers recover the inner state.
+    #[test]
+    fn lock_recover_survives_a_poisoned_session_lock() {
+        let m = Arc::new(Mutex::new(vec![1u64, 2, 3]));
+        let m2 = m.clone();
+        let _ = std::panic::catch_unwind(move || {
+            let mut g = m2.lock().unwrap();
+            g.push(4);
+            panic!("scatter thread died mid-update");
+        });
+        assert!(m.lock().is_err(), "the panic above must have poisoned the lock");
+        {
+            let mut g = lock_recover(&m);
+            assert_eq!(*g, vec![1, 2, 3, 4], "inner state survives the poisoning");
+            g.push(5);
+        }
+        // and the lock stays usable on every later acquisition
+        assert_eq!(*lock_recover(&m), vec![1, 2, 3, 4, 5]);
+    }
 }

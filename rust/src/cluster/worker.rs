@@ -139,6 +139,10 @@ fn heartbeat_loop(
         WireMode::Json,
         None,
     )
+    // liveness plane: heartbeats are strictly serial and must never
+    // share a socket with (or queue behind) data-plane traffic, so
+    // multiplexing is explicitly off even if the wire ever goes binary
+    .with_mux(false)
     .with_timeouts(Duration::from_secs(2), Duration::from_secs(5));
     let read_timeout = Duration::from_millis((heartbeat_ms * 4).max(1_000));
     // start the overdue clock at process start, so a worker that never
@@ -208,6 +212,8 @@ fn rpc_once(coordinator: &str, method: &str, addr: &str) -> Result<(), RpcError>
         WireMode::Json,
         None,
     )
+    // one-shot bookkeeping RPC on the liveness plane: no muxing
+    .with_mux(false)
     .with_timeouts(Duration::from_secs(2), Duration::from_secs(2));
     let mut p = Map::new();
     p.insert("addr", Value::from(addr));

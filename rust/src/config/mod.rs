@@ -255,17 +255,26 @@ pub struct ServerConfig {
     /// binary requests are accepted: `binary` (default — v2 tensor
     /// frames, negotiated per peer with automatic JSON fallback) or
     /// `json` (force v1 frames only; v2 requests are refused with the
-    /// stable `binary wire disabled` error).
+    /// stable `binary wire disabled` error). In YAML, `server.wire`
+    /// takes either the bare mode string or a `{mode, mux}` mapping.
     pub wire: WireMode,
+    /// `server.wire.mux` — request-id multiplexing on negotiated binary
+    /// connections: many in-flight RPCs share one connection per peer
+    /// (replies are matched by envelope id, so they may return out of
+    /// order). On by default; negotiated per connection via `hello`, so
+    /// either side switching it off falls back to the classic
+    /// one-RPC-at-a-time exchange with no config coordination.
+    pub mux: bool,
     /// `server.pool.*` — persistent-connection pool for outbound RPCs
     /// (`max_idle_per_peer`, `idle_timeout_ms`; `max_idle_per_peer: 0`
-    /// disables reuse: every call dials + negotiates a fresh connection).
+    /// disables reuse: every call dials + negotiates a fresh connection,
+    /// and multiplexed connections are disabled too).
     pub pool: PoolConfig,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { wire: WireMode::Binary, pool: PoolConfig::default() }
+        ServerConfig { wire: WireMode::Binary, mux: true, pool: PoolConfig::default() }
     }
 }
 
@@ -517,10 +526,33 @@ impl AlaasConfig {
         if let Some(s) = v.get("server") {
             let c = &mut cfg.server;
             if let Some(x) = s.get("wire") {
-                let name = req_str(x, "server.wire")?;
-                c.wire = WireMode::parse(&name).ok_or_else(|| {
-                    cerr("server.wire", format!("unknown wire mode '{name}' (json|binary)"))
-                })?;
+                // scalar form (`wire: binary`) or mapping form
+                // (`wire: {mode: binary, mux: false}`)
+                if let Some(name) = x.as_str() {
+                    c.wire = WireMode::parse(name).ok_or_else(|| {
+                        cerr("server.wire", format!("unknown wire mode '{name}' (json|binary)"))
+                    })?;
+                } else if x.as_object().is_some() {
+                    if let Some(m) = x.get("mode") {
+                        let name = req_str(m, "server.wire.mode")?;
+                        c.wire = WireMode::parse(&name).ok_or_else(|| {
+                            cerr(
+                                "server.wire.mode",
+                                format!("unknown wire mode '{name}' (json|binary)"),
+                            )
+                        })?;
+                    }
+                    if let Some(b) = x.get("mux") {
+                        c.mux = b
+                            .as_bool()
+                            .ok_or_else(|| cerr("server.wire.mux", "expected bool"))?;
+                    }
+                } else {
+                    return Err(cerr(
+                        "server.wire",
+                        "expected a wire mode string or a {mode, mux} mapping",
+                    ));
+                }
             }
             if let Some(p) = s.get("pool") {
                 if let Some(x) = p.get("max_idle_per_peer") {
@@ -868,6 +900,32 @@ cluster:
         assert_eq!(AlaasConfig::default().server.wire, WireMode::Binary);
         let e = AlaasConfig::from_yaml_str("server:\n  wire: msgpack\n").unwrap_err();
         assert_eq!(e.field, "server.wire");
+    }
+
+    #[test]
+    fn parses_server_wire_mux_knob() {
+        // default: mux on, and the scalar wire form leaves it untouched
+        assert!(AlaasConfig::default().server.mux);
+        let cfg = AlaasConfig::from_yaml_str("server:\n  wire: json\n").unwrap();
+        assert!(cfg.server.mux);
+        // mapping form sets both mode and mux
+        let cfg = AlaasConfig::from_yaml_str(
+            "server:\n  wire:\n    mode: binary\n    mux: false\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.server.wire, WireMode::Binary);
+        assert!(!cfg.server.mux);
+        // mux alone keeps the default mode
+        let cfg = AlaasConfig::from_yaml_str("server:\n  wire:\n    mux: true\n").unwrap();
+        assert_eq!(cfg.server.wire, WireMode::Binary);
+        assert!(cfg.server.mux);
+        let e = AlaasConfig::from_yaml_str("server:\n  wire:\n    mux: 3\n").unwrap_err();
+        assert_eq!(e.field, "server.wire.mux");
+        let e = AlaasConfig::from_yaml_str(
+            "server:\n  wire:\n    mode: msgpack\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.field, "server.wire.mode");
     }
 
     #[test]

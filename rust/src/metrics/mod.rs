@@ -5,6 +5,13 @@
 //! throughput numbers; every pipeline stage and the end-to-end path record
 //! into one shared `Registry` so the bench harness and the `metrics` RPC
 //! read the same source of truth.
+//!
+//! Well-known families beyond the pipeline stages: `pool.*` (connection
+//! reuse: dials, hits, evictions, retries) and `mux.*` for the
+//! multiplexed wire — `mux.in_flight` (gauge: requests parked on shared
+//! connections), `mux.frames` (counter: reply frames demultiplexed), and
+//! `mux.head_of_line_ms` (histogram: how long a routed reply waited for
+//! its requester to pick it up — the head-of-line signal).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};

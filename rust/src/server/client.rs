@@ -78,11 +78,11 @@ impl AlClient {
 
     /// Eagerly dial + negotiate the first connection so an unreachable or
     /// hung peer fails the constructor, and `wire_mode()` reports the
-    /// negotiated plane immediately.
+    /// negotiated plane immediately. Against a mux-granting peer this
+    /// establishes the shared multiplexed connection every later call
+    /// rides on.
     fn establish(pool: ConnPool, addr: &str) -> Result<AlClient, RpcError> {
-        let conn = pool.checkout(addr)?;
-        let mode = conn.mode();
-        pool.checkin(addr, conn);
+        let mode = pool.establish(addr)?;
         Ok(AlClient { pool, addr: addr.to_string(), mode })
     }
 

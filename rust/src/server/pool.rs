@@ -32,17 +32,31 @@
 //!   dialed during recovery — while the first dial after any success is
 //!   always immediate, so the happy path pays nothing.
 //!
+//! * **Request-id multiplexing (PR 8).** Against a peer whose `hello`
+//!   grants `"mux": true`, the pool keeps **one** [`MuxConn`] per peer
+//!   and interleaves every concurrent RPC on it: a writer tags frames
+//!   with the envelope `id` (end-to-end correlation since PR 6), and
+//!   whichever waiter holds the reader demultiplexes replies into
+//!   per-request completion slots — no background pump thread. Callers
+//!   can fire-and-await with [`ConnPool::start`]/[`ConnPool::wait`]
+//!   (the coordinator's scatter path) or keep using `call*` unchanged.
+//!   Old peers, JSON-wire peers, and `max_idle_per_peer: 0` pools fall
+//!   back to the classic one-RPC-per-connection path transparently.
+//!
 //! Metrics (when constructed with a registry): `pool.hits`, `pool.dials`,
 //! `pool.evictions`, `pool.retries`, `pool.keepalive_probes`,
 //! `pool.backoff_ms` counters and the `pool.in_flight` gauge. Keepalive
 //! probes (`probe_peer`) never count as dials: the dials-per-scatter pin
-//! stays meaningful with background health checking on.
+//! stays meaningful with background health checking on. The mux plane
+//! adds `mux.frames` (replies demultiplexed), the `mux.in_flight` gauge,
+//! and the `mux.head_of_line_ms` timing (routed-reply to waiter-pickup
+//! lag — how long completed replies sat behind the demux loop).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::ErrorKind;
-use std::net::{TcpStream, ToSocketAddrs};
-use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::json::{Map, Value};
@@ -154,6 +168,17 @@ struct IdleConn {
 #[derive(Default)]
 struct PeerState {
     idle: Vec<IdleConn>,
+    /// Live multiplexed connection (v2+mux peers): one socket shared by
+    /// every concurrent RPC to this peer.
+    mux: Option<Arc<MuxConn>>,
+    /// The peer answered `hello` without granting mux (old peer, JSON
+    /// wire, or `server.wire.mux: false`): stop re-asking on every call.
+    /// Cleared by `invalidate` — a restarted peer may have upgraded.
+    mux_refused: bool,
+    /// Serializes mux dial attempts so a thundering herd of first calls
+    /// to a peer yields one shared connection, not one socket per
+    /// caller. Held only around the dial + install, never across RPCs.
+    mux_dialing: Arc<Mutex<()>>,
     /// Bumped by `invalidate`; a checkout from an older generation is
     /// dropped at checkin instead of being pooled.
     generation: u64,
@@ -189,6 +214,412 @@ fn backoff_wait_ms(addr: &str, streak: u32) -> u64 {
     raw / 2 + (raw / 2).saturating_mul(h % 1024) / 1024
 }
 
+/// Read timeout on the shared mux socket: the demux pump wakes at least
+/// this often to re-check deadlines and connection death, so a silent
+/// peer cannot pin the pumping waiter forever.
+const MUX_PUMP_READ_TIMEOUT: Duration = Duration::from_millis(25);
+/// How long a non-pumping waiter parks on the condvar before retrying
+/// for the reader lock (the previous pump holder may have exited after
+/// its own reply arrived, leaving nobody pumping).
+const MUX_FOLLOWER_WAIT: Duration = Duration::from_millis(5);
+/// Abandoned (deadline-elapsed) request ids remembered so their late
+/// replies are dropped instead of killing the connection as unknown.
+/// Bounded: a flood of timeouts forgets the oldest ids, and a
+/// forgotten-then-answered id tears the connection down — safe, just
+/// slower than the common case.
+const MUX_ABANDONED_CAP: usize = 1024;
+
+struct MuxSlot {
+    done: Option<Result<Body, RpcError>>,
+    /// When the reply landed in the slot — the pickup lag feeds
+    /// `mux.head_of_line_ms`.
+    routed_at: Option<Instant>,
+}
+
+struct MuxState {
+    /// In-flight request id → completion slot. Registered *before* the
+    /// request bytes go out, so a reply can never race its own slot.
+    slots: HashMap<u64, MuxSlot>,
+    /// Deadline-abandoned ids whose replies may still arrive.
+    abandoned: VecDeque<u64>,
+    /// Set once, never cleared: why this connection can take no more
+    /// requests. Every parked waiter is woken to read it.
+    dead: Option<String>,
+}
+
+struct MuxReader {
+    stream: TcpStream,
+    /// Partial-frame bytes carried across pump passes (a frame may span
+    /// many reads; whichever waiter pumps next continues the buffer).
+    buf: Vec<u8>,
+}
+
+/// One multiplexed connection: a single negotiated v2 socket carrying
+/// many concurrent RPCs, replies demultiplexed by envelope id.
+///
+/// There is deliberately **no background reader thread** — a dedicated
+/// pump per peer would re-create the thread-per-connection cost this
+/// layer exists to remove. Instead the waiters themselves drive the
+/// socket: whoever grabs the reader lock pumps frames for everyone
+/// (routing each reply to its slot and waking the condvar); the rest
+/// park on the condvar with a short timeout so the pump role is handed
+/// off when its holder's own reply arrives. With zero waiters nothing
+/// reads, which is fine: nothing is owed any bytes.
+pub struct MuxConn {
+    addr: String,
+    next_id: AtomicU64,
+    /// Writer half (cloned fd): one frame writes out at a time, so
+    /// concurrent requests interleave at frame — not byte — granularity.
+    writer: Mutex<TcpStream>,
+    reader: Mutex<MuxReader>,
+    /// Third fd clone used for liveness peeks and for `shutdown(Both)`
+    /// on kill, which unblocks a reader waiting inside a pump pass.
+    probe: TcpStream,
+    state: Mutex<MuxState>,
+    cv: Condvar,
+    metrics: Option<Arc<Registry>>,
+    tracer: Option<Arc<crate::trace::Tracer>>,
+}
+
+impl MuxConn {
+    /// Wrap a freshly negotiated (binary, mux-granted) connection.
+    fn new(
+        addr: &str,
+        conn: PooledConn,
+        metrics: Option<Arc<Registry>>,
+        tracer: Option<Arc<crate::trace::Tracer>>,
+    ) -> Result<Arc<MuxConn>, RpcError> {
+        let writer = conn.stream.try_clone()?;
+        let probe = conn.stream.try_clone()?;
+        conn.stream.set_read_timeout(Some(MUX_PUMP_READ_TIMEOUT)).ok();
+        Ok(Arc::new(MuxConn {
+            addr: addr.to_string(),
+            next_id: AtomicU64::new(conn.next_id),
+            writer: Mutex::new(writer),
+            reader: Mutex::new(MuxReader { stream: conn.stream, buf: Vec::new() }),
+            probe,
+            state: Mutex::new(MuxState {
+                slots: HashMap::new(),
+                abandoned: VecDeque::new(),
+                dead: None,
+            }),
+            cv: Condvar::new(),
+            metrics,
+            tracer,
+        }))
+    }
+
+    fn state(&self) -> MutexGuard<'_, MuxState> {
+        // a waiter panicking while holding the state lock must not turn
+        // every other in-flight call into a poison panic
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn gauge(&self, name: &str, delta: i64) {
+        if let Some(m) = &self.metrics {
+            let c = m.counter(name);
+            if delta >= 0 {
+                c.fetch_add(delta as u64, Ordering::Relaxed);
+            } else {
+                c.fetch_sub((-delta) as u64, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn is_dead(&self) -> bool {
+        self.state().dead.is_some()
+    }
+
+    /// Parked (no in-flight requests) with a socket that shows EOF or
+    /// unsolicited bytes — the peer restarted under an idle connection.
+    /// Never peeks while requests are in flight: a pending reply's bytes
+    /// would read as "unsolicited".
+    fn idle_and_stale(&self) -> bool {
+        {
+            let st = self.state();
+            if st.dead.is_some() || !st.slots.is_empty() {
+                return false;
+            }
+        }
+        stream_is_stale(&self.probe)
+    }
+
+    /// Liveness answer for `probe_peer`: in-flight traffic counts as
+    /// alive without touching the socket.
+    fn is_live(&self) -> bool {
+        {
+            let st = self.state();
+            if st.dead.is_some() {
+                return false;
+            }
+            if !st.slots.is_empty() {
+                return true;
+            }
+        }
+        !stream_is_stale(&self.probe)
+    }
+
+    /// Declare the connection unusable (first reason wins), unblock any
+    /// reader mid-pump via socket shutdown, and wake every waiter so
+    /// they all observe death promptly.
+    fn kill(&self, why: &str) {
+        {
+            let mut st = self.state();
+            if st.dead.is_none() {
+                st.dead = Some(why.to_string());
+            }
+        }
+        let _ = self.probe.shutdown(Shutdown::Both);
+        self.cv.notify_all();
+    }
+
+    fn dead_err(&self, why: &str) -> RpcError {
+        // ConnectionAborted: lands in `is_dead_socket`, so callers'
+        // retry-once-on-reused semantics match the classic pooled path
+        RpcError::Io(std::io::Error::new(
+            ErrorKind::ConnectionAborted,
+            format!("mux connection to {}: {why}", self.addr),
+        ))
+    }
+
+    /// Send one request and register its completion slot. The slot goes
+    /// in before any byte is written, so the demux loop always finds a
+    /// home for the reply no matter how fast it comes back.
+    fn begin(&self, method: &str, params: &Payload) -> Result<u64, RpcError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut st = self.state();
+            if let Some(why) = st.dead.clone() {
+                return Err(self.dead_err(&why));
+            }
+            st.slots.insert(id, MuxSlot { done: None, routed_at: None });
+        }
+        self.gauge("mux.in_flight", 1);
+        let res = {
+            let mut w = self.writer.lock().unwrap_or_else(|p| p.into_inner());
+            rpc::send_request_wire(
+                &mut *w,
+                id,
+                method,
+                params,
+                WireMode::Binary,
+                self.metrics.as_deref(),
+            )
+        };
+        if let Err(e) = res {
+            self.state().slots.remove(&id);
+            self.gauge("mux.in_flight", -1);
+            self.kill(&format!("request write failed: {e}"));
+            return Err(e);
+        }
+        Ok(id)
+    }
+
+    /// Forget an in-flight request (deadline elapsed, or its
+    /// `PendingCall` was dropped unawaited): its slot is released now
+    /// and its eventual reply will be dropped on arrival instead of
+    /// counting as unknown.
+    fn abandon(&self, id: u64) {
+        let mut st = self.state();
+        if st.slots.remove(&id).is_some() {
+            st.abandoned.push_back(id);
+            if st.abandoned.len() > MUX_ABANDONED_CAP {
+                st.abandoned.pop_front();
+            }
+            drop(st);
+            self.gauge("mux.in_flight", -1);
+        }
+    }
+
+    /// Block until request `id` completes, the connection dies, or
+    /// `deadline` passes. Implements the waiter-driven pump: try to
+    /// become the reader; otherwise park briefly on the condvar.
+    fn wait(&self, id: u64, deadline: Option<Instant>) -> Result<Body, RpcError> {
+        loop {
+            {
+                let mut st = self.state();
+                match st.slots.get_mut(&id) {
+                    Some(slot) => {
+                        if let Some(res) = slot.done.take() {
+                            if let (Some(m), Some(at)) = (&self.metrics, slot.routed_at) {
+                                m.time("mux.head_of_line_ms", at.elapsed());
+                            }
+                            st.slots.remove(&id);
+                            drop(st);
+                            self.gauge("mux.in_flight", -1);
+                            return res;
+                        }
+                    }
+                    // slot vanished without completing (shouldn't
+                    // happen; defensively treat as a dead conn)
+                    None => {
+                        drop(st);
+                        self.gauge("mux.in_flight", -1);
+                        return Err(self.dead_err("request slot lost"));
+                    }
+                }
+                if let Some(why) = st.dead.clone() {
+                    st.slots.remove(&id);
+                    drop(st);
+                    self.gauge("mux.in_flight", -1);
+                    return Err(self.dead_err(&why));
+                }
+                if deadline.is_some_and(|d| Instant::now() >= d) {
+                    st.slots.remove(&id);
+                    st.abandoned.push_back(id);
+                    if st.abandoned.len() > MUX_ABANDONED_CAP {
+                        st.abandoned.pop_front();
+                    }
+                    drop(st);
+                    self.gauge("mux.in_flight", -1);
+                    return Err(RpcError::Io(std::io::Error::new(
+                        ErrorKind::TimedOut,
+                        format!("mux request {id} to {} deadline elapsed", self.addr),
+                    )));
+                }
+            }
+            match self.reader.try_lock() {
+                Ok(mut r) => self.pump_once(&mut r),
+                Err(std::sync::TryLockError::Poisoned(p)) => self.pump_once(&mut p.into_inner()),
+                Err(std::sync::TryLockError::WouldBlock) => {
+                    // someone else is pumping; park until they route a
+                    // frame (notify_all) or the handoff window elapses
+                    let st = self.state();
+                    let _ = self.cv.wait_timeout(st, MUX_FOLLOWER_WAIT);
+                }
+            }
+        }
+    }
+
+    /// One bounded pass of the shared reader: read what's available
+    /// (≤ the 25ms socket timeout), then drain and route every complete
+    /// frame in the buffer.
+    fn pump_once(&self, r: &mut MuxReader) {
+        let mut chunk = [0u8; 64 * 1024];
+        match std::io::Read::read(&mut r.stream, &mut chunk) {
+            Ok(0) => {
+                self.kill("connection closed by peer");
+                return;
+            }
+            Ok(n) => r.buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                return
+            }
+            Err(e) => {
+                self.kill(&format!("read failed: {e}"));
+                return;
+            }
+        }
+        loop {
+            if r.buf.len() < 4 {
+                return;
+            }
+            let len = u32::from_le_bytes([r.buf[0], r.buf[1], r.buf[2], r.buf[3]]) as usize;
+            if len > rpc::MAX_FRAME {
+                self.kill(&format!("oversized reply frame ({len} bytes)"));
+                return;
+            }
+            if r.buf.len() < 4 + len {
+                return;
+            }
+            let frame = r.buf[4..4 + len].to_vec();
+            r.buf.drain(..4 + len);
+            self.route_frame(frame);
+        }
+    }
+
+    /// Decode one reply frame and deliver it: completion slot (wake
+    /// all), abandoned id (drop silently), anything else (protocol
+    /// desync — kill). Remote errors and malformed results are
+    /// per-request outcomes; an undecodable or id-less frame means the
+    /// stream itself can no longer be trusted.
+    fn route_frame(&self, frame: Vec<u8>) {
+        let n = frame.len();
+        let t0 = Instant::now();
+        let (v, tensors, mode) = match wire::decode_frame(frame) {
+            Ok(x) => x,
+            Err(e) => {
+                self.kill(&format!("undecodable reply: {e}"));
+                return;
+            }
+        };
+        rpc::note_rx(self.metrics.as_deref(), n, t0.elapsed(), mode);
+        if let Some(m) = &self.metrics {
+            m.counter("mux.frames").fetch_add(1, Ordering::Relaxed);
+        }
+        let Some(id) = v.get("id").and_then(Value::as_i64).map(|i| i as u64) else {
+            self.kill("reply missing id");
+            return;
+        };
+        let res: Result<Body, RpcError> =
+            if let Some(e) = v.get("error").and_then(Value::as_str) {
+                Err(RpcError::Remote(e.to_string()))
+            } else {
+                // move, don't clone: result can be a multi-MB matrix
+                let (result, spans) = match v {
+                    Value::Object(mut m) => (m.remove("result"), m.remove("trace_spans")),
+                    _ => (None, None),
+                };
+                // adoption happens on whichever waiter pumps; parenting
+                // lives in the span records themselves, so the adopting
+                // thread's identity doesn't matter
+                if let (Some(t), Some(sv)) = (self.tracer.as_deref(), spans) {
+                    t.adopt(crate::trace::spans_from_value(&sv));
+                }
+                match result {
+                    Some(value) => Ok(Body { value, tensors }),
+                    None => Err(RpcError::Malformed("missing result".into())),
+                }
+            };
+        let mut st = self.state();
+        if let Some(slot) = st.slots.get_mut(&id) {
+            slot.done = Some(res);
+            slot.routed_at = Some(Instant::now());
+            drop(st);
+            self.cv.notify_all();
+        } else if let Some(pos) = st.abandoned.iter().position(|&a| a == id) {
+            st.abandoned.remove(pos);
+            // late reply to a timed-out request: drop, conn stays usable
+        } else {
+            drop(st);
+            self.kill(&format!("reply with unknown id {id}"));
+        }
+    }
+}
+
+/// Outcome of asking for the shared mux connection to a peer.
+enum MuxObtained {
+    /// Use the multiplexed plane; the flag is true when this very call
+    /// dialed the connection (fresh — errors propagate, no retry).
+    Mux(Arc<MuxConn>, bool),
+    /// Use the classic path; a refusing dial's negotiated conn is
+    /// donated back so it serves the caller's request directly.
+    Classic(Option<PooledConn>),
+}
+
+/// One in-flight multiplexed RPC begun with [`ConnPool::start`]. Await
+/// it with [`ConnPool::wait`]; dropping it unawaited abandons the
+/// request (the reply, if it ever comes, is discarded).
+pub struct PendingCall {
+    mux: Arc<MuxConn>,
+    id: u64,
+    deadline: Option<Instant>,
+    awaited: bool,
+}
+
+impl Drop for PendingCall {
+    fn drop(&mut self) {
+        if !self.awaited {
+            self.mux.abandon(self.id);
+        }
+    }
+}
+
 /// Thread-safe per-peer pool of persistent, wire-negotiated connections.
 pub struct ConnPool {
     cfg: PoolConfig,
@@ -200,6 +631,11 @@ pub struct ConnPool {
     /// When set, span subtrees piggybacked on replies are adopted into
     /// this tracer (the coordinator's end-to-end tree assembly).
     tracer: Option<Arc<crate::trace::Tracer>>,
+    /// Ask peers for request-id multiplexing at `hello` (`server.wire.mux`).
+    /// Effective only on a binary-preferring pool with reuse enabled:
+    /// `max_idle_per_peer: 0` means per-call dialing, which a shared
+    /// long-lived mux socket would contradict.
+    mux_enabled: bool,
     peers: Mutex<HashMap<String, PeerState>>,
 }
 
@@ -212,6 +648,7 @@ impl ConnPool {
             hello_timeout: HELLO_TIMEOUT,
             metrics,
             tracer: None,
+            mux_enabled: true,
             peers: Mutex::new(HashMap::new()),
         }
     }
@@ -228,6 +665,19 @@ impl ConnPool {
     pub fn with_tracer(mut self, tracer: Arc<crate::trace::Tracer>) -> ConnPool {
         self.tracer = Some(tracer);
         self
+    }
+
+    /// Enable/disable asking peers for request-id multiplexing
+    /// (`server.wire.mux`; default on).
+    pub fn with_mux(mut self, on: bool) -> ConnPool {
+        self.mux_enabled = on;
+        self
+    }
+
+    /// Muxing applies on this pool at all (irrespective of any single
+    /// peer's answer).
+    fn mux_gate(&self) -> bool {
+        self.mux_enabled && self.prefer == WireMode::Binary && self.cfg.max_idle_per_peer > 0
     }
 
     fn count(&self, name: &str, n: u64) {
@@ -256,6 +706,12 @@ impl ConnPool {
                 self.count("pool.evictions", p.idle.len() as u64);
                 p.idle.clear();
             }
+            if let Some(m) = p.mux.take() {
+                self.count("pool.evictions", 1);
+                m.kill("peer invalidated");
+            }
+            // the reborn peer may have a different mux answer
+            p.mux_refused = false;
         }
     }
 
@@ -274,6 +730,11 @@ impl ConnPool {
         {
             let peers = self.peers.lock().unwrap();
             if let Some(p) = peers.get(addr) {
+                if let Some(m) = &p.mux {
+                    if m.is_live() {
+                        return true;
+                    }
+                }
                 if p.idle.iter().any(|c| !stream_is_stale(&c.stream)) {
                     return true;
                 }
@@ -328,6 +789,10 @@ impl ConnPool {
         if self.cfg.max_idle_per_peer == 0 {
             return; // per-call mode: close by drop, nothing to count
         }
+        // a per-call read deadline must not outlive the call that set
+        // it: the next checkout would silently inherit a stale (possibly
+        // much shorter) timeout and fail a perfectly healthy exchange
+        conn.stream.set_read_timeout(None).ok();
         let mut peers = self.peers.lock().unwrap();
         let p = peers.entry(addr.to_string()).or_default();
         if conn.generation != p.generation || p.idle.len() >= self.cfg.max_idle_per_peer {
@@ -346,6 +811,20 @@ impl ConnPool {
     /// socket as v1 JSON (any peer can answer); a refusal or a pre-v2
     /// `unknown method` error leaves the connection on the JSON wire.
     fn dial_negotiated(&self, addr: &str, generation: u64) -> Result<PooledConn, RpcError> {
+        self.dial_negotiated_ext(addr, generation, false).map(|(c, _)| c)
+    }
+
+    /// [`ConnPool::dial_negotiated`] that can also request request-id
+    /// multiplexing in the same `hello`: the returned flag is true iff
+    /// the peer echoed `"mux": true` (old peers skip the unknown key, so
+    /// refusal is simply its absence — no extra round trip, no version
+    /// matrix).
+    fn dial_negotiated_ext(
+        &self,
+        addr: &str,
+        generation: u64,
+        want_mux: bool,
+    ) -> Result<(PooledConn, bool), RpcError> {
         self.backoff_before_dial(addr);
         let mut stream = match dial(addr, self.dial_timeout) {
             Ok(s) => {
@@ -359,11 +838,15 @@ impl ConnPool {
         };
         let mut next_id = 1u64;
         let mut mode = WireMode::Json;
+        let mut mux = false;
         if self.prefer == WireMode::Binary {
             stream.set_read_timeout(Some(self.hello_timeout)).ok();
             let mut p = Map::new();
             p.insert("wire", Value::from(WireMode::Binary.as_str()));
             p.insert("version", Value::from(wire::WIRE_VERSION as u64));
+            if want_mux {
+                p.insert("mux", Value::Bool(true));
+            }
             let id = next_id;
             next_id += 1;
             rpc::send_request_wire(
@@ -379,6 +862,9 @@ impl ConnPool {
                     if b.value.get("wire").and_then(Value::as_str) == Some("binary") {
                         mode = WireMode::Binary;
                     }
+                    mux = want_mux
+                        && mode == WireMode::Binary
+                        && b.value.get("mux").and_then(Value::as_bool) == Some(true);
                 }
                 // pre-v2 peer: no `hello` method — stay on JSON; any
                 // other remote error is a real failure, not version skew
@@ -393,7 +879,7 @@ impl ConnPool {
             }
         }
         self.count("pool.dials", 1);
-        Ok(PooledConn { stream, mode, next_id, reused: false, generation })
+        Ok((PooledConn { stream, mode, next_id, reused: false, generation }, mux))
     }
 
     /// One blocking request/response exchange over a pooled connection,
@@ -469,7 +955,30 @@ impl ConnPool {
         read_timeout: Option<Duration>,
         retry_stale: bool,
     ) -> Result<(Body, WireMode), RpcError> {
-        let mut conn = self.checkout(addr)?;
+        let donated = match self.mux_obtain(addr)? {
+            MuxObtained::Mux(mux, fresh) => {
+                return match self.mux_roundtrip(&mux, method, params, read_timeout) {
+                    Err(e) if retry_stale && !fresh && is_dead_socket(&e) => {
+                        // the shared conn died under us: same retry-once
+                        // policy as a reused classic conn. A downgraded
+                        // peer (mux now refused) falls through to the
+                        // classic path inside the recursive call, without
+                        // a second retry budget.
+                        self.invalidate(addr);
+                        self.count("pool.retries", 1);
+                        self.call_inner(addr, method, params, read_timeout, false)
+                    }
+                    other => other.map(|b| (b, WireMode::Binary)),
+                };
+            }
+            MuxObtained::Classic(donated) => donated,
+        };
+        let mut conn = match donated {
+            // the mux-refusing dial's conn, used directly: neither a
+            // second dial nor a phantom pool.hit
+            Some(c) => c,
+            None => self.checkout(addr)?,
+        };
         let reused = conn.reused;
         match self.roundtrip(&mut conn, method, params, read_timeout) {
             Ok(body) => {
@@ -550,6 +1059,175 @@ impl ConnPool {
         conn.next_id += 1;
         rpc::send_request_wire(&mut conn.stream, id, method, params, conn.mode, self.registry())?;
         rpc::recv_response_traced(&mut conn.stream, id, self.registry(), self.tracer.as_deref())
+    }
+
+    /// The shared [`MuxConn`] for `addr`, dialing one when needed.
+    /// `Classic` means the caller must use the one-RPC-per-connection
+    /// path — muxing is gated off on this pool, or the peer refused it
+    /// at `hello` (in which case the refusing dial's freshly negotiated
+    /// conn rides along so it isn't wasted). The `Mux` flag is true when
+    /// this call dialed the connection (fresh), driving the retry-once
+    /// policy exactly like `PooledConn::is_reused` does for classic
+    /// conns.
+    fn mux_obtain(&self, addr: &str) -> Result<MuxObtained, RpcError> {
+        if !self.mux_gate() {
+            return Ok(MuxObtained::Classic(None));
+        }
+        let dialing = {
+            let mut peers = self.peers.lock().unwrap();
+            let p = peers.entry(addr.to_string()).or_default();
+            if let Some(m) = &p.mux {
+                if m.is_dead() || m.idle_and_stale() {
+                    let dead = p.mux.take().unwrap();
+                    dead.kill("stale while parked");
+                    self.count("pool.evictions", 1);
+                } else {
+                    self.count("pool.hits", 1);
+                    return Ok(MuxObtained::Mux(m.clone(), false));
+                }
+            }
+            if p.mux_refused {
+                return Ok(MuxObtained::Classic(None));
+            }
+            if !p.idle.is_empty() {
+                // mux-ness unknown but classic conns are parked (direct
+                // checkout users, pools warmed before the upgrade):
+                // reuse them instead of dialing to ask — discovery waits
+                // for a call that would have dialed anyway
+                return Ok(MuxObtained::Classic(None));
+            }
+            p.mux_dialing.clone()
+        };
+        // serialize dials per peer: the herd's first caller dials, the
+        // rest block here and then find the installed conn below
+        let _dial = dialing.lock().unwrap_or_else(|p| p.into_inner());
+        let generation = {
+            let mut peers = self.peers.lock().unwrap();
+            let p = peers.entry(addr.to_string()).or_default();
+            if let Some(m) = &p.mux {
+                if !m.is_dead() {
+                    self.count("pool.hits", 1);
+                    return Ok(MuxObtained::Mux(m.clone(), false));
+                }
+                p.mux = None;
+            }
+            if p.mux_refused || !p.idle.is_empty() {
+                return Ok(MuxObtained::Classic(None));
+            }
+            p.generation
+        };
+        let (conn, granted) = self.dial_negotiated_ext(addr, generation, true)?;
+        if !granted {
+            // classic peer (old binary, JSON wire, or mux disabled
+            // server-side): remember the refusal; the dialed conn goes
+            // back to the caller for direct use
+            self.peers.lock().unwrap().entry(addr.to_string()).or_default().mux_refused = true;
+            return Ok(MuxObtained::Classic(Some(conn)));
+        }
+        let fresh = MuxConn::new(addr, conn, self.metrics.clone(), self.tracer.clone())?;
+        self.peers.lock().unwrap().entry(addr.to_string()).or_default().mux = Some(fresh.clone());
+        Ok(MuxObtained::Mux(fresh, true))
+    }
+
+    fn mux_roundtrip(
+        &self,
+        mux: &MuxConn,
+        method: &str,
+        params: &Payload,
+        read_timeout: Option<Duration>,
+    ) -> Result<Body, RpcError> {
+        let deadline = read_timeout.map(|t| Instant::now() + t);
+        let id = mux.begin(method, params)?;
+        mux.wait(id, deadline)
+    }
+
+    /// Begin `method` on the shared mux connection to `addr` without
+    /// blocking on the reply — the scatter path's fan-out primitive
+    /// (fire every shard's request from one thread, then await them in
+    /// turn with [`ConnPool::wait`]). `Ok(None)` means the peer doesn't
+    /// multiplex and the caller must use the classic blocking path. A
+    /// begin that fails on a previously live conn is retried once on a
+    /// fresh dial: the request bytes never left, so re-sending is safe
+    /// even for non-idempotent methods.
+    pub fn start(
+        &self,
+        addr: &str,
+        method: &str,
+        params: &Payload,
+        read_timeout: Option<Duration>,
+    ) -> Result<Option<PendingCall>, RpcError> {
+        let (mux, fresh) = match self.mux_obtain(addr)? {
+            MuxObtained::Mux(m, fresh) => (m, fresh),
+            MuxObtained::Classic(donated) => {
+                if let Some(c) = donated {
+                    self.checkin(addr, c);
+                }
+                return Ok(None);
+            }
+        };
+        let deadline = read_timeout.map(|t| Instant::now() + t);
+        match mux.begin(method, params) {
+            Ok(id) => Ok(Some(PendingCall { mux, id, deadline, awaited: false })),
+            Err(e) if !fresh && is_dead_socket(&e) => {
+                self.invalidate(addr);
+                self.count("pool.retries", 1);
+                match self.mux_obtain(addr)? {
+                    MuxObtained::Mux(m2, _) => {
+                        let id = m2.begin(method, params)?;
+                        Ok(Some(PendingCall { mux: m2, id, deadline, awaited: false }))
+                    }
+                    MuxObtained::Classic(donated) => {
+                        // peer downgraded mid-retry: classic path
+                        if let Some(c) = donated {
+                            self.checkin(addr, c);
+                        }
+                        Ok(None)
+                    }
+                }
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Block for the reply of a call begun with [`ConnPool::start`].
+    pub fn wait(&self, mut call: PendingCall) -> Result<Body, RpcError> {
+        call.awaited = true;
+        call.mux.wait(call.id, call.deadline)
+    }
+
+    /// Negotiate (or reuse) a connection to `addr` and report its wire
+    /// mode without issuing an RPC — the client's connect-time
+    /// handshake surface.
+    pub fn establish(&self, addr: &str) -> Result<WireMode, RpcError> {
+        let conn = match self.mux_obtain(addr)? {
+            MuxObtained::Mux(..) => return Ok(WireMode::Binary),
+            MuxObtained::Classic(Some(c)) => c,
+            MuxObtained::Classic(None) => self.checkout(addr)?,
+        };
+        let mode = conn.mode();
+        self.checkin(addr, conn);
+        Ok(mode)
+    }
+
+    /// What is known about `addr`'s multiplexing without touching the
+    /// network: `Some(true)` with a live mux conn, `Some(false)` when
+    /// muxing is gated off on this pool or the peer refused it, `None`
+    /// before first contact.
+    pub fn peer_muxes(&self, addr: &str) -> Option<bool> {
+        if !self.mux_gate() {
+            return Some(false);
+        }
+        let peers = self.peers.lock().unwrap();
+        let p = peers.get(addr)?;
+        if let Some(m) = &p.mux {
+            if !m.is_dead() {
+                return Some(true);
+            }
+        }
+        if p.mux_refused {
+            return Some(false);
+        }
+        None
     }
 }
 
@@ -632,12 +1310,19 @@ mod tests {
                         let Ok(buf) = rpc::read_frame(&mut stream) else { return };
                         let Ok(req) = rpc::decode_request_frame(buf) else { return };
                         let reply = if req.method == "hello" {
+                            // never grants mux: MiniPeer's serial loop is
+                            // exactly the classic one-RPC-at-a-time peer
                             Payload::json(wire::hello_reply(
                                 &req.params.value,
                                 *policy.lock().unwrap(),
+                                false,
                             ))
                         } else {
                             seen.lock().unwrap().push(req.mode);
+                            if req.method == "slow" {
+                                let ms = req.params.value.get("ms").and_then(Value::as_i64);
+                                std::thread::sleep(Duration::from_millis(ms.unwrap_or(0) as u64));
+                            }
                             req.params.to_payload()
                         };
                         if rpc::send_result_wire(&mut stream, req.id, &reply, req.mode, None)
@@ -909,5 +1594,343 @@ mod tests {
             dial("not-an-address", Duration::from_millis(100)),
             Err(RpcError::Malformed(_))
         ));
+    }
+
+    use std::sync::atomic::AtomicUsize;
+
+    /// Real `serve_conn` peer with mux granted — what an upgraded
+    /// `AlServer` looks like to the pool. Counts accepted sockets so
+    /// tests can pin connection reuse.
+    struct MuxPeer {
+        addr: String,
+        accepted: Arc<AtomicUsize>,
+        shutdown: Arc<AtomicBool>,
+    }
+
+    impl MuxPeer {
+        fn start() -> MuxPeer {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            let accepted = Arc::new(AtomicUsize::new(0));
+            let shutdown = Arc::new(AtomicBool::new(false));
+            let (acc, stop) = (accepted.clone(), shutdown.clone());
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(mut stream) = stream else { continue };
+                    acc.fetch_add(1, Ordering::SeqCst);
+                    let stop = stop.clone();
+                    std::thread::spawn(move || {
+                        let metrics = Registry::new();
+                        rpc::serve_conn(
+                            &mut stream,
+                            "test-mux-peer",
+                            &stop,
+                            &metrics,
+                            None,
+                            WireMode::Binary,
+                            |method, params, _mode| match method {
+                                "hello" => Ok(Payload::json(wire::hello_reply(
+                                    &params.value,
+                                    WireMode::Binary,
+                                    true,
+                                ))),
+                                "echo" => Ok(params.to_payload()),
+                                "slow" => {
+                                    let ms =
+                                        params.value.get("ms").and_then(Value::as_i64).unwrap_or(0);
+                                    std::thread::sleep(Duration::from_millis(ms as u64));
+                                    Ok(params.to_payload())
+                                }
+                                other => Err(format!("unknown method '{other}'")),
+                            },
+                        );
+                    });
+                }
+            });
+            MuxPeer { addr, accepted, shutdown }
+        }
+
+        fn sockets(&self) -> usize {
+            self.accepted.load(Ordering::SeqCst)
+        }
+    }
+
+    impl Drop for MuxPeer {
+        fn drop(&mut self) {
+            self.shutdown.store(true, Ordering::SeqCst);
+            let _ = dial(&self.addr, Duration::from_millis(200));
+        }
+    }
+
+    /// The PR 8 socket pin at the pool layer: a herd of concurrent
+    /// callers to one mux peer shares a single connection — including
+    /// the thundering first contact, which must coalesce into one dial.
+    #[test]
+    fn concurrent_mux_calls_share_one_socket() {
+        let peer = MuxPeer::start();
+        let metrics = Registry::new();
+        let pool = ConnPool::new(PoolConfig::default(), WireMode::Binary, Some(metrics.clone()));
+        std::thread::scope(|s| {
+            for i in 0..8i64 {
+                let (pool, addr) = (&pool, &peer.addr);
+                s.spawn(move || {
+                    for j in 0..4i64 {
+                        let v = Value::from(i * 10 + j);
+                        let body = pool
+                            .call(addr, "echo", &Payload::json(v), Some(Duration::from_secs(10)))
+                            .expect("mux echo");
+                        assert_eq!(body.value.as_i64(), Some(i * 10 + j), "demux crossed replies");
+                    }
+                });
+            }
+        });
+        assert_eq!(peer.sockets(), 1, "32 concurrent calls must share one socket");
+        assert_eq!(counter(&metrics, "pool.dials"), 1, "first-contact herd must coalesce");
+        assert_eq!(counter(&metrics, "pool.hits"), 31);
+        assert_eq!(counter(&metrics, "mux.in_flight"), 0, "gauge must return to zero");
+        assert_eq!(counter(&metrics, "mux.frames"), 32);
+        assert_eq!(counter(&metrics, "pool.retries"), 0);
+    }
+
+    /// Replies come back out of request order (slow request first, fast
+    /// second) and each lands in its own waiter — the fast caller never
+    /// queues behind the slow one's reply.
+    #[test]
+    fn mux_demuxes_out_of_order_replies_on_one_socket() {
+        let peer = MuxPeer::start();
+        let metrics = Registry::new();
+        let pool = ConnPool::new(PoolConfig::default(), WireMode::Binary, Some(metrics.clone()));
+        // warm the shared conn so both threads find it installed
+        pool.call(&peer.addr, "echo", &Payload::json(Value::Null), None).unwrap();
+        let (fast_elapsed, slow_elapsed) = std::thread::scope(|s| {
+            let slow = s.spawn(|| {
+                let t0 = Instant::now();
+                let body = pool
+                    .call(
+                        &peer.addr,
+                        "slow",
+                        &Payload::json(obj([("ms", Value::from(400))])),
+                        Some(Duration::from_secs(10)),
+                    )
+                    .expect("slow call");
+                assert_eq!(body.value.get("ms").and_then(Value::as_i64), Some(400));
+                t0.elapsed()
+            });
+            // let the slow request get onto the wire first
+            std::thread::sleep(Duration::from_millis(60));
+            let t0 = Instant::now();
+            let body = pool
+                .call(
+                    &peer.addr,
+                    "echo",
+                    &Payload::json(Value::from(42)),
+                    Some(Duration::from_secs(10)),
+                )
+                .expect("fast call");
+            assert_eq!(body.value.as_i64(), Some(42));
+            (t0.elapsed(), slow.join().unwrap())
+        });
+        assert!(
+            fast_elapsed < Duration::from_millis(300),
+            "fast reply waited behind slow: {fast_elapsed:?}"
+        );
+        assert!(slow_elapsed >= Duration::from_millis(400));
+        assert_eq!(peer.sockets(), 1, "both calls must share the socket");
+        assert_eq!(counter(&metrics, "pool.dials"), 1);
+    }
+
+    /// Peer that grants mux, then poisons the stream with a reply whose
+    /// id was never requested; later connections behave.
+    fn start_rogue_mux_peer() -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let mut first = true;
+            for stream in listener.incoming() {
+                let Ok(mut stream) = stream else { continue };
+                let rogue = std::mem::replace(&mut first, false);
+                std::thread::spawn(move || loop {
+                    let Ok(buf) = rpc::read_frame(&mut stream) else { return };
+                    let Ok(req) = rpc::decode_request_frame(buf) else { return };
+                    if req.method == "hello" {
+                        let reply = Payload::json(wire::hello_reply(
+                            &req.params.value,
+                            WireMode::Binary,
+                            true,
+                        ));
+                        if rpc::send_result_wire(&mut stream, req.id, &reply, req.mode, None)
+                            .is_err()
+                        {
+                            return;
+                        }
+                    } else if rogue {
+                        // a reply nobody asked for, then hang up
+                        let reply = Payload::json(Value::from("surprise"));
+                        let _ =
+                            rpc::send_result_wire(&mut stream, 0xdead_beef, &reply, req.mode, None);
+                        return;
+                    } else if rpc::send_result_wire(
+                        &mut stream,
+                        req.id,
+                        &req.params.to_payload(),
+                        req.mode,
+                        None,
+                    )
+                    .is_err()
+                    {
+                        return;
+                    }
+                });
+            }
+        });
+        addr
+    }
+
+    /// A reply carrying an id that was never issued is protocol desync:
+    /// the connection dies with a diagnostic naming the id, and the next
+    /// call recovers on a fresh dial.
+    #[test]
+    fn unknown_reply_id_kills_mux_conn_then_recovers() {
+        let addr = start_rogue_mux_peer();
+        let metrics = Registry::new();
+        let pool = ConnPool::new(PoolConfig::default(), WireMode::Binary, Some(metrics.clone()));
+        let err = pool
+            .call(&addr, "echo", &Payload::json(Value::Null), Some(Duration::from_secs(5)))
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown id"), "got: {err}");
+        let body = pool
+            .call(&addr, "echo", &Payload::json(Value::from(7)), Some(Duration::from_secs(5)))
+            .expect("fresh conn must recover");
+        assert_eq!(body.value.as_i64(), Some(7));
+        assert_eq!(counter(&metrics, "pool.dials"), 2);
+    }
+
+    /// A deadline abandons only its own request: the late reply is
+    /// dropped on arrival and the shared connection keeps serving.
+    #[test]
+    fn mux_deadline_abandons_request_and_drops_late_reply() {
+        let peer = MuxPeer::start();
+        let metrics = Registry::new();
+        let pool = ConnPool::new(PoolConfig::default(), WireMode::Binary, Some(metrics.clone()));
+        let err = pool
+            .call(
+                &peer.addr,
+                "slow",
+                &Payload::json(obj([("ms", Value::from(400))])),
+                Some(Duration::from_millis(60)),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("deadline"), "got: {err}");
+        assert_eq!(counter(&metrics, "mux.in_flight"), 0, "abandon must release the slot");
+        // the late reply lands while this call is in flight; it must be
+        // discarded silently, not kill the conn as an unknown id
+        let body = pool
+            .call(
+                &peer.addr,
+                "slow",
+                &Payload::json(obj([("ms", Value::from(500))])),
+                Some(Duration::from_secs(10)),
+            )
+            .expect("conn must survive the late reply");
+        assert_eq!(body.value.get("ms").and_then(Value::as_i64), Some(500));
+        assert_eq!(peer.sockets(), 1, "no redial: the timed-out conn stays usable");
+        assert_eq!(counter(&metrics, "pool.dials"), 1);
+    }
+
+    /// The ISSUE 8 stale-deadline satellite pin: a per-call read
+    /// deadline set by one call must not be inherited by the next
+    /// checkout of the same parked connection.
+    #[test]
+    fn checkin_clears_per_call_read_deadline() {
+        let peer = MiniPeer::start(WireMode::Binary);
+        let pool = ConnPool::new(PoolConfig::default(), WireMode::Binary, None).with_mux(false);
+        // a call with a tight per-call deadline parks its conn afterwards
+        pool.call(&peer.addr, "echo", &Payload::json(Value::Null), Some(Duration::from_millis(40)))
+            .unwrap();
+        // drive the parked conn directly (no pool-side timeout handling):
+        // a deadline-less exchange against a 150ms-slow reply must not
+        // inherit the 40ms deadline
+        let mut conn = pool.checkout(&peer.addr).unwrap();
+        assert!(conn.is_reused(), "test needs the parked conn, not a fresh dial");
+        let id = conn.next_id;
+        conn.next_id += 1;
+        rpc::send_request_wire(
+            &mut conn.stream,
+            id,
+            "slow",
+            &Payload::json(obj([("ms", Value::from(150))])),
+            conn.mode,
+            None,
+        )
+        .unwrap();
+        let body = rpc::recv_response_body(&mut conn.stream, id, None)
+            .expect("parked conn inherited the previous call's 40ms read deadline");
+        assert_eq!(body.value.get("ms").and_then(Value::as_i64), Some(150));
+    }
+
+    /// Old/classic peers (no mux echo in `hello`) fall back to the
+    /// one-RPC-per-connection path: the refusing dial's conn is used
+    /// directly, remembered as refused, and `start` reports `None`.
+    #[test]
+    fn old_peer_mux_refusal_falls_back_to_classic_path() {
+        let peer = MiniPeer::start(WireMode::Binary);
+        let metrics = Registry::new();
+        let pool = ConnPool::new(PoolConfig::default(), WireMode::Binary, Some(metrics.clone()));
+        assert_eq!(pool.peer_muxes(&peer.addr), None, "unknown before first contact");
+        let body = pool.call(&peer.addr, "echo", &Payload::json(Value::from(1)), None).unwrap();
+        assert_eq!(body.value.as_i64(), Some(1));
+        assert_eq!(pool.peer_muxes(&peer.addr), Some(false));
+        // the refusal is sticky: no re-ask, the donated conn is reused
+        pool.call(&peer.addr, "echo", &Payload::json(Value::from(2)), None).unwrap();
+        assert_eq!(counter(&metrics, "pool.dials"), 1, "refusal must not cost extra dials");
+        assert_eq!(counter(&metrics, "pool.hits"), 1);
+        assert!(
+            pool.start(&peer.addr, "echo", &Payload::json(Value::Null), None).unwrap().is_none(),
+            "start must report the classic path for a refusing peer"
+        );
+        // a mux-disabled pool never even asks
+        let pool_off = ConnPool::new(PoolConfig::default(), WireMode::Binary, None).with_mux(false);
+        assert_eq!(pool_off.peer_muxes(&peer.addr), Some(false));
+    }
+
+    /// `start`/`wait` against a mux peer: fire several requests from one
+    /// thread, then await them in any order.
+    #[test]
+    fn start_then_wait_completes_out_of_await_order() {
+        let peer = MuxPeer::start();
+        let metrics = Registry::new();
+        let pool = ConnPool::new(PoolConfig::default(), WireMode::Binary, Some(metrics.clone()));
+        let calls: Vec<PendingCall> = (0..5i64)
+            .map(|i| {
+                pool.start(
+                    &peer.addr,
+                    "echo",
+                    &Payload::json(Value::from(i)),
+                    Some(Duration::from_secs(10)),
+                )
+                .expect("start")
+                .expect("MuxPeer must grant mux")
+            })
+            .collect();
+        // await in reverse: completion order must not matter
+        for (i, call) in calls.into_iter().enumerate().rev() {
+            let body = pool.wait(call).expect("wait");
+            assert_eq!(body.value.as_i64(), Some(i as i64));
+        }
+        assert_eq!(peer.sockets(), 1);
+        assert_eq!(counter(&metrics, "mux.in_flight"), 0);
+        assert_eq!(pool.peer_muxes(&peer.addr), Some(true));
+        // dropping an unawaited call abandons it without killing the conn
+        let dangling = pool
+            .start(&peer.addr, "echo", &Payload::json(Value::Null), None)
+            .unwrap()
+            .unwrap();
+        drop(dangling);
+        pool.call(&peer.addr, "echo", &Payload::json(Value::from(9)), None).unwrap();
+        assert_eq!(counter(&metrics, "mux.in_flight"), 0);
+        assert_eq!(peer.sockets(), 1);
     }
 }

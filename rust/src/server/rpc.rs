@@ -16,7 +16,8 @@
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::json::{self, Map, Value};
@@ -93,7 +94,7 @@ fn note_tx(metrics: Option<&Registry>, bytes: usize, encode: Duration) {
     }
 }
 
-fn note_rx(metrics: Option<&Registry>, bytes: usize, decode: Duration, mode: WireMode) {
+pub(crate) fn note_rx(metrics: Option<&Registry>, bytes: usize, decode: Duration, mode: WireMode) {
     if let Some(m) = metrics {
         m.counter("wire.rx_bytes").fetch_add(bytes as u64, Ordering::Relaxed);
         m.time("wire.decode", decode);
@@ -216,6 +217,12 @@ pub fn send_error(w: &mut impl Write, id: u64, error: &str) -> Result<(), RpcErr
     write_frame(w, json::to_string(&Value::Object(m)).as_bytes())
 }
 
+/// Handler threads spawned per multiplexed connection are capped here;
+/// beyond it the read loop processes requests inline, which stops
+/// reading further frames until the handler finishes — natural
+/// backpressure instead of unbounded thread growth.
+const MUX_SERVE_MAX_INFLIGHT: usize = 64;
+
 /// Serve framed request/response RPC on one connection until clean EOF,
 /// a broken frame, an I/O failure, or `shutdown` flips. Shared by the
 /// single server and the cluster coordinator so the idle-probe/shutdown
@@ -238,6 +245,15 @@ pub fn send_error(w: &mut impl Write, id: u64, error: &str) -> Result<(), RpcErr
 /// (traced requests also piggyback this side's span subtree on the
 /// reply), or opening a fresh root trace for the entry-point methods in
 /// `trace::default_traced`.
+///
+/// Once the connection negotiates multiplexing (the `handle`-produced
+/// `hello` reply carries `"mux": true`), requests are dispatched to
+/// scoped handler threads and the loop keeps reading, so many RPCs can
+/// be in flight on one socket; replies are serialized through a cloned
+/// write half and may interleave out of request order (the envelope
+/// `id` is the peer's correlation key). Connections that never
+/// negotiate mux are served strictly inline, byte-identical to the
+/// pre-mux behavior.
 pub fn serve_conn(
     stream: &mut TcpStream,
     tag: &'static str,
@@ -245,125 +261,193 @@ pub fn serve_conn(
     metrics: &Registry,
     tracer: Option<&crate::trace::Tracer>,
     wire_mode: WireMode,
-    mut handle: impl FnMut(&str, &Body, WireMode) -> Result<Payload, String>,
+    handle: impl Fn(&str, &Body, WireMode) -> Result<Payload, String> + Sync,
 ) {
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     stream.set_nodelay(true).ok();
-    loop {
-        stream.set_read_timeout(Some(Duration::from_millis(250))).ok();
-        let mut probe = [0u8; 1];
-        loop {
-            if shutdown.load(Ordering::SeqCst) {
-                return;
-            }
-            match stream.peek(&mut probe) {
-                Ok(0) => return, // clean EOF
-                Ok(_) => break,  // a frame is waiting
-                Err(e)
-                    if matches!(
-                        e.kind(),
-                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                    ) =>
-                {
-                    continue
-                }
-                Err(_) => return,
-            }
+    // All replies go through one mutex-guarded write half so concurrent
+    // mux handler threads cannot interleave frame bytes. The clone
+    // shares the fd (and its options) with `stream`; only this loop
+    // ever reads, only the mutex holder ever writes.
+    let writer = match stream.try_clone() {
+        Ok(w) => Mutex::new(w),
+        Err(e) => {
+            // out of fds — refusing the connection beats serving it
+            // with no way to ever interleave replies
+            crate::log_warn!(tag, "dropping conn from {peer}: clone for write half failed: {e}");
+            return;
         }
-        stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
-        let buf = match read_frame(stream) {
-            Ok(b) => b,
-            Err(RpcError::Closed) => return,
-            Err(e) => {
-                crate::log_debug!(tag, "bad frame from {peer}: {e}");
-                return;
+    };
+    let mux = AtomicBool::new(false);
+    let in_flight = AtomicUsize::new(0);
+    // flipped by a handler thread whose reply write failed: the socket
+    // is dead for writing, so reading more requests is pointless
+    let broken = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        loop {
+            stream.set_read_timeout(Some(Duration::from_millis(250))).ok();
+            let mut probe = [0u8; 1];
+            loop {
+                if shutdown.load(Ordering::SeqCst) || broken.load(Ordering::SeqCst) {
+                    return;
+                }
+                match stream.peek(&mut probe) {
+                    Ok(0) => return, // clean EOF
+                    Ok(_) => break,  // a frame is waiting
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) =>
+                    {
+                        continue
+                    }
+                    Err(_) => return,
+                }
             }
-        };
-        let t_decode = Instant::now();
-        if wire_mode == WireMode::Json && buf.first() == Some(&wire::BIN_MAGIC) {
-            // forced-JSON server: refuse the v2 frame from its header
-            // alone — never decode tensor sections that will be
-            // discarded — and keep the connection so the peer can
-            // renegotiate
-            let id = match wire::decode_binary_header(&buf) {
-                Ok(v) => v.get("id").and_then(Value::as_i64).unwrap_or(0) as u64,
+            stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+            let buf = match read_frame(stream) {
+                Ok(b) => b,
+                Err(RpcError::Closed) => return,
                 Err(e) => {
                     crate::log_debug!(tag, "bad frame from {peer}: {e}");
                     return;
                 }
             };
-            note_rx(Some(metrics), buf.len(), t_decode.elapsed(), WireMode::Binary);
-            if send_error(stream, id, wire::ERR_BINARY_DISABLED).is_err() {
-                return;
-            }
-            continue;
-        }
-        let buf_len = buf.len();
-        // zero-copy decode: tensor sections stay in `buf` (now owned by
-        // the request) until the handler materializes the ones it uses
-        let req = match decode_request_frame(buf) {
-            Ok(r) => r,
-            Err(e) => {
-                crate::log_debug!(tag, "bad frame from {peer}: {e}");
-                // protocol is broken on this conn; drop it
-                return;
-            }
-        };
-        note_rx(Some(metrics), buf_len, t_decode.elapsed(), req.mode);
-        let traced = tracer.is_some_and(|t| t.enabled())
-            && (req.trace.is_active() || crate::trace::default_traced(&req.method));
-        let t0 = Instant::now();
-        // handlers get the request's encoding so version-sensitive
-        // responses (select_shard's candidate schema) can stay
-        // v1-compatible on the JSON wire
-        let (result, mut spans) = if traced {
-            let t = tracer.unwrap();
-            crate::trace::begin_collect();
-            let r = {
-                let mut g = t.request(&format!("rpc.{}", req.method), req.trace);
-                let r = handle(&req.method, &req.params, req.mode);
-                if let Err(e) = &r {
-                    g.annotate("error", e);
-                }
-                r
-            };
-            (r, crate::trace::take_collected())
-        } else {
-            (handle(&req.method, &req.params, req.mode), Vec::new())
-        };
-        metrics.time(&format!("rpc.{}", req.method), t0.elapsed());
-        // piggyback this side's spans only when the caller is traced (it
-        // sent a context, so it has a tracer to adopt them into)
-        let extra = if req.trace.is_active() && !spans.is_empty() {
-            spans.truncate(crate::trace::MAX_PIGGYBACK);
-            Some(format!(
-                "\"trace_spans\":{}",
-                json::to_string(&crate::trace::spans_to_value(&spans))
-            ))
-        } else {
-            None
-        };
-        let io = match result {
-            Ok(p) => {
-                match send_result_ext(stream, req.id, &p, req.mode, Some(metrics), extra.as_deref())
-                {
-                    // encode-side failures (frame cap, bad tensor refs)
-                    // happen before any bytes hit the stream — e.g. a JSON
-                    // fallback inflating a tensor reply past MAX_FRAME where
-                    // the binary form fits. Report them as an error reply
-                    // instead of silently dropping the connection.
-                    Err(e) if !matches!(e, RpcError::Io(_)) => {
-                        send_error(stream, req.id, &format!("reply encoding failed: {e}"))
+            let t_decode = Instant::now();
+            if wire_mode == WireMode::Json && buf.first() == Some(&wire::BIN_MAGIC) {
+                // forced-JSON server: refuse the v2 frame from its header
+                // alone — never decode tensor sections that will be
+                // discarded — and keep the connection so the peer can
+                // renegotiate
+                let id = match wire::decode_binary_header(&buf) {
+                    Ok(v) => v.get("id").and_then(Value::as_i64).unwrap_or(0) as u64,
+                    Err(e) => {
+                        crate::log_debug!(tag, "bad frame from {peer}: {e}");
+                        return;
                     }
-                    other => other,
+                };
+                note_rx(Some(metrics), buf.len(), t_decode.elapsed(), WireMode::Binary);
+                let io = {
+                    let mut w = writer.lock().unwrap_or_else(|p| p.into_inner());
+                    send_error(&mut *w, id, wire::ERR_BINARY_DISABLED)
+                };
+                if io.is_err() {
+                    return;
                 }
+                continue;
             }
-            Err(e) => send_error(stream, req.id, &e),
+            let buf_len = buf.len();
+            // zero-copy decode: tensor sections stay in `buf` (now owned by
+            // the request) until the handler materializes the ones it uses
+            let req = match decode_request_frame(buf) {
+                Ok(r) => r,
+                Err(e) => {
+                    crate::log_debug!(tag, "bad frame from {peer}: {e}");
+                    // protocol is broken on this conn; drop it
+                    return;
+                }
+            };
+            note_rx(Some(metrics), buf_len, t_decode.elapsed(), req.mode);
+            if mux.load(Ordering::SeqCst)
+                && in_flight.load(Ordering::SeqCst) < MUX_SERVE_MAX_INFLIGHT
+            {
+                in_flight.fetch_add(1, Ordering::SeqCst);
+                let (handle, writer, mux, in_flight, broken) =
+                    (&handle, &writer, &mux, &in_flight, &broken);
+                scope.spawn(move || {
+                    // a panicking handler must not poison the whole scope
+                    // at join time; treat it like a dead connection
+                    let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        process_request(req, metrics, tracer, mux, writer, handle)
+                    }));
+                    if !matches!(ok, Ok(true)) {
+                        broken.store(true, Ordering::SeqCst);
+                    }
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                });
+            } else if !process_request(req, metrics, tracer, &mux, &writer, &handle) {
+                return;
+            }
+        }
+    })
+}
+
+/// Dispatch one decoded request through `handle` and write the reply:
+/// the per-request half of [`serve_conn`], shared verbatim by the
+/// inline (classic) and spawned (mux) paths so tracing, timing,
+/// piggyback, and error-reply behavior cannot diverge between them.
+/// Returns `false` when the connection is unusable (reply write
+/// failed).
+fn process_request(
+    req: RequestFrame,
+    metrics: &Registry,
+    tracer: Option<&crate::trace::Tracer>,
+    mux: &AtomicBool,
+    writer: &Mutex<TcpStream>,
+    handle: &(impl Fn(&str, &Body, WireMode) -> Result<Payload, String> + Sync),
+) -> bool {
+    let traced = tracer.is_some_and(|t| t.enabled())
+        && (req.trace.is_active() || crate::trace::default_traced(&req.method));
+    let t0 = Instant::now();
+    // handlers get the request's encoding so version-sensitive
+    // responses (select_shard's candidate schema) can stay
+    // v1-compatible on the JSON wire
+    let (result, mut spans) = if traced {
+        let t = tracer.unwrap();
+        crate::trace::begin_collect();
+        let r = {
+            let mut g = t.request(&format!("rpc.{}", req.method), req.trace);
+            let r = handle(&req.method, &req.params, req.mode);
+            if let Err(e) = &r {
+                g.annotate("error", e);
+            }
+            r
         };
-        if io.is_err() {
-            return;
+        (r, crate::trace::take_collected())
+    } else {
+        (handle(&req.method, &req.params, req.mode), Vec::new())
+    };
+    metrics.time(&format!("rpc.{}", req.method), t0.elapsed());
+    // the hello handler decides mux per-connection; sniff its reply so
+    // the serve loop switches to interleaved dispatch from the next
+    // frame on (hello itself always runs inline — mux starts false)
+    if req.method == "hello" {
+        if let Ok(p) = &result {
+            if p.value.get("mux").and_then(Value::as_bool) == Some(true) {
+                mux.store(true, Ordering::SeqCst);
+            }
         }
     }
+    // piggyback this side's spans only when the caller is traced (it
+    // sent a context, so it has a tracer to adopt them into)
+    let extra = if req.trace.is_active() && !spans.is_empty() {
+        spans.truncate(crate::trace::MAX_PIGGYBACK);
+        Some(format!(
+            "\"trace_spans\":{}",
+            json::to_string(&crate::trace::spans_to_value(&spans))
+        ))
+    } else {
+        None
+    };
+    let mut w = writer.lock().unwrap_or_else(|p| p.into_inner());
+    let io = match result {
+        Ok(p) => {
+            match send_result_ext(&mut *w, req.id, &p, req.mode, Some(metrics), extra.as_deref()) {
+                // encode-side failures (frame cap, bad tensor refs)
+                // happen before any bytes hit the stream — e.g. a JSON
+                // fallback inflating a tensor reply past MAX_FRAME where
+                // the binary form fits. Report them as an error reply
+                // instead of silently dropping the connection.
+                Err(e) if !matches!(e, RpcError::Io(_)) => {
+                    send_error(&mut *w, req.id, &format!("reply encoding failed: {e}"))
+                }
+                other => other,
+            }
+        }
+        Err(e) => send_error(&mut *w, req.id, &e),
+    };
+    io.is_ok()
 }
 
 /// Receive a response for `expect_id` in either encoding; remote errors

@@ -248,6 +248,7 @@ fn dispatch(
         "hello" => Ok(Payload::json(wire::hello_reply(
             &params.value,
             state.config.server.wire,
+            state.config.server.mux,
         ))),
         "ping" => Ok(Payload::json(Value::from("pong"))),
         "push_data" => push_data(state, params).map(Payload::json),

@@ -670,9 +670,13 @@ pub fn decode_frame(bytes: Vec<u8>) -> Result<(Value, TensorBuf, WireMode), RpcE
     Ok((v, TensorBuf { buf: bytes, sections }, WireMode::Binary))
 }
 
-/// `hello {wire, version}` reply: binary is agreed only when the peer
-/// asked for it and this server's config allows it.
-pub fn hello_reply(params: &Value, server: WireMode) -> Value {
+/// `hello {wire, version, mux?}` reply: binary is agreed only when the
+/// peer asked for it and this server's config allows it. Request-id
+/// multiplexing is echoed (`mux: true`) only when the peer requested it,
+/// `server_mux` enables it, *and* the agreed wire is binary — so
+/// `v2+mux` implies v2, and pre-mux peers (which never send the key)
+/// negotiate exactly as before (DESIGN.md §Wire negotiation matrix).
+pub fn hello_reply(params: &Value, server: WireMode, server_mux: bool) -> Value {
     let requested = params.get("wire").and_then(Value::as_str).unwrap_or("binary");
     let agreed = if requested == "binary" && server == WireMode::Binary {
         WireMode::Binary
@@ -682,6 +686,12 @@ pub fn hello_reply(params: &Value, server: WireMode) -> Value {
     let mut m = Map::new();
     m.insert("wire", Value::from(agreed.as_str()));
     m.insert("version", Value::from(WIRE_VERSION as u64));
+    if server_mux
+        && agreed == WireMode::Binary
+        && params.get("mux").and_then(Value::as_bool) == Some(true)
+    {
+        m.insert("mux", Value::Bool(true));
+    }
     Value::Object(m)
 }
 
@@ -1038,14 +1048,37 @@ mod tests {
     #[test]
     fn hello_reply_negotiates() {
         let req = obj([("wire", Value::from("binary"))]);
-        let r = hello_reply(&req, WireMode::Binary);
+        let r = hello_reply(&req, WireMode::Binary, false);
         assert_eq!(r.get("wire").unwrap().as_str(), Some("binary"));
         assert_eq!(r.get("version").unwrap().as_i64(), Some(WIRE_VERSION as i64));
+        // a mux-less exchange never grows the key (old peers see the
+        // exact pre-mux reply shape)
+        assert!(r.get("mux").is_none());
         // server forced to json refuses
-        let r = hello_reply(&req, WireMode::Json);
+        let r = hello_reply(&req, WireMode::Json, false);
         assert_eq!(r.get("wire").unwrap().as_str(), Some("json"));
         // client asking for json gets json even from a binary server
-        let r = hello_reply(&obj([("wire", Value::from("json"))]), WireMode::Binary);
+        let r = hello_reply(&obj([("wire", Value::from("json"))]), WireMode::Binary, false);
         assert_eq!(r.get("wire").unwrap().as_str(), Some("json"));
+    }
+
+    #[test]
+    fn hello_reply_mux_negotiation_matrix() {
+        let mux_req =
+            obj([("wire", Value::from("binary")), ("mux", Value::Bool(true))]);
+        // requested + enabled + binary agreed => mux on
+        let r = hello_reply(&mux_req, WireMode::Binary, true);
+        assert_eq!(r.get("wire").unwrap().as_str(), Some("binary"));
+        assert_eq!(r.get("mux").unwrap().as_bool(), Some(true));
+        // server has mux disabled: silently classic (no key at all)
+        let r = hello_reply(&mux_req, WireMode::Binary, false);
+        assert!(r.get("mux").is_none());
+        // peer never asked (old peer): no echo even when enabled
+        let r = hello_reply(&obj([("wire", Value::from("binary"))]), WireMode::Binary, true);
+        assert!(r.get("mux").is_none());
+        // JSON-agreed wire never muxes: v2+mux implies v2
+        let r = hello_reply(&mux_req, WireMode::Json, true);
+        assert_eq!(r.get("wire").unwrap().as_str(), Some("json"));
+        assert!(r.get("mux").is_none());
     }
 }

@@ -397,3 +397,68 @@ fn coordinator_error_paths() {
     let cs = cluster.cache_stats().unwrap();
     assert!(cs.get("misses").unwrap().as_i64().unwrap() > 0);
 }
+
+/// PR8 tentpole pin: N concurrent scatters interleave on the muxed wire
+/// and hold at most ONE connection per worker — the coordinator never
+/// falls back to dialing per in-flight RPC.
+#[test]
+fn mux_scatter_holds_one_connection_per_worker() {
+    let h = harness(320, 3);
+    let mut seed_client = h.client();
+    seed_client.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+    // concurrent scatters from independent clients: every coordinator
+    // thread funnels its shard fan-out through the shared per-worker conn
+    let clients: Vec<_> = (0..4).map(|_| h.client()).collect();
+    std::thread::scope(|sc| {
+        for mut c in clients {
+            sc.spawn(move || {
+                for _ in 0..3 {
+                    let (sel, _, _) = c.query("s", 24, Some("entropy")).unwrap();
+                    assert_eq!(sel.len(), 24);
+                }
+            });
+        }
+    });
+    let dials = h.coord_counter("pool.dials");
+    assert!(
+        h.coord_counter("mux.frames") > 0,
+        "scatters must ride the muxed wire, not the classic pool"
+    );
+    assert!(
+        dials <= h.n_workers() as u64,
+        "mux scatter must hold at most one connection per worker \
+         (dials={dials}, workers={})",
+        h.n_workers()
+    );
+    assert_eq!(h.coord_counter("pool.retries"), 0, "no dead-conn retries expected");
+}
+
+/// PR8 parity pin: the muxed wire changes connection usage only — the
+/// selections a cluster returns are bit-identical with mux on (default)
+/// and off (an old-peer coordinator), for deterministic strategies.
+#[test]
+fn cluster_selections_match_with_mux_off() {
+    let h_on = harness(320, 3);
+    let h_off = ClusterHarness::builder()
+        .sizes(60, 320, 0)
+        .workers(3)
+        .coord_tweak(|cfg| cfg.server.mux = false)
+        .build();
+    let mut on = h_on.client();
+    let mut off = h_off.client();
+    on.push_data("s", &h_on.manifest, Some(&h_on.labels.init)).unwrap();
+    off.push_data("s", &h_off.manifest, Some(&h_off.labels.init)).unwrap();
+    for strategy in ["random", "least_confidence", "margin_confidence", "entropy"] {
+        let (a, _, _) = on.query("s", 40, Some(strategy)).unwrap();
+        let (b, _, _) = off.query("s", 40, Some(strategy)).unwrap();
+        assert_valid(&a, &h_on.manifest, 40);
+        assert_eq!(
+            ids(&a),
+            ids(&b),
+            "{strategy}: selections must be bit-identical mux on/off"
+        );
+    }
+    // and the wires really differed
+    assert!(h_on.coord_counter("mux.frames") > 0, "mux-on cluster must mux");
+    assert_eq!(h_off.coord_counter("mux.frames"), 0, "mux-off cluster must not mux");
+}

@@ -2,7 +2,8 @@
 """Bench-regression gate for the CI lane.
 
 Reads the BENCH_*.json files the bench targets emit (rpc_wire ->
-BENCH_PR2.json, conn_pool -> BENCH_PR4.json), matches each against the
+BENCH_PR2.json, conn_pool -> BENCH_PR4.json, mux_scatter ->
+BENCH_PR8.json), matches each against the
 committed baseline (tools/bench_baseline.json), and fails the job when a
 gated metric regresses more than the configured tolerance below its
 baseline value.
@@ -17,7 +18,7 @@ baseline from a green run's artifact, but never fails on them.
 Usage (CI runs this from the rust/ package root):
 
     python3 tools/bench_gate.py --baseline tools/bench_baseline.json \
-        ../BENCH_PR2.json ../BENCH_PR4.json
+        ../BENCH_PR2.json ../BENCH_PR4.json ../BENCH_PR8.json
 """
 
 import argparse
