@@ -24,7 +24,7 @@ use alaas::json::Value;
 use alaas::metrics::Registry;
 use alaas::runtime::backend::ComputeBackend;
 use alaas::runtime::HostBackend;
-use alaas::server::{AlClient, AlServer, ServerDeps};
+use alaas::server::{AlClient, AlServer, ServerDeps, SessionOpts};
 use alaas::store::{ObjectStore, StoreRouter};
 
 const WORKERS: usize = 2;
@@ -83,7 +83,8 @@ fn main() -> anyhow::Result<()> {
     println!("coordinator: {} ({WORKERS} workers)", coordinator.addr());
 
     let mut client = AlClient::connect(&coordinator.addr().to_string())?;
-    client.push_data("agent", &manifest, Some(&init_labels))?;
+    let mut session = client.create_session("agent", SessionOpts::default())?;
+    session.push(&manifest, Some(&init_labels))?;
 
     // 3 candidate arms under a tight budget; the server eliminates the
     // weakest forecast each round (Algorithm 1)
@@ -100,9 +101,11 @@ fn main() -> anyhow::Result<()> {
         min_history: 2,
         ..Default::default()
     };
-    let job =
-        client.agent_start("agent", &strategies, &pshea, &pool_labels, &test_labels, 42)?;
+    let job = session.agent_start(&strategies, &pshea, &pool_labels, &test_labels, 42)?;
     println!("agent job {job}: {} arms fan out across the shards", strategies.len());
+    // detach: the poll loop needs the client back, and dropping the handle
+    // would close the session out from under the running job
+    let (_, token) = session.detach();
 
     let mut last_round = 0usize;
     loop {
@@ -123,6 +126,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     let trace = client.agent_result(&job, Duration::from_secs(600))?;
+    client.close_session(&token)?;
     for rec in trace.records.iter().filter(|r| r.eliminated) {
         println!("eliminated in round {}: {}", rec.round, rec.strategy);
     }

@@ -19,7 +19,7 @@ use alaas::json::Value;
 use alaas::metrics::Registry;
 use alaas::runtime::backend::ComputeBackend;
 use alaas::runtime::HostBackend;
-use alaas::server::{AlClient, AlServer, ServerDeps};
+use alaas::server::{AlClient, AlServer, ServerDeps, SessionOpts};
 use alaas::store::{ObjectStore, StoreRouter};
 
 const WORKERS: usize = 3;
@@ -79,14 +79,16 @@ fn main() -> anyhow::Result<()> {
     )?;
     println!("coordinator: listening on {}", coordinator.addr());
 
-    // 3. The unchanged Figure 2 workflow, now against the cluster.
+    // 3. The Figure 2 workflow, now against the cluster through a session
+    // handle — the coordinator admits each scatter under the tenancy gate.
     let mut client = AlClient::connect(&coordinator.addr().to_string())?;
     client.ping()?;
-    client.push_data("dist", &manifest, Some(&init_labels))?;
+    let mut session = client.create_session("dist", SessionOpts::default())?;
+    session.push(&manifest, Some(&init_labels))?;
     println!("client: pushed {} pool samples across {WORKERS} workers", manifest.pool.len());
 
     let t0 = std::time::Instant::now();
-    let (selected, strategy, select_ms) = client.query("dist", 10, None)?;
+    let (selected, strategy, select_ms) = session.query(10, None)?;
     println!(
         "client: query(budget=10) -> {} samples via {strategy} in {:.1}ms (merge {select_ms:.2}ms)",
         selected.len(),
@@ -96,8 +98,9 @@ fn main() -> anyhow::Result<()> {
         println!("  -> id={:5} {}", s.id, s.uri);
     }
     // a diversity strategy exercises the candidate-then-refine protocol
-    let (div, strategy, _) = client.query("dist", 10, Some("k_center_greedy"))?;
+    let (div, strategy, _) = session.query(10, Some("k_center_greedy"))?;
     println!("client: {strategy} refine pass -> {} samples", div.len());
+    session.close()?;
 
     // Per-shard scan timings + straggler spread from the coordinator's
     // metrics registry (also served over the `metrics` RPC).

@@ -16,7 +16,7 @@ use alaas::data::{generate_into_store, DatasetSpec, Oracle};
 use alaas::metrics::Registry;
 use alaas::runtime::backend::ComputeBackend;
 use alaas::runtime::{ArtifactIndex, HostBackend, PjrtBackend, PjrtPool};
-use alaas::server::{AlClient, AlServer, ServerDeps};
+use alaas::server::{AlClient, AlServer, ServerDeps, SessionOpts};
 use alaas::store::{ObjectStore, StoreRouter};
 
 fn backend() -> Arc<dyn ComputeBackend> {
@@ -74,14 +74,16 @@ fn main() -> anyhow::Result<()> {
     let server = AlServer::start(cfg, deps)?;
     println!("server: listening on {}", server.addr());
 
-    // 3. Start Client (Fig 2, step 3)
+    // 3. Start Client (Fig 2, step 3). `create_session` mints a session
+    // handle; push/query hang off it and `close()` releases the quota slot.
     let mut client = AlClient::connect(&server.addr().to_string())?;
     client.ping()?;
-    client.push_data("quickstart", &manifest, Some(&init_labels))?;
+    let mut session = client.create_session("quickstart", SessionOpts::default())?;
+    session.push(&manifest, Some(&init_labels))?;
     println!("client: pushed {} pool samples", manifest.pool.len());
 
     let t0 = std::time::Instant::now();
-    let (selected, strategy, select_ms) = client.query("quickstart", 10, None)?;
+    let (selected, strategy, select_ms) = session.query(10, None)?;
     println!(
         "client: query(budget=10) -> {} samples via {strategy} in {:.1}ms (select {select_ms:.2}ms)",
         selected.len(),
@@ -92,6 +94,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // these are what a human oracle would label next
+    session.close()?;
     let stats = client.cache_stats()?;
     println!(
         "cache: {} hits / {} misses",

@@ -29,7 +29,7 @@
 //! Per-shard scan timings land in `cluster.shard{i}.scan` and the
 //! max-minus-min spread in the `cluster.scan.straggler_ms` gauge.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -43,7 +43,7 @@ use crate::json::{Map, Value};
 use crate::metrics::Registry;
 use crate::runtime::backend::ComputeBackend;
 use crate::server::pool::{self, ConnPool};
-use crate::server::rpc::{self, RpcError};
+use crate::server::rpc::{self, RpcError, ServiceError};
 use crate::server::server::{parse_agent_start, parse_init_labels, str_param};
 use crate::server::wire::{self, Body, Payload};
 use crate::server::SELECT_SEED;
@@ -58,6 +58,7 @@ use super::membership::{self, Membership, MsClock};
 use super::merge::{self, Candidate, MergeKind};
 use super::recovery::{self, WalObserver};
 use super::shard;
+use super::tenancy::{self, AdmissionGate, AdmitPermit, TenantInfo, TenantRegistry};
 
 /// Coordinator dependencies. The backend only runs the refine pass over
 /// candidate unions (tiny next to a pool scan), so the host backend is a
@@ -173,6 +174,13 @@ struct CoordState {
     /// record — gates `rec_view` appends so the per-tick gauge refresh
     /// doesn't spam one record per sweep.
     last_logged_view_gen: AtomicU64,
+    /// Multi-tenant session registry (DESIGN.md §Tenancy): opaque
+    /// `tok-*` handles, per-session weight/worker-cap, `max_sessions`
+    /// quota. Populated even with tenancy disabled (bookkeeping only).
+    tenants: Arc<TenantRegistry>,
+    /// Bounded weighted-fair admission queue in front of the scatter
+    /// path. A pass-through no-op when tenancy is disabled.
+    gate: Arc<AdmissionGate>,
     shutdown: AtomicBool,
 }
 
@@ -255,6 +263,11 @@ impl Coordinator {
         }
         let push_epoch =
             recovered.as_ref().and_then(|r| r.max_epoch).map_or(0, |e| e + 1);
+        let tenants = Arc::new(TenantRegistry::new(config.coordinator.tenancy.clone()));
+        let gate = Arc::new(AdmissionGate::new(
+            &config.coordinator.tenancy,
+            Some(deps.metrics.clone()),
+        ));
         let state = Arc::new(CoordState {
             config,
             deps,
@@ -409,9 +422,21 @@ fn install_recovered(
         .counter("recovery.skipped_records")
         .fetch_add(rec.skipped, Ordering::Relaxed);
     let n_sessions = rec.sessions.len();
+    for t in rec.tenants {
+        state.tenants.install(TenantInfo {
+            name: t.name,
+            token: t.token,
+            weight: t.weight,
+            max_workers: t.max_workers,
+            explicit: t.explicit,
+        });
+    }
     {
         let mut sessions = state.sessions.lock().unwrap();
         for (name, rs) in rec.sessions {
+            // implicit registrations are not WAL-logged; re-ensure so
+            // recovered data sessions count against the quota again
+            let _ = state.tenants.ensure(&name);
             sessions.insert(
                 name,
                 Arc::new(Mutex::new(ClusterSession {
@@ -686,6 +711,15 @@ fn snapshot_records(state: &CoordState) -> Value {
         v.sort_by(|a, b| a.0.cmp(&b.0));
         v
     };
+    for t in state.tenants.list() {
+        records.push(recovery::rec_tenant(
+            &t.name,
+            &t.token,
+            t.weight,
+            t.max_workers,
+            t.explicit,
+        ));
+    }
     for (name, sess) in sessions {
         let s = lock_recover(&sess);
         records.push(recovery::rec_session(&name, &s.manifest, s.init_labels.as_deref()));
@@ -745,6 +779,10 @@ fn dispatch(
         "push_data" => push_data(state, params).map(Payload::json),
         "status" => status(state, &params.value).map(Payload::json),
         "query" => query(state, &params.value).map(Payload::json),
+        // multi-tenant session lifecycle (DESIGN.md §Tenancy)
+        "session_create" => session_create(state, &params.value).map(Payload::json),
+        "session_close" => session_close(state, &params.value).map(Payload::json),
+        "service_stats" => Ok(Payload::json(service_stats(state))),
         "metrics" => Ok(Payload::json(state.deps.metrics.snapshot())),
         "metrics_text" => Ok(Payload::json(Value::from(
             crate::metrics::render_prometheus(&state.deps.metrics.snapshot()),
@@ -1306,8 +1344,8 @@ fn dispatch_shard(
             // the worker is alive and rejected the push itself (bad
             // manifest, spawn failure): deterministic — retrying the
             // identical params elsewhere would only kill healthy slots
-            Err(RpcError::Remote(e)) => {
-                return Err(format!("shard {}: {e}", sref.shard));
+            Err(e) if e.is_application() => {
+                return Err(format!("shard {}: {}", sref.shard, e.remote_text()));
             }
             Err(e) => {
                 last_err = format!("worker {addr}: {e}");
@@ -1320,12 +1358,15 @@ fn dispatch_shard(
 
 /// `push_data {session, manifest, init_labels?}` — shard + scatter.
 fn push_data(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> {
-    let session_id = str_param(&params.value, "session")?;
+    let session_id = resolve_session_param(state, &params.value)?;
+    // a push auto-registers the session against the tenancy quota if it
+    // was not created explicitly (back-compat with the stringly API)
+    state.tenants.ensure(&session_id).map_err(|e| e.encode())?;
     let manifest_v = params.value.get("manifest").ok_or("missing param 'manifest'")?;
     let manifest = Manifest::from_value(manifest_v).map_err(|e| e.to_string())?;
     let init_labels = parse_init_labels(params, manifest.init.len())?;
 
-    let live = live_slots(state);
+    let live = capped_slots(state, &session_id, live_slots(state));
     if live.is_empty() {
         return Err("no live workers registered".into());
     }
@@ -1339,7 +1380,8 @@ fn push_data(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> {
             if view.members.is_empty() {
                 return Err("no live workers registered".into());
             }
-            let assignment = membership::assign(manifest.pool.len(), &view.members);
+            let members = capped_members(state, &session_id, &view.members);
+            let assignment = membership::assign(manifest.pool.len(), &members);
             let mut planned = Vec::new();
             for (addr, rows) in assignment {
                 if rows.is_empty() {
@@ -1550,7 +1592,176 @@ fn get_session(
         .unwrap()
         .get(id)
         .cloned()
-        .ok_or_else(|| format!("unknown session '{id}'"))
+        .ok_or_else(|| ServiceError::unknown_session(id).encode())
+}
+
+/// Pull the `session` param and translate an opaque `tok-*` handle back
+/// to its session name. Plain names pass through unchanged, so the
+/// pre-tenancy stringly API keeps working.
+fn resolve_session_param(state: &CoordState, params: &Value) -> Result<String, String> {
+    let raw = str_param(params, "session")?;
+    state.tenants.resolve(&raw).map_err(|e| e.encode())
+}
+
+/// Take one scatter permit from the weighted-fair admission gate (a
+/// no-op pass-through when tenancy is disabled). A shed verdict becomes
+/// the structured `overloaded` error with its `retry_after_ms` hint.
+fn admit_scatter(state: &CoordState, session: &str) -> Result<AdmitPermit, String> {
+    state
+        .gate
+        .admit(session, state.tenants.weight_of(session))
+        .map_err(|shed| shed.to_service_error().encode())
+}
+
+/// Apply the per-session worker cap to a membership view (rendezvous
+/// top-k, stable under churn). Uncapped sessions see every member.
+fn capped_members(state: &CoordState, session: &str, members: &[String]) -> Vec<String> {
+    tenancy::worker_subset(members, state.tenants.max_workers_of(session), session)
+}
+
+/// Apply the per-session worker cap to the static live-slot list, keyed
+/// by worker address so the kept subset matches [`capped_members`].
+fn capped_slots(
+    state: &CoordState,
+    session: &str,
+    live: Vec<(usize, String)>,
+) -> Vec<(usize, String)> {
+    let k = state.tenants.max_workers_of(session);
+    if k == 0 || k >= live.len() {
+        return live;
+    }
+    let addrs: Vec<String> = live.iter().map(|(_, a)| a.clone()).collect();
+    let keep = tenancy::worker_subset(&addrs, k, session);
+    live.into_iter().filter(|(_, a)| keep.contains(a)).collect()
+}
+
+/// `session_create {session, weight?, max_workers?}` — register a
+/// tenant under the `max_sessions` quota and mint its opaque `tok-*`
+/// handle (DESIGN.md §Tenancy). Idempotent: re-creating a name updates
+/// its weight/worker-cap and returns the already-minted token.
+fn session_create(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
+    let name = str_param(params, "session")?;
+    let weight = params.get("weight").and_then(Value::as_usize).unwrap_or(1) as u64;
+    let max_workers = params.get("max_workers").and_then(Value::as_usize).unwrap_or(0);
+    let already = state.tenants.get(&name).is_some();
+    let info =
+        state.tenants.create(&name, weight, max_workers).map_err(|e| e.encode())?;
+    // durable before the ack: the handle must survive a restart, or
+    // every token the client holds dies with the coordinator
+    if let Some(wal) = &state.wal {
+        if let Err(e) = wal.append(&recovery::rec_tenant(
+            &info.name,
+            &info.token,
+            info.weight,
+            info.max_workers,
+            info.explicit,
+        )) {
+            if !already {
+                state.tenants.close(&info.name);
+            }
+            return Err(e);
+        }
+    }
+    state.deps.metrics.gauge_set("tenancy.sessions", state.tenants.count() as u64);
+    let mut m = Map::new();
+    m.insert("session", Value::from(info.name));
+    m.insert("token", Value::from(info.token));
+    m.insert("weight", Value::from(info.weight));
+    m.insert("max_workers", Value::from(info.max_workers));
+    Ok(Value::Object(m))
+}
+
+/// `session_close {session}` (name or token) — release the quota slot
+/// and free every shard instance the session holds on the workers.
+/// Idempotent: closing an unknown handle replies `closed: false`
+/// instead of erroring, so retries after a lost ack are safe.
+fn session_close(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
+    let raw = str_param(params, "session")?;
+    // an unknown token resolves to nothing: treat it as already closed
+    let name = state.tenants.resolve(&raw).unwrap_or(raw);
+    let known = state.tenants.get(&name).is_some()
+        || state.sessions.lock().unwrap().contains_key(&name);
+    if known {
+        // durable before any state is torn down: a crash mid-close must
+        // replay as closed, not resurrect a half-freed session
+        if let Some(wal) = &state.wal {
+            wal.append(&recovery::rec_session_close(&name))?;
+        }
+    }
+    let closed = state.tenants.close(&name).is_some();
+    let data = state.sessions.lock().unwrap().remove(&name);
+    let mut dropped = 0usize;
+    if let Some(sess) = data {
+        let triples: Vec<(u64, u64, usize)> = {
+            let s = lock_recover(&sess);
+            s.shards
+                .iter()
+                .map(|sh| (s.epoch, sh.sid, sh.worker))
+                .chain(s.retired.iter().copied())
+                .collect()
+        };
+        dropped = triples.len();
+        drop_shard_sessions(state, &name, &triples);
+        try_compact(state);
+    }
+    state.deps.metrics.gauge_set("tenancy.sessions", state.tenants.count() as u64);
+    let mut m = Map::new();
+    m.insert("closed", Value::Bool(closed || dropped > 0));
+    m.insert("dropped_shards", Value::from(dropped));
+    Ok(Value::Object(m))
+}
+
+/// `service_stats` — the tenancy control-plane snapshot: registry and
+/// gate counters plus per-session data footprints. Tokens never appear
+/// here — a handle is returned only to its creator.
+fn service_stats(state: &Arc<CoordState>) -> Value {
+    let gs = state.gate.stats();
+    let mut rows_of: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    {
+        let map = state.sessions.lock().unwrap();
+        for (k, sess) in map.iter() {
+            let s = lock_recover(sess);
+            rows_of.insert(k.clone(), (s.manifest.pool.len(), s.shards.len()));
+        }
+    }
+    let tenants = state.tenants.list();
+    let mut names: BTreeSet<String> = rows_of.keys().cloned().collect();
+    names.extend(tenants.iter().map(|t| t.name.clone()));
+    let by_name: HashMap<&str, &TenantInfo> =
+        tenants.iter().map(|t| (t.name.as_str(), t)).collect();
+    let mut sessions = Vec::new();
+    let mut active = 0usize;
+    for name in &names {
+        let (rows, shards) = rows_of.get(name).copied().unwrap_or((0, 0));
+        if shards > 0 {
+            active += 1;
+        }
+        let t = by_name.get(name.as_str());
+        let (admitted, shed, queued) =
+            gs.per_session.get(name).copied().unwrap_or((0, 0, 0));
+        let mut m = Map::new();
+        m.insert("name", Value::from(name.clone()));
+        m.insert("weight", Value::from(t.map(|t| t.weight).unwrap_or(1)));
+        m.insert("explicit", Value::Bool(t.map(|t| t.explicit).unwrap_or(false)));
+        m.insert("rows", Value::from(rows));
+        m.insert("shards", Value::from(shards));
+        m.insert("admitted", Value::from(admitted));
+        m.insert("shed", Value::from(shed));
+        m.insert("queued", Value::from(queued));
+        sessions.push(Value::Object(m));
+    }
+    let cfg = state.tenants.config();
+    let mut m = Map::new();
+    m.insert("tenancy_enabled", Value::Bool(cfg.enabled));
+    m.insert("sessions_total", Value::from(names.len()));
+    m.insert("sessions_active", Value::from(active));
+    m.insert("running", Value::from(gs.running));
+    m.insert("queued", Value::from(gs.queued));
+    m.insert("admitted_total", Value::from(gs.admitted_total));
+    m.insert("shed_total", Value::from(gs.shed_total));
+    m.insert("max_sessions", Value::from(cfg.max_sessions));
+    m.insert("sessions", Value::Array(sessions));
+    Value::Object(m)
 }
 
 /// What one shard's `select_shard` returned (indices already global).
@@ -1644,7 +1855,7 @@ fn call_shard_redispatch(
             }
         };
         let resp = match call_worker(state, &addr, method, params, read_timeout) {
-            Err(RpcError::Remote(e)) if e.contains("unknown session") => {
+            Err(e) if e.is_unknown_session() => {
                 state
                     .deps
                     .metrics
@@ -1667,9 +1878,9 @@ fn call_shard_redispatch(
         };
         match resp {
             Ok(v) => return Ok((v, slot)),
-            Err(RpcError::Remote(e)) => {
+            Err(e) if e.is_application() => {
                 // the worker is alive; the request itself is bad
-                return Err(format!("shard {shard_idx}: {e}"));
+                return Err(format!("shard {shard_idx}: {}", e.remote_text()));
             }
             Err(e) => {
                 last_err = format!("worker {addr}: {e}");
@@ -1960,9 +2171,9 @@ fn scatter_jobs(
         let job = &jobs[i];
         let r = match state.pool.wait(call) {
             Ok(body) => decode_shard_reply(body, job, job.sref.worker),
-            Err(RpcError::Remote(e)) if !e.contains("unknown session") => {
+            Err(e) if e.is_application() && !e.is_unknown_session() => {
                 // the worker is alive; the request itself is bad
-                Err(format!("shard {}: {e}", job.sref.shard))
+                Err(format!("shard {}: {}", job.sref.shard, e.remote_text()))
             }
             Err(_) => select_on_shard(
                 state, session_id, epoch, job, manifest, init_labels, strategy, wait_ms,
@@ -2048,7 +2259,7 @@ fn scatter_jobs(
 /// `query {session, budget, strategy?, wait_ms?}` — scatter, merge,
 /// respond in the exact shape of the single-server `query`.
 fn query(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
-    let session_id = str_param(params, "session")?;
+    let session_id = resolve_session_param(state, params)?;
     let budget =
         params.get("budget").and_then(Value::as_usize).ok_or("missing usize param 'budget'")?;
     let strategy_name = match params.get("strategy").and_then(Value::as_str) {
@@ -2069,6 +2280,10 @@ fn query(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
         params.get("wait_ms").and_then(Value::as_usize).unwrap_or(120_000) as u64;
 
     let sess = get_session(state, &session_id)?;
+    // hold a fair-share permit for the whole scatter; an overloaded
+    // gate sheds here with a structured retry_after_ms instead of
+    // letting the request time out in a queue
+    let _permit = admit_scatter(state, &session_id)?;
     // catch the shard layout up with the membership view, then snapshot:
     // the whole scatter below runs against this pinned layout even if
     // the view moves again mid-flight
@@ -2501,7 +2716,7 @@ fn rehome_static(
         }
         (s.manifest.clone(), s.init_labels.clone(), s.epoch, s.next_sid)
     };
-    let live = live_slots(state);
+    let live = capped_slots(state, session_id, live_slots(state));
     if live.is_empty() {
         return Err("no live workers registered".into());
     }
@@ -2633,7 +2848,8 @@ fn plan_rebalance(
     if view.members.is_empty() {
         return Err("no live workers registered".into());
     }
-    let assignment = membership::assign(s.manifest.pool.len(), &view.members);
+    let members = capped_members(state, session_id, &view.members);
+    let assignment = membership::assign(s.manifest.pool.len(), &members);
 
     // address each old shard currently lives on (reuse check + move count)
     let addr_of_old: Vec<Option<String>> = {
@@ -2903,6 +3119,9 @@ impl ArmSelect for ClusterArmSelect {
         let kind = merge::merge_kind(strategy)
             .ok_or_else(|| format!("unknown strategy '{strategy}'"))?;
         let excl: HashSet<usize> = exclude.iter().copied().collect();
+        // every arm round is one scatter: take a fair-share permit so a
+        // heavy agent job cannot starve other tenants' queries
+        let _permit = admit_scatter(&self.state, &self.session_id)?;
         // each arm round catches up with the membership view before
         // snapshotting — exact-merge arms are layout-independent, so a
         // mid-job rebalance cannot change their selections (§Agent)
@@ -3035,6 +3254,8 @@ fn agent_bootstrap(
     sess: &Arc<Mutex<ClusterSession>>,
     wait_ms: u64,
 ) -> Result<(Mat, Mat, usize), String> {
+    // the bootstrap probe is one scatter: gate it like a query round
+    let _permit = admit_scatter(state, session_id)?;
     maybe_rebalance(state, session_id, sess)?;
     let (manifest, init_labels, epoch, specs) = snapshot_shards(sess);
     let (have_init, have_test) = {
@@ -3081,7 +3302,7 @@ fn agent_bootstrap(
 /// test_labels, wait_ms?}` — spawn a background PSHEA job whose arms
 /// evaluate across the session's worker shards (DESIGN.md §Agent).
 fn agent_start(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> {
-    let session_id = str_param(&params.value, "session")?;
+    let session_id = resolve_session_param(state, &params.value)?;
     let sess = get_session(state, &session_id)?;
     let (manifest, init_labels) = {
         let s = lock_recover(&sess);
@@ -3196,7 +3417,9 @@ fn shard_status_of(state: &CoordState, slot: usize, resp: Result<Body, RpcError>
         // the worker is reachable but lost the shard (e.g.
         // restart): a query will re-dispatch — do NOT kill
         // the slot over an application-level error
-        Err(RpcError::Remote(e)) => format!("needs-redispatch: {e}"),
+        Err(e) if e.is_application() => {
+            format!("needs-redispatch: {}", e.remote_text())
+        }
         Err(e) => {
             mark_dead(state, slot);
             format!("unreachable: {e}")
@@ -3225,7 +3448,7 @@ fn poll_shard_status(
 /// `status {session}` — aggregate shard statuses from the workers
 /// (polled concurrently so one stuck worker costs one timeout, not N).
 fn status(state: &Arc<CoordState>, params: &Value) -> Result<Value, String> {
-    let session_id = str_param(params, "session")?;
+    let session_id = resolve_session_param(state, params)?;
     let sess = get_session(state, &session_id)?;
     // passive view: no rebalance here — status must never mutate the
     // cluster (a query will catch the layout up when it runs)
@@ -3379,18 +3602,25 @@ fn cache_stats(state: &Arc<CoordState>) -> Result<Value, String> {
         replies[i] = fold(slot, state.pool.wait(call));
     }
     let (mut hits, mut misses, mut bytes, mut entries) = (0u64, 0u64, 0u64, 0u64);
+    let (mut sessions, mut session_bytes) = (0u64, 0u64);
     for v in replies.into_iter().flatten() {
         let g = |k: &str| v.get(k).and_then(Value::as_i64).unwrap_or(0) as u64;
         hits += g("hits");
         misses += g("misses");
         bytes += g("bytes");
         entries += g("entries");
+        sessions += g("sessions");
+        session_bytes += g("session_bytes");
     }
     let mut m = Map::new();
     m.insert("hits", Value::from(hits));
     m.insert("misses", Value::from(misses));
     m.insert("bytes", Value::from(bytes));
     m.insert("entries", Value::from(entries));
+    // resident shard-session footprint across workers: lets a caller
+    // verify that `session_close` actually freed worker memory
+    m.insert("sessions", Value::from(sessions));
+    m.insert("session_bytes", Value::from(session_bytes));
     Ok(Value::Object(m))
 }
 

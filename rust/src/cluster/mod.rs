@@ -27,16 +27,21 @@
 //! * [`recovery`] — crash recovery: the WAL record vocabulary the
 //!   coordinator appends through [`crate::durable`] and the pure replay
 //!   fold that rebuilds sessions and in-flight PSHEA jobs on restart.
+//! * [`tenancy`] — the multi-tenant service policy: session registry
+//!   (tokens, quotas) and the weighted-fair admission gate with load
+//!   shedding in front of the scatter path.
 
 pub mod coordinator;
 pub mod membership;
 pub mod merge;
 pub(crate) mod recovery;
 pub mod shard;
+pub mod tenancy;
 pub mod worker;
 
 pub use coordinator::{Coordinator, CoordinatorDeps};
 pub use membership::{Membership, MembershipConfig, MsClock, View};
 pub use merge::{merge_kind, MergeKind};
 pub use shard::{plan, ShardPlan};
+pub use tenancy::{AdmissionGate, AdmitPermit, TenantInfo, TenantRegistry};
 pub use worker::{register_with, Heartbeater};

@@ -82,6 +82,33 @@ pub(crate) fn rec_view(generation: u64) -> Value {
     obj([("t", Value::from("view")), ("generation", Value::from(generation))])
 }
 
+/// A tenant session was registered (`session_create`, or the implicit
+/// auto-registration of a legacy plain-name push). The minted token is
+/// durable so handles held by clients keep working across a restart.
+pub(crate) fn rec_tenant(
+    session: &str,
+    token: &str,
+    weight: u64,
+    max_workers: usize,
+    explicit: bool,
+) -> Value {
+    obj([
+        ("t", Value::from("tenant")),
+        ("session", Value::from(session)),
+        ("token", Value::from(token)),
+        ("weight", Value::from(weight)),
+        ("max_workers", Value::from(max_workers)),
+        ("explicit", Value::Bool(explicit)),
+    ])
+}
+
+/// A session was closed (`session_close`): the quota slot is free and
+/// the session's data-plane state is gone — replay must not resurrect
+/// either.
+pub(crate) fn rec_session_close(session: &str) -> Value {
+    obj([("t", Value::from("session_close")), ("session", Value::from(session))])
+}
+
 /// A PSHEA job was accepted (logged before the `agent_start` reply).
 /// Carries everything a restart needs to re-drive the loop: the oracle
 /// label arrays ride along because they exist only in the original
@@ -326,9 +353,21 @@ impl RecoveredJob {
     }
 }
 
+/// A tenant as the WAL remembers it — mirrors
+/// [`super::tenancy::TenantInfo`] field for field.
+pub(crate) struct RecoveredTenant {
+    pub name: String,
+    pub token: String,
+    pub weight: u64,
+    pub max_workers: usize,
+    pub explicit: bool,
+}
+
 /// Everything [`fold`] reconstructs from one replay.
 pub(crate) struct Recovered {
     pub sessions: Vec<(String, RecoveredSession)>,
+    /// Tenant registry entries (tokens survive restart).
+    pub tenants: Vec<RecoveredTenant>,
     pub jobs: Vec<RecoveredJob>,
     /// Highest membership view generation the WAL observed.
     pub view_gen: u64,
@@ -346,6 +385,7 @@ pub(crate) struct Recovered {
 pub(crate) fn fold(replay: &Replay) -> Recovered {
     let mut out = Recovered {
         sessions: Vec::new(),
+        tenants: Vec::new(),
         jobs: Vec::new(),
         view_gen: 0,
         max_epoch: None,
@@ -452,6 +492,24 @@ fn apply(out: &mut Recovered, v: &Value) -> Result<(), String> {
             out.max_epoch = Some(out.max_epoch.map_or(epoch, |m| m.max(epoch)));
         }
         "view" => out.view_gen = out.view_gen.max(u64_of(v, "generation")?),
+        "tenant" => {
+            let t = RecoveredTenant {
+                name: str_of(v, "session")?,
+                token: str_of(v, "token")?,
+                weight: u64_of(v, "weight")?.max(1),
+                max_workers: usize_of(v, "max_workers")?,
+                explicit: v.get("explicit").and_then(Value::as_bool).unwrap_or(true),
+            };
+            match out.tenants.iter_mut().find(|e| e.name == t.name) {
+                Some(e) => *e = t, // idempotent re-create updates in place
+                None => out.tenants.push(t),
+            }
+        }
+        "session_close" => {
+            let name = str_of(v, "session")?;
+            out.tenants.retain(|t| t.name != name);
+            out.sessions.retain(|(n, _)| n != &name);
+        }
         "job_start" => {
             let id = str_of(v, "job")?;
             let strategies = v
@@ -644,6 +702,30 @@ mod tests {
         assert_eq!(s1.init_labels.as_deref(), Some(&[1u8, 1][..]));
         assert_eq!(r.view_gen, 8, "view high-water tracks layout view_gens too");
         assert_eq!(r.max_epoch, Some(7));
+    }
+
+    #[test]
+    fn fold_rebuilds_tenants_and_honors_session_close() {
+        let m = manifest(4);
+        let r = fold(&replay_of(vec![
+            rec_tenant("alpha", "tok-aaaa", 3, 2, true),
+            rec_tenant("beta", "tok-bbbb", 1, 0, false),
+            rec_session("alpha", &m, None),
+            rec_layout("alpha", 1, 0, 2),
+            rec_session("beta", &m, None),
+            rec_layout("beta", 2, 0, 2),
+            // idempotent re-create updates the entry in place
+            rec_tenant("alpha", "tok-aaaa", 5, 1, true),
+            // closing beta removes both its tenant slot and its session
+            rec_session_close("beta"),
+        ]));
+        assert_eq!(r.skipped, 0);
+        assert_eq!(r.tenants.len(), 1);
+        let t = &r.tenants[0];
+        assert_eq!((t.name.as_str(), t.token.as_str()), ("alpha", "tok-aaaa"));
+        assert_eq!((t.weight, t.max_workers, t.explicit), (5, 1, true));
+        assert_eq!(r.sessions.len(), 1, "closed session must not be resurrected");
+        assert_eq!(r.sessions[0].0, "alpha");
     }
 
     #[test]

@@ -248,6 +248,75 @@ impl Default for ClusterConfig {
     }
 }
 
+/// What the admission gate does with an arrival once the admit queue is
+/// full (`coordinator.tenancy.shed_policy`; DESIGN.md §Tenancy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Reject the arriving scatter with `Overloaded{retry_after_ms}`.
+    RejectNew,
+    /// Evict the oldest queued scatter (it gets the `Overloaded` error)
+    /// and queue the arrival in its place.
+    DropOldest,
+}
+
+impl ShedPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShedPolicy::RejectNew => "reject_new",
+            ShedPolicy::DropOldest => "drop_oldest",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ShedPolicy> {
+        match s {
+            "reject_new" => Some(ShedPolicy::RejectNew),
+            "drop_oldest" => Some(ShedPolicy::DropOldest),
+            _ => None,
+        }
+    }
+}
+
+/// `coordinator.tenancy.*` — multi-tenant admission control, weighted
+/// fairness, and load shedding on the coordinator's scatter path
+/// (DESIGN.md §Tenancy). Disabled by default: sessions bypass the gate
+/// entirely and behave exactly as before.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenancyConfig {
+    pub enabled: bool,
+    /// Hard cap on registered sessions; `session_create` beyond it is
+    /// rejected with `quota_exceeded`.
+    pub max_sessions: usize,
+    /// Cap on how many workers one session's pool is sharded across
+    /// (0 = all live workers).
+    pub max_workers_per_session: usize,
+    /// Bounded admission queue in front of the scatter path; arrivals
+    /// beyond it are shed per `shed_policy`.
+    pub admit_queue_len: usize,
+    /// Scatters allowed on the workers concurrently across all sessions.
+    pub max_concurrent: usize,
+    pub shed_policy: ShedPolicy,
+}
+
+impl Default for TenancyConfig {
+    fn default() -> Self {
+        TenancyConfig {
+            enabled: false,
+            max_sessions: 64,
+            max_workers_per_session: 0,
+            admit_queue_len: 32,
+            max_concurrent: 4,
+            shed_policy: ShedPolicy::RejectNew,
+        }
+    }
+}
+
+/// `coordinator.*` — coordinator-side service policy (the scatter data
+/// path itself is configured under `cluster.*`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CoordinatorConfig {
+    pub tenancy: TenancyConfig,
+}
+
 /// `server.*` — RPC data-plane settings (DESIGN.md §Wire).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
@@ -324,6 +393,9 @@ pub struct AlaasConfig {
     pub store: StoreConfig,
     pub cache: CacheConfig,
     pub cluster: ClusterConfig,
+    /// `coordinator.*` — multi-tenant admission control / fairness /
+    /// shedding policy (DESIGN.md §Tenancy). Off by default.
+    pub coordinator: CoordinatorConfig,
     pub server: ServerConfig,
     pub observability: ObservabilityConfig,
     /// `durability.*` — coordinator WAL + snapshot crash safety
@@ -345,6 +417,7 @@ impl Default for AlaasConfig {
             store: StoreConfig::default(),
             cache: CacheConfig::default(),
             cluster: ClusterConfig::default(),
+            coordinator: CoordinatorConfig::default(),
             server: ServerConfig::default(),
             observability: ObservabilityConfig::default(),
             durability: DurabilityConfig::default(),
@@ -523,6 +596,39 @@ impl AlaasConfig {
             }
         }
 
+        if let Some(s) = v.get("coordinator") {
+            if let Some(t) = s.get("tenancy") {
+                let c = &mut cfg.coordinator.tenancy;
+                if let Some(x) = t.get("enabled") {
+                    c.enabled = x
+                        .as_bool()
+                        .ok_or_else(|| cerr("coordinator.tenancy.enabled", "expected bool"))?;
+                }
+                if let Some(x) = t.get("max_sessions") {
+                    c.max_sessions = req_usize(x, "coordinator.tenancy.max_sessions")?;
+                }
+                if let Some(x) = t.get("max_workers_per_session") {
+                    c.max_workers_per_session =
+                        req_usize(x, "coordinator.tenancy.max_workers_per_session")?;
+                }
+                if let Some(x) = t.get("admit_queue_len") {
+                    c.admit_queue_len = req_usize(x, "coordinator.tenancy.admit_queue_len")?;
+                }
+                if let Some(x) = t.get("max_concurrent") {
+                    c.max_concurrent = req_usize(x, "coordinator.tenancy.max_concurrent")?;
+                }
+                if let Some(x) = t.get("shed_policy") {
+                    let name = req_str(x, "coordinator.tenancy.shed_policy")?;
+                    c.shed_policy = ShedPolicy::parse(&name).ok_or_else(|| {
+                        cerr(
+                            "coordinator.tenancy.shed_policy",
+                            format!("unknown policy '{name}' (reject_new|drop_oldest)"),
+                        )
+                    })?;
+                }
+            }
+        }
+
         if let Some(s) = v.get("server") {
             let c = &mut cfg.server;
             if let Some(x) = s.get("wire") {
@@ -685,6 +791,21 @@ impl AlaasConfig {
                     mem.lease_ms
                 ),
             ));
+        }
+        let t = &self.coordinator.tenancy;
+        if t.enabled {
+            if t.max_sessions == 0 {
+                return Err(cerr("coordinator.tenancy.max_sessions", "must be >= 1"));
+            }
+            if t.admit_queue_len == 0 {
+                return Err(cerr(
+                    "coordinator.tenancy.admit_queue_len",
+                    "must be >= 1 (a zero-length queue sheds every concurrent scatter)",
+                ));
+            }
+            if t.max_concurrent == 0 {
+                return Err(cerr("coordinator.tenancy.max_concurrent", "must be >= 1"));
+            }
         }
         if !(0.0..1.0).contains(&self.store.jitter) {
             return Err(cerr("store.jitter", "must be in [0, 1)"));
@@ -1033,6 +1154,74 @@ durability:
         assert_eq!(e.field, "durability.data_dir");
         let e = AlaasConfig::from_yaml_str("durability:\n  enabled: 3\n").unwrap_err();
         assert_eq!(e.field, "durability.enabled");
+    }
+
+    #[test]
+    fn parses_coordinator_tenancy_section() {
+        let cfg = AlaasConfig::from_yaml_str(
+            r#"
+coordinator:
+  tenancy:
+    enabled: true
+    max_sessions: 8
+    max_workers_per_session: 2
+    admit_queue_len: 16
+    max_concurrent: 3
+    shed_policy: drop_oldest
+"#,
+        )
+        .unwrap();
+        let t = &cfg.coordinator.tenancy;
+        assert!(t.enabled);
+        assert_eq!(t.max_sessions, 8);
+        assert_eq!(t.max_workers_per_session, 2);
+        assert_eq!(t.admit_queue_len, 16);
+        assert_eq!(t.max_concurrent, 3);
+        assert_eq!(t.shed_policy, ShedPolicy::DropOldest);
+        // defaults: gate off, everything passes through untouched
+        let d = AlaasConfig::default().coordinator.tenancy;
+        assert!(!d.enabled);
+        assert_eq!(d.max_sessions, 64);
+        assert_eq!(d.max_workers_per_session, 0);
+        assert_eq!(d.admit_queue_len, 32);
+        assert_eq!(d.max_concurrent, 4);
+        assert_eq!(d.shed_policy, ShedPolicy::RejectNew);
+    }
+
+    #[test]
+    fn tenancy_validation() {
+        let e = AlaasConfig::from_yaml_str(
+            "coordinator:\n  tenancy:\n    shed_policy: coinflip\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.field, "coordinator.tenancy.shed_policy");
+        let e = AlaasConfig::from_yaml_str(
+            "coordinator:\n  tenancy:\n    enabled: true\n    max_sessions: 0\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.field, "coordinator.tenancy.max_sessions");
+        let e = AlaasConfig::from_yaml_str(
+            "coordinator:\n  tenancy:\n    enabled: true\n    admit_queue_len: 0\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.field, "coordinator.tenancy.admit_queue_len");
+        let e = AlaasConfig::from_yaml_str(
+            "coordinator:\n  tenancy:\n    enabled: true\n    max_concurrent: 0\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.field, "coordinator.tenancy.max_concurrent");
+        let e = AlaasConfig::from_yaml_str(
+            "coordinator:\n  tenancy:\n    enabled: 3\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.field, "coordinator.tenancy.enabled");
+        // zero knobs are fine while the gate is disabled (defaults apply
+        // only when someone turns it on)
+        let cfg = AlaasConfig::from_yaml_str(
+            "coordinator:\n  tenancy:\n    max_concurrent: 0\n",
+        )
+        .unwrap();
+        assert!(!cfg.coordinator.tenancy.enabled);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //!   gen-data   synthesize a dataset into the simulated object store dir
 //!   query      client: push a generated dataset + query a selection
 //!   agent      run the PSHEA auto-selection agent on a dataset
+//!   sessions   list a service's sessions + tenancy counters
 //!   strategies list the strategy zoo
 //!   help       this text
 //!
@@ -28,7 +29,7 @@ use alaas::data::DatasetSpec;
 use alaas::metrics::Registry;
 use alaas::runtime::backend::ComputeBackend;
 use alaas::runtime::{ArtifactIndex, HostBackend, PjrtBackend, PjrtPool};
-use alaas::server::{AlClient, AlServer, ServerDeps};
+use alaas::server::{AlClient, AlServer, ServerDeps, SessionOpts};
 use alaas::sim::AlExperiment;
 use alaas::store::{ObjectStore, StoreRouter};
 use alaas::trainer::TrainConfig;
@@ -38,7 +39,7 @@ const SCHEMA: Schema = Schema {
         "config", "dataset", "out", "seed", "pool", "init", "test", "budget",
         "strategy", "target", "max-budget", "round-budget", "addr", "session",
         "backend", "replicas", "rounds", "role", "coordinator", "discover",
-        "remote", "id", "limit", "data-dir",
+        "remote", "id", "limit", "data-dir", "weight", "max-workers",
     ],
     bool_flags: &["verbose", "quiet"],
 };
@@ -62,6 +63,7 @@ fn main() {
         "query" => cmd_query(&args),
         "agent" => cmd_agent(&args),
         "trace" => cmd_trace(&args),
+        "sessions" => cmd_sessions(&args),
         "strategies" => {
             for s in alaas::strategies::zoo_names() {
                 println!("{s}");
@@ -81,7 +83,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: alaas <serve|gen-data|query|agent|trace|strategies|help> [flags]\n\
+    "usage: alaas <serve|gen-data|query|agent|sessions|trace|strategies|help> [flags]\n\
      serve      --config <yml> [--role single|worker|coordinator] [--coordinator host:port]\n\
      \u{20}          [--discover host:port] = join the coordinator via heartbeat/lease\n\
      \u{20}          membership ([cluster.membership] config) instead of a one-shot register\n\
@@ -90,6 +92,9 @@ fn usage() -> &'static str {
      \u{20}          <dir>; on restart, sessions and in-flight agent jobs are recovered\n\
      gen-data   --dataset <cifarsim|svhnsim> --out <dir> [--init N --pool N --test N --seed N]\n\
      query      --addr <host:port> --dataset <name> [--budget N --strategy S --seed N]\n\
+     \u{20}          [--weight N --max-workers N] = tenancy session options (fair-share\n\
+     \u{20}          weight in the admission gate; worker cap for the session's shards)\n\
+     sessions   --addr <host:port> = list sessions + tenancy/admission counters\n\
      agent      --dataset <name> [--target A --max-budget N --round-budget N --backend host|pjrt --rounds N]\n\
      \u{20}          [--remote <host:port>] = run PSHEA as a server-side job (agent_start RPC;\n\
      \u{20}          on a coordinator the arms fan out across worker shards)\n\
@@ -307,10 +312,16 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
 
     let mut client = AlClient::connect(addr)?;
     client.ping()?;
-    let session = args.get_or("session", "cli");
-    client.push_data(session, &manifest, Some(&init_labels))?;
+    // explicit session lifecycle (DESIGN.md §Tenancy): create a handle,
+    // push/query through it, and close to release the quota slot
+    let opts = SessionOpts {
+        weight: args.get_usize("weight", 1)? as u64,
+        max_workers: args.get_usize("max-workers", 0)?,
+    };
+    let mut session = client.create_session(args.get_or("session", "cli"), opts)?;
+    session.push(&manifest, Some(&init_labels))?;
     let t0 = std::time::Instant::now();
-    let (selected, strat, select_ms) = client.query(session, budget, strategy)?;
+    let (selected, strat, select_ms) = session.query(budget, strategy)?;
     println!(
         "selected {} samples with {strat} in {:.1}ms (select phase {select_ms:.1}ms)",
         selected.len(),
@@ -321,6 +332,56 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
     }
     if selected.len() > 10 {
         println!("  ... {} more", selected.len() - 10);
+    }
+    session.close()?;
+    Ok(())
+}
+
+/// `sessions --addr <host:port>`: the tenancy control plane — session
+/// registry, admission-gate counters, and per-session data footprints
+/// (DESIGN.md §Tenancy).
+fn cmd_sessions(args: &Args) -> anyhow::Result<()> {
+    use alaas::json::Value;
+    let addr = args.get("addr").ok_or_else(|| anyhow::anyhow!("--addr required"))?;
+    let mut client = AlClient::connect(addr)?;
+    let v = client.service_stats()?;
+    let b = |k: &str| v.get(k).and_then(Value::as_bool).unwrap_or(false);
+    let n = |k: &str| v.get(k).and_then(Value::as_i64).unwrap_or(0);
+    println!(
+        "tenancy {} on {addr}: {} session(s) ({} active), quota {}",
+        if b("tenancy_enabled") { "enabled" } else { "disabled" },
+        n("sessions_total"),
+        n("sessions_active"),
+        n("max_sessions"),
+    );
+    println!(
+        "admission gate: {} running, {} queued, {} admitted, {} shed",
+        n("running"),
+        n("queued"),
+        n("admitted_total"),
+        n("shed_total"),
+    );
+    let sessions = v.get("sessions").and_then(Value::as_array).unwrap_or(&[]);
+    if sessions.is_empty() {
+        return Ok(());
+    }
+    println!(
+        "{:<24} {:>6} {:>8} {:>8} {:>6} {:>9} {:>6} {:>6}",
+        "name", "weight", "explicit", "rows", "shards", "admitted", "shed", "queued"
+    );
+    for s in sessions {
+        let sn = |k: &str| s.get(k).and_then(Value::as_i64).unwrap_or(0);
+        println!(
+            "{:<24} {:>6} {:>8} {:>8} {:>6} {:>9} {:>6} {:>6}",
+            s.get("name").and_then(Value::as_str).unwrap_or("?"),
+            sn("weight"),
+            s.get("explicit").and_then(Value::as_bool).unwrap_or(false),
+            sn("rows"),
+            sn("shards"),
+            sn("admitted"),
+            sn("shed"),
+            sn("queued"),
+        );
     }
     Ok(())
 }
@@ -427,10 +488,13 @@ fn cmd_agent_remote(args: &Args, addr: &str) -> anyhow::Result<()> {
 
     let mut client = AlClient::connect(addr)?;
     client.ping()?;
-    let session = args.get_or("session", "agent-cli");
-    client.push_data(session, &manifest, Some(&init_labels))?;
-    let job =
-        client.agent_start(session, &strategies, &cfg, &pool_labels, &test_labels, seed)?;
+    // session handle for push + job start; detach (not drop) before the
+    // poll loop — dropping would close the session under the running job
+    let mut session = client
+        .create_session(args.get_or("session", "agent-cli"), SessionOpts::default())?;
+    session.push(&manifest, Some(&init_labels))?;
+    let job = session.agent_start(&strategies, &cfg, &pool_labels, &test_labels, seed)?;
+    let (_, token) = session.detach();
     println!("agent job {job} started on {addr} ({} candidate arms)", strategies.len());
 
     let mut last_round = 0usize;
@@ -454,6 +518,7 @@ fn cmd_agent_remote(args: &Args, addr: &str) -> anyhow::Result<()> {
     }
     let trace = client.agent_result(&job, std::time::Duration::from_secs(3600))?;
     print_trace(&trace);
+    client.close_session(&token)?;
     Ok(())
 }
 

@@ -154,6 +154,11 @@ impl AlClient {
     /// server fine-tune the head on the seed set before scoring the pool.
     /// On the binary wire the labels ride as a tensor section; on JSON
     /// they keep the v1 integer-array form.
+    ///
+    /// Deprecated in favor of [`AlClient::create_session`] +
+    /// [`SessionHandle::push`]: the stringly-typed form bypasses the
+    /// explicit session lifecycle (it auto-registers under the tenancy
+    /// quota and never releases its slot until something closes it).
     pub fn push_data(
         &mut self,
         session: &str,
@@ -188,6 +193,9 @@ impl AlClient {
     }
 
     /// Session processing status string ("processing" / "ready" / ...).
+    ///
+    /// Deprecated in favor of [`SessionHandle::status`] (see
+    /// [`AlClient::create_session`]).
     pub fn status(&mut self, session: &str) -> Result<String, RpcError> {
         let mut p = Map::new();
         p.insert("session", Value::from(session));
@@ -197,6 +205,9 @@ impl AlClient {
 
     /// Select `budget` samples (blocking until the scan is ready).
     /// Returns (selected refs, strategy used, select-phase millis).
+    ///
+    /// Deprecated in favor of [`SessionHandle::query`] (see
+    /// [`AlClient::create_session`]).
     pub fn query(
         &mut self,
         session: &str,
@@ -383,5 +394,157 @@ impl AlClient {
         p.insert("job", Value::from(job));
         let v = self.call("agent_cancel", Value::Object(p))?;
         Ok(v.get("cancelled").and_then(Value::as_bool).unwrap_or(false))
+    }
+
+    /// Explicitly register a session under the server's tenancy quota
+    /// and mint its opaque `tok-*` handle (DESIGN.md §Tenancy). The
+    /// returned [`SessionHandle`] scopes every follow-up call to the
+    /// session and releases the quota slot on [`SessionHandle::close`]
+    /// (or best-effort on drop). Re-creating an existing name is
+    /// idempotent and returns the already-minted token.
+    pub fn create_session(
+        &mut self,
+        name: &str,
+        opts: SessionOpts,
+    ) -> Result<SessionHandle<'_>, RpcError> {
+        let mut p = Map::new();
+        p.insert("session", Value::from(name));
+        p.insert("weight", Value::from(opts.weight));
+        p.insert("max_workers", Value::from(opts.max_workers));
+        let v = self.call("session_create", Value::Object(p))?;
+        let token = v
+            .get("token")
+            .and_then(Value::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| {
+                RpcError::Malformed("session_create reply missing token".into())
+            })?;
+        Ok(SessionHandle { client: self, name: name.to_string(), token, closed: false })
+    }
+
+    /// Close a session by name or `tok-*` handle: the quota slot is
+    /// released and its resident shard memory freed on the workers.
+    /// Idempotent — closing an already-closed session returns `false`.
+    pub fn close_session(&mut self, name_or_token: &str) -> Result<bool, RpcError> {
+        let mut p = Map::new();
+        p.insert("session", Value::from(name_or_token));
+        let v = self.call("session_close", Value::Object(p))?;
+        Ok(v.get("closed").and_then(Value::as_bool).unwrap_or(false))
+    }
+
+    /// The service's tenancy snapshot: session registry, admission-gate
+    /// counters, and per-session data footprints (`alaas sessions`).
+    pub fn service_stats(&mut self) -> Result<Value, RpcError> {
+        self.call("service_stats", Value::Null)
+    }
+}
+
+/// Options for [`AlClient::create_session`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionOpts {
+    /// Fair-share weight in the coordinator's admission gate (deficit
+    /// round-robin quantum). A weight-3 session drains scatters ~3× as
+    /// fast as a weight-1 session under saturation.
+    pub weight: u64,
+    /// Cap on the workers this session's pool is sharded across
+    /// (0 = uncapped; combined with `coordinator.tenancy.
+    /// max_workers_per_session` by `min`).
+    pub max_workers: usize,
+}
+
+impl Default for SessionOpts {
+    fn default() -> SessionOpts {
+        SessionOpts { weight: 1, max_workers: 0 }
+    }
+}
+
+/// An explicitly-created session: the typed replacement for the
+/// stringly `session: &str` API. Calls route through the session's
+/// opaque `tok-*` token, so a stale or mistyped name cannot silently
+/// address another tenant's data. Dropping the handle closes the
+/// session best-effort; call [`SessionHandle::close`] to observe the
+/// outcome, or [`SessionHandle::detach`] to keep it alive.
+pub struct SessionHandle<'c> {
+    client: &'c mut AlClient,
+    name: String,
+    token: String,
+    closed: bool,
+}
+
+impl SessionHandle<'_> {
+    /// The session name this handle was created with.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The minted `tok-*` token (opaque; valid until close or restart
+    /// of a non-durable server).
+    pub fn token(&self) -> &str {
+        &self.token
+    }
+
+    /// [`AlClient::push_data`] scoped to this session.
+    pub fn push(
+        &mut self,
+        manifest: &Manifest,
+        init_labels: Option<&[u8]>,
+    ) -> Result<(), RpcError> {
+        let tok = self.token.clone();
+        self.client.push_data(&tok, manifest, init_labels)
+    }
+
+    /// [`AlClient::status`] scoped to this session.
+    pub fn status(&mut self) -> Result<String, RpcError> {
+        let tok = self.token.clone();
+        self.client.status(&tok)
+    }
+
+    /// [`AlClient::query`] scoped to this session.
+    pub fn query(
+        &mut self,
+        budget: usize,
+        strategy: Option<&str>,
+    ) -> Result<(Vec<SampleRef>, String, f64), RpcError> {
+        let tok = self.token.clone();
+        self.client.query(&tok, budget, strategy)
+    }
+
+    /// [`AlClient::agent_start`] scoped to this session.
+    pub fn agent_start(
+        &mut self,
+        strategies: &[String],
+        cfg: &PsheaConfig,
+        pool_labels: &[u8],
+        test_labels: &[u8],
+        seed: u64,
+    ) -> Result<String, RpcError> {
+        let tok = self.token.clone();
+        self.client.agent_start(&tok, strategies, cfg, pool_labels, test_labels, seed)
+    }
+
+    /// Close the session, releasing its quota slot and freeing resident
+    /// shard memory on the workers. Returns whether the service still
+    /// knew the session.
+    pub fn close(mut self) -> Result<bool, RpcError> {
+        self.closed = true;
+        let tok = self.token.clone();
+        self.client.close_session(&tok)
+    }
+
+    /// Consume the handle WITHOUT closing the session; returns
+    /// `(name, token)` so the session can be re-addressed later (e.g.
+    /// from another process via the token string).
+    pub fn detach(mut self) -> (String, String) {
+        self.closed = true;
+        (self.name.clone(), self.token.clone())
+    }
+}
+
+impl Drop for SessionHandle<'_> {
+    fn drop(&mut self) {
+        if !self.closed {
+            let tok = std::mem::take(&mut self.token);
+            let _ = self.client.close_session(&tok);
+        }
     }
 }

@@ -26,7 +26,7 @@ pub mod rpc;
 pub mod server;
 pub mod wire;
 
-pub use client::AlClient;
+pub use client::{AlClient, SessionHandle, SessionOpts};
 pub use pool::{ConnPool, PoolConfig};
 pub use server::{AlServer, ServerDeps, SELECT_SEED};
 pub use wire::{Body, MatRef, MatView, Payload, WireMode};

@@ -558,7 +558,7 @@ impl MuxConn {
         };
         let res: Result<Body, RpcError> =
             if let Some(e) = v.get("error").and_then(Value::as_str) {
-                Err(RpcError::Remote(e.to_string()))
+                Err(RpcError::from_remote(e))
             } else {
                 // move, don't clone: result can be a multi-MB matrix
                 let (result, spans) = match v {

@@ -29,6 +29,14 @@ use super::wire::{self, Body, Payload, WireMode};
 pub const MAX_FRAME: usize = 64 * 1024 * 1024;
 
 /// Protocol-level failure.
+///
+/// The last four variants are *application* errors: the peer is alive,
+/// decoded the request, and answered with an error reply — the
+/// connection (and the worker behind it) is healthy. `Overloaded`,
+/// `QuotaExceeded`, and `UnknownSession` are decoded from the
+/// structured `{code, message, retry_after_ms?}` payload a tenancy-aware
+/// server embeds in the error string (see [`ServiceError`]); anything
+/// else a peer sends stays `Remote`.
 #[derive(Debug, thiserror::Error)]
 pub enum RpcError {
     #[error("io: {0}")]
@@ -39,8 +47,168 @@ pub enum RpcError {
     Malformed(String),
     #[error("remote error: {0}")]
     Remote(String),
+    #[error("overloaded: {message} (retry after {retry_after_ms} ms)")]
+    Overloaded { message: String, retry_after_ms: u64 },
+    #[error("quota exceeded: {0}")]
+    QuotaExceeded(String),
+    #[error("{0}")]
+    UnknownSession(String),
     #[error("connection closed")]
     Closed,
+}
+
+impl RpcError {
+    /// Classify a wire error string: structured service errors become
+    /// their typed variant, everything else (old peers, ad-hoc handler
+    /// strings) stays [`RpcError::Remote`].
+    pub fn from_remote(s: &str) -> RpcError {
+        match ServiceError::decode(s) {
+            Some(se) => match se.code {
+                ErrorCode::Overloaded => RpcError::Overloaded {
+                    message: se.message,
+                    retry_after_ms: se.retry_after_ms.unwrap_or(0),
+                },
+                ErrorCode::QuotaExceeded => RpcError::QuotaExceeded(se.message),
+                ErrorCode::UnknownSession => RpcError::UnknownSession(se.message),
+                ErrorCode::Internal => RpcError::Remote(se.message),
+            },
+            None => RpcError::Remote(s.to_string()),
+        }
+    }
+
+    /// True when the peer answered "that session id is not registered
+    /// here" — the coordinator's lazy re-push trigger. Matches the typed
+    /// variant a structured peer sends and, for old peers, the plain
+    /// `unknown session '...'` string.
+    pub fn is_unknown_session(&self) -> bool {
+        match self {
+            RpcError::UnknownSession(_) => true,
+            RpcError::Remote(m) => m.contains("unknown session"),
+            _ => false,
+        }
+    }
+
+    /// True for application-level error replies (the peer is alive and
+    /// answered) as opposed to transport failures — the distinction
+    /// retry/eviction logic keys on: an application error must never
+    /// mark a connection stale or a worker dead.
+    pub fn is_application(&self) -> bool {
+        matches!(
+            self,
+            RpcError::Remote(_)
+                | RpcError::Overloaded { .. }
+                | RpcError::QuotaExceeded(_)
+                | RpcError::UnknownSession(_)
+        )
+    }
+
+    /// The bare application-level message of an error reply — what the
+    /// peer's handler returned, without the `remote error:` Display
+    /// prefix. Falls back to the Display form for transport errors.
+    pub fn remote_text(&self) -> String {
+        match self {
+            RpcError::Remote(m)
+            | RpcError::QuotaExceeded(m)
+            | RpcError::UnknownSession(m) => m.clone(),
+            other => other.to_string(),
+        }
+    }
+}
+
+/// Stable machine-readable codes for structured service errors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Admission queue full; retry after `retry_after_ms`.
+    Overloaded,
+    /// A tenancy quota (`max_sessions`, ...) would be exceeded.
+    QuotaExceeded,
+    /// The session id/token is not registered on this peer.
+    UnknownSession,
+    /// Any other server-side failure.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::QuotaExceeded => "quota_exceeded",
+            ErrorCode::UnknownSession => "unknown_session",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        Some(match s {
+            "overloaded" => ErrorCode::Overloaded,
+            "quota_exceeded" => ErrorCode::QuotaExceeded,
+            "unknown_session" => ErrorCode::UnknownSession,
+            "internal" => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+}
+
+/// A structured service error: `{code, message, retry_after_ms?}`
+/// encoded as JSON *inside* the v1 error-string channel, so old peers
+/// see readable JSON text and structured peers decode typed variants.
+/// Handlers return `Err(ServiceError::...(...).encode())`; the client's
+/// response path runs every wire error string through
+/// [`ServiceError::decode`] via [`RpcError::from_remote`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceError {
+    pub code: ErrorCode,
+    pub message: String,
+    pub retry_after_ms: Option<u64>,
+}
+
+impl ServiceError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ServiceError {
+        ServiceError { code, message: message.into(), retry_after_ms: None }
+    }
+
+    pub fn overloaded(message: impl Into<String>, retry_after_ms: u64) -> ServiceError {
+        ServiceError {
+            code: ErrorCode::Overloaded,
+            message: message.into(),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
+    pub fn quota(message: impl Into<String>) -> ServiceError {
+        ServiceError::new(ErrorCode::QuotaExceeded, message)
+    }
+
+    /// The canonical unknown-session error. The message keeps the exact
+    /// `unknown session '{id}'` phrasing old peers substring-match on.
+    pub fn unknown_session(id: &str) -> ServiceError {
+        ServiceError::new(ErrorCode::UnknownSession, format!("unknown session '{id}'"))
+    }
+
+    /// Serialize into the string handlers return as `Err(String)`.
+    pub fn encode(&self) -> String {
+        let mut m = Map::new();
+        m.insert("code", Value::from(self.code.as_str()));
+        m.insert("message", Value::from(self.message.as_str()));
+        if let Some(ms) = self.retry_after_ms {
+            m.insert("retry_after_ms", Value::from(ms));
+        }
+        json::to_string(&Value::Object(m))
+    }
+
+    /// Parse a wire error string; `None` for anything that is not a
+    /// structured service error (legacy plain strings, foreign JSON).
+    pub fn decode(s: &str) -> Option<ServiceError> {
+        let t = s.trim_start();
+        if !t.starts_with('{') {
+            return None;
+        }
+        let v = json::parse(s).ok()?;
+        let code = ErrorCode::parse(v.get("code")?.as_str()?)?;
+        let message = v.get("message")?.as_str()?.to_string();
+        let retry_after_ms = v.get("retry_after_ms").and_then(Value::as_i64).map(|n| n as u64);
+        Some(ServiceError { code, message, retry_after_ms })
+    }
 }
 
 /// A parsed request: params (as a zero-copy [`Body`] whose tensor
@@ -487,7 +655,7 @@ pub fn recv_response_traced(
         )));
     }
     if let Some(e) = v.get("error").and_then(Value::as_str) {
-        return Err(RpcError::Remote(e.to_string()));
+        return Err(RpcError::from_remote(e));
     }
     // move, don't clone: result can be a multi-MB inline matrix on the
     // JSON wire
@@ -628,6 +796,79 @@ mod tests {
         send_error(&mut buf, 3, "boom").unwrap();
         let mut r = std::io::Cursor::new(buf);
         assert!(matches!(recv_response(&mut r, 3), Err(RpcError::Remote(e)) if e == "boom"));
+    }
+
+    #[test]
+    fn structured_overloaded_error_roundtrips_typed() {
+        let enc = ServiceError::overloaded("admit queue full (3 queued)", 120).encode();
+        let mut buf = Vec::new();
+        send_error(&mut buf, 4, &enc).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        match recv_response(&mut r, 4) {
+            Err(RpcError::Overloaded { message, retry_after_ms }) => {
+                assert_eq!(message, "admit queue full (3 queued)");
+                assert_eq!(retry_after_ms, 120);
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn structured_quota_and_unknown_session_decode() {
+        let q = ServiceError::quota("session quota exceeded: 2/2").encode();
+        assert!(matches!(
+            RpcError::from_remote(&q),
+            RpcError::QuotaExceeded(m) if m == "session quota exceeded: 2/2"
+        ));
+        let u = ServiceError::unknown_session("tok-ff").encode();
+        match RpcError::from_remote(&u) {
+            RpcError::UnknownSession(m) => assert_eq!(m, "unknown session 'tok-ff'"),
+            other => panic!("expected UnknownSession, got {other:?}"),
+        }
+        // internal code folds back to the plain Remote surface
+        let i = ServiceError::new(ErrorCode::Internal, "boom").encode();
+        assert!(matches!(RpcError::from_remote(&i), RpcError::Remote(m) if m == "boom"));
+    }
+
+    #[test]
+    fn legacy_and_foreign_error_strings_stay_remote() {
+        for s in [
+            "unknown session 'x'",              // old-peer plain string
+            "{\"not\":\"service\"}",            // JSON but not a service error
+            "{\"code\":\"nope\",\"message\":\"x\"}", // unknown code
+            "{broken",                          // not even JSON
+        ] {
+            assert!(
+                matches!(RpcError::from_remote(s), RpcError::Remote(m) if m == s),
+                "{s}"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_session_helper_matches_old_and_new_shapes() {
+        let typed = RpcError::from_remote(&ServiceError::unknown_session("a").encode());
+        assert!(typed.is_unknown_session());
+        assert!(RpcError::Remote("unknown session 'a'".into()).is_unknown_session());
+        assert!(!RpcError::Remote("boom".into()).is_unknown_session());
+        assert!(!RpcError::Closed.is_unknown_session());
+        // application-vs-transport classification
+        assert!(typed.is_application());
+        assert!(RpcError::Remote("boom".into()).is_application());
+        assert!(!RpcError::Closed.is_application());
+        assert!(!RpcError::Malformed("x".into()).is_application());
+    }
+
+    #[test]
+    fn service_error_encode_decode_roundtrip() {
+        for se in [
+            ServiceError::overloaded("busy", 55),
+            ServiceError::quota("too many"),
+            ServiceError::unknown_session("s1"),
+            ServiceError::new(ErrorCode::Internal, "oops"),
+        ] {
+            assert_eq!(ServiceError::decode(&se.encode()), Some(se.clone()), "{se:?}");
+        }
     }
 
     #[test]

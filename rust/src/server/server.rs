@@ -16,12 +16,13 @@ use std::time::{Duration, Instant};
 
 use crate::agent::job::{self, AgentTask, ArmSelect, JobRegistry, Picked};
 use crate::cache::DataCache;
+use crate::cluster::tenancy::TenantRegistry;
 use crate::config::{AlaasConfig, StrategyChoice};
 use crate::json::{Map, Value};
 use crate::metrics::Registry;
 use crate::pipeline::{run_pipeline, BatchPolicy, DataflowMode, PipelineParams};
 use crate::runtime::backend::ComputeBackend;
-use crate::server::rpc;
+use crate::server::rpc::{self, ServiceError};
 use crate::server::wire::{self, Body, Payload, WireMode};
 use crate::store::{Manifest, SampleRef, StoreRouter};
 use crate::strategies::{self, SelectCtx};
@@ -81,6 +82,10 @@ struct ServerState {
     /// spans, slow-query log, and the `trace_recent`/`trace_get` RPCs.
     tracer: Arc<crate::trace::Tracer>,
     sessions: Mutex<HashMap<String, Arc<SessionSlot>>>,
+    /// Multi-tenant session registry (DESIGN.md §Tenancy): the same
+    /// token/quota surface the cluster coordinator serves, minus the
+    /// admission gate (one server has no scatter path to arbitrate).
+    tenants: TenantRegistry,
     /// Background PSHEA jobs (DESIGN.md §Agent).
     jobs: JobRegistry,
     /// Live-membership heartbeat loop when this server runs as a
@@ -109,11 +114,13 @@ impl AlServer {
             config.observability.trace,
             config.observability.slow_query_ms,
         ));
+        let tenants = TenantRegistry::new(config.coordinator.tenancy.clone());
         let state = Arc::new(ServerState {
             config,
             deps,
             tracer,
             sessions: Mutex::new(HashMap::new()),
+            tenants,
             jobs: JobRegistry::new(),
             heartbeater: Mutex::new(None),
             shutdown: AtomicBool::new(false),
@@ -269,13 +276,23 @@ fn dispatch(
             strategies::zoo_names().into_iter().map(Value::from).collect(),
         ))),
         "cache_stats" => {
+            let (sessions, session_bytes) = session_footprint(state);
             let mut m = Map::new();
             m.insert("hits", Value::from(state.deps.cache.hits()));
             m.insert("misses", Value::from(state.deps.cache.misses()));
             m.insert("bytes", Value::from(state.deps.cache.bytes()));
             m.insert("entries", Value::from(state.deps.cache.len()));
+            // resident session footprint: scan outputs held in memory —
+            // lets a caller verify `session_close`/`drop_session`
+            // actually freed this server
+            m.insert("sessions", Value::from(sessions));
+            m.insert("session_bytes", Value::from(session_bytes));
             Ok(Payload::json(Value::Object(m)))
         }
+        // multi-tenant session lifecycle (DESIGN.md §Tenancy)
+        "session_create" => session_create(state, &params.value).map(Payload::json),
+        "session_close" => session_close(state, &params.value).map(Payload::json),
+        "service_stats" => Ok(Payload::json(service_stats(state))),
         // agent-as-a-service job family (DESIGN.md §Agent)
         "agent_start" => agent_start(state, params).map(Payload::json),
         "agent_status" => job::rpc_status(&state.jobs, &params.value).map(Payload::json),
@@ -386,12 +403,132 @@ fn get_session(state: &ServerState, id: &str) -> Result<Arc<SessionSlot>, String
         .unwrap()
         .get(id)
         .cloned()
-        .ok_or_else(|| format!("unknown session '{id}'"))
+        .ok_or_else(|| ServiceError::unknown_session(id).encode())
+}
+
+/// Pull the `session` param and translate an opaque `tok-*` handle back
+/// to its session name; plain names (including the coordinator's shard
+/// session ids) pass through unchanged.
+fn resolve_session_param(state: &ServerState, params: &Value) -> Result<String, String> {
+    let raw = str_param(params, "session")?;
+    state.tenants.resolve(&raw).map_err(|e| e.encode())
+}
+
+/// Resident scan-output footprint: `(sessions, bytes)` across every
+/// registered session's cached matrices.
+fn session_footprint(state: &ServerState) -> (u64, u64) {
+    let map = state.sessions.lock().unwrap();
+    let mut bytes = 0u64;
+    for slot in map.values() {
+        let s = slot.s.lock().unwrap();
+        let sz = |m: &Option<Mat>| {
+            m.as_ref().map(|m| (m.rows() * m.cols() * 4) as u64).unwrap_or(0)
+        };
+        bytes += sz(&s.pool_emb) + sz(&s.pool_scores) + sz(&s.init_emb) + sz(&s.test_emb);
+    }
+    (map.len() as u64, bytes)
+}
+
+/// `session_create {session, weight?, max_workers?}` — register a
+/// tenant under the `max_sessions` quota and mint its opaque `tok-*`
+/// handle. Same reply shape as the cluster coordinator; `weight` and
+/// `max_workers` are recorded but only arbitrate anything there.
+fn session_create(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
+    let name = str_param(params, "session")?;
+    let weight = params.get("weight").and_then(Value::as_usize).unwrap_or(1) as u64;
+    let max_workers = params.get("max_workers").and_then(Value::as_usize).unwrap_or(0);
+    let info =
+        state.tenants.create(&name, weight, max_workers).map_err(|e| e.encode())?;
+    let mut m = Map::new();
+    m.insert("session", Value::from(info.name));
+    m.insert("token", Value::from(info.token));
+    m.insert("weight", Value::from(info.weight));
+    m.insert("max_workers", Value::from(info.max_workers));
+    Ok(Value::Object(m))
+}
+
+/// `session_close {session}` (name or token) — release the quota slot
+/// and drop the session's scan outputs. Idempotent, like the
+/// coordinator's close.
+fn session_close(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
+    let raw = str_param(params, "session")?;
+    let name = state.tenants.resolve(&raw).unwrap_or(raw);
+    let closed = state.tenants.close(&name).is_some();
+    let dropped = state.sessions.lock().unwrap().remove(&name).is_some();
+    let mut m = Map::new();
+    m.insert("closed", Value::Bool(closed || dropped));
+    m.insert("dropped_shards", Value::from(usize::from(dropped)));
+    Ok(Value::Object(m))
+}
+
+/// `service_stats` — the single-server rendering of the coordinator's
+/// tenancy snapshot: no admission gate here, so the gate counters are
+/// zero, but the registry/quota and per-session rows match.
+fn service_stats(state: &Arc<ServerState>) -> Value {
+    let tenants = state.tenants.list();
+    let rows_of: HashMap<String, usize> = {
+        let map = state.sessions.lock().unwrap();
+        map.iter()
+            .map(|(k, slot)| (k.clone(), slot.s.lock().unwrap().manifest.pool.len()))
+            .collect()
+    };
+    let mut names: Vec<String> = rows_of.keys().cloned().collect();
+    for t in &tenants {
+        if !rows_of.contains_key(&t.name) {
+            names.push(t.name.clone());
+        }
+    }
+    names.sort();
+    let mut sessions = Vec::new();
+    let mut active = 0usize;
+    for name in &names {
+        let rows = rows_of.get(name).copied().unwrap_or(0);
+        let t = tenants.iter().find(|t| &t.name == name);
+        let resident = rows_of.contains_key(name);
+        if resident {
+            active += 1;
+        }
+        let mut m = Map::new();
+        m.insert("name", Value::from(name.clone()));
+        m.insert("weight", Value::from(t.map(|t| t.weight).unwrap_or(1)));
+        m.insert("explicit", Value::Bool(t.map(|t| t.explicit).unwrap_or(false)));
+        m.insert("rows", Value::from(rows));
+        m.insert("shards", Value::from(usize::from(resident)));
+        m.insert("admitted", Value::from(0u64));
+        m.insert("shed", Value::from(0u64));
+        m.insert("queued", Value::from(0u64));
+        sessions.push(Value::Object(m));
+    }
+    let cfg = state.tenants.config();
+    let mut m = Map::new();
+    m.insert("tenancy_enabled", Value::Bool(cfg.enabled));
+    m.insert("sessions_total", Value::from(names.len()));
+    m.insert("sessions_active", Value::from(active));
+    m.insert("running", Value::from(0u64));
+    m.insert("queued", Value::from(0u64));
+    m.insert("admitted_total", Value::from(0u64));
+    m.insert("shed_total", Value::from(0u64));
+    m.insert("max_sessions", Value::from(cfg.max_sessions));
+    m.insert("sessions", Value::Array(sessions));
+    Value::Object(m)
 }
 
 /// `push_data {session, manifest, init_labels?}` — register and process.
 fn push_data(state: &Arc<ServerState>, params: &Body) -> Result<Value, String> {
-    let session_id = str_param(&params.value, "session")?;
+    let session_id = resolve_session_param(state, &params.value)?;
+    // auto-register pushes from the pre-tenancy stringly API under the
+    // same quota explicit creates consume
+    state.tenants.ensure(&session_id).map_err(|e| e.encode())?;
+    push_session(state, params, session_id)
+}
+
+/// The push body shared with [`scan_shard`], whose coordinator-minted
+/// shard sessions must NOT count against this server's tenant quota.
+fn push_session(
+    state: &Arc<ServerState>,
+    params: &Body,
+    session_id: String,
+) -> Result<Value, String> {
     let manifest_v = params.value.get("manifest").ok_or("missing param 'manifest'")?;
     let manifest = Manifest::from_value(manifest_v).map_err(|e| e.to_string())?;
     let init_labels = parse_init_labels(params, manifest.init.len())?;
@@ -542,7 +679,7 @@ fn process_session(
 
 /// `status {session}`.
 fn status(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
-    let session_id = str_param(params, "session")?;
+    let session_id = resolve_session_param(state, params)?;
     let slot = get_session(state, &session_id)?;
     let s = slot.s.lock().unwrap();
     let mut m = Map::new();
@@ -600,7 +737,7 @@ fn candidate_view(s: &Session, exclude: &[usize]) -> (Vec<usize>, Mat, Mat) {
 
 /// `query {session, budget, strategy?, wait_ms?}`.
 fn query(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
-    let session_id = str_param(params, "session")?;
+    let session_id = resolve_session_param(state, params)?;
     let budget =
         params.get("budget").and_then(Value::as_usize).ok_or("missing usize param 'budget'")?;
     let strategy_name = match params.get("strategy").and_then(Value::as_str) {
@@ -676,7 +813,8 @@ fn query(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
 /// of a cluster session (the coordinator owns the global index space).
 fn scan_shard(state: &Arc<ServerState>, params: &Body) -> Result<Value, String> {
     let shard = params.value.get("shard").and_then(Value::as_usize).unwrap_or(0);
-    let v = push_data(state, params)?;
+    let session_id = str_param(&params.value, "session")?;
+    let v = push_session(state, params, session_id)?;
     state.deps.metrics.counter("cluster.shards_accepted").fetch_add(1, Ordering::Relaxed);
     let mut m = match v {
         Value::Object(m) => m,
@@ -990,7 +1128,7 @@ pub(crate) fn parse_agent_start(
 /// test_labels, wait_ms?}` — spawn a background PSHEA job over a pushed
 /// session and return its job id (DESIGN.md §Agent).
 fn agent_start(state: &Arc<ServerState>, params: &Body) -> Result<Value, String> {
-    let session_id = str_param(&params.value, "session")?;
+    let session_id = resolve_session_param(state, &params.value)?;
     let slot = get_session(state, &session_id)?;
     let (manifest, have_init_labels) = {
         let s = slot.s.lock().unwrap();

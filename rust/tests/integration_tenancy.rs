@@ -1,0 +1,244 @@
+//! Multi-tenant coordinator integration (DESIGN.md §Tenancy): weighted
+//! fairness under saturation, admission-queue load shedding with typed
+//! `Overloaded` + retry hints, session-quota enforcement through the
+//! `SessionHandle` API, close-frees-worker-memory, and bit-identical
+//! single-session selections with tenancy on vs off.
+//!
+//! Acceptance pins (ISSUE 9):
+//! * two sessions with weights 1 and 3 under saturation ⇒ ~1:3 completed
+//!   scatter throughput (±25%);
+//! * overflowing the admission queue ⇒ typed `Overloaded` with
+//!   `retry_after_ms > 0` instead of a timeout, and a retry succeeds
+//!   once the burst drains;
+//! * `session_close` releases the quota slot and drops every worker
+//!   shard session (observable via aggregated `cache_stats`);
+//! * a single session sees bit-identical selections whether the tenancy
+//!   layer is enabled or not.
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use alaas::json::Value;
+use alaas::server::rpc::RpcError;
+use alaas::server::{AlClient, SessionOpts};
+
+use common::cluster_harness::ClusterHarness;
+
+/// Two sessions with DRR weights 1 and 3, a single-scatter admission
+/// gate, and four backlog threads per session keeping both queues
+/// saturated: completed queries must split ~1:3 (±25%).
+#[test]
+fn weighted_fairness_one_to_three_under_saturation() {
+    let mut h = ClusterHarness::builder()
+        .bucket("ten-fair")
+        .workers(2)
+        .coord_tweak(|c| {
+            c.coordinator.tenancy.enabled = true;
+            c.coordinator.tenancy.max_concurrent = 1;
+            c.coordinator.tenancy.admit_queue_len = 64;
+        })
+        .build();
+    let mut client = h.client();
+    client
+        .create_session("fair-a", SessionOpts { weight: 1, max_workers: 0 })
+        .unwrap()
+        .detach();
+    client
+        .create_session("fair-b", SessionOpts { weight: 3, max_workers: 0 })
+        .unwrap()
+        .detach();
+    h.push(&mut client, "fair-a");
+    h.push(&mut client, "fair-b");
+    // warm both sessions so the measured window is select-only scatters
+    h.query_ids(&mut client, "fair-a", 5, "least_confidence");
+    h.query_ids(&mut client, "fair-b", 5, "least_confidence");
+
+    let addr = h.coord_addr.to_string();
+    let counts = [Arc::new(AtomicUsize::new(0)), Arc::new(AtomicUsize::new(0))];
+    let stop = Arc::new(AtomicBool::new(false));
+    let start = Arc::new(Barrier::new(9)); // 8 workers + the timer below
+    let mut threads = Vec::new();
+    for t in 0..8 {
+        let (sess, idx) = if t % 2 == 0 { ("fair-a", 0) } else { ("fair-b", 1) };
+        let addr = addr.clone();
+        let count = counts[idx].clone();
+        let stop = stop.clone();
+        let start = start.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut c = AlClient::connect(&addr).unwrap();
+            start.wait();
+            while !stop.load(Ordering::Relaxed) {
+                c.query(sess, 5, Some("least_confidence")).unwrap();
+                count.fetch_add(1, Ordering::Relaxed);
+            }
+        }));
+    }
+    start.wait();
+    std::thread::sleep(Duration::from_millis(2_500));
+    stop.store(true, Ordering::Relaxed);
+    for t in threads {
+        t.join().unwrap();
+    }
+    let a = counts[0].load(Ordering::Relaxed);
+    let b = counts[1].load(Ordering::Relaxed);
+    h.log(&format!("fairness window: fair-a {a} vs fair-b {b}"));
+    assert!(a >= 8, "need a meaningful sample for the weight-1 session, got {a}");
+    let ratio = b as f64 / a as f64;
+    assert!(
+        (2.25..=3.75).contains(&ratio),
+        "weights 1:3 should yield ~1:3 throughput (±25%): {a} vs {b} (ratio {ratio:.2})"
+    );
+}
+
+/// Six simultaneous scatters into a gate with one slot and a one-deep
+/// queue: some complete, the rest come back as typed `Overloaded` with a
+/// positive retry hint — and a retry after the burst drains succeeds.
+#[test]
+fn admission_overflow_sheds_with_retry_hint() {
+    let mut h = ClusterHarness::builder()
+        .bucket("ten-shed")
+        .workers(2)
+        .sizes(60, 1200, 0) // a heavier pool keeps each scatter long enough to pile up behind
+        .coord_tweak(|c| {
+            c.coordinator.tenancy.enabled = true;
+            c.coordinator.tenancy.max_concurrent = 1;
+            c.coordinator.tenancy.admit_queue_len = 1;
+        })
+        .build();
+    let mut client = h.client();
+    h.push(&mut client, "shed-sess");
+
+    let addr = h.coord_addr.to_string();
+    let start = Arc::new(Barrier::new(6));
+    let mut threads = Vec::new();
+    for _ in 0..6 {
+        let addr = addr.clone();
+        let start = start.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut c = AlClient::connect(&addr).unwrap();
+            start.wait();
+            c.query("shed-sess", 5, Some("k_center_greedy")).map(|_| ())
+        }));
+    }
+    let mut ok = 0usize;
+    let mut shed = Vec::new();
+    for t in threads {
+        match t.join().unwrap() {
+            Ok(()) => ok += 1,
+            Err(e) => shed.push(e),
+        }
+    }
+    h.log(&format!("shed burst: {ok} completed, {} shed", shed.len()));
+    assert!(ok >= 1, "the running + queued scatters must still complete");
+    assert!(!shed.is_empty(), "6 concurrent scatters into a 1-deep queue must shed");
+    for e in &shed {
+        match e {
+            RpcError::Overloaded { retry_after_ms, .. } => {
+                assert!(*retry_after_ms > 0, "shed reply must carry a positive retry hint");
+            }
+            other => panic!("expected typed Overloaded, got {other:?}"),
+        }
+    }
+    // the burst has drained: a retry is admitted normally
+    let ids = h.query_ids(&mut client, "shed-sess", 5, "least_confidence");
+    assert_eq!(ids.len(), 5);
+}
+
+/// `max_sessions = 2`: the third create fails with a clean typed
+/// `QuotaExceeded` (no session leaks), closing one releases the slot,
+/// and `service_stats` reflects the registry.
+#[test]
+fn session_quota_enforced_and_released_on_close() {
+    let h = ClusterHarness::builder()
+        .bucket("ten-quota")
+        .workers(2)
+        .coord_tweak(|c| {
+            c.coordinator.tenancy.enabled = true;
+            c.coordinator.tenancy.max_sessions = 2;
+        })
+        .build();
+    let mut client = h.client();
+    let (_, tok_a) =
+        client.create_session("quota-a", SessionOpts::default()).unwrap().detach();
+    client.create_session("quota-b", SessionOpts::default()).unwrap().detach();
+    match client.create_session("quota-c", SessionOpts::default()).map(|s| s.detach()) {
+        Err(RpcError::QuotaExceeded(msg)) => {
+            assert!(msg.contains('2'), "quota message should cite the limit: {msg}")
+        }
+        Ok((name, _)) => panic!("third create under max_sessions=2 minted '{name}'"),
+        Err(other) => panic!("expected typed QuotaExceeded, got {other:?}"),
+    }
+    // closing by token frees the slot for a new tenant
+    assert!(client.close_session(&tok_a).unwrap());
+    let (name, _) =
+        client.create_session("quota-c", SessionOpts::default()).unwrap().detach();
+    assert_eq!(name, "quota-c");
+    let stats = client.service_stats().unwrap();
+    assert_eq!(stats.get("tenancy_enabled").and_then(Value::as_bool), Some(true));
+    assert_eq!(stats.get("sessions_total").and_then(Value::as_usize), Some(2));
+    assert_eq!(stats.get("max_sessions").and_then(Value::as_usize), Some(2));
+}
+
+/// `session_close` must actually free worker memory: aggregated
+/// `cache_stats` shows resident shard sessions (and their embedding
+/// bytes) before the close and zero after, and a query on the closed
+/// session fails with typed `UnknownSession`.
+#[test]
+fn close_drops_shard_state_and_frees_worker_memory() {
+    let mut h = ClusterHarness::builder()
+        .bucket("ten-close")
+        .workers(2)
+        .coord_tweak(|c| c.coordinator.tenancy.enabled = true)
+        .build();
+    let mut client = h.client();
+    h.push(&mut client, "close-sess");
+    let ids = h.query_ids(&mut client, "close-sess", 5, "least_confidence");
+    assert_eq!(ids.len(), 5);
+
+    let before = client.cache_stats().unwrap();
+    let sessions = before.get("sessions").and_then(Value::as_usize).unwrap_or(0);
+    let bytes = before.get("session_bytes").and_then(Value::as_usize).unwrap_or(0);
+    assert!(sessions >= 2, "each worker should hold a resident shard session, got {sessions}");
+    assert!(bytes > 0, "resident shard embeddings should account bytes");
+
+    assert!(client.close_session("close-sess").unwrap());
+    let after = client.cache_stats().unwrap();
+    assert_eq!(
+        after.get("sessions").and_then(Value::as_usize),
+        Some(0),
+        "close must drop every worker shard session"
+    );
+    assert_eq!(after.get("session_bytes").and_then(Value::as_usize), Some(0));
+
+    match client.query("close-sess", 5, Some("least_confidence")) {
+        Err(RpcError::UnknownSession(m)) => assert!(m.contains("close-sess"), "got: {m}"),
+        Ok(_) => panic!("query on a closed session must fail"),
+        Err(other) => panic!("expected typed UnknownSession, got {other:?}"),
+    }
+}
+
+/// The tenancy layer is pure admission control: with a single session
+/// and no contention, selections are bit-identical whether the gate is
+/// enabled cluster-wide or not.
+#[test]
+fn single_session_selection_bit_identical_tenancy_on_off() {
+    let run = |tenancy: bool| {
+        let mut h = ClusterHarness::builder()
+            .bucket("ten-par")
+            .workers(3)
+            .cfg_tweak(move |c| c.coordinator.tenancy.enabled = tenancy)
+            .build();
+        let mut client = h.client();
+        h.push(&mut client, "par-sess");
+        let lc = h.query_ids(&mut client, "par-sess", 10, "least_confidence");
+        let kc = h.query_ids(&mut client, "par-sess", 10, "k_center_greedy");
+        (lc, kc)
+    };
+    let (lc_off, kc_off) = run(false);
+    let (lc_on, kc_on) = run(true);
+    assert_eq!(lc_off, lc_on, "tenancy gate must not perturb margin selections");
+    assert_eq!(kc_off, kc_on, "tenancy gate must not perturb refine selections");
+}

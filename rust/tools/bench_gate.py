@@ -3,7 +3,7 @@
 
 Reads the BENCH_*.json files the bench targets emit (rpc_wire ->
 BENCH_PR2.json, conn_pool -> BENCH_PR4.json, mux_scatter ->
-BENCH_PR8.json), matches each against the
+BENCH_PR8.json, tenancy_soak -> BENCH_PR9.json), matches each against the
 committed baseline (tools/bench_baseline.json), and fails the job when a
 gated metric regresses more than the configured tolerance below its
 baseline value.
@@ -18,7 +18,7 @@ baseline from a green run's artifact, but never fails on them.
 Usage (CI runs this from the rust/ package root):
 
     python3 tools/bench_gate.py --baseline tools/bench_baseline.json \
-        ../BENCH_PR2.json ../BENCH_PR4.json ../BENCH_PR8.json
+        ../BENCH_PR2.json ../BENCH_PR4.json ../BENCH_PR8.json ../BENCH_PR9.json
 """
 
 import argparse
