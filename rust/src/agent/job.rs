@@ -18,7 +18,7 @@
 //!   `agent_cancel` RPC family, shared by `AlServer` and the cluster
 //!   coordinator so the two dispatchers cannot drift.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -339,13 +339,173 @@ pub struct JobState {
     pub trace: Option<PsheaTrace>,
 }
 
-/// One job: state + completion signal + cancel flag. The flag is an
-/// `Arc` so the running [`AgentTask`] shares the very same bool
-/// `agent_cancel` flips — no snapshot can desync.
+/// Events retained per job for late/slow subscribers. A subscriber whose
+/// cursor falls behind the oldest retained event is disconnected with a
+/// lag error rather than back-pressuring the job (DESIGN.md §Events).
+pub const JOB_EVENT_BUFFER: usize = 1024;
+
+/// One delivery from [`JobEvents::next_after`].
+#[derive(Debug)]
+pub enum NextEvent {
+    /// The event at `cursor + 1`, with its sequence number.
+    Event(u64, Value),
+    /// `cursor + 1` was evicted; the oldest retained seq is carried so
+    /// the lag error can say what remains.
+    Lagged(u64),
+    /// Every event was delivered and no more will ever be published.
+    Closed,
+    /// Nothing new within the wait window; the stream is still live.
+    Timeout,
+}
+
+/// Bounded, sequenced per-job event buffer (DESIGN.md §Events). Events
+/// are the *same* `Value` records the coordinator's WAL stores for the
+/// job (spend/record/elim/round/resume/done), published at the same
+/// points — so a subscriber's stream is bit-identical to the durable
+/// log by construction. Sequence numbers start at 1 and never reset;
+/// `events[i]` holds seq `first_seq + i`.
+pub struct JobEvents {
+    inner: Mutex<EventBuf>,
+    bell: Condvar,
+}
+
+struct EventBuf {
+    events: VecDeque<Value>,
+    /// Sequence number of `events[0]`; advances on eviction.
+    first_seq: u64,
+    /// Terminal: set by the `job_done` event (or [`JobEvents::close`]
+    /// for jobs restored already-terminal); publishes after are dropped.
+    closed: bool,
+}
+
+impl Default for JobEvents {
+    fn default() -> JobEvents {
+        JobEvents {
+            inner: Mutex::new(EventBuf {
+                events: VecDeque::new(),
+                first_seq: 1,
+                closed: false,
+            }),
+            bell: Condvar::new(),
+        }
+    }
+}
+
+impl JobEvents {
+    /// Append one event and wake subscribers. Never blocks: the buffer
+    /// evicts its oldest entry past [`JOB_EVENT_BUFFER`] — a slow
+    /// subscriber observes the eviction as `Lagged` and is disconnected,
+    /// the job never waits. A `job_done` event closes the stream.
+    pub fn publish(&self, v: Value) {
+        let terminal = v.get("t").and_then(Value::as_str) == Some("job_done");
+        let mut b = self.inner.lock().unwrap();
+        if b.closed {
+            return;
+        }
+        b.events.push_back(v);
+        while b.events.len() > JOB_EVENT_BUFFER {
+            b.events.pop_front();
+            b.first_seq += 1;
+        }
+        if terminal {
+            b.closed = true;
+        }
+        drop(b);
+        self.bell.notify_all();
+    }
+
+    /// Close without a terminal event — jobs restored from the WAL in an
+    /// already-terminal state, where synthesizing a `job_done` the log
+    /// never held would break stream/WAL bit-identity.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.bell.notify_all();
+    }
+
+    /// Block up to `wait` for the event after `cursor` (a subscriber
+    /// that has consumed seq `cursor` asks for `cursor + 1`; a fresh
+    /// subscriber asks with `cursor = 0`).
+    pub fn next_after(&self, cursor: u64, wait: Duration) -> NextEvent {
+        let deadline = Instant::now() + wait;
+        let mut b = self.inner.lock().unwrap();
+        loop {
+            if cursor + 1 < b.first_seq {
+                return NextEvent::Lagged(b.first_seq);
+            }
+            let idx = (cursor + 1 - b.first_seq) as usize;
+            if idx < b.events.len() {
+                return NextEvent::Event(cursor + 1, b.events[idx].clone());
+            }
+            if b.closed {
+                return NextEvent::Closed;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return NextEvent::Timeout;
+            }
+            let (guard, _) = self.bell.wait_timeout(b, left).unwrap();
+            b = guard;
+        }
+    }
+
+    /// Refill from recovery-fold records, bypassing the closed check (a
+    /// job restored terminal is closed *before* its history is seeded).
+    /// A replayed `job_done` still closes the stream.
+    fn seed(&self, raw: &[Value]) {
+        let mut b = self.inner.lock().unwrap();
+        for v in raw {
+            if v.get("t").and_then(Value::as_str) == Some("job_done") {
+                b.closed = true;
+            }
+            b.events.push_back(v.clone());
+            while b.events.len() > JOB_EVENT_BUFFER {
+                b.events.pop_front();
+                b.first_seq += 1;
+            }
+        }
+        drop(b);
+        self.bell.notify_all();
+    }
+
+    /// `(first_seq, next_seq, closed)` — the subscribe handler's cursor
+    /// validation and the diagnostics dump.
+    pub fn cursor_info(&self) -> (u64, u64, bool) {
+        let b = self.inner.lock().unwrap();
+        (b.first_seq, b.first_seq + b.events.len() as u64, b.closed)
+    }
+
+    /// Retained events, oldest first (diagnostics).
+    pub fn snapshot(&self) -> Vec<Value> {
+        self.inner.lock().unwrap().events.iter().cloned().collect()
+    }
+}
+
+/// One job: state + completion signal + cancel flag + event plane. The
+/// flag is an `Arc` so the running [`AgentTask`] shares the very same
+/// bool `agent_cancel` flips — no snapshot can desync.
 pub struct JobSlot {
+    /// The registry id (`job-N`) — carried here so observers deep in the
+    /// loop can build WAL-shaped event records without threading the id
+    /// through every call.
+    pub id: String,
     pub state: Mutex<JobState>,
     pub done: Condvar,
     pub cancel: Arc<AtomicBool>,
+    /// Push-stream buffer for `job_subscribe` (DESIGN.md §Events).
+    pub events: JobEvents,
+    /// Every WAL record appended for this job since `job_start`, in
+    /// append order — the raw material a *forced* mid-job snapshot
+    /// embeds so compaction under `max_wal_bytes` cannot orphan a
+    /// running job (DESIGN.md §Durability).
+    pub mirror: Mutex<Vec<Value>>,
+}
+
+impl JobSlot {
+    /// Record `v` in the WAL mirror (call wherever the record is also
+    /// appended to the durable log).
+    pub fn wal_mirror(&self, v: &Value) {
+        self.mirror.lock().unwrap().push(v.clone());
+    }
 }
 
 /// Finished jobs kept for late `agent_status`/`agent_result` readers
@@ -370,6 +530,7 @@ impl JobRegistry {
         let seq = self.next.fetch_add(1, Ordering::Relaxed);
         let id = format!("job-{seq}");
         let slot = Arc::new(JobSlot {
+            id: id.clone(),
             state: Mutex::new(JobState {
                 status: JobStatus::Running,
                 strategies: strategies.to_vec(),
@@ -383,6 +544,8 @@ impl JobRegistry {
             }),
             done: Condvar::new(),
             cancel: Arc::new(AtomicBool::new(false)),
+            events: JobEvents::default(),
+            mirror: Mutex::new(vec![]),
         });
         let mut jobs = self.jobs.lock().unwrap();
         jobs.insert(id.clone(), slot.clone());
@@ -433,13 +596,34 @@ impl JobRegistry {
         if let Some(n) = id.strip_prefix("job-").and_then(|n| n.parse::<u64>().ok()) {
             self.next.fetch_max(n + 1, Ordering::Relaxed);
         }
+        let terminal = state.status != JobStatus::Running;
         let slot = Arc::new(JobSlot {
+            id: id.to_string(),
             state: Mutex::new(state),
             done: Condvar::new(),
             cancel: Arc::new(AtomicBool::new(false)),
+            events: JobEvents::default(),
+            mirror: Mutex::new(vec![]),
         });
+        if terminal {
+            // no further events will ever be published; a subscriber
+            // gets a clean end instead of a 250ms-poll hang
+            slot.events.close();
+        }
         self.jobs.lock().unwrap().insert(id.to_string(), slot.clone());
         slot
+    }
+
+    /// Re-seed a restored job's event buffer and WAL mirror from the
+    /// job-scoped records the recovery fold replayed, in WAL order — so
+    /// a subscriber reconnecting across a coordinator crash-restart
+    /// resumes from its pre-crash cursor without gaps or duplicates
+    /// (the WAL's order *is* the publish order; DESIGN.md §Events).
+    pub fn seed_events(slot: &JobSlot, raw: &[Value]) {
+        for v in raw {
+            slot.wal_mirror(v);
+        }
+        slot.events.seed(raw);
     }
 
     /// Is any job still running? The durability layer defers WAL
@@ -451,6 +635,22 @@ impl JobRegistry {
             .unwrap()
             .values()
             .any(|s| s.state.lock().unwrap().status == JobStatus::Running)
+    }
+
+    /// Slots of currently running jobs, id-sorted — the forced byte-cap
+    /// compaction enumerates these to embed their WAL mirrors in the
+    /// snapshot (DESIGN.md §Durability).
+    pub fn running_slots(&self) -> Vec<Arc<JobSlot>> {
+        let mut v: Vec<Arc<JobSlot>> = self
+            .jobs
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| s.state.lock().unwrap().status == JobStatus::Running)
+            .cloned()
+            .collect();
+        v.sort_by(|a, b| a.id.cmp(&b.id));
+        v
     }
 }
 
@@ -466,6 +666,13 @@ impl PsheaObserver for SlotObserver<'_> {
         let mut s = self.slot.state.lock().unwrap();
         s.best_accuracy = s.best_accuracy.max(rec.accuracy);
         s.records.push(rec.clone());
+        drop(s);
+        // the exact record the coordinator's WAL stores (same
+        // constructor, same args): streamed events stay bit-identical
+        // to the durable log by construction (DESIGN.md §Events)
+        self.slot
+            .events
+            .publish(crate::cluster::recovery::rec_job_record(&self.slot.id, rec));
     }
 
     fn on_eliminated(&mut self, strategy: &str, round: usize, predicted: f64, observed: f64) {
@@ -485,6 +692,14 @@ impl PsheaObserver for SlotObserver<'_> {
             predicted,
             observed,
         });
+        drop(s);
+        self.slot.events.publish(crate::cluster::recovery::rec_job_elim(
+            &self.slot.id,
+            strategy,
+            round,
+            predicted,
+            observed,
+        ));
         self.metrics.counter("agent.eliminations").fetch_add(1, Ordering::Relaxed);
     }
 
@@ -496,6 +711,9 @@ impl PsheaObserver for SlotObserver<'_> {
         s.best_accuracy = s.best_accuracy.max(a_max);
         s.live = live.to_vec();
         drop(s);
+        self.slot
+            .events
+            .publish(crate::cluster::recovery::rec_job_round(&self.slot.id, round));
         self.metrics.meter("agent.labels").add(delta as u64);
         self.metrics.counter("agent.rounds").fetch_add(1, Ordering::Relaxed);
         self.metrics.counter("agent.live_arms").store(live.len() as u64, Ordering::Relaxed);
@@ -508,7 +726,11 @@ impl PsheaObserver for SlotObserver<'_> {
 pub fn fail(slot: &JobSlot, metrics: &Registry, err: String) {
     let mut s = slot.state.lock().unwrap();
     s.status = JobStatus::Failed(err);
+    let status = s.status.as_string();
+    drop(s);
     metrics.counter("agent.jobs_failed").fetch_add(1, Ordering::Relaxed);
+    slot.events
+        .publish(crate::cluster::recovery::rec_job_done(&slot.id, &status, None));
     slot.done.notify_all();
 }
 
@@ -599,7 +821,16 @@ pub fn drive_with<S: ArmSelect>(
             }
         }
     }
+    // terminal event: the same `job_done` record the coordinator then
+    // appends to the WAL — closes the subscription stream on both
+    // topologies (DESIGN.md §Events)
+    let done_rec = crate::cluster::recovery::rec_job_done(
+        &slot.id,
+        &s.status.as_string(),
+        s.trace.as_ref(),
+    );
     drop(s);
+    slot.events.publish(done_rec);
     slot.done.notify_all();
 }
 
@@ -879,9 +1110,122 @@ pub fn rpc_cancel(reg: &JobRegistry, params: &Value) -> Result<Value, String> {
     let slot = reg.get(&id)?;
     slot.cancel.store(true, Ordering::SeqCst);
     let was_running = slot.state.lock().unwrap().status == JobStatus::Running;
+    if was_running {
+        slot.events
+            .publish(crate::cluster::recovery::rec_job_cancel(&id));
+    }
     let mut m = Map::new();
     m.insert("job", Value::from(id));
     m.insert("cancelled", Value::Bool(was_running));
+    Ok(Value::Object(m))
+}
+
+/// How often the subscription pump re-checks for a dead sink while the
+/// job is quiet.
+const SUB_POLL: Duration = Duration::from_millis(250);
+
+/// Shared `job_subscribe` handler (DESIGN.md §Events): validate the
+/// cursor against the job's retained buffer, then spawn a pump thread
+/// that pushes every event after `from_seq` through the connection's
+/// [`PushSink`] as unsolicited frames under this request's id. The reply
+/// acknowledges the subscription; events follow on the same connection.
+pub fn rpc_subscribe(
+    reg: &JobRegistry,
+    params: &Value,
+    ctx: &crate::server::rpc::RequestCtx,
+) -> Result<Value, String> {
+    if !ctx.mux {
+        return Err(
+            "job_subscribe requires the multiplexed wire (negotiate mux at hello)".into(),
+        );
+    }
+    let id = str_field(params, "job")?;
+    let slot = reg.get(&id)?;
+    let from_seq = params.get("from_seq").and_then(Value::as_usize).unwrap_or(0) as u64;
+    let (first_seq, next_seq, _closed) = slot.events.cursor_info();
+    if from_seq + 1 < first_seq {
+        return Err(format!(
+            "cursor {from_seq} lags the event buffer (oldest retained seq is {first_seq}); \
+             re-fetch state via agent_status and resubscribe from the current seq"
+        ));
+    }
+    if from_seq >= next_seq {
+        return Err(format!(
+            "cursor {from_seq} is ahead of the stream (next seq is {next_seq})"
+        ));
+    }
+    let status = slot.state.lock().unwrap().status.as_string();
+    let sink = ctx.push_sink();
+    let sub_id = ctx.id;
+    let thread = format!("alaas-sub-{id}-{sub_id}");
+    std::thread::Builder::new()
+        .name(thread)
+        .spawn(move || pump_subscription(&slot, &sink, sub_id, from_seq))
+        .map_err(|e| format!("subscription thread spawn failed: {e}"))?;
+    let mut m = Map::new();
+    m.insert("job", Value::from(id));
+    m.insert("status", Value::from(status));
+    m.insert("from_seq", Value::from(from_seq as usize));
+    m.insert("next_seq", Value::from(next_seq as usize));
+    Ok(Value::Object(m))
+}
+
+/// One subscription's pump loop: replay from the cursor, then follow
+/// live publishes until the stream ends or the subscriber goes away.
+/// Every exit path is subscriber-scoped — the job never blocks on a
+/// slow or dead sink, it just stops being watched.
+fn pump_subscription(
+    slot: &JobSlot,
+    sink: &crate::server::rpc::PushSink,
+    sub_id: u64,
+    mut cursor: u64,
+) {
+    loop {
+        match slot.events.next_after(cursor, SUB_POLL) {
+            NextEvent::Event(seq, v) => {
+                if !sink.send_event(sub_id, seq, &v) {
+                    return; // connection gone
+                }
+                cursor = seq;
+            }
+            NextEvent::Lagged(first) => {
+                // slow subscriber: the buffer evicted past its cursor —
+                // disconnect it rather than back-pressure the job
+                sink.send_error(
+                    sub_id,
+                    &format!(
+                        "subscriber lagged: events before seq {first} were evicted; \
+                         resubscribe from the current state"
+                    ),
+                );
+                return;
+            }
+            NextEvent::Closed => {
+                sink.send_end(sub_id, "all events delivered");
+                return;
+            }
+            NextEvent::Timeout => {
+                if sink.is_closed() {
+                    return; // stop polling for a dead connection
+                }
+            }
+        }
+    }
+}
+
+/// Shared `job_events` diagnostic handler: the retained buffer verbatim
+/// plus cursor bounds — what the test harness dumps on failure, and a
+/// non-streaming way to inspect exactly what subscribers would see.
+pub fn rpc_events(reg: &JobRegistry, params: &Value) -> Result<Value, String> {
+    let id = str_field(params, "job")?;
+    let slot = reg.get(&id)?;
+    let (first_seq, next_seq, closed) = slot.events.cursor_info();
+    let mut m = Map::new();
+    m.insert("job", Value::from(id));
+    m.insert("first_seq", Value::from(first_seq as usize));
+    m.insert("next_seq", Value::from(next_seq as usize));
+    m.insert("closed", Value::Bool(closed));
+    m.insert("events", Value::Array(slot.events.snapshot()));
     Ok(Value::Object(m))
 }
 

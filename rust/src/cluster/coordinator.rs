@@ -281,6 +281,8 @@ impl Coordinator {
             jobs: JobRegistry::new(),
             wal,
             last_logged_view_gen: AtomicU64::new(0),
+            tenants,
+            gate,
             shutdown: AtomicBool::new(false),
         });
         let resumable = match recovered {
@@ -455,14 +457,32 @@ fn install_recovered(
     }
     let mut resumable = Vec::new();
     for j in rec.jobs {
-        if let Some(st) = j.terminal_state() {
-            state.jobs.restore(&j.id, st);
+        let slot = if let Some(st) = j.terminal_state() {
+            state.jobs.restore(&j.id, st)
         } else if j.cancelled {
             // the cancel was acknowledged before the crash but the final
             // trace never landed: honor the ack, don't re-drive
-            state.jobs.restore(&j.id, j.state_as(job::JobStatus::Cancelled));
+            state.jobs.restore(&j.id, j.state_as(job::JobStatus::Cancelled))
         } else {
-            let slot = state.jobs.restore(&j.id, j.state_as(job::JobStatus::Running));
+            state.jobs.restore(&j.id, j.state_as(job::JobStatus::Running))
+        };
+        // the WAL mirror leads with a rebuilt (deterministic) `job_start`
+        // so a forced mid-job snapshot can re-fold the whole stream; the
+        // push-event buffer seeds from the post-start records in physical
+        // WAL order, keeping reconnecting subscribers' cursors continuous
+        // across the restart (DESIGN.md §Events)
+        slot.wal_mirror(&recovery::rec_job_start(
+            &j.id,
+            &j.session,
+            &j.strategies,
+            j.config.clone(),
+            j.seed,
+            &j.pool_labels,
+            &j.test_labels,
+            j.wait_ms,
+        ));
+        job::JobRegistry::seed_events(&slot, &j.raw);
+        if j.done.is_none() && !j.cancelled {
             resumable.push((j, slot));
         }
     }
@@ -569,7 +589,7 @@ fn resume_job(
         sess: sess.clone(),
         init_emb: init_emb.clone(),
         wait_ms: job.wait_ms,
-        wal_job: state.wal.as_ref().map(|w| (w.clone(), job.id.clone())),
+        wal_job: state.wal.as_ref().map(|w| (w.clone(), slot.clone())),
     };
     // re-fetch each live arm's labeled-row embeddings against the
     // freshly homed layout, in original pick order
@@ -603,7 +623,9 @@ fn resume_job(
     // durable resume point: on a second crash, replay truncates the
     // job's stream here instead of mixing two half-run rounds
     if let Some(w) = &state.wal {
-        w.append(&recovery::rec_job_resume(&job.id, job.completed_rounds))?;
+        let resume = recovery::rec_job_resume(&job.id, job.completed_rounds);
+        w.append_with(&resume, || slot.wal_mirror(&resume))?;
+        slot.events.publish(resume);
     }
     state
         .deps
@@ -627,7 +649,7 @@ fn resume_job(
 /// compaction, since this job no longer blocks one.
 fn drive_and_log_done(
     state: &Arc<CoordState>,
-    slot: &job::JobSlot,
+    slot: &Arc<job::JobSlot>,
     task: AgentTask<ClusterArmSelect>,
     strategies: &[String],
     cfg: &PsheaConfig,
@@ -636,7 +658,8 @@ fn drive_and_log_done(
 ) {
     match &state.wal {
         Some(w) => {
-            let mut obs = WalObserver { wal: w.clone(), job: job_id.to_string() };
+            let mut obs =
+                WalObserver { wal: w.clone(), job: job_id.to_string(), slot: slot.clone() };
             job::drive_with(
                 slot,
                 task,
@@ -650,7 +673,8 @@ fn drive_and_log_done(
                 let st = slot.state.lock().unwrap();
                 (st.status.as_string(), st.trace.clone())
             };
-            w.append_best_effort(&recovery::rec_job_done(job_id, &status, trace.as_ref()));
+            let done = recovery::rec_job_done(job_id, &status, trace.as_ref());
+            w.append_best_effort_with(&done, || slot.wal_mirror(&done));
             try_compact(state);
         }
         None => job::drive(slot, task, strategies, cfg, &state.deps.metrics),
@@ -663,39 +687,81 @@ fn fail_logged(state: &CoordState, slot: &job::JobSlot, job_id: &str, err: Strin
     job::fail(slot, &state.deps.metrics, err);
     if let Some(w) = &state.wal {
         let status = slot.state.lock().unwrap().status.as_string();
-        w.append_best_effort(&recovery::rec_job_done(job_id, &status, None));
+        let done = recovery::rec_job_done(job_id, &status, None);
+        w.append_best_effort_with(&done, || slot.wal_mirror(&done));
     }
 }
 
-/// Opportunistic WAL compaction. Gated on no running jobs: an in-flight
-/// job's stream (`job_start` .. `job_done`) cannot be represented in a
-/// snapshot, so compaction only runs between jobs — the closure
-/// re-checks after the rotation and aborts (harmlessly) if a job
-/// started in the window, because that job's `job_start` necessarily
-/// landed in the new, uncovered log.
+/// Opportunistic WAL compaction. Cadence compaction is gated on no
+/// running jobs: an in-flight job's stream would be cut in half by the
+/// rotation — the closure re-checks after the rotation and aborts
+/// (harmlessly) if a job started in the window, because that job's
+/// `job_start` necessarily landed in the new, uncovered log.
+///
+/// The `[durability] max_wal_bytes` byte cap overrides the gate: when
+/// uncovered log bytes reach it (a multi-hour job would otherwise grow
+/// the WAL without bound), compaction is *forced* and the snapshot
+/// embeds every running job's mirrored record stream, captured
+/// atomically with the rotation — each record replays from exactly one
+/// of snapshot or post-rotation log.
 fn try_compact(state: &Arc<CoordState>) {
     let Some(wal) = &state.wal else { return };
-    if state.jobs.any_running() {
+    let force = wal.over_byte_cap();
+    if !force && state.jobs.any_running() {
         return;
     }
     let st = state.clone();
-    let result = wal.compact_if_due(move || {
-        if st.jobs.any_running() {
-            return None;
+    let cap = state.clone();
+    let result = wal.compact_with(
+        force,
+        move || if force { capture_job_streams(&cap) } else { Vec::new() },
+        move |streams| {
+            if !force && st.jobs.any_running() {
+                return None;
+            }
+            Some(snapshot_records(&st, streams))
+        },
+    );
+    match result {
+        Ok(true) if force => {
+            crate::log_info!(
+                "cluster",
+                "forced wal compaction (max_wal_bytes cap); {} byte(s) live after",
+                wal.wal_bytes()
+            );
         }
-        Some(snapshot_records(&st))
-    });
-    if let Err(e) = result {
-        crate::log_warn!("cluster", "wal compaction failed: {e}");
+        Err(e) => crate::log_warn!("cluster", "wal compaction failed: {e}"),
+        _ => {}
     }
+}
+
+/// Capture every running job's mirrored WAL stream (`job_start` ..
+/// latest record, verbatim). Runs inside [`SharedLog::compact_with`]'s
+/// rotation critical section: every job-scoped append goes through
+/// `append_with`, which pushes the mirror under the same lock, so each
+/// stream splits exactly at the rotation point. Slots whose `job_start`
+/// has not reached the log yet have an empty mirror and are skipped —
+/// their whole stream lands in the post-rotation log.
+fn capture_job_streams(state: &CoordState) -> Vec<Vec<Value>> {
+    state
+        .jobs
+        .running_slots()
+        .iter()
+        .map(|s| s.mirror.lock().unwrap().clone())
+        .filter(|m| !m.is_empty())
+        .collect()
 }
 
 /// The compaction snapshot: a *compacted log* — `{"records": [...]}` in
 /// the exact record vocabulary of the live WAL, replayed through the
 /// same fold on open. Finished jobs are dropped here, mirroring the
-/// in-process finished-job eviction; only sessions and the view
-/// high-water survive compaction.
-fn snapshot_records(state: &CoordState) -> Value {
+/// in-process finished-job eviction; only sessions, tenants and the
+/// view high-water survive a cadence compaction. A *forced* (byte-cap)
+/// compaction additionally passes `job_streams` — running jobs'
+/// mirrored record streams captured at the rotation point — so the
+/// fold can reconstruct the in-flight jobs a cadence snapshot would
+/// never contain.
+fn snapshot_records(state: &CoordState, job_streams: Vec<Vec<Value>>) -> Value {
     let mut records = Vec::new();
     if state.config.cluster.membership.enabled {
         let generation = state.membership.lock().unwrap().generation();
@@ -725,6 +791,9 @@ fn snapshot_records(state: &CoordState) -> Value {
         records.push(recovery::rec_session(&name, &s.manifest, s.init_labels.as_deref()));
         records.push(recovery::rec_layout(&name, s.epoch, s.view_gen, s.next_sid));
     }
+    for stream in job_streams {
+        records.extend(stream);
+    }
     crate::json::value::obj([("records", Value::Array(records))])
 }
 
@@ -748,14 +817,14 @@ fn accept_loop(listener: TcpListener, state: Arc<CoordState>) {
 }
 
 fn handle_conn(mut stream: TcpStream, state: Arc<CoordState>) {
-    rpc::serve_conn(
+    rpc::serve_conn_ext(
         &mut stream,
         "cluster",
         &state.shutdown,
         &state.deps.metrics,
         Some(&state.tracer),
         state.config.server.wire,
-        |method, params, _mode| dispatch(&state, method, params),
+        |method, params, _mode, ctx| dispatch(&state, method, params, ctx),
     );
 }
 
@@ -763,6 +832,7 @@ fn dispatch(
     state: &Arc<CoordState>,
     method: &str,
     params: &Body,
+    ctx: &rpc::RequestCtx,
 ) -> Result<Payload, String> {
     match method {
         "hello" => Ok(Payload::json(wire::hello_reply(
@@ -804,13 +874,24 @@ fn dispatch(
         "agent_start" => agent_start(state, params).map(Payload::json),
         "agent_status" => job::rpc_status(&state.jobs, &params.value).map(Payload::json),
         "agent_result" => job::rpc_result(&state.jobs, &params.value).map(Payload::json),
+        // push event stream (DESIGN.md §Events): unsolicited frames on
+        // this connection from the subscribe ack onward
+        "job_subscribe" => {
+            job::rpc_subscribe(&state.jobs, &params.value, ctx).map(Payload::json)
+        }
+        "job_events" => job::rpc_events(&state.jobs, &params.value).map(Payload::json),
         "agent_cancel" => {
             let reply = job::rpc_cancel(&state.jobs, &params.value).map(Payload::json)?;
             // durable after the fact: a crash between ack and the
             // driver loop noticing still replays as cancelled
             if let Some(wal) = &state.wal {
                 if let Ok(id) = str_param(&params.value, "job") {
-                    wal.append_best_effort(&recovery::rec_job_cancel(&id));
+                    let cancel = recovery::rec_job_cancel(&id);
+                    match state.jobs.get(&id) {
+                        Ok(slot) => wal
+                            .append_best_effort_with(&cancel, || slot.wal_mirror(&cancel)),
+                        Err(_) => wal.append_best_effort(&cancel),
+                    }
                 }
             }
             Ok(reply)
@@ -2952,20 +3033,28 @@ struct ClusterArmSelect {
     /// Init-split embeddings (labeled-context base for the refine merge).
     init_emb: Mat,
     wait_ms: u64,
-    /// Durability plane for arm-round spend records: `(log, job id)` on
-    /// the agent path, `None` when durability is disabled.
-    wal_job: Option<(Arc<SharedLog>, String)>,
+    /// Durability plane for arm-round spend records: `(log, job slot)`
+    /// on the agent path, `None` when durability is disabled. The slot
+    /// carries the job id plus the WAL mirror and push-event buffer the
+    /// spend record also feeds.
+    wal_job: Option<(Arc<SharedLog>, Arc<job::JobSlot>)>,
 }
 
 impl ClusterArmSelect {
     /// Append the arm-round spend record — one per `select_arm` call,
     /// empty rounds included, because replay counts these to find an
     /// arm's resume point. Best-effort: a sealed or failing WAL never
-    /// blocks the round.
+    /// blocks the round. The record is mirrored, published to
+    /// subscribers, and — this being the only per-round durability hook
+    /// — used as the byte-cap compaction trip point, so a multi-hour
+    /// job forces its own snapshots instead of growing the WAL forever.
     fn log_spend(&self, strategy: &str, picked: &[Picked]) {
-        if let Some((wal, job)) = &self.wal_job {
+        if let Some((wal, slot)) = &self.wal_job {
             let idxs: Vec<usize> = picked.iter().map(|p| p.0).collect();
-            wal.append_best_effort(&recovery::rec_job_spend(job, strategy, &idxs));
+            let rec = recovery::rec_job_spend(&slot.id, strategy, &idxs);
+            wal.append_best_effort_with(&rec, || slot.wal_mirror(&rec));
+            slot.events.publish(rec);
+            try_compact(&self.state);
         }
     }
 
@@ -3321,7 +3410,7 @@ fn agent_start(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> 
     // before the reply carries its id) — a crash right after the ack
     // must find it resumable.
     if let Some(wal) = &state.wal {
-        if let Err(e) = wal.append(&recovery::rec_job_start(
+        let start = recovery::rec_job_start(
             &job_id,
             &session_id,
             &p.strategies,
@@ -3330,7 +3419,11 @@ fn agent_start(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> 
             &p.pool_labels,
             &p.test_labels,
             p.wait_ms,
-        )) {
+        );
+        // the mirror leads with `job_start` so a forced mid-job snapshot
+        // embeds a foldable stream (push under the log lock — see
+        // `SharedLog::append_with`)
+        if let Err(e) = wal.append_with(&start, || job_slot.wal_mirror(&start)) {
             state.jobs.fail_orphan(&job_id, &state.deps.metrics, &e);
             return Err(e);
         }
@@ -3361,7 +3454,7 @@ fn agent_start(state: &Arc<CoordState>, params: &Body) -> Result<Value, String> 
                 sess,
                 init_emb: init_emb.clone(),
                 wait_ms: p.wait_ms,
-                wal_job: bg.wal.as_ref().map(|w| (w.clone(), jid.clone())),
+                wal_job: bg.wal.as_ref().map(|w| (w.clone(), job_slot.clone())),
             };
             let task = AgentTask::new(
                 sel,

@@ -263,6 +263,12 @@ pub(crate) struct RecoveredJob {
     pub cancelled: bool,
     /// `(status string, trace value)` once the job finished pre-crash.
     pub done: Option<(String, Option<Value>)>,
+    /// Every job-scoped record after `job_start`, verbatim and in
+    /// physical replay order — **never** truncated by resume logic,
+    /// because it re-seeds the job's push-event buffer and WAL mirror:
+    /// a reconnecting subscriber's sequence numbers must keep counting
+    /// exactly what the durable log holds (DESIGN.md §Events).
+    pub raw: Vec<Value>,
 }
 
 impl RecoveredJob {
@@ -538,6 +544,7 @@ fn apply(out: &mut Recovered, v: &Value) -> Result<(), String> {
                 spends: BTreeMap::new(),
                 cancelled: false,
                 done: None,
+                raw: Vec::new(),
             };
             match out.jobs.iter_mut().find(|e| e.id == j.id) {
                 Some(e) => *e = j,
@@ -553,12 +560,16 @@ fn apply(out: &mut Recovered, v: &Value) -> Result<(), String> {
                 .iter()
                 .map(|x| x.as_usize().ok_or("bad picked index".to_string()))
                 .collect::<Result<Vec<_>, _>>()?;
-            job_mut(out, v)?.spends.entry(strategy).or_default().push(picked);
+            let j = job_mut(out, v)?;
+            j.raw.push(v.clone());
+            j.spends.entry(strategy).or_default().push(picked);
         }
         "job_record" => {
             let rec =
                 job::record_from_value(v.get("record").ok_or("job_record missing record")?)?;
-            job_mut(out, v)?.records.push(rec);
+            let j = job_mut(out, v)?;
+            j.raw.push(v.clone());
+            j.records.push(rec);
         }
         "job_elim" => {
             let arm = EliminatedArm {
@@ -568,6 +579,7 @@ fn apply(out: &mut Recovered, v: &Value) -> Result<(), String> {
                 observed: v.get("observed").and_then(Value::as_f64).unwrap_or(0.0),
             };
             let j = job_mut(out, v)?;
+            j.raw.push(v.clone());
             // the live `job_record` append predates the end-of-round
             // elimination verdict; stamp it in so the kept prefix carries
             // the flag exactly like an in-memory trace would
@@ -584,20 +596,29 @@ fn apply(out: &mut Recovered, v: &Value) -> Result<(), String> {
         "job_round" => {
             let round = usize_of(v, "round")?;
             let j = job_mut(out, v)?;
+            j.raw.push(v.clone());
             j.completed_rounds = j.completed_rounds.max(round + 1);
         }
         "job_resume" => {
             let from = usize_of(v, "from_round")?;
-            job_mut(out, v)?.truncate_to(from);
+            let j = job_mut(out, v)?;
+            j.raw.push(v.clone());
+            j.truncate_to(from);
         }
-        "job_cancel" => job_mut(out, v)?.cancelled = true,
+        "job_cancel" => {
+            let j = job_mut(out, v)?;
+            j.raw.push(v.clone());
+            j.cancelled = true;
+        }
         "job_done" => {
             let status = str_of(v, "status")?;
             let trace = match v.get("trace") {
                 None | Some(Value::Null) => None,
                 Some(t) => Some(t.clone()),
             };
-            job_mut(out, v)?.done = Some((status, trace));
+            let j = job_mut(out, v)?;
+            j.raw.push(v.clone());
+            j.done = Some((status, trace));
         }
         other => return Err(format!("unknown record type '{other}'")),
     }
@@ -611,23 +632,35 @@ fn apply(out: &mut Recovered, v: &Value) -> Result<(), String> {
 /// WAL — teed *before* the slot observer by `job::drive_with`, so an
 /// event is durable before it is observable. Appends are best-effort:
 /// a full disk degrades durability (logged loudly), never the job.
+/// Each append is also mirrored into the job slot's in-memory record
+/// list, the raw material a forced mid-job snapshot embeds so a
+/// `max_wal_bytes` compaction cannot orphan a running job.
 pub(crate) struct WalObserver {
     pub wal: Arc<SharedLog>,
     pub job: String,
+    pub slot: Arc<job::JobSlot>,
+}
+
+impl WalObserver {
+    fn append(&self, rec: Value) {
+        // mirror push under the log lock: the forced byte-cap compaction
+        // captures mirrors atomically with its rotation, so the record
+        // must land on the same side of the rotation point in both
+        self.wal.append_best_effort_with(&rec, || self.slot.wal_mirror(&rec));
+    }
 }
 
 impl PsheaObserver for WalObserver {
     fn on_record(&mut self, rec: &RoundRecord) {
-        self.wal.append_best_effort(&rec_job_record(&self.job, rec));
+        self.append(rec_job_record(&self.job, rec));
     }
 
     fn on_eliminated(&mut self, strategy: &str, round: usize, predicted: f64, observed: f64) {
-        self.wal
-            .append_best_effort(&rec_job_elim(&self.job, strategy, round, predicted, observed));
+        self.append(rec_job_elim(&self.job, strategy, round, predicted, observed));
     }
 
     fn on_round(&mut self, round: usize, _live: &[String], _total: usize, _a_max: f64) {
-        self.wal.append_best_effort(&rec_job_round(&self.job, round));
+        self.append(rec_job_round(&self.job, round));
     }
 }
 

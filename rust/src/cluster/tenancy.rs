@@ -401,8 +401,11 @@ impl AdmissionGate {
                 // over capacity: shed per policy
                 let victim = match self.policy {
                     ShedPolicy::RejectNew => ticket,
-                    // evict the globally-oldest waiting ticket; the
-                    // arrival keeps its place in the queue
+                    // evict the oldest waiter of the *most-backlogged*
+                    // session; the arrival keeps its place in the queue.
+                    // (Evicting the globally-oldest ticket let one heavy
+                    // tenant starve light ones of queue slots: a light
+                    // tenant's lone early waiter was always the oldest.)
                     ShedPolicy::DropOldest => oldest_ticket(&st).unwrap_or(ticket),
                 };
                 let retry = self.retry_after_ms(&st);
@@ -545,8 +548,17 @@ impl AdmissionGate {
     }
 }
 
+/// `drop_oldest` victim: the oldest (front) waiter of the session with
+/// the deepest backlog. Ties on depth break toward the lexicographically
+/// smaller session name so shedding is deterministic under test.
 fn oldest_ticket(st: &GateState) -> Option<u64> {
-    st.queues.values().filter_map(|q| q.front().copied()).min()
+    st.queues
+        .iter()
+        .filter(|(_, q)| !q.is_empty())
+        .max_by(|(a_s, a_q), (b_s, b_q)| {
+            a_q.len().cmp(&b_q.len()).then_with(|| b_s.cmp(a_s))
+        })
+        .and_then(|(_, q)| q.front().copied())
 }
 
 /// Remove a waiting ticket from whichever queue holds it; returns the
@@ -791,6 +803,47 @@ mod tests {
         let p = newest.join().unwrap().unwrap();
         drop(p);
         assert_eq!(g.stats().shed_total, 1);
+    }
+
+    #[test]
+    fn drop_oldest_targets_most_backlogged_session_not_global_oldest() {
+        // A heavy tenant piles up a deep backlog behind a light tenant's
+        // single, globally-oldest waiter. On overflow, the victim must
+        // come from the heavy tenant's queue — evicting the globally
+        // oldest ticket (the old behavior) let the heavy tenant starve
+        // the light one out of its lone queue slot.
+        let g = gate(4, 1, ShedPolicy::DropOldest);
+        let held = g.admit("heavy", 1).unwrap(); // occupies the run slot
+        // the light tenant parks first: its waiter is globally oldest
+        let gl = g.clone();
+        let light = std::thread::spawn(move || gl.admit("light", 1).map(drop).is_ok());
+        wait_queued(&g, 1);
+        let mut heavies = Vec::new();
+        for i in 0..3 {
+            wait_queued(&g, 1 + i); // serialize arrivals: heavy's queue is FIFO
+            let gh = g.clone();
+            heavies.push(std::thread::spawn(move || gh.admit("heavy", 1).map(drop).is_ok()));
+        }
+        wait_queued(&g, 4); // queue at capacity
+        // overflow arrival (kept): someone else must be evicted
+        let ga = g.clone();
+        let arrival = std::thread::spawn(move || ga.admit("light", 1).map(drop).is_ok());
+        // exactly one heavy waiter is shed; everyone else drains through
+        // the single slot once the holder releases it
+        drop(held);
+        assert!(light.join().unwrap(), "light tenant's oldest waiter must survive");
+        assert!(arrival.join().unwrap(), "the arrival keeps its place");
+        let survived =
+            heavies.into_iter().map(|h| h.join().unwrap()).filter(|&ok| ok).count();
+        assert_eq!(survived, 2, "exactly one heavy waiter takes the eviction");
+        let st = g.stats();
+        assert_eq!(st.shed_total, 1);
+        assert_eq!(
+            st.per_session.get("heavy").map(|&(_, shed, _)| shed).unwrap_or(0),
+            1,
+            "the shed must be booked against the heavy session"
+        );
+        assert_eq!(st.per_session.get("light").map(|&(_, shed, _)| shed).unwrap_or(0), 0);
     }
 
     #[test]

@@ -399,9 +399,11 @@ pub struct AlaasConfig {
     pub server: ServerConfig,
     pub observability: ObservabilityConfig,
     /// `durability.*` — coordinator WAL + snapshot crash safety
-    /// (`enabled`, `data_dir`, `fsync`, `snapshot_every`; DESIGN.md
-    /// §Durability). Disabled by default: state stays in RAM exactly as
-    /// before.
+    /// (`enabled`, `data_dir`, `fsync`, `snapshot_every`,
+    /// `max_wal_bytes`; DESIGN.md §Durability). Disabled by default:
+    /// state stays in RAM exactly as before. `max_wal_bytes` (0 = off)
+    /// forces a rotate+snapshot even while jobs run, so a multi-hour job
+    /// cannot grow the WAL without bound.
     pub durability: DurabilityConfig,
     /// Directory holding `manifest.json` + `*.hlo.txt` from `make artifacts`.
     pub artifacts_dir: String,
@@ -703,6 +705,9 @@ impl AlaasConfig {
             if let Some(x) = s.get("snapshot_every") {
                 c.snapshot_every = req_usize(x, "durability.snapshot_every")?;
             }
+            if let Some(x) = s.get("max_wal_bytes") {
+                c.max_wal_bytes = req_usize(x, "durability.max_wal_bytes")? as u64;
+            }
         }
 
         if let Some(s) = v.get("observability") {
@@ -826,6 +831,11 @@ impl AlaasConfig {
         let d = &self.durability;
         if d.snapshot_every == 0 {
             return Err(cerr("durability.snapshot_every", "must be >= 1"));
+        }
+        // a cap smaller than one frame would force a compaction on every
+        // append; require something sane or 0 (disabled)
+        if d.max_wal_bytes != 0 && d.max_wal_bytes < 1024 {
+            return Err(cerr("durability.max_wal_bytes", "must be 0 (disabled) or >= 1024"));
         }
         if d.enabled && d.data_dir.is_empty() {
             return Err(cerr("durability.data_dir", "must be non-empty when durability is enabled"));
@@ -1125,6 +1135,7 @@ durability:
   data_dir: "/var/lib/alaas"
   fsync: never
   snapshot_every: 64
+  max_wal_bytes: 1048576
 "#,
         )
         .unwrap();
@@ -1133,11 +1144,13 @@ durability:
         assert_eq!(d.data_dir, "/var/lib/alaas");
         assert_eq!(d.fsync, FsyncPolicy::Never);
         assert_eq!(d.snapshot_every, 64);
-        // defaults: off, always-fsync, state stays in RAM
+        assert_eq!(d.max_wal_bytes, 1_048_576);
+        // defaults: off, always-fsync, no byte cap, state stays in RAM
         let d = AlaasConfig::default().durability;
         assert!(!d.enabled);
         assert_eq!(d.fsync, FsyncPolicy::Always);
         assert_eq!(d.snapshot_every, 256);
+        assert_eq!(d.max_wal_bytes, 0);
     }
 
     #[test]
@@ -1147,6 +1160,11 @@ durability:
         let e =
             AlaasConfig::from_yaml_str("durability:\n  snapshot_every: 0\n").unwrap_err();
         assert_eq!(e.field, "durability.snapshot_every");
+        let e =
+            AlaasConfig::from_yaml_str("durability:\n  max_wal_bytes: 100\n").unwrap_err();
+        assert_eq!(e.field, "durability.max_wal_bytes");
+        let cfg = AlaasConfig::from_yaml_str("durability:\n  max_wal_bytes: 0\n").unwrap();
+        assert_eq!(cfg.durability.max_wal_bytes, 0);
         let e = AlaasConfig::from_yaml_str(
             "durability:\n  enabled: true\n  data_dir: \"\"\n",
         )

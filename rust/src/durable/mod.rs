@@ -97,6 +97,12 @@ pub struct DurabilityConfig {
     /// Compaction cadence: attempt a snapshot after this many appends
     /// since the last one.
     pub snapshot_every: usize,
+    /// Hard ceiling on total on-disk WAL bytes (uncovered log files).
+    /// `0` disables the cap. When live bytes reach it the coordinator
+    /// forces a rotate+snapshot even while jobs are running — in-flight
+    /// jobs are fully reconstructible from the fold, so the cadence-based
+    /// quiescence gate does not apply (DESIGN.md §Durability).
+    pub max_wal_bytes: u64,
 }
 
 impl Default for DurabilityConfig {
@@ -106,6 +112,7 @@ impl Default for DurabilityConfig {
             data_dir: "alaas-data".into(),
             fsync: FsyncPolicy::Always,
             snapshot_every: 256,
+            max_wal_bytes: 0,
         }
     }
 }
@@ -199,6 +206,11 @@ pub struct DurableLog {
     fsync: FsyncPolicy,
     snapshot_every: usize,
     appends_since_compact: usize,
+    max_wal_bytes: u64,
+    /// Bytes across every uncovered `wal.<seq>.log` on disk (the quantity
+    /// `max_wal_bytes` caps). Maintained incrementally on append and
+    /// recomputed from the directory after each snapshot install.
+    live_bytes: u64,
     metrics: Option<Arc<Registry>>,
 }
 
@@ -241,12 +253,14 @@ impl DurableLog {
 
         let mut records = Vec::new();
         let mut torn_bytes = 0u64;
+        let mut live_bytes = 0u64;
         for &s in &seqs {
             let path = wal_path(&dir, s);
             let mut buf = Vec::new();
             File::open(&path)?.read_to_end(&mut buf)?;
             let (recs, valid) = decode_frames(&buf);
             torn_bytes += (buf.len() - valid) as u64;
+            live_bytes += valid as u64;
             if valid < buf.len() {
                 // truncate back to the valid prefix so future appends
                 // never interleave with garbage
@@ -276,6 +290,8 @@ impl DurableLog {
                 fsync: cfg.fsync,
                 snapshot_every: cfg.snapshot_every.max(1),
                 appends_since_compact: 0,
+                max_wal_bytes: cfg.max_wal_bytes,
+                live_bytes,
                 metrics,
             },
             Replay { snapshot, records, torn_bytes },
@@ -295,6 +311,7 @@ impl DurableLog {
             }
         }
         self.appends_since_compact += 1;
+        self.live_bytes += buf.len() as u64;
         if let Some(m) = &self.metrics {
             m.counter("wal.appends").fetch_add(1, Ordering::Relaxed);
             m.counter("wal.bytes").fetch_add(buf.len() as u64, Ordering::Relaxed);
@@ -306,6 +323,17 @@ impl DurableLog {
     /// configured cadence.)
     pub fn compact_due(&self) -> bool {
         self.appends_since_compact >= self.snapshot_every
+    }
+
+    /// Have uncovered log files reached `[durability] max_wal_bytes`?
+    /// Always false when the cap is disabled (`0`).
+    pub fn over_byte_cap(&self) -> bool {
+        self.max_wal_bytes > 0 && self.live_bytes >= self.max_wal_bytes
+    }
+
+    /// Total bytes across uncovered `wal.<seq>.log` files.
+    pub fn wal_bytes(&self) -> u64 {
+        self.live_bytes
     }
 
     /// Step 1 of compaction: rotate appends to a fresh `wal.<n+1>.log`.
@@ -348,6 +376,16 @@ impl DurableLog {
         {
             let _ = fs::remove_file(wal_path(&self.dir, s));
         }
+        // recompute from the directory rather than trusting the running
+        // tally: this also settles files left by an earlier aborted
+        // compaction that are only now covered
+        let mut live = 0u64;
+        for e in fs::read_dir(&self.dir)?.filter_map(|e| e.ok()) {
+            if wal_seq(&e.file_name().to_string_lossy()).is_some() {
+                live += e.metadata().map(|m| m.len()).unwrap_or(0);
+            }
+        }
+        self.live_bytes = live;
         if let Some(m) = &self.metrics {
             m.counter("wal.compactions").fetch_add(1, Ordering::Relaxed);
         }
@@ -394,6 +432,38 @@ impl SharedLog {
         }
     }
 
+    /// Append plus a caller-side bookkeeping action (`mirror`) run while
+    /// the log lock is still held. The pairing matters for streams that a
+    /// *forced* compaction snapshots from an in-memory mirror
+    /// ([`SharedLog::compact_with`] captures those mirrors in the same
+    /// critical section as the rotation): holding the lock across both
+    /// guarantees every record lands on exactly one side of the rotation
+    /// point in both the log and the mirror — nothing is ever snapshotted
+    /// *and* replayed from the post-rotation log, or dropped by both.
+    /// `mirror` runs only if the append succeeded (and never on a sealed
+    /// log — a "dead" writer's mirrors no longer matter).
+    pub fn append_with(&self, v: &Value, mirror: impl FnOnce()) -> Result<(), String> {
+        if self.sealed.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let mut log = self.inner.lock().unwrap();
+        match log.append(v) {
+            Ok(()) => {
+                mirror();
+                Ok(())
+            }
+            Err(e) => Err(format!("durability log append failed: {e}")),
+        }
+    }
+
+    /// [`SharedLog::append_with`] for records whose loss only degrades
+    /// recovery detail: failure is logged, never surfaced.
+    pub fn append_best_effort_with(&self, v: &Value, mirror: impl FnOnce()) {
+        if let Err(e) = self.append_with(v, mirror) {
+            crate::log_warn!("durable", "{e}");
+        }
+    }
+
     /// Crash simulation: drop every future append. Irreversible for this
     /// handle.
     pub fn seal(&self) {
@@ -417,17 +487,49 @@ impl SharedLog {
         &self,
         state: impl FnOnce() -> Option<Value>,
     ) -> Result<bool, String> {
+        self.compact(false, state)
+    }
+
+    /// [`SharedLog::compact_if_due`] with an override: `force` skips the
+    /// cadence due-check and rotates unconditionally. The byte-cap path
+    /// (`[durability] max_wal_bytes`) uses this when a long-running job
+    /// has pinned cadence compaction off but the uncovered log bytes hit
+    /// the cap — the state builder then snapshots *with* in-flight job
+    /// progress folded in.
+    pub fn compact(
+        &self,
+        force: bool,
+        state: impl FnOnce() -> Option<Value>,
+    ) -> Result<bool, String> {
+        self.compact_with(force, || (), |()| state())
+    }
+
+    /// [`SharedLog::compact`] with a capture hook: `at_rotate` runs in
+    /// the same critical section as the rotation itself, so anything it
+    /// reads is split *exactly* at the rotation point with respect to
+    /// every [`SharedLog::append_with`] writer. The forced byte-cap path
+    /// uses this to capture running jobs' record mirrors: captured
+    /// records replay from the snapshot, later ones from the fresh log —
+    /// never both, never neither. `at_rotate` must not append to this
+    /// log or take locks that append paths hold (deadlock).
+    pub fn compact_with<T>(
+        &self,
+        force: bool,
+        at_rotate: impl FnOnce() -> T,
+        state: impl FnOnce(T) -> Option<Value>,
+    ) -> Result<bool, String> {
         if self.sealed.load(Ordering::SeqCst) {
             return Ok(false);
         }
-        let covered = {
+        let (covered, captured) = {
             let mut log = self.inner.lock().unwrap();
-            if !log.compact_due() {
+            if !force && !log.compact_due() {
                 return Ok(false);
             }
-            log.rotate().map_err(|e| format!("wal rotate failed: {e}"))?
+            let covered = log.rotate().map_err(|e| format!("wal rotate failed: {e}"))?;
+            (covered, at_rotate())
         };
-        let Some(value) = state() else {
+        let Some(value) = state(captured) else {
             return Ok(false);
         };
         self.inner
@@ -436,6 +538,18 @@ impl SharedLog {
             .install_snapshot(covered, &value)
             .map_err(|e| format!("snapshot install failed: {e}"))?;
         Ok(true)
+    }
+
+    /// Whether uncovered log bytes have reached `[durability]
+    /// max_wal_bytes` (always false when the cap is disabled or the log
+    /// is sealed).
+    pub fn over_byte_cap(&self) -> bool {
+        !self.sealed.load(Ordering::SeqCst) && self.inner.lock().unwrap().over_byte_cap()
+    }
+
+    /// Total bytes across uncovered `wal.<seq>.log` files.
+    pub fn wal_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().wal_bytes()
     }
 }
 
@@ -462,6 +576,7 @@ mod tests {
             data_dir: dir.to_string_lossy().into_owned(),
             fsync: FsyncPolicy::Always,
             snapshot_every: 1000,
+            max_wal_bytes: 0,
         }
     }
 
@@ -688,6 +803,60 @@ mod tests {
             replay.records.iter().any(|r| r.get("i").and_then(Value::as_usize) == Some(1)),
             "post-snapshot record must still replay"
         );
+    }
+
+    #[test]
+    fn byte_cap_bounds_wal_during_endless_job() {
+        // Shape of the reported bug: a multi-hour PSHEA job keeps the
+        // cadence-based compaction gated off (here: cadence effectively
+        // infinite), so the WAL used to grow without bound. With
+        // max_wal_bytes set, the coordinator's forced compact() keeps
+        // on-disk uncovered bytes at ~the cap no matter how many records
+        // the job appends.
+        let dir = tmp_dir("byte-cap");
+        let mut cfg = cfg_for(&dir);
+        cfg.snapshot_every = 1_000_000; // cadence never fires mid-job
+        cfg.max_wal_bytes = 4096;
+        let (log, _) = DurableLog::open(&cfg, None).unwrap();
+        let shared = SharedLog::new(log);
+        let disk_bytes = || -> u64 {
+            fs::read_dir(&dir)
+                .unwrap()
+                .filter_map(|e| e.ok())
+                .filter(|e| wal_seq(&e.file_name().to_string_lossy()).is_some())
+                .filter_map(|e| e.metadata().ok())
+                .map(|m| m.len())
+                .sum()
+        };
+        let mut max_disk = 0u64;
+        let mut forced = 0usize;
+        for i in 0..2000 {
+            shared.append(&rec(i)).unwrap();
+            if shared.over_byte_cap() {
+                // what the coordinator does when the cap trips with a
+                // job still running: force rotate+snapshot, folding the
+                // in-flight progress into the state value
+                assert!(shared
+                    .compact(true, || Some(obj([("upto", Value::from(i))])))
+                    .unwrap());
+                forced += 1;
+            }
+            max_disk = max_disk.max(disk_bytes());
+        }
+        assert!(forced > 5, "cap never tripped over 2000 appends");
+        // bounded: the cap plus at most one record frame of overshoot
+        assert!(
+            max_disk < 4096 + 512,
+            "wal disk usage {max_disk} exceeded max_wal_bytes despite forced compaction"
+        );
+        // cadence-based compaction alone is still off (job running shape)
+        assert!(!shared.compact_if_due(|| Some(Value::Null)).unwrap());
+        // the accounting survives a reopen
+        drop(shared);
+        let (log, replay) = DurableLog::open(&cfg, None).unwrap();
+        assert!(replay.snapshot.is_some());
+        assert_eq!(log.wal_bytes(), disk_bytes());
+        assert!(!log.over_byte_cap());
     }
 
     #[test]

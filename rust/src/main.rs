@@ -41,7 +41,7 @@ const SCHEMA: Schema = Schema {
         "backend", "replicas", "rounds", "role", "coordinator", "discover",
         "remote", "id", "limit", "data-dir", "weight", "max-workers",
     ],
-    bool_flags: &["verbose", "quiet"],
+    bool_flags: &["verbose", "quiet", "follow"],
 };
 
 fn main() {
@@ -98,6 +98,8 @@ fn usage() -> &'static str {
      agent      --dataset <name> [--target A --max-budget N --round-budget N --backend host|pjrt --rounds N]\n\
      \u{20}          [--remote <host:port>] = run PSHEA as a server-side job (agent_start RPC;\n\
      \u{20}          on a coordinator the arms fan out across worker shards)\n\
+     \u{20}          [--follow] = with --remote: print every pushed job event verbatim\n\
+     \u{20}          (seq + JSON line, the job_subscribe stream; DESIGN.md \u{a7}Events)\n\
      trace      --addr <host:port> [--id <hex-trace-id>] [--limit N]\n\
      \u{20}          without --id: list recent trace roots + the slow-query log;\n\
      \u{20}          with --id: render that trace's span tree with per-stage self-times\n\
@@ -456,8 +458,12 @@ fn print_trace(trace: &PsheaTrace) {
 }
 
 /// `agent --remote <addr>`: run PSHEA as a server-side job — push a local
-/// dataset, `agent_start`, poll `agent_status`, print the final trace.
-/// Against a coordinator the candidate arms evaluate across the cluster.
+/// dataset, `agent_start`, follow the job's push-event stream, print the
+/// final trace. Against a coordinator the candidate arms evaluate across
+/// the cluster. `--follow` prints every pushed event verbatim (one JSON
+/// line per event) instead of the per-round summary; either way the
+/// progress display is driven entirely by `job_subscribe` pushes — the
+/// old `agent_status` sleep-poll loop is gone.
 fn cmd_agent_remote(args: &Args, addr: &str) -> anyhow::Result<()> {
     let name = args.get_or("dataset", "cifarsim");
     let seed = args.get_usize("seed", 42)? as u64;
@@ -488,8 +494,9 @@ fn cmd_agent_remote(args: &Args, addr: &str) -> anyhow::Result<()> {
 
     let mut client = AlClient::connect(addr)?;
     client.ping()?;
-    // session handle for push + job start; detach (not drop) before the
-    // poll loop — dropping would close the session under the running job
+    // session handle for push + job start; detach (not drop) before
+    // following the stream — dropping would close the session under the
+    // running job
     let mut session = client
         .create_session(args.get_or("session", "agent-cli"), SessionOpts::default())?;
     session.push(&manifest, Some(&init_labels))?;
@@ -497,29 +504,93 @@ fn cmd_agent_remote(args: &Args, addr: &str) -> anyhow::Result<()> {
     let (_, token) = session.detach();
     println!("agent job {job} started on {addr} ({} candidate arms)", strategies.len());
 
-    let mut last_round = 0usize;
-    loop {
-        std::thread::sleep(std::time::Duration::from_millis(500));
-        let st = client.agent_status(&job)?;
-        let status =
-            st.get("status").and_then(|v| v.as_str()).unwrap_or("?").to_string();
-        let rounds = st.get("rounds").and_then(|v| v.as_usize()).unwrap_or(0);
-        let live =
-            st.get("live").and_then(|v| v.as_array()).map(|a| a.len()).unwrap_or(0);
-        let budget = st.get("budget_spent").and_then(|v| v.as_usize()).unwrap_or(0);
-        let best = st.get("best_accuracy").and_then(|v| v.as_f64()).unwrap_or(0.0);
-        if rounds > last_round {
-            println!("  round {rounds}: {live} live arms, {budget} labels, best {best:.4}");
-            last_round = rounds;
-        }
-        if status != "running" {
-            break;
-        }
-    }
+    follow_job(&mut client, &job, args.has("follow"));
     let trace = client.agent_result(&job, std::time::Duration::from_secs(3600))?;
     print_trace(&trace);
     client.close_session(&token)?;
     Ok(())
+}
+
+/// Drain a job's push-event stream to stdout until the server ends it.
+/// `raw` (`--follow`) prints every event as a `seq\tjson` line; otherwise
+/// per-round summary lines are rendered from the same events. Resumes
+/// from the last consumed sequence number across connection drops
+/// (coordinator crash-restart included), so the printed stream has no
+/// gaps or duplicates. Best-effort: a peer without the multiplexed wire
+/// degrades to the blocking `agent_result` wait that follows.
+fn follow_job(client: &mut AlClient, job: &str, raw: bool) {
+    let mut cursor = 0u64;
+    let mut dropped = 0u32;
+    loop {
+        let stream = match client.subscribe_job(job, cursor) {
+            Ok(s) => s,
+            Err(e) => {
+                dropped += 1;
+                if dropped > 5 {
+                    eprintln!("event stream unavailable ({e}); waiting for the result");
+                    return;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(200 * dropped as u64));
+                continue;
+            }
+        };
+        dropped = 0;
+        let mut broke = false;
+        for item in stream {
+            match item {
+                Ok(ev) => {
+                    cursor = ev.seq;
+                    render_job_event(ev.seq, &ev.value, raw);
+                }
+                Err(e) => {
+                    // connection died mid-stream: resubscribe from the
+                    // cursor (the re-dial happens inside subscribe_job)
+                    eprintln!("event stream interrupted ({e}); resubscribing");
+                    broke = true;
+                    break;
+                }
+            }
+        }
+        if !broke {
+            return;
+        }
+    }
+}
+
+fn render_job_event(seq: u64, ev: &alaas::json::Value, raw: bool) {
+    if raw {
+        println!("{seq}\t{}", alaas::json::to_string(ev));
+        return;
+    }
+    match ev.get("t").and_then(|v| v.as_str()).unwrap_or("") {
+        "job_record" => {
+            if let Some(rec) = ev.get("record") {
+                let round = rec.get("round").and_then(|v| v.as_usize()).unwrap_or(0);
+                let strategy =
+                    rec.get("strategy").and_then(|v| v.as_str()).unwrap_or("?");
+                let acc = rec.get("accuracy").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let spent =
+                    rec.get("budget_spent").and_then(|v| v.as_usize()).unwrap_or(0);
+                println!("  round {round} {strategy:18} acc {acc:.4} ({spent} labels)");
+            }
+        }
+        "job_elim" => {
+            let strategy = ev.get("strategy").and_then(|v| v.as_str()).unwrap_or("?");
+            let round = ev.get("round").and_then(|v| v.as_usize()).unwrap_or(0);
+            println!("  round {round} {strategy:18} ELIMINATED");
+        }
+        "job_resume" => {
+            let from = ev.get("from_round").and_then(|v| v.as_usize()).unwrap_or(0);
+            println!("  job resumed from round {from} (server restart)");
+        }
+        "job_cancel" => println!("  job cancelled"),
+        "job_done" => {
+            let status = ev.get("status").and_then(|v| v.as_str()).unwrap_or("?");
+            println!("  job finished: {status}");
+        }
+        // per-round spends and round markers are summary noise
+        _ => {}
+    }
 }
 
 fn cmd_agent(args: &Args) -> anyhow::Result<()> {

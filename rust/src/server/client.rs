@@ -20,7 +20,7 @@ use std::time::Duration;
 use crate::agent::job as agent_job;
 use crate::agent::{PsheaConfig, PsheaTrace};
 use crate::json::{Map, Value};
-use crate::server::pool::{ConnPool, PoolConfig};
+use crate::server::pool::{ConnPool, PoolConfig, SubEvent, Subscription};
 use crate::server::rpc::RpcError;
 use crate::server::wire::{Payload, WireMode};
 use crate::store::{Manifest, SampleRef};
@@ -369,8 +369,56 @@ impl AlClient {
             .ok_or_else(|| RpcError::Malformed("agent_start reply missing job id".into()))
     }
 
+    /// Subscribe to a job's push-event stream (DESIGN.md §Events): the
+    /// server pushes every job event — spends, round results,
+    /// eliminations, resume/cancel/done — as unsolicited frames on the
+    /// multiplexed connection, in the exact order and byte shape its
+    /// durable WAL records them. `from_seq` is the last sequence number
+    /// already consumed (0 for a fresh subscription); the server replays
+    /// everything after it from the job's retained buffer, so a
+    /// reconnecting follower resumes without gaps or duplicates.
+    ///
+    /// Requires the multiplexed v2 wire — a JSON-forced or pre-mux peer
+    /// returns a typed refusal. Supersedes polling
+    /// [`AlClient::agent_status`] in a sleep loop.
+    pub fn subscribe_job(
+        &mut self,
+        job: &str,
+        from_seq: u64,
+    ) -> Result<JobEventStream, RpcError> {
+        let mut p = Map::new();
+        p.insert("job", Value::from(job));
+        p.insert("from_seq", Value::from(from_seq));
+        let (body, sub) = self.pool.subscribe(
+            &self.addr,
+            "job_subscribe",
+            &Payload::json(Value::Object(p)),
+            Some(CLIENT_HELLO_TIMEOUT),
+        )?;
+        let ack = body.into_payload().into_inline_value()?;
+        let status = ack
+            .get("status")
+            .and_then(Value::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let next_seq = ack.get("next_seq").and_then(Value::as_usize).unwrap_or(0) as u64;
+        Ok(JobEventStream {
+            sub,
+            status,
+            next_seq,
+            cursor: from_seq,
+            done: false,
+            end_reason: None,
+        })
+    }
+
     /// Mid-run job state: status string, round log, live/eliminated arms,
     /// budget spent (the raw `agent_status` reply).
+    ///
+    /// Deprecated as a progress poll: prefer [`AlClient::subscribe_job`],
+    /// which pushes every event instead of sampling state on a timer
+    /// (this call remains the state snapshot for catch-up after a
+    /// `Lagged` disconnect).
     pub fn agent_status(&mut self, job: &str) -> Result<Value, RpcError> {
         let mut p = Map::new();
         p.insert("job", Value::from(job));
@@ -522,6 +570,16 @@ impl SessionHandle<'_> {
         self.client.agent_start(&tok, strategies, cfg, pool_labels, test_labels, seed)
     }
 
+    /// [`AlClient::subscribe_job`] through this handle's client (job ids
+    /// are service-global; the handle is a convenience router).
+    pub fn subscribe_job(
+        &mut self,
+        job: &str,
+        from_seq: u64,
+    ) -> Result<JobEventStream, RpcError> {
+        self.client.subscribe_job(job, from_seq)
+    }
+
     /// Close the session, releasing its quota slot and freeing resident
     /// shard memory on the workers. Returns whether the service still
     /// knew the session.
@@ -545,6 +603,92 @@ impl Drop for SessionHandle<'_> {
         if !self.closed {
             let tok = std::mem::take(&mut self.token);
             let _ = self.client.close_session(&tok);
+        }
+    }
+}
+
+/// One pushed job event: `seq` is the job's monotonically increasing
+/// sequence number (1-based, no gaps within a stream), `value` the event
+/// record verbatim — on a durable coordinator, byte-identical to the WAL
+/// record the same state change appended.
+#[derive(Debug, Clone)]
+pub struct JobEvent {
+    pub seq: u64,
+    pub value: Value,
+}
+
+/// A live job event stream from [`AlClient::subscribe_job`]: a blocking
+/// iterator yielding every pushed event until the job reaches a terminal
+/// state (the server ends the stream) or the connection dies (one `Err`
+/// item, then `None`). The stream owns its demux slot independently of
+/// the client, so the client can keep issuing RPCs — even on the same
+/// multiplexed connection — while a follower drains events.
+pub struct JobEventStream {
+    sub: Subscription,
+    status: String,
+    next_seq: u64,
+    cursor: u64,
+    done: bool,
+    end_reason: Option<String>,
+}
+
+/// How long one iterator step parks before re-checking for a push; only
+/// an internal wake-up cadence — `next` blocks until a real delivery.
+const SUB_IDLE_POLL: Duration = Duration::from_millis(250);
+
+impl JobEventStream {
+    /// Job status string at subscribe time ("running", "done", ...).
+    pub fn status(&self) -> &str {
+        &self.status
+    }
+
+    /// The server's next sequence number at subscribe time — everything
+    /// in `(from_seq, next_seq)` is replayed before live events.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Highest sequence number yielded so far (equals the subscribe-time
+    /// `from_seq` until the first event). Pass this back to
+    /// [`AlClient::subscribe_job`] to resume after a disconnect without
+    /// gaps or duplicates.
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
+    /// Why the stream ended, once it has cleanly ("all events
+    /// delivered" after a terminal job). A lag disconnect — this
+    /// subscriber fell behind the retained buffer and must catch up via
+    /// `agent_status` + resubscribe — surfaces as an `Err` item instead.
+    pub fn end_reason(&self) -> Option<&str> {
+        self.end_reason.as_deref()
+    }
+}
+
+impl Iterator for JobEventStream {
+    type Item = Result<JobEvent, RpcError>;
+
+    fn next(&mut self) -> Option<Result<JobEvent, RpcError>> {
+        if self.done {
+            return None;
+        }
+        loop {
+            match self.sub.next(SUB_IDLE_POLL) {
+                Ok(SubEvent::Event { seq, value }) => {
+                    self.cursor = seq;
+                    return Some(Ok(JobEvent { seq, value }));
+                }
+                Ok(SubEvent::End(reason)) => {
+                    self.done = true;
+                    self.end_reason = Some(reason);
+                    return None;
+                }
+                Ok(SubEvent::Idle) => continue,
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(e));
+                }
+            }
         }
     }
 }

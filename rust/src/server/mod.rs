@@ -26,7 +26,7 @@ pub mod rpc;
 pub mod server;
 pub mod wire;
 
-pub use client::{AlClient, SessionHandle, SessionOpts};
+pub use client::{AlClient, JobEvent, JobEventStream, SessionHandle, SessionOpts};
 pub use pool::{ConnPool, PoolConfig};
 pub use server::{AlServer, ServerDeps, SELECT_SEED};
 pub use wire::{Body, MatRef, MatView, Payload, WireMode};

@@ -236,10 +236,27 @@ struct MuxSlot {
     routed_at: Option<Instant>,
 }
 
+/// One live server-push subscription riding the mux demux (DESIGN.md
+/// §Events): unsolicited `{"id", "seq", "event"}` frames from the peer
+/// land in `queue`; a `{"id", "end"}` frame (or an error reply addressed
+/// to the subscription id) finishes it.
+struct SubState {
+    /// Delivered-but-unconsumed events, oldest first, as `(seq, event)`.
+    queue: VecDeque<(u64, Value)>,
+    /// Terminal outcome once the peer finished the stream: `Ok(reason)`
+    /// for a clean end, `Err(error)` for a remote error. Queued events
+    /// are still drained before the terminal is surfaced.
+    fin: Option<Result<String, String>>,
+}
+
 struct MuxState {
     /// In-flight request id → completion slot. Registered *before* the
     /// request bytes go out, so a reply can never race its own slot.
     slots: HashMap<u64, MuxSlot>,
+    /// Live subscription id → event inbox. Registered in the same
+    /// state-lock critical section as the subscribe request's slot, so a
+    /// pushed event can never race its own inbox.
+    subs: HashMap<u64, SubState>,
     /// Deadline-abandoned ids whose replies may still arrive.
     abandoned: VecDeque<u64>,
     /// Set once, never cleared: why this connection can take no more
@@ -300,6 +317,7 @@ impl MuxConn {
             probe,
             state: Mutex::new(MuxState {
                 slots: HashMap::new(),
+                subs: HashMap::new(),
                 abandoned: VecDeque::new(),
                 dead: None,
             }),
@@ -330,29 +348,30 @@ impl MuxConn {
         self.state().dead.is_some()
     }
 
-    /// Parked (no in-flight requests) with a socket that shows EOF or
-    /// unsolicited bytes — the peer restarted under an idle connection.
-    /// Never peeks while requests are in flight: a pending reply's bytes
-    /// would read as "unsolicited".
+    /// Parked (no in-flight requests or live subscriptions) with a
+    /// socket that shows EOF or unsolicited bytes — the peer restarted
+    /// under an idle connection. Never peeks while requests or
+    /// subscriptions are live: a pending reply's (or pushed event's)
+    /// bytes would read as "unsolicited".
     fn idle_and_stale(&self) -> bool {
         {
             let st = self.state();
-            if st.dead.is_some() || !st.slots.is_empty() {
+            if st.dead.is_some() || !st.slots.is_empty() || !st.subs.is_empty() {
                 return false;
             }
         }
         stream_is_stale(&self.probe)
     }
 
-    /// Liveness answer for `probe_peer`: in-flight traffic counts as
-    /// alive without touching the socket.
+    /// Liveness answer for `probe_peer`: in-flight traffic (requests or
+    /// subscriptions) counts as alive without touching the socket.
     fn is_live(&self) -> bool {
         {
             let st = self.state();
             if st.dead.is_some() {
                 return false;
             }
-            if !st.slots.is_empty() {
+            if !st.slots.is_empty() || !st.subs.is_empty() {
                 return true;
             }
         }
@@ -413,6 +432,94 @@ impl MuxConn {
             return Err(e);
         }
         Ok(id)
+    }
+
+    /// [`MuxConn::begin`] that also registers a subscription inbox under
+    /// the request's id, in the same state-lock critical section as the
+    /// reply slot — so pushed events arriving before (or racing) the
+    /// subscribe reply are queued, never dropped or treated as desync.
+    fn begin_sub(&self, method: &str, params: &Payload) -> Result<u64, RpcError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut st = self.state();
+            if let Some(why) = st.dead.clone() {
+                return Err(self.dead_err(&why));
+            }
+            st.slots.insert(id, MuxSlot { done: None, routed_at: None });
+            st.subs.insert(id, SubState { queue: VecDeque::new(), fin: None });
+        }
+        self.gauge("mux.in_flight", 1);
+        let res = {
+            let mut w = self.writer.lock().unwrap_or_else(|p| p.into_inner());
+            rpc::send_request_wire(
+                &mut *w,
+                id,
+                method,
+                params,
+                WireMode::Binary,
+                self.metrics.as_deref(),
+            )
+        };
+        if let Err(e) = res {
+            {
+                let mut st = self.state();
+                st.slots.remove(&id);
+                st.subs.remove(&id);
+            }
+            self.gauge("mux.in_flight", -1);
+            self.kill(&format!("request write failed: {e}"));
+            return Err(e);
+        }
+        Ok(id)
+    }
+
+    /// Drop subscription `id`'s inbox: subsequent pushes for it are
+    /// silently discarded by `route_frame`.
+    fn unsubscribe(&self, id: u64) {
+        self.state().subs.remove(&id);
+    }
+
+    /// Block until subscription `id` yields its next event, ends, the
+    /// connection dies, or `deadline` passes (`Idle` — the subscription
+    /// stays live). Participates in the waiter-driven pump exactly like
+    /// [`MuxConn::wait`], so a lone subscriber keeps the socket drained.
+    fn sub_next(&self, id: u64, deadline: Option<Instant>) -> Result<SubEvent, RpcError> {
+        loop {
+            {
+                let mut st = self.state();
+                match st.subs.get_mut(&id) {
+                    Some(sub) => {
+                        if let Some((seq, value)) = sub.queue.pop_front() {
+                            return Ok(SubEvent::Event { seq, value });
+                        }
+                        if let Some(fin) = sub.fin.take() {
+                            st.subs.remove(&id);
+                            return match fin {
+                                Ok(reason) => Ok(SubEvent::End(reason)),
+                                Err(e) => Err(RpcError::from_remote(&e)),
+                            };
+                        }
+                    }
+                    None => return Err(self.dead_err("subscription slot lost")),
+                }
+                if let Some(why) = st.dead.clone() {
+                    st.subs.remove(&id);
+                    drop(st);
+                    return Err(self.dead_err(&why));
+                }
+                if deadline.is_some_and(|d| Instant::now() >= d) {
+                    return Ok(SubEvent::Idle);
+                }
+            }
+            match self.reader.try_lock() {
+                Ok(mut r) => self.pump_once(&mut r),
+                Err(std::sync::TryLockError::Poisoned(p)) => self.pump_once(&mut p.into_inner()),
+                Err(std::sync::TryLockError::WouldBlock) => {
+                    let st = self.state();
+                    let _ = self.cv.wait_timeout(st, MUX_FOLLOWER_WAIT);
+                }
+            }
+        }
     }
 
     /// Forget an in-flight request (deadline elapsed, or its
@@ -533,11 +640,11 @@ impl MuxConn {
         }
     }
 
-    /// Decode one reply frame and deliver it: completion slot (wake
-    /// all), abandoned id (drop silently), anything else (protocol
-    /// desync — kill). Remote errors and malformed results are
-    /// per-request outcomes; an undecodable or id-less frame means the
-    /// stream itself can no longer be trusted.
+    /// Decode one reply frame and deliver it: push frame (subscription
+    /// inbox), completion slot (wake all), abandoned id (drop silently),
+    /// anything else (protocol desync — kill). Remote errors and
+    /// malformed results are per-request outcomes; an undecodable or
+    /// id-less frame means the stream itself can no longer be trusted.
     fn route_frame(&self, frame: Vec<u8>) {
         let n = frame.len();
         let t0 = Instant::now();
@@ -556,6 +663,28 @@ impl MuxConn {
             self.kill("reply missing id");
             return;
         };
+        // server-push frames (DESIGN.md §Events) carry "event"/"end"
+        // instead of "result"/"error" and are addressed to a
+        // subscription id, not an awaiting request slot. A push for a
+        // subscription this side no longer holds (unsubscribed, or a
+        // final event racing the drop) is discarded without killing the
+        // connection — unlike a truly unknown *reply* id, push frames
+        // are unsolicited by design.
+        if v.get("event").is_some() || v.get("end").is_some() {
+            let mut st = self.state();
+            if let Some(sub) = st.subs.get_mut(&id) {
+                if let Some(ev) = v.get("event") {
+                    let seq =
+                        v.get("seq").and_then(Value::as_i64).map(|s| s as u64).unwrap_or(0);
+                    sub.queue.push_back((seq, ev.clone()));
+                } else if let Some(reason) = v.get("end").and_then(Value::as_str) {
+                    sub.fin = Some(Ok(reason.to_string()));
+                }
+                drop(st);
+                self.cv.notify_all();
+            }
+            return;
+        }
         let res: Result<Body, RpcError> =
             if let Some(e) = v.get("error").and_then(Value::as_str) {
                 Err(RpcError::from_remote(e))
@@ -580,6 +709,16 @@ impl MuxConn {
         if let Some(slot) = st.slots.get_mut(&id) {
             slot.done = Some(res);
             slot.routed_at = Some(Instant::now());
+            drop(st);
+            self.cv.notify_all();
+        } else if let Some(sub) = st.subs.get_mut(&id) {
+            // an error reply addressed to a live subscription (slow
+            // subscriber disconnect, job evicted): terminal for the
+            // stream, not for the connection
+            sub.fin = Some(match res {
+                Err(e) => Err(e.to_string()),
+                Ok(_) => Err("unexpected result frame on subscription".into()),
+            });
             drop(st);
             self.cv.notify_all();
         } else if let Some(pos) = st.abandoned.iter().position(|&a| a == id) {
@@ -617,6 +756,42 @@ impl Drop for PendingCall {
         if !self.awaited {
             self.mux.abandon(self.id);
         }
+    }
+}
+
+/// One delivery from [`Subscription::next`].
+#[derive(Debug)]
+pub enum SubEvent {
+    /// A pushed event: `seq` is the publisher's per-job sequence number,
+    /// `value` the event record verbatim (DESIGN.md §Events).
+    Event { seq: u64, value: Value },
+    /// The peer finished the stream cleanly, with a reason.
+    End(String),
+    /// The per-call timeout elapsed with nothing pushed; the
+    /// subscription is still live — call `next` again.
+    Idle,
+}
+
+/// A live server-push subscription obtained with [`ConnPool::subscribe`].
+/// Dropping it unsubscribes locally: later pushes for its id are
+/// discarded by the demux instead of accumulating unread.
+pub struct Subscription {
+    mux: Arc<MuxConn>,
+    id: u64,
+}
+
+impl Subscription {
+    /// Block up to `timeout` for the next delivery. Connection death
+    /// surfaces as the same `Io(ConnectionAborted)` a mux call would
+    /// see, so callers' reconnect logic composes with the pool's.
+    pub fn next(&self, timeout: Duration) -> Result<SubEvent, RpcError> {
+        self.mux.sub_next(self.id, Some(Instant::now() + timeout))
+    }
+}
+
+impl Drop for Subscription {
+    fn drop(&mut self) {
+        self.mux.unsubscribe(self.id);
     }
 }
 
@@ -1193,6 +1368,43 @@ impl ConnPool {
     pub fn wait(&self, mut call: PendingCall) -> Result<Body, RpcError> {
         call.awaited = true;
         call.mux.wait(call.id, call.deadline)
+    }
+
+    /// Open a server-push subscription on the shared mux connection to
+    /// `addr`: send `method` (e.g. `job_subscribe`), await its reply
+    /// (the acknowledgment body), and return a [`Subscription`] whose
+    /// `next` yields the frames the peer pushes under this request's id
+    /// (DESIGN.md §Events). Push streams require the multiplexed wire —
+    /// a classic peer gets a typed refusal, since unsolicited frames
+    /// would corrupt a one-RPC-per-connection exchange.
+    pub fn subscribe(
+        &self,
+        addr: &str,
+        method: &str,
+        params: &Payload,
+        reply_timeout: Option<Duration>,
+    ) -> Result<(Body, Subscription), RpcError> {
+        let mux = match self.mux_obtain(addr)? {
+            MuxObtained::Mux(m, _) => m,
+            MuxObtained::Classic(donated) => {
+                if let Some(c) = donated {
+                    self.checkin(addr, c);
+                }
+                return Err(RpcError::Remote(format!(
+                    "peer {addr} did not negotiate request multiplexing; \
+                     push subscriptions unavailable"
+                )));
+            }
+        };
+        let id = mux.begin_sub(method, params)?;
+        let deadline = reply_timeout.map(|t| Instant::now() + t);
+        match mux.wait(id, deadline) {
+            Ok(body) => Ok((body, Subscription { mux, id })),
+            Err(e) => {
+                mux.unsubscribe(id);
+                Err(e)
+            }
+        }
     }
 
     /// Negotiate (or reuse) a connection to `addr` and report its wire

@@ -17,7 +17,7 @@
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::json::{self, Map, Value};
@@ -391,6 +391,95 @@ pub fn send_error(w: &mut impl Write, id: u64, error: &str) -> Result<(), RpcErr
 /// backpressure instead of unbounded thread growth.
 const MUX_SERVE_MAX_INFLIGHT: usize = 64;
 
+/// Per-request context a push-capable handler sees (DESIGN.md §Events):
+/// the envelope id (a `job_subscribe` request's id doubles as its
+/// subscription id for every pushed frame), whether this connection has
+/// negotiated multiplexing, and — via [`RequestCtx::push_sink`] — a
+/// detachable handle to the serialized write half so a subscription
+/// thread can keep pushing frames long after the reply went out.
+pub struct RequestCtx {
+    pub id: u64,
+    pub mux: bool,
+    writer: Arc<Mutex<TcpStream>>,
+    broken: Arc<AtomicBool>,
+}
+
+impl RequestCtx {
+    /// A detachable sink for server-push frames on this connection.
+    pub fn push_sink(&self) -> PushSink {
+        PushSink { writer: self.writer.clone(), broken: self.broken.clone() }
+    }
+}
+
+/// Detached write handle for unsolicited (server-push) frames. Push
+/// frames always go as v1 JSON so every subscriber can read them:
+/// events as `{"id":<sub>,"seq":N,"event":{...}}`, a clean stream end
+/// as `{"id":<sub>,"end":"<reason>"}`, and stream failure as the plain
+/// v1 error reply addressed to the subscription id. A failed write
+/// flips the connection's broken flag — the serve loop stops reading,
+/// exactly as for a failed reply — and the sink reports closed so
+/// publishers stop instead of spinning on a dead socket.
+#[derive(Clone)]
+pub struct PushSink {
+    writer: Arc<Mutex<TcpStream>>,
+    broken: Arc<AtomicBool>,
+}
+
+impl PushSink {
+    /// Has the connection died under this sink?
+    pub fn is_closed(&self) -> bool {
+        self.broken.load(Ordering::SeqCst)
+    }
+
+    fn write_value(&self, v: Value) -> bool {
+        if self.is_closed() {
+            return false;
+        }
+        let io = {
+            let mut w = self.writer.lock().unwrap_or_else(|p| p.into_inner());
+            write_frame(&mut *w, json::to_string(&v).as_bytes())
+        };
+        if io.is_err() {
+            self.broken.store(true, Ordering::SeqCst);
+        }
+        io.is_ok()
+    }
+
+    /// Push one sequenced event frame. `false` means the connection is
+    /// gone and the subscription should be torn down.
+    pub fn send_event(&self, sub_id: u64, seq: u64, event: &Value) -> bool {
+        let mut m = Map::new();
+        m.insert("id", Value::from(sub_id));
+        m.insert("seq", Value::from(seq));
+        m.insert("event", event.clone());
+        self.write_value(Value::Object(m))
+    }
+
+    /// Cleanly terminate the subscription stream.
+    pub fn send_end(&self, sub_id: u64, reason: &str) -> bool {
+        let mut m = Map::new();
+        m.insert("id", Value::from(sub_id));
+        m.insert("end", Value::from(reason));
+        self.write_value(Value::Object(m))
+    }
+
+    /// Terminate the stream with an error (e.g. the subscriber lagged
+    /// past the event buffer).
+    pub fn send_error(&self, sub_id: u64, error: &str) -> bool {
+        if self.is_closed() {
+            return false;
+        }
+        let io = {
+            let mut w = self.writer.lock().unwrap_or_else(|p| p.into_inner());
+            send_error(&mut *w, sub_id, error)
+        };
+        if io.is_err() {
+            self.broken.store(true, Ordering::SeqCst);
+        }
+        io.is_ok()
+    }
+}
+
 /// Serve framed request/response RPC on one connection until clean EOF,
 /// a broken frame, an I/O failure, or `shutdown` flips. Shared by the
 /// single server and the cluster coordinator so the idle-probe/shutdown
@@ -431,14 +520,36 @@ pub fn serve_conn(
     wire_mode: WireMode,
     handle: impl Fn(&str, &Body, WireMode) -> Result<Payload, String> + Sync,
 ) {
+    serve_conn_ext(stream, tag, shutdown, metrics, tracer, wire_mode, |m, p, mode, _ctx| {
+        handle(m, p, mode)
+    })
+}
+
+/// [`serve_conn`] whose handler also receives the per-request
+/// [`RequestCtx`] — the push-capable form the coordinator and single
+/// server use so `job_subscribe` can detach a [`PushSink`] for the
+/// event-stream thread (DESIGN.md §Events). Handlers that ignore the
+/// context behave byte-identically to [`serve_conn`].
+pub fn serve_conn_ext(
+    stream: &mut TcpStream,
+    tag: &'static str,
+    shutdown: &AtomicBool,
+    metrics: &Registry,
+    tracer: Option<&crate::trace::Tracer>,
+    wire_mode: WireMode,
+    handle: impl Fn(&str, &Body, WireMode, &RequestCtx) -> Result<Payload, String> + Sync,
+) {
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     stream.set_nodelay(true).ok();
     // All replies go through one mutex-guarded write half so concurrent
     // mux handler threads cannot interleave frame bytes. The clone
     // shares the fd (and its options) with `stream`; only this loop
-    // ever reads, only the mutex holder ever writes.
+    // ever reads, only the mutex holder ever writes. Arc'd (with the
+    // broken flag) so a subscription's PushSink can outlive the serve
+    // scope: a sink holding the last reference just writes into a
+    // socket whose read side is gone, fails, and marks itself closed.
     let writer = match stream.try_clone() {
-        Ok(w) => Mutex::new(w),
+        Ok(w) => Arc::new(Mutex::new(w)),
         Err(e) => {
             // out of fds — refusing the connection beats serving it
             // with no way to ever interleave replies
@@ -450,7 +561,7 @@ pub fn serve_conn(
     let in_flight = AtomicUsize::new(0);
     // flipped by a handler thread whose reply write failed: the socket
     // is dead for writing, so reading more requests is pointless
-    let broken = AtomicBool::new(false);
+    let broken = Arc::new(AtomicBool::new(false));
     std::thread::scope(|scope| {
         loop {
             stream.set_read_timeout(Some(Duration::from_millis(250))).ok();
@@ -527,14 +638,14 @@ pub fn serve_conn(
                     // a panicking handler must not poison the whole scope
                     // at join time; treat it like a dead connection
                     let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        process_request(req, metrics, tracer, mux, writer, handle)
+                        process_request(req, metrics, tracer, mux, writer, broken, handle)
                     }));
                     if !matches!(ok, Ok(true)) {
                         broken.store(true, Ordering::SeqCst);
                     }
                     in_flight.fetch_sub(1, Ordering::SeqCst);
                 });
-            } else if !process_request(req, metrics, tracer, &mux, &writer, &handle) {
+            } else if !process_request(req, metrics, tracer, &mux, &writer, &broken, &handle) {
                 return;
             }
         }
@@ -552,12 +663,21 @@ fn process_request(
     metrics: &Registry,
     tracer: Option<&crate::trace::Tracer>,
     mux: &AtomicBool,
-    writer: &Mutex<TcpStream>,
-    handle: &(impl Fn(&str, &Body, WireMode) -> Result<Payload, String> + Sync),
+    writer: &Arc<Mutex<TcpStream>>,
+    broken: &Arc<AtomicBool>,
+    handle: &(impl Fn(&str, &Body, WireMode, &RequestCtx) -> Result<Payload, String> + Sync),
 ) -> bool {
     let traced = tracer.is_some_and(|t| t.enabled())
         && (req.trace.is_active() || crate::trace::default_traced(&req.method));
     let t0 = Instant::now();
+    // handlers that push (job_subscribe) clone the write half out of
+    // this context; everything else ignores it
+    let ctx = RequestCtx {
+        id: req.id,
+        mux: mux.load(Ordering::SeqCst),
+        writer: writer.clone(),
+        broken: broken.clone(),
+    };
     // handlers get the request's encoding so version-sensitive
     // responses (select_shard's candidate schema) can stay
     // v1-compatible on the JSON wire
@@ -566,7 +686,7 @@ fn process_request(
         crate::trace::begin_collect();
         let r = {
             let mut g = t.request(&format!("rpc.{}", req.method), req.trace);
-            let r = handle(&req.method, &req.params, req.mode);
+            let r = handle(&req.method, &req.params, req.mode, &ctx);
             if let Err(e) = &r {
                 g.annotate("error", e);
             }
@@ -574,7 +694,7 @@ fn process_request(
         };
         (r, crate::trace::take_collected())
     } else {
-        (handle(&req.method, &req.params, req.mode), Vec::new())
+        (handle(&req.method, &req.params, req.mode, &ctx), Vec::new())
     };
     metrics.time(&format!("rpc.{}", req.method), t0.elapsed());
     // the hello handler decides mux per-connection; sniff its reply so

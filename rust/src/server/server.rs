@@ -16,7 +16,8 @@ use std::time::{Duration, Instant};
 
 use crate::agent::job::{self, AgentTask, ArmSelect, JobRegistry, Picked};
 use crate::cache::DataCache;
-use crate::cluster::tenancy::TenantRegistry;
+use crate::cluster::recovery;
+use crate::cluster::tenancy::{AdmissionGate, AdmitPermit, TenantRegistry};
 use crate::config::{AlaasConfig, StrategyChoice};
 use crate::json::{Map, Value};
 use crate::metrics::Registry;
@@ -83,9 +84,14 @@ struct ServerState {
     tracer: Arc<crate::trace::Tracer>,
     sessions: Mutex<HashMap<String, Arc<SessionSlot>>>,
     /// Multi-tenant session registry (DESIGN.md §Tenancy): the same
-    /// token/quota surface the cluster coordinator serves, minus the
-    /// admission gate (one server has no scatter path to arbitrate).
+    /// token/quota surface the cluster coordinator serves.
     tenants: TenantRegistry,
+    /// Weighted-fair admission gate over scatter-shaped work — a full
+    /// strategy select or one agent arm round. The same gate the
+    /// coordinator arbitrates its scatter path with, so one overloaded
+    /// server sheds with the identical structured `overloaded` error
+    /// (and `retry_after_ms` hint) instead of queueing without bound.
+    gate: Arc<AdmissionGate>,
     /// Background PSHEA jobs (DESIGN.md §Agent).
     jobs: JobRegistry,
     /// Live-membership heartbeat loop when this server runs as a
@@ -115,12 +121,17 @@ impl AlServer {
             config.observability.slow_query_ms,
         ));
         let tenants = TenantRegistry::new(config.coordinator.tenancy.clone());
+        let gate = Arc::new(AdmissionGate::new(
+            &config.coordinator.tenancy,
+            Some(deps.metrics.clone()),
+        ));
         let state = Arc::new(ServerState {
             config,
             deps,
             tracer,
             sessions: Mutex::new(HashMap::new()),
             tenants,
+            gate,
             jobs: JobRegistry::new(),
             heartbeater: Mutex::new(None),
             shutdown: AtomicBool::new(false),
@@ -234,14 +245,14 @@ fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
 }
 
 fn handle_conn(mut stream: TcpStream, state: Arc<ServerState>) {
-    rpc::serve_conn(
+    rpc::serve_conn_ext(
         &mut stream,
         "server",
         &state.shutdown,
         &state.deps.metrics,
         Some(&state.tracer),
         state.config.server.wire,
-        |method, params, mode| dispatch(&state, method, params, mode),
+        |method, params, mode, ctx| dispatch(&state, method, params, mode, ctx),
     );
 }
 
@@ -250,6 +261,7 @@ fn dispatch(
     method: &str,
     params: &Body,
     mode: WireMode,
+    ctx: &rpc::RequestCtx,
 ) -> Result<Payload, String> {
     match method {
         "hello" => Ok(Payload::json(wire::hello_reply(
@@ -298,6 +310,11 @@ fn dispatch(
         "agent_status" => job::rpc_status(&state.jobs, &params.value).map(Payload::json),
         "agent_result" => job::rpc_result(&state.jobs, &params.value).map(Payload::json),
         "agent_cancel" => job::rpc_cancel(&state.jobs, &params.value).map(Payload::json),
+        // push event stream + pull-based catch-up (DESIGN.md §Events)
+        "job_subscribe" => {
+            job::rpc_subscribe(&state.jobs, &params.value, ctx).map(Payload::json)
+        }
+        "job_events" => job::rpc_events(&state.jobs, &params.value).map(Payload::json),
         // worker-facing cluster methods (DESIGN.md §Cluster)
         "scan_shard" => scan_shard(state, params).map(Payload::json),
         "select_shard" => select_shard(state, params, mode),
@@ -312,6 +329,18 @@ fn dispatch(
         }
         other => Err(format!("unknown method '{other}'")),
     }
+}
+
+/// Take one permit from the weighted-fair admission gate before
+/// scatter-shaped work — a full strategy select or one agent arm round
+/// (a no-op pass-through when tenancy is disabled). A shed verdict
+/// becomes the structured `overloaded` error with its `retry_after_ms`
+/// hint, matching the coordinator's `admit_scatter` exactly.
+fn admit_select(state: &ServerState, session: &str) -> Result<AdmitPermit, String> {
+    state
+        .gate
+        .admit(session, state.tenants.weight_of(session))
+        .map_err(|shed| shed.to_service_error().encode())
 }
 
 pub(crate) fn str_param(params: &Value, key: &str) -> Result<String, String> {
@@ -462,9 +491,10 @@ fn session_close(state: &Arc<ServerState>, params: &Value) -> Result<Value, Stri
 }
 
 /// `service_stats` — the single-server rendering of the coordinator's
-/// tenancy snapshot: no admission gate here, so the gate counters are
-/// zero, but the registry/quota and per-session rows match.
+/// tenancy snapshot: same shape, with the gate counters fed by this
+/// server's own admission gate (queries and agent arm rounds).
 fn service_stats(state: &Arc<ServerState>) -> Value {
+    let gs = state.gate.stats();
     let tenants = state.tenants.list();
     let rows_of: HashMap<String, usize> = {
         let map = state.sessions.lock().unwrap();
@@ -488,15 +518,17 @@ fn service_stats(state: &Arc<ServerState>) -> Value {
         if resident {
             active += 1;
         }
+        let (admitted, shed, queued) =
+            gs.per_session.get(name).copied().unwrap_or((0, 0, 0));
         let mut m = Map::new();
         m.insert("name", Value::from(name.clone()));
         m.insert("weight", Value::from(t.map(|t| t.weight).unwrap_or(1)));
         m.insert("explicit", Value::Bool(t.map(|t| t.explicit).unwrap_or(false)));
         m.insert("rows", Value::from(rows));
         m.insert("shards", Value::from(usize::from(resident)));
-        m.insert("admitted", Value::from(0u64));
-        m.insert("shed", Value::from(0u64));
-        m.insert("queued", Value::from(0u64));
+        m.insert("admitted", Value::from(admitted));
+        m.insert("shed", Value::from(shed));
+        m.insert("queued", Value::from(queued));
         sessions.push(Value::Object(m));
     }
     let cfg = state.tenants.config();
@@ -504,10 +536,10 @@ fn service_stats(state: &Arc<ServerState>) -> Value {
     m.insert("tenancy_enabled", Value::Bool(cfg.enabled));
     m.insert("sessions_total", Value::from(names.len()));
     m.insert("sessions_active", Value::from(active));
-    m.insert("running", Value::from(0u64));
-    m.insert("queued", Value::from(0u64));
-    m.insert("admitted_total", Value::from(0u64));
-    m.insert("shed_total", Value::from(0u64));
+    m.insert("running", Value::from(gs.running));
+    m.insert("queued", Value::from(gs.queued));
+    m.insert("admitted_total", Value::from(gs.admitted_total));
+    m.insert("shed_total", Value::from(gs.shed_total));
     m.insert("max_sessions", Value::from(cfg.max_sessions));
     m.insert("sessions", Value::Array(sessions));
     Value::Object(m)
@@ -758,6 +790,9 @@ fn query(state: &Arc<ServerState>, params: &Value) -> Result<Value, String> {
     let wait_ms =
         params.get("wait_ms").and_then(Value::as_usize).unwrap_or(120_000) as u64;
 
+    // held across wait + select: the query is this server's scatter-shaped
+    // unit of work, exactly like one coordinator scatter
+    let _permit = admit_select(state, &session_id)?;
     let slot = get_session(state, &session_id)?;
     let s = {
         let mut g = state.tracer.child("wait_ready");
@@ -1013,8 +1048,14 @@ fn fetch_rows(state: &Arc<ServerState>, params: &Value) -> Result<Payload, Strin
 
 /// Single-server [`ArmSelect`]: one agent arm's selection over the
 /// session's candidate view — the same `candidate_view` + strategy-select
-/// path `query` uses, with the arm's head, exclusions, and seed.
+/// path `query` uses, with the arm's head, exclusions, and seed. Each
+/// round takes one admission-gate permit (the arm round is this server's
+/// scatter-shaped unit of work, like the coordinator's) and publishes
+/// its spend record to the job's push-event stream.
 struct LocalArmSelect {
+    state: Arc<ServerState>,
+    session_id: String,
+    job: Arc<job::JobSlot>,
     slot: Arc<SessionSlot>,
     backend: Arc<dyn ComputeBackend>,
 }
@@ -1031,6 +1072,10 @@ impl ArmSelect for LocalArmSelect {
     ) -> Result<Vec<Picked>, String> {
         let strat = strategies::by_name(strategy)
             .ok_or_else(|| format!("unknown strategy '{strategy}'"))?;
+        // one permit per arm round, held for the duration of the select —
+        // a shed surfaces as the same structured `overloaded` error the
+        // coordinator's scatter path returns
+        let _permit = admit_select(&self.state, &self.session_id)?;
         let s = self.slot.s.lock().unwrap();
         if s.status != SessionStatus::Ready {
             return Err("session left ready state mid-job".into());
@@ -1056,10 +1101,17 @@ impl ArmSelect for LocalArmSelect {
             seed,
         };
         let picked = strat.select(&ctx, budget).map_err(|e| e.to_string())?;
-        Ok(picked
+        let out: Vec<Picked> = picked
             .into_iter()
             .map(|rel| (ok_rows[rel], cand_emb.row(rel).to_vec()))
-            .collect())
+            .collect();
+        // one spend event per round, empty rounds included — the same
+        // record shape the coordinator's durable path appends, so a
+        // follower sees identical traces on either topology (no WAL on
+        // a single server, hence publish-only)
+        let idxs: Vec<usize> = out.iter().map(|p| p.0).collect();
+        self.job.events.publish(recovery::rec_job_spend(&self.job.id, strategy, &idxs));
+        Ok(out)
     }
 }
 
@@ -1176,8 +1228,13 @@ fn agent_start(state: &Arc<ServerState>, params: &Body) -> Result<Value, String>
                     return;
                 }
             };
-            let sel =
-                LocalArmSelect { slot: slot.clone(), backend: bg.deps.backend.clone() };
+            let sel = LocalArmSelect {
+                state: bg.clone(),
+                session_id: session_id.clone(),
+                job: job_slot.clone(),
+                slot: slot.clone(),
+                backend: bg.deps.backend.clone(),
+            };
             let task = AgentTask::new(
                 sel,
                 bg.deps.backend.clone(),

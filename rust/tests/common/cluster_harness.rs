@@ -317,6 +317,7 @@ impl HarnessBuilder {
             store,
             membership: self.membership,
             faults: Vec::new(),
+            tracked_jobs: Mutex::new(Vec::new()),
             log,
         };
         if self.membership {
@@ -348,6 +349,9 @@ pub struct ClusterHarness {
     pub store: Arc<StoreRouter>,
     membership: bool,
     faults: Vec<(FaultPoint, FaultAction)>,
+    /// Agent job ids registered via [`ClusterHarness::track_job`]:
+    /// failure diagnostics dump each one's push-event buffer.
+    tracked_jobs: Mutex<Vec<String>>,
     log: HarnessLog,
 }
 
@@ -702,6 +706,13 @@ impl ClusterHarness {
     /// on failure), so a red integration run ships the span trees that
     /// explain *where* the request went sideways. Never panics: a dead
     /// coordinator degrades to an error line, not a double panic.
+    /// Register an agent job id so [`ClusterHarness::dump_diagnostics`]
+    /// includes its push-event buffer (`job_events`: retained sequence
+    /// window + every buffered event) when a test fails.
+    pub fn track_job(&self, id: &str) {
+        self.tracked_jobs.lock().unwrap().push(id.to_string());
+    }
+
     pub fn dump_diagnostics(&self, why: &str) {
         self.log(&format!("DIAGNOSTICS ({why}): trace_recent + metrics follow"));
         match AlClient::connect(&self.coord_addr.to_string()) {
@@ -710,6 +721,18 @@ impl ClusterHarness {
                     Ok(v) => self
                         .log(&format!("coord trace_recent: {}", alaas::json::to_string(&v))),
                     Err(e) => self.log(&format!("coord trace_recent failed: {e}")),
+                }
+                for job in self.tracked_jobs.lock().unwrap().iter() {
+                    let p = alaas::json::obj([("job", Value::from(job.clone()))]);
+                    match c.call("job_events", p) {
+                        Ok(v) => self.log(&format!(
+                            "job {job} event buffer: {}",
+                            alaas::json::to_string(&v)
+                        )),
+                        Err(e) => {
+                            self.log(&format!("job {job} event buffer failed: {e}"))
+                        }
+                    }
                 }
                 match c.metrics_text() {
                     Ok(text) => {

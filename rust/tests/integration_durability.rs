@@ -245,6 +245,114 @@ fn finished_job_result_survives_crash_restart() {
     assert_eq!(h.coord_counter("recovery.resumed_jobs"), 0);
 }
 
+/// Push-stream crash pin (ISSUE 10): a `job_subscribe` follower that
+/// loses its connection to the hard-killed coordinator resubscribes
+/// from its cursor against the restarted process and receives the rest
+/// of the stream — 1-based contiguous seqs end to end, no gaps, no
+/// duplicates, the `job_resume` marker included — and the full streamed
+/// sequence equals the WAL's job-scoped records verbatim (the restart
+/// re-seeds the event buffer from the same records it replays).
+#[test]
+fn subscriber_reconnects_across_coordinator_crash_without_gaps() {
+    use alaas::durable::{DurabilityConfig, DurableLog};
+    use alaas::json::Value;
+    use alaas::server::JobEvent;
+
+    let event_type = |ev: &Value| ev.get("t").and_then(Value::as_str).unwrap_or("");
+
+    let mut h = ClusterHarness::builder()
+        .bucket("dur-stream")
+        .data_seed(DATA_SEED)
+        .sizes(N_INIT, N_POOL, N_TEST)
+        .workers(2)
+        .durable(true)
+        // keep every record in the WAL so the stream-vs-WAL comparison
+        // sees the full physical sequence across both incarnations
+        .coord_tweak(|c| c.durability.snapshot_every = 1_000_000)
+        .build();
+    let mut client = h.client();
+    client.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+    let job = client
+        .agent_start("s", &arm_names(), &agent_cfg(), &h.labels.pool, &h.labels.test, AGENT_SEED)
+        .unwrap();
+    h.track_job(&job);
+
+    let mut stream = client.subscribe_job(&job, 0).unwrap();
+    let mut events: Vec<JobEvent> = Vec::new();
+    // consume a few live events, then pull the plug mid-stream
+    while events.len() < 3 {
+        match stream.next() {
+            Some(Ok(ev)) => events.push(ev),
+            Some(Err(e)) => panic!("stream died before the crash: {e}"),
+            None => panic!("job finished before the crash point"),
+        }
+    }
+    let mut cursor = stream.cursor();
+    drop(stream);
+    drop(client);
+    h.crash_restart_coordinator();
+
+    // resubscribe from the cursor; the restarted coordinator re-seeds
+    // the event buffer from its WAL, so the numbering continues exactly
+    let mut client = h.client();
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    'outer: loop {
+        assert!(std::time::Instant::now() < deadline, "stream never finished");
+        let mut stream = match client.subscribe_job(&job, cursor) {
+            Ok(s) => s,
+            Err(_) => {
+                // recovery may still be resuming the job
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        for item in stream.by_ref() {
+            match item {
+                Ok(ev) => {
+                    cursor = ev.seq;
+                    events.push(ev);
+                }
+                Err(_) => continue 'outer,
+            }
+        }
+        assert_eq!(stream.end_reason(), Some("all events delivered"));
+        break;
+    }
+
+    for (i, ev) in events.iter().enumerate() {
+        assert_eq!(ev.seq, (i + 1) as u64, "event {i} has seq {} (gap or duplicate)", ev.seq);
+    }
+    assert!(
+        events.iter().any(|e| event_type(&e.value) == "job_resume"),
+        "the resumed job never streamed its job_resume marker"
+    );
+    assert_eq!(event_type(&events.last().unwrap().value), "job_done");
+
+    // the stream must be the WAL, across both process incarnations
+    let dir = h.data_dir.clone().expect("durable harness has a data dir");
+    drop(client);
+    drop(h);
+    let cfg = DurabilityConfig {
+        enabled: true,
+        data_dir: dir,
+        ..DurabilityConfig::default()
+    };
+    let (_log, replay) = DurableLog::open(&cfg, None).unwrap();
+    assert!(replay.snapshot.is_none(), "test fixture must not compact");
+    let wal: Vec<Value> = replay
+        .records
+        .into_iter()
+        .filter(|r| {
+            r.get("job").and_then(Value::as_str) == Some(job.as_str())
+                && r.get("t").and_then(Value::as_str) != Some("job_start")
+        })
+        .collect();
+    assert_eq!(events.len(), wal.len(), "stream and WAL record counts diverge");
+    for (ev, rec) in events.iter().zip(&wal) {
+        assert_eq!(&ev.value, rec, "event seq {} is not the WAL record", ev.seq);
+    }
+}
+
 /// A torn tail — the half-written frame a real `kill -9` leaves mid
 /// `write(2)` — is detected by CRC, truncated, and everything before it
 /// replays normally. No panic, no lost session.

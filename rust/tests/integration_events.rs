@@ -1,0 +1,273 @@
+//! Push event streaming for agent jobs (DESIGN.md §Events): the
+//! `job_subscribe` RPC must deliver every job event as a sequenced,
+//! gapless push stream over the multiplexed wire — replacing the
+//! `agent_status` sleep-poll loop — and the streamed records must be
+//! bit-identical to the durable coordinator's WAL records, mid-job
+//! catch-up and crash-restart reconnects included.
+//!
+//! Acceptance pins (ISSUE 10):
+//! * following a 2-worker cluster job via the stream reproduces the
+//!   `agent_result` trace exactly, with zero `agent_status` calls after
+//!   `agent_start` (metrics-asserted);
+//! * a subscriber attaching mid-job catches up from seq 1 and the full
+//!   streamed sequence equals the WAL's job-scoped records verbatim.
+//!
+//! (The crash-restart reconnect pin lives with the other crash-safety
+//! tests in `integration_durability.rs`.)
+
+mod common;
+
+use std::time::Duration;
+
+use alaas::agent::job as agent_job;
+use alaas::agent::{PsheaConfig, PsheaTrace};
+use alaas::durable::{DurabilityConfig, DurableLog};
+use alaas::json::Value;
+use alaas::server::{AlClient, JobEvent};
+
+use common::cluster_harness::ClusterHarness;
+
+/// Same fixture as `integration_agent.rs` so the traces have real
+/// structure (3 arms, 2 eliminations, 4 rounds).
+const DATA_SEED: u64 = 7;
+const AGENT_SEED: u64 = 4242;
+const N_INIT: usize = 60;
+const N_POOL: usize = 240;
+const N_TEST: usize = 120;
+
+fn agent_cfg() -> PsheaConfig {
+    PsheaConfig {
+        target_accuracy: 2.0,
+        max_budget: 1_000_000,
+        round_budget: 20,
+        converge_rounds: 0,
+        converge_eps: 0.0,
+        max_rounds: 4,
+        min_history: 2,
+        initial_accuracy: None,
+    }
+}
+
+fn arm_names() -> Vec<String> {
+    ["least_confidence", "margin_confidence", "entropy"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+fn cluster(bucket: &str, durable: bool) -> ClusterHarness {
+    ClusterHarness::builder()
+        .bucket(bucket)
+        .data_seed(DATA_SEED)
+        .sizes(N_INIT, N_POOL, N_TEST)
+        .workers(2)
+        .durable(durable)
+        // keep every record in the WAL (no compaction) so the
+        // stream-vs-WAL comparison sees the full physical sequence
+        .coord_tweak(|c| c.durability.snapshot_every = 1_000_000)
+        .build()
+}
+
+fn start_job(h: &ClusterHarness, client: &mut AlClient) -> String {
+    client.push_data("s", &h.manifest, Some(&h.labels.init)).unwrap();
+    let job = client
+        .agent_start("s", &arm_names(), &agent_cfg(), &h.labels.pool, &h.labels.test, AGENT_SEED)
+        .unwrap();
+    h.track_job(&job);
+    job
+}
+
+/// Every event's sequence number must be exactly its 1-based position:
+/// no gaps, no duplicates, no reordering.
+fn assert_gapless(events: &[JobEvent], tag: &str) {
+    for (i, ev) in events.iter().enumerate() {
+        assert_eq!(ev.seq, (i + 1) as u64, "{tag}: event {i} has seq {}", ev.seq);
+    }
+}
+
+fn event_type(ev: &Value) -> &str {
+    ev.get("t").and_then(Value::as_str).unwrap_or("")
+}
+
+/// The terminal `job_done` event carries the full trace; parse it the
+/// same way `agent_result` replies are parsed.
+fn streamed_trace(events: &[JobEvent]) -> PsheaTrace {
+    let done = events.last().expect("stream delivered no events");
+    assert_eq!(event_type(&done.value), "job_done", "stream must end on job_done");
+    agent_job::trace_from_value(done.value.get("trace").expect("job_done missing trace"))
+        .unwrap()
+}
+
+fn assert_trace_parity(got: &PsheaTrace, want: &PsheaTrace, tag: &str) {
+    assert_eq!(got.stop, want.stop, "{tag}: stop reason");
+    assert_eq!(got.rounds, want.rounds, "{tag}: rounds-to-stop");
+    assert_eq!(got.survivors, want.survivors, "{tag}: surviving strategy");
+    assert_eq!(got.total_budget, want.total_budget, "{tag}: budget spent");
+    assert_eq!(got.records.len(), want.records.len(), "{tag}: record count");
+    for (a, b) in got.records.iter().zip(&want.records) {
+        assert_eq!((a.round, &a.strategy), (b.round, &b.strategy), "{tag}: record order");
+        assert!(
+            (a.accuracy - b.accuracy).abs() < 1e-9,
+            "{tag}: round {} {} accuracy {} vs {}",
+            a.round,
+            a.strategy,
+            a.accuracy,
+            b.accuracy
+        );
+    }
+}
+
+/// The job-scoped records a terminated coordinator left in its WAL, in
+/// physical append order, `job_start` excluded (events start after it).
+fn wal_job_records(data_dir: &str, job: &str) -> Vec<Value> {
+    let cfg = DurabilityConfig {
+        enabled: true,
+        data_dir: data_dir.to_string(),
+        ..DurabilityConfig::default()
+    };
+    let (_log, replay) = DurableLog::open(&cfg, None).unwrap();
+    assert!(replay.snapshot.is_none(), "test fixture must not compact");
+    replay
+        .records
+        .into_iter()
+        .filter(|r| {
+            r.get("job").and_then(Value::as_str) == Some(job)
+                && r.get("t").and_then(Value::as_str) != Some("job_start")
+        })
+        .collect()
+}
+
+/// Headline: follow a 2-worker cluster job start-to-finish through the
+/// push stream. The streamed `job_done` trace and the per-round
+/// `job_record` events must match `agent_result` exactly, and the
+/// coordinator must never serve an `agent_status` poll.
+#[test]
+fn streamed_trace_matches_agent_result_with_zero_status_polls() {
+    let h = cluster("ev-follow", false);
+    let mut client = h.client();
+    let job = start_job(&h, &mut client);
+
+    let mut stream = client.subscribe_job(&job, 0).unwrap();
+    assert_eq!(stream.status(), "running");
+    let mut events: Vec<JobEvent> = Vec::new();
+    for item in stream.by_ref() {
+        events.push(item.unwrap());
+    }
+    assert_eq!(stream.end_reason(), Some("all events delivered"), "stream must end cleanly");
+    assert_gapless(&events, "follow");
+
+    let want = client.agent_result(&job, Duration::from_secs(600)).unwrap();
+    assert_trace_parity(&streamed_trace(&events), &want, "streamed job_done");
+
+    // the per-round record events ARE the trace, in order
+    let streamed_records: Vec<_> = events
+        .iter()
+        .filter(|e| event_type(&e.value) == "job_record")
+        .map(|e| agent_job::record_from_value(e.value.get("record").unwrap()).unwrap())
+        .collect();
+    assert_eq!(streamed_records.len(), want.records.len());
+    for (a, b) in streamed_records.iter().zip(&want.records) {
+        assert_eq!((a.round, &a.strategy), (b.round, &b.strategy));
+        assert!((a.accuracy - b.accuracy).abs() < 1e-9);
+        assert_eq!(a.budget_spent, b.budget_spent);
+    }
+    // one spend per arm-round, none lost
+    assert!(
+        events.iter().any(|e| event_type(&e.value) == "job_spend"),
+        "spend events missing from the stream"
+    );
+
+    // the poll loop is dead: the server never saw an agent_status call
+    let snap = h.coord_metrics.snapshot();
+    let hist = snap.get("histograms").unwrap();
+    assert!(
+        hist.get("rpc.agent_status").is_none(),
+        "agent_status was polled despite the push stream"
+    );
+    assert!(hist.get("rpc.job_subscribe").is_some(), "job_subscribe was never served");
+}
+
+/// A subscriber attaching mid-job (at least one completed round) catches
+/// up from seq 1, follows to the end, and the full streamed sequence is
+/// bit-identical to the WAL's job-scoped records — same order, same
+/// values, 1-based contiguous seqs.
+#[test]
+fn mid_job_catch_up_stream_equals_wal_records() {
+    let h = cluster("ev-wal", true);
+    let mut client = h.client();
+    let job = start_job(&h, &mut client);
+
+    // let the job make real progress before subscribing, so the stream
+    // exercises the catch-up replay path, not just live tailing
+    let mut rounds = 0;
+    for _ in 0..1_500 {
+        let st = client.agent_status(&job).unwrap();
+        rounds = st.get("rounds").unwrap().as_usize().unwrap();
+        if rounds >= 1 || st.get("status").unwrap().as_str() != Some("running") {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(rounds >= 1, "job never completed a round");
+
+    let mut stream = client.subscribe_job(&job, 0).unwrap();
+    let mut events: Vec<JobEvent> = Vec::new();
+    for item in stream.by_ref() {
+        events.push(item.unwrap());
+    }
+    assert_eq!(stream.end_reason(), Some("all events delivered"));
+    assert_gapless(&events, "catch-up");
+    client.agent_result(&job, Duration::from_secs(600)).unwrap();
+
+    // seal the log (coordinator down), then replay it independently
+    let dir = h.data_dir.clone().expect("durable harness has a data dir");
+    drop(client);
+    drop(h);
+    let wal = wal_job_records(&dir, &job);
+    assert_eq!(
+        events.len(),
+        wal.len(),
+        "streamed event count diverges from the WAL's job records"
+    );
+    for (i, (ev, rec)) in events.iter().zip(&wal).enumerate() {
+        assert_eq!(
+            &ev.value, rec,
+            "event seq {} (index {i}) is not the WAL record",
+            ev.seq
+        );
+    }
+}
+
+/// The stream rides through a worker kill: the coordinator re-dispatches
+/// the dead worker's shard (exact merges are layout-independent), the
+/// job finishes with the same trace, and the follower — whose connection
+/// is to the coordinator, not the worker — sees an uninterrupted gapless
+/// stream the whole way.
+#[test]
+fn stream_survives_worker_kill_and_redispatch() {
+    let mut h = cluster("ev-kill", false);
+    let mut client = h.client();
+    let job = start_job(&h, &mut client);
+
+    let mut stream = client.subscribe_job(&job, 0).unwrap();
+    h.kill_worker(0);
+    let mut events: Vec<JobEvent> = Vec::new();
+    for item in stream.by_ref() {
+        events.push(item.unwrap());
+    }
+    assert_eq!(stream.end_reason(), Some("all events delivered"));
+    assert_gapless(&events, "worker-kill");
+
+    let want = client.agent_result(&job, Duration::from_secs(600)).unwrap();
+    assert_trace_parity(&streamed_trace(&events), &want, "streamed through kill");
+    let snap = h.coord_metrics.snapshot();
+    let counters = snap.get("counters").unwrap();
+    assert!(
+        counters.get("cluster.shard_redispatch").and_then(Value::as_i64).unwrap_or(0) >= 1,
+        "the dead worker's shard was never re-dispatched"
+    );
+}
+
+// The remaining streaming pin — a subscriber reconnecting across a
+// coordinator crash-restart without gaps or duplicates — lives with the
+// other crash-safety tests in `integration_durability.rs`.

@@ -220,6 +220,73 @@ fn close_drops_shard_state_and_frees_worker_memory() {
     }
 }
 
+/// Shed parity (ISSUE 10): a standalone `AlServer` arbitrates its
+/// scatter-shaped work through the same `AdmissionGate` as the
+/// coordinator. The same 6-into-a-1-deep-queue burst must produce the
+/// identical failure surface — typed `Overloaded` with a positive
+/// `retry_after_ms`, not a timeout or an unbounded queue — and the
+/// gate's counters must show up in `service_stats` in the coordinator's
+/// shape.
+#[test]
+fn single_server_sheds_with_same_typed_overloaded_as_coordinator() {
+    let h = ClusterHarness::builder()
+        .bucket("ten-shed-single")
+        .workers(0)
+        .with_single(true)
+        .sizes(60, 1200, 0) // heavy pool: each select is long enough to pile up behind
+        .cfg_tweak(|c| {
+            c.coordinator.tenancy.enabled = true;
+            c.coordinator.tenancy.max_concurrent = 1;
+            c.coordinator.tenancy.admit_queue_len = 1;
+        })
+        .build();
+    let mut client = h.single_client();
+    client.push_data("shed-sess", &h.manifest, Some(&h.labels.init)).unwrap();
+
+    let addr = h.single_addr();
+    let start = Arc::new(Barrier::new(6));
+    let mut threads = Vec::new();
+    for _ in 0..6 {
+        let addr = addr.clone();
+        let start = start.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut c = AlClient::connect(&addr).unwrap();
+            start.wait();
+            c.query("shed-sess", 5, Some("k_center_greedy")).map(|_| ())
+        }));
+    }
+    let mut ok = 0usize;
+    let mut shed = Vec::new();
+    for t in threads {
+        match t.join().unwrap() {
+            Ok(()) => ok += 1,
+            Err(e) => shed.push(e),
+        }
+    }
+    h.log(&format!("single-server shed burst: {ok} completed, {} shed", shed.len()));
+    assert!(ok >= 1, "the running + queued selects must still complete");
+    assert!(!shed.is_empty(), "6 concurrent selects into a 1-deep queue must shed");
+    for e in &shed {
+        match e {
+            RpcError::Overloaded { retry_after_ms, .. } => {
+                assert!(*retry_after_ms > 0, "shed reply must carry a positive retry hint");
+            }
+            other => panic!("expected typed Overloaded, got {other:?}"),
+        }
+    }
+    // the burst has drained: a retry is admitted normally
+    let (picked, _, _) = client.query("shed-sess", 5, Some("least_confidence")).unwrap();
+    assert_eq!(picked.len(), 5);
+
+    // the gate's book-keeping surfaces in the coordinator's stats shape
+    let stats = client.service_stats().unwrap();
+    assert_eq!(stats.get("tenancy_enabled").and_then(Value::as_bool), Some(true));
+    assert!(stats.get("admitted_total").and_then(Value::as_usize).unwrap_or(0) >= 1);
+    assert!(stats.get("shed_total").and_then(Value::as_usize).unwrap_or(0) >= 1);
+    assert!(stats.get("running").is_some(), "gate stats missing 'running'");
+    assert!(stats.get("queued").is_some(), "gate stats missing 'queued'");
+}
+
 /// The tenancy layer is pure admission control: with a single session
 /// and no contention, selections are bit-identical whether the gate is
 /// enabled cluster-wide or not.
